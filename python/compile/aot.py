@@ -1,0 +1,158 @@
+"""AOT pipeline: lower the L2 train step and the L1 quant kernels to HLO
+*text* and write artifacts/ + manifest.json.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import quant, tables
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: model.ModelConfig, batch: int, seq: int, lr: float) -> str:
+    n = len(model.param_specs(cfg))
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _name, shape in model.param_specs(cfg)
+    ]
+    args = specs * 3 + [
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32),
+    ]
+    step = model.make_train_step(cfg, lr)
+    return to_hlo_text(jax.jit(step).lower(*args)), n
+
+
+def lower_eval(cfg: model.ModelConfig, batch: int, seq: int) -> str:
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _name, shape in model.param_specs(cfg)
+    ]
+    args = specs + [jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)]
+    return to_hlo_text(jax.jit(model.make_eval_loss(cfg)).lower(*args))
+
+
+def lower_quant_kernels(n_elems: int):
+    """Quant/dequant kernel artifacts over a fixed-size input, used by the
+    Rust runtime for cross-validation against the native codecs.
+
+    Codebook tables are ARGUMENTS, not closure constants: `as_hlo_text()`
+    elides constants larger than a few elements (`constant({...})`), which
+    silently corrupts the artifact. The Rust runtime supplies the tables
+    from its own mirrored codebooks at call time.
+    """
+    x = jax.ShapeDtypeStruct((n_elems,), jnp.float32)
+    th8 = jax.ShapeDtypeStruct((255,), jnp.float32)
+    od8 = jax.ShapeDtypeStruct((256,), jnp.int32)
+    vals8 = jax.ShapeDtypeStruct((256,), jnp.float32)
+    out = {}
+    out["quant_blockwise8"] = to_hlo_text(
+        jax.jit(quant.quantize_blockwise8_args).lower(x, th8, od8)
+    )
+    n_blocks8 = -(-n_elems // tables.BLOCK_8BIT)
+    codes = jax.ShapeDtypeStruct((n_elems,), jnp.uint8)
+    am8 = jax.ShapeDtypeStruct((n_blocks8,), jnp.float32)
+    out["dequant_blockwise8"] = to_hlo_text(
+        jax.jit(
+            lambda c, a, v: (quant.dequantize_blockwise8_args(c, a, n_elems, v),)
+        ).lower(codes, am8, vals8)
+    )
+    n_blocks4 = -(-n_elems // tables.BLOCK_4BIT)
+    am4 = jax.ShapeDtypeStruct((n_blocks4,), jnp.float32)
+    th4 = jax.ShapeDtypeStruct((15,), jnp.float32)
+    od4 = jax.ShapeDtypeStruct((16,), jnp.int32)
+    vals4 = jax.ShapeDtypeStruct((16,), jnp.float32)
+    for kind in ("nf4", "fp4"):
+        out[f"quant_{kind}"] = to_hlo_text(
+            jax.jit(quant.quantize_4bit_args).lower(x, th4, od4)
+        )
+        out[f"dequant_{kind}"] = to_hlo_text(
+            jax.jit(
+                lambda c, a, v: (quant.dequantize_4bit_args(c, a, n_elems, v),)
+            ).lower(codes, am4, vals4)
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="llama-mini")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--kernel-elems", type=int, default=65536)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "format": 1,
+        "batch": args.batch,
+        "seq_len": args.seq,
+        "lr": args.lr,
+        "kernel_elems": args.kernel_elems,
+        "models": {},
+        "kernels": {},
+    }
+
+    for name in args.models.split(","):
+        name = name.strip()
+        cfg = model.PRESETS[name]
+        print(f"lowering train step for {name} (batch={args.batch}, seq={args.seq})...")
+        hlo, n = lower_train_step(cfg, args.batch, args.seq, args.lr)
+        train_path = f"train_step_{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, train_path), "w") as f:
+            f.write(hlo)
+        print(f"  wrote {train_path} ({len(hlo)/1e6:.1f} MB)")
+        print(f"lowering eval loss for {name}...")
+        ehlo = lower_eval(cfg, args.batch, args.seq)
+        eval_path = f"eval_loss_{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, eval_path), "w") as f:
+            f.write(ehlo)
+        manifest["models"][name] = {
+            "train_step": train_path,
+            "eval_loss": eval_path,
+            "n_params": n,
+            "params": [
+                {"name": pn, "shape": list(shape)}
+                for pn, shape in model.param_specs(cfg)
+            ],
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+        }
+
+    print(f"lowering quant kernels (n={args.kernel_elems})...")
+    kernels = lower_quant_kernels(args.kernel_elems)
+    for kname, hlo in kernels.items():
+        path = f"kernel_{kname}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(hlo)
+        manifest["kernels"][kname] = {"path": path, "elems": args.kernel_elems}
+        print(f"  wrote {path} ({len(hlo)/1e3:.0f} KB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

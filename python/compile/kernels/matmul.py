@@ -1,0 +1,99 @@
+"""L1 Pallas tiled matmul with a custom VJP.
+
+Used by the L2 model for every projection, so the Pallas kernel sits
+inside the differentiated, AOT-lowered train step. Tiling follows the MXU
+shape discipline (128-multiples, fp32 accumulation in the output tile —
+the BlockSpec expression of the paper's tensor-core GEMM assumption); on
+this CPU target it runs via interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """Grid (M/bm, N/bn, K/bk): accumulate one K-slab into the out tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest power-of-two tile <= pref that keeps padding sane."""
+    b = pref
+    while b > dim and b > 8:
+        b //= 2
+    return b
+
+
+def _pad2(x: jnp.ndarray, bm: int, bn: int) -> jnp.ndarray:
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _mm(a: jnp.ndarray, b: jnp.ndarray, bm: int = 128, bn: int = 128, bk: int = 128):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    ap = _pad2(a, bm, bk)
+    bp = _pad2(b, bk, bn)
+    gm, gk = ap.shape[0] // bm, ap.shape[1] // bk
+    gn = bp.shape[1] // bn
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def pmatmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """`a @ b` through the Pallas kernel, differentiable.
+
+    Backward pass reuses the same kernel: dA = g @ Bᵀ, dB = Aᵀ @ g.
+    """
+    return _mm(a, b)
+
+
+def _fwd(a, b):
+    return _mm(a, b), (a, b)
+
+
+def _bwd(res, g):
+    a, b = res
+    return _mm(g, b.T), _mm(a.T, g)
+
+
+pmatmul.defvjp(_fwd, _bwd)
+
+
+def pmatmul_nd(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Batched wrapper: contracts the last dim of `x` with the first of
+    `w` by flattening leading dims ((..., k) @ (k, n) -> (..., n))."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    out = pmatmul(x.reshape(-1, k), w)
+    return out.reshape(*lead, w.shape[1])

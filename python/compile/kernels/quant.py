@@ -1,0 +1,157 @@
+"""L1 Pallas kernels: blockwise quantize / dequantize.
+
+The paper's message-processing hot spot (bitsandbytes 8-/4-bit blockwise
+quantization) expressed as Pallas kernels. Each grid step streams one
+`(rows, block)` tile HBM→VMEM, reduces the per-block absmax in registers,
+and emits codes — the TPU mapping of the CUDA warp-reduce the paper's
+stack assumes (DESIGN.md §Hardware-Adaptation).
+
+All kernels run `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the AOT
+artifacts run from the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import tables
+
+# Rows of blocks each grid step processes (VMEM tile = ROWS x block x 4 B;
+# 8 x 4096 x 4 = 128 KB for the 8-bit kernel — comfortably inside VMEM).
+ROWS_8 = 8
+ROWS_4 = 64
+
+
+def _quant_kernel(x_ref, thresholds_ref, order_ref, codes_ref, absmax_ref):
+    """One tile: normalize rows by their absmax, binary-search the
+    codebook thresholds (via searchsorted), map sorted slot -> code."""
+    x = x_ref[...]  # (rows, block)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    inv = jnp.where(absmax > 0, 1.0 / absmax, 0.0)
+    norm = x * inv[:, None]
+    idx = jnp.searchsorted(thresholds_ref[...], norm, side="left")
+    codes_ref[...] = order_ref[...][idx].astype(jnp.uint8)
+    absmax_ref[...] = absmax
+
+
+def _dequant_kernel(codes_ref, absmax_ref, values_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)
+    out_ref[...] = values_ref[...][codes] * absmax_ref[...][:, None]
+
+
+def _blocked(x: jnp.ndarray, block: int, rows: int):
+    """Pad a flat vector to (padded_blocks, block) with padded_blocks a
+    multiple of `rows`; returns (view, n_blocks)."""
+    n = x.shape[0]
+    n_blocks = -(-n // block)
+    pad_blocks = (-n_blocks) % rows
+    total = (n_blocks + pad_blocks) * block
+    x = jnp.concatenate([x, jnp.zeros((total - n,), dtype=x.dtype)])
+    return x.reshape(-1, block), n_blocks
+
+
+def _run_quant(x: jnp.ndarray, block: int, rows: int, thresholds, order):
+    """Core quantize launch. `thresholds` (len 2^b - 1) and `order`
+    (len 2^b) may be numpy constants or traced arguments — the AOT path
+    passes them as runtime arguments because `as_hlo_text()` elides large
+    constants (`constant({...})`), which would corrupt the artifact."""
+    view, n_blocks = _blocked(x, block, rows)
+    padded_blocks = view.shape[0]
+    grid = (padded_blocks // rows,)
+    codes, absmax = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((thresholds.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((order.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded_blocks, block), jnp.uint8),
+            jax.ShapeDtypeStruct((padded_blocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(view, jnp.asarray(thresholds), jnp.asarray(order, dtype=jnp.int32))
+    n = x.shape[0]
+    return codes.reshape(-1)[:n], absmax[:n_blocks]
+
+
+def _tables_for(table: np.ndarray):
+    _, order, thresholds = tables.sorted_with_codes(table)
+    return thresholds, order
+
+
+def _run_dequant(codes: jnp.ndarray, absmax: jnp.ndarray, n: int, block: int, rows: int, table):
+    view, n_blocks = _blocked(codes, block, rows)
+    padded_blocks = view.shape[0]
+    am = jnp.concatenate(
+        [absmax, jnp.zeros((padded_blocks - n_blocks,), dtype=jnp.float32)]
+    )
+    grid = (padded_blocks // rows,)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows,), lambda i: (i,)),
+            pl.BlockSpec((table.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_blocks, block), jnp.float32),
+        interpret=True,
+    )(view, am, jnp.asarray(table))
+    return out.reshape(-1)[:n]
+
+
+# -- public kernel API ---------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize_blockwise8(x: jnp.ndarray):
+    """Pallas blockwise 8-bit quantize: (codes u8[n], absmax f32[blocks])."""
+    th, od = _tables_for(tables.dynamic_map_8bit())
+    return _run_quant(x, tables.BLOCK_8BIT, ROWS_8, jnp.asarray(th), jnp.asarray(od))
+
+
+def quantize_blockwise8_args(x, thresholds, order):
+    """AOT variant: codebook view passed as runtime arguments."""
+    return _run_quant(x, tables.BLOCK_8BIT, ROWS_8, thresholds, order)
+
+
+def dequantize_blockwise8(codes: jnp.ndarray, absmax: jnp.ndarray, n: int):
+    return _run_dequant(
+        codes, absmax, n, tables.BLOCK_8BIT, ROWS_8, jnp.asarray(tables.dynamic_map_8bit())
+    )
+
+
+def dequantize_blockwise8_args(codes, absmax, n, values):
+    """AOT variant: dequant table passed as a runtime argument."""
+    return _run_dequant(codes, absmax, n, tables.BLOCK_8BIT, ROWS_8, values)
+
+
+def quantize_4bit(x: jnp.ndarray, kind: str):
+    """Pallas blockwise 4-bit quantize (fp4 / nf4), unpacked codes."""
+    table = tables.NF4_TABLE if kind == "nf4" else tables.FP4_TABLE
+    th, od = _tables_for(table)
+    return _run_quant(x, tables.BLOCK_4BIT, ROWS_4, jnp.asarray(th), jnp.asarray(od))
+
+
+def quantize_4bit_args(x, thresholds, order):
+    return _run_quant(x, tables.BLOCK_4BIT, ROWS_4, thresholds, order)
+
+
+def dequantize_4bit(codes: jnp.ndarray, absmax: jnp.ndarray, n: int, kind: str):
+    table = tables.NF4_TABLE if kind == "nf4" else tables.FP4_TABLE
+    return _run_dequant(codes, absmax, n, tables.BLOCK_4BIT, ROWS_4, jnp.asarray(table))
+
+
+def dequantize_4bit_args(codes, absmax, n, values):
+    return _run_dequant(codes, absmax, n, tables.BLOCK_4BIT, ROWS_4, values)

@@ -1,0 +1,92 @@
+"""Pure-jnp oracle for the quantization kernels and the matmul.
+
+This is the correctness ground truth for the Pallas kernels (L1): pytest
+asserts kernel == ref on dense sweeps, and the Rust integration tests
+assert the native Rust codecs agree with the AOT-compiled kernels, which
+closes the three-way loop (rust == pallas == ref).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import tables
+
+
+def _encode_with_table(x_norm: jnp.ndarray, table: np.ndarray) -> jnp.ndarray:
+    """Nearest-codebook-entry codes for normalized values.
+
+    Tie behaviour matches rust `Codebook::encode`: the number of midpoint
+    thresholds strictly below x selects the sorted slot (ties go to the
+    lower slot).
+    """
+    svals, order, thresholds = tables.sorted_with_codes(table)
+    idx = jnp.searchsorted(jnp.asarray(thresholds), x_norm, side="left")
+    return jnp.asarray(order)[idx].astype(jnp.uint8)
+
+
+def _pad_to_blocks(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), dtype=x.dtype)])
+    return x.reshape(-1, block)
+
+
+def quantize_blockwise8(x: jnp.ndarray):
+    """(codes u8[n], absmax f32[ceil(n/4096)]) — dynamic-map blockwise 8-bit."""
+    n = x.shape[0]
+    blocks = _pad_to_blocks(x, tables.BLOCK_8BIT)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    inv = jnp.where(absmax > 0, 1.0 / absmax, 0.0)
+    norm = blocks * inv[:, None]
+    codes = _encode_with_table(norm, tables.dynamic_map_8bit())
+    return codes.reshape(-1)[:n], absmax
+
+
+def dequantize_blockwise8(codes: jnp.ndarray, absmax: jnp.ndarray, n: int):
+    table = jnp.asarray(tables.dynamic_map_8bit())
+    blocks = _pad_to_blocks(codes, tables.BLOCK_8BIT)
+    vals = table[blocks.astype(jnp.int32)] * absmax[:, None]
+    return vals.reshape(-1)[:n]
+
+
+def _table4(kind: str) -> np.ndarray:
+    return tables.NF4_TABLE if kind == "nf4" else tables.FP4_TABLE
+
+
+def quantize_4bit(x: jnp.ndarray, kind: str):
+    """(codes u8[n] in 0..15 unpacked, absmax f32[ceil(n/64)])."""
+    n = x.shape[0]
+    blocks = _pad_to_blocks(x, tables.BLOCK_4BIT)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)
+    inv = jnp.where(absmax > 0, 1.0 / absmax, 0.0)
+    norm = blocks * inv[:, None]
+    codes = _encode_with_table(norm, _table4(kind))
+    return codes.reshape(-1)[:n], absmax
+
+
+def dequantize_4bit(codes: jnp.ndarray, absmax: jnp.ndarray, n: int, kind: str):
+    table = jnp.asarray(_table4(kind))
+    blocks = _pad_to_blocks(codes, tables.BLOCK_4BIT)
+    vals = table[blocks.astype(jnp.int32)] * absmax[:, None]
+    return vals.reshape(-1)[:n]
+
+
+def pack_nibbles(codes: jnp.ndarray) -> jnp.ndarray:
+    """Two 4-bit codes per byte, low nibble first (rust encode_4bit)."""
+    n = codes.shape[0]
+    if n % 2:
+        codes = jnp.concatenate([codes, jnp.zeros((1,), dtype=codes.dtype)])
+    pairs = codes.reshape(-1, 2).astype(jnp.uint8)
+    return (pairs[:, 0] | (pairs[:, 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    lo = packed & 0x0F
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=1).reshape(-1)[:n]
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """f32 reference for the Pallas tiled matmul."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

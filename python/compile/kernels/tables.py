@@ -1,0 +1,82 @@
+"""Quantization codebooks — bit-exact twins of rust/src/quant/codebook.rs.
+
+The Rust coordinator owns the request-path codecs; these tables exist so
+the Pallas kernels (L1) and the pure-jnp oracle (ref.py) quantize with the
+same maps, and so the Rust<->Pallas cross-validation in
+rust/tests/pjrt_integration.rs can assert byte-identical codes.
+"""
+
+import numpy as np
+
+BLOCK_8BIT = 4096
+BLOCK_4BIT = 64
+
+
+def dynamic_map_8bit() -> np.ndarray:
+    """bitsandbytes create_dynamic_map(signed=True, 7, 8): 256 sorted f32.
+
+    Mirrors rust `dynamic_map_8bit()`: 7 decades x linearly spaced
+    fraction means, mirrored in sign, plus {0, 1}, computed in f64 and
+    cast to f32 before the final sort.
+    """
+    max_exp_bits = 7
+    non_sign_bits = 7
+    data: list[float] = []
+    for i in range(max_exp_bits):
+        fraction_items = (1 << (i + non_sign_bits - max_exp_bits)) + 1
+        n = fraction_items
+        bounds = [0.1 + 0.9 * k / max(n - 1, 1) for k in range(n)]
+        scale = 10.0 ** (-(max_exp_bits - 1) + i)
+        for k in range(n - 1):
+            mean = 0.5 * (bounds[k] + bounds[k + 1])
+            data.append(scale * mean)
+            data.append(-scale * mean)
+    data.append(0.0)
+    data.append(1.0)
+    arr = np.array(data, dtype=np.float32)
+    assert arr.shape == (256,)
+    arr.sort()
+    return arr
+
+
+NF4_TABLE = np.array(
+    [
+        -1.0,
+        -0.6961928009986877,
+        -0.5250730514526367,
+        -0.39491748809814453,
+        -0.28444138169288635,
+        -0.18477343022823334,
+        -0.09105003625154495,
+        0.0,
+        0.07958029955625534,
+        0.16093020141124725,
+        0.24611230194568634,
+        0.33791524171829224,
+        0.44070982933044434,
+        0.5626170039176941,
+        0.7229568362236023,
+        1.0,
+    ],
+    dtype=np.float32,
+)
+
+
+def fp4_table() -> np.ndarray:
+    """E2M1 sign-magnitude table, code layout matching rust `fp4_map()`:
+    codes 0..7 positive magnitudes {0,.5,1,1.5,2,3,4,6}/6, codes 8..15 the
+    negatives."""
+    mags = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32) / 6.0
+    return np.concatenate([mags, -mags]).astype(np.float32)
+
+
+FP4_TABLE = fp4_table()
+
+
+def sorted_with_codes(table: np.ndarray):
+    """(sorted values, code permutation, midpoint thresholds) — the
+    encode-side view of a codebook (rust Codebook::new)."""
+    order = np.argsort(table, kind="stable").astype(np.int32)
+    svals = table[order]
+    thresholds = 0.5 * (svals[:-1] + svals[1:])
+    return svals, order, thresholds

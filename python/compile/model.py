@@ -1,0 +1,212 @@
+"""L2: Llama-style decoder + fused Adam SFT train step in JAX.
+
+Parameter layout mirrors the Rust `ModelSpec::llama` order exactly
+(embed_tokens, per-block {q,k,v,o,gate,up,down,ln1,ln2}, norm, lm_head),
+with HF `[out, in]` weight shapes, so the Rust runtime can marshal a
+ParamContainer into positional HLO arguments straight from the manifest.
+
+Every projection goes through the Pallas tiled matmul
+(`kernels.matmul.pmatmul_nd`), putting the L1 kernel inside the
+differentiated, AOT-lowered computation.
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.matmul import pmatmul_nd
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# Presets — must stay in lockstep with rust config/model_spec.rs.
+MINI = ModelConfig("llama-mini", vocab=512, d_model=256, n_layers=4, n_heads=8, n_kv_heads=4, d_ff=1024)
+M100 = ModelConfig("llama-100m", vocab=8192, d_model=768, n_layers=12, n_heads=12, n_kv_heads=4, d_ff=3072)
+
+PRESETS = {c.name: c for c in (MINI, M100)}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — same order as ModelSpec::llama."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embed_tokens", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        specs += [
+            (f"{p}.self_attn.q_proj", (cfg.d_model, cfg.d_model)),
+            (f"{p}.self_attn.k_proj", (cfg.kv_dim, cfg.d_model)),
+            (f"{p}.self_attn.v_proj", (cfg.kv_dim, cfg.d_model)),
+            (f"{p}.self_attn.o_proj", (cfg.d_model, cfg.d_model)),
+            (f"{p}.mlp.gate_proj", (cfg.d_ff, cfg.d_model)),
+            (f"{p}.mlp.up_proj", (cfg.d_ff, cfg.d_model)),
+            (f"{p}.mlp.down_proj", (cfg.d_model, cfg.d_ff)),
+            (f"{p}.input_layernorm", (cfg.d_model,)),
+            (f"{p}.post_attention_layernorm", (cfg.d_model,)),
+        ]
+    specs.append(("norm", (cfg.d_model,)))
+    specs.append(("lm_head", (cfg.vocab, cfg.d_model)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int) -> List[jnp.ndarray]:
+    """Gaussian init, std 1/sqrt(fan_in); norms at 1.0."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for _name, shape in param_specs(cfg):
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, dtype=jnp.float32))
+        else:
+            std = 1.0 / np.sqrt(shape[-1])
+            params.append(jnp.asarray(rng.normal(0.0, std, size=shape).astype(np.float32)))
+    return params
+
+
+def _rms_norm(x: jnp.ndarray, gain: jnp.ndarray, eps: float) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def _rope(x: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding over the last dim; x is [B, T, H, D]."""
+    b, t, h, d = x.shape
+    half = d // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    rot1 = x1 * cos[None, :, None, :] - x2 * sin[None, :, None, :]
+    rot2 = x2 * cos[None, :, None, :] + x1 * sin[None, :, None, :]
+    return jnp.concatenate([rot1, rot2], axis=-1)
+
+
+def _block(cfg: ModelConfig, x: jnp.ndarray, p: dict) -> jnp.ndarray:
+    b, t, d = x.shape
+    hd = cfg.head_dim
+    # -- attention ---------------------------------------------------------
+    h = _rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = pmatmul_nd(h, p["q"].T).reshape(b, t, cfg.n_heads, hd)
+    k = pmatmul_nd(h, p["k"].T).reshape(b, t, cfg.n_kv_heads, hd)
+    v = pmatmul_nd(h, p["v"].T).reshape(b, t, cfg.n_kv_heads, hd)
+    q = _rope(q, cfg.rope_theta)
+    k = _rope(k, cfg.rope_theta)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, t, d)
+    x = x + pmatmul_nd(ctx, p["o"].T)
+    # -- SwiGLU MLP --------------------------------------------------------
+    h = _rms_norm(x, p["ln2"], cfg.norm_eps)
+    gate = pmatmul_nd(h, p["gate"].T)
+    up = pmatmul_nd(h, p["up"].T)
+    x = x + pmatmul_nd(jax.nn.silu(gate) * up, p["down"].T)
+    return x
+
+
+def _split_params(cfg: ModelConfig, params: List[jnp.ndarray]):
+    embed = params[0]
+    blocks = []
+    for i in range(cfg.n_layers):
+        o = 1 + 9 * i
+        blocks.append(
+            dict(
+                q=params[o],
+                k=params[o + 1],
+                v=params[o + 2],
+                o=params[o + 3],
+                gate=params[o + 4],
+                up=params[o + 5],
+                down=params[o + 6],
+                ln1=params[o + 7],
+                ln2=params[o + 8],
+            )
+        )
+    norm = params[1 + 9 * cfg.n_layers]
+    lm_head = params[2 + 9 * cfg.n_layers]
+    return embed, blocks, norm, lm_head
+
+
+def loss_fn(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross-entropy; `tokens` is i32 [B, T+1], pad id 0
+    positions are masked out of the loss."""
+    embed, blocks, norm, lm_head = _split_params(cfg, params)
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    x = embed[inputs]  # [B, T, D]
+    for p in blocks:
+        x = _block(cfg, x, p)
+    x = _rms_norm(x, norm, cfg.norm_eps)
+    logits = pmatmul_nd(x, lm_head.T)  # [B, T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_train_step(cfg: ModelConfig, lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    """Fused fwd+bwd+Adam update.
+
+    Signature (all positional, the AOT/runtime contract):
+        (params..., m..., v..., step i32[], tokens i32[B,T+1])
+            -> (new_params..., new_m..., new_v..., loss f32[])
+    """
+    n = len(param_specs(cfg))
+
+    def step_fn(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step = args[3 * n]
+        tokens = args[3 * n + 1]
+        loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens))(params)
+        t = (step + 1).astype(jnp.float32)
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = b1 * mi + (1.0 - b1) * g
+            vi = b2 * vi + (1.0 - b2) * (g * g)
+            update = (mi / c1) / (jnp.sqrt(vi / c2) + eps)
+            new_p.append(p - lr * update)
+            new_m.append(mi)
+            new_v.append(vi)
+        return tuple(new_p + new_m + new_v + [loss])
+
+    return step_fn
+
+
+def make_eval_loss(cfg: ModelConfig):
+    """(params..., tokens) -> (loss,) — forward only."""
+    n = len(param_specs(cfg))
+
+    def eval_fn(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (loss_fn(cfg, params, tokens),)
+
+    return eval_fn

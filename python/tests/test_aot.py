@@ -1,0 +1,52 @@
+"""AOT pipeline sanity: manifest structure and HLO text artifacts."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_structure(manifest):
+    assert manifest["format"] == 1
+    assert "llama-mini" in manifest["models"]
+    m = manifest["models"]["llama-mini"]
+    assert m["n_params"] == len(m["params"]) == 39
+    assert m["params"][0]["name"] == "embed_tokens"
+    assert m["params"][-1]["name"] == "lm_head"
+    for k in ("quant_blockwise8", "dequant_blockwise8", "quant_nf4", "quant_fp4"):
+        assert k in manifest["kernels"]
+
+
+def test_hlo_text_artifacts_parse_as_hlo(manifest):
+    m = manifest["models"]["llama-mini"]
+    for rel in (m["train_step"], m["eval_loss"]):
+        path = os.path.join(ART, rel)
+        assert os.path.exists(path), rel
+        with open(path) as f:
+            head = f.read(4096)
+        assert head.startswith("HloModule"), rel
+
+
+def test_manifest_shapes_match_model():
+    from compile import model
+
+    cfg = model.MINI
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    got = [(p["name"], tuple(p["shape"])) for p in manifest["models"]["llama-mini"]["params"]]
+    want = model.param_specs(cfg)
+    assert got == [(n, tuple(s)) for n, s in want]

@@ -1,0 +1,95 @@
+"""L2 correctness: model shapes, loss behaviour, train-step contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    # A tiny config keeps interpret-mode pallas fast in CI.
+    return model.ModelConfig(
+        "test-tiny", vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv_heads=2, d_ff=64
+    )
+
+
+def _tokens(cfg, batch=2, seq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(1, cfg.vocab, size=(batch, seq + 1)).astype(np.int32))
+
+
+def test_param_specs_match_rust_layout(cfg):
+    specs = model.param_specs(cfg)
+    assert specs[0] == ("embed_tokens", (cfg.vocab, cfg.d_model))
+    assert specs[-1] == ("lm_head", (cfg.vocab, cfg.d_model))
+    assert specs[-2] == ("norm", (cfg.d_model,))
+    assert len(specs) == 2 + 9 * cfg.n_layers + 1
+    # GQA: k/v are [kv_dim, d_model]
+    assert specs[2] == ("layers.0.self_attn.k_proj", (cfg.kv_dim, cfg.d_model))
+
+
+def test_loss_is_near_uniform_at_init(cfg):
+    params = model.init_params(cfg, 0)
+    loss = model.loss_fn(cfg, params, _tokens(cfg))
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+def test_pad_masking(cfg):
+    params = model.init_params(cfg, 0)
+    t = _tokens(cfg)
+    # replace the second half of targets with pad; loss must only reflect
+    # unpadded positions (so it changes but stays finite)
+    t_padded = t.at[:, 9:].set(0)
+    l1 = model.loss_fn(cfg, params, t_padded)
+    assert np.isfinite(float(l1))
+
+
+def test_train_step_decreases_loss(cfg):
+    params = model.init_params(cfg, 1)
+    n = len(params)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(model.make_train_step(cfg, 3e-3))
+    t = _tokens(cfg, seed=3)
+    losses = []
+    state = list(params) + m + v
+    for i in range(8):
+        out = step(*state, jnp.int32(i), t)
+        losses.append(float(out[-1]))
+        state = list(out[: 3 * n])
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_train_step_output_arity(cfg):
+    params = model.init_params(cfg, 2)
+    n = len(params)
+    step = model.make_train_step(cfg, 1e-3)
+    out = step(
+        *params,
+        *[jnp.zeros_like(p) for p in params],
+        *[jnp.zeros_like(p) for p in params],
+        jnp.int32(0),
+        _tokens(cfg),
+    )
+    assert len(out) == 3 * n + 1
+    for got, p in zip(out[:n], params):
+        assert got.shape == p.shape
+    assert out[-1].shape == ()
+
+
+def test_eval_loss_matches_loss_fn(cfg):
+    params = model.init_params(cfg, 3)
+    t = _tokens(cfg, seed=5)
+    direct = model.loss_fn(cfg, params, t)
+    (wrapped,) = model.make_eval_loss(cfg)(*params, t)
+    np.testing.assert_allclose(float(direct), float(wrapped), rtol=1e-6)
+
+
+def test_deterministic_init(cfg):
+    a = model.init_params(cfg, 7)
+    b = model.init_params(cfg, 7)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,149 @@
+//! Fig. 5 — federated SFT with message quantization (fp16, blockwise8,
+//! float4, normfloat4) vs the fp32 baseline.
+//!
+//! The paper's claim: quantized-FL training curves align with the
+//! unquantized/centralized curve, while message sizes shrink per
+//! Table II. We assert both: curve alignment within a scheme-dependent
+//! tolerance and the expected comm-volume ratios.
+//!
+//! Env: FLARE_ROUNDS / FLARE_LOCAL_STEPS (defaults 3 x 5).
+
+use flare::config::model_spec::ModelSpec;
+use flare::config::{JobConfig, QuantScheme};
+use flare::coordinator::simulator::run_simulation;
+use flare::data::corpus::{CorpusConfig, SftCorpus};
+use flare::data::dirichlet_shards;
+use flare::filter::FilterSet;
+use flare::runtime::PjrtTrainer;
+use flare::tensor::init::materialize;
+use flare::util::bench::print_table;
+use flare::util::bytes::human;
+use std::path::Path;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    flare::util::logging::init();
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let mut base_job = JobConfig::default();
+    base_job.name = "fig5".into();
+    base_job.rounds = env_usize("FLARE_ROUNDS", 3);
+    base_job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", 5);
+    let spec = ModelSpec::llama_mini();
+    let initial = materialize(&spec, base_job.seed);
+    // The paper fine-tunes a PRETRAINED Llama; from-scratch training is
+    // far more sensitive to 4-bit message error in the first steps. A
+    // short centralized warmup puts us in the paper's regime (SFT from a
+    // non-random model) before the quantization comparison starts.
+    let warmup = env_usize("FLARE_WARMUP", 40);
+
+    let warm_factory = |job: &JobConfig| {
+        let job = job.clone();
+        std::sync::Arc::new(move |i: usize| {
+            let corpus = SftCorpus::generate(&CorpusConfig { examples: 2000, seed: job.seed });
+            let shards = dirichlet_shards(&corpus, job.clients, 0.0, job.seed);
+            PjrtTrainer::new(
+                Path::new(&job.artifacts_dir),
+                &job.model,
+                corpus,
+                shards[i % shards.len()].clone(),
+                job.seed ^ i as u64,
+            )
+            .expect("PJRT trainer")
+        })
+    };
+
+    let initial = if warmup > 0 {
+        println!("warmup: {warmup} centralized steps (paper = pretrained init)...");
+        let mut wjob = base_job.clone();
+        wjob.rounds = 1;
+        wjob.train.local_steps = warmup;
+        let mut tr = warm_factory(&base_job)(0);
+        flare::coordinator::simulator::run_centralized(&wjob, initial, &mut tr)
+            .unwrap()
+            .global
+    } else {
+        initial
+    };
+    let factory = warm_factory;
+
+    std::fs::create_dir_all("results").ok();
+    let schemes = [
+        QuantScheme::None,
+        QuantScheme::Fp16,
+        QuantScheme::Blockwise8,
+        QuantScheme::Fp4,
+        QuantScheme::Nf4,
+    ];
+    let mut finals = Vec::new();
+    let mut rows = Vec::new();
+    for scheme in schemes {
+        println!("FL run with quant={}...", scheme.name());
+        let mut job = base_job.clone();
+        job.quant = scheme;
+        let r = run_simulation(
+            &job,
+            initial.clone(),
+            factory(&job),
+            move || FilterSet::two_way_quantization(scheme),
+        )
+        .unwrap();
+        r.report
+            .save_json(Path::new(&format!("results/fig5_{}.json", scheme.name())))
+            .unwrap();
+        let fin = r.report.scalars["final_loss"];
+        let comm = r.report.scalars["total_comm_bytes"] as u64;
+        println!(
+            "  final loss {fin:.4}  comm {}  {}",
+            human(comm),
+            r.report.sparkline("global_loss", 40)
+        );
+        rows.push(vec![
+            scheme.name().to_string(),
+            format!("{fin:.4}"),
+            human(comm),
+        ]);
+        finals.push((scheme, fin, comm));
+    }
+    print_table(
+        "Fig. 5 — FL SFT with message quantization",
+        &["Scheme", "Final Loss", "Total Comm"],
+        &rows,
+    );
+
+    let (_, base_loss, base_comm) = finals[0];
+    let init_loss = 6.2; // ln(512) byte-level init
+    for &(scheme, fin, comm) in &finals[1..] {
+        let tol = match scheme {
+            QuantScheme::Fp16 => 0.02,
+            QuantScheme::Blockwise8 => 0.05,
+            _ => 0.15, // 4-bit: the paper's own Fig. 5 shows visible wiggle
+        } * init_loss;
+        assert!(
+            (fin - base_loss).abs() < tol,
+            "{scheme:?} diverged: {fin} vs fp32 {base_loss} (tol {tol})"
+        );
+        let ratio = comm as f64 / base_comm as f64;
+        let expect = match scheme {
+            QuantScheme::Fp16 => 0.50,
+            QuantScheme::Blockwise8 => 0.2503,
+            _ => 0.1406,
+        };
+        assert!(
+            (ratio - expect).abs() < 0.02,
+            "{scheme:?} comm ratio {ratio:.4} != Table II {expect}"
+        );
+        println!(
+            "{:<11} aligns (Δfinal {:+.4}) at {:.2}% of fp32 traffic ✓",
+            scheme.name(),
+            fin - base_loss,
+            ratio * 100.0
+        );
+    }
+    println!("FIG 5 REPRODUCED: quantized FL curves align; comm ratios match Table II");
+}

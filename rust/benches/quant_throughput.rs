@@ -1,0 +1,44 @@
+//! P1 — codec throughput: encode/decode MB/s per scheme. The message-
+//! processing hot path of the whole system (every weight byte crosses a
+//! codec twice per round), hence the §Perf optimization target.
+
+use flare::config::QuantScheme;
+use flare::quant::{dequantize, quantize};
+use flare::tensor::Tensor;
+use flare::util::bench::{bench, print_table};
+use flare::util::rng::SplitMix64;
+
+fn main() {
+    let n = 16 << 20; // 64 MB of f32
+    let mut rng = SplitMix64::new(3);
+    let mut vals = vec![0f32; n];
+    rng.fill_normal(&mut vals, 0.05);
+    let t = Tensor::from_f32(vec![n], vals);
+    let bytes = (n * 4) as u64;
+    let mut rows = Vec::new();
+    for scheme in [
+        QuantScheme::Fp16,
+        QuantScheme::Bf16,
+        QuantScheme::Blockwise8,
+        QuantScheme::Fp4,
+        QuantScheme::Nf4,
+    ] {
+        let enc = bench(&format!("enc-{}", scheme.name()), 1, 3, || {
+            std::hint::black_box(quantize(scheme, &t).unwrap());
+        });
+        let q = quantize(scheme, &t).unwrap();
+        let dec = bench(&format!("dec-{}", scheme.name()), 1, 3, || {
+            std::hint::black_box(dequantize(&q).unwrap());
+        });
+        rows.push(vec![
+            scheme.name().to_string(),
+            format!("{:.0}", enc.throughput_mb_s(bytes)),
+            format!("{:.0}", dec.throughput_mb_s(bytes)),
+        ]);
+    }
+    print_table(
+        "quantization codec throughput (64 MB fp32 input)",
+        &["Scheme", "Encode MB/s", "Decode MB/s"],
+        &rows,
+    );
+}

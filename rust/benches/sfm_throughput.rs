@@ -1,0 +1,56 @@
+//! P1 — SFM transport throughput: in-memory and TCP loopback drivers
+//! across chunk sizes; the transport side of the §Perf budget.
+
+use flare::sfm::tcp::{loopback_listener, TcpDriver};
+use flare::sfm::{inmem, SfmEndpoint};
+use flare::util::bench::print_table;
+use flare::util::json::Json;
+
+fn run(make: impl Fn() -> (SfmEndpoint, SfmEndpoint), chunk: usize, total: usize) -> f64 {
+    let (a, b) = make();
+    let a = a.with_chunk(chunk);
+    let blob = vec![7u8; total];
+    let t0 = std::time::Instant::now();
+    let tx = std::thread::spawn(move || a.send_blob(Json::Null, &blob).unwrap());
+    let (_d, got) = b.recv_blob(None).unwrap();
+    tx.join().unwrap();
+    assert_eq!(got.len(), total);
+    total as f64 / (1 << 20) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let total = 256 << 20; // 256 MB
+    let mut rows = Vec::new();
+    for chunk in [64 << 10, 1 << 20, 4 << 20] {
+        let mem = run(
+            || {
+                let p = inmem::pair(64);
+                (SfmEndpoint::new(p.a), SfmEndpoint::new(p.b))
+            },
+            chunk,
+            total,
+        );
+        let tcp = run(
+            || {
+                let l = loopback_listener().unwrap();
+                let addr = l.local_addr().unwrap().to_string();
+                let h = std::thread::spawn(move || TcpDriver::accept(&l).unwrap());
+                let c = TcpDriver::connect(&addr).unwrap();
+                let s = h.join().unwrap();
+                (SfmEndpoint::new(Box::new(s)), SfmEndpoint::new(Box::new(c)))
+            },
+            chunk,
+            total,
+        );
+        rows.push(vec![
+            flare::util::bytes::human(chunk as u64),
+            format!("{mem:.0}"),
+            format!("{tcp:.0}"),
+        ]);
+    }
+    print_table(
+        "SFM throughput, 256 MB object (MB/s)",
+        &["Chunk", "inmem", "tcp-loopback"],
+        &rows,
+    );
+}

@@ -1,0 +1,341 @@
+//! Job configuration.
+//!
+//! A federated job is described by a JSON document (see `configs/` in the
+//! repo root for shipped examples). This module owns parsing + validation;
+//! everything downstream consumes the typed [`JobConfig`].
+
+pub mod model_spec;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Which quantization codec a filter applies (paper §II-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantScheme {
+    None,
+    Fp16,
+    Bf16,
+    Blockwise8,
+    Fp4,
+    Nf4,
+}
+
+impl QuantScheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantScheme::None => "none",
+            QuantScheme::Fp16 => "fp16",
+            QuantScheme::Bf16 => "bf16",
+            QuantScheme::Blockwise8 => "blockwise8",
+            QuantScheme::Fp4 => "float4",
+            QuantScheme::Nf4 => "normfloat4",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<QuantScheme> {
+        Some(match s {
+            "none" | "fp32" => QuantScheme::None,
+            "fp16" | "16" => QuantScheme::Fp16,
+            "bf16" => QuantScheme::Bf16,
+            "blockwise8" | "8" | "int8" => QuantScheme::Blockwise8,
+            "float4" | "fp4" | "4" => QuantScheme::Fp4,
+            "normfloat4" | "nf4" => QuantScheme::Nf4,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [QuantScheme; 6] {
+        [
+            QuantScheme::None,
+            QuantScheme::Fp16,
+            QuantScheme::Bf16,
+            QuantScheme::Blockwise8,
+            QuantScheme::Fp4,
+            QuantScheme::Nf4,
+        ]
+    }
+}
+
+/// Object transmission mode (paper §III, Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamingMode {
+    /// One-shot: serialize the whole container, send as a single SFM
+    /// message (still chunked on the wire, but reassembled in memory).
+    Regular,
+    /// One container entry (layer) at a time — peak extra memory bounded
+    /// by the largest entry.
+    Container,
+    /// Via a safetensors file on disk, streamed chunk-by-chunk — peak
+    /// extra memory bounded by the chunk size.
+    File,
+}
+
+impl StreamingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StreamingMode::Regular => "regular",
+            StreamingMode::Container => "container",
+            StreamingMode::File => "file",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<StreamingMode> {
+        Some(match s {
+            "regular" => StreamingMode::Regular,
+            "container" => StreamingMode::Container,
+            "file" => StreamingMode::File,
+            _ => return None,
+        })
+    }
+}
+
+/// Simulated network conditions applied by the SFM driver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetProfile {
+    /// Bandwidth in bytes/sec; 0 = unlimited.
+    pub bandwidth_bps: u64,
+    /// One-way latency per frame, in microseconds.
+    pub latency_us: u64,
+}
+
+impl NetProfile {
+    pub const UNLIMITED: NetProfile = NetProfile {
+        bandwidth_bps: 0,
+        latency_us: 0,
+    };
+}
+
+/// Local-training hyperparameters forwarded to the PJRT train step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub seq_len: usize,
+    pub local_steps: usize,
+    pub lr: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            batch_size: 4,
+            seq_len: 128,
+            local_steps: 10,
+            lr: 1e-3,
+        }
+    }
+}
+
+/// Full federated job description.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub name: String,
+    pub model: String,
+    pub rounds: usize,
+    pub clients: usize,
+    pub train: TrainConfig,
+    /// Two-way quantization scheme (None disables the quant filters).
+    pub quant: QuantScheme,
+    pub streaming: StreamingMode,
+    /// SFM wire chunk size.
+    pub chunk_bytes: u64,
+    pub net: NetProfile,
+    pub seed: u64,
+    /// Dirichlet alpha for non-IID sharding (0 = IID).
+    pub dirichlet_alpha: f64,
+    /// Path to the AOT artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            name: "fed_sft".into(),
+            model: "llama-mini".into(),
+            rounds: 5,
+            clients: 1,
+            train: TrainConfig::default(),
+            quant: QuantScheme::None,
+            streaming: StreamingMode::Regular,
+            chunk_bytes: 1 << 20, // 1 MB, the paper's default
+            net: NetProfile::UNLIMITED,
+            seed: 0xF1A2E,
+            dirichlet_alpha: 0.0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn from_json(j: &Json) -> Result<JobConfig> {
+        let mut cfg = JobConfig::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow!("job config must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "name" => cfg.name = req_str(v, k)?,
+                "model" => cfg.model = req_str(v, k)?,
+                "rounds" => cfg.rounds = req_usize(v, k)?,
+                "clients" => cfg.clients = req_usize(v, k)?,
+                "quant" => {
+                    let s = req_str(v, k)?;
+                    cfg.quant = QuantScheme::from_name(&s)
+                        .ok_or_else(|| anyhow!("unknown quant scheme '{s}'"))?;
+                }
+                "streaming" => {
+                    let s = req_str(v, k)?;
+                    cfg.streaming = StreamingMode::from_name(&s)
+                        .ok_or_else(|| anyhow!("unknown streaming mode '{s}'"))?;
+                }
+                "chunk_bytes" => cfg.chunk_bytes = req_usize(v, k)? as u64,
+                "seed" => cfg.seed = req_usize(v, k)? as u64,
+                "dirichlet_alpha" => {
+                    cfg.dirichlet_alpha = v.as_f64().ok_or_else(|| anyhow!("{k}: not a number"))?
+                }
+                "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
+                "train" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("train: not an object"))?;
+                    for (tk, tv) in t {
+                        match tk.as_str() {
+                            "batch_size" => cfg.train.batch_size = req_usize(tv, tk)?,
+                            "seq_len" => cfg.train.seq_len = req_usize(tv, tk)?,
+                            "local_steps" => cfg.train.local_steps = req_usize(tv, tk)?,
+                            "lr" => {
+                                cfg.train.lr =
+                                    tv.as_f64().ok_or_else(|| anyhow!("lr: not a number"))?
+                            }
+                            other => bail!("unknown train key '{other}'"),
+                        }
+                    }
+                }
+                "net" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("net: not an object"))?;
+                    for (nk, nv) in t {
+                        match nk.as_str() {
+                            "bandwidth_bps" => cfg.net.bandwidth_bps = req_usize(nv, nk)? as u64,
+                            "latency_us" => cfg.net.latency_us = req_usize(nv, nk)? as u64,
+                            other => bail!("unknown net key '{other}'"),
+                        }
+                    }
+                }
+                other => bail!("unknown job config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<JobConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rounds == 0 {
+            bail!("rounds must be >= 1");
+        }
+        if self.clients == 0 {
+            bail!("clients must be >= 1");
+        }
+        if self.chunk_bytes == 0 {
+            bail!("chunk_bytes must be > 0");
+        }
+        if model_spec::ModelSpec::preset(&self.model).is_none() {
+            bail!("unknown model preset '{}'", self.model);
+        }
+        if self.train.batch_size == 0 || self.train.seq_len == 0 {
+            bail!("batch_size and seq_len must be > 0");
+        }
+        if self.dirichlet_alpha < 0.0 {
+            bail!("dirichlet_alpha must be >= 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("model", Json::str(self.model.clone())),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("clients", Json::num(self.clients as f64)),
+            ("quant", Json::str(self.quant.name())),
+            ("streaming", Json::str(self.streaming.name())),
+            ("chunk_bytes", Json::num(self.chunk_bytes as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("dirichlet_alpha", Json::num(self.dirichlet_alpha)),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            (
+                "train",
+                Json::obj(vec![
+                    ("batch_size", Json::num(self.train.batch_size as f64)),
+                    ("seq_len", Json::num(self.train.seq_len as f64)),
+                    ("local_steps", Json::num(self.train.local_steps as f64)),
+                    ("lr", Json::num(self.train.lr)),
+                ]),
+            ),
+            (
+                "net",
+                Json::obj(vec![
+                    ("bandwidth_bps", Json::num(self.net.bandwidth_bps as f64)),
+                    ("latency_us", Json::num(self.net.latency_us as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn req_str(v: &Json, k: &str) -> Result<String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow!("{k}: expected string"))
+}
+
+fn req_usize(v: &Json, k: &str) -> Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow!("{k}: expected non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_json() {
+        let mut cfg = JobConfig::default();
+        cfg.quant = QuantScheme::Nf4;
+        cfg.streaming = StreamingMode::Container;
+        cfg.clients = 4;
+        let j = cfg.to_json();
+        let back = JobConfig::from_json(&j).unwrap();
+        assert_eq!(back.quant, QuantScheme::Nf4);
+        assert_eq!(back.streaming, StreamingMode::Container);
+        assert_eq!(back.clients, 4);
+        assert_eq!(back.chunk_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"modle": "mini"}"#).unwrap();
+        assert!(JobConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for bad in [
+            r#"{"rounds": 0}"#,
+            r#"{"clients": 0}"#,
+            r#"{"model": "nope"}"#,
+            r#"{"quant": "fp12"}"#,
+            r#"{"streaming": "quantum"}"#,
+            r#"{"dirichlet_alpha": -1}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobConfig::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn scheme_names_roundtrip() {
+        for q in QuantScheme::all() {
+            assert_eq!(QuantScheme::from_name(q.name()), Some(q));
+        }
+    }
+}

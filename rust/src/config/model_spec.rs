@@ -1,0 +1,308 @@
+//! Model shape specifications.
+//!
+//! A [`ModelSpec`] is the *structural* description of a model: an ordered
+//! list of (parameter name, shape). The spec alone determines Table I
+//! (layer-wise sizes) and the data portion of Table II (message sizes under
+//! quantization), so those experiments are pure functions of a spec.
+//!
+//! `llama32_1b()` reproduces meta-llama/Llama-3.2-1B exactly: vocab 128256,
+//! hidden 2048, 16 blocks, 32 query heads / 8 KV heads (GQA, head_dim 64),
+//! FFN 8192, untied lm_head — 147 parameter tensors, 5716.26 MB at fp32,
+//! matching the paper's Tables I and II.
+
+use crate::tensor::{DType, TensorMeta};
+
+/// One named parameter in a model spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> u64 {
+        self.shape.iter().map(|&d| d as u64).product()
+    }
+
+    pub fn bytes_f32(&self) -> u64 {
+        self.elems() * 4
+    }
+
+    pub fn meta(&self) -> TensorMeta {
+        TensorMeta::new(self.shape.clone(), DType::F32)
+    }
+}
+
+/// Transformer hyperparameters for the Llama-family spec generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlamaDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    /// If false, lm_head shares storage with embed_tokens and is omitted
+    /// from the spec (weight tying).
+    pub untied_head: bool,
+}
+
+impl LlamaDims {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+}
+
+/// An ordered model shape specification.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub params: Vec<ParamSpec>,
+    /// Dims used to generate the spec, if it came from the Llama generator.
+    pub dims: Option<LlamaDims>,
+}
+
+impl ModelSpec {
+    /// Build the Llama-family parameter list in HF checkpoint order:
+    /// embed_tokens, then per block {q,k,v,o,gate,up,down,ln1,ln2}, then
+    /// final norm, then lm_head.
+    pub fn llama(name: &str, dims: LlamaDims) -> ModelSpec {
+        let d = dims.d_model;
+        let kv = dims.kv_dim();
+        let mut params = Vec::new();
+        let mut push = |name: String, shape: Vec<usize>| {
+            params.push(ParamSpec { name, shape });
+        };
+        push("embed_tokens".into(), vec![dims.vocab, d]);
+        for i in 0..dims.n_layers {
+            let p = format!("layers.{i}");
+            push(format!("{p}.self_attn.q_proj"), vec![d, d]);
+            push(format!("{p}.self_attn.k_proj"), vec![kv, d]);
+            push(format!("{p}.self_attn.v_proj"), vec![kv, d]);
+            push(format!("{p}.self_attn.o_proj"), vec![d, d]);
+            push(format!("{p}.mlp.gate_proj"), vec![dims.d_ff, d]);
+            push(format!("{p}.mlp.up_proj"), vec![dims.d_ff, d]);
+            push(format!("{p}.mlp.down_proj"), vec![d, dims.d_ff]);
+            push(format!("{p}.input_layernorm"), vec![d]);
+            push(format!("{p}.post_attention_layernorm"), vec![d]);
+        }
+        push("norm".into(), vec![d]);
+        if dims.untied_head {
+            push("lm_head".into(), vec![dims.vocab, d]);
+        }
+        ModelSpec {
+            name: name.to_string(),
+            params,
+            dims: Some(dims),
+        }
+    }
+
+    /// meta-llama/Llama-3.2-1B, exactly as in the paper's Table I.
+    pub fn llama32_1b() -> ModelSpec {
+        ModelSpec::llama(
+            "llama-3.2-1b",
+            LlamaDims {
+                vocab: 128_256,
+                d_model: 2048,
+                n_layers: 16,
+                n_heads: 32,
+                n_kv_heads: 8,
+                d_ff: 8192,
+                untied_head: true,
+            },
+        )
+    }
+
+    /// ~20M-parameter mini used for CI-scale end-to-end training.
+    pub fn llama_mini() -> ModelSpec {
+        ModelSpec::llama(
+            "llama-mini",
+            LlamaDims {
+                vocab: 512,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 8,
+                n_kv_heads: 4,
+                d_ff: 1024,
+                untied_head: true,
+            },
+        )
+    }
+
+    /// ~110M-parameter config (GPT-2-small class) for the full e2e claim.
+    pub fn llama_100m() -> ModelSpec {
+        ModelSpec::llama(
+            "llama-100m",
+            LlamaDims {
+                vocab: 8192,
+                d_model: 768,
+                n_layers: 12,
+                n_heads: 12,
+                n_kv_heads: 4,
+                d_ff: 3072,
+                untied_head: true,
+            },
+        )
+    }
+
+    /// A scaled-down copy of the 1B structure (same 147-tensor layout,
+    /// every dimension divided by `div`) for memory benches on small hosts.
+    pub fn llama32_1b_scaled(div: usize) -> ModelSpec {
+        assert!(div >= 1);
+        let d = LlamaDims {
+            vocab: 128_256 / div,
+            d_model: 2048 / div,
+            n_layers: 16,
+            n_heads: 32 / div.min(4),
+            n_kv_heads: 8 / div.min(4),
+            d_ff: 8192 / div,
+            untied_head: true,
+        };
+        ModelSpec::llama(&format!("llama-3.2-1b/{div}"), d)
+    }
+
+    /// Look up a preset by name (CLI `--model`).
+    pub fn preset(name: &str) -> Option<ModelSpec> {
+        Some(match name {
+            "llama-3.2-1b" | "1b" => Self::llama32_1b(),
+            "llama-mini" | "mini" => Self::llama_mini(),
+            "llama-100m" | "100m" => Self::llama_100m(),
+            "1b/2" => Self::llama32_1b_scaled(2),
+            "1b/4" => Self::llama32_1b_scaled(4),
+            "1b/8" => Self::llama32_1b_scaled(8),
+            _ => return None,
+        })
+    }
+
+    pub fn total_elems(&self) -> u64 {
+        self.params.iter().map(|p| p.elems()).sum()
+    }
+
+    pub fn total_bytes_f32(&self) -> u64 {
+        self.total_elems() * 4
+    }
+
+    pub fn max_param_bytes_f32(&self) -> u64 {
+        self.params.iter().map(|p| p.bytes_f32()).max().unwrap_or(0)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Rows for the paper's Table I: collapse per-block repeats into a
+    /// `layers.(0-N).suffix` row like the paper does, reporting MB per
+    /// tensor. Returns (display name, size MB, count).
+    pub fn layer_size_rows(&self) -> Vec<(String, f64, usize)> {
+        let mut rows: Vec<(String, f64, usize)> = Vec::new();
+        for p in &self.params {
+            let disp = collapse_layer_name(&p.name, self.dims.map(|d| d.n_layers).unwrap_or(0));
+            let mb = crate::util::bytes::mb(p.bytes_f32());
+            match rows.iter_mut().find(|(n, m, _)| *n == disp && (*m - mb).abs() < 1e-9) {
+                Some(r) => r.2 += 1,
+                None => rows.push((disp, mb, 1)),
+            }
+        }
+        rows
+    }
+}
+
+/// "layers.3.self_attn.q_proj" → "layers.(0-15).self_attn.q_proj".
+fn collapse_layer_name(name: &str, n_layers: usize) -> String {
+    if let Some(rest) = name.strip_prefix("layers.") {
+        if let Some((_idx, suffix)) = rest.split_once('.') {
+            if n_layers > 0 {
+                return format!("layers.(0-{}).{suffix}", n_layers - 1);
+            }
+        }
+    }
+    name.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::mb;
+
+    #[test]
+    fn llama32_1b_matches_paper_table1() {
+        let spec = ModelSpec::llama32_1b();
+        // 147 tensors: 1 + 16*9 + 1 + 1
+        assert_eq!(spec.params.len(), 147);
+        let check = |name: &str, expect_mb: f64| {
+            let p = spec.get(name).unwrap_or_else(|| panic!("missing {name}"));
+            let got = mb(p.bytes_f32());
+            assert!(
+                (got - expect_mb).abs() < 0.005,
+                "{name}: got {got} expect {expect_mb}"
+            );
+        };
+        check("embed_tokens", 1002.0);
+        check("layers.0.self_attn.q_proj", 16.0);
+        check("layers.5.self_attn.k_proj", 4.0);
+        check("layers.5.self_attn.v_proj", 4.0);
+        check("layers.15.self_attn.o_proj", 16.0);
+        check("layers.0.mlp.gate_proj", 64.0);
+        check("layers.0.mlp.up_proj", 64.0);
+        check("layers.0.mlp.down_proj", 64.0);
+        check("norm", 0.0078125); // paper rounds to 0.01
+        check("lm_head", 1002.0);
+    }
+
+    #[test]
+    fn llama32_1b_matches_paper_table2_total() {
+        let spec = ModelSpec::llama32_1b();
+        // Paper Table II: fp32 model size 5716.26 MB.
+        let total = mb(spec.total_bytes_f32());
+        assert!((total - 5716.26).abs() < 0.01, "total {total}");
+    }
+
+    #[test]
+    fn max_param_is_embedding() {
+        let spec = ModelSpec::llama32_1b();
+        assert_eq!(spec.max_param_bytes_f32(), 128_256 * 2048 * 4);
+    }
+
+    #[test]
+    fn collapsed_rows() {
+        let spec = ModelSpec::llama32_1b();
+        let rows = spec.layer_size_rows();
+        // 12 display rows as in the paper's Table I.
+        assert_eq!(rows.len(), 12, "{rows:?}");
+        let q = rows
+            .iter()
+            .find(|(n, _, _)| n == "layers.(0-15).self_attn.q_proj")
+            .unwrap();
+        assert_eq!(q.2, 16);
+        assert!((q.1 - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["1b", "mini", "100m", "1b/4"] {
+            assert!(ModelSpec::preset(name).is_some(), "{name}");
+        }
+        assert!(ModelSpec::preset("nope").is_none());
+    }
+
+    #[test]
+    fn mini_param_count_reasonable() {
+        let spec = ModelSpec::llama_mini();
+        let m = spec.total_elems();
+        assert!(m > 1_000_000 && m < 10_000_000, "{m}");
+        let spec = ModelSpec::llama_100m();
+        let m = spec.total_elems();
+        assert!(m > 80_000_000 && m < 150_000_000, "{m}");
+    }
+
+    #[test]
+    fn gqa_kv_shapes() {
+        let spec = ModelSpec::llama32_1b();
+        let k = spec.get("layers.0.self_attn.k_proj").unwrap();
+        assert_eq!(k.shape, vec![512, 2048]);
+    }
+}

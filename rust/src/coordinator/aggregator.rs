@@ -1,0 +1,139 @@
+//! FedAvg aggregation — performed at original (fp32) precision, after the
+//! inbound dequantize filter (paper §II-C: "server-side aggregation ...
+//! performed with original precision").
+
+use crate::tensor::ParamContainer;
+use anyhow::{bail, Result};
+
+/// Streaming weighted-average aggregator: contributions are folded in one
+/// at a time (the accumulator is the only full-size buffer, so aggregation
+/// memory is O(model), independent of the client count).
+#[derive(Default)]
+pub struct FedAvg {
+    acc: Option<ParamContainer>,
+    total_weight: f64,
+    contributions: usize,
+}
+
+impl FedAvg {
+    pub fn new() -> FedAvg {
+        FedAvg::default()
+    }
+
+    /// Fold in one client's weights with the given sample weight.
+    pub fn add(&mut self, update: &ParamContainer, weight: u64) -> Result<()> {
+        if weight == 0 {
+            bail!("zero-weight contribution");
+        }
+        if !update.all_f32() {
+            bail!("aggregation requires fp32 containers (dequantize first)");
+        }
+        let w = weight as f64;
+        match &mut self.acc {
+            None => {
+                let mut first = update.clone();
+                first.scale(w as f32);
+                self.acc = Some(first);
+            }
+            Some(acc) => {
+                if acc.names() != update.names() {
+                    bail!("contribution name set differs from accumulator");
+                }
+                acc.axpy(w as f32, update);
+            }
+        }
+        self.total_weight += w;
+        self.contributions += 1;
+        Ok(())
+    }
+
+    pub fn contributions(&self) -> usize {
+        self.contributions
+    }
+
+    /// Finish the round: return the weighted mean and reset.
+    pub fn finalize(&mut self) -> Result<ParamContainer> {
+        let mut acc = match self.acc.take() {
+            Some(a) => a,
+            None => bail!("finalize with no contributions"),
+        };
+        acc.scale((1.0 / self.total_weight) as f32);
+        self.total_weight = 0.0;
+        self.contributions = 0;
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::tensor::init::materialize;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn unweighted_mean() {
+        let mut a = ParamContainer::new();
+        a.insert("w", Tensor::from_f32(vec![2], vec![1.0, 3.0]));
+        let mut b = ParamContainer::new();
+        b.insert("w", Tensor::from_f32(vec![2], vec![3.0, 5.0]));
+        let mut agg = FedAvg::new();
+        agg.add(&a, 1).unwrap();
+        agg.add(&b, 1).unwrap();
+        let m = agg.finalize().unwrap();
+        assert_eq!(m.get("w").unwrap().as_f32(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn weighted_mean() {
+        let mut a = ParamContainer::new();
+        a.insert("w", Tensor::from_f32(vec![1], vec![0.0]));
+        let mut b = ParamContainer::new();
+        b.insert("w", Tensor::from_f32(vec![1], vec![4.0]));
+        let mut agg = FedAvg::new();
+        agg.add(&a, 3).unwrap();
+        agg.add(&b, 1).unwrap();
+        let m = agg.finalize().unwrap();
+        assert_eq!(m.get("w").unwrap().as_f32(), &[1.0]);
+    }
+
+    #[test]
+    fn single_contribution_identity() {
+        let c = materialize(&ModelSpec::llama_mini(), 71);
+        let mut agg = FedAvg::new();
+        agg.add(&c, 250).unwrap();
+        let m = agg.finalize().unwrap();
+        assert!(m.max_abs_diff(&c) < 1e-6);
+    }
+
+    #[test]
+    fn reset_between_rounds() {
+        let c = materialize(&ModelSpec::llama_mini(), 72);
+        let mut agg = FedAvg::new();
+        agg.add(&c, 1).unwrap();
+        let _ = agg.finalize().unwrap();
+        assert_eq!(agg.contributions(), 0);
+        assert!(agg.finalize().is_err());
+        agg.add(&c, 1).unwrap();
+        let m = agg.finalize().unwrap();
+        assert!(m.max_abs_diff(&c) < 1e-6);
+    }
+
+    #[test]
+    fn mismatched_names_rejected() {
+        let mut a = ParamContainer::new();
+        a.insert("w", Tensor::from_f32(vec![1], vec![0.0]));
+        let mut b = ParamContainer::new();
+        b.insert("v", Tensor::from_f32(vec![1], vec![4.0]));
+        let mut agg = FedAvg::new();
+        agg.add(&a, 1).unwrap();
+        assert!(agg.add(&b, 1).is_err());
+    }
+
+    #[test]
+    fn zero_weight_rejected() {
+        let c = materialize(&ModelSpec::llama_mini(), 73);
+        let mut agg = FedAvg::new();
+        assert!(agg.add(&c, 0).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Server-side Controller: the ScatterAndGather workflow (paper Fig. 2).
+//!
+//! Per round: global weights → [TaskDataOutServer filters] → streamed to
+//! each client; client results → [TaskResultInServer filters] → FedAvg →
+//! new global weights. All transmission is via the configured streaming
+//! mode over SFM.
+
+use super::aggregator::FedAvg;
+use super::protocol::CtrlMsg;
+use super::RoundStats;
+use crate::config::JobConfig;
+use crate::filter::{FilterContext, FilterPoint, FilterSet};
+use crate::metrics::Report;
+use crate::sfm::SfmEndpoint;
+use crate::streaming::{self, WeightsMsg};
+use crate::tensor::ParamContainer;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+/// One connected client from the server's perspective.
+pub struct ClientConn {
+    pub name: String,
+    pub ep: SfmEndpoint,
+}
+
+/// The federated server.
+pub struct Controller {
+    pub job: JobConfig,
+    pub filters: FilterSet,
+    pub clients: Vec<ClientConn>,
+    pub spool_dir: PathBuf,
+    /// Round statistics, filled during `run`.
+    pub rounds: Vec<RoundStats>,
+}
+
+impl Controller {
+    pub fn new(job: JobConfig, filters: FilterSet, spool_dir: PathBuf) -> Controller {
+        Controller {
+            job,
+            filters,
+            clients: Vec::new(),
+            spool_dir,
+            rounds: Vec::new(),
+        }
+    }
+
+    /// Accept a registration on an endpoint and add the client.
+    pub fn accept_client(&mut self, ep: SfmEndpoint, timeout: Option<Duration>) -> Result<()> {
+        let msg = CtrlMsg::from_json(&ep.recv_ctrl(timeout)?)?;
+        let name = match msg {
+            CtrlMsg::Register { client } => client,
+            other => bail!("expected register, got {other:?}"),
+        };
+        ep.send_ctrl(
+            &CtrlMsg::Welcome {
+                job: self.job.to_json(),
+            }
+            .to_json(),
+        )?;
+        log::info!("client '{name}' registered ({})", ep.driver_name());
+        self.clients.push(ClientConn { name, ep });
+        Ok(())
+    }
+
+    fn comm_bytes(&self) -> u64 {
+        self.clients
+            .iter()
+            .map(|c| {
+                c.ep.stats.bytes_sent.load(Ordering::Relaxed)
+                    + c.ep.stats.bytes_received.load(Ordering::Relaxed)
+            })
+            .sum()
+    }
+
+    /// Run the ScatterAndGather workflow to completion. Returns the final
+    /// global weights and fills `self.rounds` + the report's series:
+    /// `global_loss` (per round) and `client_loss` (per local step).
+    pub fn run(
+        &mut self,
+        mut global: ParamContainer,
+        report: &mut Report,
+    ) -> Result<ParamContainer> {
+        if self.clients.is_empty() {
+            bail!("no clients registered");
+        }
+        let rounds = self.job.rounds;
+        let mode = self.job.streaming;
+        let mut step_counter = 0usize;
+        for round in 0..rounds {
+            let t0 = std::time::Instant::now();
+            let comm0 = self.comm_bytes();
+
+            // -- scatter ------------------------------------------------------
+            for c in &self.clients {
+                let mut ctx = FilterContext {
+                    round,
+                    peer: c.name.clone(),
+                    ..Default::default()
+                };
+                let msg = self
+                    .filters
+                    .apply(FilterPoint::TaskDataOutServer, WeightsMsg::Plain(global.clone()), &mut ctx)
+                    .with_context(|| format!("task-data filters for {}", c.name))?;
+                c.ep.send_ctrl(
+                    &CtrlMsg::Task {
+                        round,
+                        local_steps: self.job.train.local_steps,
+                        headers: ctx.point_headers.clone(),
+                    }
+                    .to_json(),
+                )?;
+                streaming::send_weights(&c.ep, &msg, mode, Some(&self.spool_dir))
+                    .with_context(|| format!("send task data to {}", c.name))?;
+                // transfer-level ack from the receiver
+                let _ = c.ep.recv_event(Some(Duration::from_secs(600)))?;
+            }
+
+            // -- gather -------------------------------------------------------
+            let mut agg = FedAvg::new();
+            let mut losses_sum = 0f64;
+            let mut losses_n = 0usize;
+            for c in &self.clients {
+                let ctrl = CtrlMsg::from_json(&c.ep.recv_ctrl(Some(Duration::from_secs(600)))?)?;
+                let (r_round, n_samples, losses, headers) = match ctrl {
+                    CtrlMsg::Result {
+                        round: r,
+                        n_samples,
+                        losses,
+                        headers,
+                        ..
+                    } => (r, n_samples, losses, headers),
+                    other => bail!("expected result from {}, got {other:?}", c.name),
+                };
+                if r_round != round {
+                    bail!("client {} answered round {r_round}, expected {round}", c.name);
+                }
+                let (msg, _stats) = streaming::recv_weights(&c.ep, Some(&self.spool_dir))
+                    .with_context(|| format!("receive result from {}", c.name))?;
+                let mut ctx = FilterContext {
+                    round,
+                    peer: c.name.clone(),
+                    point_headers: headers,
+                };
+                let msg = self
+                    .filters
+                    .apply(FilterPoint::TaskResultInServer, msg, &mut ctx)?;
+                let update = match msg {
+                    WeightsMsg::Plain(p) => p,
+                    WeightsMsg::Quantized(_) => {
+                        bail!("result still quantized after inbound filters — chain misconfigured")
+                    }
+                };
+                agg.add(&update, n_samples)?;
+                for (i, l) in losses.iter().enumerate() {
+                    report
+                        .series_mut(&format!("client_loss/{}", c.name))
+                        .push((step_counter + i) as f64, *l as f64);
+                    losses_sum += *l as f64;
+                    losses_n += 1;
+                }
+            }
+            step_counter += self.job.train.local_steps;
+            global = agg.finalize()?;
+
+            let mean_loss = if losses_n > 0 {
+                (losses_sum / losses_n as f64) as f32
+            } else {
+                f32::NAN
+            };
+            let stats = RoundStats {
+                round,
+                mean_loss,
+                comm_bytes: self.comm_bytes() - comm0,
+                seconds: t0.elapsed().as_secs_f64(),
+            };
+            report.series_mut("global_loss").push(round as f64, mean_loss as f64);
+            report
+                .series_mut("round_comm_bytes")
+                .push(round as f64, stats.comm_bytes as f64);
+            log::info!(
+                "round {round}/{rounds}: mean loss {mean_loss:.4}, comm {}, {:.2}s",
+                crate::util::bytes::human(stats.comm_bytes),
+                stats.seconds
+            );
+            self.rounds.push(stats);
+        }
+
+        for c in &self.clients {
+            c.ep.send_ctrl(&CtrlMsg::Done.to_json())?;
+        }
+        report.set_scalar("total_comm_bytes", self.comm_bytes() as f64);
+        report.set_scalar(
+            "final_loss",
+            self.rounds.last().map(|r| r.mean_loss as f64).unwrap_or(f64::NAN),
+        );
+        Ok(global)
+    }
+}
+
+/// Convenience: the error type for misuse without clients.
+pub fn no_clients_error() -> anyhow::Error {
+    anyhow!("no clients registered")
+}

@@ -1,0 +1,138 @@
+//! Client-side Executor: receives Task Data, runs the local training
+//! task at original precision, returns Task Result (paper §II-A).
+
+use super::protocol::CtrlMsg;
+use super::LocalTrainer;
+use crate::filter::{FilterContext, FilterPoint, FilterSet};
+use crate::sfm::SfmEndpoint;
+use crate::streaming::{self, WeightsMsg};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// The federated client.
+pub struct Executor<T: LocalTrainer> {
+    pub name: String,
+    pub ep: SfmEndpoint,
+    pub filters: FilterSet,
+    pub trainer: T,
+    pub spool_dir: PathBuf,
+    pub timeout: Duration,
+    /// Streaming mode for outbound results (mirrors the job's mode; set
+    /// via [`Executor::with_mode`], defaults to Regular).
+    mode: Option<crate::config::StreamingMode>,
+}
+
+impl<T: LocalTrainer> Executor<T> {
+    pub fn new(
+        name: impl Into<String>,
+        ep: SfmEndpoint,
+        filters: FilterSet,
+        trainer: T,
+        spool_dir: PathBuf,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            ep,
+            filters,
+            trainer,
+            spool_dir,
+            timeout: Duration::from_secs(600),
+            mode: None,
+        }
+    }
+
+    /// Register with the server; returns the job config it sent.
+    pub fn register(&self) -> Result<Json> {
+        self.ep.send_ctrl(
+            &CtrlMsg::Register {
+                client: self.name.clone(),
+            }
+            .to_json(),
+        )?;
+        match CtrlMsg::from_json(&self.ep.recv_ctrl(Some(self.timeout))?)? {
+            CtrlMsg::Welcome { job } => Ok(job),
+            other => bail!("expected welcome, got {other:?}"),
+        }
+    }
+
+    /// Main loop: execute tasks until the server says Done. Returns the
+    /// number of rounds executed.
+    pub fn run(&mut self) -> Result<usize> {
+        let mut rounds = 0usize;
+        loop {
+            let ctrl = CtrlMsg::from_json(&self.ep.recv_ctrl(Some(self.timeout))?)?;
+            let (round, local_steps, headers) = match ctrl {
+                CtrlMsg::Task {
+                    round,
+                    local_steps,
+                    headers,
+                } => (round, local_steps, headers),
+                CtrlMsg::Done => return Ok(rounds),
+                other => bail!("unexpected ctrl {other:?}"),
+            };
+            let (msg, _stats) = streaming::recv_weights(&self.ep, Some(&self.spool_dir))
+                .context("receive task data")?;
+
+            let mut ctx = FilterContext {
+                round,
+                peer: "server".into(),
+                point_headers: headers,
+            };
+            let msg = self.filters.apply(FilterPoint::TaskDataInClient, msg, &mut ctx)?;
+            let weights = match msg {
+                WeightsMsg::Plain(p) => p,
+                WeightsMsg::Quantized(_) => {
+                    bail!("task data still quantized after inbound filters — chain misconfigured")
+                }
+            };
+
+            // Local training runs at original precision (paper §II-C).
+            let (updated, losses) = self
+                .trainer
+                .train(&weights, local_steps, round)
+                .context("local training")?;
+
+            let mut out_ctx = FilterContext {
+                round,
+                peer: "server".into(),
+                ..Default::default()
+            };
+            let out = self.filters.apply(
+                FilterPoint::TaskResultOutClient,
+                WeightsMsg::Plain(updated),
+                &mut out_ctx,
+            )?;
+            self.ep.send_ctrl(
+                &CtrlMsg::Result {
+                    round,
+                    client: self.name.clone(),
+                    n_samples: self.trainer.n_samples(),
+                    losses,
+                    headers: out_ctx.point_headers.clone(),
+                }
+                .to_json(),
+            )?;
+            streaming::send_weights(&self.ep, &out, self.job_mode(), Some(&self.spool_dir))
+                .context("send task result")?;
+            let _ = self.ep.recv_event(Some(self.timeout))?; // transfer ack
+            rounds += 1;
+        }
+    }
+
+    /// Streaming mode used for results. Clients mirror the server's mode
+    /// (carried in the welcome message; default regular).
+    fn job_mode(&self) -> crate::config::StreamingMode {
+        self.mode
+            .unwrap_or(crate::config::StreamingMode::Regular)
+    }
+}
+
+// A small extension field kept outside the generic impl for simplicity.
+impl<T: LocalTrainer> Executor<T> {
+    pub fn with_mode(mut self, mode: crate::config::StreamingMode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+}

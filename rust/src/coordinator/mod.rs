@@ -1,0 +1,121 @@
+//! Federated coordinator (paper §II-A): Controller on the server
+//! orchestrates task execution across client Executors; 'Task Data'
+//! (global weights) flows out, 'Task Result' (local updates) flows back,
+//! both through the four-point filter mechanism and the configured
+//! streaming mode.
+
+pub mod aggregator;
+pub mod controller;
+pub mod executor;
+pub mod protocol;
+pub mod simulator;
+
+use crate::tensor::ParamContainer;
+use anyhow::Result;
+
+/// Local training abstraction — the Executor's task body.
+///
+/// The production implementation is `runtime::PjrtTrainer` (executes the
+/// AOT-compiled JAX train step); tests and transport benches use
+/// [`MockTrainer`].
+pub trait LocalTrainer {
+    /// Run `steps` local steps starting from `weights`; return the
+    /// updated weights and the per-step training losses.
+    fn train(
+        &mut self,
+        weights: &ParamContainer,
+        steps: usize,
+        round: usize,
+    ) -> Result<(ParamContainer, Vec<f32>)>;
+
+    /// Number of local samples (FedAvg weighting).
+    fn n_samples(&self) -> u64 {
+        1
+    }
+}
+
+/// Deterministic mock: gradient descent on ½‖w − w*‖² toward a hidden
+/// target. Converges smoothly, costs nothing, and makes coordinator
+/// behaviour (aggregation math, filter effects on convergence) exactly
+/// checkable.
+pub struct MockTrainer {
+    pub target: ParamContainer,
+    pub lr: f32,
+    pub samples: u64,
+}
+
+impl MockTrainer {
+    pub fn new(target: ParamContainer, lr: f32, samples: u64) -> Self {
+        Self {
+            target,
+            lr,
+            samples,
+        }
+    }
+}
+
+impl LocalTrainer for MockTrainer {
+    fn train(
+        &mut self,
+        weights: &ParamContainer,
+        steps: usize,
+        _round: usize,
+    ) -> Result<(ParamContainer, Vec<f32>)> {
+        let mut w = weights.clone();
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            // loss = mean squared distance to target
+            let mut sq = 0f64;
+            let mut n = 0usize;
+            for (name, t) in w.iter_mut() {
+                let tgt = self.target.get(name).expect("congruent containers");
+                let dst = t.as_f32_mut();
+                let src = tgt.as_f32();
+                for (d, s) in dst.iter_mut().zip(src) {
+                    let g = *d - *s;
+                    sq += (g as f64) * (g as f64);
+                    *d -= self.lr * g;
+                }
+                n += src.len();
+            }
+            losses.push((sq / n as f64) as f32);
+        }
+        Ok((w, losses))
+    }
+
+    fn n_samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// Per-round record kept by the controller.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStats {
+    pub round: usize,
+    /// Mean of clients' mean local losses.
+    pub mean_loss: f32,
+    /// Wire bytes sent + received by the server this round.
+    pub comm_bytes: u64,
+    pub seconds: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::tensor::init::materialize;
+
+    #[test]
+    fn mock_trainer_converges() {
+        let spec = ModelSpec::llama_mini();
+        let target = materialize(&spec, 100);
+        let start = materialize(&spec, 200);
+        let mut t = MockTrainer::new(target.clone(), 0.5, 10);
+        let (w1, losses) = t.train(&start, 20, 0).unwrap();
+        assert_eq!(losses.len(), 20);
+        for w in losses.windows(2) {
+            assert!(w[1] < w[0], "loss must decrease monotonically: {losses:?}");
+        }
+        assert!(w1.max_abs_diff(&target) < start.max_abs_diff(&target));
+    }
+}

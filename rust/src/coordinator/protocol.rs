@@ -1,0 +1,179 @@
+//! Control-plane message schema (ctrl frames carrying JSON).
+//!
+//! Weight payloads travel separately as SFM object transfers; the ctrl
+//! messages carry round metadata and the filter headers (which is how
+//! e.g. the integrity digest stamped by an outbound filter reaches the
+//! peer's inbound verify filter).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Protocol operations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtrlMsg {
+    /// Client → server on connect.
+    Register { client: String },
+    /// Server → client: accepted; carries the job config JSON.
+    Welcome { job: Json },
+    /// Server → client: a task follows (weights object on the wire next).
+    Task {
+        round: usize,
+        local_steps: usize,
+        headers: BTreeMap<String, Json>,
+    },
+    /// Client → server: result follows (weights object next).
+    Result {
+        round: usize,
+        client: String,
+        n_samples: u64,
+        losses: Vec<f32>,
+        headers: BTreeMap<String, Json>,
+    },
+    /// Server → client: training finished.
+    Done,
+}
+
+fn headers_to_json(h: &BTreeMap<String, Json>) -> Json {
+    Json::Obj(h.clone())
+}
+
+fn headers_from_json(j: Option<&Json>) -> BTreeMap<String, Json> {
+    j.and_then(|j| j.as_obj()).cloned().unwrap_or_default()
+}
+
+impl CtrlMsg {
+    pub fn to_json(&self) -> Json {
+        match self {
+            CtrlMsg::Register { client } => Json::obj(vec![
+                ("op", Json::str("register")),
+                ("client", Json::str(client.clone())),
+            ]),
+            CtrlMsg::Welcome { job } => Json::obj(vec![
+                ("op", Json::str("welcome")),
+                ("job", job.clone()),
+            ]),
+            CtrlMsg::Task {
+                round,
+                local_steps,
+                headers,
+            } => Json::obj(vec![
+                ("op", Json::str("task")),
+                ("round", Json::num(*round as f64)),
+                ("local_steps", Json::num(*local_steps as f64)),
+                ("headers", headers_to_json(headers)),
+            ]),
+            CtrlMsg::Result {
+                round,
+                client,
+                n_samples,
+                losses,
+                headers,
+            } => Json::obj(vec![
+                ("op", Json::str("result")),
+                ("round", Json::num(*round as f64)),
+                ("client", Json::str(client.clone())),
+                ("n_samples", Json::num(*n_samples as f64)),
+                (
+                    "losses",
+                    Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect()),
+                ),
+                ("headers", headers_to_json(headers)),
+            ]),
+            CtrlMsg::Done => Json::obj(vec![("op", Json::str("done"))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<CtrlMsg> {
+        let op = j
+            .get("op")
+            .and_then(|o| o.as_str())
+            .ok_or_else(|| anyhow!("ctrl message without op"))?;
+        Ok(match op {
+            "register" => CtrlMsg::Register {
+                client: j
+                    .get("client")
+                    .and_then(|c| c.as_str())
+                    .ok_or_else(|| anyhow!("register without client"))?
+                    .to_string(),
+            },
+            "welcome" => CtrlMsg::Welcome {
+                job: j.get("job").cloned().unwrap_or(Json::Null),
+            },
+            "task" => CtrlMsg::Task {
+                round: j
+                    .get("round")
+                    .and_then(|r| r.as_usize())
+                    .ok_or_else(|| anyhow!("task without round"))?,
+                local_steps: j
+                    .get("local_steps")
+                    .and_then(|r| r.as_usize())
+                    .unwrap_or(1),
+                headers: headers_from_json(j.get("headers")),
+            },
+            "result" => CtrlMsg::Result {
+                round: j
+                    .get("round")
+                    .and_then(|r| r.as_usize())
+                    .ok_or_else(|| anyhow!("result without round"))?,
+                client: j
+                    .get("client")
+                    .and_then(|c| c.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                n_samples: j.get("n_samples").and_then(|n| n.as_u64()).unwrap_or(1),
+                losses: j
+                    .get("losses")
+                    .and_then(|l| l.as_arr())
+                    .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+                    .unwrap_or_default(),
+                headers: headers_from_json(j.get("headers")),
+            },
+            "done" => CtrlMsg::Done,
+            other => bail!("unknown ctrl op '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_variants_roundtrip() {
+        let mut headers = BTreeMap::new();
+        headers.insert("integrity_crc32".to_string(), Json::num(123.0));
+        let msgs = vec![
+            CtrlMsg::Register {
+                client: "site-1".into(),
+            },
+            CtrlMsg::Welcome {
+                job: Json::obj(vec![("rounds", Json::num(5.0))]),
+            },
+            CtrlMsg::Task {
+                round: 3,
+                local_steps: 10,
+                headers: headers.clone(),
+            },
+            CtrlMsg::Result {
+                round: 3,
+                client: "site-1".into(),
+                n_samples: 250,
+                losses: vec![2.5, 2.25],
+                headers,
+            },
+            CtrlMsg::Done,
+        ];
+        for m in msgs {
+            let j = m.to_json();
+            let back = CtrlMsg::from_json(&j).unwrap();
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn missing_op_rejected() {
+        assert!(CtrlMsg::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(CtrlMsg::from_json(&Json::parse(r#"{"op":"nope"}"#).unwrap()).is_err());
+    }
+}

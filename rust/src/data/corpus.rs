@@ -1,0 +1,273 @@
+//! Template-generated instruction/response corpus and batch iterator.
+
+use super::{encode_text, TokenId, PAD_ID};
+use crate::util::rng::SplitMix64;
+
+/// Topics give the corpus macro-structure (and the non-IID axis).
+const TOPICS: [&str; 8] = [
+    "arithmetic",
+    "capitals",
+    "inversion",
+    "comparison",
+    "spelling",
+    "sequence",
+    "classification",
+    "extraction",
+];
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub examples: usize,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            examples: 2000,
+            seed: 0xD011_15,
+        }
+    }
+}
+
+/// One instruction/response example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub topic: usize,
+    pub text: String,
+}
+
+/// A generated SFT corpus.
+#[derive(Debug, Clone)]
+pub struct SftCorpus {
+    pub examples: Vec<Example>,
+}
+
+const CITIES: [(&str, &str); 10] = [
+    ("France", "Paris"),
+    ("Japan", "Tokyo"),
+    ("Italy", "Rome"),
+    ("Egypt", "Cairo"),
+    ("Canada", "Ottawa"),
+    ("Brazil", "Brasilia"),
+    ("Kenya", "Nairobi"),
+    ("Norway", "Oslo"),
+    ("India", "Delhi"),
+    ("Chile", "Santiago"),
+];
+
+const WORDS: [&str; 12] = [
+    "model", "stream", "filter", "tensor", "server", "client", "round", "batch", "token",
+    "layer", "weight", "chunk",
+];
+
+const ANIMALS: [&str; 6] = ["cat", "dog", "owl", "fox", "bee", "elk"];
+const FRUITS: [&str; 6] = ["fig", "plum", "pear", "kiwi", "lime", "date"];
+
+fn gen_example(topic: usize, rng: &mut SplitMix64) -> String {
+    let (instruction, response) = match topic {
+        0 => {
+            let a = rng.next_below(50);
+            let b = rng.next_below(50);
+            (format!("Add {a} and {b}."), format!("{}", a + b))
+        }
+        1 => {
+            let (country, city) = CITIES[rng.next_below(CITIES.len() as u64) as usize];
+            (
+                format!("What is the capital of {country}?"),
+                format!("The capital of {country} is {city}."),
+            )
+        }
+        2 => {
+            let w = WORDS[rng.next_below(WORDS.len() as u64) as usize];
+            let rev: String = w.chars().rev().collect();
+            (format!("Reverse the word '{w}'."), rev)
+        }
+        3 => {
+            let a = rng.next_below(100);
+            let b = rng.next_below(100);
+            let ans = if a > b { "first" } else { "second" };
+            (
+                format!("Which is larger, {a} or {b}?"),
+                format!("The {ans} number is larger."),
+            )
+        }
+        4 => {
+            let w = WORDS[rng.next_below(WORDS.len() as u64) as usize];
+            let spelled: Vec<String> = w.chars().map(|c| c.to_string()).collect();
+            (format!("Spell the word '{w}'."), spelled.join("-"))
+        }
+        5 => {
+            let start = rng.next_below(20);
+            let seq: Vec<String> = (start..start + 5).map(|v| v.to_string()).collect();
+            (
+                format!("Count five numbers starting from {start}."),
+                seq.join(", "),
+            )
+        }
+        6 => {
+            let is_animal = rng.next_below(2) == 0;
+            let item = if is_animal {
+                ANIMALS[rng.next_below(ANIMALS.len() as u64) as usize]
+            } else {
+                FRUITS[rng.next_below(FRUITS.len() as u64) as usize]
+            };
+            let label = if is_animal { "an animal" } else { "a fruit" };
+            (
+                format!("Is '{item}' an animal or a fruit?"),
+                format!("'{item}' is {label}."),
+            )
+        }
+        _ => {
+            let w = WORDS[rng.next_below(WORDS.len() as u64) as usize];
+            let n = rng.next_below(9) + 1;
+            (
+                format!("Extract the word from: id={n} value={w} end"),
+                w.to_string(),
+            )
+        }
+    };
+    format!("### Instruction:\n{instruction}\n### Response:\n{response}\n")
+}
+
+impl SftCorpus {
+    pub fn generate(cfg: &CorpusConfig) -> SftCorpus {
+        let mut rng = SplitMix64::new(cfg.seed);
+        let examples = (0..cfg.examples)
+            .map(|_| {
+                let topic = rng.next_below(TOPICS.len() as u64) as usize;
+                Example {
+                    topic,
+                    text: gen_example(topic, &mut rng),
+                }
+            })
+            .collect();
+        SftCorpus { examples }
+    }
+
+    pub fn n_topics() -> usize {
+        TOPICS.len()
+    }
+
+    /// Pack a subset of example indices into fixed-length token batches.
+    /// Each row is `seq_len + 1` ids (inputs + next-token targets overlap).
+    pub fn batches(
+        &self,
+        indices: &[usize],
+        batch_size: usize,
+        seq_len: usize,
+        seed: u64,
+    ) -> BatchIter<'_> {
+        BatchIter {
+            corpus: self,
+            indices: indices.to_vec(),
+            batch_size,
+            seq_len,
+            rng: SplitMix64::new(seed),
+            cursor: 0,
+        }
+    }
+}
+
+/// Infinite shuffled batch iterator (epochs reshuffle).
+pub struct BatchIter<'a> {
+    corpus: &'a SftCorpus,
+    indices: Vec<usize>,
+    batch_size: usize,
+    seq_len: usize,
+    rng: SplitMix64,
+    cursor: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    /// Next batch of shape `[batch_size, seq_len + 1]`, flattened
+    /// row-major. Examples shorter than seq_len+1 are padded; longer ones
+    /// truncated.
+    pub fn next_batch(&mut self) -> Vec<TokenId> {
+        let row = self.seq_len + 1;
+        let mut out = vec![PAD_ID; self.batch_size * row];
+        for b in 0..self.batch_size {
+            if self.cursor >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+            }
+            let idx = self.indices[self.cursor];
+            self.cursor += 1;
+            let ids = encode_text(&self.corpus.examples[idx].text);
+            let n = ids.len().min(row);
+            out[b * row..b * row + n].copy_from_slice(&ids[..n]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_deterministic() {
+        let cfg = CorpusConfig::default();
+        let a = SftCorpus::generate(&cfg);
+        let b = SftCorpus::generate(&cfg);
+        assert_eq!(a.examples.len(), cfg.examples);
+        assert_eq!(a.examples[7].text, b.examples[7].text);
+    }
+
+    #[test]
+    fn examples_have_sft_scaffold() {
+        let c = SftCorpus::generate(&CorpusConfig {
+            examples: 100,
+            seed: 3,
+        });
+        for e in &c.examples {
+            assert!(e.text.starts_with("### Instruction:\n"), "{}", e.text);
+            assert!(e.text.contains("### Response:\n"), "{}", e.text);
+            assert!(e.topic < SftCorpus::n_topics());
+        }
+    }
+
+    #[test]
+    fn batches_shape_and_padding() {
+        let c = SftCorpus::generate(&CorpusConfig {
+            examples: 10,
+            seed: 4,
+        });
+        let idx: Vec<usize> = (0..10).collect();
+        let mut it = c.batches(&idx, 4, 32, 9);
+        let b = it.next_batch();
+        assert_eq!(b.len(), 4 * 33);
+        // every row must start with '#' (id of '#' is 35+1)
+        for r in 0..4 {
+            assert_eq!(b[r * 33], b'#' as TokenId + 1);
+        }
+    }
+
+    #[test]
+    fn iterator_cycles_epochs() {
+        let c = SftCorpus::generate(&CorpusConfig {
+            examples: 3,
+            seed: 5,
+        });
+        let idx = vec![0, 1, 2];
+        let mut it = c.batches(&idx, 2, 16, 11);
+        for _ in 0..10 {
+            let b = it.next_batch();
+            assert_eq!(b.len(), 2 * 17);
+        }
+    }
+
+    #[test]
+    fn all_topics_generated() {
+        let c = SftCorpus::generate(&CorpusConfig {
+            examples: 500,
+            seed: 6,
+        });
+        let mut seen = vec![false; SftCorpus::n_topics()];
+        for e in &c.examples {
+            seen[e.topic] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+}

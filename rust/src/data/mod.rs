@@ -1,0 +1,61 @@
+//! Synthetic SFT data (substitute for databricks-dolly-15k — see
+//! DESIGN.md §2).
+//!
+//! A template-based instruction/response corpus with byte-level
+//! tokenization. The corpus has strong learnable regularities (fixed
+//! prompt scaffolding, a closed world of entities and relations), so SFT
+//! loss curves drop smoothly — which is what the paper's Fig. 4/5
+//! alignment claims are about. Topic structure doubles as the non-IID
+//! axis: Dirichlet sharding skews topic mixtures per client.
+
+pub mod corpus;
+pub mod shard;
+
+pub use corpus::{CorpusConfig, SftCorpus};
+pub use shard::dirichlet_shards;
+
+/// Token id type used across the training path (matches the i32 the AOT
+/// train step takes).
+pub type TokenId = i32;
+
+/// Padding / BOS id. Byte-level ids occupy 1..=256 (byte value + 1).
+pub const PAD_ID: TokenId = 0;
+
+/// Byte-level encode: each byte maps to id byte+1 (0 is reserved for
+/// padding).
+pub fn encode_text(s: &str) -> Vec<TokenId> {
+    s.as_bytes().iter().map(|&b| b as TokenId + 1).collect()
+}
+
+/// Inverse of [`encode_text`] (lossy on pad).
+pub fn decode_text(ids: &[TokenId]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&id| id > 0 && id <= 256)
+        .map(|&id| (id - 1) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Effective vocabulary needed by byte-level encoding.
+pub const BYTE_VOCAB: usize = 257;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "### Instruction: add 2 and 3\n### Response: 5";
+        let ids = encode_text(s);
+        assert!(ids.iter().all(|&i| i >= 1 && i <= 256));
+        assert_eq!(decode_text(&ids), s);
+    }
+
+    #[test]
+    fn pad_dropped_on_decode() {
+        let mut ids = encode_text("ab");
+        ids.push(PAD_ID);
+        assert_eq!(decode_text(&ids), "ab");
+    }
+}

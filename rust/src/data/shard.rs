@@ -1,0 +1,173 @@
+//! Client data sharding: IID split or Dirichlet non-IID split over
+//! topics (the standard FL non-IID benchmark construction; paper §V
+//! names multi-client non-IID evaluation as future work — experiment X3).
+
+use super::corpus::SftCorpus;
+use crate::util::rng::SplitMix64;
+
+/// Split example indices across `clients`.
+///
+/// * `alpha == 0` → IID round-robin.
+/// * `alpha > 0` → per-topic Dirichlet(alpha) client mixture; smaller
+///   alpha = more skew.
+pub fn dirichlet_shards(
+    corpus: &SftCorpus,
+    clients: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    assert!(clients >= 1);
+    let mut shards = vec![Vec::new(); clients];
+    if alpha <= 0.0 {
+        for (i, _) in corpus.examples.iter().enumerate() {
+            shards[i % clients].push(i);
+        }
+        return shards;
+    }
+    let mut rng = SplitMix64::new(seed);
+    // Per-topic client mixture from a Dirichlet(alpha) draw.
+    let n_topics = SftCorpus::n_topics();
+    let mut mixtures = Vec::with_capacity(n_topics);
+    for _ in 0..n_topics {
+        mixtures.push(dirichlet_draw(clients, alpha, &mut rng));
+    }
+    for (i, e) in corpus.examples.iter().enumerate() {
+        let mix = &mixtures[e.topic];
+        let u = rng.next_f64();
+        let mut acc = 0.0;
+        let mut chosen = clients - 1;
+        for (c, &p) in mix.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                chosen = c;
+                break;
+            }
+        }
+        shards[chosen].push(i);
+    }
+    // Guarantee every client has at least one example.
+    for c in 0..clients {
+        if shards[c].is_empty() {
+            // steal from the largest shard
+            let donor = (0..clients).max_by_key(|&d| shards[d].len()).unwrap();
+            if let Some(idx) = shards[donor].pop() {
+                shards[c].push(idx);
+            }
+        }
+    }
+    shards
+}
+
+/// Sample from Dirichlet(alpha * 1_k) via normalized Gamma(alpha) draws
+/// (Marsaglia-Tsang for alpha < 1 uses the boost trick).
+fn dirichlet_draw(k: usize, alpha: f64, rng: &mut SplitMix64) -> Vec<f64> {
+    let mut g: Vec<f64> = (0..k).map(|_| gamma_sample(alpha, rng)).collect();
+    let sum: f64 = g.iter().sum();
+    if sum <= 0.0 {
+        return vec![1.0 / k as f64; k];
+    }
+    for v in g.iter_mut() {
+        *v /= sum;
+    }
+    g
+}
+
+fn gamma_sample(alpha: f64, rng: &mut SplitMix64) -> f64 {
+    if alpha < 1.0 {
+        // boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+        let u: f64 = rng.next_f64().max(1e-12);
+        return gamma_sample(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    // Marsaglia & Tsang
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.next_normal() as f64;
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u: f64 = rng.next_f64().max(1e-12);
+        if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+            return d * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn corpus() -> SftCorpus {
+        SftCorpus::generate(&CorpusConfig {
+            examples: 1000,
+            seed: 17,
+        })
+    }
+
+    #[test]
+    fn iid_split_balanced() {
+        let c = corpus();
+        let shards = dirichlet_shards(&c, 4, 0.0, 1);
+        assert_eq!(shards.len(), 4);
+        for s in &shards {
+            assert_eq!(s.len(), 250);
+        }
+        // partition: no duplicates, full coverage
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dirichlet_is_partition() {
+        let c = corpus();
+        let shards = dirichlet_shards(&c, 4, 0.5, 2);
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>());
+        for s in &shards {
+            assert!(!s.is_empty());
+        }
+    }
+
+    #[test]
+    fn small_alpha_skews_topics() {
+        let c = corpus();
+        let skewed = dirichlet_shards(&c, 4, 0.1, 3);
+        let iid = dirichlet_shards(&c, 4, 0.0, 3);
+        // Measure topic-distribution imbalance as max topic share per client.
+        let imbalance = |shards: &Vec<Vec<usize>>| -> f64 {
+            let mut worst: f64 = 0.0;
+            for s in shards {
+                let mut counts = vec![0usize; SftCorpus::n_topics()];
+                for &i in s {
+                    counts[c.examples[i].topic] += 1;
+                }
+                let total: usize = counts.iter().sum();
+                if total == 0 {
+                    continue;
+                }
+                let max = *counts.iter().max().unwrap() as f64 / total as f64;
+                worst = worst.max(max);
+            }
+            worst
+        };
+        assert!(
+            imbalance(&skewed) > imbalance(&iid) + 0.1,
+            "skewed {} iid {}",
+            imbalance(&skewed),
+            imbalance(&iid)
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = corpus();
+        assert_eq!(
+            dirichlet_shards(&c, 3, 0.3, 9),
+            dirichlet_shards(&c, 3, 0.3, 9)
+        );
+    }
+}

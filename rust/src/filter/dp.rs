@@ -1,0 +1,131 @@
+//! Gaussian differential-privacy filter — exercises the same filter
+//! mechanism NVFlare's privacy filters use (paper §II-B mentions DP/HE as
+//! the canonical filter applications, and §V flags quantization+DP
+//! compatibility as future work; this filter is how we test that
+//! composition, see `bench per_layer_sensitivity` and the filter tests).
+
+use super::{Filter, FilterContext};
+use crate::streaming::WeightsMsg;
+use crate::tensor::ParamContainer;
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Result};
+
+/// Clips each entry to `clip_norm` (L2) and adds N(0, sigma^2) noise.
+pub struct GaussianDpFilter {
+    pub clip_norm: f32,
+    pub sigma: f32,
+    pub seed: u64,
+}
+
+impl GaussianDpFilter {
+    pub fn new(clip_norm: f32, sigma: f32, seed: u64) -> Self {
+        Self {
+            clip_norm,
+            sigma,
+            seed,
+        }
+    }
+}
+
+impl Filter for GaussianDpFilter {
+    fn name(&self) -> &'static str {
+        "gaussian_dp"
+    }
+
+    fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
+        let c = match msg {
+            WeightsMsg::Plain(c) => c,
+            WeightsMsg::Quantized(_) => {
+                bail!("DP filter must run before quantization (chain order)")
+            }
+        };
+        let mut rng = SplitMix64::new(self.seed ^ ctx.round as u64);
+        let mut out = ParamContainer::new();
+        for (name, t) in c.iter() {
+            let src = t.as_f32();
+            let norm: f32 = src.iter().map(|v| v * v).sum::<f32>().sqrt();
+            let scale = if norm > self.clip_norm && norm > 0.0 {
+                self.clip_norm / norm
+            } else {
+                1.0
+            };
+            let mut vals = Vec::with_capacity(src.len());
+            let mut trng = rng.fork(name);
+            for &v in src {
+                vals.push(v * scale + trng.next_normal() * self.sigma);
+            }
+            out.insert(
+                name.to_string(),
+                crate::tensor::Tensor::from_f32(t.meta.shape.clone(), vals),
+            );
+        }
+        Ok(WeightsMsg::Plain(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::tensor::init::materialize;
+
+    #[test]
+    fn noise_is_added_and_bounded() {
+        let c = materialize(&ModelSpec::llama_mini(), 91);
+        let f = GaussianDpFilter::new(1e9, 0.01, 7);
+        let mut ctx = FilterContext::default();
+        let out = f.process(WeightsMsg::Plain(c.clone()), &mut ctx).unwrap();
+        let p = match out {
+            WeightsMsg::Plain(p) => p,
+            _ => panic!(),
+        };
+        let d = c.max_abs_diff(&p);
+        assert!(d > 0.0, "noise must change values");
+        assert!(d < 0.1, "sigma=0.01 noise should stay small, got {d}");
+    }
+
+    #[test]
+    fn clipping_enforced() {
+        let mut c = ParamContainer::new();
+        c.insert(
+            "w",
+            crate::tensor::Tensor::from_f32(vec![4], vec![10.0, 0.0, 0.0, 0.0]),
+        );
+        let f = GaussianDpFilter::new(1.0, 0.0, 7);
+        let mut ctx = FilterContext::default();
+        let out = f.process(WeightsMsg::Plain(c), &mut ctx).unwrap();
+        let p = match out {
+            WeightsMsg::Plain(p) => p,
+            _ => panic!(),
+        };
+        let norm: f32 = p.get("w").unwrap().as_f32().iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "{norm}");
+    }
+
+    #[test]
+    fn deterministic_per_round() {
+        let c = materialize(&ModelSpec::llama_mini(), 92);
+        let f = GaussianDpFilter::new(1e9, 0.01, 9);
+        let mut ctx = FilterContext {
+            round: 3,
+            ..Default::default()
+        };
+        let a = f.process(WeightsMsg::Plain(c.clone()), &mut ctx).unwrap();
+        let b = f.process(WeightsMsg::Plain(c.clone()), &mut ctx).unwrap();
+        assert_eq!(a, b);
+        ctx.round = 4;
+        let c2 = f.process(WeightsMsg::Plain(c), &mut ctx).unwrap();
+        assert_ne!(a, c2);
+    }
+
+    #[test]
+    fn rejects_quantized_input() {
+        let c = materialize(&ModelSpec::llama_mini(), 93);
+        let mut ctx = FilterContext::default();
+        let q = crate::filter::quantize::QuantizeFilter::new(crate::config::QuantScheme::Fp16)
+            .process(WeightsMsg::Plain(c), &mut ctx)
+            .unwrap();
+        let f = GaussianDpFilter::new(1.0, 0.01, 7);
+        assert!(f.process(q, &mut ctx).is_err());
+    }
+}

@@ -1,0 +1,221 @@
+//! The filter mechanism (paper §II-B): modular message-transformation
+//! pipelines applied at the four points of a federated round:
+//!
+//! 1. before 'Task Data' leaves the server,
+//! 2. before clients accept 'Task Data',
+//! 3. before 'Task Result' leaves the clients,
+//! 4. before the server accepts 'Task Result'.
+//!
+//! Message quantization is the paper's flagship filter pair
+//! ([`QuantizeFilter`] / [`DequantizeFilter`], applied "two-way" at all
+//! four points, §II-C); we also ship Gaussian-DP and integrity filters to
+//! exercise the same mechanism the way NVFlare's HE/DP filters do.
+
+pub mod dp;
+pub mod integrity;
+pub mod quantize;
+
+use crate::streaming::WeightsMsg;
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Where in the round a filter chain runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FilterPoint {
+    TaskDataOutServer,
+    TaskDataInClient,
+    TaskResultOutClient,
+    TaskResultInServer,
+}
+
+impl FilterPoint {
+    pub fn all() -> [FilterPoint; 4] {
+        [
+            FilterPoint::TaskDataOutServer,
+            FilterPoint::TaskDataInClient,
+            FilterPoint::TaskResultOutClient,
+            FilterPoint::TaskResultInServer,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FilterPoint::TaskDataOutServer => "task_data_out_server",
+            FilterPoint::TaskDataInClient => "task_data_in_client",
+            FilterPoint::TaskResultOutClient => "task_result_out_client",
+            FilterPoint::TaskResultInServer => "task_result_in_server",
+        }
+    }
+
+    /// Is this an outbound (pre-transmission) point?
+    pub fn outbound(&self) -> bool {
+        matches!(
+            self,
+            FilterPoint::TaskDataOutServer | FilterPoint::TaskResultOutClient
+        )
+    }
+}
+
+impl fmt::Display for FilterPoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Context handed to filters: round metadata plus free-form headers that
+/// travel with the message (integrity digests, provenance...).
+#[derive(Debug, Clone, Default)]
+pub struct FilterContext {
+    pub round: usize,
+    pub peer: String,
+    pub point_headers: BTreeMap<String, Json>,
+}
+
+/// A message transformation. Filters must be pure with respect to the
+/// message (no hidden state across calls) so chains can be re-ordered and
+/// re-run in tests.
+pub trait Filter: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg>;
+}
+
+/// An ordered filter chain per filter point.
+#[derive(Default)]
+pub struct FilterSet {
+    chains: BTreeMap<FilterPoint, Vec<Box<dyn Filter>>>,
+}
+
+impl FilterSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, point: FilterPoint, filter: Box<dyn Filter>) -> &mut Self {
+        self.chains.entry(point).or_default().push(filter);
+        self
+    }
+
+    pub fn names(&self, point: FilterPoint) -> Vec<&'static str> {
+        self.chains
+            .get(&point)
+            .map(|c| c.iter().map(|f| f.name()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Run the chain at `point` over `msg`.
+    pub fn apply(
+        &self,
+        point: FilterPoint,
+        msg: WeightsMsg,
+        ctx: &mut FilterContext,
+    ) -> Result<WeightsMsg> {
+        let mut msg = msg;
+        if let Some(chain) = self.chains.get(&point) {
+            for f in chain {
+                log::debug!("filter {} at {point}", f.name());
+                msg = f.process(msg, ctx)?;
+            }
+        }
+        Ok(msg)
+    }
+
+    /// The paper's two-way quantization wiring (§II-C): quantize on both
+    /// outbound points, dequantize on both inbound points.
+    pub fn two_way_quantization(scheme: crate::config::QuantScheme) -> FilterSet {
+        let mut set = FilterSet::new();
+        if scheme == crate::config::QuantScheme::None {
+            return set;
+        }
+        set.add(
+            FilterPoint::TaskDataOutServer,
+            Box::new(quantize::QuantizeFilter::new(scheme)),
+        );
+        set.add(
+            FilterPoint::TaskDataInClient,
+            Box::new(quantize::DequantizeFilter::new()),
+        );
+        set.add(
+            FilterPoint::TaskResultOutClient,
+            Box::new(quantize::QuantizeFilter::new(scheme)),
+        );
+        set.add(
+            FilterPoint::TaskResultInServer,
+            Box::new(quantize::DequantizeFilter::new()),
+        );
+        set
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::config::QuantScheme;
+    use crate::tensor::init::materialize;
+
+    #[test]
+    fn two_way_set_has_all_four_points() {
+        let set = FilterSet::two_way_quantization(QuantScheme::Fp16);
+        for p in FilterPoint::all() {
+            assert_eq!(set.names(p).len(), 1, "{p}");
+        }
+        let empty = FilterSet::two_way_quantization(QuantScheme::None);
+        for p in FilterPoint::all() {
+            assert!(empty.names(p).is_empty());
+        }
+    }
+
+    #[test]
+    fn full_round_trip_through_all_four_points() {
+        // Simulates one round of Fig. 2: server out -> client in ->
+        // client out -> server in. Weights must come back f32 and close.
+        let c = materialize(&ModelSpec::llama_mini(), 77);
+        for scheme in [QuantScheme::Fp16, QuantScheme::Blockwise8, QuantScheme::Nf4] {
+            let set = FilterSet::two_way_quantization(scheme);
+            let mut ctx = FilterContext::default();
+            let msg = WeightsMsg::Plain(c.clone());
+            let after_s_out = set
+                .apply(FilterPoint::TaskDataOutServer, msg, &mut ctx)
+                .unwrap();
+            assert!(matches!(after_s_out, WeightsMsg::Quantized(_)));
+            let after_c_in = set
+                .apply(FilterPoint::TaskDataInClient, after_s_out, &mut ctx)
+                .unwrap();
+            let c_in = match &after_c_in {
+                WeightsMsg::Plain(p) => p.clone(),
+                _ => panic!("client should see plain weights"),
+            };
+            let after_c_out = set
+                .apply(FilterPoint::TaskResultOutClient, after_c_in, &mut ctx)
+                .unwrap();
+            assert!(matches!(after_c_out, WeightsMsg::Quantized(_)));
+            let after_s_in = set
+                .apply(FilterPoint::TaskResultInServer, after_c_out, &mut ctx)
+                .unwrap();
+            let s_in = match &after_s_in {
+                WeightsMsg::Plain(p) => p.clone(),
+                _ => panic!("server should see plain weights"),
+            };
+            // One quantize/dequantize round's error bound, scheme-dependent.
+            let tol = match scheme {
+                QuantScheme::Fp16 => 1e-3,
+                QuantScheme::Blockwise8 => 0.05,
+                _ => 0.5,
+            };
+            let d1 = c.max_abs_diff(&c_in);
+            let d2 = c_in.max_abs_diff(&s_in);
+            assert!(d1 < tol, "{scheme:?} server->client err {d1}");
+            assert!(d2 < tol, "{scheme:?} client->server err {d2}");
+        }
+    }
+
+    #[test]
+    fn point_properties() {
+        assert!(FilterPoint::TaskDataOutServer.outbound());
+        assert!(!FilterPoint::TaskDataInClient.outbound());
+        assert!(FilterPoint::TaskResultOutClient.outbound());
+        assert!(!FilterPoint::TaskResultInServer.outbound());
+    }
+}

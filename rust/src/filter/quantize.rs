@@ -1,0 +1,168 @@
+//! Quantize / dequantize filters (paper §II-C, Fig. 2).
+//!
+//! "No code change will be needed from the model developer — the same
+//! training script can be used with and without message quantization with
+//! a simple configuration change": the filters transform the message
+//! representation; training and aggregation always see fp32.
+
+use super::{Filter, FilterContext};
+use crate::config::QuantScheme;
+use crate::quant::{dequantize, quantize};
+use crate::streaming::wire::QuantizedContainer;
+use crate::streaming::WeightsMsg;
+use crate::tensor::ParamContainer;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+/// Quantizes every entry of a plain weights message. Idempotence note:
+/// applying to an already-quantized message is an error (a mis-wired
+/// chain), not a silent double-quantization.
+pub struct QuantizeFilter {
+    scheme: QuantScheme,
+}
+
+impl QuantizeFilter {
+    pub fn new(scheme: QuantScheme) -> Self {
+        assert!(scheme != QuantScheme::None, "use an empty chain for None");
+        Self { scheme }
+    }
+}
+
+impl Filter for QuantizeFilter {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
+        let plain = match msg {
+            WeightsMsg::Plain(c) => c,
+            WeightsMsg::Quantized(_) => bail!("quantize filter got an already-quantized message"),
+        };
+        let before = plain.total_bytes();
+        let mut out = QuantizedContainer::default();
+        for (name, t) in plain.iter() {
+            out.entries.push((name.to_string(), quantize(self.scheme, t)?));
+        }
+        let after = out.payload_bytes() + out.meta_bytes();
+        ctx.point_headers.insert(
+            "quantized".into(),
+            Json::obj(vec![
+                ("scheme", Json::str(self.scheme.name())),
+                ("bytes_before", Json::num(before as f64)),
+                ("bytes_after", Json::num(after as f64)),
+            ]),
+        );
+        log::debug!(
+            "quantize[{}]: {} -> {} bytes ({:.2}%)",
+            self.scheme.name(),
+            before,
+            after,
+            100.0 * after as f64 / before as f64
+        );
+        Ok(WeightsMsg::Quantized(out))
+    }
+}
+
+/// Restores fp32 ("original precision") from any quantized message. The
+/// scheme is self-described per entry, so one dequantize filter serves
+/// all quantization configurations.
+#[derive(Default)]
+pub struct DequantizeFilter;
+
+impl DequantizeFilter {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Filter for DequantizeFilter {
+    fn name(&self) -> &'static str {
+        "dequantize"
+    }
+
+    fn process(&self, msg: WeightsMsg, _ctx: &mut FilterContext) -> Result<WeightsMsg> {
+        let q = match msg {
+            WeightsMsg::Quantized(q) => q,
+            // A plain message passing a dequantize point is legal: the
+            // job may run without quantization while the chain stays
+            // configured (the paper's "simple configuration change").
+            WeightsMsg::Plain(c) => return Ok(WeightsMsg::Plain(c)),
+        };
+        let mut out = ParamContainer::new();
+        for (name, qt) in &q.entries {
+            out.insert(name.clone(), dequantize(qt)?);
+        }
+        Ok(WeightsMsg::Plain(out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::filter::FilterContext;
+    use crate::tensor::init::materialize;
+
+    #[test]
+    fn quantize_then_dequantize() {
+        let c = materialize(&ModelSpec::llama_mini(), 41);
+        let mut ctx = FilterContext::default();
+        let q = QuantizeFilter::new(QuantScheme::Blockwise8)
+            .process(WeightsMsg::Plain(c.clone()), &mut ctx)
+            .unwrap();
+        // header recorded with sizes
+        let h = ctx.point_headers.get("quantized").unwrap();
+        let before = h.get("bytes_before").unwrap().as_u64().unwrap();
+        let after = h.get("bytes_after").unwrap().as_u64().unwrap();
+        assert_eq!(before, c.total_bytes());
+        assert!(after * 3 < before, "8-bit should be ~25% of fp32");
+        let back = DequantizeFilter::new().process(q, &mut ctx).unwrap();
+        match back {
+            WeightsMsg::Plain(p) => {
+                assert_eq!(p.names(), c.names());
+                assert!(p.all_f32());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn double_quantize_rejected() {
+        let c = materialize(&ModelSpec::llama_mini(), 42);
+        let mut ctx = FilterContext::default();
+        let f = QuantizeFilter::new(QuantScheme::Fp16);
+        let q = f.process(WeightsMsg::Plain(c), &mut ctx).unwrap();
+        assert!(f.process(q, &mut ctx).is_err());
+    }
+
+    #[test]
+    fn dequantize_passes_plain_through() {
+        let c = materialize(&ModelSpec::llama_mini(), 43);
+        let mut ctx = FilterContext::default();
+        let msg = WeightsMsg::Plain(c.clone());
+        let out = DequantizeFilter::new().process(msg.clone(), &mut ctx).unwrap();
+        assert_eq!(out, msg);
+    }
+
+    #[test]
+    fn order_preserved_through_quantization() {
+        let c = materialize(&ModelSpec::llama_mini(), 44);
+        let names: Vec<String> = c.names().to_vec();
+        let mut ctx = FilterContext::default();
+        let q = QuantizeFilter::new(QuantScheme::Nf4)
+            .process(WeightsMsg::Plain(c), &mut ctx)
+            .unwrap();
+        match &q {
+            WeightsMsg::Quantized(qc) => {
+                let qnames: Vec<String> = qc.entries.iter().map(|(n, _)| n.clone()).collect();
+                assert_eq!(qnames, names);
+            }
+            _ => panic!(),
+        }
+        let back = DequantizeFilter::new().process(q, &mut ctx).unwrap();
+        match back {
+            WeightsMsg::Plain(p) => assert_eq!(p.names(), &names[..]),
+            _ => panic!(),
+        }
+    }
+}

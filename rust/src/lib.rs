@@ -1,0 +1,28 @@
+//! `flare` — a federated-learning framework for LLM-scale models with
+//! message quantization and memory-efficient streaming.
+//!
+//! Reproduction of "Optimizing Federated Learning in the Era of LLMs:
+//! Message Quantization and Streaming" (NVIDIA, CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system. See DESIGN.md for the system
+//! inventory and the per-experiment index.
+//!
+//! Layer map:
+//! * [`sfm`] — Streamable Framed Message transport (drivers, chunking).
+//! * [`streaming`] — regular / container / file object streaming.
+//! * [`filter`] — the four-point filter mechanism; quantization filters.
+//! * [`quant`] — fp16 / bf16 / blockwise8 / fp4 / nf4 codecs.
+//! * [`coordinator`] — Controller/Executor federated workflow + FedAvg.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX train step.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod filter;
+pub mod memory;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod sfm;
+pub mod streaming;
+pub mod tensor;
+pub mod util;

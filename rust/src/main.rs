@@ -1,0 +1,406 @@
+//! `flare` — CLI for the federated LLM-training framework.
+//!
+//! Subcommands:
+//!   simulate      in-process federated run (paper's evaluation setup)
+//!   server        listen for TCP clients and run the controller
+//!   client        connect to a server and execute tasks
+//!   train         centralized baseline training
+//!   layer-sizes   print Table I (layer-wise model sizes)
+//!   quantize      print Table II (message sizes under quantization)
+//!   stream-bench  one streamed transfer with memory/time report (Table III)
+
+use anyhow::{anyhow, bail, Context, Result};
+use flare::config::model_spec::ModelSpec;
+use flare::config::{JobConfig, QuantScheme, StreamingMode};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::simulator::{self, SimResult};
+use flare::coordinator::{LocalTrainer, MockTrainer};
+use flare::data::corpus::{CorpusConfig, SftCorpus};
+use flare::data::dirichlet_shards;
+use flare::filter::FilterSet;
+use flare::memory::rss::RssRegion;
+use flare::metrics::Report;
+use flare::quant;
+use flare::runtime::PjrtTrainer;
+use flare::sfm::tcp::TcpDriver;
+use flare::sfm::SfmEndpoint;
+use flare::streaming::{self, WeightsMsg};
+use flare::tensor::init::materialize;
+use flare::util::bench::print_table;
+use flare::util::bytes::{human, mb};
+use flare::util::cli::Args;
+use std::net::TcpListener;
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+flare — federated LLM training with message quantization and streaming
+
+USAGE: flare <command> [options]
+
+COMMANDS:
+  simulate      --job <file> | [--model mini --clients 1 --rounds 5
+                --local-steps 10 --quant none --streaming regular
+                --trainer pjrt|mock --alpha 0 --out results/run.json]
+  server        --listen 127.0.0.1:7777 --job <file>
+  client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
+  train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
+  layer-sizes   [--model 1b]                      (Table I)
+  quantize      [--model 1b] [--encode]           (Table II)
+  stream-bench  [--model 1b/4] [--mode regular|container|file] [--chunk 1MB]
+                                                  (Table III, one setting)
+";
+
+fn main() {
+    flare::util::logging::init();
+    let args = Args::from_env(&["encode", "verbose", "help", "full"]);
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "server" => cmd_server(&args),
+        "client" => cmd_client(&args),
+        "train" => cmd_train(&args),
+        "layer-sizes" => cmd_layer_sizes(&args),
+        "quantize" => cmd_quantize(&args),
+        "stream-bench" => cmd_stream_bench(&args),
+        _ => {
+            print!("{USAGE}");
+            if cmd.is_empty() || cmd == "help" || args.flag("help") {
+                Ok(())
+            } else {
+                Err(anyhow!("unknown command '{cmd}'"))
+            }
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn job_from_args(args: &Args) -> Result<JobConfig> {
+    let mut job = if let Some(path) = args.get("job") {
+        JobConfig::from_file(path)?
+    } else {
+        JobConfig::default()
+    };
+    if let Some(m) = args.get("model") {
+        job.model = m.to_string();
+    }
+    job.clients = args.get_usize("clients", job.clients);
+    job.rounds = args.get_usize("rounds", job.rounds);
+    job.train.local_steps = args.get_usize("local-steps", job.train.local_steps);
+    if let Some(q) = args.get("quant") {
+        job.quant = QuantScheme::from_name(q).ok_or_else(|| anyhow!("bad quant '{q}'"))?;
+    }
+    if let Some(s) = args.get("streaming") {
+        job.streaming =
+            StreamingMode::from_name(s).ok_or_else(|| anyhow!("bad streaming '{s}'"))?;
+    }
+    job.chunk_bytes = args.get_size("chunk", job.chunk_bytes);
+    job.dirichlet_alpha = args.get_f64("alpha", job.dirichlet_alpha);
+    job.seed = args.get_u64("seed", job.seed);
+    if let Some(d) = args.get("artifacts") {
+        job.artifacts_dir = d.to_string();
+    }
+    job.validate()?;
+    Ok(job)
+}
+
+fn spec_for(job: &JobConfig) -> Result<ModelSpec> {
+    ModelSpec::preset(&job.model).ok_or_else(|| anyhow!("unknown model '{}'", job.model))
+}
+
+/// Either a PJRT trainer over the AOT artifacts or the mock (for
+/// transport-only runs).
+enum AnyTrainer {
+    Pjrt(Box<PjrtTrainer>),
+    Mock(MockTrainer),
+}
+
+impl LocalTrainer for AnyTrainer {
+    fn train(
+        &mut self,
+        w: &flare::tensor::ParamContainer,
+        steps: usize,
+        round: usize,
+    ) -> Result<(flare::tensor::ParamContainer, Vec<f32>)> {
+        match self {
+            AnyTrainer::Pjrt(t) => t.train(w, steps, round),
+            AnyTrainer::Mock(t) => t.train(w, steps, round),
+        }
+    }
+
+    fn n_samples(&self) -> u64 {
+        match self {
+            AnyTrainer::Pjrt(t) => t.n_samples(),
+            AnyTrainer::Mock(t) => t.n_samples(),
+        }
+    }
+}
+
+fn make_any_trainer(job: &JobConfig, kind: &str, client_idx: usize) -> Result<AnyTrainer> {
+    match kind {
+        "mock" => {
+            let spec = ModelSpec::preset(&job.model).unwrap();
+            Ok(AnyTrainer::Mock(MockTrainer::new(
+                materialize(&spec, job.seed ^ 0xDEAD),
+                0.3,
+                100,
+            )))
+        }
+        "pjrt" => {
+            let corpus = SftCorpus::generate(&CorpusConfig {
+                examples: 2000,
+                seed: job.seed,
+            });
+            let shards = dirichlet_shards(&corpus, job.clients, job.dirichlet_alpha, job.seed);
+            let trainer = PjrtTrainer::new(
+                std::path::Path::new(&job.artifacts_dir),
+                &job.model,
+                corpus,
+                shards[client_idx % shards.len()].clone(),
+                job.seed ^ client_idx as u64,
+            )
+            .context("build PJRT trainer (run `make artifacts` first?)")?;
+            Ok(AnyTrainer::Pjrt(Box::new(trainer)))
+        }
+        other => bail!("unknown trainer '{other}' (pjrt|mock)"),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let trainer_kind = args.get_or("trainer", "pjrt").to_string();
+    let spec = spec_for(&job)?;
+    let initial = materialize(&spec, job.seed);
+    let quant = job.quant;
+    let job_for_factory = job.clone();
+    let result: SimResult = simulator::run_simulation(
+        &job,
+        initial,
+        std::sync::Arc::new(move |i| {
+            make_any_trainer(&job_for_factory, &trainer_kind, i)
+                .expect("trainer construction failed")
+        }),
+        move || FilterSet::two_way_quantization(quant),
+    )?;
+    summarize(&result.report);
+    if let Some(out) = args.get("out") {
+        result.report.save_json(&PathBuf::from(out))?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let trainer_kind = args.get_or("trainer", "pjrt");
+    let spec = spec_for(&job)?;
+    let initial = materialize(&spec, job.seed);
+    let mut trainer = make_any_trainer(&job, trainer_kind, 0)?;
+    let result = simulator::run_centralized(&job, initial, &mut trainer)?;
+    summarize(&result.report);
+    if let Some(out) = args.get("out") {
+        result.report.save_json(&PathBuf::from(out))?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_server(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let addr = args.get_or("listen", "127.0.0.1:7777");
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    println!("listening on {addr}, waiting for {} client(s)...", job.clients);
+    let spool = std::env::temp_dir().join(format!("flare_srv_{}", std::process::id()));
+    std::fs::create_dir_all(&spool)?;
+    let mut controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        spool,
+    );
+    for _ in 0..job.clients {
+        let driver = TcpDriver::accept(&listener)?;
+        let ep = SfmEndpoint::new(Box::new(driver)).with_chunk(job.chunk_bytes as usize);
+        controller.accept_client(ep, Some(std::time::Duration::from_secs(300)))?;
+    }
+    let spec = spec_for(&job)?;
+    let initial = materialize(&spec, job.seed);
+    let mut report = Report::new();
+    controller.run(initial, &mut report)?;
+    summarize(&report);
+    if let Some(out) = args.get("out") {
+        report.save_json(&PathBuf::from(out))?;
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("connect", "127.0.0.1:7777");
+    let name = args.get_or("name", "site-1").to_string();
+    let trainer_kind = args.get_or("trainer", "pjrt");
+    let driver = TcpDriver::connect(addr)?;
+    let ep = SfmEndpoint::new(Box::new(driver));
+    let spool = std::env::temp_dir().join(format!("flare_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&spool)?;
+    // Register first so the server's welcome tells us the job config.
+    let probe = Executor::new(
+        name.clone(),
+        ep,
+        FilterSet::new(),
+        MockTrainer::new(flare::tensor::ParamContainer::new(), 0.0, 1),
+        spool.clone(),
+    );
+    let job_json = probe.register()?;
+    let job = JobConfig::from_json(&job_json)?;
+    println!("registered with server; job '{}' model '{}'", job.name, job.model);
+    let trainer = make_any_trainer(&job, trainer_kind, name_index(&name))?;
+    let mut exec = Executor::new(
+        name,
+        probe.ep,
+        FilterSet::two_way_quantization(job.quant),
+        trainer,
+        spool,
+    )
+    .with_mode(job.streaming);
+    let rounds = exec.run()?;
+    println!("completed {rounds} rounds");
+    Ok(())
+}
+
+fn name_index(name: &str) -> usize {
+    name.rsplit('-')
+        .next()
+        .and_then(|s| s.parse::<usize>().ok())
+        .map(|i| i.saturating_sub(1))
+        .unwrap_or(0)
+}
+
+fn cmd_layer_sizes(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "1b");
+    let spec =
+        ModelSpec::preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let rows: Vec<Vec<String>> = spec
+        .layer_size_rows()
+        .into_iter()
+        .map(|(name, size_mb, count)| {
+            vec![name, format!("{size_mb:.2}"), count.to_string()]
+        })
+        .collect();
+    print_table(
+        &format!("Table I — layer-wise sizes of {} (fp32)", spec.name),
+        &["Layer Name", "Layer Size (MB)", "Count"],
+        &rows,
+    );
+    println!(
+        "total: {} tensors, {:.2} MB",
+        spec.params.len(),
+        mb(spec.total_bytes_f32())
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "1b");
+    let spec =
+        ModelSpec::preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    let mut rows = Vec::new();
+    for scheme in [
+        QuantScheme::None,
+        QuantScheme::Fp16,
+        QuantScheme::Blockwise8,
+        QuantScheme::Fp4,
+        QuantScheme::Nf4,
+    ] {
+        let (label, data_mb, meta_mb, pct) = quant::table2_row(&spec, scheme);
+        rows.push(vec![
+            label,
+            format!("{data_mb:.2}"),
+            format!("{meta_mb:.2}"),
+            format!("{pct:.2} %"),
+        ]);
+    }
+    print_table(
+        &format!("Table II — message size of {} under quantization", spec.name),
+        &["Precision", "Model Size (MB)", "Quant Meta (MB)", "fp32 %"],
+        &rows,
+    );
+    if args.flag("encode") {
+        println!("\nencoding actual weights to verify the analytic sizes...");
+        let c = materialize(&spec, 7);
+        for scheme in [QuantScheme::Fp16, QuantScheme::Blockwise8, QuantScheme::Nf4] {
+            let mut data = 0u64;
+            let mut meta = 0u64;
+            for (_, t) in c.iter() {
+                let q = quant::quantize(scheme, t)?;
+                data += q.payload_bytes();
+                meta += q.meta_bytes();
+            }
+            println!(
+                "  {:<12} data {:>10.2} MB   meta {:>8.2} MB",
+                scheme.name(),
+                mb(data),
+                mb(meta)
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream_bench(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "1b/4");
+    let mode = StreamingMode::from_name(args.get_or("mode", "container"))
+        .ok_or_else(|| anyhow!("bad mode"))?;
+    let chunk = args.get_size("chunk", 1 << 20) as usize;
+    let spec =
+        ModelSpec::preset(model).ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+    println!(
+        "materializing {} ({:.0} MB fp32)...",
+        spec.name,
+        mb(spec.total_bytes_f32())
+    );
+    let weights = materialize(&spec, 11);
+    let msg = WeightsMsg::Plain(weights);
+    let pair = flare::sfm::inmem::pair(64);
+    let server = SfmEndpoint::new(pair.a).with_chunk(chunk);
+    let client = SfmEndpoint::new(pair.b).with_chunk(chunk);
+    let spool = std::env::temp_dir();
+    flare::memory::COMM_GAUGE.reset_peak();
+    let region = RssRegion::start();
+    let t0 = std::time::Instant::now();
+    let tx = std::thread::spawn({
+        let spool = spool.clone();
+        move || {
+            streaming::send_weights(&server, &msg, mode, Some(&spool)).unwrap();
+            let _ = server.recv_event(None);
+        }
+    });
+    let (got, stats) = streaming::recv_weights(&client, Some(&spool))?;
+    tx.join().unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let (rss_peak, rss_delta) = region.sample();
+    println!("mode            : {}", mode.name());
+    println!("entries         : {}", got.n_entries());
+    println!("wire bytes      : {}", human(stats.wire_bytes));
+    println!("job time        : {secs:.2} s");
+    println!("comm-buffer peak: {}", human(flare::memory::COMM_GAUGE.peak()));
+    println!("process RSS peak: {} (delta {})", human(rss_peak), human(rss_delta.max(0) as u64));
+    Ok(())
+}
+
+fn summarize(report: &Report) {
+    if let Some(s) = report.series.get("global_loss") {
+        println!("\nglobal loss by round:");
+        for (x, y) in &s.points {
+            println!("  round {:>3}: {y:.4}", *x as usize);
+        }
+    }
+    let spark = report.sparkline("global_loss", 40);
+    if !spark.is_empty() {
+        println!("  {spark}");
+    }
+    for (k, v) in &report.scalars {
+        println!("  {k} = {v:.4}");
+    }
+}

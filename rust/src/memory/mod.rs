@@ -1,0 +1,169 @@
+//! Memory accounting (paper §III / Table III).
+//!
+//! Two complementary probes:
+//! * [`Gauge`] — exact byte accounting of *transmission buffers*: every
+//!   buffer the communication path allocates registers here, so tests can
+//!   assert the paper's bounds (regular = whole message, container = max
+//!   entry, file = one chunk) deterministically.
+//! * [`rss`] — process-level RSS / peak-RSS sampling from `/proc`, the
+//!   methodology the paper's Table III uses.
+
+pub mod rss;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A current/peak byte gauge. All operations are lock-free.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Self {
+            cur: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, n: u64) {
+        let now = self.cur.fetch_add(n, Ordering::Relaxed) + n;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: u64) {
+        self.cur.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Reset the peak to the current value (start of a measured region).
+    pub fn reset_peak(&self) {
+        self.peak.store(self.current(), Ordering::Relaxed);
+    }
+}
+
+/// Global gauge for communication buffers (serialized blobs, chunk
+/// buffers, reassembly buffers). The model containers themselves are
+/// *not* counted — the paper's comparison is about the *additional*
+/// memory transmission needs.
+pub static COMM_GAUGE: Gauge = Gauge::new();
+
+/// A byte buffer whose lifetime is tracked by a gauge. Use for every
+/// transmission-path allocation so Table III is measurable by accounting
+/// as well as by RSS.
+pub struct TrackedBuf {
+    data: Vec<u8>,
+    gauge: &'static Gauge,
+    registered: usize,
+}
+
+impl TrackedBuf {
+    pub fn with_capacity(gauge: &'static Gauge, cap: usize) -> Self {
+        gauge.add(cap as u64);
+        Self {
+            data: Vec::with_capacity(cap),
+            gauge,
+            registered: cap,
+        }
+    }
+
+    pub fn from_vec(gauge: &'static Gauge, data: Vec<u8>) -> Self {
+        let registered = data.capacity();
+        gauge.add(registered as u64);
+        Self {
+            data,
+            gauge,
+            registered,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn as_mut_vec(&mut self) -> &mut Vec<u8> {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Re-sync the registered size after growth.
+    pub fn resync(&mut self) {
+        let cap = self.data.capacity();
+        if cap > self.registered {
+            self.gauge.add((cap - self.registered) as u64);
+        } else if cap < self.registered {
+            self.gauge.sub((self.registered - cap) as u64);
+        }
+        self.registered = cap;
+    }
+
+    /// Take the inner Vec, keeping accounting until drop of the returned
+    /// guard would be wrong — so this unregisters immediately.
+    pub fn into_vec(mut self) -> Vec<u8> {
+        self.gauge.sub(self.registered as u64);
+        self.registered = 0;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for TrackedBuf {
+    fn drop(&mut self) {
+        self.gauge.sub(self.registered as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    static TEST_GAUGE: Gauge = Gauge::new();
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let g = Gauge::new();
+        g.add(100);
+        g.add(50);
+        g.sub(120);
+        assert_eq!(g.current(), 30);
+        assert_eq!(g.peak(), 150);
+        g.reset_peak();
+        assert_eq!(g.peak(), 30);
+    }
+
+    #[test]
+    fn tracked_buf_lifecycle() {
+        let before = TEST_GAUGE.current();
+        {
+            let mut b = TrackedBuf::with_capacity(&TEST_GAUGE, 1024);
+            assert_eq!(TEST_GAUGE.current(), before + 1024);
+            b.as_mut_vec().extend_from_slice(&[0u8; 2048]);
+            b.resync();
+            assert!(TEST_GAUGE.current() >= before + 2048);
+        }
+        assert_eq!(TEST_GAUGE.current(), before);
+    }
+
+    #[test]
+    fn into_vec_unregisters() {
+        let before = TEST_GAUGE.current();
+        let b = TrackedBuf::from_vec(&TEST_GAUGE, vec![1, 2, 3]);
+        let v = b.into_vec();
+        assert_eq!(v, vec![1, 2, 3]);
+        assert_eq!(TEST_GAUGE.current(), before);
+    }
+}

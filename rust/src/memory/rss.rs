@@ -1,0 +1,83 @@
+//! Process RSS sampling from `/proc/self/status` — the measurement the
+//! paper's Table III reports ("system memory footprint ... peak memory
+//! usage").
+
+use std::fs;
+
+fn read_status_kb(key: &str) -> Option<u64> {
+    let text = fs::read_to_string("/proc/self/status").ok()?;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let rest = rest.trim_start_matches(':').trim();
+            let kb: u64 = rest.trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Current resident set size in bytes (0 if unavailable).
+pub fn rss_now() -> u64 {
+    read_status_kb("VmRSS").unwrap_or(0)
+}
+
+/// Peak resident set size (VmHWM) in bytes since last reset.
+pub fn rss_peak() -> u64 {
+    read_status_kb("VmHWM").unwrap_or(0)
+}
+
+/// Reset the kernel's peak-RSS watermark (Linux: write "5" to
+/// /proc/self/clear_refs). Returns false if unsupported.
+pub fn reset_peak() -> bool {
+    fs::write("/proc/self/clear_refs", b"5").is_ok()
+}
+
+/// A scoped sampler: reset at start, report delta/peak at the end of a
+/// measured region.
+pub struct RssRegion {
+    start_rss: u64,
+    had_reset: bool,
+}
+
+impl RssRegion {
+    pub fn start() -> Self {
+        let had_reset = reset_peak();
+        Self {
+            start_rss: rss_now(),
+            had_reset,
+        }
+    }
+
+    /// (peak RSS during region, delta over the region's start) in bytes.
+    /// If the watermark reset is unsupported, peak falls back to the
+    /// current RSS (lower bound).
+    pub fn sample(&self) -> (u64, i64) {
+        let peak = if self.had_reset { rss_peak() } else { rss_now() };
+        (peak, peak as i64 - self.start_rss as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_readable() {
+        assert!(rss_now() > 0, "VmRSS should be readable on Linux");
+        assert!(rss_peak() >= rss_now() || !reset_peak());
+    }
+
+    #[test]
+    fn region_sees_allocation() {
+        let region = RssRegion::start();
+        // Touch 64 MB so RSS must rise.
+        let mut v = vec![0u8; 64 << 20];
+        for i in (0..v.len()).step_by(4096) {
+            v[i] = 1;
+        }
+        let (peak, delta) = region.sample();
+        std::hint::black_box(&v);
+        assert!(peak > 0);
+        assert!(delta > (48 << 20) as i64, "delta {delta}");
+    }
+}

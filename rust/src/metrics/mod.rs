@@ -1,0 +1,219 @@
+//! Run metrics: loss curves, communication volumes, timings — written as
+//! JSON/CSV under a results directory so every figure in EXPERIMENTS.md
+//! is regenerable from artifacts on disk.
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A labelled series of (step, value) points — one loss curve, one
+/// throughput sweep line, etc.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn mean_tail(&self, n: usize) -> f64 {
+        let k = self.points.len().min(n);
+        if k == 0 {
+            return f64::NAN;
+        }
+        self.points[self.points.len() - k..]
+            .iter()
+            .map(|p| p.1)
+            .sum::<f64>()
+            / k as f64
+    }
+}
+
+/// A metrics report: named series plus scalar summary values.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub series: BTreeMap<String, Series>,
+    pub scalars: BTreeMap<String, f64>,
+    pub labels: BTreeMap<String, String>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn series_mut(&mut self, name: &str) -> &mut Series {
+        self.series.entry(name.to_string()).or_default()
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: f64) {
+        self.scalars.insert(name.to_string(), v);
+    }
+
+    pub fn set_label(&mut self, name: &str, v: impl Into<String>) {
+        self.labels.insert(name.to_string(), v.into());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let series = Json::Obj(
+            self.series
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|&(x, y)| Json::Arr(vec![Json::num(x), Json::num(y)]))
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
+        let scalars = Json::Obj(
+            self.scalars
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v)))
+                .collect(),
+        );
+        let labels = Json::Obj(
+            self.labels
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("series", series),
+            ("scalars", scalars),
+            ("labels", labels),
+        ])
+    }
+
+    pub fn save_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    /// CSV with one column per series (aligned by index; ragged series
+    /// leave blanks).
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let names: Vec<&String> = self.series.keys().collect();
+        let rows = self.series.values().map(|s| s.points.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        out.push_str("idx");
+        for n in &names {
+            out.push_str(&format!(",{n}_x,{n}_y"));
+        }
+        out.push('\n');
+        for r in 0..rows {
+            out.push_str(&r.to_string());
+            for n in &names {
+                match self.series[*n].points.get(r) {
+                    Some(&(x, y)) => out.push_str(&format!(",{x},{y}")),
+                    None => out.push_str(",,"),
+                }
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Render a quick ASCII sparkline of a series (terminal "figures").
+    pub fn sparkline(&self, name: &str, width: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let Some(s) = self.series.get(name) else {
+            return String::new();
+        };
+        if s.points.is_empty() {
+            return String::new();
+        }
+        let ys: Vec<f64> = s.points.iter().map(|p| p.1).collect();
+        let (lo, hi) = ys
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &y| {
+                (l.min(y), h.max(y))
+            });
+        let span = (hi - lo).max(1e-12);
+        let stride = (ys.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < ys.len() && out.chars().count() < width {
+            let y = ys[i as usize];
+            let b = (((y - lo) / span) * 7.0).round() as usize;
+            out.push(BARS[b.min(7)]);
+            i += stride;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_and_scalars_serialize() {
+        let mut r = Report::new();
+        r.series_mut("loss").push(0.0, 2.5);
+        r.series_mut("loss").push(1.0, 2.0);
+        r.set_scalar("final_loss", 2.0);
+        r.set_label("mode", "fl");
+        let j = r.to_json();
+        assert_eq!(
+            j.at(&["scalars", "final_loss"]).unwrap().as_f64().unwrap(),
+            2.0
+        );
+        assert_eq!(
+            j.at(&["series", "loss"]).unwrap().as_arr().unwrap().len(),
+            2
+        );
+    }
+
+    #[test]
+    fn save_files() {
+        let dir = std::env::temp_dir().join(format!("flare_metrics_{}", std::process::id()));
+        let mut r = Report::new();
+        r.series_mut("a").push(0.0, 1.0);
+        r.save_json(&dir.join("r.json")).unwrap();
+        r.save_csv(&dir.join("r.csv")).unwrap();
+        let text = std::fs::read_to_string(dir.join("r.csv")).unwrap();
+        assert!(text.starts_with("idx,a_x,a_y"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tail_mean() {
+        let mut s = Series::default();
+        for i in 0..10 {
+            s.push(i as f64, i as f64);
+        }
+        assert_eq!(s.mean_tail(2), 8.5);
+        assert_eq!(s.last(), Some(9.0));
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let mut r = Report::new();
+        for i in 0..100 {
+            r.series_mut("curve").push(i as f64, (100 - i) as f64);
+        }
+        let line = r.sparkline("curve", 20);
+        assert_eq!(line.chars().count(), 20);
+        assert!(line.starts_with('█'));
+    }
+}

@@ -1,0 +1,322 @@
+//! Codebook quantization: map normalized values in [-1, 1] to the nearest
+//! entry of a fixed table. Backs both the 8-bit dynamic map (256 entries,
+//! Dettmers et al. 2021) and the 4-bit fp4 / nf4 tables (Dettmers &
+//! Zettlemoyer 2023).
+
+/// A quantization codebook. `values[code]` is the dequantized value;
+/// `thresholds[i]` is the decision boundary between sorted entries i and
+/// i+1 (midpoint), enabling O(log n) nearest-neighbour encoding.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    /// Dequant lookup: code -> value. Length 16 or 256.
+    pub values: Vec<f32>,
+    /// Codes sorted by value (permutation of 0..values.len()).
+    sorted_codes: Vec<u8>,
+    /// Sorted values (parallel to sorted_codes).
+    sorted_values: Vec<f32>,
+    /// Midpoints between consecutive sorted values.
+    thresholds: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(values: Vec<f32>) -> Codebook {
+        assert!(values.len() >= 2 && values.len() <= 256);
+        let mut idx: Vec<u8> = (0..values.len() as u16).map(|i| i as u8).collect();
+        idx.sort_by(|&a, &b| {
+            values[a as usize]
+                .partial_cmp(&values[b as usize])
+                .unwrap()
+        });
+        let sorted_values: Vec<f32> = idx.iter().map(|&i| values[i as usize]).collect();
+        let thresholds: Vec<f32> = sorted_values
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Codebook {
+            values,
+            sorted_codes: idx,
+            sorted_values,
+            thresholds,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Sorted values (the dequant table in sorted order).
+    pub fn sorted_values(&self) -> &[f32] {
+        &self.sorted_values
+    }
+
+    /// Midpoint decision boundaries between sorted entries — the encode
+    /// view shipped to the AOT quant kernels (as_hlo_text elides large
+    /// constants, so the Rust side supplies these as arguments).
+    pub fn thresholds(&self) -> &[f32] {
+        &self.thresholds
+    }
+
+    /// Permutation mapping sorted slot -> code.
+    pub fn sorted_codes(&self) -> &[u8] {
+        &self.sorted_codes
+    }
+
+    /// Nearest code for `x` (ties round toward the upper entry, matching a
+    /// `>=` threshold comparison).
+    #[inline]
+    pub fn encode(&self, x: f32) -> u8 {
+        // partition_point: number of thresholds strictly below x.
+        let i = self.thresholds.partition_point(|&t| t < x);
+        self.sorted_codes[i]
+    }
+
+    /// Exact nearest check (linear scan) — test oracle.
+    #[cfg(test)]
+    pub fn encode_linear(&self, x: f32) -> u8 {
+        let mut best = 0usize;
+        let mut bd = f32::INFINITY;
+        for (c, &v) in self.values.iter().enumerate() {
+            let d = (x - v).abs();
+            if d < bd {
+                bd = d;
+                best = c;
+            }
+        }
+        best as u8
+    }
+
+    #[inline]
+    pub fn decode(&self, code: u8) -> f32 {
+        self.values[code as usize]
+    }
+
+    /// The codebook's own serialized size in bytes (counts toward the
+    /// quantization-meta size in Table II when transmitted per tensor).
+    pub fn byte_size(&self) -> usize {
+        self.values.len() * 4
+    }
+}
+
+/// LUT-accelerated encoder (perf pass P1, see EXPERIMENTS.md §Perf).
+///
+/// Nearest-code lookup = `partition_point(thresholds < x)`; a binary
+/// search costs ~8 branchy steps per element for the 8-bit map. The LUT
+/// divides the normalized domain [-1, 1] into uniform buckets and
+/// precomputes, per bucket, the (inclusive) range of sorted slots whose
+/// Voronoi cells intersect it (widened by one bucket on each side so
+/// float rounding at bucket edges cannot push the answer out of range).
+/// Encoding is then bucket index + a short linear scan — exact, same tie
+/// behaviour as [`Codebook::encode`] (verified by an exhaustive property
+/// test).
+pub struct FastEncoder<'a> {
+    thresholds: &'a [f32],
+    sorted_codes: &'a [u8],
+    /// (first slot, last threshold index to scan) per bucket.
+    lut: Vec<(u16, u16)>,
+    scale: f32,
+}
+
+impl<'a> FastEncoder<'a> {
+    pub fn new(cb: &'a Codebook, buckets: usize) -> FastEncoder<'a> {
+        assert!(buckets >= 2);
+        let mut lut = Vec::with_capacity(buckets);
+        let width = 2.0 / buckets as f64;
+        for b in 0..buckets {
+            // widen to neighbouring buckets for fp-edge safety
+            let lo = (-1.0 + width * (b as f64 - 1.0)) as f32;
+            let hi = (-1.0 + width * (b as f64 + 2.0)) as f32;
+            let s_lo = cb.thresholds.partition_point(|&t| t < lo) as u16;
+            let s_hi = cb.thresholds.partition_point(|&t| t < hi) as u16;
+            lut.push((s_lo, s_hi));
+        }
+        FastEncoder {
+            thresholds: &cb.thresholds,
+            sorted_codes: &cb.sorted_codes,
+            lut,
+            scale: buckets as f32 / 2.0,
+        }
+    }
+
+    /// Exact nearest code for normalized `x` (|x| <= 1 after blockwise
+    /// normalization; out-of-range values clamp to the end buckets).
+    #[inline(always)]
+    pub fn encode(&self, x: f32) -> u8 {
+        let pos = (x + 1.0) * self.scale;
+        let b = (pos as i32).clamp(0, self.lut.len() as i32 - 1) as usize;
+        let (lo, hi) = self.lut[b];
+        let mut slot = lo as usize;
+        let hi = hi as usize;
+        while slot < hi && self.thresholds[slot] < x {
+            slot += 1;
+        }
+        self.sorted_codes[slot]
+    }
+}
+
+/// bitsandbytes' `create_dynamic_map(signed=True, max_exponent_bits=7,
+/// total_bits=8)`: 256 entries — 7 "exponent" decades of linearly spaced
+/// fractions, mirrored for sign, plus {0, 1}.
+pub fn dynamic_map_8bit() -> Codebook {
+    let max_exp_bits = 7i32;
+    let non_sign_bits = 7i32;
+    let mut data: Vec<f32> = Vec::with_capacity(256);
+    for i in 0..max_exp_bits {
+        let fraction_items = (1usize << (i + non_sign_bits - max_exp_bits)) + 1;
+        // boundaries = linspace(0.1, 1, fraction_items); means of adjacent.
+        let n = fraction_items;
+        let bound = |k: usize| 0.1 + 0.9 * (k as f64) / ((n - 1).max(1) as f64);
+        let scale = 10f64.powi(-(max_exp_bits - 1) + i);
+        for k in 0..n - 1 {
+            let mean = 0.5 * (bound(k) + bound(k + 1));
+            data.push((scale * mean) as f32);
+            data.push((-scale * mean) as f32);
+        }
+    }
+    data.push(0.0);
+    data.push(1.0);
+    assert_eq!(data.len(), 256, "dynamic map must have 256 entries");
+    data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Codebook::new(data)
+}
+
+/// NF4: the 16 "normal float" quantiles of N(0,1) normalized to [-1, 1]
+/// (exact constants from bitsandbytes).
+pub fn nf4_map() -> Codebook {
+    Codebook::new(vec![
+        -1.0,
+        -0.696_192_8,
+        -0.525_073_05,
+        -0.394_917_5,
+        -0.284_441_38,
+        -0.184_773_43,
+        -0.091_050_036,
+        0.0,
+        0.079_580_3,
+        0.160_930_2,
+        0.246_112_3,
+        0.337_915_24,
+        0.440_709_83,
+        0.562_617,
+        0.722_956_84,
+        1.0,
+    ])
+}
+
+/// FP4 (E2M1): 1 sign, 2 exponent, 1 mantissa bits. Magnitudes
+/// {0, 0.5, 1, 1.5, 2, 3, 4, 6} normalized by 6 so the max is 1.0; code
+/// layout is sign-magnitude (bit 3 = sign), mirroring the bnb kernel.
+pub fn fp4_map() -> Codebook {
+    let mags = [0.0f32, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+    let mut values = vec![0f32; 16];
+    for (i, &m) in mags.iter().enumerate() {
+        values[i] = m / 6.0;
+        values[i + 8] = -m / 6.0; // -0.0 at code 8
+    }
+    Codebook::new(values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn dynamic_map_properties() {
+        let cb = dynamic_map_8bit();
+        assert_eq!(cb.len(), 256);
+        assert!(cb.values.contains(&0.0));
+        assert!(cb.values.contains(&1.0));
+        let min = cb.sorted_values.first().unwrap();
+        let max = cb.sorted_values.last().unwrap();
+        assert!(*min >= -1.0 && *max == 1.0, "range [{min}, {max}]");
+        // strictly increasing after sort
+        for w in cb.sorted_values.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn encode_matches_linear_scan() {
+        let mut rng = SplitMix64::new(99);
+        for cb in [dynamic_map_8bit(), nf4_map(), fp4_map()] {
+            for _ in 0..5_000 {
+                let x = rng.next_f32() * 2.2 - 1.1; // include out-of-range
+                let fast = cb.decode(cb.encode(x));
+                let slow = cb.decode(cb.encode_linear(x));
+                // Both must be *a* nearest value (ties can differ in code
+                // but not in distance).
+                assert_eq!(
+                    (fast - x).abs(),
+                    (slow - x).abs(),
+                    "x={x} fast={fast} slow={slow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codes_roundtrip_their_values() {
+        for cb in [dynamic_map_8bit(), nf4_map(), fp4_map()] {
+            for code in 0..cb.len() as u16 {
+                let v = cb.decode(code as u8);
+                let back = cb.encode(v);
+                assert_eq!(
+                    cb.decode(back),
+                    v,
+                    "code {code} value {v} re-encoded to {back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nf4_is_16_sorted_asymmetric() {
+        let cb = nf4_map();
+        assert_eq!(cb.len(), 16);
+        assert_eq!(cb.decode(0), -1.0);
+        assert_eq!(cb.decode(15), 1.0);
+        assert_eq!(cb.decode(7), 0.0);
+    }
+
+    #[test]
+    fn fp4_sign_layout() {
+        let cb = fp4_map();
+        assert_eq!(cb.decode(0), 0.0);
+        assert_eq!(cb.decode(3), 1.5 / 6.0);
+        assert_eq!(cb.decode(11), -1.5 / 6.0);
+        assert_eq!(cb.decode(7), 1.0);
+        assert_eq!(cb.decode(15), -1.0);
+    }
+
+    #[test]
+    fn fast_encoder_matches_exact_everywhere() {
+        let mut rng = SplitMix64::new(123);
+        for cb in [dynamic_map_8bit(), nf4_map(), fp4_map()] {
+            let fast = FastEncoder::new(&cb, 1024);
+            // dense uniform sweep + random + exact thresholds (tie points)
+            for i in 0..=20_000 {
+                let x = -1.0 + 2.0 * i as f32 / 20_000.0;
+                assert_eq!(fast.encode(x), cb.encode(x), "sweep x={x}");
+            }
+            for _ in 0..20_000 {
+                let x = rng.next_f32() * 2.0 - 1.0;
+                assert_eq!(fast.encode(x), cb.encode(x), "rand x={x}");
+            }
+            for &t in cb.thresholds() {
+                assert_eq!(fast.encode(t), cb.encode(t), "tie x={t}");
+                let up = f32::from_bits(t.to_bits() + 1);
+                let dn = f32::from_bits(t.to_bits().wrapping_sub(1));
+                assert_eq!(fast.encode(up), cb.encode(up));
+                assert_eq!(fast.encode(dn), cb.encode(dn));
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_clamps_to_extremes() {
+        for cb in [dynamic_map_8bit(), nf4_map(), fp4_map()] {
+            assert_eq!(cb.decode(cb.encode(5.0)), 1.0);
+            assert_eq!(cb.decode(cb.encode(-5.0)), *cb.sorted_values.first().unwrap());
+        }
+    }
+}

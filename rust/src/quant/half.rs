@@ -1,0 +1,322 @@
+//! Scalar f32 ↔ f16 / bf16 conversion (bit-level, no `half` crate in the
+//! offline set). Round-to-nearest-even, IEEE semantics; overflow goes to
+//! ±inf, matching the "direct cropping and casting" the paper uses.
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even.
+#[inline]
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m | ((mant >> 13) as u16 & 0x03ff);
+    }
+    // Re-bias exponent: f32 bias 127 -> f16 bias 15.
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. Round mantissa 23 -> 10 bits, RNE.
+        let e16 = (unbiased + 15) as u16;
+        let m16 = (mant >> 13) as u16;
+        let rest = mant & 0x1fff;
+        let halfway = 0x1000;
+        let mut out = sign | (e16 << 10) | m16;
+        if rest > halfway || (rest == halfway && (m16 & 1) == 1) {
+            out += 1; // carries into exponent correctly (inf on overflow)
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16.
+        let full_mant = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - unbiased) as u32 + 13;
+        let m16 = (full_mant >> shift) as u16;
+        let rest = full_mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut out = sign | m16;
+        if rest > halfway || (rest == halfway && (m16 & 1) == 1) {
+            out += 1;
+        }
+        return out;
+    }
+    sign // underflow -> ±0
+}
+
+/// IEEE binary16 bits → f32.
+#[inline]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03ff;
+            sign | (((112 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even (NaN-safe).
+#[inline]
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet the NaN
+    }
+    let round_bit = 0x0000_8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rest = bits & 0x0000_ffff;
+    let mut out = (bits >> 16) as u16;
+    if rest > round_bit || (rest == round_bit && lsb == 1) {
+        out = out.wrapping_add(1);
+    }
+    out
+}
+
+/// bfloat16 bits → f32.
+#[inline]
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// -- bulk buffer conversions --------------------------------------------------
+
+// Bulk paths write into preallocated buffers (perf pass P1: the original
+// per-element `extend_from_slice` capped fp16 encode at ~160 MB/s). On
+// x86_64 with F16C the conversion itself uses vcvtps2ph/vcvtph2ps
+// (round-to-nearest-even, same semantics as the scalar path — asserted
+// equal by `simd_matches_scalar`).
+
+#[cfg(target_arch = "x86_64")]
+mod simd {
+    #[target_feature(enable = "f16c")]
+    pub unsafe fn encode_f16_f16c(src: &[f32], dst: &mut [u8]) {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(dst.len(), src.len() * 2);
+        let chunks = src.len() / 8;
+        for i in 0..chunks {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i * 8));
+            let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(v);
+            _mm_storeu_si128(dst.as_mut_ptr().add(i * 16) as *mut __m128i, h);
+        }
+        for j in chunks * 8..src.len() {
+            let b = super::f32_to_f16_bits(src[j]).to_le_bytes();
+            dst[2 * j] = b[0];
+            dst[2 * j + 1] = b[1];
+        }
+    }
+
+    #[target_feature(enable = "f16c")]
+    pub unsafe fn decode_f16_f16c(src: &[u8], dst: &mut [f32]) {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(src.len(), dst.len() * 2);
+        let chunks = dst.len() / 8;
+        for i in 0..chunks {
+            let h = _mm_loadu_si128(src.as_ptr().add(i * 16) as *const __m128i);
+            let v = _mm256_cvtph_ps(h);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i * 8), v);
+        }
+        for j in chunks * 8..dst.len() {
+            dst[j] = super::f16_bits_to_f32(u16::from_le_bytes([src[2 * j], src[2 * j + 1]]));
+        }
+    }
+}
+
+fn has_f16c() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("f16c")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+pub fn encode_f16(src: &[f32], dst: &mut Vec<u8>) {
+    let start = dst.len();
+    dst.resize(start + src.len() * 2, 0);
+    #[cfg(target_arch = "x86_64")]
+    if has_f16c() {
+        unsafe { simd::encode_f16_f16c(src, &mut dst[start..]) };
+        return;
+    }
+    for (o, &x) in dst[start..].chunks_exact_mut(2).zip(src) {
+        o.copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+pub fn decode_f16(src: &[u8], dst: &mut Vec<f32>) {
+    assert_eq!(src.len() % 2, 0);
+    let start = dst.len();
+    dst.resize(start + src.len() / 2, 0.0);
+    #[cfg(target_arch = "x86_64")]
+    if has_f16c() {
+        unsafe { simd::decode_f16_f16c(src, &mut dst[start..]) };
+        return;
+    }
+    for (o, c) in dst[start..].iter_mut().zip(src.chunks_exact(2)) {
+        *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+pub fn encode_bf16(src: &[f32], dst: &mut Vec<u8>) {
+    let start = dst.len();
+    dst.resize(start + src.len() * 2, 0);
+    for (o, &x) in dst[start..].chunks_exact_mut(2).zip(src) {
+        o.copy_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+    }
+}
+
+pub fn decode_bf16(src: &[u8], dst: &mut Vec<f32>) {
+    assert_eq!(src.len() % 2, 0);
+    let start = dst.len();
+    dst.resize(start + src.len() / 2, 0.0);
+    for (o, c) in dst[start..].iter_mut().zip(src.chunks_exact(2)) {
+        *o = bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values() {
+        // Values exactly representable in f16 must round-trip bit-perfectly.
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 2.0_f32.powi(-14)] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(rt, v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e6)).is_infinite());
+        assert!(f16_bits_to_f32(f32_to_f16_bits(-1e6)).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 2.0f32.powi(-24); // smallest f16 subnormal
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+        let below = 2.0f32.powi(-26);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(below)), 0.0);
+    }
+
+    #[test]
+    fn f16_relative_error_bounded() {
+        let mut rng = crate::util::rng::SplitMix64::new(42);
+        for _ in 0..20_000 {
+            let x = (rng.next_f32() - 0.5) * 100.0;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            if x != 0.0 {
+                let rel = ((y - x) / x).abs();
+                assert!(rel < 1.0 / 1024.0, "x={x} y={y} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_nan_preserved() {
+        let y = f16_bits_to_f32(f32_to_f16_bits(f32::NAN));
+        assert!(y.is_nan());
+    }
+
+    #[test]
+    fn f16_rne_ties() {
+        // 1 + 2^-11 is exactly between 1.0 and 1+2^-10 -> rounds to even (1.0)
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), 1.0);
+        // 1 + 3*2^-11 ties to 1+2^-10... odd mantissa rounds up to even
+        let x2 = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x2)), 1.0 + 2.0 * 2.0f32.powi(-10));
+    }
+
+    #[test]
+    fn bf16_roundtrip_exact() {
+        for &v in &[0.0f32, 1.0, -2.5, 3.0e38, 1.0e-38] {
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(v));
+            let rel = if v == 0.0 { (rt - v).abs() } else { ((rt - v) / v).abs() };
+            assert!(rel < 1.0 / 128.0, "{v} -> {rt}");
+        }
+    }
+
+    #[test]
+    fn bf16_nan() {
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bulk_roundtrip() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.37).collect();
+        let mut enc = Vec::new();
+        encode_f16(&xs, &mut enc);
+        assert_eq!(enc.len(), 2000);
+        let mut dec = Vec::new();
+        decode_f16(&enc, &mut dec);
+        for (a, b) in xs.iter().zip(&dec) {
+            assert!((a - b).abs() <= a.abs() / 1024.0 + 1e-3);
+        }
+    }
+
+    #[test]
+    fn simd_matches_scalar() {
+        // The F16C path must agree with the scalar converter bit-for-bit
+        // on every value class (normals, subnormals, ties, overflow).
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        let mut xs: Vec<f32> = (0..4099).map(|_| rng.next_normal() * 1e3).collect();
+        xs.extend_from_slice(&[0.0, -0.0, 1e-7, -1e-7, 65504.0, 65520.0, 1e6, 2.0f32.powi(-25)]);
+        let mut simd_out = Vec::new();
+        encode_f16(&xs, &mut simd_out);
+        let mut scalar_out = Vec::with_capacity(xs.len() * 2);
+        for &x in &xs {
+            scalar_out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        assert_eq!(simd_out, scalar_out);
+        let mut simd_dec = Vec::new();
+        decode_f16(&simd_out, &mut simd_dec);
+        let scalar_dec: Vec<f32> = simd_out
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect();
+        assert_eq!(
+            simd_dec.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            scalar_dec.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn exhaustive_f16_bits_roundtrip() {
+        // Every finite f16 bit pattern must survive f16->f32->f16 exactly.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN: NaN payload may change
+            }
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            assert_eq!(back, h, "bits {h:#06x} -> {x} -> {back:#06x}");
+        }
+    }
+}

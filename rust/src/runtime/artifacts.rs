@@ -1,0 +1,207 @@
+//! artifacts/manifest.json — the contract between `python/compile/aot.py`
+//! and the Rust runtime: which HLO files exist, the positional parameter
+//! order of the train step, and the token batch geometry.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One model's artifact entry.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub train_step: PathBuf,
+    pub eval_loss: PathBuf,
+    /// Positional parameter order (name, shape) — identical to the Rust
+    /// ModelSpec order; verified at load.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub vocab: usize,
+}
+
+/// One kernel artifact.
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub path: PathBuf,
+    pub elems: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub lr: f64,
+    pub kernel_elems: usize,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub kernels: BTreeMap<String, KernelArtifact>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let dir = path
+            .parent()
+            .ok_or_else(|| anyhow!("manifest path has no parent"))?
+            .to_path_buf();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .get("models")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let params = m
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing params"))?
+                .iter()
+                .map(|p| {
+                    let pname = p
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("param without name"))?
+                        .to_string();
+                    let shape = p
+                        .get("shape")
+                        .and_then(|v| v.as_arr())
+                        .ok_or_else(|| anyhow!("{pname}: param without shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("{pname}: bad dim")))
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((pname, shape))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    train_step: dir.join(
+                        m.get("train_step")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("{name}: missing train_step"))?,
+                    ),
+                    eval_loss: dir.join(
+                        m.get("eval_loss")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("{name}: missing eval_loss"))?,
+                    ),
+                    params,
+                    vocab: m.get("vocab").and_then(|v| v.as_usize()).unwrap_or(0),
+                },
+            );
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.get("kernels").and_then(|v| v.as_obj()) {
+            for (name, k) in ks {
+                kernels.insert(
+                    name.clone(),
+                    KernelArtifact {
+                        path: dir.join(
+                            k.get("path")
+                                .and_then(|v| v.as_str())
+                                .ok_or_else(|| anyhow!("kernel {name}: missing path"))?,
+                        ),
+                        elems: k.get("elems").and_then(|v| v.as_usize()).unwrap_or(0),
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            dir,
+            batch: get_usize("batch")?,
+            seq_len: get_usize("seq_len")?,
+            lr: j.get("lr").and_then(|v| v.as_f64()).unwrap_or(1e-3),
+            kernel_elems: get_usize("kernel_elems")?,
+            models,
+            kernels,
+        })
+    }
+
+    /// Load from a directory (expects `manifest.json` inside).
+    pub fn load_dir(dir: &Path) -> Result<Manifest> {
+        Self::load(&dir.join("manifest.json"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    /// Cross-check the manifest's parameter list against the Rust-side
+    /// ModelSpec: names, order and shapes must agree exactly, or the
+    /// positional marshalling would silently scramble weights.
+    pub fn verify_against_spec(
+        &self,
+        name: &str,
+        spec: &crate::config::model_spec::ModelSpec,
+    ) -> Result<()> {
+        let m = self.model(name)?;
+        if m.params.len() != spec.params.len() {
+            anyhow::bail!(
+                "manifest has {} params, spec has {}",
+                m.params.len(),
+                spec.params.len()
+            );
+        }
+        for ((mn, ms), sp) in m.params.iter().zip(&spec.params) {
+            if mn != &sp.name || ms != &sp.shape {
+                anyhow::bail!(
+                    "param mismatch: manifest ({mn}, {ms:?}) vs spec ({}, {:?})",
+                    sp.name,
+                    sp.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+
+    fn manifest_path() -> Option<PathBuf> {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        p.exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_and_verifies_mini() {
+        let Some(path) = manifest_path() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.batch > 0 && m.seq_len > 0);
+        let spec = ModelSpec::llama_mini();
+        m.verify_against_spec("llama-mini", &spec).unwrap();
+        assert!(m.model("llama-mini").unwrap().train_step.exists());
+        for k in ["quant_blockwise8", "quant_nf4", "quant_fp4"] {
+            assert!(m.kernels.contains_key(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_spec() {
+        let Some(path) = manifest_path() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&path).unwrap();
+        let wrong = ModelSpec::llama_100m();
+        assert!(m.verify_against_spec("llama-mini", &wrong).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent/manifest.json")).is_err());
+    }
+}

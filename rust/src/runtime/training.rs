@@ -1,0 +1,208 @@
+//! PjrtTrainer: the production [`LocalTrainer`] — executes the
+//! AOT-compiled JAX/Pallas train step via PJRT, keeping Adam state local
+//! (only weights cross the federated wire, as in the paper's setup).
+
+use super::{
+    literal_scalar_f32, literal_to_tensor, tensor_to_literal, tokens_to_literal, Executable,
+    Manifest, Runtime,
+};
+use crate::coordinator::LocalTrainer;
+use crate::data::corpus::SftCorpus;
+use crate::tensor::{ParamContainer, Tensor};
+use crate::util::rng::SplitMix64;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub struct PjrtTrainer {
+    exe: Executable,
+    /// (name, shape) in positional order.
+    params: Vec<(String, Vec<usize>)>,
+    batch: usize,
+    seq_len: usize,
+    /// Adam moments, kept across rounds (locally, like any FL client's
+    /// optimizer state).
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    step: i32,
+    corpus: SftCorpus,
+    shard: Vec<usize>,
+    data_rng: SplitMix64,
+    cursor: usize,
+}
+
+impl PjrtTrainer {
+    /// Build a trainer for `model` from the artifacts directory. `shard`
+    /// is this client's set of corpus example indices.
+    pub fn new(
+        artifacts_dir: &Path,
+        model: &str,
+        corpus: SftCorpus,
+        shard: Vec<usize>,
+        seed: u64,
+    ) -> Result<PjrtTrainer> {
+        let manifest = Manifest::load_dir(artifacts_dir)?;
+        let arts = manifest.model(model)?;
+        let rt = Runtime::cpu()?;
+        let exe = rt
+            .load_hlo_text(&arts.train_step)
+            .context("load train step")?;
+        let m = arts
+            .params
+            .iter()
+            .map(|(_, s)| Tensor::zeros(s.clone(), crate::tensor::DType::F32))
+            .collect::<Vec<_>>();
+        let v = m.clone();
+        if shard.is_empty() {
+            bail!("trainer shard is empty");
+        }
+        Ok(PjrtTrainer {
+            exe,
+            params: arts.params.clone(),
+            batch: manifest.batch,
+            seq_len: manifest.seq_len,
+            m,
+            v,
+            step: 0,
+            corpus,
+            shard,
+            data_rng: SplitMix64::new(seed),
+            cursor: 0,
+        })
+    }
+
+    fn next_batch(&mut self) -> Vec<i32> {
+        let row = self.seq_len + 1;
+        let mut out = vec![0i32; self.batch * row];
+        for b in 0..self.batch {
+            if self.cursor >= self.shard.len() {
+                self.data_rng.shuffle(&mut self.shard);
+                self.cursor = 0;
+            }
+            let idx = self.shard[self.cursor];
+            self.cursor += 1;
+            let ids = crate::data::encode_text(&self.corpus.examples[idx].text);
+            let n = ids.len().min(row);
+            out[b * row..b * row + n].copy_from_slice(&ids[..n]);
+        }
+        out
+    }
+
+    fn container_to_literals(&self, weights: &ParamContainer) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(self.params.len());
+        for (name, shape) in &self.params {
+            let t = weights
+                .get(name)
+                .with_context(|| format!("weights missing '{name}'"))?;
+            if &t.meta.shape != shape {
+                bail!(
+                    "'{name}' shape {:?} != manifest {:?}",
+                    t.meta.shape,
+                    shape
+                );
+            }
+            lits.push(tensor_to_literal(t)?);
+        }
+        Ok(lits)
+    }
+}
+
+impl LocalTrainer for PjrtTrainer {
+    fn train(
+        &mut self,
+        weights: &ParamContainer,
+        steps: usize,
+        _round: usize,
+    ) -> Result<(ParamContainer, Vec<f32>)> {
+        let n = self.params.len();
+        // Marshal: params from the incoming container, moments from local
+        // state.
+        let mut state: Vec<xla::Literal> = self.container_to_literals(weights)?;
+        for t in self.m.iter().chain(self.v.iter()) {
+            state.push(tensor_to_literal(t)?);
+        }
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let tokens = self.next_batch();
+            let mut inputs = Vec::with_capacity(3 * n + 2);
+            inputs.append(&mut state);
+            inputs.push(tokens_to_literal(
+                &[self.step],
+                &[],
+            )?);
+            inputs.push(tokens_to_literal(&tokens, &[self.batch, self.seq_len + 1])?);
+            let mut out = self.exe.run(&inputs)?;
+            if out.len() != 3 * n + 1 {
+                bail!("train step returned {} outputs, expected {}", out.len(), 3 * n + 1);
+            }
+            let loss = literal_scalar_f32(&out[3 * n])?;
+            if !loss.is_finite() {
+                bail!("non-finite loss at local step {}", self.step);
+            }
+            losses.push(loss);
+            out.truncate(3 * n);
+            state = out;
+            self.step += 1;
+        }
+        // Unmarshal final params; stash moments locally.
+        let mut updated = ParamContainer::new();
+        for (i, (name, shape)) in self.params.iter().enumerate() {
+            updated.insert(name.clone(), literal_to_tensor(&state[i], shape.clone())?);
+        }
+        for (i, (_, shape)) in self.params.iter().enumerate() {
+            self.m[i] = literal_to_tensor(&state[n + i], shape.clone())?;
+            self.v[i] = literal_to_tensor(&state[2 * n + i], shape.clone())?;
+        }
+        Ok((updated, losses))
+    }
+
+    fn n_samples(&self) -> u64 {
+        self.shard.len() as u64
+    }
+}
+
+/// Scalar i32 literal helper used for the step counter.
+pub fn scalar_i32(v: i32) -> Result<xla::Literal> {
+    tokens_to_literal(&[v], &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{CorpusConfig, SftCorpus};
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn pjrt_trainer_runs_and_loss_decreases() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let corpus = SftCorpus::generate(&CorpusConfig {
+            examples: 64,
+            seed: 5,
+        });
+        let shard: Vec<usize> = (0..64).collect();
+        let mut trainer = PjrtTrainer::new(&dir, "llama-mini", corpus, shard, 7).unwrap();
+        let spec = crate::config::model_spec::ModelSpec::llama_mini();
+        let weights = crate::tensor::init::materialize(&spec, 3);
+        let (updated, losses) = trainer.train(&weights, 6, 0).unwrap();
+        assert_eq!(losses.len(), 6);
+        // byte-level LM at init: loss near ln(512) ≈ 6.2, dropping fast on
+        // the tiny templated corpus.
+        assert!(losses[0] > 3.0 && losses[0] < 10.0, "{losses:?}");
+        assert!(
+            losses.last().unwrap() < &(losses[0] * 0.9),
+            "loss should drop: {losses:?}"
+        );
+        assert!(updated.max_abs_diff(&weights) > 0.0);
+        // Moments were updated
+        assert!(trainer.m[0].as_f32().iter().any(|&x| x != 0.0));
+        // Second round continues from local moments without error.
+        let (_, losses2) = trainer.train(&updated, 2, 1).unwrap();
+        assert!(losses2[0] < losses[0]);
+    }
+}

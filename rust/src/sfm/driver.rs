@@ -1,0 +1,43 @@
+//! SFM driver abstraction (paper §I: "SFM supports customized drivers
+//! without affecting the upper-layer applications ... we can switch
+//! between gRPC, TCP, HTTP, etc.").
+//!
+//! A [`Driver`] is one endpoint of a bidirectional, reliable, ordered
+//! frame transport. Implementations: [`super::inmem`] (channel pair, used
+//! by the in-process simulator), [`super::tcp`] (real sockets), and
+//! [`super::netsim::NetSimDriver`] (wraps another driver with bandwidth /
+//! latency shaping).
+
+use super::frame::Frame;
+use anyhow::Result;
+use std::time::Duration;
+
+/// One endpoint of a frame transport. `send` must be safe to call from
+/// one thread while another blocks in `recv` (senders and receivers are
+/// separate halves internally).
+pub trait Driver: Send {
+    /// Queue a frame for transmission. Blocks only on backpressure.
+    fn send(&self, frame: Frame) -> Result<()>;
+
+    /// Block until the next frame arrives. Returns Err on disconnect.
+    fn recv(&self) -> Result<Frame>;
+
+    /// Like recv, with a timeout; Ok(None) on timeout.
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>>;
+
+    /// Driver name for logs/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Legacy one-shot message cap (models gRPC's 2 GB limit). SFM
+    /// chunked transfers are exempt — that is the point of the streaming
+    /// layer — but `send_monolithic` honours it.
+    fn max_message_bytes(&self) -> Option<u64> {
+        Some(2 << 30)
+    }
+}
+
+/// A connected pair of driver endpoints (loopback or simulated link).
+pub struct DriverPair {
+    pub a: Box<dyn Driver>,
+    pub b: Box<dyn Driver>,
+}

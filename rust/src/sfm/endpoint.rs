@@ -1,0 +1,462 @@
+//! SFM endpoint: object-transfer protocol on top of a [`Driver`].
+//!
+//! A transfer is BEGIN → (UNIT → DATA*)* → END (paper Fig. 1: "large
+//! model object divided into 1 MB chunks and streamed to the target").
+//! Units are the streaming granularity: one unit per object for regular
+//! transmission, one per container entry for container streaming, one per
+//! file for file streaming. DATA payloads are capped at `chunk_bytes`
+//! (default 1 MB, the paper's setting) and optionally deflate-compressed.
+
+use super::driver::Driver;
+use super::frame::{flags, Frame, FrameType};
+use crate::memory::{TrackedBuf, COMM_GAUGE};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Default wire chunk size: 1 MB (paper §I).
+pub const DEFAULT_CHUNK: usize = 1 << 20;
+
+/// Cumulative transfer statistics for one endpoint.
+#[derive(Debug, Default)]
+pub struct EndpointStats {
+    pub frames_sent: AtomicU64,
+    pub frames_received: AtomicU64,
+    pub bytes_sent: AtomicU64,
+    pub bytes_received: AtomicU64,
+}
+
+pub struct SfmEndpoint {
+    driver: Box<dyn Driver>,
+    pub chunk_bytes: usize,
+    /// Deflate-compress DATA payloads (an SFM-level option; orthogonal to
+    /// message quantization).
+    pub compress: bool,
+    next_stream: AtomicU64,
+    /// Ctrl frames that arrived while an object transfer was being
+    /// received (or vice versa).
+    pending_ctrl: Mutex<VecDeque<Frame>>,
+    pending_obj: Mutex<VecDeque<Frame>>,
+    pub stats: EndpointStats,
+}
+
+impl SfmEndpoint {
+    pub fn new(driver: Box<dyn Driver>) -> SfmEndpoint {
+        SfmEndpoint {
+            driver,
+            chunk_bytes: DEFAULT_CHUNK,
+            compress: false,
+            next_stream: AtomicU64::new(1),
+            pending_ctrl: Mutex::new(VecDeque::new()),
+            pending_obj: Mutex::new(VecDeque::new()),
+            stats: EndpointStats::default(),
+        }
+    }
+
+    pub fn with_chunk(mut self, chunk: usize) -> SfmEndpoint {
+        assert!(chunk > 0);
+        self.chunk_bytes = chunk;
+        self
+    }
+
+    pub fn with_compression(mut self, on: bool) -> SfmEndpoint {
+        self.compress = on;
+        self
+    }
+
+    pub fn driver_name(&self) -> &'static str {
+        self.driver.name()
+    }
+
+    pub fn alloc_stream(&self) -> u64 {
+        self.next_stream.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn send_frame(&self, f: Frame) -> Result<()> {
+        self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_sent
+            .fetch_add(f.wire_len() as u64, Ordering::Relaxed);
+        self.driver.send(f)
+    }
+
+    fn recv_frame(&self, timeout: Option<Duration>) -> Result<Frame> {
+        let f = match timeout {
+            None => self.driver.recv()?,
+            Some(t) => self
+                .driver
+                .recv_timeout(t)?
+                .ok_or_else(|| anyhow!("recv timeout after {t:?}"))?,
+        };
+        self.stats.frames_received.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .bytes_received
+            .fetch_add(f.wire_len() as u64, Ordering::Relaxed);
+        Ok(f)
+    }
+
+    // -- control messages ----------------------------------------------------
+
+    /// Send a small standalone control message (registration, task
+    /// headers, acks at the protocol level).
+    pub fn send_ctrl(&self, msg: &Json) -> Result<()> {
+        let sid = self.alloc_stream();
+        let payload = msg.to_string().into_bytes();
+        self.send_frame(Frame::new(FrameType::Ctrl, sid, 0, payload))
+    }
+
+    /// Receive the next control message, buffering any object frames that
+    /// arrive first.
+    pub fn recv_ctrl(&self, timeout: Option<Duration>) -> Result<Json> {
+        if let Some(f) = self.pending_ctrl.lock().unwrap().pop_front() {
+            return parse_json_payload(&f);
+        }
+        loop {
+            let f = self.recv_frame(timeout)?;
+            if f.ftype == FrameType::Ctrl {
+                return parse_json_payload(&f);
+            }
+            self.pending_obj.lock().unwrap().push_back(f);
+        }
+    }
+
+    // -- object sending --------------------------------------------------------
+
+    /// Begin an object transfer; returns the sender handle.
+    pub fn begin_object(&self, descriptor: Json) -> Result<ObjectSender<'_>> {
+        let sid = self.alloc_stream();
+        let payload = descriptor.to_string().into_bytes();
+        self.send_frame(Frame::new(FrameType::Begin, sid, 0, payload))?;
+        Ok(ObjectSender {
+            ep: self,
+            sid,
+            seq: 1,
+            in_unit: false,
+        })
+    }
+
+    /// One-call convenience: send a single blob as an object with one unit.
+    /// Memory: O(chunk) beyond the caller's blob.
+    pub fn send_blob(&self, descriptor: Json, blob: &[u8]) -> Result<()> {
+        let mut tx = self.begin_object(descriptor)?;
+        tx.begin_unit(Json::obj(vec![
+            ("index", Json::num(0.0)),
+            ("bytes", Json::num(blob.len() as f64)),
+        ]))?;
+        tx.write_all(blob)?;
+        tx.end_unit()?;
+        tx.end_object(Json::Null)
+    }
+
+    // -- object receiving -------------------------------------------------------
+
+    /// Receive the next object-transfer event. Ctrl frames arriving in
+    /// between are buffered for `recv_ctrl`.
+    pub fn recv_event(&self, timeout: Option<Duration>) -> Result<Event> {
+        let f = match self.pending_obj.lock().unwrap().pop_front() {
+            Some(f) => f,
+            None => loop {
+                let f = self.recv_frame(timeout)?;
+                if f.ftype == FrameType::Ctrl {
+                    self.pending_ctrl.lock().unwrap().push_back(f);
+                    continue;
+                }
+                break f;
+            },
+        };
+        Ok(match f.ftype {
+            FrameType::Begin => Event::Begin {
+                stream: f.stream_id,
+                descriptor: parse_json_payload(&f)?,
+            },
+            FrameType::Unit => Event::UnitStart {
+                stream: f.stream_id,
+                descriptor: parse_json_payload(&f)?,
+            },
+            FrameType::Data => {
+                let last = f.is_last_chunk();
+                let bytes = if f.flags & flags::COMPRESSED != 0 {
+                    inflate(&f.payload)?
+                } else {
+                    f.payload
+                };
+                Event::Chunk {
+                    stream: f.stream_id,
+                    bytes,
+                    last,
+                }
+            }
+            FrameType::End => Event::End {
+                stream: f.stream_id,
+                trailer: parse_json_payload(&f)?,
+            },
+            FrameType::Ack => Event::Ack { stream: f.stream_id },
+            FrameType::Ctrl => unreachable!("ctrl handled above"),
+        })
+    }
+
+    /// Receive a whole single-unit object into memory (the *regular
+    /// transmission* receive path — O(object) memory, by design).
+    pub fn recv_blob(&self, timeout: Option<Duration>) -> Result<(Json, Vec<u8>)> {
+        let descriptor = match self.recv_event(timeout)? {
+            Event::Begin { descriptor, .. } => descriptor,
+            other => bail!("expected Begin, got {other:?}"),
+        };
+        let total = descriptor
+            .get("total_bytes")
+            .and_then(|j| j.as_u64())
+            .unwrap_or(0);
+        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, total as usize);
+        loop {
+            match self.recv_event(timeout)? {
+                Event::UnitStart { .. } => {}
+                Event::Chunk { bytes, .. } => {
+                    buf.as_mut_vec().extend_from_slice(&bytes);
+                    buf.resync();
+                }
+                Event::End { .. } => break,
+                Event::Ack { .. } => {}
+                Event::Begin { .. } => bail!("nested Begin in blob receive"),
+            }
+        }
+        Ok((descriptor, buf.into_vec()))
+    }
+
+    pub fn send_ack(&self, stream: u64) -> Result<()> {
+        self.send_frame(Frame::new(FrameType::Ack, stream, 0, Vec::new()))
+    }
+}
+
+/// Incremental sender for one object transfer.
+pub struct ObjectSender<'a> {
+    ep: &'a SfmEndpoint,
+    sid: u64,
+    seq: u64,
+    in_unit: bool,
+}
+
+impl<'a> ObjectSender<'a> {
+    pub fn stream(&self) -> u64 {
+        self.sid
+    }
+
+    pub fn begin_unit(&mut self, descriptor: Json) -> Result<()> {
+        if self.in_unit {
+            bail!("previous unit not ended");
+        }
+        let payload = descriptor.to_string().into_bytes();
+        self.ep
+            .send_frame(Frame::new(FrameType::Unit, self.sid, self.next_seq(), payload))?;
+        self.in_unit = true;
+        Ok(())
+    }
+
+    /// Stream `data` as DATA chunks of at most `chunk_bytes`. May be
+    /// called repeatedly within a unit. Memory: O(chunk).
+    pub fn write_all(&mut self, data: &[u8]) -> Result<()> {
+        if !self.in_unit {
+            bail!("write outside unit");
+        }
+        for chunk in data.chunks(self.ep.chunk_bytes.max(1)) {
+            let (payload, fl) = if self.ep.compress {
+                (deflate(chunk)?, flags::COMPRESSED)
+            } else {
+                (chunk.to_vec(), 0)
+            };
+            // Account the in-flight chunk buffer.
+            let tracked = TrackedBuf::from_vec(&COMM_GAUGE, payload);
+            let f = Frame::new(FrameType::Data, self.sid, self.next_seq(), tracked.as_slice().to_vec())
+                .with_flags(fl);
+            drop(tracked);
+            self.ep.send_frame(f)?;
+        }
+        Ok(())
+    }
+
+    /// Mark the end of the current unit with an empty LAST_CHUNK frame.
+    pub fn end_unit(&mut self) -> Result<()> {
+        if !self.in_unit {
+            bail!("end_unit outside unit");
+        }
+        let f = Frame::new(FrameType::Data, self.sid, self.next_seq(), Vec::new())
+            .with_flags(flags::LAST_CHUNK);
+        self.ep.send_frame(f)?;
+        self.in_unit = false;
+        Ok(())
+    }
+
+    pub fn end_object(mut self, trailer: Json) -> Result<()> {
+        if self.in_unit {
+            bail!("unit still open at end_object");
+        }
+        let payload = trailer.to_string().into_bytes();
+        let seq = self.next_seq();
+        self.ep
+            .send_frame(Frame::new(FrameType::End, self.sid, seq, payload))
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        s
+    }
+}
+
+/// Receiver-side transfer event.
+#[derive(Debug)]
+pub enum Event {
+    Begin { stream: u64, descriptor: Json },
+    UnitStart { stream: u64, descriptor: Json },
+    Chunk { stream: u64, bytes: Vec<u8>, last: bool },
+    End { stream: u64, trailer: Json },
+    Ack { stream: u64 },
+}
+
+fn parse_json_payload(f: &Frame) -> Result<Json> {
+    if f.payload.is_empty() {
+        return Ok(Json::Null);
+    }
+    let s = std::str::from_utf8(&f.payload)?;
+    Json::parse(s).map_err(|e| anyhow!("frame json: {e}"))
+}
+
+fn deflate(data: &[u8]) -> Result<Vec<u8>> {
+    let mut enc =
+        flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+    enc.write_all(data)?;
+    Ok(enc.finish()?)
+}
+
+fn inflate(data: &[u8]) -> Result<Vec<u8>> {
+    let mut dec = flate2::read::DeflateDecoder::new(data);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfm::inmem;
+
+    fn pair() -> (SfmEndpoint, SfmEndpoint) {
+        let p = inmem::pair(64);
+        (SfmEndpoint::new(p.a), SfmEndpoint::new(p.b))
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let (a, b) = pair();
+        let blob: Vec<u8> = (0..3_000_000u32).map(|i| (i % 251) as u8).collect();
+        let desc = Json::obj(vec![
+            ("kind", Json::str("weights")),
+            ("total_bytes", Json::num(blob.len() as f64)),
+        ]);
+        let sender = std::thread::spawn({
+            let blob = blob.clone();
+            move || a.send_blob(desc, &blob).unwrap()
+        });
+        let (d, got) = b.recv_blob(None).unwrap();
+        sender.join().unwrap();
+        assert_eq!(d.get("kind").unwrap().as_str().unwrap(), "weights");
+        assert_eq!(got, blob);
+    }
+
+    #[test]
+    fn chunk_count_matches_chunk_size() {
+        let p = inmem::pair(1024);
+        let a = SfmEndpoint::new(p.a).with_chunk(1000);
+        let b = SfmEndpoint::new(p.b);
+        let blob = vec![7u8; 10_500];
+        std::thread::spawn(move || a.send_blob(Json::Null, &blob).unwrap());
+        let mut chunks = 0;
+        loop {
+            match b.recv_event(None).unwrap() {
+                Event::Chunk { bytes, last, .. } => {
+                    if last {
+                        assert!(bytes.is_empty());
+                        // 11 data chunks (10 full + 1 partial) + this marker
+                        assert_eq!(chunks, 11);
+                    } else {
+                        assert!(bytes.len() <= 1000);
+                        chunks += 1;
+                    }
+                }
+                Event::End { .. } => break,
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn compression_transparent() {
+        let p = inmem::pair(64);
+        let a = SfmEndpoint::new(p.a).with_compression(true);
+        let b = SfmEndpoint::new(p.b);
+        let blob = vec![42u8; 500_000]; // highly compressible
+        std::thread::spawn({
+            let blob = blob.clone();
+            move || a.send_blob(Json::Null, &blob).unwrap()
+        });
+        let (_, got) = b.recv_blob(None).unwrap();
+        assert_eq!(got, blob);
+        // compressed frames must be much smaller on the wire
+        assert!(b.stats.bytes_received.load(Ordering::Relaxed) < 100_000);
+    }
+
+    #[test]
+    fn ctrl_interleaves_with_objects() {
+        let (a, b) = pair();
+        a.send_ctrl(&Json::obj(vec![("op", Json::str("register"))])).unwrap();
+        a.send_blob(Json::Null, &[1, 2, 3]).unwrap();
+        a.send_ctrl(&Json::obj(vec![("op", Json::str("bye"))])).unwrap();
+        // receive out of order: blob first, then both ctrls
+        let (_, blob) = b.recv_blob(None).unwrap();
+        assert_eq!(blob, vec![1, 2, 3]);
+        let c1 = b.recv_ctrl(Some(Duration::from_secs(1))).unwrap();
+        assert_eq!(c1.get("op").unwrap().as_str().unwrap(), "register");
+        let c2 = b.recv_ctrl(Some(Duration::from_secs(1))).unwrap();
+        assert_eq!(c2.get("op").unwrap().as_str().unwrap(), "bye");
+    }
+
+    #[test]
+    fn multi_unit_transfer() {
+        let (a, b) = pair();
+        std::thread::spawn(move || {
+            let mut tx = a
+                .begin_object(Json::obj(vec![("entries", Json::num(3.0))]))
+                .unwrap();
+            for i in 0..3 {
+                tx.begin_unit(Json::obj(vec![("index", Json::num(i as f64))])).unwrap();
+                tx.write_all(&vec![i as u8; 100]).unwrap();
+                tx.end_unit().unwrap();
+            }
+            tx.end_object(Json::Null).unwrap();
+        });
+        let mut units = 0;
+        let mut bytes = 0;
+        loop {
+            match b.recv_event(None).unwrap() {
+                Event::UnitStart { .. } => units += 1,
+                Event::Chunk { bytes: c, .. } => bytes += c.len(),
+                Event::End { .. } => break,
+                _ => {}
+            }
+        }
+        assert_eq!(units, 3);
+        assert_eq!(bytes, 300);
+    }
+
+    #[test]
+    fn sender_misuse_is_error() {
+        let (a, _b) = pair();
+        let mut tx = a.begin_object(Json::Null).unwrap();
+        assert!(tx.write_all(&[1]).is_err()); // no unit open
+        tx.begin_unit(Json::Null).unwrap();
+        assert!(tx.begin_unit(Json::Null).is_err()); // nested unit
+    }
+}

@@ -1,0 +1,236 @@
+//! SFM frame wire format — the "Streamable Framed Message" layer's unit
+//! of transmission (paper §I, Fig. 1).
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "SFM1"
+//! 4       1     version (1)
+//! 5       1     frame type
+//! 6       2     flags
+//! 8       8     stream id
+//! 16      8     sequence number
+//! 24      8     payload length
+//! 32      4     crc32(payload)
+//! 36      ...   payload
+//! ```
+
+use anyhow::{bail, Result};
+
+pub const MAGIC: [u8; 4] = *b"SFM1";
+pub const VERSION: u8 = 1;
+pub const HEADER_LEN: usize = 36;
+
+/// Hard cap on a single frame payload — protects receivers from
+/// adversarial/corrupt length fields.
+pub const MAX_FRAME_PAYLOAD: u64 = 64 << 20;
+
+/// Frame type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameType {
+    /// Start of an object transfer; payload is a JSON descriptor.
+    Begin = 1,
+    /// Start of one unit within an object (entry / blob / file); payload
+    /// is a JSON unit descriptor.
+    Unit = 2,
+    /// A chunk of unit payload bytes.
+    Data = 3,
+    /// End of the object transfer; payload is a JSON trailer.
+    End = 4,
+    /// Acknowledgement / flow control.
+    Ack = 5,
+    /// Small standalone control message (registration, task headers...).
+    Ctrl = 6,
+}
+
+impl FrameType {
+    pub fn from_u8(v: u8) -> Option<FrameType> {
+        Some(match v {
+            1 => FrameType::Begin,
+            2 => FrameType::Unit,
+            3 => FrameType::Data,
+            4 => FrameType::End,
+            5 => FrameType::Ack,
+            6 => FrameType::Ctrl,
+            _ => return None,
+        })
+    }
+}
+
+/// Frame flag bits.
+pub mod flags {
+    /// Payload is deflate-compressed.
+    pub const COMPRESSED: u16 = 1 << 0;
+    /// Last DATA chunk of the current unit.
+    pub const LAST_CHUNK: u16 = 1 << 1;
+}
+
+/// One SFM frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub ftype: FrameType,
+    pub flags: u16,
+    pub stream_id: u64,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(ftype: FrameType, stream_id: u64, seq: u64, payload: Vec<u8>) -> Frame {
+        Frame {
+            ftype,
+            flags: 0,
+            stream_id,
+            seq,
+            payload,
+        }
+    }
+
+    pub fn with_flags(mut self, flags: u16) -> Frame {
+        self.flags |= flags;
+        self
+    }
+
+    pub fn is_last_chunk(&self) -> bool {
+        self.flags & flags::LAST_CHUNK != 0
+    }
+
+    /// Total encoded size.
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Encode header into a fixed array (payload is written separately to
+    /// avoid copying chunk buffers).
+    pub fn encode_header(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4] = VERSION;
+        h[5] = self.ftype as u8;
+        h[6..8].copy_from_slice(&self.flags.to_le_bytes());
+        h[8..16].copy_from_slice(&self.stream_id.to_le_bytes());
+        h[16..24].copy_from_slice(&self.seq.to_le_bytes());
+        h[24..32].copy_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        let crc = crc32fast::hash(&self.payload);
+        h[32..36].copy_from_slice(&crc.to_le_bytes());
+        h
+    }
+
+    /// Encode the whole frame into one buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&self.encode_header());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse a header; returns (frame-without-payload, payload_len, crc).
+    pub fn decode_header(h: &[u8; HEADER_LEN]) -> Result<(Frame, u64, u32)> {
+        if h[0..4] != MAGIC {
+            bail!("bad SFM magic {:02x?}", &h[0..4]);
+        }
+        if h[4] != VERSION {
+            bail!("unsupported SFM version {}", h[4]);
+        }
+        let ftype = FrameType::from_u8(h[5])
+            .ok_or_else(|| anyhow::anyhow!("unknown frame type {}", h[5]))?;
+        let flags = u16::from_le_bytes([h[6], h[7]]);
+        let stream_id = u64::from_le_bytes(h[8..16].try_into().unwrap());
+        let seq = u64::from_le_bytes(h[16..24].try_into().unwrap());
+        let plen = u64::from_le_bytes(h[24..32].try_into().unwrap());
+        if plen > MAX_FRAME_PAYLOAD {
+            bail!("frame payload {plen} exceeds cap {MAX_FRAME_PAYLOAD}");
+        }
+        let crc = u32::from_le_bytes(h[32..36].try_into().unwrap());
+        Ok((
+            Frame {
+                ftype,
+                flags,
+                stream_id,
+                seq,
+                payload: Vec::new(),
+            },
+            plen,
+            crc,
+        ))
+    }
+
+    /// Decode a full frame from a buffer (tests / in-memory paths).
+    pub fn decode(buf: &[u8]) -> Result<Frame> {
+        if buf.len() < HEADER_LEN {
+            bail!("short frame ({} bytes)", buf.len());
+        }
+        let hdr: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+        let (mut f, plen, crc) = Self::decode_header(&hdr)?;
+        if buf.len() != HEADER_LEN + plen as usize {
+            bail!("frame length mismatch: buf {} payload {plen}", buf.len());
+        }
+        f.payload = buf[HEADER_LEN..].to_vec();
+        let actual = crc32fast::hash(&f.payload);
+        if actual != crc {
+            bail!("frame crc mismatch: got {actual:#x} want {crc:#x}");
+        }
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let f = Frame::new(FrameType::Data, 7, 42, vec![1, 2, 3, 4])
+            .with_flags(flags::LAST_CHUNK);
+        let enc = f.encode();
+        assert_eq!(enc.len(), HEADER_LEN + 4);
+        let back = Frame::decode(&enc).unwrap();
+        assert_eq!(back, f);
+        assert!(back.is_last_chunk());
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let f = Frame::new(FrameType::Data, 1, 0, vec![9; 100]);
+        let mut enc = f.encode();
+        enc[HEADER_LEN + 50] ^= 0xff;
+        assert!(Frame::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let f = Frame::new(FrameType::Ctrl, 1, 0, vec![]);
+        let mut enc = f.encode();
+        enc[0] = b'X';
+        assert!(Frame::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn oversize_payload_rejected() {
+        let f = Frame::new(FrameType::Data, 1, 0, vec![]);
+        let mut enc = f.encode();
+        enc[24..32].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+        assert!(Frame::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn all_types_roundtrip() {
+        for t in [
+            FrameType::Begin,
+            FrameType::Unit,
+            FrameType::Data,
+            FrameType::End,
+            FrameType::Ack,
+            FrameType::Ctrl,
+        ] {
+            assert_eq!(FrameType::from_u8(t as u8), Some(t));
+        }
+        assert_eq!(FrameType::from_u8(0), None);
+        assert_eq!(FrameType::from_u8(99), None);
+    }
+
+    #[test]
+    fn empty_payload_ok() {
+        let f = Frame::new(FrameType::End, 3, 9, vec![]);
+        assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
+    }
+}

@@ -1,0 +1,18 @@
+//! SFM — the "Streamable Framed Message" transport layer (paper §I).
+//!
+//! Large objects are divided into chunks (default 1 MB) and streamed as
+//! framed messages over a pluggable [`driver::Driver`] (in-memory, TCP,
+//! or bandwidth-shaped). Upper layers ([`crate::streaming`],
+//! [`crate::coordinator`]) never touch sockets directly, so drivers can
+//! be swapped "without affecting the upper-layer applications".
+
+pub mod driver;
+pub mod endpoint;
+pub mod frame;
+pub mod inmem;
+pub mod netsim;
+pub mod tcp;
+
+pub use driver::{Driver, DriverPair};
+pub use endpoint::{Event, ObjectSender, SfmEndpoint, DEFAULT_CHUNK};
+pub use frame::{Frame, FrameType};

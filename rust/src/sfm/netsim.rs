@@ -1,0 +1,126 @@
+//! Network-condition simulation: wraps any [`Driver`] and applies a
+//! bandwidth cap and per-frame latency on send. Powers the paper's
+//! future-work bandwidth-sweep experiment (EXPERIMENTS X2) — quantized
+//! vs fp32 wall-clock across 10 Mbps … 10 Gbps links.
+
+use super::driver::{Driver, DriverPair};
+use super::frame::Frame;
+use crate::config::NetProfile;
+use anyhow::Result;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+pub struct NetSimDriver {
+    inner: Box<dyn Driver>,
+    profile: NetProfile,
+    /// Virtual time at which the link becomes free again; serialized
+    /// sends model a shared link.
+    link_free_at: Mutex<Instant>,
+}
+
+impl NetSimDriver {
+    pub fn wrap(inner: Box<dyn Driver>, profile: NetProfile) -> NetSimDriver {
+        NetSimDriver {
+            inner,
+            profile,
+            link_free_at: Mutex::new(Instant::now()),
+        }
+    }
+
+    /// The transmission delay this profile imposes on `bytes`.
+    pub fn tx_delay(profile: &NetProfile, bytes: u64) -> Duration {
+        let bw = if profile.bandwidth_bps == 0 {
+            return Duration::from_micros(profile.latency_us);
+        } else {
+            profile.bandwidth_bps
+        };
+        let secs = bytes as f64 / bw as f64;
+        Duration::from_secs_f64(secs) + Duration::from_micros(profile.latency_us)
+    }
+}
+
+impl Driver for NetSimDriver {
+    fn send(&self, frame: Frame) -> Result<()> {
+        let delay = Self::tx_delay(&self.profile, frame.wire_len() as u64);
+        // Serialize on the simulated link: wait until it's free, then
+        // occupy it for the transmission time.
+        let wake = {
+            let mut free_at = self.link_free_at.lock().unwrap();
+            let now = Instant::now();
+            let start = (*free_at).max(now);
+            *free_at = start + delay;
+            *free_at
+        };
+        let now = Instant::now();
+        if wake > now {
+            std::thread::sleep(wake - now);
+        }
+        self.inner.send(frame)
+    }
+
+    fn recv(&self) -> Result<Frame> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "netsim"
+    }
+
+    fn max_message_bytes(&self) -> Option<u64> {
+        self.inner.max_message_bytes()
+    }
+}
+
+/// Wrap both ends of a pair with the same profile (symmetric link).
+pub fn shape_pair(pair: DriverPair, profile: NetProfile) -> DriverPair {
+    DriverPair {
+        a: Box::new(NetSimDriver::wrap(pair.a, profile)),
+        b: Box::new(NetSimDriver::wrap(pair.b, profile)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfm::frame::FrameType;
+    use crate::sfm::inmem;
+
+    #[test]
+    fn delay_math() {
+        let p = NetProfile {
+            bandwidth_bps: 1_000_000,
+            latency_us: 500,
+        };
+        let d = NetSimDriver::tx_delay(&p, 1_000_000);
+        assert!((d.as_secs_f64() - 1.0005).abs() < 1e-6, "{d:?}");
+        let unlimited = NetProfile::UNLIMITED;
+        assert_eq!(NetSimDriver::tx_delay(&unlimited, 1 << 30), Duration::ZERO);
+    }
+
+    #[test]
+    fn shaped_link_slows_transfer() {
+        // 10 MB/s link, 100 KB payload -> >= 10 ms.
+        let profile = NetProfile {
+            bandwidth_bps: 10_000_000,
+            latency_us: 0,
+        };
+        let pair = shape_pair(inmem::pair(16), profile);
+        let t0 = std::time::Instant::now();
+        let payload = vec![0u8; 100_000];
+        let h = std::thread::spawn({
+            let b = pair.b;
+            move || b.recv().unwrap()
+        });
+        pair.a
+            .send(Frame::new(FrameType::Data, 1, 0, payload))
+            .unwrap();
+        let f = h.join().unwrap();
+        assert_eq!(f.payload.len(), 100_000);
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(9), "{dt:?}");
+    }
+}

@@ -1,0 +1,169 @@
+//! TCP driver: SFM frames over a real socket. The paper's deployments use
+//! gRPC/TCP/HTTP drivers interchangeably under SFM; we ship TCP (the
+//! offline crate set has no gRPC) and the trait keeps the swap trivial.
+
+use super::driver::Driver;
+use super::frame::{Frame, HEADER_LEN};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+pub struct TcpDriver {
+    writer: Mutex<BufWriter<TcpStream>>,
+    reader: Mutex<BufReader<TcpStream>>,
+    peer: String,
+}
+
+impl TcpDriver {
+    pub fn from_stream(stream: TcpStream) -> Result<TcpDriver> {
+        stream.set_nodelay(true).ok();
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "?".into());
+        let w = stream.try_clone().context("clone tcp stream")?;
+        Ok(TcpDriver {
+            writer: Mutex::new(BufWriter::with_capacity(256 * 1024, w)),
+            reader: Mutex::new(BufReader::with_capacity(256 * 1024, stream)),
+            peer,
+        })
+    }
+
+    /// Connect to a listening endpoint.
+    pub fn connect(addr: &str) -> Result<TcpDriver> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Self::from_stream(stream)
+    }
+
+    /// Accept one connection from a listener.
+    pub fn accept(listener: &TcpListener) -> Result<TcpDriver> {
+        let (stream, _) = listener.accept().context("accept")?;
+        Self::from_stream(stream)
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn read_frame(reader: &mut BufReader<TcpStream>) -> Result<Frame> {
+        let mut hdr = [0u8; HEADER_LEN];
+        reader.read_exact(&mut hdr).context("read frame header")?;
+        let (mut frame, plen, crc) = Frame::decode_header(&hdr)?;
+        let mut payload = vec![0u8; plen as usize];
+        reader.read_exact(&mut payload).context("read frame payload")?;
+        let actual = crc32fast::hash(&payload);
+        if actual != crc {
+            bail!("tcp frame crc mismatch (stream {})", frame.stream_id);
+        }
+        frame.payload = payload;
+        Ok(frame)
+    }
+}
+
+impl Driver for TcpDriver {
+    fn send(&self, frame: Frame) -> Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&frame.encode_header())?;
+        w.write_all(&frame.payload)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Frame> {
+        let mut r = self.reader.lock().unwrap();
+        r.get_ref().set_read_timeout(None)?;
+        Self::read_frame(&mut r)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
+        let mut r = self.reader.lock().unwrap();
+        r.get_ref().set_read_timeout(Some(timeout))?;
+        match Self::read_frame(&mut r) {
+            Ok(f) => Ok(Some(f)),
+            Err(e) => {
+                // Timeouts surface as WouldBlock/TimedOut io errors.
+                if let Some(io) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) {
+                        return Ok(None);
+                    }
+                }
+                // Partially-read headers would desync the stream; treat
+                // every other failure as fatal for this connection.
+                Err(e)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+/// Bind a listener on 127.0.0.1 at an ephemeral port (tests, simulator).
+pub fn loopback_listener() -> Result<TcpListener> {
+    TcpListener::bind("127.0.0.1:0").context("bind loopback")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfm::frame::FrameType;
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            let f = d.recv().unwrap();
+            assert_eq!(f.payload, vec![7; 1000]);
+            d.send(Frame::new(FrameType::Ack, f.stream_id, 0, vec![1])).unwrap();
+        });
+        let client = TcpDriver::connect(&addr).unwrap();
+        client
+            .send(Frame::new(FrameType::Data, 3, 0, vec![7; 1000]))
+            .unwrap();
+        let ack = client.recv().unwrap();
+        assert_eq!(ack.ftype, FrameType::Ack);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_timeout() {
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let _d = TcpDriver::accept(&listener).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let client = TcpDriver::connect(&addr).unwrap();
+        let r = client.recv_timeout(Duration::from_millis(20)).unwrap();
+        assert!(r.is_none());
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn many_frames_ordered() {
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            for i in 0..500u64 {
+                let f = d.recv().unwrap();
+                assert_eq!(f.seq, i);
+            }
+        });
+        let client = TcpDriver::connect(&addr).unwrap();
+        for i in 0..500u64 {
+            client
+                .send(Frame::new(FrameType::Data, 1, i, vec![(i % 251) as u8; 64]))
+                .unwrap();
+        }
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! Object streaming (paper §III): regular / container / file transmission
+//! of weight messages, plus the pull-based [`retriever::ObjectRetriever`].
+
+pub mod object;
+pub mod retriever;
+pub mod wire;
+
+pub use object::{recv_weights, send_weights, TransferStats};
+pub use wire::{QuantizedContainer, WeightsMsg};

@@ -1,0 +1,493 @@
+//! Object streamers — the paper's three transmission settings (§III,
+//! Fig. 3):
+//!
+//! * **Regular**: serialize the whole message, send as one unit. Peak
+//!   extra memory = whole serialized message (sender and receiver).
+//! * **Container** (`ContainerStreamer`): serialize **one entry at a
+//!   time**; peak extra memory = largest entry.
+//! * **File** (`FileStreamer`): spool to / from a file on disk; peak
+//!   extra memory = one wire chunk, independent of model size.
+//!
+//! Every buffer on these paths is registered in
+//! [`crate::memory::COMM_GAUGE`], so the Table III bounds are asserted
+//! in tests, not just observed via RSS.
+
+use super::wire::{self, Entry, WeightsMsg};
+use crate::config::StreamingMode;
+use crate::memory::{TrackedBuf, COMM_GAUGE};
+use crate::sfm::{Event, SfmEndpoint};
+use crate::streaming::wire::QuantizedContainer;
+use crate::tensor::ParamContainer;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Statistics of one object transmission.
+#[derive(Debug, Clone, Default)]
+pub struct TransferStats {
+    pub wire_bytes: u64,
+    pub entries: usize,
+    pub seconds: f64,
+}
+
+/// Send a weights message in the given mode. `spool_dir` is required for
+/// file mode (where the on-disk copy lives).
+pub fn send_weights(
+    ep: &SfmEndpoint,
+    msg: &WeightsMsg,
+    mode: StreamingMode,
+    spool_dir: Option<&Path>,
+) -> Result<TransferStats> {
+    let t0 = std::time::Instant::now();
+    let mut stats = match mode {
+        StreamingMode::Regular => send_regular(ep, msg),
+        StreamingMode::Container => send_container(ep, msg),
+        StreamingMode::File => {
+            let dir = spool_dir.ok_or_else(|| anyhow!("file streaming needs a spool dir"))?;
+            send_file_mode(ep, msg, dir)
+        }
+    }?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// Receive a weights message (mode is discovered from the descriptor).
+pub fn recv_weights(ep: &SfmEndpoint, spool_dir: Option<&Path>) -> Result<(WeightsMsg, TransferStats)> {
+    let t0 = std::time::Instant::now();
+    let (descriptor, stream) = match ep.recv_event(None)? {
+        Event::Begin { descriptor, stream } => (descriptor, stream),
+        other => bail!("expected Begin, got {other:?}"),
+    };
+    let mode = descriptor
+        .get("mode")
+        .and_then(|m| m.as_str())
+        .and_then(StreamingMode::from_name)
+        .ok_or_else(|| anyhow!("descriptor missing mode"))?;
+    let (msg, mut stats) = match mode {
+        StreamingMode::Regular => recv_regular(ep, &descriptor)?,
+        StreamingMode::Container => recv_container(ep, &descriptor)?,
+        StreamingMode::File => {
+            let dir = spool_dir.ok_or_else(|| anyhow!("file streaming needs a spool dir"))?;
+            recv_file_mode(ep, &descriptor, dir)?
+        }
+    };
+    ep.send_ack(stream)?;
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok((msg, stats))
+}
+
+fn descriptor(mode: StreamingMode, msg: &WeightsMsg) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("weights")),
+        ("mode", Json::str(mode.name())),
+        ("entries", Json::num(msg.n_entries() as f64)),
+        ("total_bytes", Json::num(wire::message_wire_len(msg) as f64)),
+    ])
+}
+
+// -- regular ------------------------------------------------------------------
+
+fn send_regular(ep: &SfmEndpoint, msg: &WeightsMsg) -> Result<TransferStats> {
+    // Whole-message serialization: this buffer IS the paper's "memory
+    // pre-allocated to hold the entire message".
+    let total = wire::message_wire_len(msg) as usize;
+    let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, total);
+    wire::encode_message(blob.as_mut_vec(), msg)?;
+    blob.resync();
+
+    let mut tx = ep.begin_object(descriptor(StreamingMode::Regular, msg))?;
+    tx.begin_unit(Json::obj(vec![("bytes", Json::num(blob.len() as f64))]))?;
+    tx.write_all(blob.as_slice())?;
+    tx.end_unit()?;
+    tx.end_object(Json::Null)?;
+    Ok(TransferStats {
+        wire_bytes: blob.len() as u64,
+        entries: msg.n_entries(),
+        seconds: 0.0,
+    })
+}
+
+fn recv_regular(ep: &SfmEndpoint, descriptor: &Json) -> Result<(WeightsMsg, TransferStats)> {
+    let total = descriptor
+        .get("total_bytes")
+        .and_then(|j| j.as_u64())
+        .unwrap_or(0);
+    // Reassembly buffer for the whole message (the receive-side cost of
+    // regular transmission).
+    let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, total as usize);
+    loop {
+        match ep.recv_event(None)? {
+            Event::UnitStart { .. } => {}
+            Event::Chunk { bytes, .. } => {
+                blob.as_mut_vec().extend_from_slice(&bytes);
+                blob.resync();
+            }
+            Event::End { .. } => break,
+            Event::Ack { .. } => {}
+            Event::Begin { .. } => bail!("nested Begin"),
+        }
+    }
+    let msg = wire::decode_message(&mut blob.as_slice())?;
+    let stats = TransferStats {
+        wire_bytes: blob.len() as u64,
+        entries: msg.n_entries(),
+        seconds: 0.0,
+    };
+    Ok((msg, stats))
+}
+
+// -- container ----------------------------------------------------------------
+
+fn send_container(ep: &SfmEndpoint, msg: &WeightsMsg) -> Result<TransferStats> {
+    let mut tx = ep.begin_object(descriptor(StreamingMode::Container, msg))?;
+    let mut wire_bytes = 0u64;
+    let entries = wire::entries_of_ref(msg);
+    for (i, eref) in entries.iter().enumerate() {
+        // Serialize ONE entry — the container-streaming memory bound.
+        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, eref.wire_len());
+        eref.write_to(buf.as_mut_vec())?;
+        buf.resync();
+        tx.begin_unit(Json::obj(vec![
+            ("index", Json::num(i as f64)),
+            ("name", Json::str(eref.name().to_string())),
+            ("bytes", Json::num(buf.len() as f64)),
+        ]))?;
+        tx.write_all(buf.as_slice())?;
+        tx.end_unit()?;
+        wire_bytes += buf.len() as u64;
+    }
+    tx.end_object(Json::Null)?;
+    Ok(TransferStats {
+        wire_bytes,
+        entries: msg.n_entries(),
+        seconds: 0.0,
+    })
+}
+
+fn recv_container(ep: &SfmEndpoint, desc: &Json) -> Result<(WeightsMsg, TransferStats)> {
+    let n = desc.get("entries").and_then(|j| j.as_usize()).unwrap_or(0);
+    let mut plain = ParamContainer::new();
+    let mut quant = QuantizedContainer::default();
+    let mut saw_quant = false;
+    let mut saw_plain = false;
+    let mut wire_bytes = 0u64;
+    let mut unit_buf: Option<TrackedBuf> = None;
+    loop {
+        match ep.recv_event(None)? {
+            Event::UnitStart { descriptor, .. } => {
+                let bytes = descriptor.get("bytes").and_then(|j| j.as_usize()).unwrap_or(0);
+                unit_buf = Some(TrackedBuf::with_capacity(&COMM_GAUGE, bytes));
+            }
+            Event::Chunk { bytes, last, .. } => {
+                let buf = unit_buf
+                    .as_mut()
+                    .ok_or_else(|| anyhow!("chunk outside unit"))?;
+                buf.as_mut_vec().extend_from_slice(&bytes);
+                buf.resync();
+                if last {
+                    let blob = unit_buf.take().unwrap();
+                    wire_bytes += blob.len() as u64;
+                    let entry = wire::read_entry(&mut blob.as_slice())?;
+                    drop(blob); // release the comm buffer before the next entry
+                    match entry {
+                        Entry::Plain(name, t) => {
+                            saw_plain = true;
+                            plain.insert(name, t);
+                        }
+                        Entry::Quantized(name, q) => {
+                            saw_quant = true;
+                            quant.entries.push((name, q));
+                        }
+                    }
+                }
+            }
+            Event::End { .. } => break,
+            Event::Ack { .. } => {}
+            Event::Begin { .. } => bail!("nested Begin"),
+        }
+    }
+    if saw_plain && saw_quant {
+        bail!("mixed entry kinds in container stream");
+    }
+    let msg = if saw_quant {
+        WeightsMsg::Quantized(quant)
+    } else {
+        WeightsMsg::Plain(plain)
+    };
+    let entries = msg.n_entries();
+    if entries != n {
+        bail!("container stream delivered {entries} of {n} entries");
+    }
+    Ok((
+        msg,
+        TransferStats {
+            wire_bytes,
+            entries,
+            seconds: 0.0,
+        },
+    ))
+}
+
+// -- file ---------------------------------------------------------------------
+
+fn spool_path(dir: &Path, tag: &str) -> PathBuf {
+    dir.join(format!(
+        "flare_spool_{tag}_{}_{}.bin",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos())
+            .unwrap_or(0)
+    ))
+}
+
+/// Serialize a message to a spool file entry-by-entry (O(entry) memory,
+/// which for fairness with the paper is the same bound as container
+/// streaming; the subsequent wire transfer is O(chunk)).
+pub fn write_spool(msg: &WeightsMsg, path: &Path) -> Result<u64> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::with_capacity(256 * 1024, f);
+    let mut head = Vec::with_capacity(8);
+    crate::util::bytes::put_u32(&mut head, wire::MSG_MAGIC);
+    crate::util::bytes::put_u32(&mut head, msg.n_entries() as u32);
+    w.write_all(&head)?;
+    for eref in wire::entries_of_ref(msg) {
+        eref.write_to(&mut w)?;
+    }
+    w.flush()?;
+    Ok(std::fs::metadata(path)?.len())
+}
+
+/// Read a spooled message back (entry-at-a-time, O(entry) memory).
+pub fn read_spool(path: &Path) -> Result<WeightsMsg> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(256 * 1024, f);
+    wire::decode_message(&mut r)
+}
+
+fn send_file_mode(ep: &SfmEndpoint, msg: &WeightsMsg, dir: &Path) -> Result<TransferStats> {
+    let path = spool_path(dir, "tx");
+    let file_len = write_spool(msg, &path)?;
+    let stats = send_file(ep, &path, msg.n_entries())?;
+    std::fs::remove_file(&path).ok();
+    debug_assert_eq!(stats.wire_bytes, file_len);
+    Ok(stats)
+}
+
+/// Stream an existing file chunk-by-chunk — O(chunk) memory regardless of
+/// the file / model size.
+pub fn send_file(ep: &SfmEndpoint, path: &Path, entries: usize) -> Result<TransferStats> {
+    let len = std::fs::metadata(path)?.len();
+    let mut tx = ep.begin_object(Json::obj(vec![
+        ("kind", Json::str("weights")),
+        ("mode", Json::str(StreamingMode::File.name())),
+        ("entries", Json::num(entries as f64)),
+        ("total_bytes", Json::num(len as f64)),
+    ]))?;
+    tx.begin_unit(Json::obj(vec![
+        ("name", Json::str(path.file_name().unwrap_or_default().to_string_lossy().to_string())),
+        ("bytes", Json::num(len as f64)),
+    ]))?;
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(ep.chunk_bytes, f);
+    let mut chunk = TrackedBuf::with_capacity(&COMM_GAUGE, ep.chunk_bytes);
+    chunk.as_mut_vec().resize(ep.chunk_bytes, 0);
+    loop {
+        let n = r.read(chunk.as_mut_vec())?;
+        if n == 0 {
+            break;
+        }
+        tx.write_all(&chunk.as_slice()[..n])?;
+    }
+    drop(chunk);
+    tx.end_unit()?;
+    tx.end_object(Json::Null)?;
+    Ok(TransferStats {
+        wire_bytes: len,
+        entries,
+        seconds: 0.0,
+    })
+}
+
+fn recv_file_mode(ep: &SfmEndpoint, desc: &Json, dir: &Path) -> Result<(WeightsMsg, TransferStats)> {
+    let path = spool_path(dir, "rx");
+    let stats = recv_file(ep, &path)?;
+    let msg = read_spool(&path)?;
+    std::fs::remove_file(&path).ok();
+    let n = desc.get("entries").and_then(|j| j.as_usize()).unwrap_or(0);
+    if msg.n_entries() != n {
+        bail!("file stream delivered {} of {n} entries", msg.n_entries());
+    }
+    Ok((msg, stats))
+}
+
+/// Receive a file-mode stream directly to disk — O(chunk) memory.
+pub fn recv_file(ep: &SfmEndpoint, path: &Path) -> Result<TransferStats> {
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::with_capacity(256 * 1024, f);
+    let mut wire_bytes = 0u64;
+    loop {
+        match ep.recv_event(None)? {
+            Event::UnitStart { .. } => {}
+            Event::Chunk { bytes, .. } => {
+                wire_bytes += bytes.len() as u64;
+                w.write_all(&bytes)?;
+            }
+            Event::End { .. } => break,
+            Event::Ack { .. } => {}
+            Event::Begin { .. } => bail!("nested Begin"),
+        }
+    }
+    w.flush()?;
+    // fsync so job-time comparisons include real I/O cost, like the paper's.
+    w.get_ref().sync_all().ok();
+    Ok(TransferStats {
+        wire_bytes,
+        entries: 0,
+        seconds: 0.0,
+    })
+}
+
+/// Validate a spool file without loading tensors (header walk).
+pub fn spool_entry_count(path: &Path) -> Result<usize> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != wire::MSG_MAGIC {
+        bail!("bad spool magic");
+    }
+    let count = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    // Walk entries by seeking over payloads.
+    let mut file = r.into_inner();
+    file.seek(SeekFrom::Start(8))?;
+    let mut reader = BufReader::new(file);
+    for _ in 0..count {
+        wire::read_entry(&mut reader)?;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::config::QuantScheme;
+    use crate::quant::quantize;
+    use crate::sfm::inmem;
+    use crate::tensor::init::materialize;
+
+    fn endpoints() -> (SfmEndpoint, SfmEndpoint) {
+        let p = inmem::pair(64);
+        (
+            SfmEndpoint::new(p.a).with_chunk(64 * 1024),
+            SfmEndpoint::new(p.b).with_chunk(64 * 1024),
+        )
+    }
+
+    fn mini_msg() -> WeightsMsg {
+        WeightsMsg::Plain(materialize(&ModelSpec::llama_mini(), 33))
+    }
+
+    fn quant_msg() -> WeightsMsg {
+        let c = materialize(&ModelSpec::llama_mini(), 34);
+        WeightsMsg::Quantized(QuantizedContainer {
+            entries: c
+                .iter()
+                .map(|(n, t)| (n.to_string(), quantize(QuantScheme::Blockwise8, t).unwrap()))
+                .collect(),
+        })
+    }
+
+    fn roundtrip(mode: StreamingMode, msg: WeightsMsg) -> WeightsMsg {
+        let (a, b) = endpoints();
+        let dir = std::env::temp_dir();
+        let want = msg.clone();
+        let tx = std::thread::spawn(move || {
+            send_weights(&a, &msg, mode, Some(&std::env::temp_dir())).unwrap();
+            // wait for receiver ack so the channel stays open
+            let _ = a.recv_event(None);
+        });
+        let (got, stats) = recv_weights(&b, Some(&dir)).unwrap();
+        tx.join().unwrap();
+        assert_eq!(got.n_entries(), want.n_entries());
+        assert!(stats.wire_bytes > 0);
+        got
+    }
+
+    #[test]
+    fn regular_roundtrip_plain() {
+        let msg = mini_msg();
+        let got = roundtrip(StreamingMode::Regular, msg.clone());
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn container_roundtrip_plain() {
+        let msg = mini_msg();
+        let got = roundtrip(StreamingMode::Container, msg.clone());
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn file_roundtrip_plain() {
+        let msg = mini_msg();
+        let got = roundtrip(StreamingMode::File, msg.clone());
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn all_modes_roundtrip_quantized() {
+        for mode in [StreamingMode::Regular, StreamingMode::Container, StreamingMode::File] {
+            let msg = quant_msg();
+            let got = roundtrip(mode, msg.clone());
+            assert_eq!(got, msg, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn memory_bounds_ordering() {
+        // The paper's Fig. 3 claim, as an exact accounting assertion:
+        // peak comm-buffer bytes regular > container > file.
+        let dir = std::env::temp_dir();
+        let mut peaks = Vec::new();
+        for mode in [StreamingMode::Regular, StreamingMode::Container, StreamingMode::File] {
+            let (a, b) = endpoints();
+            let msg = mini_msg();
+            COMM_GAUGE.reset_peak();
+            let base = COMM_GAUGE.current();
+            let tx = std::thread::spawn({
+                let dir = dir.clone();
+                move || {
+                    send_weights(&a, &msg, mode, Some(&dir)).unwrap();
+                    let _ = a.recv_event(None);
+                }
+            });
+            let (_got, _) = recv_weights(&b, Some(&dir)).unwrap();
+            tx.join().unwrap();
+            peaks.push(COMM_GAUGE.peak() - base);
+        }
+        let (regular, container, file) = (peaks[0], peaks[1], peaks[2]);
+        let total = wire::message_wire_len(&mini_msg());
+        let max_entry = ModelSpec::llama_mini().max_param_bytes_f32();
+        assert!(regular >= 2 * total - 4096, "regular {regular} < 2x message {total}");
+        assert!(container < 4 * max_entry, "container {container}");
+        assert!(container > max_entry / 2, "container {container}");
+        assert!(file < (1 << 21) + 512 * 1024, "file {file}");
+        assert!(regular > container, "{regular} vs {container}");
+        assert!(container > file, "{container} vs {file}");
+    }
+
+    #[test]
+    fn spool_roundtrip_and_count() {
+        let msg = quant_msg();
+        let path = std::env::temp_dir().join(format!("flare_spool_test_{}", std::process::id()));
+        write_spool(&msg, &path).unwrap();
+        assert_eq!(spool_entry_count(&path).unwrap(), msg.n_entries());
+        let back = read_spool(&path).unwrap();
+        assert_eq!(back, msg);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,189 @@
+//! ObjectRetriever (paper §I contribution 2: "an ObjectRetriever
+//! developed for easier integration with existing code").
+//!
+//! Pull-based access to large objects: the consumer *requests* an object
+//! by id and the owner streams it back in whatever mode it was
+//! registered with. Existing task code only swaps "read attachment from
+//! message" for `retriever.retrieve(id)` — no restructuring of the
+//! workflow around push-streaming.
+
+use super::object::{self, TransferStats};
+use super::wire::WeightsMsg;
+use crate::config::StreamingMode;
+use crate::sfm::SfmEndpoint;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A registered retrievable object.
+pub enum StoredObject {
+    /// In-memory weights, streamed in the given mode on request.
+    Weights(WeightsMsg, StreamingMode),
+    /// A file on disk, always file-streamed.
+    File(PathBuf),
+}
+
+/// Owner side: registry of objects that can be requested over an
+/// endpoint.
+#[derive(Default)]
+pub struct ObjectStore {
+    objects: Mutex<BTreeMap<String, StoredObject>>,
+    spool_dir: Option<PathBuf>,
+}
+
+impl ObjectStore {
+    pub fn new(spool_dir: Option<PathBuf>) -> Self {
+        Self {
+            objects: Mutex::new(BTreeMap::new()),
+            spool_dir,
+        }
+    }
+
+    pub fn register(&self, id: impl Into<String>, obj: StoredObject) {
+        self.objects.lock().unwrap().insert(id.into(), obj);
+    }
+
+    pub fn unregister(&self, id: &str) -> bool {
+        self.objects.lock().unwrap().remove(id).is_some()
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.objects.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Service a single retrieval request arriving on `ep`. Returns the
+    /// requested id. Blocks until a request arrives (or `timeout`).
+    pub fn serve_one(&self, ep: &SfmEndpoint, timeout: Option<Duration>) -> Result<String> {
+        let req = ep.recv_ctrl(timeout)?;
+        let op = req.get("op").and_then(|j| j.as_str()).unwrap_or("");
+        if op != "retrieve" {
+            bail!("unexpected op '{op}' (want 'retrieve')");
+        }
+        let id = req
+            .get("id")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("retrieve without id"))?
+            .to_string();
+        let guard = self.objects.lock().unwrap();
+        match guard.get(&id) {
+            None => {
+                drop(guard);
+                ep.send_ctrl(&Json::obj(vec![
+                    ("op", Json::str("retrieve_nak")),
+                    ("id", Json::str(id.clone())),
+                    ("error", Json::str("unknown object")),
+                ]))?;
+                bail!("unknown object '{id}'");
+            }
+            Some(StoredObject::Weights(msg, mode)) => {
+                ep.send_ctrl(&Json::obj(vec![
+                    ("op", Json::str("retrieve_ok")),
+                    ("id", Json::str(id.clone())),
+                ]))?;
+                object::send_weights(ep, msg, *mode, self.spool_dir.as_deref())?;
+            }
+            Some(StoredObject::File(path)) => {
+                ep.send_ctrl(&Json::obj(vec![
+                    ("op", Json::str("retrieve_ok")),
+                    ("id", Json::str(id.clone())),
+                ]))?;
+                object::send_file(ep, path, 0)?;
+            }
+        }
+        // wait for the receiver's transfer-level ack
+        let _ = ep.recv_event(timeout);
+        Ok(id)
+    }
+}
+
+/// Consumer side: request an object by id.
+pub struct ObjectRetriever<'a> {
+    ep: &'a SfmEndpoint,
+    spool_dir: Option<PathBuf>,
+    pub timeout: Option<Duration>,
+}
+
+impl<'a> ObjectRetriever<'a> {
+    pub fn new(ep: &'a SfmEndpoint, spool_dir: Option<PathBuf>) -> Self {
+        Self {
+            ep,
+            spool_dir,
+            timeout: Some(Duration::from_secs(60)),
+        }
+    }
+
+    /// Retrieve weights registered under `id`.
+    pub fn retrieve(&self, id: &str) -> Result<(WeightsMsg, TransferStats)> {
+        self.ep.send_ctrl(&Json::obj(vec![
+            ("op", Json::str("retrieve")),
+            ("id", Json::str(id)),
+        ]))?;
+        let resp = self.ep.recv_ctrl(self.timeout)?;
+        match resp.get("op").and_then(|j| j.as_str()) {
+            Some("retrieve_ok") => {}
+            Some("retrieve_nak") => bail!(
+                "retrieval of '{id}' refused: {}",
+                resp.get("error").and_then(|j| j.as_str()).unwrap_or("?")
+            ),
+            other => bail!("unexpected response op {other:?}"),
+        }
+        object::recv_weights(self.ep, self.spool_dir.as_deref())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::sfm::inmem;
+    use crate::tensor::init::materialize;
+
+    fn endpoints() -> (SfmEndpoint, SfmEndpoint) {
+        let p = inmem::pair(64);
+        (SfmEndpoint::new(p.a), SfmEndpoint::new(p.b))
+    }
+
+    #[test]
+    fn retrieve_weights_all_modes() {
+        for mode in [StreamingMode::Regular, StreamingMode::Container, StreamingMode::File] {
+            let (server_ep, client_ep) = endpoints();
+            let msg = WeightsMsg::Plain(materialize(&ModelSpec::llama_mini(), 55));
+            let want = msg.clone();
+            let server = std::thread::spawn(move || {
+                let store = ObjectStore::new(Some(std::env::temp_dir()));
+                store.register("global_weights", StoredObject::Weights(msg, mode));
+                store.serve_one(&server_ep, Some(Duration::from_secs(10))).unwrap()
+            });
+            let retriever = ObjectRetriever::new(&client_ep, Some(std::env::temp_dir()));
+            let (got, stats) = retriever.retrieve("global_weights").unwrap();
+            assert_eq!(server.join().unwrap(), "global_weights");
+            assert_eq!(got, want, "{mode:?}");
+            assert!(stats.wire_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_object_naks() {
+        let (server_ep, client_ep) = endpoints();
+        let server = std::thread::spawn(move || {
+            let store = ObjectStore::new(None);
+            store.serve_one(&server_ep, Some(Duration::from_secs(10)))
+        });
+        let retriever = ObjectRetriever::new(&client_ep, None);
+        let err = retriever.retrieve("nope").unwrap_err();
+        assert!(err.to_string().contains("refused"), "{err}");
+        assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn register_unregister() {
+        let store = ObjectStore::new(None);
+        store.register("a", StoredObject::File(PathBuf::from("/tmp/x")));
+        assert_eq!(store.ids(), vec!["a".to_string()]);
+        assert!(store.unregister("a"));
+        assert!(!store.unregister("a"));
+    }
+}

@@ -1,0 +1,613 @@
+//! Binary wire codec for weight messages.
+//!
+//! Entries are self-describing and framed individually so every streaming
+//! mode can (de)serialize one entry at a time — the property container
+//! streaming's memory bound rests on. Layout (little-endian):
+//!
+//! ```text
+//! entry := u16 name_len, name bytes,
+//!          u8 kind (0 = plain f32, else QuantScheme id),
+//!          u8 rank, u64 dims[rank],
+//!          u32 block_size,
+//!          u32 absmax_n, f32 absmax[absmax_n],
+//!          u32 codebook_n, f32 codebook[codebook_n],
+//!          u64 payload_len, payload bytes
+//! message := u32 magic "FLWM", u32 entry_count, entry*
+//! ```
+
+use crate::config::QuantScheme;
+use crate::quant::{QuantMeta, QuantizedTensor};
+use crate::tensor::{DType, ParamContainer, Tensor, TensorMeta};
+use crate::util::bytes as b;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+pub const MSG_MAGIC: u32 = 0x464C_574D; // "FLWM"
+
+/// An ordered quantized container: what the quantize filter produces.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct QuantizedContainer {
+    pub entries: Vec<(String, QuantizedTensor)>,
+}
+
+impl QuantizedContainer {
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.iter().map(|(_, q)| q.payload_bytes()).sum()
+    }
+
+    pub fn meta_bytes(&self) -> u64 {
+        self.entries.iter().map(|(_, q)| q.meta_bytes()).sum()
+    }
+}
+
+/// A weights message: either original-precision or quantized. This is the
+/// payload of 'Task Data' (server→client) and 'Task Result'
+/// (client→server) in the federated protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightsMsg {
+    Plain(ParamContainer),
+    Quantized(QuantizedContainer),
+}
+
+impl WeightsMsg {
+    pub fn n_entries(&self) -> usize {
+        match self {
+            WeightsMsg::Plain(c) => c.len(),
+            WeightsMsg::Quantized(q) => q.len(),
+        }
+    }
+
+    /// Data bytes (payloads only — Table II "Model Size" column).
+    pub fn data_bytes(&self) -> u64 {
+        match self {
+            WeightsMsg::Plain(c) => c.total_bytes(),
+            WeightsMsg::Quantized(q) => q.payload_bytes(),
+        }
+    }
+
+    /// Quantization metadata bytes (Table II "Quantization Meta Size").
+    pub fn meta_bytes(&self) -> u64 {
+        match self {
+            WeightsMsg::Plain(_) => 0,
+            WeightsMsg::Quantized(q) => q.meta_bytes(),
+        }
+    }
+}
+
+/// One entry of a weights message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Entry {
+    Plain(String, Tensor),
+    Quantized(String, QuantizedTensor),
+}
+
+impl Entry {
+    pub fn name(&self) -> &str {
+        match self {
+            Entry::Plain(n, _) | Entry::Quantized(n, _) => n,
+        }
+    }
+
+    /// Serialized size of this entry in bytes.
+    pub fn wire_len(&self) -> usize {
+        let (name, rank, absmax, codebook, payload) = match self {
+            Entry::Plain(n, t) => (n.len(), t.meta.shape.len(), 0, 0, t.data.len()),
+            Entry::Quantized(n, q) => (
+                n.len(),
+                q.orig.shape.len(),
+                q.meta.absmax.len(),
+                q.meta.codebook.len(),
+                q.payload.len(),
+            ),
+        };
+        2 + name + 1 + 1 + 8 * rank + 4 + 4 + 4 * absmax + 4 + 4 * codebook + 8 + payload
+    }
+}
+
+fn scheme_id(s: QuantScheme) -> u8 {
+    match s {
+        QuantScheme::None => 0,
+        QuantScheme::Fp16 => 1,
+        QuantScheme::Bf16 => 2,
+        QuantScheme::Blockwise8 => 3,
+        QuantScheme::Fp4 => 4,
+        QuantScheme::Nf4 => 5,
+    }
+}
+
+fn scheme_from_id(id: u8) -> Result<QuantScheme> {
+    Ok(match id {
+        1 => QuantScheme::Fp16,
+        2 => QuantScheme::Bf16,
+        3 => QuantScheme::Blockwise8,
+        4 => QuantScheme::Fp4,
+        5 => QuantScheme::Nf4,
+        other => bail!("unknown scheme id {other}"),
+    })
+}
+
+/// Serialize one entry to a writer (streaming-friendly: O(1) extra).
+pub fn write_entry<W: Write>(w: &mut W, e: &Entry) -> Result<()> {
+    let mut head: Vec<u8> = Vec::with_capacity(64);
+    match e {
+        Entry::Plain(name, t) => {
+            if t.meta.dtype != DType::F32 {
+                bail!("plain entries must be f32");
+            }
+            b::put_u16(&mut head, name.len() as u16);
+            head.extend_from_slice(name.as_bytes());
+            head.push(0); // kind: plain
+            head.push(t.meta.shape.len() as u8);
+            for &d in &t.meta.shape {
+                b::put_u64(&mut head, d as u64);
+            }
+            b::put_u32(&mut head, 0); // block_size
+            b::put_u32(&mut head, 0); // absmax_n
+            b::put_u32(&mut head, 0); // codebook_n
+            b::put_u64(&mut head, t.data.len() as u64);
+            w.write_all(&head)?;
+            w.write_all(&t.data)?;
+        }
+        Entry::Quantized(name, q) => {
+            b::put_u16(&mut head, name.len() as u16);
+            head.extend_from_slice(name.as_bytes());
+            head.push(scheme_id(q.scheme));
+            head.push(q.orig.shape.len() as u8);
+            for &d in &q.orig.shape {
+                b::put_u64(&mut head, d as u64);
+            }
+            b::put_u32(&mut head, q.meta.block_size as u32);
+            b::put_u32(&mut head, q.meta.absmax.len() as u32);
+            for &m in &q.meta.absmax {
+                b::put_f32(&mut head, m);
+            }
+            b::put_u32(&mut head, q.meta.codebook.len() as u32);
+            for &c in &q.meta.codebook {
+                b::put_f32(&mut head, c);
+            }
+            b::put_u64(&mut head, q.payload.len() as u64);
+            w.write_all(&head)?;
+            w.write_all(&q.payload)?;
+        }
+    }
+    Ok(())
+}
+
+fn read_exact_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
+    let mut v = vec![0u8; n];
+    r.read_exact(&mut v)?;
+    Ok(v)
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b2 = [0u8; 2];
+    r.read_exact(&mut b2)?;
+    Ok(u16::from_le_bytes(b2))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    Ok(u32::from_le_bytes(b4))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    Ok(u64::from_le_bytes(b8))
+}
+
+fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b1 = [0u8; 1];
+    r.read_exact(&mut b1)?;
+    Ok(b1[0])
+}
+
+fn read_f32_vec<R: Read>(r: &mut R, n: usize, cap: usize) -> Result<Vec<f32>> {
+    if n > cap {
+        bail!("f32 vector length {n} exceeds cap {cap}");
+    }
+    let raw = read_exact_vec(r, n * 4)?;
+    Ok(b::bytes_to_f32_vec(&raw))
+}
+
+/// Maximum sane tensor payload (guards corrupt lengths): 16 GiB.
+const MAX_PAYLOAD: u64 = 16 << 30;
+
+/// Deserialize one entry from a reader.
+pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
+    let name_len = read_u16(r)? as usize;
+    let name = String::from_utf8(read_exact_vec(r, name_len)?)
+        .map_err(|_| anyhow!("entry name not utf-8"))?;
+    let kind = read_u8(r)?;
+    let rank = read_u8(r)? as usize;
+    if rank > 8 {
+        bail!("{name}: rank {rank} too large");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let d = read_u64(r)?;
+        if d > u32::MAX as u64 {
+            bail!("{name}: dimension {d} too large");
+        }
+        shape.push(d as usize);
+    }
+    let block_size = read_u32(r)? as usize;
+    let absmax_n = read_u32(r)? as usize;
+    let absmax = read_f32_vec(r, absmax_n, 1 << 28)?;
+    let codebook_n = read_u32(r)? as usize;
+    let codebook = read_f32_vec(r, codebook_n, 4096)?;
+    let payload_len = read_u64(r)?;
+    if payload_len > MAX_PAYLOAD {
+        bail!("{name}: payload length {payload_len} exceeds cap");
+    }
+    let payload = read_exact_vec(r, payload_len as usize)?;
+
+    let elems: usize = shape.iter().product();
+    if kind == 0 {
+        if payload.len() != elems * 4 {
+            bail!("{name}: f32 payload size mismatch");
+        }
+        Ok(Entry::Plain(name, Tensor::new(shape, DType::F32, payload)))
+    } else {
+        let scheme = scheme_from_id(kind)?;
+        let expect = crate::quant::payload_dtype(scheme)?.size_of_elems(elems);
+        if payload.len() != expect {
+            bail!("{name}: quantized payload size mismatch ({} vs {expect})", payload.len());
+        }
+        Ok(Entry::Quantized(
+            name,
+            QuantizedTensor {
+                scheme,
+                orig: TensorMeta::new(shape, DType::F32),
+                payload,
+                meta: QuantMeta {
+                    absmax,
+                    block_size,
+                    codebook,
+                },
+            },
+        ))
+    }
+}
+
+/// A borrowed view of one message entry — serialization without cloning
+/// tensor payloads (the streamers' hot path).
+#[derive(Debug, Clone, Copy)]
+pub enum EntryRef<'a> {
+    Plain(&'a str, &'a Tensor),
+    Quantized(&'a str, &'a QuantizedTensor),
+}
+
+impl<'a> EntryRef<'a> {
+    pub fn name(&self) -> &'a str {
+        match self {
+            EntryRef::Plain(n, _) | EntryRef::Quantized(n, _) => n,
+        }
+    }
+
+    /// Serialized size of this entry in bytes.
+    pub fn wire_len(&self) -> usize {
+        match self {
+            EntryRef::Plain(n, t) => {
+                2 + n.len() + 1 + 1 + 8 * t.meta.shape.len() + 4 + 4 + 4 + 8 + t.data.len()
+            }
+            EntryRef::Quantized(n, q) => {
+                2 + n.len()
+                    + 1
+                    + 1
+                    + 8 * q.orig.shape.len()
+                    + 4
+                    + 4
+                    + 4 * q.meta.absmax.len()
+                    + 4
+                    + 4 * q.meta.codebook.len()
+                    + 8
+                    + q.payload.len()
+            }
+        }
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        match self {
+            EntryRef::Plain(n, t) => write_plain_borrowed(w, n, t),
+            EntryRef::Quantized(n, q) => write_quantized_borrowed(w, n, q),
+        }
+    }
+}
+
+/// Borrowed entry views over a message, in container order.
+pub fn entries_of_ref(msg: &WeightsMsg) -> Vec<EntryRef<'_>> {
+    match msg {
+        WeightsMsg::Plain(c) => c.iter().map(|(n, t)| EntryRef::Plain(n, t)).collect(),
+        WeightsMsg::Quantized(q) => q
+            .entries
+            .iter()
+            .map(|(n, t)| EntryRef::Quantized(n.as_str(), t))
+            .collect(),
+    }
+}
+
+/// Iterate a message's entries without consuming it.
+pub fn entries_of(msg: &WeightsMsg) -> Vec<Entry> {
+    match msg {
+        WeightsMsg::Plain(c) => c
+            .iter()
+            .map(|(n, t)| Entry::Plain(n.to_string(), t.clone()))
+            .collect(),
+        WeightsMsg::Quantized(q) => q
+            .entries
+            .iter()
+            .map(|(n, t)| Entry::Quantized(n.clone(), t.clone()))
+            .collect(),
+    }
+}
+
+/// Serialize a whole message (regular transmission: O(message) memory).
+pub fn encode_message<W: Write>(w: &mut W, msg: &WeightsMsg) -> Result<()> {
+    let mut head = Vec::with_capacity(8);
+    b::put_u32(&mut head, MSG_MAGIC);
+    b::put_u32(&mut head, msg.n_entries() as u32);
+    w.write_all(&head)?;
+    match msg {
+        WeightsMsg::Plain(c) => {
+            for (n, t) in c.iter() {
+                // Borrowing encode: same layout as write_entry(Plain).
+                write_plain_borrowed(w, n, t)?;
+            }
+        }
+        WeightsMsg::Quantized(q) => {
+            for (n, t) in &q.entries {
+                write_entry(w, &Entry::Quantized(n.clone(), t.clone()))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Borrow-friendly plain-entry writer (avoids cloning tensor data).
+pub fn write_plain_borrowed<W: Write>(w: &mut W, name: &str, t: &Tensor) -> Result<()> {
+    if t.meta.dtype != DType::F32 {
+        bail!("plain entries must be f32");
+    }
+    let mut head: Vec<u8> = Vec::with_capacity(64);
+    b::put_u16(&mut head, name.len() as u16);
+    head.extend_from_slice(name.as_bytes());
+    head.push(0);
+    head.push(t.meta.shape.len() as u8);
+    for &d in &t.meta.shape {
+        b::put_u64(&mut head, d as u64);
+    }
+    b::put_u32(&mut head, 0);
+    b::put_u32(&mut head, 0);
+    b::put_u32(&mut head, 0);
+    b::put_u64(&mut head, t.data.len() as u64);
+    w.write_all(&head)?;
+    w.write_all(&t.data)?;
+    Ok(())
+}
+
+/// Borrow-friendly quantized-entry writer.
+pub fn write_quantized_borrowed<W: Write>(
+    w: &mut W,
+    name: &str,
+    q: &QuantizedTensor,
+) -> Result<()> {
+    let mut head: Vec<u8> = Vec::with_capacity(64 + 4 * q.meta.absmax.len() + 4 * q.meta.codebook.len());
+    b::put_u16(&mut head, name.len() as u16);
+    head.extend_from_slice(name.as_bytes());
+    head.push(scheme_id(q.scheme));
+    head.push(q.orig.shape.len() as u8);
+    for &d in &q.orig.shape {
+        b::put_u64(&mut head, d as u64);
+    }
+    b::put_u32(&mut head, q.meta.block_size as u32);
+    b::put_u32(&mut head, q.meta.absmax.len() as u32);
+    for &m in &q.meta.absmax {
+        b::put_f32(&mut head, m);
+    }
+    b::put_u32(&mut head, q.meta.codebook.len() as u32);
+    for &c in &q.meta.codebook {
+        b::put_f32(&mut head, c);
+    }
+    b::put_u64(&mut head, q.payload.len() as u64);
+    w.write_all(&head)?;
+    w.write_all(&q.payload)?;
+    Ok(())
+}
+
+/// Deserialize a whole message.
+pub fn decode_message<R: Read>(r: &mut R) -> Result<WeightsMsg> {
+    let magic = read_u32(r)?;
+    if magic != MSG_MAGIC {
+        bail!("bad weights-message magic {magic:#x}");
+    }
+    let count = read_u32(r)? as usize;
+    if count > 1_000_000 {
+        bail!("entry count {count} unreasonable");
+    }
+    let mut plain = ParamContainer::new();
+    let mut quant = QuantizedContainer::default();
+    let mut saw_plain = false;
+    let mut saw_quant = false;
+    for _ in 0..count {
+        match read_entry(r)? {
+            Entry::Plain(n, t) => {
+                saw_plain = true;
+                plain.insert(n, t);
+            }
+            Entry::Quantized(n, q) => {
+                saw_quant = true;
+                quant.entries.push((n, q));
+            }
+        }
+    }
+    if saw_plain && saw_quant {
+        bail!("mixed plain/quantized entries in one message");
+    }
+    if saw_quant {
+        Ok(WeightsMsg::Quantized(quant))
+    } else {
+        Ok(WeightsMsg::Plain(plain))
+    }
+}
+
+/// Total serialized size of a message.
+pub fn message_wire_len(msg: &WeightsMsg) -> u64 {
+    let entries: u64 = match msg {
+        WeightsMsg::Plain(c) => c
+            .iter()
+            .map(|(n, t)| {
+                (2 + n.len() + 1 + 1 + 8 * t.meta.shape.len() + 4 + 4 + 4 + 8 + t.data.len()) as u64
+            })
+            .sum(),
+        WeightsMsg::Quantized(q) => q
+            .entries
+            .iter()
+            .map(|(n, t)| {
+                (2 + n.len()
+                    + 1
+                    + 1
+                    + 8 * t.orig.shape.len()
+                    + 4
+                    + 4
+                    + 4 * t.meta.absmax.len()
+                    + 4
+                    + 4 * t.meta.codebook.len()
+                    + 8
+                    + t.payload.len()) as u64
+            })
+            .sum(),
+    };
+    8 + entries
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::quant::quantize;
+    use crate::tensor::init::materialize;
+
+    fn mini() -> ParamContainer {
+        materialize(&ModelSpec::llama_mini(), 21)
+    }
+
+    #[test]
+    fn plain_message_roundtrip() {
+        let c = mini();
+        let msg = WeightsMsg::Plain(c.clone());
+        let mut buf = Vec::new();
+        encode_message(&mut buf, &msg).unwrap();
+        assert_eq!(buf.len() as u64, message_wire_len(&msg));
+        let back = decode_message(&mut buf.as_slice()).unwrap();
+        match back {
+            WeightsMsg::Plain(c2) => {
+                assert_eq!(c2.len(), c.len());
+                assert_eq!(c2.names(), c.names());
+                assert!((c.max_abs_diff(&c2)) == 0.0);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn quantized_message_roundtrip() {
+        let c = mini();
+        for scheme in [QuantScheme::Fp16, QuantScheme::Blockwise8, QuantScheme::Nf4] {
+            let q = QuantizedContainer {
+                entries: c
+                    .iter()
+                    .map(|(n, t)| (n.to_string(), quantize(scheme, t).unwrap()))
+                    .collect(),
+            };
+            let msg = WeightsMsg::Quantized(q.clone());
+            let mut buf = Vec::new();
+            encode_message(&mut buf, &msg).unwrap();
+            assert_eq!(buf.len() as u64, message_wire_len(&msg));
+            let back = decode_message(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, msg, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn entry_streaming_roundtrip() {
+        let c = mini();
+        let mut buf = Vec::new();
+        let mut entries = Vec::new();
+        for (n, t) in c.iter() {
+            let e = Entry::Plain(n.to_string(), t.clone());
+            assert_eq!(e.wire_len(), {
+                let mut tmp = Vec::new();
+                write_entry(&mut tmp, &e).unwrap();
+                tmp.len()
+            });
+            write_entry(&mut buf, &e).unwrap();
+            entries.push(e);
+        }
+        let mut r = buf.as_slice();
+        for want in &entries {
+            let got = read_entry(&mut r).unwrap();
+            assert_eq!(&got, want);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut buf = Vec::new();
+        encode_message(&mut buf, &WeightsMsg::Plain(mini())).unwrap();
+        buf[0] ^= 0xff;
+        assert!(decode_message(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut buf = Vec::new();
+        encode_message(&mut buf, &WeightsMsg::Plain(mini())).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(decode_message(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn mixed_kinds_rejected() {
+        let c = mini();
+        let (n0, t0) = c.iter().next().unwrap();
+        let mut buf = Vec::new();
+        b::put_u32(&mut buf, MSG_MAGIC);
+        b::put_u32(&mut buf, 2);
+        write_entry(&mut buf, &Entry::Plain(n0.to_string(), t0.clone())).unwrap();
+        write_entry(
+            &mut buf,
+            &Entry::Quantized(n0.to_string(), quantize(QuantScheme::Fp16, t0).unwrap()),
+        )
+        .unwrap();
+        assert!(decode_message(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn borrowed_writers_match_entry_writer() {
+        let c = mini();
+        let (n, t) = c.iter().nth(3).unwrap();
+        let mut a = Vec::new();
+        let mut bb = Vec::new();
+        write_entry(&mut a, &Entry::Plain(n.to_string(), t.clone())).unwrap();
+        write_plain_borrowed(&mut bb, n, t).unwrap();
+        assert_eq!(a, bb);
+
+        let q = quantize(QuantScheme::Nf4, t).unwrap();
+        let mut a2 = Vec::new();
+        let mut b2 = Vec::new();
+        write_entry(&mut a2, &Entry::Quantized(n.to_string(), q.clone())).unwrap();
+        write_quantized_borrowed(&mut b2, n, &q).unwrap();
+        assert_eq!(a2, b2);
+    }
+}

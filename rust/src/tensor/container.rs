@@ -1,0 +1,221 @@
+//! [`ParamContainer`] — the ordered named-tensor dictionary exchanged in
+//! every federated round ("Task Data" carries global weights, "Task
+//! Result" carries local updates).
+
+use super::{DType, Tensor};
+use std::collections::BTreeMap;
+
+/// Ordered map of parameter name → tensor. Insertion order is preserved
+/// (it defines the container-streaming order and the PJRT argument order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParamContainer {
+    names: Vec<String>,
+    index: BTreeMap<String, usize>,
+    tensors: Vec<Tensor>,
+}
+
+impl ParamContainer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) a tensor. Replacement keeps the original
+    /// position so round-trips through filters preserve ordering.
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if let Some(&i) = self.index.get(&name) {
+            self.tensors[i] = t;
+        } else {
+            self.index.insert(name.clone(), self.tensors.len());
+            self.names.push(name);
+            self.tensors.push(t);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.tensors[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names
+            .iter()
+            .map(move |n| (n.as_str(), &self.tensors[self.index[n]]))
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&str, &mut Tensor)> {
+        // names and tensors are parallel arrays in insertion order.
+        self.names.iter().map(|n| n.as_str()).zip(self.tensors.iter_mut())
+    }
+
+    /// Remove and return a tensor (used by streaming receivers that drain
+    /// entries as they are consumed). O(n) but containers have O(100)
+    /// entries.
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        let i = self.index.remove(name)?;
+        self.names.remove(i);
+        let t = self.tensors.remove(i);
+        for v in self.index.values_mut() {
+            if *v > i {
+                *v -= 1;
+            }
+        }
+        Some(t)
+    }
+
+    /// Total payload bytes across all tensors (no metadata).
+    pub fn total_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.byte_len() as u64).sum()
+    }
+
+    /// Size in bytes of the largest single entry — the container-streaming
+    /// peak-memory bound from the paper (§III).
+    pub fn max_entry_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.byte_len() as u64).max().unwrap_or(0)
+    }
+
+    /// Total logical elements.
+    pub fn total_elems(&self) -> u64 {
+        self.tensors.iter().map(|t| t.elems() as u64).sum()
+    }
+
+    /// True if every tensor is F32 (the "original precision" invariant the
+    /// two-way quantization scheme maintains outside the wire).
+    pub fn all_f32(&self) -> bool {
+        self.tensors.iter().all(|t| t.meta.dtype == DType::F32)
+    }
+
+    // -- arithmetic used by aggregation -------------------------------------
+
+    /// `self += other * scale` elementwise across matching names.
+    /// Panics on shape/name mismatch — aggregation requires congruent
+    /// containers.
+    pub fn axpy(&mut self, scale: f32, other: &ParamContainer) {
+        assert_eq!(self.names, other.names, "container name sets differ");
+        for (name, t) in self.iter_mut() {
+            let o = other.get(name).expect("checked above");
+            assert_eq!(t.meta, o.meta, "shape mismatch at {name}");
+            let dst = t.as_f32_mut();
+            let src = o.as_f32();
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += scale * *s;
+            }
+        }
+    }
+
+    /// Scale all values by `s`.
+    pub fn scale(&mut self, s: f32) {
+        for (_, t) in self.iter_mut() {
+            for v in t.as_f32_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Elementwise max |a-b| over two congruent f32 containers.
+    pub fn max_abs_diff(&self, other: &ParamContainer) -> f32 {
+        assert_eq!(self.names, other.names);
+        let mut m = 0f32;
+        for (name, t) in self.iter() {
+            let o = other.get(name).unwrap();
+            for (a, b) in t.as_f32().iter().zip(o.as_f32()) {
+                m = m.max((a - b).abs());
+            }
+        }
+        m
+    }
+}
+
+impl FromIterator<(String, Tensor)> for ParamContainer {
+    fn from_iter<I: IntoIterator<Item = (String, Tensor)>>(iter: I) -> Self {
+        let mut c = ParamContainer::new();
+        for (n, t) in iter {
+            c.insert(n, t);
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn c2() -> ParamContainer {
+        let mut c = ParamContainer::new();
+        c.insert("w", Tensor::from_f32(vec![2], vec![1.0, 2.0]));
+        c.insert("b", Tensor::from_f32(vec![2], vec![0.5, -0.5]));
+        c
+    }
+
+    #[test]
+    fn insertion_order_preserved() {
+        let c = c2();
+        assert_eq!(c.names(), &["w".to_string(), "b".to_string()]);
+        let names: Vec<_> = c.iter().map(|(n, _)| n.to_string()).collect();
+        assert_eq!(names, vec!["w", "b"]);
+    }
+
+    #[test]
+    fn replace_keeps_position() {
+        let mut c = c2();
+        c.insert("w", Tensor::from_f32(vec![2], vec![9.0, 9.0]));
+        assert_eq!(c.names(), &["w".to_string(), "b".to_string()]);
+        assert_eq!(c.get("w").unwrap().as_f32(), &[9.0, 9.0]);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn sizes() {
+        let c = c2();
+        assert_eq!(c.total_bytes(), 16);
+        assert_eq!(c.max_entry_bytes(), 8);
+        assert_eq!(c.total_elems(), 4);
+        assert!(c.all_f32());
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = c2();
+        let b = c2();
+        a.axpy(2.0, &b);
+        assert_eq!(a.get("w").unwrap().as_f32(), &[3.0, 6.0]);
+        a.scale(0.5);
+        assert_eq!(a.get("w").unwrap().as_f32(), &[1.5, 3.0]);
+    }
+
+    #[test]
+    fn remove_reindexes() {
+        let mut c = c2();
+        c.insert("x", Tensor::from_f32(vec![1], vec![7.0]));
+        let t = c.remove("w").unwrap();
+        assert_eq!(t.as_f32(), &[1.0, 2.0]);
+        assert_eq!(c.names(), &["b".to_string(), "x".to_string()]);
+        assert_eq!(c.get("x").unwrap().as_f32(), &[7.0]);
+        assert!(c.get("w").is_none());
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = c2();
+        let mut b = c2();
+        b.get_mut("b").unwrap().as_f32_mut()[1] = 0.25;
+        assert!((a.max_abs_diff(&b) - 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,92 @@
+//! Synthetic weight materialization.
+//!
+//! Experiments that only need *byte volumes* (Tables II/III) or *value
+//! distributions* (quantization error) don't need trained weights; we
+//! materialize a [`ModelSpec`] into a [`ParamContainer`] with per-tensor
+//! seeded Gaussian values (std scaled like real init: 1/sqrt(fan_in)),
+//! so every run is reproducible and value ranges resemble checkpoints.
+
+use crate::config::model_spec::ModelSpec;
+use crate::tensor::{ParamContainer, Tensor};
+use crate::util::rng::{fnv1a, SplitMix64};
+
+/// Materialize a spec into synthetic fp32 weights.
+///
+/// Each tensor gets its own RNG stream derived from `seed` and the tensor
+/// name, so containers are identical regardless of materialization order
+/// and two calls with the same seed agree tensor-by-tensor.
+pub fn materialize(spec: &ModelSpec, seed: u64) -> ParamContainer {
+    let mut c = ParamContainer::new();
+    for p in &spec.params {
+        let mut rng = SplitMix64::new(seed ^ fnv1a(&p.name));
+        let n = p.elems() as usize;
+        let fan_in = *p.shape.last().unwrap_or(&1) as f32;
+        let std = if p.shape.len() == 1 {
+            // Norm gains hover near 1.0 in trained checkpoints.
+            0.02
+        } else {
+            (1.0 / fan_in).sqrt()
+        };
+        let mut values = vec![0f32; n];
+        rng.fill_normal(&mut values, std);
+        if p.shape.len() == 1 {
+            for v in values.iter_mut() {
+                *v += 1.0;
+            }
+        }
+        c.insert(p.name.clone(), Tensor::from_f32(p.shape.clone(), values));
+    }
+    c
+}
+
+/// Materialize only the *largest* tensor (useful to bound memory when a
+/// test needs realistic data but not a whole model).
+pub fn materialize_one(spec: &ModelSpec, name: &str, seed: u64) -> Option<Tensor> {
+    let p = spec.get(name)?;
+    let mut rng = SplitMix64::new(seed ^ fnv1a(&p.name));
+    let mut values = vec![0f32; p.elems() as usize];
+    let std = (1.0 / *p.shape.last().unwrap_or(&1) as f32).sqrt();
+    rng.fill_normal(&mut values, std);
+    Some(Tensor::from_f32(p.shape.clone(), values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_order_free() {
+        let spec = ModelSpec::llama_mini();
+        let a = materialize(&spec, 7);
+        let b = materialize(&spec, 7);
+        assert_eq!(a, b);
+        let c = materialize(&spec, 8);
+        assert!(a.max_abs_diff(&c) > 0.0);
+    }
+
+    #[test]
+    fn sizes_match_spec() {
+        let spec = ModelSpec::llama_mini();
+        let c = materialize(&spec, 1);
+        assert_eq!(c.len(), spec.params.len());
+        assert_eq!(c.total_bytes(), spec.total_bytes_f32());
+        assert!(c.all_f32());
+    }
+
+    #[test]
+    fn norm_layers_near_one() {
+        let spec = ModelSpec::llama_mini();
+        let c = materialize(&spec, 3);
+        let norm = c.get("norm").unwrap();
+        let mean: f32 = norm.as_f32().iter().sum::<f32>() / norm.elems() as f32;
+        assert!((mean - 1.0).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    fn materialize_one_matches_full() {
+        let spec = ModelSpec::llama_mini();
+        let full = materialize(&spec, 9);
+        let one = materialize_one(&spec, "layers.0.self_attn.q_proj", 9).unwrap();
+        assert_eq!(full.get("layers.0.self_attn.q_proj").unwrap(), &one);
+    }
+}

@@ -1,0 +1,214 @@
+//! Named-tensor containers — the unit of federated communication.
+//!
+//! A model (or model update) travels between server and clients as a
+//! [`ParamContainer`]: an *ordered* map of name → [`Tensor`]. Order matters
+//! twice: (1) container streaming serializes one entry at a time in this
+//! order; (2) the PJRT runtime flattens parameters into positional HLO
+//! arguments using the manifest order.
+
+pub mod container;
+pub mod init;
+pub mod safetensors;
+
+pub use container::ParamContainer;
+
+use std::fmt;
+
+/// Element type of a tensor buffer. `F32` is the framework's "original
+/// precision" (the paper's default message precision); the reduced types
+/// appear only inside quantized messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    U8,
+    I32,
+    /// Two 4-bit codes packed per byte (fp4/nf4 payloads).
+    U4x2,
+}
+
+impl DType {
+    /// Bytes per element; `U4x2` reports the *packed* size of one element
+    /// (0.5 byte) via `size_of_elems` instead.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 => 2,
+            DType::U8 => 1,
+            DType::U4x2 => 1, // per *packed* byte; use size_of_elems()
+        }
+    }
+
+    /// Total buffer bytes for `n` logical elements.
+    pub fn size_of_elems(&self, n: usize) -> usize {
+        match self {
+            DType::U4x2 => n.div_ceil(2),
+            d => n * d.byte_size(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::U8 => "u8",
+            DType::I32 => "i32",
+            DType::U4x2 => "u4x2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" | "F32" => DType::F32,
+            "f16" | "F16" => DType::F16,
+            "bf16" | "BF16" => DType::BF16,
+            "u8" | "U8" => DType::U8,
+            "i32" | "I32" => DType::I32,
+            "u4x2" => DType::U4x2,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shape + dtype metadata, independent of the buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn new(shape: Vec<usize>, dtype: DType) -> Self {
+        Self { shape, dtype }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.dtype.size_of_elems(self.elems())
+    }
+}
+
+/// A dense tensor: metadata + contiguous row-major byte buffer.
+///
+/// Buffers are raw bytes (not `Vec<f32>`) because the communication path
+/// moves quantized payloads of several dtypes; typed views are provided
+/// for the f32 fast path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub meta: TensorMeta,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, dtype: DType, data: Vec<u8>) -> Self {
+        let meta = TensorMeta::new(shape, dtype);
+        assert_eq!(
+            data.len(),
+            meta.byte_len(),
+            "buffer size mismatch for {:?}",
+            meta
+        );
+        Self { meta, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>, dtype: DType) -> Self {
+        let meta = TensorMeta::new(shape, dtype);
+        let data = vec![0u8; meta.byte_len()];
+        Self { meta, data }
+    }
+
+    /// Build from an owned f32 vec (takes the fast path, no copy of the
+    /// element data beyond the Vec reuse).
+    pub fn from_f32(shape: Vec<usize>, values: Vec<f32>) -> Self {
+        let meta = TensorMeta::new(shape, DType::F32);
+        assert_eq!(values.len(), meta.elems());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        data.extend_from_slice(crate::util::bytes::f32_slice_as_bytes(&values));
+        Self { meta, data }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.meta.elems()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Borrow the buffer as `&[f32]` (panics if dtype != F32).
+    pub fn as_f32(&self) -> &[f32] {
+        assert_eq!(self.meta.dtype, DType::F32);
+        unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.elems())
+        }
+    }
+
+    /// Borrow the buffer as `&mut [f32]` (panics if dtype != F32).
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        assert_eq!(self.meta.dtype, DType::F32);
+        let n = self.elems();
+        unsafe { std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, n) }
+    }
+
+    /// Copy out as f32 vec.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.as_f32().to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_of_elems(10), 40);
+        assert_eq!(DType::F16.size_of_elems(10), 20);
+        assert_eq!(DType::U8.size_of_elems(10), 10);
+        assert_eq!(DType::U4x2.size_of_elems(10), 5);
+        assert_eq!(DType::U4x2.size_of_elems(11), 6); // odd count rounds up
+    }
+
+    #[test]
+    fn dtype_name_roundtrip() {
+        for d in [DType::F32, DType::F16, DType::BF16, DType::U8, DType::I32, DType::U4x2] {
+            assert_eq!(DType::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_name("f64"), None);
+    }
+
+    #[test]
+    fn tensor_f32_view() {
+        let t = Tensor::from_f32(vec![2, 3], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.byte_len(), 24);
+        assert_eq!(t.as_f32()[4], 4.0);
+        let v = t.to_f32_vec();
+        assert_eq!(v[5], 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer size mismatch")]
+    fn size_mismatch_panics() {
+        Tensor::new(vec![4], DType::F32, vec![0u8; 15]);
+    }
+
+    #[test]
+    fn zeros() {
+        let t = Tensor::zeros(vec![8], DType::BF16);
+        assert_eq!(t.byte_len(), 16);
+        assert!(t.data.iter().all(|&b| b == 0));
+    }
+}

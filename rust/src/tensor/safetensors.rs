@@ -1,0 +1,276 @@
+//! Safetensors-compatible file reader/writer (hand-rolled; offline image
+//! carries no safetensors crate).
+//!
+//! Format: `u64 little-endian header length` + `JSON header` + raw data.
+//! Header maps tensor name → {dtype, shape, data_offsets:[begin,end]},
+//! offsets relative to the data section. The special `__metadata__` key
+//! carries string key/values. This is the on-disk representation used by
+//! *file streaming* (the paper's third transmission mode): a container is
+//! written once to disk, then streamed chunk-by-chunk with O(chunk) memory.
+
+use crate::tensor::{DType, ParamContainer, Tensor};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+fn dtype_tag(d: DType) -> &'static str {
+    match d {
+        DType::F32 => "F32",
+        DType::F16 => "F16",
+        DType::BF16 => "BF16",
+        DType::U8 => "U8",
+        DType::I32 => "I32",
+        // Not a standard safetensors dtype; we store packed nibbles as U8
+        // with a shape in bytes, flagged via metadata. Kept simple: the
+        // container path never writes U4x2 to disk (filters dequantize
+        // before persistence).
+        DType::U4x2 => "U8",
+    }
+}
+
+fn dtype_from_tag(s: &str) -> Result<DType> {
+    DType::from_name(match s {
+        "F32" => "f32",
+        "F16" => "f16",
+        "BF16" => "bf16",
+        "U8" => "u8",
+        "I32" => "i32",
+        other => bail!("unsupported safetensors dtype {other}"),
+    })
+    .ok_or_else(|| anyhow!("bad dtype"))
+}
+
+/// Build the JSON header for a container. Returns (header_bytes, offsets)
+/// where offsets[i] is the data-section offset of tensor i.
+fn build_header(c: &ParamContainer, meta: &BTreeMap<String, String>) -> (Vec<u8>, Vec<u64>) {
+    let mut obj = BTreeMap::new();
+    if !meta.is_empty() {
+        let mm: BTreeMap<String, Json> = meta
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        obj.insert("__metadata__".to_string(), Json::Obj(mm));
+    }
+    let mut offsets = Vec::with_capacity(c.len());
+    let mut cur = 0u64;
+    for (name, t) in c.iter() {
+        offsets.push(cur);
+        let end = cur + t.byte_len() as u64;
+        obj.insert(
+            name.to_string(),
+            Json::obj(vec![
+                ("dtype", Json::str(dtype_tag(t.meta.dtype))),
+                (
+                    "shape",
+                    Json::Arr(t.meta.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                (
+                    "data_offsets",
+                    Json::Arr(vec![Json::num(cur as f64), Json::num(end as f64)]),
+                ),
+            ]),
+        );
+        cur = end;
+    }
+    let text = Json::Obj(obj).to_string();
+    (text.into_bytes(), offsets)
+}
+
+/// Write a container to a safetensors file. Memory: O(max tensor), the
+/// data section is written tensor-by-tensor.
+pub fn write_file(path: &Path, c: &ParamContainer, meta: &BTreeMap<String, String>) -> Result<()> {
+    let (header, _) = build_header(c, meta);
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(&(header.len() as u64).to_le_bytes())?;
+    w.write_all(&header)?;
+    for (_, t) in c.iter() {
+        w.write_all(&t.data)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Parsed header entry.
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Offsets into the data section.
+    pub begin: u64,
+    pub end: u64,
+}
+
+/// Header of a safetensors file: entry list (in offset order) + metadata.
+#[derive(Debug, Clone)]
+pub struct Header {
+    pub entries: Vec<EntryInfo>,
+    pub metadata: BTreeMap<String, String>,
+    /// Byte offset of the data section in the file.
+    pub data_start: u64,
+}
+
+/// Read and validate only the header (O(header) memory).
+pub fn read_header(path: &Path) -> Result<Header> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut len8 = [0u8; 8];
+    f.read_exact(&mut len8)?;
+    let hlen = u64::from_le_bytes(len8);
+    if hlen > 256 * 1024 * 1024 {
+        bail!("unreasonable safetensors header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen as usize];
+    f.read_exact(&mut hbuf)?;
+    let text = std::str::from_utf8(&hbuf).context("header not utf-8")?;
+    let json = Json::parse(text).map_err(|e| anyhow!("header json: {e}"))?;
+    let obj = json.as_obj().ok_or_else(|| anyhow!("header not an object"))?;
+
+    let mut metadata = BTreeMap::new();
+    let mut entries = Vec::new();
+    for (k, v) in obj {
+        if k == "__metadata__" {
+            if let Some(m) = v.as_obj() {
+                for (mk, mv) in m {
+                    metadata.insert(mk.clone(), mv.as_str().unwrap_or_default().to_string());
+                }
+            }
+            continue;
+        }
+        let dtype = dtype_from_tag(
+            v.get("dtype")
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("{k}: missing dtype"))?,
+        )?;
+        let shape: Vec<usize> = v
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("{k}: missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("{k}: bad dim")))
+            .collect::<Result<_>>()?;
+        let offs = v
+            .get("data_offsets")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("{k}: missing data_offsets"))?;
+        let begin = offs
+            .first()
+            .and_then(|j| j.as_u64())
+            .ok_or_else(|| anyhow!("{k}: bad begin"))?;
+        let end = offs
+            .get(1)
+            .and_then(|j| j.as_u64())
+            .ok_or_else(|| anyhow!("{k}: bad end"))?;
+        let expect = dtype.size_of_elems(shape.iter().product());
+        if end - begin != expect as u64 {
+            bail!("{k}: offsets span {} but dtype/shape imply {expect}", end - begin);
+        }
+        entries.push(EntryInfo {
+            name: k.clone(),
+            dtype,
+            shape,
+            begin,
+            end,
+        });
+    }
+    entries.sort_by_key(|e| e.begin);
+    // Validate contiguity (no holes / overlaps).
+    let mut cur = 0u64;
+    for e in &entries {
+        if e.begin != cur {
+            bail!("{}: data section hole/overlap at {}", e.name, e.begin);
+        }
+        cur = e.end;
+    }
+    Ok(Header {
+        entries,
+        metadata,
+        data_start: 8 + hlen,
+    })
+}
+
+/// Load a whole file into a container (O(file) memory — the "regular"
+/// path; file streaming uses [`read_header`] + chunked reads instead).
+pub fn read_file(path: &Path) -> Result<(ParamContainer, BTreeMap<String, String>)> {
+    let header = read_header(path)?;
+    let mut f = std::fs::File::open(path)?;
+    f.seek(SeekFrom::Start(header.data_start))?;
+    let mut c = ParamContainer::new();
+    for e in &header.entries {
+        let mut data = vec![0u8; (e.end - e.begin) as usize];
+        f.read_exact(&mut data)?;
+        c.insert(e.name.clone(), Tensor::new(e.shape.clone(), e.dtype, data));
+    }
+    Ok((c, header.metadata))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::tensor::init::materialize;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("flare_st_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_container() {
+        let spec = ModelSpec::llama_mini();
+        let c = materialize(&spec, 5);
+        let path = tmp("roundtrip");
+        let mut meta = BTreeMap::new();
+        meta.insert("format".to_string(), "pt".to_string());
+        write_file(&path, &c, &meta).unwrap();
+        let (c2, meta2) = read_file(&path).unwrap();
+        assert_eq!(meta2.get("format").map(|s| s.as_str()), Some("pt"));
+        assert_eq!(c.len(), c2.len());
+        for (name, t) in c.iter() {
+            assert_eq!(c2.get(name).unwrap(), t, "{name}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_only_read_is_cheap() {
+        let spec = ModelSpec::llama_mini();
+        let c = materialize(&spec, 6);
+        let path = tmp("header");
+        write_file(&path, &c, &BTreeMap::new()).unwrap();
+        let h = read_header(&path).unwrap();
+        assert_eq!(h.entries.len(), c.len());
+        // entries sorted by offset and contiguous
+        let total: u64 = h.entries.iter().map(|e| e.end - e.begin).sum();
+        assert_eq!(total, c.total_bytes());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_offsets_rejected() {
+        let path = tmp("corrupt");
+        // handcraft a header whose offsets disagree with the shape
+        let hdr = r#"{"w":{"dtype":"F32","shape":[2],"data_offsets":[0,4]}}"#;
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(hdr.len() as u64).to_le_bytes());
+        buf.extend_from_slice(hdr.as_bytes());
+        buf.extend_from_slice(&[0u8; 4]);
+        std::fs::write(&path, &buf).unwrap();
+        assert!(read_file(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_container() {
+        let path = tmp("empty");
+        write_file(&path, &ParamContainer::new(), &BTreeMap::new()).unwrap();
+        let (c, _) = read_file(&path).unwrap();
+        assert!(c.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,153 @@
+//! Byte-size formatting and little-endian scalar encode/decode helpers
+//! shared by the wire format, safetensors reader and quant codecs.
+
+/// Format a byte count the way the paper's tables do: MB with 2 decimals
+/// (1 MB = 2^20 bytes).
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// Human-readable size (B / KB / MB / GB).
+pub fn human(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Parse "64KB", "1MB", "2GB", "4096" into bytes.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("GB") {
+        (p, 1024u64 * 1024 * 1024)
+    } else if let Some(p) = s.strip_suffix("MB") {
+        (p, 1024 * 1024)
+    } else if let Some(p) = s.strip_suffix("KB") {
+        (p, 1024)
+    } else if let Some(p) = s.strip_suffix('B') {
+        (p, 1)
+    } else {
+        (s, 1)
+    };
+    let v: f64 = num.trim().parse().ok()?;
+    if v < 0.0 {
+        return None;
+    }
+    Some((v * mult as f64) as u64)
+}
+
+// -- little-endian scalar helpers -------------------------------------------
+
+#[inline]
+pub fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+#[inline]
+pub fn get_u16(buf: &[u8], at: usize) -> Option<u16> {
+    buf.get(at..at + 2).map(|b| u16::from_le_bytes([b[0], b[1]]))
+}
+
+#[inline]
+pub fn get_u32(buf: &[u8], at: usize) -> Option<u32> {
+    buf.get(at..at + 4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+#[inline]
+pub fn get_u64(buf: &[u8], at: usize) -> Option<u64> {
+    buf.get(at..at + 8).map(|b| {
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    })
+}
+
+#[inline]
+pub fn get_f32(buf: &[u8], at: usize) -> Option<f32> {
+    get_u32(buf, at).map(f32::from_bits)
+}
+
+/// Reinterpret a `&[f32]` as bytes (little-endian hosts only, which is all
+/// we target; checked by a unit test).
+pub fn f32_slice_as_bytes(xs: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Decode a little-endian f32 byte buffer into a Vec<f32>.
+pub fn bytes_to_f32_vec(b: &[u8]) -> Vec<f32> {
+    assert_eq!(b.len() % 4, 0, "f32 buffer length must be a multiple of 4");
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mb_matches_paper_convention() {
+        // embed_tokens of Llama-3.2-1B: 128256*2048 fp32 = 1002.0 MB
+        let bytes = 128_256u64 * 2048 * 4;
+        assert!((mb(bytes) - 1002.0).abs() < 0.005, "{}", mb(bytes));
+    }
+
+    #[test]
+    fn parse_sizes() {
+        assert_eq!(parse_size("1MB"), Some(1024 * 1024));
+        assert_eq!(parse_size("64KB"), Some(64 * 1024));
+        assert_eq!(parse_size("2GB"), Some(2u64 << 30));
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size("1.5MB"), Some(3 * 512 * 1024));
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn human_readable() {
+        assert_eq!(human(512), "512 B");
+        assert_eq!(human(1536), "1.50 KB");
+    }
+
+    #[test]
+    fn le_roundtrip() {
+        let mut buf = Vec::new();
+        put_u16(&mut buf, 0xBEEF);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, 0x0123_4567_89AB_CDEF);
+        put_f32(&mut buf, -1.25);
+        assert_eq!(get_u16(&buf, 0), Some(0xBEEF));
+        assert_eq!(get_u32(&buf, 2), Some(0xDEAD_BEEF));
+        assert_eq!(get_u64(&buf, 6), Some(0x0123_4567_89AB_CDEF));
+        assert_eq!(get_f32(&buf, 14), Some(-1.25));
+        assert_eq!(get_u32(&buf, 15), None);
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let xs = vec![1.0f32, -2.5, 3.25];
+        let b = f32_slice_as_bytes(&xs);
+        assert_eq!(bytes_to_f32_vec(b), xs);
+    }
+}

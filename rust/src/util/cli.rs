@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (the offline crate set has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Subcommand dispatch is done by the caller on `Args::positional[0]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Which flag names the parser should treat as boolean (no value).
+    bool_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `bool_flags` lists options that never take a value.
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I, bool_flags: &[&'static str]) -> Args {
+        let mut a = Args {
+            bool_flags: bool_flags.to_vec(),
+            ..Default::default()
+        };
+        let mut it = iter.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if a.bool_flags.contains(&body) {
+                    a.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        a.flags.push(body.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        a.options.insert(body.to_string(), v);
+                    }
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        a
+    }
+
+    pub fn from_env(bool_flags: &[&'static str]) -> Args {
+        Self::parse(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Size option with unit suffix, e.g. `--chunk 1MB`.
+    pub fn get_size(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(crate::util::bytes::parse_size)
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "full"])
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = parse("simulate --clients 4 --rounds=10 --verbose job.json");
+        assert_eq!(a.positional, vec!["simulate", "job.json"]);
+        assert_eq!(a.get_usize("clients", 0), 4);
+        assert_eq!(a.get_usize("rounds", 0), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("run --full");
+        assert!(a.flag("full"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--alpha --beta 3");
+        assert!(a.flag("alpha"));
+        assert_eq!(a.get_usize("beta", 0), 3);
+    }
+
+    #[test]
+    fn size_options() {
+        let a = parse("--chunk 4MB");
+        assert_eq!(a.get_size("chunk", 0), 4 << 20);
+        assert_eq!(a.get_size("missing", 77), 77);
+    }
+}

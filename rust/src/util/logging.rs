@@ -1,0 +1,61 @@
+//! Leveled stderr logger backing the `log` facade.
+//!
+//! `FLARE_LOG=debug|info|warn|error` selects verbosity (default info).
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _meta: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the global logger (idempotent; repeated calls are no-ops).
+pub fn init() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let level = match std::env::var("FLARE_LOG").as_deref() {
+            Ok("trace") => LevelFilter::Trace,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("error") => LevelFilter::Error,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_boxed_logger(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_twice_is_fine() {
+        super::init();
+        super::init();
+        log::info!("logger alive");
+    }
+}

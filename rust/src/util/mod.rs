@@ -1,0 +1,31 @@
+//! Shared utilities: deterministic RNG, JSON, CLI parsing, byte helpers,
+//! logging and the mini property-testing harness.
+
+pub mod bench;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Simple scope timer for coarse phase timing in examples/benches.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}

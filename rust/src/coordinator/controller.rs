@@ -11,7 +11,7 @@ use super::RoundStats;
 use crate::config::JobConfig;
 use crate::filter::{FilterContext, FilterPoint, FilterSet};
 use crate::metrics::Report;
-use crate::sfm::SfmEndpoint;
+use crate::sfm::{ResumePolicy, SfmEndpoint};
 use crate::streaming::{self, WeightsMsg};
 use crate::tensor::ParamContainer;
 use anyhow::{anyhow, bail, Context, Result};
@@ -74,6 +74,11 @@ impl Controller {
             .sum()
     }
 
+    /// Sum a reliability counter across all client endpoints.
+    fn reliability_sum(&self, pick: impl Fn(&crate::sfm::endpoint::EndpointStats) -> u64) -> u64 {
+        self.clients.iter().map(|c| pick(&c.ep.stats)).sum()
+    }
+
     /// Run the ScatterAndGather workflow to completion. Returns the final
     /// global weights and fills `self.rounds` + the report's series:
     /// `global_loss` (per round) and `client_loss` (per local step).
@@ -111,10 +116,22 @@ impl Controller {
                     }
                     .to_json(),
                 )?;
-                streaming::send_weights(&c.ep, &msg, mode, Some(&self.spool_dir))
+                if self.job.reliable {
+                    // Resumable protocol: completion ack is built in.
+                    streaming::send_weights_resumable(
+                        &c.ep,
+                        &msg,
+                        mode,
+                        Some(&self.spool_dir),
+                        &ResumePolicy::default(),
+                    )
                     .with_context(|| format!("send task data to {}", c.name))?;
-                // transfer-level ack from the receiver
-                let _ = c.ep.recv_event(Some(Duration::from_secs(600)))?;
+                } else {
+                    streaming::send_weights(&c.ep, &msg, mode, Some(&self.spool_dir))
+                        .with_context(|| format!("send task data to {}", c.name))?;
+                    // transfer-level ack from the receiver
+                    let _ = c.ep.recv_event(Some(Duration::from_secs(600)))?;
+                }
             }
 
             // -- gather -------------------------------------------------------
@@ -136,8 +153,17 @@ impl Controller {
                 if r_round != round {
                     bail!("client {} answered round {r_round}, expected {round}", c.name);
                 }
-                let (msg, _stats) = streaming::recv_weights(&c.ep, Some(&self.spool_dir))
-                    .with_context(|| format!("receive result from {}", c.name))?;
+                let (msg, _stats) = if self.job.reliable {
+                    streaming::recv_weights_resumable(
+                        &c.ep,
+                        Some(&self.spool_dir),
+                        Some(Duration::from_secs(600)),
+                    )
+                    .with_context(|| format!("receive result from {}", c.name))?
+                } else {
+                    streaming::recv_weights(&c.ep, Some(&self.spool_dir))
+                        .with_context(|| format!("receive result from {}", c.name))?
+                };
                 let mut ctx = FilterContext {
                     round,
                     peer: c.name.clone(),
@@ -194,6 +220,30 @@ impl Controller {
         report.set_scalar(
             "final_loss",
             self.rounds.last().map(|r| r.mean_loss as f64).unwrap_or(f64::NAN),
+        );
+        // Reliability counters (all zero on loss-free links / legacy
+        // transfers) — the server-side view of retry/resume health.
+        report.set_scalar(
+            "retransmit_frames_total",
+            self.reliability_sum(|s| s.retransmit_frames.load(Ordering::Relaxed)) as f64,
+        );
+        report.set_scalar(
+            "retransmit_bytes_total",
+            self.reliability_sum(|s| s.retransmit_bytes.load(Ordering::Relaxed)) as f64,
+        );
+        report.set_scalar(
+            "nacks_total",
+            self.reliability_sum(|s| {
+                s.nacks_sent.load(Ordering::Relaxed) + s.nacks_received.load(Ordering::Relaxed)
+            }) as f64,
+        );
+        report.set_scalar(
+            "resume_probes_total",
+            self.reliability_sum(|s| s.resume_probes.load(Ordering::Relaxed)) as f64,
+        );
+        report.set_scalar(
+            "dup_chunks_total",
+            self.reliability_sum(|s| s.dup_chunks.load(Ordering::Relaxed)) as f64,
         );
         Ok(global)
     }

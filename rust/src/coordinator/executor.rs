@@ -4,7 +4,7 @@
 use super::protocol::CtrlMsg;
 use super::LocalTrainer;
 use crate::filter::{FilterContext, FilterPoint, FilterSet};
-use crate::sfm::SfmEndpoint;
+use crate::sfm::{ResumePolicy, SfmEndpoint};
 use crate::streaming::{self, WeightsMsg};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -22,6 +22,9 @@ pub struct Executor<T: LocalTrainer> {
     /// Streaming mode for outbound results (mirrors the job's mode; set
     /// via [`Executor::with_mode`], defaults to Regular).
     mode: Option<crate::config::StreamingMode>,
+    /// Use the resumable out-of-order protocol for weight transfers
+    /// (mirrors the job's `reliable` flag).
+    reliable: bool,
 }
 
 impl<T: LocalTrainer> Executor<T> {
@@ -40,6 +43,7 @@ impl<T: LocalTrainer> Executor<T> {
             spool_dir,
             timeout: Duration::from_secs(600),
             mode: None,
+            reliable: false,
         }
     }
 
@@ -72,8 +76,17 @@ impl<T: LocalTrainer> Executor<T> {
                 CtrlMsg::Done => return Ok(rounds),
                 other => bail!("unexpected ctrl {other:?}"),
             };
-            let (msg, _stats) = streaming::recv_weights(&self.ep, Some(&self.spool_dir))
-                .context("receive task data")?;
+            let (msg, _stats) = if self.reliable {
+                streaming::recv_weights_resumable(
+                    &self.ep,
+                    Some(&self.spool_dir),
+                    Some(self.timeout),
+                )
+                .context("receive task data")?
+            } else {
+                streaming::recv_weights(&self.ep, Some(&self.spool_dir))
+                    .context("receive task data")?
+            };
 
             let mut ctx = FilterContext {
                 round,
@@ -114,9 +127,20 @@ impl<T: LocalTrainer> Executor<T> {
                 }
                 .to_json(),
             )?;
-            streaming::send_weights(&self.ep, &out, self.job_mode(), Some(&self.spool_dir))
+            if self.reliable {
+                streaming::send_weights_resumable(
+                    &self.ep,
+                    &out,
+                    self.job_mode(),
+                    Some(&self.spool_dir),
+                    &ResumePolicy::default(),
+                )
                 .context("send task result")?;
-            let _ = self.ep.recv_event(Some(self.timeout))?; // transfer ack
+            } else {
+                streaming::send_weights(&self.ep, &out, self.job_mode(), Some(&self.spool_dir))
+                    .context("send task result")?;
+                let _ = self.ep.recv_event(Some(self.timeout))?; // transfer ack
+            }
             rounds += 1;
         }
     }
@@ -133,6 +157,11 @@ impl<T: LocalTrainer> Executor<T> {
 impl<T: LocalTrainer> Executor<T> {
     pub fn with_mode(mut self, mode: crate::config::StreamingMode) -> Self {
         self.mode = Some(mode);
+        self
+    }
+
+    pub fn with_reliable(mut self, reliable: bool) -> Self {
+        self.reliable = reliable;
         self
     }
 }

@@ -263,7 +263,8 @@ fn cmd_client(args: &Args) -> Result<()> {
         trainer,
         spool,
     )
-    .with_mode(job.streaming);
+    .with_mode(job.streaming)
+    .with_reliable(job.reliable);
     let rounds = exec.run()?;
     println!("completed {rounds} rounds");
     Ok(())

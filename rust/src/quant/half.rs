@@ -166,8 +166,11 @@ pub fn encode_f16(src: &[f32], dst: &mut Vec<u8>) {
     }
 }
 
+/// Decode f16 bytes; a trailing odd byte is ignored (callers validate
+/// payload sizes — `quant::dequantize` — so this stays panic-free on
+/// corrupt wire input).
 pub fn decode_f16(src: &[u8], dst: &mut Vec<f32>) {
-    assert_eq!(src.len() % 2, 0);
+    let src = &src[..src.len() - src.len() % 2];
     let start = dst.len();
     dst.resize(start + src.len() / 2, 0.0);
     #[cfg(target_arch = "x86_64")]
@@ -188,8 +191,9 @@ pub fn encode_bf16(src: &[f32], dst: &mut Vec<u8>) {
     }
 }
 
+/// Decode bf16 bytes; a trailing odd byte is ignored (see `decode_f16`).
 pub fn decode_bf16(src: &[u8], dst: &mut Vec<f32>) {
-    assert_eq!(src.len() % 2, 0);
+    let src = &src[..src.len() - src.len() % 2];
     let start = dst.len();
     dst.resize(start + src.len() / 2, 0.0);
     for (o, c) in dst[start..].iter_mut().zip(src.chunks_exact(2)) {

@@ -95,8 +95,20 @@ pub fn quantize(scheme: QuantScheme, t: &Tensor) -> Result<QuantizedTensor> {
 }
 
 /// Dequantize back to fp32 ("original precision").
+///
+/// Defensive on malformed input: truncated payloads and inconsistent
+/// metadata produce `Err`, never a panic — wire-received tensors hit
+/// this path directly.
 pub fn dequantize(q: &QuantizedTensor) -> Result<Tensor> {
     let n = q.orig.elems();
+    let expect = payload_dtype(q.scheme)?.size_of_elems(n);
+    if q.payload.len() != expect {
+        bail!(
+            "{:?}: payload {} bytes, expected {expect} for {n} elems",
+            q.scheme,
+            q.payload.len()
+        );
+    }
     let mut out: Vec<f32> = Vec::with_capacity(n);
     match q.scheme {
         QuantScheme::None => bail!("QuantScheme::None has no codec"),

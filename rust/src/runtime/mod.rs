@@ -6,204 +6,270 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `compile` → `execute`. HLO *text* is the interchange format because
 //! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos.
+//!
+//! The whole PJRT surface is behind the `pjrt` cargo feature: the
+//! transport / quantization / coordinator layers (and their tests) build
+//! without the native xla_extension library. Without the feature,
+//! [`PjrtTrainer`] is a stub whose constructor returns a clear error.
 
 pub mod artifacts;
-pub mod training;
-
-use crate::tensor::{DType, Tensor};
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::Path;
 
 pub use artifacts::Manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod training;
+
+#[cfg(feature = "pjrt")]
 pub use training::PjrtTrainer;
 
-/// A PJRT execution context. NOT `Send` (the underlying client is
-/// reference-counted thread-locally) — construct one per thread.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{
+    literal_scalar_f32, literal_to_tensor, tensor_to_literal, tokens_to_literal, Executable,
+    Runtime,
+};
 
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
-        log::info!(
-            "PJRT client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Runtime { client })
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use crate::tensor::{DType, Tensor};
+    use anyhow::{anyhow, bail, Context, Result};
+    use std::path::Path;
+
+    /// A PJRT execution context. NOT `Send` (the underlying client is
+    /// reference-counted thread-locally) — construct one per thread.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+            log::info!(
+                "PJRT client: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            Ok(Runtime { client })
+        }
 
-    /// Load + compile an HLO-text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(wrap_xla)
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
             .map_err(wrap_xla)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_name()
-                .map(|n| n.to_string_lossy().into_owned())
-                .unwrap_or_default(),
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(wrap_xla)
+                .with_context(|| format!("compile {}", path.display()))?;
+            Ok(Executable {
+                exe,
+                name: path
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            })
+        }
+    }
+
+    /// A compiled executable. Outputs are always lowered with
+    /// `return_tuple=True`, so `run` returns the decomposed tuple elements.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Executable {
+        /// Execute with literal inputs; returns the tuple elements.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self.exe.execute::<xla::Literal>(inputs).map_err(wrap_xla)?;
+            let out = result
+                .first()
+                .and_then(|d| d.first())
+                .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?
+                .to_literal_sync()
+                .map_err(wrap_xla)?;
+            out.to_tuple().map_err(wrap_xla)
+        }
+    }
+
+    fn element_type(d: DType) -> Result<xla::ElementType> {
+        Ok(match d {
+            DType::F32 => xla::ElementType::F32,
+            DType::F16 => xla::ElementType::F16,
+            DType::BF16 => xla::ElementType::Bf16,
+            DType::U8 => xla::ElementType::U8,
+            DType::I32 => xla::ElementType::S32,
+            DType::U4x2 => bail!("packed 4-bit tensors cannot cross the PJRT boundary"),
         })
     }
-}
 
-/// A compiled executable. Outputs are always lowered with
-/// `return_tuple=True`, so `run` returns the decomposed tuple elements.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with literal inputs; returns the tuple elements.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(inputs).map_err(wrap_xla)?;
-        let out = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?
-            .to_literal_sync()
-            .map_err(wrap_xla)?;
-        out.to_tuple().map_err(wrap_xla)
-    }
-}
-
-fn element_type(d: DType) -> Result<xla::ElementType> {
-    Ok(match d {
-        DType::F32 => xla::ElementType::F32,
-        DType::F16 => xla::ElementType::F16,
-        DType::BF16 => xla::ElementType::Bf16,
-        DType::U8 => xla::ElementType::U8,
-        DType::I32 => xla::ElementType::S32,
-        DType::U4x2 => bail!("packed 4-bit tensors cannot cross the PJRT boundary"),
-    })
-}
-
-/// Tensor → Literal.
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    xla::Literal::create_from_shape_and_untyped_data(
-        element_type(t.meta.dtype)?,
-        &t.meta.shape,
-        &t.data,
-    )
-    .map_err(wrap_xla)
-}
-
-/// i32 token batch → Literal of shape `dims`.
-pub fn tokens_to_literal(tokens: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    if tokens.len() != n {
-        bail!("token count {} != shape product {n}", tokens.len());
-    }
-    let bytes =
-        unsafe { std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4) };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
-        .map_err(wrap_xla)
-}
-
-/// Literal → f32 Tensor with the given shape.
-pub fn literal_to_tensor(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
-    let vals: Vec<f32> = lit.to_vec::<f32>().map_err(wrap_xla)?;
-    let expect: usize = shape.iter().product();
-    if vals.len() != expect {
-        bail!("literal has {} elements, shape wants {expect}", vals.len());
-    }
-    Ok(Tensor::from_f32(shape, vals))
-}
-
-/// Scalar f32 from a literal.
-pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
-    lit.to_vec::<f32>()
-        .map_err(wrap_xla)?
-        .first()
-        .copied()
-        .ok_or_else(|| anyhow!("empty literal"))
-}
-
-/// The xla crate's error type doesn't implement std::error::Error's
-/// source chain the way anyhow wants; stringify at the boundary.
-fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
-    anyhow!("xla: {e:?}")
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts_dir() -> Option<std::path::PathBuf> {
-        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        p.join("manifest.json").exists().then_some(p)
-    }
-
-    #[test]
-    fn literal_roundtrip() {
-        let t = Tensor::from_f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
-        let lit = tensor_to_literal(&t).unwrap();
-        let back = literal_to_tensor(&lit, vec![2, 3]).unwrap();
-        assert_eq!(back, t);
-    }
-
-    #[test]
-    fn tokens_literal_shape_checked() {
-        assert!(tokens_to_literal(&[1, 2, 3], &[2, 2]).is_err());
-        assert!(tokens_to_literal(&[1, 2, 3, 4], &[2, 2]).is_ok());
-    }
-
-    #[test]
-    fn load_and_run_quant_kernel() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        let rt = Runtime::cpu().unwrap();
-        let exe = rt
-            .load_hlo_text(&dir.join("kernel_quant_blockwise8.hlo.txt"))
-            .unwrap();
-        let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
-        let n = manifest.kernel_elems;
-        let mut rng = crate::util::rng::SplitMix64::new(5);
-        let mut vals = vec![0f32; n];
-        rng.fill_normal(&mut vals, 0.05);
-        let input = Tensor::from_f32(vec![n], vals.clone());
-        let cb = crate::quant::codebook::dynamic_map_8bit();
-        let th = Tensor::from_f32(vec![cb.len() - 1], cb.thresholds().to_vec());
-        let order: Vec<i32> = cb.sorted_codes().iter().map(|&c| c as i32).collect();
-        let order_bytes: Vec<u8> = order.iter().flat_map(|v| v.to_le_bytes()).collect();
-        let order_lit = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::S32,
-            &[order.len()],
-            &order_bytes,
+    /// Tensor → Literal.
+    pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            element_type(t.meta.dtype)?,
+            &t.meta.shape,
+            &t.data,
         )
-        .unwrap();
-        let out = exe
-            .run(&[
-                tensor_to_literal(&input).unwrap(),
-                tensor_to_literal(&th).unwrap(),
-                order_lit,
-            ])
+        .map_err(wrap_xla)
+    }
+
+    /// i32 token batch → Literal of shape `dims`.
+    pub fn tokens_to_literal(tokens: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if tokens.len() != n {
+            bail!("token count {} != shape product {n}", tokens.len());
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
+        };
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+            .map_err(wrap_xla)
+    }
+
+    /// Literal → f32 Tensor with the given shape.
+    pub fn literal_to_tensor(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+        let vals: Vec<f32> = lit.to_vec::<f32>().map_err(wrap_xla)?;
+        let expect: usize = shape.iter().product();
+        if vals.len() != expect {
+            bail!("literal has {} elements, shape wants {expect}", vals.len());
+        }
+        Ok(Tensor::from_f32(shape, vals))
+    }
+
+    /// Scalar f32 from a literal.
+    pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+        lit.to_vec::<f32>()
+            .map_err(wrap_xla)?
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty literal"))
+    }
+
+    /// The xla crate's error type doesn't implement std::error::Error's
+    /// source chain the way anyhow wants; stringify at the boundary.
+    fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
+        anyhow!("xla: {e:?}")
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::tensor::Tensor;
+
+        fn artifacts_dir() -> Option<std::path::PathBuf> {
+            let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            p.join("manifest.json").exists().then_some(p)
+        }
+
+        #[test]
+        fn literal_roundtrip() {
+            let t = Tensor::from_f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            let lit = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&lit, vec![2, 3]).unwrap();
+            assert_eq!(back, t);
+        }
+
+        #[test]
+        fn tokens_literal_shape_checked() {
+            assert!(tokens_to_literal(&[1, 2, 3], &[2, 2]).is_err());
+            assert!(tokens_to_literal(&[1, 2, 3, 4], &[2, 2]).is_ok());
+        }
+
+        #[test]
+        fn load_and_run_quant_kernel() {
+            let Some(dir) = artifacts_dir() else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            let rt = Runtime::cpu().unwrap();
+            let exe = rt
+                .load_hlo_text(&dir.join("kernel_quant_blockwise8.hlo.txt"))
+                .unwrap();
+            let manifest = crate::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
+            let n = manifest.kernel_elems;
+            let mut rng = crate::util::rng::SplitMix64::new(5);
+            let mut vals = vec![0f32; n];
+            rng.fill_normal(&mut vals, 0.05);
+            let input = Tensor::from_f32(vec![n], vals.clone());
+            let cb = crate::quant::codebook::dynamic_map_8bit();
+            let th = Tensor::from_f32(vec![cb.len() - 1], cb.thresholds().to_vec());
+            let order: Vec<i32> = cb.sorted_codes().iter().map(|&c| c as i32).collect();
+            let order_bytes: Vec<u8> = order.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let order_lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                &[order.len()],
+                &order_bytes,
+            )
             .unwrap();
-        assert_eq!(out.len(), 2);
-        let codes: Vec<u8> = out[0].to_vec::<u8>().unwrap();
-        assert_eq!(codes.len(), n);
-        // Cross-validate against the native Rust codec: identical codes.
-        let (rust_codes, rust_meta) = crate::quant::blockwise::encode_8bit(&vals);
-        assert_eq!(codes, rust_codes, "pallas and rust codecs disagree");
-        let absmax: Vec<f32> = out[1].to_vec::<f32>().unwrap();
-        assert_eq!(absmax, rust_meta.absmax);
+            let out = exe
+                .run(&[
+                    tensor_to_literal(&input).unwrap(),
+                    tensor_to_literal(&th).unwrap(),
+                    order_lit,
+                ])
+                .unwrap();
+            assert_eq!(out.len(), 2);
+            let codes: Vec<u8> = out[0].to_vec::<u8>().unwrap();
+            assert_eq!(codes.len(), n);
+            // Cross-validate against the native Rust codec: identical codes.
+            let (rust_codes, rust_meta) = crate::quant::blockwise::encode_8bit(&vals);
+            assert_eq!(codes, rust_codes, "pallas and rust codecs disagree");
+            let absmax: Vec<f32> = out[1].to_vec::<f32>().unwrap();
+            assert_eq!(absmax, rust_meta.absmax);
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::coordinator::LocalTrainer;
+    use crate::data::corpus::SftCorpus;
+    use crate::tensor::ParamContainer;
+    use anyhow::{bail, Result};
+    use std::path::Path;
+
+    /// Stub for builds without the `pjrt` feature. Construction fails with
+    /// a clear message instead of a link error, so the CLI / examples /
+    /// benches that *offer* the PJRT trainer still compile and the mock
+    /// trainer paths keep working.
+    pub struct PjrtTrainer {
+        _private: (),
+    }
+
+    impl PjrtTrainer {
+        pub fn new(
+            _artifacts_dir: &Path,
+            _model: &str,
+            _corpus: SftCorpus,
+            _shard: Vec<usize>,
+            _seed: u64,
+        ) -> Result<PjrtTrainer> {
+            bail!(
+                "flare was built without the `pjrt` feature; rebuild with \
+                 `cargo build --features pjrt` to execute the AOT train step"
+            )
+        }
+    }
+
+    impl LocalTrainer for PjrtTrainer {
+        fn train(
+            &mut self,
+            _weights: &ParamContainer,
+            _steps: usize,
+            _round: usize,
+        ) -> Result<(ParamContainer, Vec<f32>)> {
+            bail!("pjrt feature disabled")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtTrainer;

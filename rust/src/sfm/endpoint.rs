@@ -6,20 +6,40 @@
 //! transmission, one per container entry for container streaming, one per
 //! file for file streaming. DATA payloads are capped at `chunk_bytes`
 //! (default 1 MB, the paper's setting) and optionally deflate-compressed.
+//!
+//! Two receive disciplines share the same frame format:
+//!
+//! * **Legacy / ordered** (`send_blob` / `recv_blob` / `recv_event`
+//!   loops): chunks are appended in arrival order; any loss is fatal.
+//! * **Reliable / out-of-order** (`send_reliable` / `recv_reliable`):
+//!   DATA frames are position-addressed (`Frame::offset`, unit index in
+//!   `Frame::seq`); the receiver keeps a [`ChunkTable`] bitmap per unit,
+//!   tolerates reordering and duplicates, NACKs precise missing ranges,
+//!   and a reconnecting sender resumes from the first missing chunk
+//!   instead of restarting (see DESIGN.md §Resume).
 
 use super::driver::Driver;
 use super::frame::{flags, Frame, FrameType};
 use crate::memory::{TrackedBuf, COMM_GAUGE};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Default wire chunk size: 1 MB (paper §I).
 pub const DEFAULT_CHUNK: usize = 1 << 20;
+
+/// Cap on units listed in one NACK frame (further incomplete units are
+/// reported in later NACK rounds).
+const MAX_NACK_UNITS: usize = 16;
+/// Cap on missing ranges listed per unit in one NACK frame.
+const MAX_NACK_RANGES: usize = 64;
+/// Receiver persists partial state (sink checkpoint) every this many
+/// freshly received chunks.
+const CHECKPOINT_EVERY: u64 = 16;
 
 /// Cumulative transfer statistics for one endpoint.
 #[derive(Debug, Default)]
@@ -28,7 +48,408 @@ pub struct EndpointStats {
     pub frames_received: AtomicU64,
     pub bytes_sent: AtomicU64,
     pub bytes_received: AtomicU64,
+    /// DATA frames sent again after a NACK (reliable transfers).
+    pub retransmit_frames: AtomicU64,
+    /// Payload bytes retransmitted after NACKs.
+    pub retransmit_bytes: AtomicU64,
+    pub nacks_sent: AtomicU64,
+    pub nacks_received: AtomicU64,
+    /// Resume probes sent (sender side).
+    pub resume_probes: AtomicU64,
+    /// Duplicate / orphan chunks dropped by the receive table.
+    pub dup_chunks: AtomicU64,
 }
+
+// -- chunk bitmap -------------------------------------------------------------
+
+/// Receive-side bitmap over the fixed chunk grid of one unit: which
+/// chunks have arrived, which byte ranges are still missing. Chunks can
+/// be marked in any order; duplicates are detected, not re-counted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkTable {
+    total: u64,
+    chunk: u64,
+    bits: Vec<u64>,
+    received: u64,
+}
+
+impl ChunkTable {
+    pub fn new(total: u64, chunk: u64) -> ChunkTable {
+        assert!(chunk > 0, "chunk size must be positive");
+        let n = total.div_ceil(chunk);
+        ChunkTable {
+            total,
+            chunk,
+            bits: vec![0u64; (n as usize).div_ceil(64)],
+            received: 0,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn chunk_size(&self) -> u64 {
+        self.chunk
+    }
+
+    pub fn n_chunks(&self) -> u64 {
+        self.total.div_ceil(self.chunk)
+    }
+
+    pub fn received_bytes(&self) -> u64 {
+        self.received
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.received == self.total
+    }
+
+    pub fn has_chunk(&self, idx: u64) -> bool {
+        let (w, b) = (idx / 64, idx % 64);
+        self.bits
+            .get(w as usize)
+            .map(|word| word & (1 << b) != 0)
+            .unwrap_or(false)
+    }
+
+    /// Byte length of chunk `idx` (the final chunk may be partial).
+    pub fn chunk_len(&self, idx: u64) -> u64 {
+        self.chunk.min(self.total - idx * self.chunk)
+    }
+
+    fn set_chunk(&mut self, idx: u64, on: bool) {
+        let (w, b) = ((idx / 64) as usize, idx % 64);
+        if on {
+            self.bits[w] |= 1 << b;
+        } else {
+            self.bits[w] &= !(1 << b);
+        }
+    }
+
+    /// Record a chunk arriving at `offset` with `len` payload bytes.
+    /// Returns Ok(true) if the chunk was new, Ok(false) for a duplicate,
+    /// Err for a chunk that does not fit the grid (corrupt sender).
+    pub fn mark(&mut self, offset: u64, len: u64) -> Result<bool> {
+        if offset % self.chunk != 0 {
+            bail!("chunk offset {offset} not aligned to {}", self.chunk);
+        }
+        let idx = offset / self.chunk;
+        if idx >= self.n_chunks() {
+            bail!("chunk index {idx} out of range ({} chunks)", self.n_chunks());
+        }
+        let expect = self.chunk_len(idx);
+        if len != expect {
+            bail!("chunk at {offset}: {len} bytes, expected {expect}");
+        }
+        if self.has_chunk(idx) {
+            return Ok(false);
+        }
+        self.set_chunk(idx, true);
+        self.received += len;
+        Ok(true)
+    }
+
+    /// Byte offset of the first missing chunk, if any.
+    pub fn first_missing(&self) -> Option<u64> {
+        (0..self.n_chunks())
+            .find(|&i| !self.has_chunk(i))
+            .map(|i| i * self.chunk)
+    }
+
+    /// Missing byte ranges as (offset, len), coalescing adjacent missing
+    /// chunks, at most `max` ranges (the rest is reported next round).
+    pub fn missing_ranges(&self, max: usize) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let n = self.n_chunks();
+        let mut i = 0u64;
+        while i < n && out.len() < max {
+            if self.has_chunk(i) {
+                i += 1;
+                continue;
+            }
+            let start = i;
+            let mut len = 0u64;
+            while i < n && !self.has_chunk(i) {
+                len += self.chunk_len(i);
+                i += 1;
+            }
+            out.push((start * self.chunk, len));
+        }
+        out
+    }
+
+    /// A fully received table (sender-side model of a complete receiver).
+    pub fn complete(total: u64, chunk: u64) -> ChunkTable {
+        let mut t = ChunkTable::new(total, chunk);
+        for i in 0..t.n_chunks() {
+            t.set_chunk(i, true);
+        }
+        t.received = total;
+        t
+    }
+
+    /// A table with everything received *except* the given byte ranges —
+    /// how a sender reconstructs receiver state from a NACK.
+    pub fn from_missing(total: u64, chunk: u64, missing: &[(u64, u64)]) -> ChunkTable {
+        let mut t = ChunkTable::complete(total, chunk);
+        for &(off, len) in missing {
+            if len == 0 {
+                continue;
+            }
+            let first = off / chunk;
+            let last = (off + len - 1).min(total.saturating_sub(1)) / chunk;
+            for idx in first..=last.min(t.n_chunks().saturating_sub(1)) {
+                if t.has_chunk(idx) {
+                    let clen = t.chunk_len(idx);
+                    t.set_chunk(idx, false);
+                    t.received -= clen;
+                }
+            }
+        }
+        t
+    }
+
+    /// Hex serialization of the bitmap (for `.part` manifests).
+    pub fn to_hex(&self) -> String {
+        let n_bytes = (self.n_chunks() as usize).div_ceil(8);
+        let mut s = String::with_capacity(n_bytes * 2);
+        for byte_i in 0..n_bytes {
+            let mut b = 0u8;
+            for bit in 0..8 {
+                let idx = (byte_i * 8 + bit) as u64;
+                if idx < self.n_chunks() && self.has_chunk(idx) {
+                    b |= 1 << bit;
+                }
+            }
+            s.push_str(&format!("{b:02x}"));
+        }
+        s
+    }
+
+    /// Rebuild a table from manifest parts. Rejects bitmaps of the wrong
+    /// length; `received` is recomputed from the bits.
+    pub fn from_hex(total: u64, chunk: u64, hex: &str) -> Result<ChunkTable> {
+        if chunk == 0 {
+            bail!("chunk size must be positive");
+        }
+        let mut t = ChunkTable::new(total, chunk);
+        let n_bytes = (t.n_chunks() as usize).div_ceil(8);
+        if hex.len() != n_bytes * 2 {
+            bail!("bitmap hex length {} != expected {}", hex.len(), n_bytes * 2);
+        }
+        for byte_i in 0..n_bytes {
+            let b = u8::from_str_radix(&hex[byte_i * 2..byte_i * 2 + 2], 16)
+                .map_err(|e| anyhow!("bad bitmap hex: {e}"))?;
+            for bit in 0..8 {
+                let idx = (byte_i * 8 + bit) as u64;
+                if b & (1 << bit) != 0 {
+                    if idx >= t.n_chunks() {
+                        bail!("bitmap sets chunk {idx} beyond {}", t.n_chunks());
+                    }
+                    let clen = t.chunk_len(idx);
+                    t.set_chunk(idx, true);
+                    t.received += clen;
+                }
+            }
+        }
+        Ok(t)
+    }
+}
+
+// -- reliable-transfer plumbing ----------------------------------------------
+
+/// Retry / resume policy for reliable transfers.
+#[derive(Debug, Clone)]
+pub struct ResumePolicy {
+    /// Reconcile rounds (NACK retransmits or probe timeouts) before the
+    /// sender gives up.
+    pub max_attempts: usize,
+    /// How long the sender waits for an ACK/NACK before probing.
+    pub ack_timeout: Duration,
+    /// Probe the receiver *before* the first data pass, so a sender
+    /// reconnecting after a drop resumes from the first missing chunk
+    /// instead of restarting (used with `.part` manifests).
+    pub probe_first: bool,
+}
+
+impl Default for ResumePolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 16,
+            ack_timeout: Duration::from_secs(2),
+            probe_first: false,
+        }
+    }
+}
+
+/// Per-transfer reliability outcome.
+#[derive(Debug, Clone, Default)]
+pub struct ReliableReport {
+    pub retransmit_frames: u64,
+    pub retransmit_bytes: u64,
+    pub nack_rounds: u64,
+    pub probes: u64,
+    pub dup_chunks: u64,
+    /// Payload bytes skipped because the receiver already had them
+    /// (probe-first resume).
+    pub resumed_bytes: u64,
+}
+
+impl ReliableReport {
+    pub fn merge(&mut self, other: &ReliableReport) {
+        self.retransmit_frames += other.retransmit_frames;
+        self.retransmit_bytes += other.retransmit_bytes;
+        self.nack_rounds += other.nack_rounds;
+        self.probes += other.probes;
+        self.dup_chunks += other.dup_chunks;
+        self.resumed_bytes += other.resumed_bytes;
+    }
+}
+
+/// Sender-side random access to the units of an object. Implementations:
+/// in-memory slices, per-entry serialization, spool files.
+pub trait UnitSource {
+    fn n_units(&mut self) -> Result<usize>;
+    /// Extra descriptor fields for unit `i` (merged with index/bytes/crc).
+    fn unit_meta(&mut self, i: usize) -> Result<Json>;
+    fn unit_len(&mut self, i: usize) -> Result<u64>;
+    /// Fill `buf` from the unit's bytes at `offset` (exact read).
+    fn read_at(&mut self, i: usize, offset: u64, buf: &mut [u8]) -> Result<()>;
+    /// crc32 of the whole unit payload.
+    fn unit_crc(&mut self, i: usize) -> Result<u32>;
+}
+
+/// Receiver-side random-access storage for a reliable transfer.
+/// Implementations: reassembly buffers, `.part` spool files.
+pub trait UnitSink {
+    /// Called once with the transfer descriptor.
+    fn start(&mut self, descriptor: &Json) -> Result<()>;
+    /// Called when unit `i`'s metadata arrives. Returns the chunk table
+    /// to use — possibly pre-populated from a previous partial transfer
+    /// (`.part` manifest resume).
+    fn start_unit(&mut self, i: usize, meta: &Json, len: u64, crc: u32, chunk: u64)
+        -> Result<ChunkTable>;
+    fn write_at(&mut self, i: usize, offset: u64, data: &[u8]) -> Result<()>;
+    /// All chunks of unit `i` arrived: verify the unit crc and commit.
+    fn finish_unit(&mut self, i: usize) -> Result<()>;
+    /// Persist partial state so a future connection can resume. Default:
+    /// nothing (in-memory sinks resume only within the connection).
+    fn checkpoint(&mut self, _i: usize, _table: &ChunkTable) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// [`UnitSource`] over one in-memory blob (single unit).
+pub struct SliceSource<'a> {
+    data: &'a [u8],
+    meta: Json,
+    crc: Option<u32>,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(data: &'a [u8], meta: Json) -> SliceSource<'a> {
+        SliceSource {
+            data,
+            meta,
+            crc: None,
+        }
+    }
+}
+
+impl<'a> UnitSource for SliceSource<'a> {
+    fn n_units(&mut self) -> Result<usize> {
+        Ok(1)
+    }
+
+    fn unit_meta(&mut self, _i: usize) -> Result<Json> {
+        Ok(self.meta.clone())
+    }
+
+    fn unit_len(&mut self, _i: usize) -> Result<u64> {
+        Ok(self.data.len() as u64)
+    }
+
+    fn read_at(&mut self, _i: usize, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let off = offset as usize;
+        let end = off
+            .checked_add(buf.len())
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| anyhow!("read_at beyond blob ({offset} + {})", buf.len()))?;
+        buf.copy_from_slice(&self.data[off..end]);
+        Ok(())
+    }
+
+    fn unit_crc(&mut self, _i: usize) -> Result<u32> {
+        if self.crc.is_none() {
+            self.crc = Some(crc32fast::hash(self.data));
+        }
+        Ok(self.crc.unwrap())
+    }
+}
+
+/// [`UnitSink`] reassembling a single unit into a tracked memory buffer.
+#[derive(Default)]
+pub struct BlobSink {
+    buf: Option<TrackedBuf>,
+    crc: u32,
+    len: u64,
+    finished: bool,
+}
+
+impl BlobSink {
+    pub fn into_vec(self) -> Result<Vec<u8>> {
+        if !self.finished {
+            bail!("blob transfer incomplete");
+        }
+        Ok(self.buf.map(|b| b.into_vec()).unwrap_or_default())
+    }
+}
+
+impl UnitSink for BlobSink {
+    fn start(&mut self, _descriptor: &Json) -> Result<()> {
+        Ok(())
+    }
+
+    fn start_unit(
+        &mut self,
+        i: usize,
+        _meta: &Json,
+        len: u64,
+        crc: u32,
+        chunk: u64,
+    ) -> Result<ChunkTable> {
+        if i != 0 {
+            bail!("blob transfers carry exactly one unit (got unit {i})");
+        }
+        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, len as usize);
+        buf.as_mut_vec().resize(len as usize, 0);
+        buf.resync();
+        self.buf = Some(buf);
+        self.crc = crc;
+        self.len = len;
+        Ok(ChunkTable::new(len, chunk))
+    }
+
+    fn write_at(&mut self, _i: usize, offset: u64, data: &[u8]) -> Result<()> {
+        let buf = self.buf.as_mut().ok_or_else(|| anyhow!("chunk before unit"))?;
+        let off = offset as usize;
+        buf.as_mut_vec()[off..off + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    fn finish_unit(&mut self, _i: usize) -> Result<()> {
+        let buf = self.buf.as_ref().ok_or_else(|| anyhow!("finish before unit"))?;
+        let actual = crc32fast::hash(buf.as_slice());
+        if actual != self.crc {
+            bail!("blob crc mismatch: got {actual:#x} want {:#x}", self.crc);
+        }
+        self.finished = true;
+        Ok(())
+    }
+}
+
+// -- endpoint ----------------------------------------------------------------
 
 pub struct SfmEndpoint {
     driver: Box<dyn Driver>,
@@ -154,6 +575,51 @@ impl SfmEndpoint {
 
     // -- object receiving -------------------------------------------------------
 
+    fn event_of(&self, f: Frame) -> Result<Event> {
+        Ok(match f.ftype {
+            FrameType::Begin => Event::Begin {
+                stream: f.stream_id,
+                descriptor: parse_json_payload(&f)?,
+            },
+            FrameType::Unit => Event::UnitStart {
+                stream: f.stream_id,
+                descriptor: parse_json_payload(&f)?,
+            },
+            FrameType::Data => {
+                let last = f.is_last_chunk();
+                let offset = f.offset;
+                let unit = f.seq;
+                let stream = f.stream_id;
+                let bytes = if f.flags & flags::COMPRESSED != 0 {
+                    inflate(&f.payload)?
+                } else {
+                    f.payload
+                };
+                Event::Chunk {
+                    stream,
+                    bytes,
+                    last,
+                    offset,
+                    unit,
+                }
+            }
+            FrameType::End => Event::End {
+                stream: f.stream_id,
+                trailer: parse_json_payload(&f)?,
+            },
+            FrameType::Ack => Event::Ack { stream: f.stream_id },
+            FrameType::Resume => Event::Resume {
+                stream: f.stream_id,
+                info: parse_json_payload(&f)?,
+            },
+            FrameType::Nack => Event::Nack {
+                stream: f.stream_id,
+                info: parse_json_payload(&f)?,
+            },
+            FrameType::Ctrl => unreachable!("ctrl handled by callers"),
+        })
+    }
+
     /// Receive the next object-transfer event. Ctrl frames arriving in
     /// between are buffered for `recv_ctrl`.
     pub fn recv_event(&self, timeout: Option<Duration>) -> Result<Event> {
@@ -168,35 +634,37 @@ impl SfmEndpoint {
                 break f;
             },
         };
-        Ok(match f.ftype {
-            FrameType::Begin => Event::Begin {
-                stream: f.stream_id,
-                descriptor: parse_json_payload(&f)?,
-            },
-            FrameType::Unit => Event::UnitStart {
-                stream: f.stream_id,
-                descriptor: parse_json_payload(&f)?,
-            },
-            FrameType::Data => {
-                let last = f.is_last_chunk();
-                let bytes = if f.flags & flags::COMPRESSED != 0 {
-                    inflate(&f.payload)?
-                } else {
-                    f.payload
-                };
-                Event::Chunk {
-                    stream: f.stream_id,
-                    bytes,
-                    last,
+        self.event_of(f)
+    }
+
+    /// Like [`SfmEndpoint::recv_event`] but a timeout yields Ok(None)
+    /// instead of an error (the reliable sender's reconcile loop needs to
+    /// distinguish "nothing yet" from transport failure).
+    fn try_recv_event(&self, timeout: Duration) -> Result<Option<Event>> {
+        if let Some(f) = self.pending_obj.lock().unwrap().pop_front() {
+            return self.event_of(f).map(Some);
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Ok(None);
+            }
+            match self.driver.recv_timeout(remaining)? {
+                None => return Ok(None),
+                Some(f) => {
+                    self.stats.frames_received.fetch_add(1, Ordering::Relaxed);
+                    self.stats
+                        .bytes_received
+                        .fetch_add(f.wire_len() as u64, Ordering::Relaxed);
+                    if f.ftype == FrameType::Ctrl {
+                        self.pending_ctrl.lock().unwrap().push_back(f);
+                        continue;
+                    }
+                    return self.event_of(f).map(Some);
                 }
             }
-            FrameType::End => Event::End {
-                stream: f.stream_id,
-                trailer: parse_json_payload(&f)?,
-            },
-            FrameType::Ack => Event::Ack { stream: f.stream_id },
-            FrameType::Ctrl => unreachable!("ctrl handled above"),
-        })
+        }
     }
 
     /// Receive a whole single-unit object into memory (the *regular
@@ -221,6 +689,9 @@ impl SfmEndpoint {
                 Event::End { .. } => break,
                 Event::Ack { .. } => {}
                 Event::Begin { .. } => bail!("nested Begin in blob receive"),
+                Event::Resume { .. } | Event::Nack { .. } => {
+                    bail!("resume-protocol frame in legacy blob receive")
+                }
             }
         }
         Ok((descriptor, buf.into_vec()))
@@ -229,6 +700,674 @@ impl SfmEndpoint {
     pub fn send_ack(&self, stream: u64) -> Result<()> {
         self.send_frame(Frame::new(FrameType::Ack, stream, 0, Vec::new()))
     }
+
+    // -- reliable out-of-order transfers --------------------------------------
+
+    /// Send an object reliably: position-addressed chunks, NACK-driven
+    /// selective retransmission, optional probe-first resume. Returns the
+    /// per-transfer reliability report once the receiver ACKs completion.
+    pub fn send_reliable(
+        &self,
+        descriptor: Json,
+        src: &mut dyn UnitSource,
+        policy: &ResumePolicy,
+    ) -> Result<ReliableReport> {
+        let sid = self.alloc_stream();
+        let n = src.n_units()?;
+        let chunk = self.chunk_bytes.max(1) as u64;
+        // Per-unit geometry travels in the descriptor so a resuming
+        // receiver can rebuild its chunk tables (e.g. from a `.part`
+        // manifest) and answer a probe before any UNIT frame arrives.
+        let mut unit_bytes = Vec::with_capacity(n);
+        let mut unit_crcs = Vec::with_capacity(n);
+        for i in 0..n {
+            unit_bytes.push(src.unit_len(i)?);
+            unit_crcs.push(src.unit_crc(i)?);
+        }
+        let desc = enrich_descriptor(descriptor, n, chunk, &unit_bytes, &unit_crcs);
+        let desc_bytes = desc.to_string().into_bytes();
+        let mut report = ReliableReport::default();
+
+        let begin = || {
+            Frame::new(FrameType::Begin, sid, 0, desc_bytes.clone())
+                .with_flags(flags::RELIABLE)
+        };
+        self.send_frame(begin())?;
+
+        // What the receiver already has, per unit (None = nothing known).
+        let mut have: Vec<Option<ChunkTable>> = (0..n).map(|_| None).collect();
+
+        if policy.probe_first {
+            report.probes += 1;
+            self.stats.resume_probes.fetch_add(1, Ordering::Relaxed);
+            self.send_frame(probe_frame(sid))?;
+            match self.wait_sender_event(sid, policy.ack_timeout)? {
+                SenderEvent::Ack => return Ok(report), // receiver already complete
+                SenderEvent::Nack(info) => {
+                    if info.get("restart").and_then(|j| j.as_bool()) != Some(true) {
+                        self.apply_probe_nack(&info, src, chunk, &mut have)?;
+                    }
+                }
+                SenderEvent::Timeout => {} // fresh receiver; full pass
+            }
+        }
+
+        // Initial data pass (skipping chunks the receiver reported having).
+        for i in 0..n {
+            self.send_unit_pass(sid, i, src, chunk, have[i].as_ref(), false, &mut report)?;
+        }
+        self.send_frame(end_frame(sid, n))?;
+
+        // Reconcile until the receiver ACKs. Consecutive silent rounds
+        // (timeouts) are bounded by max_attempts; NACK rounds mean the
+        // receiver is alive and making progress, so they only count
+        // against a much larger hard stop (terminates even under a 100%
+        // data-loss link, where no round can progress).
+        let mut silent = 0usize;
+        let mut rounds = 0usize;
+        loop {
+            rounds += 1;
+            if rounds > policy.max_attempts.saturating_mul(8) {
+                bail!(
+                    "reliable send: receiver still missing data after {rounds} reconcile \
+                     rounds ({} retransmitted frames)",
+                    report.retransmit_frames
+                );
+            }
+            match self.wait_sender_event(sid, policy.ack_timeout)? {
+                SenderEvent::Ack => return Ok(report),
+                SenderEvent::Nack(info) => {
+                    silent = 0;
+                    report.nack_rounds += 1;
+                    self.stats.nacks_received.fetch_add(1, Ordering::Relaxed);
+                    if info.get("restart").and_then(|j| j.as_bool()) == Some(true) {
+                        // Receiver has no state for this stream (our Begin
+                        // was lost): start over from the descriptor.
+                        self.send_frame(begin())?;
+                        for i in 0..n {
+                            self.send_unit_pass(sid, i, src, chunk, None, true, &mut report)?;
+                        }
+                    } else {
+                        self.retransmit_from_nack(sid, src, chunk, &info, &mut report)?;
+                    }
+                    self.send_frame(end_frame(sid, n))?;
+                }
+                SenderEvent::Timeout => {
+                    silent += 1;
+                    if silent > policy.max_attempts {
+                        bail!(
+                            "reliable send: no ack after {} silent rounds \
+                             ({} retransmitted frames)",
+                            policy.max_attempts,
+                            report.retransmit_frames
+                        );
+                    }
+                    report.probes += 1;
+                    self.stats.resume_probes.fetch_add(1, Ordering::Relaxed);
+                    self.send_frame(probe_frame(sid))?;
+                }
+            }
+        }
+    }
+
+    /// Reliable single-blob convenience (one unit).
+    pub fn send_blob_reliable(
+        &self,
+        descriptor: Json,
+        blob: &[u8],
+        policy: &ResumePolicy,
+    ) -> Result<ReliableReport> {
+        let mut src = SliceSource::new(blob, Json::Null);
+        self.send_reliable(descriptor, &mut src, policy)
+    }
+
+    /// Reliable single-blob receive into memory.
+    pub fn recv_blob_reliable(
+        &self,
+        timeout: Option<Duration>,
+    ) -> Result<(Json, Vec<u8>, ReliableReport)> {
+        let mut sink = BlobSink::default();
+        let (desc, report) = self.recv_reliable(&mut sink, timeout)?;
+        Ok((desc, sink.into_vec()?, report))
+    }
+
+    /// Receive a reliable transfer into `sink`, accepting chunks in any
+    /// order, dropping duplicates, NACKing missing ranges on END/RESUME,
+    /// and ACKing once every unit is complete.
+    pub fn recv_reliable(
+        &self,
+        sink: &mut dyn UnitSink,
+        timeout: Option<Duration>,
+    ) -> Result<(Json, ReliableReport)> {
+        let mut report = ReliableReport::default();
+        // Wait for Begin; a Resume probe arriving first means our peer
+        // believes a transfer is underway that we know nothing about
+        // (its Begin was lost in a blackout) — ask for a restart.
+        let (sid, descriptor) = loop {
+            match self.recv_event(timeout)? {
+                Event::Begin { stream, descriptor } => break (stream, descriptor),
+                Event::Resume { stream, .. } => {
+                    self.stats.nacks_sent.fetch_add(1, Ordering::Relaxed);
+                    self.send_frame(Frame::new(
+                        FrameType::Nack,
+                        stream,
+                        0,
+                        Json::obj(vec![("restart", Json::Bool(true))])
+                            .to_string()
+                            .into_bytes(),
+                    ))?;
+                }
+                _ => {} // stray frames from a previous exchange
+            }
+        };
+        sink.start(&descriptor)?;
+        let n = descriptor
+            .get("units")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow!("reliable descriptor missing unit count"))?;
+        let chunk = descriptor
+            .get("chunk")
+            .and_then(|j| j.as_u64())
+            .unwrap_or(self.chunk_bytes as u64)
+            .max(1);
+
+        let mut units: Vec<Option<UState>> = (0..n).map(|_| None).collect();
+        let mut done_count = 0usize;
+        let mut fresh_since_ckpt = 0u64;
+
+        // Pre-start every unit from the descriptor geometry, so partial
+        // state (a `.part` manifest) is loaded and reportable before any
+        // UNIT/DATA frame — the probe-first resume handshake depends on
+        // this.
+        let geo_bytes = descriptor.get("unit_bytes").and_then(|j| j.as_arr());
+        let geo_crcs = descriptor.get("unit_crcs").and_then(|j| j.as_arr());
+        if let (Some(lens), Some(crcs)) = (geo_bytes, geo_crcs) {
+            if lens.len() == n && crcs.len() == n {
+                for i in 0..n {
+                    let len = lens[i].as_u64().unwrap_or(0);
+                    let crc = crcs[i].as_u64().unwrap_or(0) as u32;
+                    let meta = Json::obj(vec![
+                        ("index", Json::num(i as f64)),
+                        ("bytes", Json::num(len as f64)),
+                        ("crc", Json::num(crc as f64)),
+                    ]);
+                    start_unit_state(
+                        sink,
+                        &mut units,
+                        &mut done_count,
+                        &mut report,
+                        i,
+                        &meta,
+                        len,
+                        crc,
+                        chunk,
+                    )?;
+                }
+            }
+        }
+
+        loop {
+            match self.recv_event(timeout)? {
+                Event::UnitStart { descriptor: meta, stream } => {
+                    if stream != sid {
+                        continue;
+                    }
+                    let i = meta
+                        .get("index")
+                        .and_then(|j| j.as_usize())
+                        .ok_or_else(|| anyhow!("unit meta missing index"))?;
+                    if i >= n {
+                        bail!("unit index {i} out of range ({n} units)");
+                    }
+                    let len = meta.get("bytes").and_then(|j| j.as_u64()).unwrap_or(0);
+                    let crc = meta
+                        .get("crc")
+                        .and_then(|j| j.as_u64())
+                        .map(|c| c as u32)
+                        .unwrap_or(0);
+                    start_unit_state(
+                        sink,
+                        &mut units,
+                        &mut done_count,
+                        &mut report,
+                        i,
+                        &meta,
+                        len,
+                        crc,
+                        chunk,
+                    )?;
+                }
+                Event::Chunk { stream, bytes, offset, unit, .. } => {
+                    if stream != sid || bytes.is_empty() {
+                        continue;
+                    }
+                    let i = unit as usize;
+                    let dup = match units.get_mut(i).and_then(|u| u.as_mut()) {
+                        None => true, // orphan: unit meta lost/reordered; NACK recovers
+                        Some(st) if st.done => true,
+                        Some(st) => {
+                            if st.table.mark(offset, bytes.len() as u64)? {
+                                sink.write_at(i, offset, &bytes)?;
+                                fresh_since_ckpt += 1;
+                                if fresh_since_ckpt >= CHECKPOINT_EVERY {
+                                    sink.checkpoint(i, &st.table)?;
+                                    fresh_since_ckpt = 0;
+                                }
+                                if st.table.is_complete() {
+                                    sink.finish_unit(i)?;
+                                    st.done = true;
+                                    done_count += 1;
+                                }
+                                false
+                            } else {
+                                true
+                            }
+                        }
+                    };
+                    if dup {
+                        report.dup_chunks += 1;
+                        self.stats.dup_chunks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Event::End { stream, .. } | Event::Resume { stream, .. } => {
+                    if stream != sid {
+                        continue;
+                    }
+                    if done_count == n {
+                        self.send_ack(sid)?;
+                        return Ok((descriptor, report));
+                    }
+                    // Persist partial state, then ask for what's missing.
+                    for (i, u) in units.iter().enumerate() {
+                        if let Some(st) = u {
+                            if !st.done {
+                                sink.checkpoint(i, &st.table)?;
+                            }
+                        }
+                    }
+                    fresh_since_ckpt = 0;
+                    let payload = nack_payload(&units.iter().map(|u| u.as_ref().map(|s| (&s.table, s.done))).collect::<Vec<_>>());
+                    report.nack_rounds += 1;
+                    self.stats.nacks_sent.fetch_add(1, Ordering::Relaxed);
+                    self.send_frame(Frame::new(
+                        FrameType::Nack,
+                        sid,
+                        0,
+                        payload.to_string().into_bytes(),
+                    ))?;
+                }
+                Event::Begin { stream, .. } => {
+                    if stream != sid {
+                        bail!("interleaved Begin for stream {stream} during reliable receive");
+                    }
+                    // duplicate Begin after a restart request — ignore
+                }
+                Event::Ack { .. } | Event::Nack { .. } => {}
+            }
+        }
+    }
+
+    // -- reliable sender internals -------------------------------------------
+
+    /// One full pass over unit `i`: UNIT meta frame + every chunk the
+    /// receiver doesn't already have.
+    #[allow(clippy::too_many_arguments)]
+    fn send_unit_pass(
+        &self,
+        sid: u64,
+        i: usize,
+        src: &mut dyn UnitSource,
+        chunk: u64,
+        have: Option<&ChunkTable>,
+        as_retransmit: bool,
+        report: &mut ReliableReport,
+    ) -> Result<()> {
+        let len = src.unit_len(i)?;
+        let crc = src.unit_crc(i)?;
+        let meta = merged_unit_meta(src.unit_meta(i)?, i, len, crc);
+        self.send_frame(
+            Frame::new(FrameType::Unit, sid, i as u64, meta.to_string().into_bytes())
+                .with_flags(flags::RELIABLE),
+        )?;
+        if len == 0 {
+            return Ok(());
+        }
+        if let Some(h) = have {
+            if h.is_complete() {
+                report.resumed_bytes += len;
+                return Ok(());
+            }
+        }
+        let n_chunks = len.div_ceil(chunk);
+        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, chunk as usize);
+        buf.as_mut_vec().resize(chunk as usize, 0);
+        for c in 0..n_chunks {
+            let off = c * chunk;
+            let clen = chunk.min(len - off) as usize;
+            if let Some(h) = have {
+                if h.has_chunk(c) {
+                    report.resumed_bytes += clen as u64;
+                    continue;
+                }
+            }
+            self.send_data_chunk(sid, i, src, off, clen, c + 1 == n_chunks, &mut buf)?;
+            if as_retransmit {
+                report.retransmit_frames += 1;
+                report.retransmit_bytes += clen as u64;
+                self.stats.retransmit_frames.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .retransmit_bytes
+                    .fetch_add(clen as u64, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    fn send_data_chunk(
+        &self,
+        sid: u64,
+        i: usize,
+        src: &mut dyn UnitSource,
+        off: u64,
+        clen: usize,
+        last: bool,
+        buf: &mut TrackedBuf,
+    ) -> Result<()> {
+        src.read_at(i, off, &mut buf.as_mut_vec()[..clen])?;
+        let (payload, mut fl) = if self.compress {
+            (deflate(&buf.as_slice()[..clen])?, flags::COMPRESSED)
+        } else {
+            (buf.as_slice()[..clen].to_vec(), 0)
+        };
+        fl |= flags::RELIABLE;
+        if last {
+            fl |= flags::LAST_CHUNK;
+        }
+        self.send_frame(
+            Frame::new(FrameType::Data, sid, i as u64, payload)
+                .with_offset(off)
+                .with_flags(fl),
+        )
+    }
+
+    /// Retransmit the ranges a NACK listed.
+    fn retransmit_from_nack(
+        &self,
+        sid: u64,
+        src: &mut dyn UnitSource,
+        chunk: u64,
+        info: &Json,
+        report: &mut ReliableReport,
+    ) -> Result<()> {
+        let entries = info.get("units").and_then(|j| j.as_arr()).unwrap_or(&[]);
+        for e in entries {
+            let Some(i) = e.get("unit").and_then(|j| j.as_usize()) else {
+                continue;
+            };
+            let started = e.get("started").and_then(|j| j.as_bool()).unwrap_or(false);
+            if !started {
+                // Receiver never saw this unit's meta: full (re)pass.
+                self.send_unit_pass(sid, i, src, chunk, None, true, report)?;
+                continue;
+            }
+            let len = src.unit_len(i)?;
+            let n_chunks = len.div_ceil(chunk);
+            let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, chunk as usize);
+            buf.as_mut_vec().resize(chunk as usize, 0);
+            for range in e.get("missing").and_then(|j| j.as_arr()).unwrap_or(&[]) {
+                let pair = range.as_arr().unwrap_or(&[]);
+                let (Some(off), Some(rlen)) = (
+                    pair.first().and_then(|j| j.as_u64()),
+                    pair.get(1).and_then(|j| j.as_u64()),
+                ) else {
+                    continue;
+                };
+                let mut c = off / chunk;
+                let end = off.saturating_add(rlen).min(len);
+                while c < n_chunks && c * chunk < end {
+                    let coff = c * chunk;
+                    let clen = chunk.min(len - coff) as usize;
+                    self.send_data_chunk(sid, i, src, coff, clen, c + 1 == n_chunks, &mut buf)?;
+                    report.retransmit_frames += 1;
+                    report.retransmit_bytes += clen as u64;
+                    self.stats.retransmit_frames.fetch_add(1, Ordering::Relaxed);
+                    self.stats
+                        .retransmit_bytes
+                        .fetch_add(clen as u64, Ordering::Relaxed);
+                    c += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold a probe-response NACK into the sender's model of receiver
+    /// state: units absent from the listing but below the `covered`
+    /// watermark are complete; listed units carry their missing ranges;
+    /// units at or beyond `covered` (listing cap reached) stay unknown
+    /// and are sent in full — duplicates are cheap, silent gaps are not.
+    fn apply_probe_nack(
+        &self,
+        info: &Json,
+        src: &mut dyn UnitSource,
+        chunk: u64,
+        have: &mut [Option<ChunkTable>],
+    ) -> Result<()> {
+        let Some(entries) = info.get("units").and_then(|j| j.as_arr()) else {
+            return Ok(());
+        };
+        let covered = info
+            .get("covered")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(0); // absent watermark: trust nothing
+        for (i, h) in have.iter_mut().enumerate() {
+            *h = if i < covered {
+                let len = src.unit_len(i)?;
+                Some(ChunkTable::complete(len, chunk))
+            } else {
+                None
+            };
+        }
+        for e in entries {
+            let Some(i) = e.get("unit").and_then(|j| j.as_usize()) else {
+                continue;
+            };
+            if i >= have.len() {
+                continue;
+            }
+            let started = e.get("started").and_then(|j| j.as_bool()).unwrap_or(false);
+            if !started {
+                have[i] = None;
+                continue;
+            }
+            let len = src.unit_len(i)?;
+            let mut missing = Vec::new();
+            for range in e.get("missing").and_then(|j| j.as_arr()).unwrap_or(&[]) {
+                let pair = range.as_arr().unwrap_or(&[]);
+                if let (Some(off), Some(rlen)) = (
+                    pair.first().and_then(|j| j.as_u64()),
+                    pair.get(1).and_then(|j| j.as_u64()),
+                ) {
+                    missing.push((off, rlen));
+                }
+            }
+            have[i] = Some(ChunkTable::from_missing(len, chunk, &missing));
+        }
+        Ok(())
+    }
+
+    fn wait_sender_event(&self, sid: u64, timeout: Duration) -> Result<SenderEvent> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Ok(SenderEvent::Timeout);
+            }
+            match self.try_recv_event(remaining)? {
+                None => return Ok(SenderEvent::Timeout),
+                Some(Event::Ack { stream }) if stream == sid => return Ok(SenderEvent::Ack),
+                Some(Event::Nack { stream, info }) if stream == sid => {
+                    return Ok(SenderEvent::Nack(info))
+                }
+                Some(_) => {} // stray events (e.g. duplicates from the fault layer)
+            }
+        }
+    }
+}
+
+enum SenderEvent {
+    Ack,
+    Nack(Json),
+    Timeout,
+}
+
+/// Receiver-side per-unit reassembly state.
+struct UState {
+    table: ChunkTable,
+    done: bool,
+}
+
+/// Idempotently create unit `i`'s receive state via the sink (which may
+/// hand back a pre-populated table when resuming).
+#[allow(clippy::too_many_arguments)]
+fn start_unit_state(
+    sink: &mut dyn UnitSink,
+    units: &mut [Option<UState>],
+    done_count: &mut usize,
+    report: &mut ReliableReport,
+    i: usize,
+    meta: &Json,
+    len: u64,
+    crc: u32,
+    chunk: u64,
+) -> Result<()> {
+    if units[i].is_some() {
+        return Ok(());
+    }
+    let table = sink.start_unit(i, meta, len, crc, chunk)?;
+    if table.received_bytes() > 0 {
+        report.resumed_bytes += table.received_bytes();
+    }
+    let mut st = UState { table, done: false };
+    if st.table.is_complete() {
+        sink.finish_unit(i)?;
+        st.done = true;
+        *done_count += 1;
+    }
+    units[i] = Some(st);
+    Ok(())
+}
+
+fn enrich_descriptor(
+    descriptor: Json,
+    n_units: usize,
+    chunk: u64,
+    unit_bytes: &[u64],
+    unit_crcs: &[u32],
+) -> Json {
+    let mut m = match descriptor {
+        Json::Obj(m) => m,
+        Json::Null => BTreeMap::new(),
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("meta".to_string(), other);
+            m
+        }
+    };
+    m.insert("reliable".to_string(), Json::Bool(true));
+    m.insert("units".to_string(), Json::num(n_units as f64));
+    m.insert("chunk".to_string(), Json::num(chunk as f64));
+    m.insert(
+        "unit_bytes".to_string(),
+        Json::Arr(unit_bytes.iter().map(|&b| Json::num(b as f64)).collect()),
+    );
+    m.insert(
+        "unit_crcs".to_string(),
+        Json::Arr(unit_crcs.iter().map(|&c| Json::num(c as f64)).collect()),
+    );
+    Json::Obj(m)
+}
+
+fn merged_unit_meta(base: Json, i: usize, len: u64, crc: u32) -> Json {
+    let mut m = match base {
+        Json::Obj(m) => m,
+        Json::Null => BTreeMap::new(),
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("meta".to_string(), other);
+            m
+        }
+    };
+    m.insert("index".to_string(), Json::num(i as f64));
+    m.insert("bytes".to_string(), Json::num(len as f64));
+    m.insert("crc".to_string(), Json::num(crc as f64));
+    Json::Obj(m)
+}
+
+fn probe_frame(sid: u64) -> Frame {
+    Frame::new(
+        FrameType::Resume,
+        sid,
+        0,
+        Json::obj(vec![("probe", Json::Bool(true))])
+            .to_string()
+            .into_bytes(),
+    )
+}
+
+fn end_frame(sid: u64, n_units: usize) -> Frame {
+    Frame::new(
+        FrameType::End,
+        sid,
+        n_units as u64,
+        Json::obj(vec![("units", Json::num(n_units as f64))])
+            .to_string()
+            .into_bytes(),
+    )
+    .with_flags(flags::RELIABLE)
+}
+
+/// Build a NACK JSON listing incomplete units: started units carry their
+/// missing (offset, len) ranges; unstarted units request a full resend.
+/// `covered` marks how far the listing is exhaustive — units below it
+/// that are absent from the listing are complete; units at or above it
+/// were cut off by the listing cap and remain unknown to the sender.
+fn nack_payload(units: &[Option<(&ChunkTable, bool)>]) -> Json {
+    let mut listed = Vec::new();
+    let mut covered = units.len();
+    for (i, u) in units.iter().enumerate() {
+        if listed.len() >= MAX_NACK_UNITS {
+            covered = i;
+            break;
+        }
+        match u {
+            None => listed.push(Json::obj(vec![
+                ("unit", Json::num(i as f64)),
+                ("started", Json::Bool(false)),
+            ])),
+            Some((table, done)) => {
+                if *done {
+                    continue;
+                }
+                let ranges = table
+                    .missing_ranges(MAX_NACK_RANGES)
+                    .into_iter()
+                    .map(|(off, len)| {
+                        Json::Arr(vec![Json::num(off as f64), Json::num(len as f64)])
+                    })
+                    .collect();
+                listed.push(Json::obj(vec![
+                    ("unit", Json::num(i as f64)),
+                    ("started", Json::Bool(true)),
+                    ("missing", Json::Arr(ranges)),
+                ]));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("units", Json::Arr(listed)),
+        ("covered", Json::num(covered as f64)),
+    ])
 }
 
 /// Incremental sender for one object transfer.
@@ -309,11 +1448,40 @@ impl<'a> ObjectSender<'a> {
 /// Receiver-side transfer event.
 #[derive(Debug)]
 pub enum Event {
-    Begin { stream: u64, descriptor: Json },
-    UnitStart { stream: u64, descriptor: Json },
-    Chunk { stream: u64, bytes: Vec<u8>, last: bool },
-    End { stream: u64, trailer: Json },
-    Ack { stream: u64 },
+    Begin {
+        stream: u64,
+        descriptor: Json,
+    },
+    UnitStart {
+        stream: u64,
+        descriptor: Json,
+    },
+    Chunk {
+        stream: u64,
+        bytes: Vec<u8>,
+        last: bool,
+        /// Byte offset within the current unit (reliable transfers).
+        offset: u64,
+        /// Unit index (reliable transfers; frame seq otherwise).
+        unit: u64,
+    },
+    End {
+        stream: u64,
+        trailer: Json,
+    },
+    Ack {
+        stream: u64,
+    },
+    /// Sender probe: "what are you missing?"
+    Resume {
+        stream: u64,
+        info: Json,
+    },
+    /// Receiver's missing-range listing.
+    Nack {
+        stream: u64,
+        info: Json,
+    },
 }
 
 fn parse_json_payload(f: &Frame) -> Result<Json> {
@@ -458,5 +1626,170 @@ mod tests {
         assert!(tx.write_all(&[1]).is_err()); // no unit open
         tx.begin_unit(Json::Null).unwrap();
         assert!(tx.begin_unit(Json::Null).is_err()); // nested unit
+    }
+
+    // -- chunk table ---------------------------------------------------------
+
+    #[test]
+    fn chunk_table_marks_and_completes() {
+        let mut t = ChunkTable::new(2500, 1000);
+        assert_eq!(t.n_chunks(), 3);
+        assert!(!t.is_complete());
+        assert_eq!(t.first_missing(), Some(0));
+        // out of order
+        assert!(t.mark(2000, 500).unwrap());
+        assert!(t.mark(0, 1000).unwrap());
+        assert_eq!(t.first_missing(), Some(1000));
+        assert_eq!(t.missing_ranges(8), vec![(1000, 1000)]);
+        // duplicate is not an error, not re-counted
+        assert!(!t.mark(0, 1000).unwrap());
+        assert_eq!(t.received_bytes(), 1500);
+        assert!(t.mark(1000, 1000).unwrap());
+        assert!(t.is_complete());
+        assert_eq!(t.first_missing(), None);
+        assert!(t.missing_ranges(8).is_empty());
+    }
+
+    #[test]
+    fn chunk_table_rejects_bad_geometry() {
+        let mut t = ChunkTable::new(2500, 1000);
+        assert!(t.mark(500, 1000).is_err()); // unaligned
+        assert!(t.mark(3000, 500).is_err()); // out of range
+        assert!(t.mark(0, 999).is_err()); // short non-final chunk
+        assert!(t.mark(2000, 1000).is_err()); // long final chunk
+    }
+
+    #[test]
+    fn chunk_table_zero_total_is_complete() {
+        let t = ChunkTable::new(0, 1024);
+        assert!(t.is_complete());
+        assert_eq!(t.n_chunks(), 0);
+        assert!(t.missing_ranges(4).is_empty());
+    }
+
+    #[test]
+    fn chunk_table_missing_ranges_coalesce() {
+        let mut t = ChunkTable::new(10_000, 1000);
+        for idx in [0u64, 3, 4, 9] {
+            t.mark(idx * 1000, 1000).unwrap();
+        }
+        assert_eq!(
+            t.missing_ranges(8),
+            vec![(1000, 2000), (5000, 4000)]
+        );
+        // cap respected
+        assert_eq!(t.missing_ranges(1), vec![(1000, 2000)]);
+    }
+
+    #[test]
+    fn chunk_table_hex_roundtrip() {
+        let mut t = ChunkTable::new(9_500, 1000);
+        for idx in [1u64, 2, 5, 9] {
+            t.mark(idx * 1000, t.chunk_len(idx)).unwrap();
+        }
+        let hex = t.to_hex();
+        let back = ChunkTable::from_hex(9_500, 1000, &hex).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.received_bytes(), t.received_bytes());
+        // wrong-length bitmap rejected
+        assert!(ChunkTable::from_hex(9_500, 1000, "00").is_err());
+        assert!(ChunkTable::from_hex(9_500, 1000, "zz00").is_err());
+    }
+
+    #[test]
+    fn chunk_table_from_missing_inverts_nack() {
+        let total = 7_300u64;
+        let chunk = 1000u64;
+        let mut t = ChunkTable::new(total, chunk);
+        for idx in [0u64, 2, 3, 7] {
+            t.mark(idx * chunk, t.chunk_len(idx)).unwrap();
+        }
+        let missing = t.missing_ranges(usize::MAX);
+        let rebuilt = ChunkTable::from_missing(total, chunk, &missing);
+        assert_eq!(rebuilt, t);
+    }
+
+    // -- reliable transfers over a clean link --------------------------------
+
+    fn reliable_pair(chunk: usize) -> (SfmEndpoint, SfmEndpoint) {
+        let p = inmem::pair(1024);
+        (
+            SfmEndpoint::new(p.a).with_chunk(chunk),
+            SfmEndpoint::new(p.b).with_chunk(chunk),
+        )
+    }
+
+    #[test]
+    fn reliable_blob_roundtrip_clean_link() {
+        let (a, b) = reliable_pair(4096);
+        let blob: Vec<u8> = (0..100_000u32).map(|i| (i % 253) as u8).collect();
+        let want = blob.clone();
+        let tx = std::thread::spawn(move || {
+            a.send_blob_reliable(
+                Json::obj(vec![("kind", Json::str("test"))]),
+                &blob,
+                &ResumePolicy::default(),
+            )
+            .unwrap()
+        });
+        let (desc, got, report) = b.recv_blob_reliable(Some(Duration::from_secs(10))).unwrap();
+        let sender_report = tx.join().unwrap();
+        assert_eq!(got, want);
+        assert_eq!(desc.get("kind").unwrap().as_str().unwrap(), "test");
+        assert_eq!(desc.get("units").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(report.dup_chunks, 0);
+        assert_eq!(sender_report.retransmit_frames, 0);
+        assert_eq!(sender_report.nack_rounds, 0);
+    }
+
+    #[test]
+    fn reliable_empty_blob() {
+        let (a, b) = reliable_pair(4096);
+        let tx = std::thread::spawn(move || {
+            a.send_blob_reliable(Json::Null, &[], &ResumePolicy::default())
+                .unwrap()
+        });
+        let (_, got, _) = b.recv_blob_reliable(Some(Duration::from_secs(10))).unwrap();
+        tx.join().unwrap();
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn reliable_compressed_roundtrip() {
+        let p = inmem::pair(1024);
+        let a = SfmEndpoint::new(p.a).with_chunk(8 * 1024).with_compression(true);
+        let b = SfmEndpoint::new(p.b);
+        let blob = vec![9u8; 300_000];
+        let want = blob.clone();
+        let tx = std::thread::spawn(move || {
+            a.send_blob_reliable(Json::Null, &blob, &ResumePolicy::default())
+                .unwrap();
+            a
+        });
+        let (_, got, _) = b.recv_blob_reliable(Some(Duration::from_secs(10))).unwrap();
+        let a = tx.join().unwrap();
+        assert_eq!(got, want);
+        // compressible payload: much less than 300 KB on the wire
+        assert!(a.stats.bytes_sent.load(Ordering::Relaxed) < 50_000);
+    }
+
+    #[test]
+    fn probe_first_skips_nothing_on_fresh_receiver() {
+        let (a, b) = reliable_pair(2048);
+        let blob: Vec<u8> = (0..20_000u32).map(|i| (i % 89) as u8).collect();
+        let want = blob.clone();
+        let policy = ResumePolicy {
+            probe_first: true,
+            ack_timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let tx = std::thread::spawn(move || {
+            a.send_blob_reliable(Json::Null, &blob, &policy).unwrap()
+        });
+        let (_, got, _) = b.recv_blob_reliable(Some(Duration::from_secs(10))).unwrap();
+        let report = tx.join().unwrap();
+        assert_eq!(got, want);
+        assert_eq!(report.resumed_bytes, 0);
+        assert!(report.probes >= 1);
     }
 }

@@ -1,24 +1,29 @@
 //! SFM frame wire format — the "Streamable Framed Message" layer's unit
-//! of transmission (paper §I, Fig. 1).
+//! of transmission (paper §I, Fig. 1), protocol version 2.
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic "SFM1"
-//! 4       1     version (1)
+//! 4       1     version (2)
 //! 5       1     frame type
 //! 6       2     flags
 //! 8       8     stream id
-//! 16      8     sequence number
-//! 24      8     payload length
-//! 32      4     crc32(payload)
-//! 36      ...   payload
+//! 16      8     sequence number (DATA in reliable mode: unit index)
+//! 24      8     byte offset of the payload within the current unit
+//! 32      8     payload length
+//! 40      4     crc32(payload)
+//! 44      ...   payload
 //! ```
+//!
+//! v2 adds the `byte offset` field so DATA chunks are position-addressed:
+//! receivers can accept chunks out of order, detect duplicates, and NACK
+//! precise missing ranges for retransmission (see DESIGN.md §Resume).
 
 use anyhow::{bail, Result};
 
 pub const MAGIC: [u8; 4] = *b"SFM1";
-pub const VERSION: u8 = 1;
-pub const HEADER_LEN: usize = 36;
+pub const VERSION: u8 = 2;
+pub const HEADER_LEN: usize = 44;
 
 /// Hard cap on a single frame payload — protects receivers from
 /// adversarial/corrupt length fields.
@@ -40,6 +45,12 @@ pub enum FrameType {
     Ack = 5,
     /// Small standalone control message (registration, task headers...).
     Ctrl = 6,
+    /// Sender probe after a suspected loss: "what are you missing for
+    /// this stream?" Payload is a JSON probe descriptor.
+    Resume = 7,
+    /// Receiver's negative ack: JSON listing of missing chunk ranges per
+    /// unit, answered with retransmissions.
+    Nack = 8,
 }
 
 impl FrameType {
@@ -51,6 +62,8 @@ impl FrameType {
             4 => FrameType::End,
             5 => FrameType::Ack,
             6 => FrameType::Ctrl,
+            7 => FrameType::Resume,
+            8 => FrameType::Nack,
             _ => return None,
         })
     }
@@ -62,6 +75,8 @@ pub mod flags {
     pub const COMPRESSED: u16 = 1 << 0;
     /// Last DATA chunk of the current unit.
     pub const LAST_CHUNK: u16 = 1 << 1;
+    /// Frame belongs to a resumable (out-of-order tolerant) transfer.
+    pub const RELIABLE: u16 = 1 << 2;
 }
 
 /// One SFM frame.
@@ -71,6 +86,10 @@ pub struct Frame {
     pub flags: u16,
     pub stream_id: u64,
     pub seq: u64,
+    /// Byte offset of this payload within the current unit. Meaningful
+    /// for DATA frames of reliable transfers; 0 otherwise. With
+    /// compression the offset addresses the *plaintext* position.
+    pub offset: u64,
     pub payload: Vec<u8>,
 }
 
@@ -81,12 +100,18 @@ impl Frame {
             flags: 0,
             stream_id,
             seq,
+            offset: 0,
             payload,
         }
     }
 
     pub fn with_flags(mut self, flags: u16) -> Frame {
         self.flags |= flags;
+        self
+    }
+
+    pub fn with_offset(mut self, offset: u64) -> Frame {
+        self.offset = offset;
         self
     }
 
@@ -109,9 +134,10 @@ impl Frame {
         h[6..8].copy_from_slice(&self.flags.to_le_bytes());
         h[8..16].copy_from_slice(&self.stream_id.to_le_bytes());
         h[16..24].copy_from_slice(&self.seq.to_le_bytes());
-        h[24..32].copy_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        h[24..32].copy_from_slice(&self.offset.to_le_bytes());
+        h[32..40].copy_from_slice(&(self.payload.len() as u64).to_le_bytes());
         let crc = crc32fast::hash(&self.payload);
-        h[32..36].copy_from_slice(&crc.to_le_bytes());
+        h[40..44].copy_from_slice(&crc.to_le_bytes());
         h
     }
 
@@ -136,17 +162,22 @@ impl Frame {
         let flags = u16::from_le_bytes([h[6], h[7]]);
         let stream_id = u64::from_le_bytes(h[8..16].try_into().unwrap());
         let seq = u64::from_le_bytes(h[16..24].try_into().unwrap());
-        let plen = u64::from_le_bytes(h[24..32].try_into().unwrap());
+        let offset = u64::from_le_bytes(h[24..32].try_into().unwrap());
+        let plen = u64::from_le_bytes(h[32..40].try_into().unwrap());
         if plen > MAX_FRAME_PAYLOAD {
             bail!("frame payload {plen} exceeds cap {MAX_FRAME_PAYLOAD}");
         }
-        let crc = u32::from_le_bytes(h[32..36].try_into().unwrap());
+        if offset.checked_add(plen).is_none() {
+            bail!("frame offset {offset} + length {plen} overflows");
+        }
+        let crc = u32::from_le_bytes(h[40..44].try_into().unwrap());
         Ok((
             Frame {
                 ftype,
                 flags,
                 stream_id,
                 seq,
+                offset,
                 payload: Vec::new(),
             },
             plen,
@@ -154,13 +185,19 @@ impl Frame {
         ))
     }
 
+    /// Like [`Frame::decode_header`] but for unsized input: rejects short
+    /// buffers instead of requiring the caller to prove the length.
+    pub fn decode_header_slice(h: &[u8]) -> Result<(Frame, u64, u32)> {
+        if h.len() < HEADER_LEN {
+            bail!("short frame header ({} of {HEADER_LEN} bytes)", h.len());
+        }
+        let hdr: [u8; HEADER_LEN] = h[..HEADER_LEN].try_into().unwrap();
+        Self::decode_header(&hdr)
+    }
+
     /// Decode a full frame from a buffer (tests / in-memory paths).
     pub fn decode(buf: &[u8]) -> Result<Frame> {
-        if buf.len() < HEADER_LEN {
-            bail!("short frame ({} bytes)", buf.len());
-        }
-        let hdr: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
-        let (mut f, plen, crc) = Self::decode_header(&hdr)?;
+        let (mut f, plen, crc) = Self::decode_header_slice(buf)?;
         if buf.len() != HEADER_LEN + plen as usize {
             bail!("frame length mismatch: buf {} payload {plen}", buf.len());
         }
@@ -180,12 +217,14 @@ mod tests {
     #[test]
     fn roundtrip() {
         let f = Frame::new(FrameType::Data, 7, 42, vec![1, 2, 3, 4])
-            .with_flags(flags::LAST_CHUNK);
+            .with_flags(flags::LAST_CHUNK)
+            .with_offset(1 << 20);
         let enc = f.encode();
         assert_eq!(enc.len(), HEADER_LEN + 4);
         let back = Frame::decode(&enc).unwrap();
         assert_eq!(back, f);
         assert!(back.is_last_chunk());
+        assert_eq!(back.offset, 1 << 20);
     }
 
     #[test]
@@ -208,7 +247,7 @@ mod tests {
     fn oversize_payload_rejected() {
         let f = Frame::new(FrameType::Data, 1, 0, vec![]);
         let mut enc = f.encode();
-        enc[24..32].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
+        enc[32..40].copy_from_slice(&(MAX_FRAME_PAYLOAD + 1).to_le_bytes());
         assert!(Frame::decode(&enc).is_err());
     }
 
@@ -221,6 +260,8 @@ mod tests {
             FrameType::End,
             FrameType::Ack,
             FrameType::Ctrl,
+            FrameType::Resume,
+            FrameType::Nack,
         ] {
             assert_eq!(FrameType::from_u8(t as u8), Some(t));
         }
@@ -232,5 +273,77 @@ mod tests {
     fn empty_payload_ok() {
         let f = Frame::new(FrameType::End, 3, 9, vec![]);
         assert_eq!(Frame::decode(&f.encode()).unwrap(), f);
+    }
+
+    // -- decode_header corruption matrix (satellite: today only the happy
+    // path was covered) -------------------------------------------------------
+
+    fn header_of(f: &Frame) -> [u8; HEADER_LEN] {
+        f.encode_header()
+    }
+
+    #[test]
+    fn decode_header_rejects_every_corrupt_field() {
+        let f = Frame::new(FrameType::Data, 5, 3, vec![1, 2, 3]).with_offset(64);
+
+        // bad magic, any byte of it
+        for i in 0..4 {
+            let mut h = header_of(&f);
+            h[i] ^= 0x5a;
+            assert!(Frame::decode_header(&h).is_err(), "magic byte {i}");
+        }
+        // wrong version (v1 headers are narrower — must be rejected, not
+        // misparsed)
+        let mut h = header_of(&f);
+        h[4] = 1;
+        assert!(Frame::decode_header(&h).is_err());
+        // unknown frame type
+        let mut h = header_of(&f);
+        h[5] = 0;
+        assert!(Frame::decode_header(&h).is_err());
+        h[5] = 200;
+        assert!(Frame::decode_header(&h).is_err());
+        // payload length over cap
+        let mut h = header_of(&f);
+        h[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Frame::decode_header(&h).is_err());
+        // offset + length overflow
+        let mut h = header_of(&f);
+        h[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Frame::decode_header(&h).is_err());
+    }
+
+    #[test]
+    fn decode_header_slice_rejects_short_input() {
+        let f = Frame::new(FrameType::Ctrl, 1, 0, vec![7; 8]);
+        let enc = f.encode();
+        for cut in [0, 1, HEADER_LEN / 2, HEADER_LEN - 1] {
+            assert!(
+                Frame::decode_header_slice(&enc[..cut]).is_err(),
+                "cut at {cut}"
+            );
+        }
+        assert!(Frame::decode_header_slice(&enc).is_ok());
+    }
+
+    #[test]
+    fn decode_rejects_crc_mismatch_in_header() {
+        let f = Frame::new(FrameType::Data, 2, 1, vec![42; 32]);
+        let mut enc = f.encode();
+        // flip a crc byte (bytes 40..44) rather than the payload
+        enc[41] ^= 0x01;
+        let err = Frame::decode(&enc).unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn decode_header_ignores_payload_corruption() {
+        // The header itself carries the payload crc; header parsing must
+        // succeed and hand back (plen, crc) for the caller to verify.
+        let f = Frame::new(FrameType::Data, 2, 1, vec![42; 32]);
+        let (parsed, plen, crc) = Frame::decode_header(&f.encode_header()).unwrap();
+        assert_eq!(parsed.ftype, FrameType::Data);
+        assert_eq!(plen, 32);
+        assert_eq!(crc, crc32fast::hash(&f.payload));
     }
 }

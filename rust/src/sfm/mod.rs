@@ -2,9 +2,15 @@
 //!
 //! Large objects are divided into chunks (default 1 MB) and streamed as
 //! framed messages over a pluggable [`driver::Driver`] (in-memory, TCP,
-//! or bandwidth-shaped). Upper layers ([`crate::streaming`],
-//! [`crate::coordinator`]) never touch sockets directly, so drivers can
-//! be swapped "without affecting the upper-layer applications".
+//! bandwidth-shaped, or fault-injected). Upper layers
+//! ([`crate::streaming`], [`crate::coordinator`]) never touch sockets
+//! directly, so drivers can be swapped "without affecting the
+//! upper-layer applications".
+//!
+//! v2 adds a resumable, out-of-order discipline on top of the same
+//! frames: position-addressed chunks, per-unit [`ChunkTable`] bitmaps,
+//! NACK-driven selective retransmission and resume probes — see
+//! DESIGN.md for the protocol walkthrough.
 
 pub mod driver;
 pub mod endpoint;
@@ -14,5 +20,9 @@ pub mod netsim;
 pub mod tcp;
 
 pub use driver::{Driver, DriverPair};
-pub use endpoint::{Event, ObjectSender, SfmEndpoint, DEFAULT_CHUNK};
+pub use endpoint::{
+    BlobSink, ChunkTable, Event, ObjectSender, ReliableReport, ResumePolicy, SfmEndpoint,
+    SliceSource, UnitSink, UnitSource, DEFAULT_CHUNK,
+};
 pub use frame::{Frame, FrameType};
+pub use netsim::{fault_pair, FaultDriver, FaultStats, NetSimDriver};

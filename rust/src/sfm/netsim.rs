@@ -1,13 +1,26 @@
-//! Network-condition simulation: wraps any [`Driver`] and applies a
-//! bandwidth cap and per-frame latency on send. Powers the paper's
-//! future-work bandwidth-sweep experiment (EXPERIMENTS X2) — quantized
-//! vs fp32 wall-clock across 10 Mbps … 10 Gbps links.
+//! Network-condition simulation, two layers deep:
+//!
+//! * [`NetSimDriver`] — wraps any [`Driver`] with a bandwidth cap and
+//!   per-frame latency on send (the paper's bandwidth-sweep experiment).
+//! * [`FaultDriver`] — wraps any [`Driver`] with a **seeded**
+//!   fault-injection schedule: per-frame drop / duplicate / one-slot
+//!   reorder, plus a disconnect-at-byte-N blackout that swallows a burst
+//!   of frames mid-transfer. Every decision comes from a [`SplitMix64`]
+//!   stream, so a failure scenario replays bit-identically from its
+//!   [`FaultProfile`] — the substrate for deterministic failure-scenario
+//!   tests (`rust/tests/fault_streaming.rs`).
+//!
+//! Faults are applied on the *send* side of the wrapped driver, modeling
+//! loss on the outgoing link; wrap each direction separately (with
+//! [`FaultProfile::reseeded`]) for asymmetric links.
 
 use super::driver::{Driver, DriverPair};
-use super::frame::Frame;
-use crate::config::NetProfile;
+use super::frame::{Frame, FrameType};
+use crate::config::{FaultProfile, NetProfile};
+use crate::util::rng::SplitMix64;
 use anyhow::Result;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub struct NetSimDriver {
@@ -83,6 +96,167 @@ pub fn shape_pair(pair: DriverPair, profile: NetProfile) -> DriverPair {
     }
 }
 
+// -- fault injection ----------------------------------------------------------
+
+/// Counters of what the fault layer actually did (reads are test
+/// assertions; the injector itself never consults them).
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub dropped: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub reordered: AtomicU64,
+    pub blackout_dropped: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn total_lost(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed) + self.blackout_dropped.load(Ordering::Relaxed)
+    }
+}
+
+struct FaultState {
+    rng: SplitMix64,
+    /// Cumulative wire bytes offered to send (pre-fault), for the
+    /// disconnect-at-byte-N trigger.
+    offered_bytes: u64,
+    /// Frames the active blackout still swallows.
+    blackout_left: u64,
+    /// The one-shot blackout already fired.
+    blackout_fired: bool,
+    /// Held-back frame for one-slot reordering.
+    held: Option<Frame>,
+}
+
+/// A [`Driver`] decorator injecting deterministic faults on send.
+pub struct FaultDriver {
+    inner: Box<dyn Driver>,
+    plan: FaultProfile,
+    state: Mutex<FaultState>,
+    stats: Arc<FaultStats>,
+}
+
+impl FaultDriver {
+    /// Wrap `inner`; returns the driver and a handle to its fault
+    /// counters (the driver itself is usually boxed away into an
+    /// endpoint).
+    pub fn wrap(inner: Box<dyn Driver>, plan: FaultProfile) -> (FaultDriver, Arc<FaultStats>) {
+        let stats = Arc::new(FaultStats::default());
+        (
+            FaultDriver {
+                inner,
+                plan,
+                state: Mutex::new(FaultState {
+                    rng: SplitMix64::new(plan.seed ^ 0xFA17_1A7E_C7ED_5EED),
+                    offered_bytes: 0,
+                    blackout_left: 0,
+                    blackout_fired: false,
+                    held: None,
+                }),
+                stats: stats.clone(),
+            },
+            stats,
+        )
+    }
+
+    pub fn stats(&self) -> Arc<FaultStats> {
+        self.stats.clone()
+    }
+
+    /// Deliver any held-back frame (used when a later frame flushes it).
+    fn flush_held(&self, st: &mut FaultState) -> Result<()> {
+        if let Some(h) = st.held.take() {
+            self.inner.send(h)?;
+        }
+        Ok(())
+    }
+}
+
+impl Driver for FaultDriver {
+    fn send(&self, frame: Frame) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.offered_bytes += frame.wire_len() as u64;
+
+        // One-shot blackout: the connection "drops" at byte N and eats a
+        // burst of frames (whatever was in flight) before recovering.
+        if !st.blackout_fired
+            && self.plan.disconnect_at_bytes > 0
+            && st.offered_bytes >= self.plan.disconnect_at_bytes
+        {
+            st.blackout_fired = true;
+            st.blackout_left = self.plan.disconnect_frames.max(1);
+        }
+        if st.blackout_left > 0 {
+            st.blackout_left -= 1;
+            st.held = None; // in-flight held frame dies with the link
+            self.stats.blackout_dropped.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+
+        let subject = frame.ftype == FrameType::Data || !self.plan.data_only;
+        if !subject {
+            self.flush_held(&mut st)?;
+            return self.inner.send(frame);
+        }
+
+        if self.plan.drop_rate > 0.0 && st.rng.next_f64() < self.plan.drop_rate {
+            self.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        if self.plan.reorder_rate > 0.0
+            && st.held.is_none()
+            && st.rng.next_f64() < self.plan.reorder_rate
+        {
+            self.stats.reordered.fetch_add(1, Ordering::Relaxed);
+            st.held = Some(frame);
+            return Ok(());
+        }
+        let dup = self.plan.dup_rate > 0.0 && st.rng.next_f64() < self.plan.dup_rate;
+        let copy = if dup { Some(frame.clone()) } else { None };
+        self.inner.send(frame)?;
+        self.flush_held(&mut st)?;
+        if let Some(c) = copy {
+            self.stats.duplicated.fetch_add(1, Ordering::Relaxed);
+            self.inner.send(c)?;
+        }
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Frame> {
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "faultsim"
+    }
+
+    fn max_message_bytes(&self) -> Option<u64> {
+        self.inner.max_message_bytes()
+    }
+}
+
+/// Wrap the a→b direction of a pair with `plan_a` and the b→a direction
+/// with `plan_b`. Returns the pair plus both fault-counter handles.
+pub fn fault_pair(
+    pair: DriverPair,
+    plan_a: FaultProfile,
+    plan_b: FaultProfile,
+) -> (DriverPair, Arc<FaultStats>, Arc<FaultStats>) {
+    let (da, sa) = FaultDriver::wrap(pair.a, plan_a);
+    let (db, sb) = FaultDriver::wrap(pair.b, plan_b);
+    (
+        DriverPair {
+            a: Box::new(da),
+            b: Box::new(db),
+        },
+        sa,
+        sb,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +296,138 @@ mod tests {
         assert_eq!(f.payload.len(), 100_000);
         let dt = t0.elapsed();
         assert!(dt >= Duration::from_millis(9), "{dt:?}");
+    }
+
+    fn data(seq: u64) -> Frame {
+        Frame::new(FrameType::Data, 1, seq, vec![seq as u8; 100])
+    }
+
+    fn drain(d: &dyn Driver) -> Vec<Frame> {
+        let mut out = Vec::new();
+        while let Ok(Some(f)) = d.recv_timeout(Duration::from_millis(20)) {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn drop_schedule_is_deterministic() {
+        let plan = FaultProfile {
+            seed: 11,
+            drop_rate: 0.3,
+            ..FaultProfile::NONE
+        };
+        let run = || {
+            let (pair, stats, _) = fault_pair(inmem::pair(256), plan, FaultProfile::NONE);
+            for i in 0..100 {
+                pair.a.send(data(i)).unwrap();
+            }
+            let seqs: Vec<u64> = drain(pair.b.as_ref()).iter().map(|f| f.seq).collect();
+            (seqs, stats.dropped.load(Ordering::Relaxed))
+        };
+        let (s1, d1) = run();
+        let (s2, d2) = run();
+        assert_eq!(s1, s2, "same seed must drop the same frames");
+        assert_eq!(d1, d2);
+        assert!(d1 > 10 && d1 < 60, "drop count {d1} wildly off 30%");
+        assert_eq!(s1.len() as u64, 100 - d1);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mk = |seed| FaultProfile {
+            seed,
+            drop_rate: 0.3,
+            ..FaultProfile::NONE
+        };
+        let run = |plan| {
+            let (pair, _, _) = fault_pair(inmem::pair(256), plan, FaultProfile::NONE);
+            for i in 0..100 {
+                pair.a.send(data(i)).unwrap();
+            }
+            drain(pair.b.as_ref()).iter().map(|f| f.seq).collect::<Vec<_>>()
+        };
+        assert_ne!(run(mk(1)), run(mk(2)));
+    }
+
+    #[test]
+    fn duplicates_are_delivered_twice() {
+        let plan = FaultProfile {
+            seed: 3,
+            dup_rate: 0.5,
+            ..FaultProfile::NONE
+        };
+        let (pair, stats, _) = fault_pair(inmem::pair(512), plan, FaultProfile::NONE);
+        for i in 0..50 {
+            pair.a.send(data(i)).unwrap();
+        }
+        let got = drain(pair.b.as_ref());
+        let dups = stats.duplicated.load(Ordering::Relaxed);
+        assert!(dups > 5, "dup counter {dups}");
+        assert_eq!(got.len() as u64, 50 + dups);
+    }
+
+    #[test]
+    fn reorder_swaps_but_loses_nothing() {
+        let plan = FaultProfile {
+            seed: 9,
+            reorder_rate: 0.4,
+            ..FaultProfile::NONE
+        };
+        let (pair, stats, _) = fault_pair(inmem::pair(512), plan, FaultProfile::NONE);
+        for i in 0..50 {
+            pair.a.send(data(i)).unwrap();
+        }
+        // a non-data frame flushes any held frame
+        pair.a
+            .send(Frame::new(FrameType::End, 1, 50, vec![]))
+            .unwrap();
+        let got = drain(pair.b.as_ref());
+        assert_eq!(got.len(), 51, "reordering must not lose frames");
+        let mut seqs: Vec<u64> = got.iter().map(|f| f.seq).collect();
+        assert_ne!(seqs, (0..=50).collect::<Vec<u64>>(), "expected some disorder");
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..=50).collect::<Vec<u64>>());
+        assert!(stats.reordered.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn control_frames_pass_clean_when_data_only() {
+        let plan = FaultProfile {
+            seed: 5,
+            drop_rate: 1.0, // every data frame dies
+            ..FaultProfile::NONE
+        };
+        let (pair, stats, _) = fault_pair(inmem::pair(64), plan, FaultProfile::NONE);
+        pair.a.send(data(0)).unwrap();
+        pair.a
+            .send(Frame::new(FrameType::Ctrl, 2, 0, b"{}".to_vec()))
+            .unwrap();
+        let got = drain(pair.b.as_ref());
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].ftype, FrameType::Ctrl);
+        assert_eq!(stats.dropped.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn blackout_fires_once_at_byte_threshold() {
+        let plan = FaultProfile {
+            seed: 1,
+            disconnect_at_bytes: 500, // after ~4 frames of 144 wire bytes
+            disconnect_frames: 3,
+            ..FaultProfile::NONE
+        };
+        let (pair, stats, _) = fault_pair(inmem::pair(256), plan, FaultProfile::NONE);
+        for i in 0..20 {
+            pair.a.send(data(i)).unwrap();
+        }
+        let got = drain(pair.b.as_ref());
+        assert_eq!(stats.blackout_dropped.load(Ordering::Relaxed), 3);
+        assert_eq!(got.len(), 17);
+        // the lost frames are consecutive (a burst, not scattered)
+        let seqs: Vec<u64> = got.iter().map(|f| f.seq).collect();
+        let missing: Vec<u64> = (0..20).filter(|s| !seqs.contains(s)).collect();
+        assert_eq!(missing.len(), 3);
+        assert_eq!(missing[2] - missing[0], 2, "blackout must be contiguous: {missing:?}");
     }
 }

@@ -148,6 +148,87 @@ mod tests {
     }
 
     #[test]
+    fn garbage_header_is_fatal_not_hang() {
+        // A peer writing junk must produce a decode error on the first
+        // header, not a desynced stream or a hang.
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            d.recv()
+        });
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        use std::io::Write as _;
+        raw.write_all(&[0xAB; HEADER_LEN + 32]).unwrap();
+        drop(raw);
+        let err = srv.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_crc_detected_on_socket() {
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            d.recv()
+        });
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        use std::io::Write as _;
+        let mut bytes = Frame::new(FrameType::Data, 9, 0, vec![5u8; 256]).encode();
+        bytes[HEADER_LEN + 100] ^= 0xff; // corrupt payload, keep header crc
+        raw.write_all(&bytes).unwrap();
+        drop(raw);
+        let err = srv.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("crc"), "{err}");
+    }
+
+    #[test]
+    fn truncated_header_is_clean_error() {
+        // Connection dying mid-header: read_exact fails, no partial parse.
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            d.recv()
+        });
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        use std::io::Write as _;
+        let bytes = Frame::new(FrameType::Ctrl, 1, 0, vec![1, 2, 3]).encode();
+        raw.write_all(&bytes[..HEADER_LEN / 2]).unwrap();
+        drop(raw); // EOF mid-header
+        assert!(srv.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn corrupt_header_through_wrapped_drivers() {
+        // decode_header rejects corruption identically no matter which
+        // driver delivered the bytes: netsim and fault layers forward
+        // frames verbatim, so the TCP byte layer is the only decode
+        // point — validate a tampered version byte there.
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || {
+            let tcp = TcpDriver::accept(&listener).unwrap();
+            // wrap in the fault layer (no faults): recv path must still
+            // surface the decode error
+            let (fd, _stats) = crate::sfm::netsim::FaultDriver::wrap(
+                Box::new(tcp),
+                crate::config::FaultProfile::NONE,
+            );
+            fd.recv()
+        });
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        use std::io::Write as _;
+        let mut bytes = Frame::new(FrameType::Data, 2, 0, vec![7u8; 64]).encode();
+        bytes[4] = 99; // impossible protocol version
+        raw.write_all(&bytes).unwrap();
+        drop(raw);
+        let err = srv.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
     fn many_frames_ordered() {
         let listener = loopback_listener().unwrap();
         let addr = listener.local_addr().unwrap().to_string();

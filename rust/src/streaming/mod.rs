@@ -1,9 +1,15 @@
 //! Object streaming (paper §III): regular / container / file transmission
 //! of weight messages, plus the pull-based [`retriever::ObjectRetriever`].
+//!
+//! Both ordered (legacy) and resumable out-of-order disciplines are
+//! provided; see DESIGN.md §Resume for the protocol.
 
 pub mod object;
 pub mod retriever;
 pub mod wire;
 
-pub use object::{recv_weights, send_weights, TransferStats};
-pub use wire::{QuantizedContainer, WeightsMsg};
+pub use object::{
+    recv_file_resumable, recv_weights, recv_weights_resumable, send_file_resumable,
+    send_weights, send_weights_resumable, FileSink, TransferStats,
+};
+pub use wire::{QuantizedContainer, TransferManifest, WeightsMsg};

@@ -6,15 +6,21 @@
 //! registered with. Existing task code only swaps "read attachment from
 //! message" for `retriever.retrieve(id)` — no restructuring of the
 //! workflow around push-streaming.
+//!
+//! Requests carrying `"reliable": true` are served over the resumable
+//! out-of-order protocol with a probe-first handshake: a consumer that
+//! lost its connection mid-retrieval reconnects, re-requests the same id
+//! (same `dest` for files), and receives only the chunks its `.part`
+//! manifest is missing.
 
 use super::object::{self, TransferStats};
 use super::wire::WeightsMsg;
 use crate::config::StreamingMode;
-use crate::sfm::SfmEndpoint;
+use crate::sfm::{ResumePolicy, SfmEndpoint};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -54,6 +60,15 @@ impl ObjectStore {
         self.objects.lock().unwrap().keys().cloned().collect()
     }
 
+    /// The policy used for reliable serves: probe first, so reconnecting
+    /// consumers resume instead of restarting.
+    fn serve_policy() -> ResumePolicy {
+        ResumePolicy {
+            probe_first: true,
+            ..Default::default()
+        }
+    }
+
     /// Service a single retrieval request arriving on `ep`. Returns the
     /// requested id. Blocks until a request arrives (or `timeout`).
     pub fn serve_one(&self, ep: &SfmEndpoint, timeout: Option<Duration>) -> Result<String> {
@@ -67,6 +82,7 @@ impl ObjectStore {
             .and_then(|j| j.as_str())
             .ok_or_else(|| anyhow!("retrieve without id"))?
             .to_string();
+        let reliable = req.get("reliable").and_then(|j| j.as_bool()).unwrap_or(false);
         let guard = self.objects.lock().unwrap();
         match guard.get(&id) {
             None => {
@@ -82,18 +98,35 @@ impl ObjectStore {
                 ep.send_ctrl(&Json::obj(vec![
                     ("op", Json::str("retrieve_ok")),
                     ("id", Json::str(id.clone())),
+                    ("reliable", Json::Bool(reliable)),
                 ]))?;
+                if reliable {
+                    object::send_weights_resumable(
+                        ep,
+                        msg,
+                        *mode,
+                        self.spool_dir.as_deref(),
+                        &Self::serve_policy(),
+                    )?;
+                    // reliable transfers carry their own completion ack
+                    return Ok(id);
+                }
                 object::send_weights(ep, msg, *mode, self.spool_dir.as_deref())?;
             }
             Some(StoredObject::File(path)) => {
                 ep.send_ctrl(&Json::obj(vec![
                     ("op", Json::str("retrieve_ok")),
                     ("id", Json::str(id.clone())),
+                    ("reliable", Json::Bool(reliable)),
                 ]))?;
+                if reliable {
+                    object::send_file_resumable(ep, path, 0, &Self::serve_policy())?;
+                    return Ok(id);
+                }
                 object::send_file(ep, path, 0)?;
             }
         }
-        // wait for the receiver's transfer-level ack
+        // wait for the receiver's transfer-level ack (legacy path only)
         let _ = ep.recv_event(timeout);
         Ok(id)
     }
@@ -115,22 +148,44 @@ impl<'a> ObjectRetriever<'a> {
         }
     }
 
-    /// Retrieve weights registered under `id`.
-    pub fn retrieve(&self, id: &str) -> Result<(WeightsMsg, TransferStats)> {
+    fn request(&self, id: &str, reliable: bool) -> Result<()> {
         self.ep.send_ctrl(&Json::obj(vec![
             ("op", Json::str("retrieve")),
             ("id", Json::str(id)),
+            ("reliable", Json::Bool(reliable)),
         ]))?;
         let resp = self.ep.recv_ctrl(self.timeout)?;
         match resp.get("op").and_then(|j| j.as_str()) {
-            Some("retrieve_ok") => {}
+            Some("retrieve_ok") => Ok(()),
             Some("retrieve_nak") => bail!(
                 "retrieval of '{id}' refused: {}",
                 resp.get("error").and_then(|j| j.as_str()).unwrap_or("?")
             ),
             other => bail!("unexpected response op {other:?}"),
         }
+    }
+
+    /// Retrieve weights registered under `id` (legacy ordered transfer).
+    pub fn retrieve(&self, id: &str) -> Result<(WeightsMsg, TransferStats)> {
+        self.request(id, false)?;
         object::recv_weights(self.ep, self.spool_dir.as_deref())
+    }
+
+    /// Retrieve weights over the resumable protocol: tolerant of chunk
+    /// loss/reordering on the link.
+    pub fn retrieve_reliable(&self, id: &str) -> Result<(WeightsMsg, TransferStats)> {
+        self.request(id, true)?;
+        object::recv_weights_resumable(self.ep, self.spool_dir.as_deref(), self.timeout)
+    }
+
+    /// Retrieve a file object into `dest` over the resumable protocol.
+    /// On a broken connection the partial state survives as
+    /// `<dest>.part` + manifest; calling this again (on a fresh
+    /// connection) with the same `dest` transfers only the missing
+    /// chunks.
+    pub fn retrieve_file(&self, id: &str, dest: &Path) -> Result<TransferStats> {
+        self.request(id, true)?;
+        object::recv_file_resumable(self.ep, dest, self.timeout)
     }
 }
 
@@ -166,6 +221,52 @@ mod tests {
     }
 
     #[test]
+    fn retrieve_reliable_all_modes() {
+        for mode in [StreamingMode::Regular, StreamingMode::Container, StreamingMode::File] {
+            let (server_ep, client_ep) = endpoints();
+            let msg = WeightsMsg::Plain(materialize(&ModelSpec::llama_mini(), 56));
+            let want = msg.clone();
+            let server = std::thread::spawn(move || {
+                let store = ObjectStore::new(Some(std::env::temp_dir()));
+                store.register("w", StoredObject::Weights(msg, mode));
+                store.serve_one(&server_ep, Some(Duration::from_secs(10))).unwrap()
+            });
+            let retriever = ObjectRetriever::new(&client_ep, Some(std::env::temp_dir()));
+            let (got, stats) = retriever.retrieve_reliable("w").unwrap();
+            assert_eq!(server.join().unwrap(), "w");
+            assert_eq!(got, want, "{mode:?}");
+            assert!(stats.wire_bytes > 0);
+            assert_eq!(stats.retransmit_frames, 0, "{mode:?} clean link");
+        }
+    }
+
+    #[test]
+    fn retrieve_file_reliable() {
+        let dir = std::env::temp_dir();
+        let src = dir.join(format!("flare_store_file_{}", std::process::id()));
+        let dest = dir.join(format!("flare_fetched_file_{}", std::process::id()));
+        std::fs::remove_file(&dest).ok();
+        let payload: Vec<u8> = (0..123_456u32).map(|i| (i % 201) as u8).collect();
+        std::fs::write(&src, &payload).unwrap();
+        let (server_ep, client_ep) = endpoints();
+        let server = std::thread::spawn({
+            let src = src.clone();
+            move || {
+                let store = ObjectStore::new(None);
+                store.register("ckpt", StoredObject::File(src));
+                store.serve_one(&server_ep, Some(Duration::from_secs(10))).unwrap()
+            }
+        });
+        let retriever = ObjectRetriever::new(&client_ep, None);
+        let stats = retriever.retrieve_file("ckpt", &dest).unwrap();
+        assert_eq!(server.join().unwrap(), "ckpt");
+        assert_eq!(stats.wire_bytes, payload.len() as u64);
+        assert_eq!(std::fs::read(&dest).unwrap(), payload);
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dest).ok();
+    }
+
+    #[test]
     fn unknown_object_naks() {
         let (server_ep, client_ep) = endpoints();
         let server = std::thread::spawn(move || {
@@ -183,6 +284,7 @@ mod tests {
         let store = ObjectStore::new(None);
         store.register("a", StoredObject::File(PathBuf::from("/tmp/x")));
         assert_eq!(store.ids(), vec!["a".to_string()]);
+        assert!(!store.unregister("b"));
         assert!(store.unregister("a"));
         assert!(!store.unregister("a"));
     }

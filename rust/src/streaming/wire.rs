@@ -17,8 +17,10 @@
 
 use crate::config::QuantScheme;
 use crate::quant::{QuantMeta, QuantizedTensor};
+use crate::sfm::ChunkTable;
 use crate::tensor::{DType, ParamContainer, Tensor, TensorMeta};
 use crate::util::bytes as b;
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::io::{Read, Write};
 
@@ -460,6 +462,79 @@ pub fn decode_message<R: Read>(r: &mut R) -> Result<WeightsMsg> {
     }
 }
 
+// -- transfer manifests (resumable file streaming) ---------------------------
+
+/// Persistent record of a partially received resumable transfer — the
+/// on-disk side of the `.part` protocol. Saved next to the `.part` data
+/// file; on reconnect the receiver rebuilds its [`ChunkTable`] from it
+/// and NACKs only what is still missing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferManifest {
+    /// Total unit payload bytes.
+    pub total: u64,
+    /// Chunk grid the bitmap indexes.
+    pub chunk: u64,
+    /// crc32 of the complete unit payload (identity check across
+    /// connections: a manifest for different content must not resume).
+    pub crc: u32,
+    /// Received-chunk bitmap, hex-encoded.
+    pub bitmap_hex: String,
+}
+
+impl TransferManifest {
+    pub fn from_table(table: &ChunkTable, crc: u32) -> TransferManifest {
+        TransferManifest {
+            total: table.total(),
+            chunk: table.chunk_size(),
+            crc,
+            bitmap_hex: table.to_hex(),
+        }
+    }
+
+    /// Rebuild the receive table; rejects inconsistent bitmaps.
+    pub fn to_table(&self) -> Result<ChunkTable> {
+        ChunkTable::from_hex(self.total, self.chunk, &self.bitmap_hex)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total", Json::num(self.total as f64)),
+            ("chunk", Json::num(self.chunk as f64)),
+            ("crc", Json::num(self.crc as f64)),
+            ("bitmap", Json::str(self.bitmap_hex.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TransferManifest> {
+        let get_u64 = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        Ok(TransferManifest {
+            total: get_u64("total")?,
+            chunk: get_u64("chunk")?,
+            crc: get_u64("crc")? as u32,
+            bitmap_hex: j
+                .get("bitmap")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("manifest missing 'bitmap'"))?
+                .to_string(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TransferManifest> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
 /// Total serialized size of a message.
 pub fn message_wire_len(msg: &WeightsMsg) -> u64 {
     let entries: u64 = match msg {
@@ -591,6 +666,35 @@ mod tests {
         )
         .unwrap();
         assert!(decode_message(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn transfer_manifest_roundtrip() {
+        let mut t = ChunkTable::new(10_000, 1024);
+        t.mark(0, 1024).unwrap();
+        t.mark(2048, 1024).unwrap();
+        let m = TransferManifest::from_table(&t, 0xDEAD_BEEF);
+        let j = m.to_json();
+        let back = TransferManifest::from_json(&j).unwrap();
+        assert_eq!(back, m);
+        let table = back.to_table().unwrap();
+        assert_eq!(table, t);
+        assert_eq!(table.received_bytes(), 2048);
+    }
+
+    #[test]
+    fn transfer_manifest_file_roundtrip() {
+        let t = ChunkTable::new(5_000, 1000);
+        let m = TransferManifest::from_table(&t, 7);
+        let path = std::env::temp_dir().join(format!(
+            "flare_manifest_test_{}.json",
+            std::process::id()
+        ));
+        m.save(&path).unwrap();
+        assert_eq!(TransferManifest::load(&path).unwrap(), m);
+        std::fs::remove_file(&path).ok();
+        // corrupt json rejected
+        assert!(TransferManifest::from_json(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

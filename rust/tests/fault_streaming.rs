@@ -1,0 +1,414 @@
+//! Deterministic failure-scenario harness: resumable streaming under
+//! seeded fault injection.
+//!
+//! Every scenario here is driven by a `FaultProfile` seed, so a failing
+//! case replays bit-identically from its profile — drop schedules,
+//! reorderings, duplicate deliveries and the disconnect-at-byte-N
+//! blackout are all functions of the seed, never of wall-clock timing.
+//!
+//! Covered:
+//! * bit-exact reassembly under drop + duplicate + reorder schedules,
+//!   with bounded retransmission overhead;
+//! * the acceptance scenario: a connection dropped mid-transfer
+//!   completes via resume with a bit-exact payload and < 1.25× the
+//!   object size in total offered bytes;
+//! * a multi-client federated round trip over real TCP sockets with
+//!   faulted links in both directions;
+//! * cross-connection resume of a file transfer over TCP via the
+//!   `.part` manifest (reconnect transfers only the missing chunks).
+
+use flare::config::{FaultProfile, JobConfig, QuantScheme, StreamingMode, TrainConfig};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::netsim::fault_pair;
+use flare::sfm::tcp::{loopback_listener, TcpDriver};
+use flare::sfm::{inmem, Driver, Frame, ResumePolicy, SfmEndpoint};
+use flare::streaming::{recv_file_resumable, send_file_resumable};
+use flare::tensor::init::materialize;
+use flare::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn patterned(len: usize) -> Vec<u8> {
+    (0..len as u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect()
+}
+
+fn quick_policy() -> ResumePolicy {
+    ResumePolicy {
+        max_attempts: 24,
+        ack_timeout: Duration::from_millis(400),
+        probe_first: false,
+    }
+}
+
+/// Run one reliable blob transfer over a faulted in-memory link; returns
+/// (sender endpoint, receiver endpoint, received payload, sender report).
+fn faulted_blob_transfer(
+    blob: Vec<u8>,
+    chunk: usize,
+    plan: FaultProfile,
+    policy: ResumePolicy,
+) -> (SfmEndpoint, SfmEndpoint, Vec<u8>, flare::sfm::ReliableReport) {
+    let (pair, _stats_a, _stats_b) = fault_pair(inmem::pair(4096), plan, FaultProfile::NONE);
+    let a = SfmEndpoint::new(pair.a).with_chunk(chunk);
+    let b = SfmEndpoint::new(pair.b).with_chunk(chunk);
+    let want_len = blob.len();
+    let tx = std::thread::spawn(move || {
+        let report = a
+            .send_blob_reliable(Json::obj(vec![("kind", Json::str("blob"))]), &blob, &policy)
+            .unwrap();
+        (a, report)
+    });
+    let (_desc, got, _rx_report) = b.recv_blob_reliable(Some(Duration::from_secs(60))).unwrap();
+    let (a, report) = tx.join().unwrap();
+    assert_eq!(got.len(), want_len);
+    (a, b, got, report)
+}
+
+#[test]
+fn drop_schedule_reassembles_bit_exact() {
+    let blob = patterned(2 << 20); // 2 MB, 128 chunks of 16 KB
+    let plan = FaultProfile {
+        seed: 1001,
+        drop_rate: 0.08,
+        ..FaultProfile::NONE
+    };
+    let (a, _b, got, report) = faulted_blob_transfer(blob.clone(), 16 * 1024, plan, quick_policy());
+    assert_eq!(got, blob, "reassembly must be bit-exact");
+    assert!(report.retransmit_frames > 0, "8% drop must force retransmits");
+    // Bounded retransmission: expected ~8% loss, first-round retransmits
+    // also face 8% loss; anything over 25% of the object means the
+    // protocol is resending blindly.
+    assert!(
+        report.retransmit_bytes < blob.len() as u64 / 4,
+        "retransmit_bytes {} out of bounds",
+        report.retransmit_bytes
+    );
+    let offered = a.stats.bytes_sent.load(Ordering::Relaxed);
+    assert!(
+        offered < blob.len() as u64 * 5 / 4,
+        "total offered bytes {offered} exceed 1.25x object"
+    );
+}
+
+#[test]
+fn reorder_and_duplicates_reassemble_bit_exact() {
+    let blob = patterned(1 << 20);
+    let plan = FaultProfile {
+        seed: 2002,
+        drop_rate: 0.06,
+        dup_rate: 0.06,
+        reorder_rate: 0.10,
+        ..FaultProfile::NONE
+    };
+    let (_a, b, got, report) = faulted_blob_transfer(blob.clone(), 8 * 1024, plan, quick_policy());
+    assert_eq!(got, blob);
+    // duplicates must be absorbed by the chunk table, not corrupt state
+    assert!(
+        b.stats.dup_chunks.load(Ordering::Relaxed) > 0,
+        "5% dup rate must hit the dup counter"
+    );
+    assert!(report.retransmit_frames > 0);
+}
+
+#[test]
+fn same_seed_same_recovery_schedule() {
+    // The whole failure scenario — losses AND the recovery traffic — is
+    // a deterministic function of the fault seed.
+    let plan = FaultProfile {
+        seed: 31337,
+        drop_rate: 0.06,
+        reorder_rate: 0.05,
+        ..FaultProfile::NONE
+    };
+    // Generous ack timeout: no spurious probe can fire, so the traffic
+    // is a pure function of the seed (not of scheduler timing).
+    let patient = ResumePolicy {
+        max_attempts: 24,
+        ack_timeout: Duration::from_secs(10),
+        probe_first: false,
+    };
+    let run = move || {
+        let blob = patterned(512 * 1024);
+        let (a, _b, got, report) =
+            faulted_blob_transfer(blob.clone(), 8 * 1024, plan, patient.clone());
+        assert_eq!(got, blob);
+        (
+            report.retransmit_frames,
+            report.nack_rounds,
+            a.stats.bytes_sent.load(Ordering::Relaxed),
+        )
+    };
+    assert_eq!(run(), run(), "same seed must replay the same scenario");
+}
+
+/// Acceptance scenario: the link blacks out mid-transfer (disconnect at
+/// byte N, a burst of frames lost), and the transfer completes via
+/// resume with a bit-exact payload, moving < 1.25x the object size.
+#[test]
+fn disconnect_mid_transfer_completes_via_resume() {
+    let blob = patterned(4 << 20); // 4 MB, 256 chunks of 16 KB
+    let plan = FaultProfile {
+        seed: 42,
+        disconnect_at_bytes: 2 << 20, // dies halfway through
+        disconnect_frames: 24,        // ~384 KB of in-flight data vanishes
+        ..FaultProfile::NONE
+    };
+    let (a, _b, got, report) = faulted_blob_transfer(blob.clone(), 16 * 1024, plan, quick_policy());
+    assert_eq!(got, blob, "resume must produce a bit-exact payload");
+    assert!(
+        report.retransmit_frames >= 20,
+        "the blackout burst must be retransmitted ({} frames)",
+        report.retransmit_frames
+    );
+    let offered = a.stats.bytes_sent.load(Ordering::Relaxed);
+    assert!(
+        offered < blob.len() as u64 * 5 / 4,
+        "resume must not restart: offered {offered} vs object {}",
+        blob.len()
+    );
+    // and it genuinely resumed rather than resending the whole object:
+    assert!(
+        report.retransmit_bytes < blob.len() as u64 / 2,
+        "retransmitted {} — looks like a restart",
+        report.retransmit_bytes
+    );
+}
+
+#[test]
+fn multi_client_federated_tcp_with_faulted_links() {
+    flare::util::logging::init();
+    let job = JobConfig {
+        name: "tcp-fault-e2e".into(),
+        clients: 2,
+        rounds: 2,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        reliable: true,
+        chunk_bytes: 16 * 1024,
+        train: TrainConfig {
+            local_steps: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let spec = flare::config::model_spec::ModelSpec::llama_mini();
+    let initial = materialize(&spec, 1);
+    let target = materialize(&spec, 2);
+
+    let listener = loopback_listener().unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let spool = std::env::temp_dir();
+
+    let fault = FaultProfile {
+        seed: 9090,
+        drop_rate: 0.03,
+        reorder_rate: 0.02,
+        ..FaultProfile::NONE
+    };
+
+    let mut client_handles = Vec::new();
+    for i in 0..job.clients {
+        let addr = addr.clone();
+        let target = target.clone();
+        let spool = spool.clone();
+        let quant = job.quant;
+        let mode = job.streaming;
+        let plan = fault.reseeded(100 + i as u64);
+        client_handles.push(std::thread::spawn(move || {
+            let tcp = TcpDriver::connect(&addr).unwrap();
+            let (driver, _stats) = flare::sfm::FaultDriver::wrap(Box::new(tcp), plan);
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                SfmEndpoint::new(Box::new(driver)).with_chunk(16 * 1024),
+                FilterSet::two_way_quantization(quant),
+                MockTrainer::new(target, 0.3, 50 + i as u64),
+                spool,
+            )
+            .with_mode(mode)
+            .with_reliable(true);
+            exec.register().unwrap();
+            exec.run().unwrap()
+        }));
+    }
+
+    let mut controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        spool.clone(),
+    );
+    for i in 0..job.clients {
+        let tcp = TcpDriver::accept(&listener).unwrap();
+        let (driver, _stats) =
+            flare::sfm::FaultDriver::wrap(Box::new(tcp), fault.reseeded(200 + i as u64));
+        controller
+            .accept_client(
+                SfmEndpoint::new(Box::new(driver)).with_chunk(16 * 1024),
+                Some(Duration::from_secs(30)),
+            )
+            .unwrap();
+    }
+    let mut report = Report::new();
+    let global = controller.run(initial.clone(), &mut report).unwrap();
+
+    for h in client_handles {
+        assert_eq!(h.join().unwrap(), job.rounds);
+    }
+    // converged toward the shared target despite the lossy links
+    assert!(global.max_abs_diff(&target) < initial.max_abs_diff(&target));
+    let losses = &report.series["global_loss"];
+    assert!(losses.points.last().unwrap().1 < losses.points[0].1);
+    // recovery happened and is bounded
+    let retransmitted = report.scalars["retransmit_bytes_total"];
+    let total = report.scalars["total_comm_bytes"];
+    assert!(
+        retransmitted > 0.0,
+        "3% drop across rounds must retransmit something"
+    );
+    assert!(
+        retransmitted < total * 0.25,
+        "retransmits {retransmitted} vs total {total} — unbounded recovery"
+    );
+}
+
+/// Client-side driver adapter that kills the connection after N received
+/// frames — simulates the consumer dying mid-download.
+struct CutoffDriver {
+    inner: TcpDriver,
+    left: std::sync::atomic::AtomicI64,
+}
+
+impl CutoffDriver {
+    fn new(inner: TcpDriver, frames: i64) -> CutoffDriver {
+        CutoffDriver {
+            inner,
+            left: std::sync::atomic::AtomicI64::new(frames),
+        }
+    }
+
+    fn tick(&self) -> anyhow::Result<()> {
+        if self.left.fetch_sub(1, Ordering::SeqCst) <= 0 {
+            anyhow::bail!("cutoff: simulated client crash");
+        }
+        Ok(())
+    }
+}
+
+impl Driver for CutoffDriver {
+    fn send(&self, frame: Frame) -> anyhow::Result<()> {
+        self.inner.send(frame)
+    }
+
+    fn recv(&self) -> anyhow::Result<Frame> {
+        self.tick()?;
+        self.inner.recv()
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> anyhow::Result<Option<Frame>> {
+        self.tick()?;
+        self.inner.recv_timeout(timeout)
+    }
+
+    fn name(&self) -> &'static str {
+        "cutoff"
+    }
+}
+
+/// Cross-connection resume over real TCP: the first download dies after
+/// a prefix of frames; the `.part` manifest survives; a reconnect with
+/// probe-first resume transfers only the missing chunks.
+#[test]
+fn tcp_reconnect_resumes_file_from_part_manifest() {
+    let dir = std::env::temp_dir();
+    let src = dir.join(format!("flare_tcp_resume_src_{}", std::process::id()));
+    let dest = dir.join(format!("flare_tcp_resume_dst_{}", std::process::id()));
+    std::fs::remove_file(&dest).ok();
+    std::fs::remove_file(format!("{}.part", dest.display())).ok();
+    std::fs::remove_file(format!("{}.part.json", dest.display())).ok();
+
+    let payload = patterned(1 << 20); // 1 MB, 128 chunks of 8 KB
+    std::fs::write(&src, &payload).unwrap();
+
+    let listener = loopback_listener().unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let server_policy = ResumePolicy {
+        max_attempts: 3,
+        ack_timeout: Duration::from_millis(300),
+        probe_first: true,
+    };
+    let server = std::thread::spawn({
+        let src = src.clone();
+        move || {
+            // Connection 1: the client dies mid-transfer; our send/ack
+            // loop must error out, not hang.
+            let ep1 = SfmEndpoint::new(Box::new(TcpDriver::accept(&listener).unwrap()))
+                .with_chunk(8 * 1024);
+            let first = send_file_resumable(&ep1, &src, 0, &server_policy);
+            assert!(first.is_err(), "first serve must fail when the client dies");
+            // Connection 2: probe-first resume.
+            let ep2 = SfmEndpoint::new(Box::new(TcpDriver::accept(&listener).unwrap()))
+                .with_chunk(8 * 1024);
+            let stats = send_file_resumable(&ep2, &src, 0, &server_policy).unwrap();
+            (stats, ep2.stats.bytes_sent.load(Ordering::Relaxed))
+        }
+    });
+
+    // Connection 1: die after 70 frames (~64 received chunks; the sink
+    // checkpoints every 16, so at least 48 chunks survive in the
+    // manifest).
+    {
+        let tcp = TcpDriver::connect(&addr).unwrap();
+        let driver = CutoffDriver::new(tcp, 70);
+        let ep = SfmEndpoint::new(Box::new(driver)).with_chunk(8 * 1024);
+        let r = recv_file_resumable(&ep, &dest, Some(Duration::from_secs(10)));
+        assert!(r.is_err(), "cutoff must abort the first receive");
+    }
+    assert!(
+        std::path::Path::new(&format!("{}.part.json", dest.display())).exists(),
+        "interrupted receive must leave a .part manifest"
+    );
+
+    // Connection 2: resume.
+    let tcp = TcpDriver::connect(&addr).unwrap();
+    let ep = SfmEndpoint::new(Box::new(tcp)).with_chunk(8 * 1024);
+    let stats = recv_file_resumable(&ep, &dest, Some(Duration::from_secs(10))).unwrap();
+
+    let (server_stats, server_bytes_conn2) = server.join().unwrap();
+    assert_eq!(std::fs::read(&dest).unwrap(), payload, "bit-exact after resume");
+    assert!(
+        stats.resumed_bytes >= 300_000,
+        "manifest resume must skip already-received chunks (resumed {})",
+        stats.resumed_bytes
+    );
+    assert!(
+        server_bytes_conn2 < payload.len() as u64 * 3 / 4,
+        "second connection moved {server_bytes_conn2} bytes — not a resume"
+    );
+    assert_eq!(server_stats.resumed_bytes, stats.resumed_bytes);
+    assert!(
+        !std::path::Path::new(&format!("{}.part.json", dest.display())).exists(),
+        "manifest must be cleaned up after commit"
+    );
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&dest).ok();
+}
+
+/// The fault layer composes under the legacy ordered protocol's
+/// assumptions too: with faults disabled it is a transparent wrapper.
+#[test]
+fn noop_fault_layer_is_transparent() {
+    let (pair, sa, sb) = fault_pair(inmem::pair(64), FaultProfile::NONE, FaultProfile::NONE);
+    let a = SfmEndpoint::new(pair.a);
+    let b = SfmEndpoint::new(pair.b);
+    let blob = patterned(100_000);
+    let want = blob.clone();
+    std::thread::spawn(move || a.send_blob(Json::Null, &blob).unwrap());
+    let (_d, got) = b.recv_blob(None).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(sa.total_lost(), 0);
+    assert_eq!(sb.total_lost(), 0);
+}

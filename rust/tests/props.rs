@@ -1,8 +1,10 @@
-//! Property-based invariants over the codecs, wire format and containers
-//! (mini-proptest harness; see flare::util::prop).
+//! Property-based invariants over the codecs, wire format, containers
+//! and the resumable-transfer chunk tables (mini-proptest harness; see
+//! flare::util::prop).
 
 use flare::config::QuantScheme;
-use flare::quant::{dequantize, quantize};
+use flare::quant::{dequantize, payload_dtype, quantize, BLOCK_4BIT, BLOCK_8BIT};
+use flare::sfm::ChunkTable;
 use flare::streaming::wire::{self, Entry};
 use flare::tensor::{ParamContainer, Tensor};
 use flare::util::json::Json;
@@ -15,6 +17,14 @@ fn cfg(cases: usize) -> PropConfig {
         ..Default::default()
     }
 }
+
+const ALL_SCHEMES: [QuantScheme; 5] = [
+    QuantScheme::Fp16,
+    QuantScheme::Bf16,
+    QuantScheme::Blockwise8,
+    QuantScheme::Fp4,
+    QuantScheme::Nf4,
+];
 
 #[test]
 fn prop_quant_roundtrip_preserves_shape_and_bounds() {
@@ -63,6 +73,180 @@ fn prop_quant_roundtrip_preserves_shape_and_bounds() {
             },
         );
     }
+}
+
+#[test]
+fn prop_quant_size_invariants() {
+    // Payload and metadata sizes are pure functions of (scheme, n) — the
+    // Table II accounting must hold for every input, including the
+    // adversarial diet (zeros, subnormals, infinities).
+    for scheme in ALL_SCHEMES {
+        check(
+            cfg(64),
+            &format!("quant sizes {scheme:?}"),
+            |rng| gen_f32_vec(rng, 20_000),
+            |v| {
+                let n = v.len();
+                let t = Tensor::from_f32(vec![n], v.clone());
+                let q = quantize(scheme, &t).map_err(|e| e.to_string())?;
+                let want_payload = payload_dtype(scheme)
+                    .map_err(|e| e.to_string())?
+                    .size_of_elems(n);
+                if q.payload.len() != want_payload {
+                    return Err(format!("payload {} != {want_payload}", q.payload.len()));
+                }
+                let (want_absmax, want_codebook, want_block) = match scheme {
+                    QuantScheme::Fp16 | QuantScheme::Bf16 => (0, 0, 0),
+                    QuantScheme::Blockwise8 => (n.div_ceil(BLOCK_8BIT), 256, BLOCK_8BIT),
+                    _ => (n.div_ceil(BLOCK_4BIT), 0, BLOCK_4BIT),
+                };
+                if q.meta.absmax.len() != want_absmax {
+                    return Err(format!("absmax {} != {want_absmax}", q.meta.absmax.len()));
+                }
+                if q.meta.codebook.len() != want_codebook {
+                    return Err(format!(
+                        "codebook {} != {want_codebook}",
+                        q.meta.codebook.len()
+                    ));
+                }
+                if q.meta.block_size != want_block {
+                    return Err(format!("block {} != {want_block}", q.meta.block_size));
+                }
+                if q.meta_bytes() != 4 * (want_absmax + want_codebook) as u64 {
+                    return Err("meta_bytes accounting broken".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_quant_truncated_decode_never_panics() {
+    // Wire-received quantized tensors are attacker-controlled: any
+    // truncation or metadata corruption must produce Err, never a panic
+    // or OOM.
+    for scheme in ALL_SCHEMES {
+        check(
+            cfg(96),
+            &format!("truncated decode {scheme:?}"),
+            |rng| {
+                let v = gen_f32_vec(rng, 8_000);
+                let kind = rng.next_below(5);
+                let amount = rng.next_below(64) as usize;
+                (v, kind, amount)
+            },
+            |(v, kind, amount)| {
+                let amount = *amount;
+                let t = Tensor::from_f32(vec![v.len()], v.clone());
+                let mut q = quantize(scheme, &t).map_err(|e| e.to_string())?;
+                match *kind {
+                    0 => {
+                        // truncate payload (possibly to odd length)
+                        let cut = (amount + 1).min(q.payload.len());
+                        q.payload.truncate(q.payload.len() - cut);
+                    }
+                    1 => {
+                        q.meta.absmax.truncate(q.meta.absmax.len().saturating_sub(1));
+                    }
+                    2 => {
+                        q.meta.codebook.clear();
+                    }
+                    3 => {
+                        q.meta.block_size = 1 + amount; // wrong grid
+                    }
+                    _ => {
+                        // lie about the original element count
+                        q.orig = flare::tensor::TensorMeta::new(
+                            vec![v.len() + amount + 1],
+                            flare::tensor::DType::F32,
+                        );
+                    }
+                }
+                // Must return (Ok or Err) without panicking. A corrupted
+                // geometry that still decodes is fine — crc catches
+                // payload corruption at the frame layer.
+                let _ = dequantize(&q);
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_chunk_table_invariants() {
+    // The resumable receive table: any mark order with duplicates keeps
+    // received-bytes exact, missing_ranges is the precise complement,
+    // and the manifest hex roundtrip is lossless.
+    check(
+        cfg(128),
+        "chunk table invariants",
+        |rng| {
+            let total = rng.next_below(100_000);
+            let chunk = 1 + rng.next_below(5_000);
+            let n_chunks = total.div_ceil(chunk);
+            let mut order: Vec<u64> = (0..n_chunks).collect();
+            rng.shuffle(&mut order);
+            let keep = rng.next_below(n_chunks + 1) as usize;
+            order.truncate(keep);
+            // re-mark some duplicates
+            if !order.is_empty() {
+                for _ in 0..rng.next_below(4) {
+                    let dup = order[rng.next_below(order.len() as u64) as usize];
+                    order.push(dup);
+                }
+            }
+            (total, chunk, order)
+        },
+        |(total, chunk, order)| {
+            let (total, chunk) = (*total, *chunk);
+            let mut t = ChunkTable::new(total, chunk);
+            let mut marked = std::collections::BTreeSet::new();
+            for &idx in order {
+                let off = idx * chunk;
+                let len = chunk.min(total - off);
+                let fresh = t.mark(off, len).map_err(|e| e.to_string())?;
+                if fresh != marked.insert(idx) {
+                    return Err(format!("mark({idx}) freshness disagreed"));
+                }
+            }
+            let want_received: u64 = marked
+                .iter()
+                .map(|&i| chunk.min(total - i * chunk))
+                .sum();
+            if t.received_bytes() != want_received {
+                return Err(format!(
+                    "received {} != {want_received}",
+                    t.received_bytes()
+                ));
+            }
+            if t.is_complete() != (marked.len() as u64 == total.div_ceil(chunk)) {
+                return Err("completeness disagreed".into());
+            }
+            // missing_ranges is the exact complement of the marked set
+            let ranges = t.missing_ranges(usize::MAX);
+            let mut missing_bytes = 0u64;
+            for (off, len) in &ranges {
+                if off % chunk != 0 {
+                    return Err("unaligned missing range".into());
+                }
+                missing_bytes += len;
+            }
+            if missing_bytes + t.received_bytes() != total {
+                return Err(format!(
+                    "missing {missing_bytes} + received {} != total {total}",
+                    t.received_bytes()
+                ));
+            }
+            // manifest roundtrip
+            let back = ChunkTable::from_hex(total, chunk, &t.to_hex())
+                .map_err(|e| e.to_string())?;
+            if back != t {
+                return Err("hex roundtrip mismatch".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -167,6 +167,88 @@ impl Default for FaultProfile {
     }
 }
 
+/// Per-round participation policy: client sampling, quorum, straggler
+/// deadline and partial aggregation (the coordinator's concurrent round
+/// engine consumes this; see DESIGN.md §Round lifecycle).
+///
+/// The default is exactly the legacy sequential semantics: every client
+/// participates in every round, there is no deadline, and any client
+/// failure aborts the job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundPolicy {
+    /// Fraction of connected clients selected each round, in (0, 1].
+    /// Selection is a deterministic function of (job seed, round).
+    pub sample_fraction: f64,
+    /// Minimum successful contributions for a valid round. 0 means "no
+    /// explicit quorum" (any non-empty round is valid once `allow_partial`
+    /// tolerates losses; without `allow_partial` every selected client
+    /// must contribute anyway).
+    pub min_clients: usize,
+    /// Wall-clock budget per round in seconds; selected clients that have
+    /// not delivered a result by the deadline are abandoned as stragglers
+    /// (their sessions drain the late result and rejoin the next round).
+    /// 0 = no deadline.
+    pub round_deadline_secs: u64,
+    /// Complete a round with the surviving contributions when a selected
+    /// client errors, disconnects, or misses the deadline — instead of
+    /// aborting the whole job.
+    pub allow_partial: bool,
+}
+
+impl Default for RoundPolicy {
+    fn default() -> Self {
+        Self {
+            sample_fraction: 1.0,
+            min_clients: 0,
+            round_deadline_secs: 0,
+            allow_partial: false,
+        }
+    }
+}
+
+impl RoundPolicy {
+    /// How many of `n` connected clients are selected per round.
+    pub fn sample_count(&self, n: usize) -> usize {
+        if n == 0 || self.sample_fraction >= 1.0 {
+            return n;
+        }
+        ((self.sample_fraction * n as f64).ceil() as usize).clamp(1, n)
+    }
+
+    /// Deterministically select the participating client indices for
+    /// `round` (sorted ascending). Same `(n, seed, round)` → same set.
+    pub fn select(&self, n: usize, seed: u64, round: usize) -> Vec<usize> {
+        let k = self.sample_count(n);
+        if k == n {
+            return (0..n).collect();
+        }
+        let mut base = crate::util::rng::SplitMix64::new(seed);
+        let mut rng = base.fork(&format!("round-sample-{round}"));
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(k);
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Effective quorum for a round with `k` selected clients.
+    pub fn quorum(&self, k: usize) -> usize {
+        if self.min_clients == 0 {
+            1
+        } else {
+            self.min_clients.min(k)
+        }
+    }
+
+    /// Does this policy reproduce the legacy all-clients semantics?
+    pub fn is_full_participation(&self) -> bool {
+        self.sample_fraction >= 1.0
+    }
+}
+
+/// Default control/transfer timeout (the old hard-coded value).
+pub const DEFAULT_TRANSFER_TIMEOUT_SECS: u64 = 600;
+
 /// Local-training hyperparameters forwarded to the PJRT train step.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -207,6 +289,12 @@ pub struct JobConfig {
     /// transfers (required when `fault` injects losses; useful on flaky
     /// real networks too).
     pub reliable: bool,
+    /// Sampling / quorum / deadline / partial-aggregation policy for the
+    /// concurrent round engine.
+    pub round_policy: RoundPolicy,
+    /// Control-message and weight-transfer timeout used by the
+    /// coordinator on both sides, in seconds (>= 1).
+    pub transfer_timeout_secs: u64,
     pub seed: u64,
     /// Dirichlet alpha for non-IID sharding (0 = IID).
     pub dirichlet_alpha: f64,
@@ -228,6 +316,8 @@ impl Default for JobConfig {
             net: NetProfile::UNLIMITED,
             fault: FaultProfile::NONE,
             reliable: false,
+            round_policy: RoundPolicy::default(),
+            transfer_timeout_secs: DEFAULT_TRANSFER_TIMEOUT_SECS,
             seed: 0xF1A2E,
             dirichlet_alpha: 0.0,
             artifacts_dir: "artifacts".into(),
@@ -288,6 +378,29 @@ impl JobConfig {
                 }
                 "reliable" => {
                     cfg.reliable = v.as_bool().ok_or_else(|| anyhow!("{k}: not a bool"))?
+                }
+                "transfer_timeout_secs" => {
+                    cfg.transfer_timeout_secs = req_usize(v, k)? as u64
+                }
+                "round_policy" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("round_policy: not an object"))?;
+                    for (pk, pv) in t {
+                        match pk.as_str() {
+                            "sample_fraction" => {
+                                cfg.round_policy.sample_fraction =
+                                    pv.as_f64().ok_or_else(|| anyhow!("{pk}: not a number"))?
+                            }
+                            "min_clients" => cfg.round_policy.min_clients = req_usize(pv, pk)?,
+                            "round_deadline_secs" => {
+                                cfg.round_policy.round_deadline_secs = req_usize(pv, pk)? as u64
+                            }
+                            "allow_partial" => {
+                                cfg.round_policy.allow_partial =
+                                    pv.as_bool().ok_or_else(|| anyhow!("{pk}: not a bool"))?
+                            }
+                            other => bail!("unknown round_policy key '{other}'"),
+                        }
+                    }
                 }
                 "fault" => {
                     let t = v.as_obj().ok_or_else(|| anyhow!("fault: not an object"))?;
@@ -364,7 +477,26 @@ impl JobConfig {
         if !self.fault.is_none() && !self.reliable {
             bail!("fault injection requires `reliable: true` (lossy links need the resumable protocol)");
         }
+        if self.transfer_timeout_secs == 0 {
+            bail!("transfer_timeout_secs must be >= 1");
+        }
+        let f = self.round_policy.sample_fraction;
+        if !(f > 0.0 && f <= 1.0) {
+            bail!("round_policy.sample_fraction must be in (0, 1], got {f}");
+        }
+        let k = self.round_policy.sample_count(self.clients);
+        if self.round_policy.min_clients > k {
+            bail!(
+                "round_policy.min_clients ({}) exceeds the {k} client(s) selected per round",
+                self.round_policy.min_clients
+            );
+        }
         Ok(())
+    }
+
+    /// The coordinator's control/transfer timeout as a [`Duration`].
+    pub fn transfer_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_secs(self.transfer_timeout_secs.max(1))
     }
 
     pub fn to_json(&self) -> Json {
@@ -396,6 +528,28 @@ impl JobConfig {
                 ]),
             ),
             ("reliable", Json::Bool(self.reliable)),
+            (
+                "transfer_timeout_secs",
+                Json::num(self.transfer_timeout_secs as f64),
+            ),
+            (
+                "round_policy",
+                Json::obj(vec![
+                    (
+                        "sample_fraction",
+                        Json::num(self.round_policy.sample_fraction),
+                    ),
+                    (
+                        "min_clients",
+                        Json::num(self.round_policy.min_clients as f64),
+                    ),
+                    (
+                        "round_deadline_secs",
+                        Json::num(self.round_policy.round_deadline_secs as f64),
+                    ),
+                    ("allow_partial", Json::Bool(self.round_policy.allow_partial)),
+                ]),
+            ),
             (
                 "fault",
                 Json::obj(vec![
@@ -434,10 +588,12 @@ mod tests {
 
     #[test]
     fn roundtrip_json() {
-        let mut cfg = JobConfig::default();
-        cfg.quant = QuantScheme::Nf4;
-        cfg.streaming = StreamingMode::Container;
-        cfg.clients = 4;
+        let cfg = JobConfig {
+            quant: QuantScheme::Nf4,
+            streaming: StreamingMode::Container,
+            clients: 4,
+            ..JobConfig::default()
+        };
         let j = cfg.to_json();
         let back = JobConfig::from_json(&j).unwrap();
         assert_eq!(back.quant, QuantScheme::Nf4);
@@ -476,16 +632,18 @@ mod tests {
 
     #[test]
     fn fault_profile_roundtrip_json() {
-        let mut cfg = JobConfig::default();
-        cfg.reliable = true;
-        cfg.fault = FaultProfile {
-            seed: 42,
-            drop_rate: 0.05,
-            dup_rate: 0.01,
-            reorder_rate: 0.02,
-            disconnect_at_bytes: 1 << 20,
-            disconnect_frames: 16,
-            data_only: true,
+        let cfg = JobConfig {
+            reliable: true,
+            fault: FaultProfile {
+                seed: 42,
+                drop_rate: 0.05,
+                dup_rate: 0.01,
+                reorder_rate: 0.02,
+                disconnect_at_bytes: 1 << 20,
+                disconnect_frames: 16,
+                data_only: true,
+            },
+            ..JobConfig::default()
         };
         let back = JobConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.fault, cfg.fault);
@@ -495,14 +653,102 @@ mod tests {
     #[test]
     fn fault_validation() {
         // lossy faults without the reliable protocol are rejected
-        let mut cfg = JobConfig::default();
-        cfg.fault.drop_rate = 0.1;
+        let mut cfg = JobConfig {
+            fault: FaultProfile {
+                drop_rate: 0.1,
+                ..FaultProfile::NONE
+            },
+            ..JobConfig::default()
+        };
         assert!(cfg.validate().is_err());
         cfg.reliable = true;
         assert!(cfg.validate().is_ok());
         // rates outside [0,1] rejected
         cfg.fault.drop_rate = 1.5;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn round_policy_roundtrip_json() {
+        let cfg = JobConfig {
+            clients: 8,
+            round_policy: RoundPolicy {
+                sample_fraction: 0.5,
+                min_clients: 2,
+                round_deadline_secs: 30,
+                allow_partial: true,
+            },
+            transfer_timeout_secs: 45,
+            ..JobConfig::default()
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.round_policy, cfg.round_policy);
+        assert_eq!(back.transfer_timeout_secs, 45);
+        assert_eq!(back.transfer_timeout(), std::time::Duration::from_secs(45));
+        // defaults are the legacy sequential semantics
+        let d = RoundPolicy::default();
+        assert!(d.is_full_participation());
+        assert!(!d.allow_partial);
+        assert_eq!(d.round_deadline_secs, 0);
+    }
+
+    #[test]
+    fn round_policy_validation() {
+        for bad in [
+            r#"{"round_policy": {"sample_fraction": 0.0}}"#,
+            r#"{"round_policy": {"sample_fraction": 1.5}}"#,
+            r#"{"round_policy": {"sample_fraction": -0.2}}"#,
+            r#"{"round_policy": {"nonsense": 1}}"#,
+            r#"{"clients": 4, "round_policy": {"min_clients": 5}}"#,
+            // 0.5 of 4 clients selects 2; a quorum of 3 is unreachable
+            r#"{"clients": 4, "round_policy": {"sample_fraction": 0.5, "min_clients": 3}}"#,
+            r#"{"transfer_timeout_secs": 0}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobConfig::from_json(&j).is_err(), "{bad}");
+        }
+        let ok = Json::parse(
+            r#"{"clients": 4, "round_policy": {"sample_fraction": 0.5, "min_clients": 2,
+                "round_deadline_secs": 10, "allow_partial": true}}"#,
+        )
+        .unwrap();
+        assert!(JobConfig::from_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn round_policy_selection_is_deterministic_and_sized() {
+        let p = RoundPolicy {
+            sample_fraction: 0.5,
+            ..RoundPolicy::default()
+        };
+        assert_eq!(p.sample_count(8), 4);
+        assert_eq!(p.sample_count(5), 3); // ceil(2.5)
+        assert_eq!(p.sample_count(1), 1);
+        for round in 0..20 {
+            let a = p.select(8, 7, round);
+            let b = p.select(8, 7, round);
+            assert_eq!(a, b, "same (seed, round) must select the same set");
+            assert_eq!(a.len(), 4);
+            assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted, unique: {a:?}");
+            assert!(a.iter().all(|&i| i < 8));
+        }
+        // different rounds / seeds give different sets (statistically
+        // certain for these sizes with a working RNG)
+        let sets: std::collections::BTreeSet<Vec<usize>> =
+            (0..20).map(|r| p.select(8, 7, r)).collect();
+        assert!(sets.len() > 1, "selection must vary across rounds");
+        assert_ne!(p.select(8, 7, 0), p.select(8, 8, 0));
+        // full participation short-circuits
+        let full = RoundPolicy::default();
+        assert_eq!(full.select(4, 1, 0), vec![0, 1, 2, 3]);
+        // quorum semantics
+        assert_eq!(full.quorum(4), 1); // min_clients 0 -> any non-empty
+        let q = RoundPolicy {
+            min_clients: 3,
+            ..RoundPolicy::default()
+        };
+        assert_eq!(q.quorum(4), 3);
+        assert_eq!(q.quorum(2), 2); // clamped to the selected count
     }
 
     #[test]

@@ -1,23 +1,34 @@
-//! Server-side Controller: the ScatterAndGather workflow (paper Fig. 2).
+//! Server-side Controller: the ScatterAndGather workflow (paper Fig. 2),
+//! run as a **concurrent round engine**.
 //!
-//! Per round: global weights → [TaskDataOutServer filters] → streamed to
-//! each client; client results → [TaskResultInServer filters] → FedAvg →
-//! new global weights. All transmission is via the configured streaming
-//! mode over SFM.
+//! One session worker per connected client drives its own scatter →
+//! train-wait → gather over its `SfmEndpoint`; results stream back
+//! through a fan-in channel into the O(model) [`FedAvg`] accumulator.
+//! Round wall-clock therefore tracks the slowest *selected* client, not
+//! the sum of all transfers.
+//!
+//! Participation is governed by [`crate::config::RoundPolicy`]: per-round client
+//! sampling (deterministic in the job seed), a `min_clients` quorum, a
+//! straggler deadline, and partial aggregation on client failure. The
+//! default policy (all clients, no deadline, abort-on-failure) folds
+//! contributions in registration order and is bit-compatible with the
+//! legacy sequential controller. See DESIGN.md §Round lifecycle.
 
 use super::aggregator::FedAvg;
 use super::protocol::CtrlMsg;
-use super::RoundStats;
+use super::{resume_policy, RoundStats};
 use crate::config::JobConfig;
-use crate::filter::{FilterContext, FilterPoint, FilterSet};
+use crate::filter::{FilterContext, FilterFactory, FilterPoint, FilterSet};
 use crate::metrics::Report;
-use crate::sfm::{ResumePolicy, SfmEndpoint};
+use crate::sfm::SfmEndpoint;
 use crate::streaming::{self, WeightsMsg};
 use crate::tensor::ParamContainer;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 /// One connected client from the server's perspective.
 pub struct ClientConn {
@@ -28,22 +39,74 @@ pub struct ClientConn {
 /// The federated server.
 pub struct Controller {
     pub job: JobConfig,
-    pub filters: FilterSet,
+    /// Base filter set, shared by all sessions unless a per-session
+    /// factory is installed ([`Controller::with_filter_factory`]).
+    filters: Arc<FilterSet>,
+    filter_factory: Option<FilterFactory>,
     pub clients: Vec<ClientConn>,
     pub spool_dir: PathBuf,
     /// Round statistics, filled during `run`.
     pub rounds: Vec<RoundStats>,
+    /// Tasks issued per client (indexed like `clients`), filled during
+    /// `run`. With sampling, a client legitimately receives fewer tasks
+    /// than `job.rounds`.
+    pub tasks_sent: Vec<usize>,
+}
+
+/// Everything one session worker needs to drive its client.
+struct SessionCtx {
+    idx: usize,
+    conn: ClientConn,
+    filters: Arc<FilterSet>,
+    job: JobConfig,
+    spool: PathBuf,
+}
+
+/// Controller → session command.
+enum SessionCmd {
+    /// Run one training round starting from these global weights.
+    Task { round: usize, global: ParamContainer },
+    /// Not sampled this round: notify the client, stand by.
+    Skip { round: usize },
+}
+
+/// Session → controller fan-in event (one per issued task).
+struct SessionEvent {
+    client: usize,
+    round: usize,
+    payload: Result<Contribution>,
+}
+
+/// One client's completed round.
+struct Contribution {
+    update: ParamContainer,
+    n_samples: u64,
+    losses: Vec<f32>,
+    /// Scatter → gather wall-clock inside the session worker.
+    seconds: f64,
+    /// Wire bytes (sent + received) this round on the client's endpoint.
+    comm_bytes: u64,
 }
 
 impl Controller {
     pub fn new(job: JobConfig, filters: FilterSet, spool_dir: PathBuf) -> Controller {
         Controller {
             job,
-            filters,
+            filters: Arc::new(filters),
+            filter_factory: None,
             clients: Vec::new(),
             spool_dir,
             rounds: Vec::new(),
+            tasks_sent: Vec::new(),
         }
+    }
+
+    /// Build an independent filter chain per client session instead of
+    /// sharing the base set (the simulator passes its `make_filters`
+    /// factory through here).
+    pub fn with_filter_factory(mut self, factory: FilterFactory) -> Controller {
+        self.filter_factory = Some(factory);
+        self
     }
 
     /// Accept a registration on an endpoint and add the client.
@@ -65,13 +128,7 @@ impl Controller {
     }
 
     fn comm_bytes(&self) -> u64 {
-        self.clients
-            .iter()
-            .map(|c| {
-                c.ep.stats.bytes_sent.load(Ordering::Relaxed)
-                    + c.ep.stats.bytes_received.load(Ordering::Relaxed)
-            })
-            .sum()
+        self.clients.iter().map(|c| endpoint_bytes(&c.ep)).sum()
     }
 
     /// Sum a reliability counter across all client endpoints.
@@ -81,146 +138,85 @@ impl Controller {
 
     /// Run the ScatterAndGather workflow to completion. Returns the final
     /// global weights and fills `self.rounds` + the report's series:
-    /// `global_loss` (per round) and `client_loss` (per local step).
+    /// `global_loss` (per round), `client_loss` / `client_round_secs`
+    /// (per client), and the participation series `clients_sampled`,
+    /// `clients_failed`, `stragglers_dropped`.
     pub fn run(
         &mut self,
-        mut global: ParamContainer,
+        global: ParamContainer,
         report: &mut Report,
     ) -> Result<ParamContainer> {
         if self.clients.is_empty() {
             bail!("no clients registered");
         }
-        let rounds = self.job.rounds;
-        let mode = self.job.streaming;
-        let mut step_counter = 0usize;
-        for round in 0..rounds {
-            let t0 = std::time::Instant::now();
-            let comm0 = self.comm_bytes();
+        let n = self.clients.len();
+        self.tasks_sent = vec![0; n];
+        self.rounds.clear();
 
-            // -- scatter ------------------------------------------------------
-            for c in &self.clients {
-                let mut ctx = FilterContext {
-                    round,
-                    peer: c.name.clone(),
-                    ..Default::default()
-                };
-                let msg = self
-                    .filters
-                    .apply(FilterPoint::TaskDataOutServer, WeightsMsg::Plain(global.clone()), &mut ctx)
-                    .with_context(|| format!("task-data filters for {}", c.name))?;
-                c.ep.send_ctrl(
-                    &CtrlMsg::Task {
-                        round,
-                        local_steps: self.job.train.local_steps,
-                        headers: ctx.point_headers.clone(),
-                    }
-                    .to_json(),
-                )?;
-                if self.job.reliable {
-                    // Resumable protocol: completion ack is built in.
-                    streaming::send_weights_resumable(
-                        &c.ep,
-                        &msg,
-                        mode,
-                        Some(&self.spool_dir),
-                        &ResumePolicy::default(),
-                    )
-                    .with_context(|| format!("send task data to {}", c.name))?;
-                } else {
-                    streaming::send_weights(&c.ep, &msg, mode, Some(&self.spool_dir))
-                        .with_context(|| format!("send task data to {}", c.name))?;
-                    // transfer-level ack from the receiver
-                    let _ = c.ep.recv_event(Some(Duration::from_secs(600)))?;
-                }
-            }
-
-            // -- gather -------------------------------------------------------
-            let mut agg = FedAvg::new();
-            let mut losses_sum = 0f64;
-            let mut losses_n = 0usize;
-            for c in &self.clients {
-                let ctrl = CtrlMsg::from_json(&c.ep.recv_ctrl(Some(Duration::from_secs(600)))?)?;
-                let (r_round, n_samples, losses, headers) = match ctrl {
-                    CtrlMsg::Result {
-                        round: r,
-                        n_samples,
-                        losses,
-                        headers,
-                        ..
-                    } => (r, n_samples, losses, headers),
-                    other => bail!("expected result from {}, got {other:?}", c.name),
-                };
-                if r_round != round {
-                    bail!("client {} answered round {r_round}, expected {round}", c.name);
-                }
-                let (msg, _stats) = if self.job.reliable {
-                    streaming::recv_weights_resumable(
-                        &c.ep,
-                        Some(&self.spool_dir),
-                        Some(Duration::from_secs(600)),
-                    )
-                    .with_context(|| format!("receive result from {}", c.name))?
-                } else {
-                    streaming::recv_weights(&c.ep, Some(&self.spool_dir))
-                        .with_context(|| format!("receive result from {}", c.name))?
-                };
-                let mut ctx = FilterContext {
-                    round,
-                    peer: c.name.clone(),
-                    point_headers: headers,
-                };
-                let msg = self
-                    .filters
-                    .apply(FilterPoint::TaskResultInServer, msg, &mut ctx)?;
-                let update = match msg {
-                    WeightsMsg::Plain(p) => p,
-                    WeightsMsg::Quantized(_) => {
-                        bail!("result still quantized after inbound filters — chain misconfigured")
-                    }
-                };
-                agg.add(&update, n_samples)?;
-                for (i, l) in losses.iter().enumerate() {
-                    report
-                        .series_mut(&format!("client_loss/{}", c.name))
-                        .push((step_counter + i) as f64, *l as f64);
-                    losses_sum += *l as f64;
-                    losses_n += 1;
-                }
-            }
-            step_counter += self.job.train.local_steps;
-            global = agg.finalize()?;
-
-            let mean_loss = if losses_n > 0 {
-                (losses_sum / losses_n as f64) as f32
-            } else {
-                f32::NAN
+        // One session worker per client; the fan-in channel carries
+        // finished contributions back in arrival order.
+        let (evt_tx, evt_rx) = mpsc::channel::<SessionEvent>();
+        let conns = std::mem::take(&mut self.clients);
+        let names: Vec<String> = conns.iter().map(|c| c.name.clone()).collect();
+        let mut cmd_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (i, conn) in conns.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<SessionCmd>();
+            let filters = match &self.filter_factory {
+                Some(f) => Arc::new((**f)()),
+                None => self.filters.clone(),
             };
-            let stats = RoundStats {
-                round,
-                mean_loss,
-                comm_bytes: self.comm_bytes() - comm0,
-                seconds: t0.elapsed().as_secs_f64(),
+            let ctx = SessionCtx {
+                idx: i,
+                conn,
+                filters,
+                job: self.job.clone(),
+                spool: self.spool_dir.clone(),
             };
-            report.series_mut("global_loss").push(round as f64, mean_loss as f64);
-            report
-                .series_mut("round_comm_bytes")
-                .push(round as f64, stats.comm_bytes as f64);
-            log::info!(
-                "round {round}/{rounds}: mean loss {mean_loss:.4}, comm {}, {:.2}s",
-                crate::util::bytes::human(stats.comm_bytes),
-                stats.seconds
-            );
-            self.rounds.push(stats);
+            let evt_tx = evt_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("session-{i}"))
+                .spawn(move || session_loop(ctx, cmd_rx, evt_tx))?;
+            cmd_txs.push(cmd_tx);
+            handles.push(h);
         }
+        drop(evt_tx); // workers hold the only senders
 
-        for c in &self.clients {
-            c.ep.send_ctrl(&CtrlMsg::Done.to_json())?;
+        let outcome = self.drive_rounds(global, report, &names, &cmd_txs, &evt_rx);
+
+        // Closing the command channels shuts the sessions down: each
+        // worker drains any in-flight round, tells its client Done, and
+        // returns the connection.
+        drop(cmd_txs);
+        let global = match outcome {
+            Ok(g) => g,
+            // Abort: don't block on stragglers or hung transfers — the
+            // detached workers drain and send Done on their own.
+            Err(e) => return Err(e),
+        };
+
+        let mut conns: Vec<Option<ClientConn>> = (0..n).map(|_| None).collect();
+        for h in handles {
+            match h.join() {
+                Ok((i, conn)) => conns[i] = Some(conn),
+                Err(_) => bail!("session worker panicked"),
+            }
         }
+        self.clients = conns.into_iter().flatten().collect();
+
         report.set_scalar("total_comm_bytes", self.comm_bytes() as f64);
         report.set_scalar(
             "final_loss",
             self.rounds.last().map(|r| r.mean_loss as f64).unwrap_or(f64::NAN),
         );
+        for (scalar, series) in [
+            ("clients_sampled_total", "clients_sampled"),
+            ("clients_failed_total", "clients_failed"),
+            ("stragglers_dropped_total", "stragglers_dropped"),
+        ] {
+            let total = report.series.get(series).map(|s| s.sum()).unwrap_or(0.0);
+            report.set_scalar(scalar, total);
+        }
         // Reliability counters (all zero on loss-free links / legacy
         // transfers) — the server-side view of retry/resume health.
         report.set_scalar(
@@ -247,6 +243,421 @@ impl Controller {
         );
         Ok(global)
     }
+
+    /// The per-round loop: sample, issue commands, fan-in results with
+    /// deadline/quorum enforcement, fold, repeat.
+    fn drive_rounds(
+        &mut self,
+        mut global: ParamContainer,
+        report: &mut Report,
+        names: &[String],
+        cmd_txs: &[mpsc::Sender<SessionCmd>],
+        evt_rx: &mpsc::Receiver<SessionEvent>,
+    ) -> Result<ParamContainer> {
+        let n = names.len();
+        let rounds = self.job.rounds;
+        let policy = self.job.round_policy.clone();
+        // A client that failed once is excluded from later rounds rather
+        // than burning a transfer timeout per round on a broken link.
+        let mut dead = vec![false; n];
+        let mut step_counter = 0usize;
+
+        for round in 0..rounds {
+            let t0 = Instant::now();
+            let selected = policy.select(n, self.job.seed, round);
+            let k = selected.len();
+            let quorum = policy.quorum(k);
+            let mut pos_of = vec![usize::MAX; n];
+            for (p, &i) in selected.iter().enumerate() {
+                pos_of[i] = p;
+            }
+
+            let mut gather = RoundGather::new(round, step_counter, selected);
+            let mut outstanding = 0usize;
+            for i in 0..n {
+                let pos = pos_of[i];
+                if pos == usize::MAX {
+                    if !dead[i] {
+                        let _ = cmd_txs[i].send(SessionCmd::Skip { round });
+                    }
+                    continue;
+                }
+                if dead[i] {
+                    gather.on_err(pos, names, report)?;
+                    continue;
+                }
+                self.tasks_sent[i] += 1;
+                let cmd = SessionCmd::Task {
+                    round,
+                    global: global.clone(),
+                };
+                if cmd_txs[i].send(cmd).is_ok() {
+                    outstanding += 1;
+                } else {
+                    dead[i] = true;
+                    gather.on_err(pos, names, report)?;
+                }
+            }
+            if gather.failed > 0 && !policy.allow_partial {
+                bail!(
+                    "round {round}: {} selected client(s) already failed and allow_partial is off",
+                    gather.failed
+                );
+            }
+
+            let deadline = (policy.round_deadline_secs > 0)
+                .then(|| t0 + Duration::from_secs(policy.round_deadline_secs));
+            while outstanding > 0 {
+                let evt = match deadline {
+                    None => evt_rx
+                        .recv()
+                        .map_err(|_| anyhow!("all session workers exited mid-round"))?,
+                    Some(d) => {
+                        let left = d.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match evt_rx.recv_timeout(left) {
+                            Ok(e) => e,
+                            Err(mpsc::RecvTimeoutError::Timeout) => break,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                bail!("all session workers exited mid-round")
+                            }
+                        }
+                    }
+                };
+                if evt.round != round {
+                    // A straggler from an abandoned round delivered late:
+                    // its session is drained, the result is discarded.
+                    log::warn!(
+                        "round {round}: discarding stale round-{} result from '{}'",
+                        evt.round,
+                        names[evt.client]
+                    );
+                    continue;
+                }
+                let pos = pos_of[evt.client];
+                if pos == usize::MAX || gather.got[pos] {
+                    continue;
+                }
+                outstanding -= 1;
+                match evt.payload {
+                    Ok(c) => gather.on_ok(pos, c, names, report)?,
+                    Err(e) => {
+                        dead[evt.client] = true;
+                        if !policy.allow_partial {
+                            return Err(e.context(format!(
+                                "client '{}' failed in round {round}",
+                                names[evt.client]
+                            )));
+                        }
+                        log::warn!(
+                            "round {round}: excluding failed client '{}': {e:#}",
+                            names[evt.client]
+                        );
+                        gather.on_err(pos, names, report)?;
+                    }
+                }
+            }
+
+            let stragglers = if outstanding > 0 {
+                if !policy.allow_partial {
+                    bail!(
+                        "round {round}: {outstanding} client(s) missed the {} s round deadline",
+                        policy.round_deadline_secs
+                    );
+                }
+                let s = gather.drop_stragglers(names);
+                gather.advance(names, report)?;
+                s
+            } else {
+                0
+            };
+
+            if gather.completed < quorum {
+                bail!(
+                    "round {round}: {}/{k} contributions, below quorum {quorum}",
+                    gather.completed
+                );
+            }
+            global = gather.agg.finalize()?;
+
+            step_counter += self.job.train.local_steps;
+            let mean_loss = if gather.losses_n > 0 {
+                (gather.losses_sum / gather.losses_n as f64) as f32
+            } else {
+                f32::NAN
+            };
+            let stats = RoundStats {
+                round,
+                mean_loss,
+                comm_bytes: gather.round_comm,
+                seconds: t0.elapsed().as_secs_f64(),
+                sampled: k,
+                completed: gather.completed,
+                failed: gather.failed,
+                stragglers,
+            };
+            report.series_mut("global_loss").push(round as f64, mean_loss as f64);
+            report
+                .series_mut("round_comm_bytes")
+                .push(round as f64, stats.comm_bytes as f64);
+            report
+                .series_mut("clients_sampled")
+                .push(round as f64, k as f64);
+            report
+                .series_mut("clients_failed")
+                .push(round as f64, stats.failed as f64);
+            report
+                .series_mut("stragglers_dropped")
+                .push(round as f64, stats.stragglers as f64);
+            log::info!(
+                "round {round}/{rounds}: mean loss {mean_loss:.4}, {}/{k} clients, comm {}, {:.2}s",
+                stats.completed,
+                crate::util::bytes::human(stats.comm_bytes),
+                stats.seconds
+            );
+            self.rounds.push(stats);
+        }
+        Ok(global)
+    }
+}
+
+/// Per-round fan-in state: buffers out-of-order arrivals and folds them
+/// in selected-order positions, so the default policy reproduces the
+/// sequential gather bit-for-bit (same FedAvg fold order, same series
+/// order) while concurrent arrivals still stream into one accumulator.
+struct RoundGather {
+    round: usize,
+    /// Global step index at the start of this round (x axis of
+    /// `client_loss`).
+    step0: usize,
+    selected: Vec<usize>,
+    /// Positions excluded from the aggregate (failed or straggler).
+    excluded: Vec<bool>,
+    /// Positions that produced an event this round.
+    got: Vec<bool>,
+    /// Arrived contributions waiting for the fold frontier.
+    pending: BTreeMap<usize, Contribution>,
+    agg: FedAvg,
+    next_pos: usize,
+    completed: usize,
+    failed: usize,
+    round_comm: u64,
+    losses_sum: f64,
+    losses_n: usize,
+}
+
+impl RoundGather {
+    fn new(round: usize, step0: usize, selected: Vec<usize>) -> RoundGather {
+        let k = selected.len();
+        RoundGather {
+            round,
+            step0,
+            selected,
+            excluded: vec![false; k],
+            got: vec![false; k],
+            pending: BTreeMap::new(),
+            agg: FedAvg::new(),
+            next_pos: 0,
+            completed: 0,
+            failed: 0,
+            round_comm: 0,
+            losses_sum: 0.0,
+            losses_n: 0,
+        }
+    }
+
+    fn on_ok(
+        &mut self,
+        pos: usize,
+        contrib: Contribution,
+        names: &[String],
+        report: &mut Report,
+    ) -> Result<()> {
+        self.got[pos] = true;
+        self.pending.insert(pos, contrib);
+        self.advance(names, report)
+    }
+
+    /// Exclude a failed position. Must advance the frontier: contributions
+    /// already buffered *behind* the failed position unblock here (a
+    /// failing client usually reports last, after the survivors).
+    fn on_err(&mut self, pos: usize, names: &[String], report: &mut Report) -> Result<()> {
+        self.got[pos] = true;
+        self.excluded[pos] = true;
+        self.failed += 1;
+        self.advance(names, report)
+    }
+
+    /// Fold every contribution at the frontier (deterministic order).
+    fn advance(&mut self, names: &[String], report: &mut Report) -> Result<()> {
+        while self.next_pos < self.selected.len() {
+            if self.excluded[self.next_pos] {
+                self.next_pos += 1;
+                continue;
+            }
+            let Some(c) = self.pending.remove(&self.next_pos) else {
+                break;
+            };
+            let name = &names[self.selected[self.next_pos]];
+            self.agg.add(&c.update, c.n_samples)?;
+            report
+                .series_mut(&format!("client_round_secs/{name}"))
+                .push(self.round as f64, c.seconds);
+            for (j, l) in c.losses.iter().enumerate() {
+                report
+                    .series_mut(&format!("client_loss/{name}"))
+                    .push((self.step0 + j) as f64, *l as f64);
+                self.losses_sum += *l as f64;
+                self.losses_n += 1;
+            }
+            self.round_comm += c.comm_bytes;
+            self.completed += 1;
+            self.next_pos += 1;
+        }
+        Ok(())
+    }
+
+    /// Exclude every position that never reported (deadline expired).
+    fn drop_stragglers(&mut self, names: &[String]) -> usize {
+        let mut dropped = 0usize;
+        for pos in 0..self.selected.len() {
+            if !self.got[pos] {
+                log::warn!(
+                    "round {}: abandoning straggler '{}'",
+                    self.round,
+                    names[self.selected[pos]]
+                );
+                self.excluded[pos] = true;
+                dropped += 1;
+            }
+        }
+        dropped
+    }
+}
+
+/// Session worker body: execute commands until the controller closes the
+/// channel, then tell the client Done and hand the connection back.
+fn session_loop(
+    ctx: SessionCtx,
+    cmd_rx: mpsc::Receiver<SessionCmd>,
+    evt_tx: mpsc::Sender<SessionEvent>,
+) -> (usize, ClientConn) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            SessionCmd::Skip { round } => {
+                if let Err(e) = ctx.conn.ep.send_ctrl(&CtrlMsg::NoTask { round }.to_json()) {
+                    log::warn!("session '{}': no-task notify failed: {e:#}", ctx.conn.name);
+                }
+            }
+            SessionCmd::Task { round, global } => {
+                let payload = run_client_round(&ctx, round, global);
+                let _ = evt_tx.send(SessionEvent {
+                    client: ctx.idx,
+                    round,
+                    payload,
+                });
+            }
+        }
+    }
+    let _ = ctx.conn.ep.send_ctrl(&CtrlMsg::Done.to_json());
+    (ctx.idx, ctx.conn)
+}
+
+/// One client's scatter → train-wait → gather (the body the legacy
+/// controller ran inline, now per session).
+fn run_client_round(
+    ctx: &SessionCtx,
+    round: usize,
+    global: ParamContainer,
+) -> Result<Contribution> {
+    let c = &ctx.conn;
+    let t0 = Instant::now();
+    let bytes0 = endpoint_bytes(&c.ep);
+    let timeout = ctx.job.transfer_timeout();
+    let mode = ctx.job.streaming;
+
+    // -- scatter --------------------------------------------------------
+    let mut fctx = FilterContext {
+        round,
+        peer: c.name.clone(),
+        ..Default::default()
+    };
+    let msg = ctx
+        .filters
+        .apply(FilterPoint::TaskDataOutServer, WeightsMsg::Plain(global), &mut fctx)
+        .with_context(|| format!("task-data filters for {}", c.name))?;
+    c.ep.send_ctrl(
+        &CtrlMsg::Task {
+            round,
+            local_steps: ctx.job.train.local_steps,
+            headers: fctx.point_headers.clone(),
+        }
+        .to_json(),
+    )?;
+    if ctx.job.reliable {
+        // Resumable protocol: completion ack is built in.
+        streaming::send_weights_resumable(
+            &c.ep,
+            &msg,
+            mode,
+            Some(&ctx.spool),
+            &resume_policy(timeout),
+        )
+        .with_context(|| format!("send task data to {}", c.name))?;
+    } else {
+        streaming::send_weights(&c.ep, &msg, mode, Some(&ctx.spool))
+            .with_context(|| format!("send task data to {}", c.name))?;
+        // transfer-level ack from the receiver
+        let _ = c.ep.recv_event(Some(timeout))?;
+    }
+
+    // -- gather ---------------------------------------------------------
+    let ctrl = CtrlMsg::from_json(&c.ep.recv_ctrl(Some(timeout))?)?;
+    let (r_round, n_samples, losses, headers) = match ctrl {
+        CtrlMsg::Result {
+            round: r,
+            n_samples,
+            losses,
+            headers,
+            ..
+        } => (r, n_samples, losses, headers),
+        other => bail!("expected result from {}, got {other:?}", c.name),
+    };
+    if r_round != round {
+        bail!("client {} answered round {r_round}, expected {round}", c.name);
+    }
+    let (msg, _stats) = if ctx.job.reliable {
+        streaming::recv_weights_resumable(&c.ep, Some(&ctx.spool), Some(timeout))
+            .with_context(|| format!("receive result from {}", c.name))?
+    } else {
+        streaming::recv_weights(&c.ep, Some(&ctx.spool))
+            .with_context(|| format!("receive result from {}", c.name))?
+    };
+    let mut fctx = FilterContext {
+        round,
+        peer: c.name.clone(),
+        point_headers: headers,
+    };
+    let msg = ctx.filters.apply(FilterPoint::TaskResultInServer, msg, &mut fctx)?;
+    let update = match msg {
+        WeightsMsg::Plain(p) => p,
+        WeightsMsg::Quantized(_) => {
+            bail!("result still quantized after inbound filters — chain misconfigured")
+        }
+    };
+    Ok(Contribution {
+        update,
+        n_samples,
+        losses,
+        seconds: t0.elapsed().as_secs_f64(),
+        comm_bytes: endpoint_bytes(&c.ep).saturating_sub(bytes0),
+    })
+}
+
+fn endpoint_bytes(ep: &SfmEndpoint) -> u64 {
+    ep.stats.bytes_sent.load(Ordering::Relaxed) + ep.stats.bytes_received.load(Ordering::Relaxed)
 }
 
 /// Convenience: the error type for misuse without clients.

@@ -2,9 +2,9 @@
 //! task at original precision, returns Task Result (paper §II-A).
 
 use super::protocol::CtrlMsg;
-use super::LocalTrainer;
+use super::{resume_policy, LocalTrainer};
 use crate::filter::{FilterContext, FilterPoint, FilterSet};
-use crate::sfm::{ResumePolicy, SfmEndpoint};
+use crate::sfm::SfmEndpoint;
 use crate::streaming::{self, WeightsMsg};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -41,7 +41,7 @@ impl<T: LocalTrainer> Executor<T> {
             filters,
             trainer,
             spool_dir,
-            timeout: Duration::from_secs(600),
+            timeout: Duration::from_secs(crate::config::DEFAULT_TRANSFER_TIMEOUT_SECS),
             mode: None,
             reliable: false,
         }
@@ -62,17 +62,29 @@ impl<T: LocalTrainer> Executor<T> {
     }
 
     /// Main loop: execute tasks until the server says Done. Returns the
-    /// number of rounds executed.
+    /// number of tasks executed (with client sampling this is legitimately
+    /// fewer than the job's round count — unsampled rounds arrive as
+    /// `NoTask` and are skipped).
     pub fn run(&mut self) -> Result<usize> {
         let mut rounds = 0usize;
         loop {
-            let ctrl = CtrlMsg::from_json(&self.ep.recv_ctrl(Some(self.timeout))?)?;
+            // The idle wait between rounds is unbounded on purpose: how
+            // long a round takes is the server's business (other clients'
+            // transfers, deadlines, sampling), not a property of this
+            // link — `self.timeout` bounds only our own handshakes and
+            // transfers. A dead server surfaces as a driver error (TCP
+            // reset / closed channel), not as a hang.
+            let ctrl = CtrlMsg::from_json(&self.ep.recv_ctrl(None)?)?;
             let (round, local_steps, headers) = match ctrl {
                 CtrlMsg::Task {
                     round,
                     local_steps,
                     headers,
                 } => (round, local_steps, headers),
+                CtrlMsg::NoTask { round } => {
+                    log::debug!("client '{}': not sampled in round {round}", self.name);
+                    continue;
+                }
                 CtrlMsg::Done => return Ok(rounds),
                 other => bail!("unexpected ctrl {other:?}"),
             };
@@ -133,7 +145,7 @@ impl<T: LocalTrainer> Executor<T> {
                     &out,
                     self.job_mode(),
                     Some(&self.spool_dir),
-                    &ResumePolicy::default(),
+                    &resume_policy(self.timeout),
                 )
                 .context("send task result")?;
             } else {
@@ -162,6 +174,12 @@ impl<T: LocalTrainer> Executor<T> {
 
     pub fn with_reliable(mut self, reliable: bool) -> Self {
         self.reliable = reliable;
+        self
+    }
+
+    /// Control/transfer timeout (mirrors `JobConfig.transfer_timeout_secs`).
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
         self
     }
 }

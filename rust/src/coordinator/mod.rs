@@ -94,9 +94,34 @@ pub struct RoundStats {
     pub round: usize,
     /// Mean of clients' mean local losses.
     pub mean_loss: f32,
-    /// Wire bytes sent + received by the server this round.
+    /// Wire bytes sent + received by the server this round (traffic of
+    /// contributions that made it into the aggregate).
     pub comm_bytes: u64,
     pub seconds: f64,
+    /// Clients selected by the sampling policy this round.
+    pub sampled: usize,
+    /// Contributions folded into the aggregate.
+    pub completed: usize,
+    /// Selected clients excluded after an error/disconnect.
+    pub failed: usize,
+    /// Selected clients abandoned at the round deadline.
+    pub stragglers: usize,
+}
+
+/// Retry/resume policy for the coordinator's reliable weight transfers,
+/// scaled so the sender's silent-round budget tracks the configured
+/// transfer timeout. The default 600 s timeout reproduces the historical
+/// `ResumePolicy::default()` (16 attempts × 2 s ack timeout).
+pub(crate) fn resume_policy(transfer_timeout: std::time::Duration) -> crate::sfm::ResumePolicy {
+    let ack = (transfer_timeout / 16).clamp(
+        std::time::Duration::from_millis(100),
+        std::time::Duration::from_secs(2),
+    );
+    crate::sfm::ResumePolicy {
+        max_attempts: 16,
+        ack_timeout: ack,
+        probe_first: false,
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +129,21 @@ mod tests {
     use super::*;
     use crate::config::model_spec::ModelSpec;
     use crate::tensor::init::materialize;
+
+    #[test]
+    fn resume_policy_tracks_transfer_timeout() {
+        use std::time::Duration;
+        // the default 600 s timeout reproduces the historical policy
+        let d = resume_policy(Duration::from_secs(600));
+        assert_eq!(d.ack_timeout, Duration::from_secs(2));
+        assert_eq!(d.max_attempts, 16);
+        // a short job timeout shrinks the silent-round budget with it
+        let fast = resume_policy(Duration::from_secs(2));
+        assert_eq!(fast.ack_timeout, Duration::from_millis(125));
+        // ...but never below the floor
+        let floor = resume_policy(Duration::from_millis(200));
+        assert_eq!(floor.ack_timeout, Duration::from_millis(100));
+    }
 
     #[test]
     fn mock_trainer_converges() {

@@ -22,6 +22,9 @@ pub enum CtrlMsg {
         local_steps: usize,
         headers: BTreeMap<String, Json>,
     },
+    /// Server → client: not sampled this round — no task data follows;
+    /// stand by for the next control message.
+    NoTask { round: usize },
     /// Client → server: result follows (weights object next).
     Result {
         round: usize,
@@ -62,6 +65,10 @@ impl CtrlMsg {
                 ("round", Json::num(*round as f64)),
                 ("local_steps", Json::num(*local_steps as f64)),
                 ("headers", headers_to_json(headers)),
+            ]),
+            CtrlMsg::NoTask { round } => Json::obj(vec![
+                ("op", Json::str("no_task")),
+                ("round", Json::num(*round as f64)),
             ]),
             CtrlMsg::Result {
                 round,
@@ -111,6 +118,12 @@ impl CtrlMsg {
                     .unwrap_or(1),
                 headers: headers_from_json(j.get("headers")),
             },
+            "no_task" => CtrlMsg::NoTask {
+                round: j
+                    .get("round")
+                    .and_then(|r| r.as_usize())
+                    .ok_or_else(|| anyhow!("no_task without round"))?,
+            },
             "result" => CtrlMsg::Result {
                 round: j
                     .get("round")
@@ -155,6 +168,7 @@ mod tests {
                 local_steps: 10,
                 headers: headers.clone(),
             },
+            CtrlMsg::NoTask { round: 4 },
             CtrlMsg::Result {
                 round: 3,
                 client: "site-1".into(),

@@ -7,12 +7,13 @@ use super::controller::Controller;
 use super::executor::Executor;
 use super::LocalTrainer;
 use crate::config::{JobConfig, NetProfile};
-use crate::filter::FilterSet;
+use crate::filter::{FilterFactory, FilterSet};
 use crate::metrics::Report;
 use crate::sfm::{inmem, netsim, SfmEndpoint};
 use crate::tensor::ParamContainer;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Builds a fresh trainer per client, *inside the client's thread* (PJRT
 /// clients are not Send, so construction must happen where the trainer
@@ -36,11 +37,15 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
     job: &JobConfig,
     initial: ParamContainer,
     make_trainer: TrainerFactory<T>,
-    make_filters: impl Fn() -> FilterSet + Send + Sync,
+    make_filters: impl Fn() -> FilterSet + Send + Sync + 'static,
 ) -> Result<SimResult> {
     let spool = spool_dir();
     std::fs::create_dir_all(&spool)?;
-    let mut controller = Controller::new(job.clone(), make_filters(), spool.clone());
+    // The same factory builds the per-client executor chains and the
+    // server's per-session chains (the paper's symmetric two-way wiring).
+    let make_filters: FilterFactory = Arc::new(make_filters);
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+        .with_filter_factory(make_filters.clone());
     let mut client_handles = Vec::new();
     for i in 0..job.clients {
         // Larger in-flight window when faults are on: retransmission
@@ -62,11 +67,11 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
         let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
         let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
         let make_trainer = make_trainer.clone();
-        let filters = make_filters();
+        let filters = (*make_filters)();
         let mode = job.streaming;
         let reliable = job.reliable;
+        let timeout = job.transfer_timeout();
         let spool_c = spool.clone();
-        let local_steps_hint = job.train.local_steps;
         let handle = std::thread::Builder::new()
             .name(format!("client-{i}"))
             .spawn(move || -> Result<usize> {
@@ -78,8 +83,8 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
                     spool_c,
                 )
                 .with_mode(mode)
-                .with_reliable(reliable);
-                let _ = local_steps_hint;
+                .with_reliable(reliable)
+                .with_timeout(timeout);
                 exec.register()?;
                 exec.run()
             })?;
@@ -94,9 +99,32 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
     report.set_label("streaming", job.streaming.name());
     let global = controller.run(initial, &mut report)?;
 
-    for h in client_handles {
-        let rounds = h.join().expect("client thread panicked")?;
-        debug_assert_eq!(rounds, job.rounds);
+    // Reconcile client views against the server's ledger: every task the
+    // server issued must have been executed (a real check, not a
+    // debug_assert — with sampling a client legitimately runs fewer
+    // tasks than `job.rounds`, so compare against `tasks_sent`).
+    let mut failures = Vec::new();
+    for (i, h) in client_handles.into_iter().enumerate() {
+        match h.join().expect("client thread panicked") {
+            Ok(executed) => {
+                let issued = controller.tasks_sent.get(i).copied().unwrap_or(0);
+                if executed != issued {
+                    bail!(
+                        "client {i} executed {executed} task(s) but the server issued {issued}"
+                    );
+                }
+            }
+            Err(e) => failures.push((i, e)),
+        }
+    }
+    if !failures.is_empty() {
+        if !job.round_policy.allow_partial {
+            let (i, e) = &failures[0];
+            bail!("client {i} failed: {e:#}");
+        }
+        for (i, e) in &failures {
+            log::warn!("client {i} failed mid-job (tolerated by allow_partial): {e:#}");
+        }
     }
     Ok(SimResult { global, report })
 }
@@ -264,6 +292,26 @@ mod tests {
             r.report.scalars
         );
         assert!(r.report.scalars["nacks_total"] > 0.0);
+    }
+
+    #[test]
+    fn sampled_rounds_run_fewer_tasks_and_stay_deterministic() {
+        let mut j = job(4, QuantScheme::None, StreamingMode::Regular);
+        j.rounds = 4;
+        j.round_policy.sample_fraction = 0.5;
+        let a = run(&j);
+        let s = &a.report.series["clients_sampled"];
+        assert_eq!(s.points.len(), 4);
+        assert!(s.points.iter().all(|&(_, y)| y == 2.0), "{:?}", s.points);
+        assert_eq!(a.report.scalars["clients_sampled_total"], 8.0);
+        assert_eq!(a.report.scalars["clients_failed_total"], 0.0);
+        assert_eq!(a.report.scalars["stragglers_dropped_total"], 0.0);
+        let g = &a.report.series["global_loss"];
+        assert!(g.points[3].1 < g.points[0].1, "{:?}", g.points);
+        // selection (and therefore the whole run) is a pure function of
+        // the job seed: a second run reproduces the weights bit-exactly
+        let b = run(&j);
+        assert_eq!(a.global.max_abs_diff(&b.global), 0.0);
     }
 
     #[test]

@@ -81,6 +81,12 @@ pub trait Filter: Send + Sync {
     fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg>;
 }
 
+/// Shared constructor for filter chains. The concurrent round engine
+/// builds one independent `FilterSet` per client session from a factory
+/// (filters are pure per message, but per-session chains keep any future
+/// stateful filter honest and mirror the simulator's per-client wiring).
+pub type FilterFactory = std::sync::Arc<dyn Fn() -> FilterSet + Send + Sync>;
+
 /// An ordered filter chain per filter point.
 #[derive(Default)]
 pub struct FilterSet {
@@ -146,6 +152,12 @@ impl FilterSet {
         );
         set
     }
+
+    /// Factory form of [`FilterSet::two_way_quantization`] for per-session
+    /// chains.
+    pub fn two_way_quantization_factory(scheme: crate::config::QuantScheme) -> FilterFactory {
+        std::sync::Arc::new(move || FilterSet::two_way_quantization(scheme))
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +220,17 @@ mod tests {
             let d2 = c_in.max_abs_diff(&s_in);
             assert!(d1 < tol, "{scheme:?} server->client err {d1}");
             assert!(d2 < tol, "{scheme:?} client->server err {d2}");
+        }
+    }
+
+    #[test]
+    fn factory_builds_independent_full_sets() {
+        let f = FilterSet::two_way_quantization_factory(QuantScheme::Nf4);
+        let a = f();
+        let b = f();
+        for p in FilterPoint::all() {
+            assert_eq!(a.names(p).len(), 1, "{p}");
+            assert_eq!(a.names(p), b.names(p));
         }
     }
 

@@ -11,7 +11,8 @@
 //! * [`streaming`] — regular / container / file object streaming.
 //! * [`filter`] — the four-point filter mechanism; quantization filters.
 //! * [`quant`] — fp16 / bf16 / blockwise8 / fp4 / nf4 codecs.
-//! * [`coordinator`] — Controller/Executor federated workflow + FedAvg.
+//! * [`coordinator`] — concurrent round engine (per-client sessions,
+//!   sampling / quorum / deadlines / partial aggregation) + FedAvg.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX train step.
 
 pub mod config;

@@ -41,7 +41,9 @@ USAGE: flare <command> [options]
 COMMANDS:
   simulate      --job <file> | [--model mini --clients 1 --rounds 5
                 --local-steps 10 --quant none --streaming regular
-                --trainer pjrt|mock --alpha 0 --out results/run.json]
+                --trainer pjrt|mock --alpha 0 --out results/run.json
+                --sample-fraction 1.0 --min-clients 0 --round-deadline 0
+                --allow-partial[=false] --transfer-timeout 600]
   server        --listen 127.0.0.1:7777 --job <file>
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
@@ -53,7 +55,7 @@ COMMANDS:
 
 fn main() {
     flare::util::logging::init();
-    let args = Args::from_env(&["encode", "verbose", "help", "full"]);
+    let args = Args::from_env(&["encode", "verbose", "help", "full", "allow-partial"]);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(&args),
@@ -100,6 +102,21 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
     job.chunk_bytes = args.get_size("chunk", job.chunk_bytes);
     job.dirichlet_alpha = args.get_f64("alpha", job.dirichlet_alpha);
     job.seed = args.get_u64("seed", job.seed);
+    job.transfer_timeout_secs = args.get_u64("transfer-timeout", job.transfer_timeout_secs);
+    job.round_policy.sample_fraction =
+        args.get_f64("sample-fraction", job.round_policy.sample_fraction);
+    job.round_policy.min_clients = args.get_usize("min-clients", job.round_policy.min_clients);
+    job.round_policy.round_deadline_secs =
+        args.get_u64("round-deadline", job.round_policy.round_deadline_secs);
+    // `--allow-partial` enables; `--allow-partial=false` overrides a job
+    // file back to abort-on-failure.
+    if let Some(v) = args.get("allow-partial") {
+        job.round_policy.allow_partial = v
+            .parse()
+            .map_err(|_| anyhow!("allow-partial: expected true|false, got '{v}'"))?;
+    } else if args.flag("allow-partial") {
+        job.round_policy.allow_partial = true;
+    }
     if let Some(d) = args.get("artifacts") {
         job.artifacts_dir = d.to_string();
     }
@@ -264,9 +281,10 @@ fn cmd_client(args: &Args) -> Result<()> {
         spool,
     )
     .with_mode(job.streaming)
-    .with_reliable(job.reliable);
+    .with_reliable(job.reliable)
+    .with_timeout(job.transfer_timeout());
     let rounds = exec.run()?;
-    println!("completed {rounds} rounds");
+    println!("completed {rounds} task rounds");
     Ok(())
 }
 

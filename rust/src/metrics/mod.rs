@@ -23,6 +23,11 @@ impl Series {
         self.points.last().map(|p| p.1)
     }
 
+    /// Sum of the y values (e.g. totalling a per-round counter series).
+    pub fn sum(&self) -> f64 {
+        self.points.iter().map(|p| p.1).sum()
+    }
+
     pub fn mean_tail(&self, n: usize) -> f64 {
         let k = self.points.len().min(n);
         if k == 0 {
@@ -204,6 +209,8 @@ mod tests {
         }
         assert_eq!(s.mean_tail(2), 8.5);
         assert_eq!(s.last(), Some(9.0));
+        assert_eq!(s.sum(), 45.0);
+        assert_eq!(Series::default().sum(), 0.0);
     }
 
     #[test]

@@ -894,13 +894,13 @@ fn recv_container(ep: &SfmEndpoint, desc: &Json) -> Result<(WeightsMsg, Transfer
 // -- file ---------------------------------------------------------------------
 
 fn spool_path(dir: &Path, tag: &str) -> PathBuf {
+    // Process id + atomic sequence: concurrent session workers spool
+    // into the same directory, so a timestamp alone could collide.
+    static SPOOL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SPOOL_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     dir.join(format!(
-        "flare_spool_{tag}_{}_{}.bin",
-        std::process::id(),
-        std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_nanos())
-            .unwrap_or(0)
+        "flare_spool_{tag}_{}_{seq}.bin",
+        std::process::id()
     ))
 }
 

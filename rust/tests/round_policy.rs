@@ -1,0 +1,405 @@
+//! Concurrent round engine: wall-clock, sampling, dropout and straggler
+//! scenarios (DESIGN.md §Round lifecycle).
+//!
+//! Every scenario is deterministic: client selection is a pure function
+//! of (seed, round), failures are injected with the seeded
+//! `FaultProfile` disconnect-at-byte-N harness, and stragglers are
+//! manufactured with bandwidth-shaped links — never with sleeps in test
+//! code.
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{
+    FaultProfile, JobConfig, NetProfile, QuantScheme, RoundPolicy, StreamingMode, TrainConfig,
+};
+use flare::coordinator::aggregator::FedAvg;
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::{LocalTrainer, MockTrainer, RoundStats};
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::{inmem, netsim, SfmEndpoint};
+use flare::tensor::init::materialize;
+use flare::tensor::ParamContainer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// ~135K-parameter model (~540 KB fp32): big enough that bandwidth
+/// shaping dominates round time, small enough for fast tests.
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::llama(
+        "tiny",
+        LlamaDims {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            untied_head: true,
+        },
+    )
+}
+
+fn net(bytes_per_sec: u64) -> NetProfile {
+    NetProfile {
+        bandwidth_bps: bytes_per_sec,
+        latency_us: 200,
+    }
+}
+
+fn base_job(clients: usize, policy: RoundPolicy) -> JobConfig {
+    JobConfig {
+        name: "round-policy".into(),
+        clients,
+        rounds: 1,
+        quant: QuantScheme::None,
+        streaming: StreamingMode::Regular,
+        chunk_bytes: 64 * 1024,
+        round_policy: policy,
+        train: TrainConfig {
+            local_steps: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Outcome of one manually wired federated run (per-client network
+/// shaping and fault injection, which `run_simulation` does not expose).
+struct ManualRun {
+    outcome: anyhow::Result<ParamContainer>,
+    report: Report,
+    rounds: Vec<RoundStats>,
+    tasks_sent: Vec<usize>,
+    client_results: Vec<anyhow::Result<usize>>,
+}
+
+#[allow(clippy::type_complexity)]
+fn run_manual(
+    job: &JobConfig,
+    initial: &ParamContainer,
+    targets: &[ParamContainer],
+    samples: &[u64],
+    nets: &[NetProfile],
+    faults: &[(FaultProfile, FaultProfile)],
+) -> ManualRun {
+    static SPOOL_SEQ: AtomicU64 = AtomicU64::new(0);
+    let spool = std::env::temp_dir().join(format!(
+        "flare_round_policy_{}_{}",
+        std::process::id(),
+        SPOOL_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&spool).unwrap();
+
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone());
+    let mut handles = Vec::new();
+    for i in 0..job.clients {
+        let mut pair = inmem::pair(1024);
+        if nets[i] != NetProfile::UNLIMITED {
+            pair = netsim::shape_pair(pair, nets[i]);
+        }
+        let (to_client, to_server) = faults[i];
+        if !to_client.is_none() || !to_server.is_none() {
+            let (faulted, _sa, _sb) = netsim::fault_pair(pair, to_client, to_server);
+            pair = faulted;
+        }
+        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
+        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
+        let target = targets[i].clone();
+        let n_samples = samples[i];
+        let job_c = job.clone();
+        let spool_c = spool.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                client_ep,
+                FilterSet::two_way_quantization(job_c.quant),
+                MockTrainer::new(target, 0.3, n_samples),
+                spool_c,
+            )
+            .with_mode(job_c.streaming)
+            .with_reliable(job_c.reliable)
+            .with_timeout(job_c.transfer_timeout());
+            exec.register()?;
+            exec.run()
+        }));
+        controller
+            .accept_client(server_ep, Some(Duration::from_secs(30)))
+            .unwrap();
+    }
+
+    let mut report = Report::new();
+    let outcome = controller.run(initial.clone(), &mut report);
+    let client_results = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked"))
+        .collect();
+    ManualRun {
+        outcome,
+        report,
+        rounds: controller.rounds.clone(),
+        tasks_sent: controller.tasks_sent.clone(),
+        client_results,
+    }
+}
+
+/// FedAvg over the given clients' mock updates, computed directly — the
+/// reference the engine's aggregate must match bit-for-bit.
+fn expected_fedavg(
+    initial: &ParamContainer,
+    targets: &[ParamContainer],
+    samples: &[u64],
+    clients: &[usize],
+    local_steps: usize,
+) -> ParamContainer {
+    let mut agg = FedAvg::new();
+    for &i in clients {
+        let mut t = MockTrainer::new(targets[i].clone(), 0.3, samples[i]);
+        let (w, _losses) = t.train(initial, local_steps, 0).unwrap();
+        agg.add(&w, samples[i]).unwrap();
+    }
+    agg.finalize().unwrap()
+}
+
+/// Acceptance: with 8 clients on heterogeneous bandwidths, a concurrent
+/// round completes in < 2x the slowest single client's round time (a
+/// sequential scatter/gather would need the *sum* of all transfers,
+/// ~2.6x the slowest here, so this bound fails if rounds serialize).
+#[test]
+fn concurrent_round_tracks_slowest_client_not_the_sum() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 1);
+    let kb = 1024u64;
+    // slowest first: 3 MB/s .. 8 MB/s
+    let bws = [
+        3000 * kb,
+        3500 * kb,
+        4000 * kb,
+        4500 * kb,
+        5000 * kb,
+        5500 * kb,
+        6000 * kb,
+        8000 * kb,
+    ];
+    let nets: Vec<NetProfile> = bws.iter().map(|&b| net(b)).collect();
+    let n = nets.len();
+    let targets: Vec<ParamContainer> = (0..n).map(|i| materialize(&spec, 100 + i as u64)).collect();
+    let samples = vec![100u64; n];
+    let no_faults = vec![(FaultProfile::NONE, FaultProfile::NONE); n];
+
+    // Baseline: one client alone on the slowest link.
+    let solo_job = base_job(1, RoundPolicy::default());
+    let solo = run_manual(
+        &solo_job,
+        &initial,
+        &targets[..1],
+        &samples[..1],
+        &nets[..1],
+        &no_faults[..1],
+    );
+    solo.outcome.expect("solo run failed");
+    let t_slowest = solo.rounds[0].seconds;
+
+    let job = base_job(n, RoundPolicy::default());
+    let full = run_manual(&job, &initial, &targets, &samples, &nets, &no_faults);
+    let global = full.outcome.expect("concurrent run failed");
+    assert_eq!(full.rounds[0].sampled, n);
+    assert_eq!(full.rounds[0].completed, n);
+    let t_round = full.rounds[0].seconds;
+    assert!(
+        t_round < 2.0 * t_slowest,
+        "concurrent round took {t_round:.2}s, slowest client alone takes {t_slowest:.2}s \
+         — rounds are serializing"
+    );
+
+    // Default policy folds in registration order: the aggregate equals
+    // the sequential FedAvg over all clients bit-for-bit.
+    let all: Vec<usize> = (0..n).collect();
+    let expect = expected_fedavg(&initial, &targets, &samples, &all, job.train.local_steps);
+    assert_eq!(global.max_abs_diff(&expect), 0.0);
+
+    // every client reported a per-round timing
+    for i in 0..n {
+        let s = &full.report.series[&format!("client_round_secs/site-{}", i + 1)];
+        assert_eq!(s.points.len(), 1);
+    }
+}
+
+/// Acceptance: a seeded mid-round disconnect under `allow_partial` yields
+/// a completed quorum round whose global weights equal FedAvg over
+/// exactly the surviving contributions.
+#[test]
+fn mid_round_disconnect_completes_quorum_round_with_survivors() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 2);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 200 + i as u64)).collect();
+    let samples = [100u64, 50, 75];
+    let nets = [NetProfile::UNLIMITED; 3];
+    // Client 2's uplink dies for good after 64 KB — mid result upload.
+    let kill = FaultProfile {
+        seed: 4242,
+        disconnect_at_bytes: 64 * 1024,
+        disconnect_frames: u64::MAX,
+        ..FaultProfile::NONE
+    };
+    let mut faults = [(FaultProfile::NONE, FaultProfile::NONE); 3];
+    faults[2] = (FaultProfile::NONE, kill);
+
+    let mut job = base_job(
+        3,
+        RoundPolicy {
+            allow_partial: true,
+            min_clients: 2,
+            ..RoundPolicy::default()
+        },
+    );
+    job.reliable = true; // resumable transfers; the server times out cleanly
+    job.chunk_bytes = 16 * 1024;
+    job.transfer_timeout_secs = 2;
+
+    let r = run_manual(&job, &initial, &targets, &samples, &nets, &faults);
+    let global = r.outcome.expect("partial round must complete");
+    assert_eq!(r.rounds[0].completed, 2);
+    assert_eq!(r.rounds[0].failed, 1);
+    assert_eq!(r.report.series["clients_failed"].points, [(0.0, 1.0)]);
+    assert_eq!(r.report.scalars["clients_failed_total"], 1.0);
+
+    // survivors only, bit-for-bit
+    let expect = expected_fedavg(&initial, &targets, &samples, &[0, 1], job.train.local_steps);
+    assert_eq!(global.max_abs_diff(&expect), 0.0);
+    // ...and that is measurably different from a full three-client FedAvg
+    let expect_full =
+        expected_fedavg(&initial, &targets, &samples, &[0, 1, 2], job.train.local_steps);
+    assert!(global.max_abs_diff(&expect_full) > 1e-4);
+
+    // the dead client's executor errored; the survivors ran their task
+    assert!(r.client_results[2].is_err());
+    for (i, res) in r.client_results.iter().take(2).enumerate() {
+        assert_eq!(res.as_ref().unwrap(), &1, "client {i}");
+    }
+    assert_eq!(r.tasks_sent, [1, 1, 1]);
+}
+
+/// Same scenario, but the *first* registered client dies. Its failure
+/// event typically arrives last (the server burns its transfer timeout),
+/// so the survivors' contributions sit buffered *behind* the failed fold
+/// position — the round must still fold both of them, not drop them.
+#[test]
+fn first_client_failure_does_not_block_the_fold_frontier() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 2);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 200 + i as u64)).collect();
+    let samples = [100u64, 50, 75];
+    let nets = [NetProfile::UNLIMITED; 3];
+    let kill = FaultProfile {
+        seed: 4242,
+        disconnect_at_bytes: 64 * 1024,
+        disconnect_frames: u64::MAX,
+        ..FaultProfile::NONE
+    };
+    let mut faults = [(FaultProfile::NONE, FaultProfile::NONE); 3];
+    faults[0] = (FaultProfile::NONE, kill);
+
+    let mut job = base_job(
+        3,
+        RoundPolicy {
+            allow_partial: true,
+            min_clients: 2,
+            ..RoundPolicy::default()
+        },
+    );
+    job.reliable = true;
+    job.chunk_bytes = 16 * 1024;
+    job.transfer_timeout_secs = 2;
+
+    let r = run_manual(&job, &initial, &targets, &samples, &nets, &faults);
+    let global = r.outcome.expect("partial round must complete");
+    assert_eq!(r.rounds[0].completed, 2);
+    assert_eq!(r.rounds[0].failed, 1);
+    let expect = expected_fedavg(&initial, &targets, &samples, &[1, 2], job.train.local_steps);
+    assert_eq!(global.max_abs_diff(&expect), 0.0);
+    assert!(r.client_results[0].is_err());
+}
+
+/// The same seeded disconnect with `allow_partial: false` aborts the job
+/// deterministically instead of completing a partial round.
+#[test]
+fn mid_round_disconnect_aborts_without_allow_partial() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 2);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 200 + i as u64)).collect();
+    let samples = [100u64, 50, 75];
+    let nets = [NetProfile::UNLIMITED; 3];
+    let kill = FaultProfile {
+        seed: 4242,
+        disconnect_at_bytes: 64 * 1024,
+        disconnect_frames: u64::MAX,
+        ..FaultProfile::NONE
+    };
+    let mut faults = [(FaultProfile::NONE, FaultProfile::NONE); 3];
+    faults[2] = (FaultProfile::NONE, kill);
+
+    let mut job = base_job(3, RoundPolicy::default());
+    job.reliable = true;
+    job.chunk_bytes = 16 * 1024;
+    job.transfer_timeout_secs = 2;
+
+    let r = run_manual(&job, &initial, &targets, &samples, &nets, &faults);
+    let err = r.outcome.expect_err("abort-on-failure must abort");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("failed in round 0"),
+        "unexpected abort message: {msg}"
+    );
+}
+
+/// A client past the round deadline is abandoned as a straggler: the
+/// round completes with the quorum, and the straggler's session drains
+/// (its late result is discarded, its executor still finishes cleanly).
+#[test]
+fn straggler_past_deadline_is_dropped_and_drained() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 3);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 300 + i as u64)).collect();
+    let samples = [100u64, 100, 100];
+    // clients 0/1 fast, client 2 on a ~400 KB/s link (~2.7 s round)
+    let nets = [
+        NetProfile::UNLIMITED,
+        NetProfile::UNLIMITED,
+        net(400 * 1024),
+    ];
+    let no_faults = [(FaultProfile::NONE, FaultProfile::NONE); 3];
+
+    let job = base_job(
+        3,
+        RoundPolicy {
+            allow_partial: true,
+            min_clients: 2,
+            round_deadline_secs: 1,
+            ..RoundPolicy::default()
+        },
+    );
+    let r = run_manual(&job, &initial, &targets, &samples, &nets, &no_faults);
+    let global = r.outcome.expect("quorum round must complete");
+    assert_eq!(r.rounds[0].completed, 2);
+    assert_eq!(r.rounds[0].stragglers, 1);
+    assert_eq!(r.rounds[0].failed, 0);
+    assert_eq!(r.report.scalars["stragglers_dropped_total"], 1.0);
+    // the round ended at the deadline, not after the slow transfer
+    assert!(
+        r.rounds[0].seconds < 2.0,
+        "round took {:.2}s despite the 1s deadline",
+        r.rounds[0].seconds
+    );
+
+    // aggregate is FedAvg over the two fast clients only
+    let expect = expected_fedavg(&initial, &targets, &samples, &[0, 1], job.train.local_steps);
+    assert_eq!(global.max_abs_diff(&expect), 0.0);
+
+    // the straggler's session drained: its executor completed its task
+    // and saw a clean Done
+    for (i, res) in r.client_results.iter().enumerate() {
+        assert_eq!(res.as_ref().unwrap(), &1, "client {i}");
+    }
+    assert_eq!(r.tasks_sent, [1, 1, 1]);
+}

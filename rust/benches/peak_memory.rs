@@ -1,0 +1,183 @@
+//! Peak gather memory: whole-container vs entry-streamed fold.
+//!
+//! Sweeps client count for one nf4 container-mode round and reports the
+//! tracked communication-buffer peak (`COMM_GAUGE`) plus round
+//! wall-clock for both pipelines. The whole-container path scales
+//! O(model × sessions); the entry-streamed fold stays
+//! O(accumulator + entry × sessions).
+//!
+//! Run: `cargo bench --bench peak_memory` (plain binary).
+//! CI runs `--smoke` (single iteration, 2-point sweep) to keep the BENCH
+//! JSON output compilable and parseable.
+//!
+//! Each measurement prints one machine-readable line:
+//! `BENCH_JSON {"bench":"peak_memory","path":"entry|buffered",...}`
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{JobConfig, QuantScheme, StreamingMode, TrainConfig};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::memory::COMM_GAUGE;
+use flare::metrics::Report;
+use flare::sfm::{inmem, SfmEndpoint};
+use flare::tensor::init::materialize;
+use flare::util::bench::print_table;
+use flare::util::bytes::human;
+use flare::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+fn bench_spec() -> ModelSpec {
+    // ~2.1 MB fp32: big enough that buffered updates dominate the gauge,
+    // small enough for a quick sweep.
+    ModelSpec::llama(
+        "bench-tiny",
+        LlamaDims {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_ff: 512,
+            untied_head: true,
+        },
+    )
+}
+
+struct Measurement {
+    peak_comm: u64,
+    round_secs: f64,
+}
+
+fn run_round(clients: usize, entry_fold: bool) -> Measurement {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let spool = std::env::temp_dir().join(format!(
+        "flare_peakbench_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&spool).unwrap();
+    let spec = bench_spec();
+    let initial = materialize(&spec, 1);
+    let job = JobConfig {
+        name: "peak-memory".into(),
+        clients,
+        rounds: 1,
+        quant: QuantScheme::Nf4,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 64 * 1024,
+        entry_fold,
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+        .with_filter_factory(FilterSet::two_way_quantization_factory(job.quant));
+    let mut handles = Vec::new();
+    for i in 0..clients {
+        let pair = inmem::pair(4096);
+        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
+        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
+        let target = materialize(&spec, 100 + i as u64);
+        let job_c = job.clone();
+        let spool_c = spool.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                client_ep,
+                FilterSet::two_way_quantization(job_c.quant),
+                MockTrainer::new(target, 0.3, 100),
+                spool_c,
+            )
+            .with_mode(job_c.streaming)
+            .with_entry_fold(job_c.entry_fold)
+            .with_timeout(job_c.transfer_timeout());
+            exec.register().unwrap();
+            exec.run().unwrap()
+        }));
+        controller
+            .accept_client(server_ep, Some(Duration::from_secs(30)))
+            .unwrap();
+    }
+    COMM_GAUGE.reset_peak();
+    let base = COMM_GAUGE.current();
+    let mut report = Report::new();
+    controller
+        .run(initial, &mut report)
+        .expect("federated round failed");
+    let peak_comm = COMM_GAUGE.peak().saturating_sub(base);
+    let round_secs = controller.rounds[0].seconds;
+    for h in handles {
+        h.join().unwrap();
+    }
+    std::fs::remove_dir_all(&spool).ok();
+    Measurement {
+        peak_comm,
+        round_secs,
+    }
+}
+
+fn bench_json(path: &str, clients: usize, m: &Measurement, model_bytes: u64, max_entry: u64) {
+    let j = Json::obj(vec![
+        ("bench", Json::str("peak_memory")),
+        ("path", Json::str(path)),
+        ("clients", Json::num(clients as f64)),
+        ("peak_comm_bytes", Json::num(m.peak_comm as f64)),
+        ("round_secs", Json::num(m.round_secs)),
+        ("model_bytes", Json::num(model_bytes as f64)),
+        ("max_entry_bytes", Json::num(max_entry as f64)),
+    ]);
+    println!("BENCH_JSON {j}");
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let spec = bench_spec();
+    let model_bytes = spec.total_bytes_f32();
+    let max_entry = spec.max_param_bytes_f32();
+    let sweep: &[usize] = if smoke { &[2, 4] } else { &[2, 4, 8, 16] };
+
+    println!(
+        "model {} fp32 ({} tensors, largest {}), nf4 container streaming, 1 round\n",
+        human(model_bytes),
+        spec.params.len(),
+        human(max_entry)
+    );
+
+    let mut rows = Vec::new();
+    for &clients in sweep {
+        let buffered = run_round(clients, false);
+        let entry = run_round(clients, true);
+        bench_json("buffered", clients, &buffered, model_bytes, max_entry);
+        bench_json("entry", clients, &entry, model_bytes, max_entry);
+        rows.push(vec![
+            clients.to_string(),
+            human(buffered.peak_comm),
+            human(entry.peak_comm),
+            format!(
+                "{:.1}x",
+                buffered.peak_comm as f64 / entry.peak_comm.max(1) as f64
+            ),
+            format!("{:.2} / {:.2}", buffered.round_secs, entry.round_secs),
+        ]);
+    }
+    print_table(
+        "peak tracked comm bytes per gather (whole-container vs entry-streamed)",
+        &[
+            "Clients",
+            "Whole-container",
+            "Entry-streamed",
+            "Reduction",
+            "Round s (buf/entry)",
+        ],
+        &rows,
+    );
+    println!(
+        "\nwhole-container buffers every in-flight fp32 update (O(model x sessions)); \
+         the entry-streamed fold holds one entry + scratch per session"
+    );
+}

@@ -289,6 +289,14 @@ pub struct JobConfig {
     /// transfers (required when `fault` injects losses; useful on flaky
     /// real networks too).
     pub reliable: bool,
+    /// Entry-streamed message pipeline: run filter chains per entry
+    /// during (de)serialization and fold gathered results straight into
+    /// the shared accumulator, bounding server gather memory to
+    /// O(accumulator + entry × sessions) instead of O(model × sessions).
+    /// Chains containing filters without entry support fall back to the
+    /// whole-message path automatically. Disable to force the legacy
+    /// whole-container path (the `peak_memory` bench's baseline).
+    pub entry_fold: bool,
     /// Sampling / quorum / deadline / partial-aggregation policy for the
     /// concurrent round engine.
     pub round_policy: RoundPolicy,
@@ -316,6 +324,7 @@ impl Default for JobConfig {
             net: NetProfile::UNLIMITED,
             fault: FaultProfile::NONE,
             reliable: false,
+            entry_fold: true,
             round_policy: RoundPolicy::default(),
             transfer_timeout_secs: DEFAULT_TRANSFER_TIMEOUT_SECS,
             seed: 0xF1A2E,
@@ -378,6 +387,9 @@ impl JobConfig {
                 }
                 "reliable" => {
                     cfg.reliable = v.as_bool().ok_or_else(|| anyhow!("{k}: not a bool"))?
+                }
+                "entry_fold" => {
+                    cfg.entry_fold = v.as_bool().ok_or_else(|| anyhow!("{k}: not a bool"))?
                 }
                 "transfer_timeout_secs" => {
                     cfg.transfer_timeout_secs = req_usize(v, k)? as u64
@@ -528,6 +540,7 @@ impl JobConfig {
                 ]),
             ),
             ("reliable", Json::Bool(self.reliable)),
+            ("entry_fold", Json::Bool(self.entry_fold)),
             (
                 "transfer_timeout_secs",
                 Json::num(self.transfer_timeout_secs as f64),
@@ -684,6 +697,12 @@ mod tests {
         let back = JobConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.round_policy, cfg.round_policy);
         assert_eq!(back.transfer_timeout_secs, 45);
+        assert!(back.entry_fold, "entry_fold defaults on and round-trips");
+        let off = JobConfig {
+            entry_fold: false,
+            ..JobConfig::default()
+        };
+        assert!(!JobConfig::from_json(&off.to_json()).unwrap().entry_fold);
         assert_eq!(back.transfer_timeout(), std::time::Duration::from_secs(45));
         // defaults are the legacy sequential semantics
         let d = RoundPolicy::default();

@@ -1,9 +1,21 @@
 //! FedAvg aggregation — performed at original (fp32) precision, after the
 //! inbound dequantize filter (paper §II-C: "server-side aggregation ...
 //! performed with original precision").
+//!
+//! Two forms share the same arithmetic:
+//!
+//! * [`FedAvg`] — whole-contribution fold: one `add` per client update.
+//! * [`EntryFold`] — the entry-streamed fold behind the concurrent round
+//!   engine: session workers fold *one tensor at a time* straight into a
+//!   shared pre-seeded accumulator, so server gather memory is
+//!   O(accumulator + entry × sessions) instead of O(model × sessions).
+//!   A per-(position, entry) frontier keeps the per-element fold order
+//!   identical to the sequential whole-contribution fold, which is what
+//!   makes the default round policy bit-compatible with [`FedAvg`].
 
-use crate::tensor::ParamContainer;
-use anyhow::{bail, Result};
+use crate::tensor::{ParamContainer, Tensor};
+use anyhow::{anyhow, bail, Result};
+use std::sync::{Condvar, Mutex};
 
 /// Streaming weighted-average aggregator: contributions are folded in one
 /// at a time (the accumulator is the only full-size buffer, so aggregation
@@ -21,6 +33,11 @@ impl FedAvg {
     }
 
     /// Fold in one client's weights with the given sample weight.
+    ///
+    /// Validates names *and shapes* against the accumulator before any
+    /// arithmetic: a malicious or corrupt client shipping a same-named,
+    /// differently-shaped tensor is a clean `Err`, never a panic in the
+    /// axpy kernel.
     pub fn add(&mut self, update: &ParamContainer, weight: u64) -> Result<()> {
         if weight == 0 {
             bail!("zero-weight contribution");
@@ -38,6 +55,16 @@ impl FedAvg {
             Some(acc) => {
                 if acc.names() != update.names() {
                     bail!("contribution name set differs from accumulator");
+                }
+                for (name, t) in acc.iter() {
+                    let u = update.get(name).expect("names checked above");
+                    if u.meta != t.meta {
+                        bail!(
+                            "contribution shape mismatch at '{name}': {:?} vs accumulator {:?}",
+                            u.meta.shape,
+                            t.meta.shape
+                        );
+                    }
                 }
                 acc.axpy(w as f32, update);
             }
@@ -64,12 +91,263 @@ impl FedAvg {
     }
 }
 
+/// Outcome of one [`EntryFold`] operation from a session's perspective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoldOutcome {
+    /// The entry was folded (or the stream committed).
+    Folded,
+    /// This position was excluded (straggler drop / round abort): stop
+    /// filtering, drain the rest of the wire stream, report dropped.
+    Dropped,
+}
+
+struct FoldInner {
+    /// Pre-seeded zero accumulator (defines names, shapes, order).
+    acc: ParamContainer,
+    /// `folded[pos][idx]`: has position `pos` folded entry `idx`?
+    folded: Vec<Vec<bool>>,
+    folded_count: Vec<usize>,
+    /// Per-position sample weight, set by `start_stream`.
+    weight: Vec<Option<u64>>,
+    excluded: Vec<bool>,
+    finished: Vec<bool>,
+    poisoned: Option<String>,
+}
+
+impl FoldInner {
+    /// May `pos` fold entry `idx` now? The frontier rule: every earlier
+    /// non-excluded position must have folded `idx` first — this is what
+    /// reproduces the sequential fold order per element.
+    fn may_fold(&self, pos: usize, idx: usize) -> bool {
+        self.folded
+            .iter()
+            .take(pos)
+            .zip(&self.excluded)
+            .all(|(f, &ex)| ex || f[idx])
+    }
+}
+
+/// Shared entry-streamed FedAvg for one round of the concurrent engine.
+///
+/// * `fold_entry` blocks (condvar) until the caller's position owns the
+///   frontier for that entry, then axpy-folds one tensor under the lock.
+///   Sessions therefore hold at most one decoded entry while waiting —
+///   the O(entry)-per-session bound.
+/// * A contribution that fails *before* folding anything is excluded
+///   cleanly ([`EntryFold::exclude`]); one that fails after a partial
+///   fold has already mutated the shared accumulator, so the caller must
+///   [`EntryFold::poison`] the round (the engine restarts it without the
+///   failed client — see DESIGN.md §Memory bounds).
+pub struct EntryFold {
+    inner: Mutex<FoldInner>,
+    cv: Condvar,
+}
+
+impl EntryFold {
+    /// `skeleton` is a zero container shaped like the global weights;
+    /// `k` is the number of selected positions this round.
+    pub fn new(skeleton: ParamContainer, k: usize) -> EntryFold {
+        let n = skeleton.len();
+        EntryFold {
+            inner: Mutex::new(FoldInner {
+                acc: skeleton,
+                folded: vec![vec![false; n]; k],
+                folded_count: vec![0; k],
+                weight: vec![None; k],
+                excluded: vec![false; k],
+                finished: vec![false; k],
+                poisoned: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Register the session weight before its first entry arrives.
+    pub fn start_stream(&self, pos: usize, weight: u64) -> Result<()> {
+        if weight == 0 {
+            bail!("zero-weight contribution");
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.weight[pos].is_some() {
+            bail!("stream for position {pos} already started");
+        }
+        g.weight[pos] = Some(weight);
+        Ok(())
+    }
+
+    /// Fold one named tensor for `pos`. Validates name and shape against
+    /// the accumulator *before* touching it — wire-reachable mismatches
+    /// surface as `Err` (the session is quarantined), never a panic.
+    pub fn fold_entry(&self, pos: usize, idx: usize, name: &str, t: &Tensor) -> Result<FoldOutcome> {
+        let mut g = self.inner.lock().unwrap();
+        // A dropped position may still be draining its wire stream:
+        // short-circuit before validation (the accumulator may already be
+        // finalized or poisoned).
+        if g.poisoned.is_some() || g.excluded[pos] {
+            return Ok(FoldOutcome::Dropped);
+        }
+        let n = g.acc.len();
+        if idx >= n {
+            bail!("entry index {idx} out of range ({n} entries in accumulator)");
+        }
+        if g.acc.names()[idx] != name {
+            bail!(
+                "entry {idx} named '{name}', accumulator expects '{}'",
+                g.acc.names()[idx]
+            );
+        }
+        {
+            let slot = g.acc.get(name).expect("index checked");
+            if slot.meta != t.meta {
+                bail!(
+                    "entry '{name}' shape {:?} does not match accumulator {:?}",
+                    t.meta.shape,
+                    slot.meta.shape
+                );
+            }
+        }
+        let w = match g.weight[pos] {
+            Some(w) => w as f64 as f32,
+            None => bail!("fold before start_stream for position {pos}"),
+        };
+        if g.folded[pos][idx] {
+            bail!("entry {idx} ('{name}') folded twice by position {pos}");
+        }
+        loop {
+            if g.poisoned.is_some() || g.excluded[pos] {
+                return Ok(FoldOutcome::Dropped);
+            }
+            if g.may_fold(pos, idx) {
+                break;
+            }
+            // An earlier position that finished with fewer entries can
+            // never unblock us — structurally impossible while every
+            // stream validates against the same accumulator, but guard
+            // against protocol bugs instead of hanging.
+            if g.folded
+                .iter()
+                .take(pos)
+                .zip(&g.excluded)
+                .zip(&g.finished)
+                .any(|((f, &ex), &fin)| !ex && fin && !f[idx])
+            {
+                bail!("an earlier finished stream never delivered entry {idx}");
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let dst = g.acc.get_mut(name).expect("validated above");
+        let dstv = dst.as_f32_mut();
+        let src = t.as_f32();
+        for (d, s) in dstv.iter_mut().zip(src) {
+            *d += w * *s;
+        }
+        g.folded[pos][idx] = true;
+        g.folded_count[pos] += 1;
+        drop(g);
+        self.cv.notify_all();
+        Ok(FoldOutcome::Folded)
+    }
+
+    /// End of a session's stream: validates that every entry arrived.
+    pub fn finish_stream(&self, pos: usize) -> Result<FoldOutcome> {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned.is_some() || g.excluded[pos] {
+            return Ok(FoldOutcome::Dropped);
+        }
+        let n = g.acc.len();
+        if g.folded_count[pos] != n {
+            bail!(
+                "stream for position {pos} delivered {} of {n} entries",
+                g.folded_count[pos]
+            );
+        }
+        g.finished[pos] = true;
+        drop(g);
+        self.cv.notify_all();
+        Ok(FoldOutcome::Folded)
+    }
+
+    /// Exclude a position that contributed nothing yet (failed before its
+    /// first fold). Returns `Ok(true)` on clean exclusion; `Ok(false)` if
+    /// the position already folded entries — the accumulator is tainted
+    /// and the caller must poison + restart the round.
+    pub fn exclude(&self, pos: usize) -> Result<bool> {
+        let mut g = self.inner.lock().unwrap();
+        if g.folded_count[pos] > 0 && !g.finished[pos] {
+            return Ok(false);
+        }
+        if g.finished[pos] {
+            // Finished streams are part of the aggregate; excluding one
+            // is a caller bug.
+            bail!("cannot exclude position {pos}: its stream already committed");
+        }
+        g.excluded[pos] = true;
+        drop(g);
+        self.cv.notify_all();
+        Ok(true)
+    }
+
+    /// Abort the round: every blocked or future fold returns `Dropped`
+    /// so session workers drain their wire streams and rejoin.
+    pub fn poison(&self, why: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.poisoned.is_none() {
+            g.poisoned = Some(why.to_string());
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Has this position folded at least one entry (and not committed)?
+    pub fn partially_folded(&self, pos: usize) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.folded_count[pos] > 0 && !g.finished[pos]
+    }
+
+    pub fn is_finished(&self, pos: usize) -> bool {
+        self.inner.lock().unwrap().finished[pos]
+    }
+
+    /// Weighted mean over the committed streams. Total weight is summed
+    /// in *position* order — the same order the sequential fold
+    /// accumulates it — so the final scale matches bit-for-bit.
+    ///
+    /// Takes `&self`: abandoned stragglers may still hold a reference
+    /// while draining; the accumulator is moved out under the lock (their
+    /// subsequent calls see `Dropped`).
+    pub fn finalize(&self) -> Result<(ParamContainer, usize)> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(why) = &g.poisoned {
+            bail!("entry fold poisoned: {why}");
+        }
+        let mut total = 0f64;
+        let mut contributions = 0usize;
+        for p in 0..g.finished.len() {
+            if g.finished[p] {
+                total += g.weight[p].ok_or_else(|| anyhow!("finished without weight"))? as f64;
+                contributions += 1;
+            }
+        }
+        if contributions == 0 {
+            bail!("finalize with no contributions");
+        }
+        let mut acc = std::mem::take(&mut g.acc);
+        // Late fold attempts must drop, not index an empty accumulator.
+        g.poisoned = Some("round already finalized".into());
+        drop(g);
+        self.cv.notify_all();
+        acc.scale((1.0 / total) as f32);
+        Ok((acc, contributions))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::model_spec::ModelSpec;
     use crate::tensor::init::materialize;
     use crate::tensor::Tensor;
+    use std::sync::Arc;
 
     #[test]
     fn unweighted_mean() {
@@ -131,9 +409,145 @@ mod tests {
     }
 
     #[test]
+    fn mismatched_shapes_rejected_cleanly() {
+        // Same name, different shape: must be Err, not an axpy panic.
+        let mut a = ParamContainer::new();
+        a.insert("w", Tensor::from_f32(vec![2], vec![0.0, 1.0]));
+        let mut b = ParamContainer::new();
+        b.insert("w", Tensor::from_f32(vec![1, 2], vec![4.0, 5.0]));
+        let mut agg = FedAvg::new();
+        agg.add(&a, 1).unwrap();
+        let err = agg.add(&b, 1).unwrap_err().to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
     fn zero_weight_rejected() {
         let c = materialize(&ModelSpec::llama_mini(), 73);
         let mut agg = FedAvg::new();
         assert!(agg.add(&c, 0).is_err());
+    }
+
+    // -- entry fold -----------------------------------------------------------
+
+    /// Fold `updates` through an EntryFold with one thread per position,
+    /// entries submitted in the given per-position order.
+    fn entry_fold_parallel(
+        skeleton: &ParamContainer,
+        updates: &[ParamContainer],
+        weights: &[u64],
+        orders: &[Vec<usize>],
+    ) -> ParamContainer {
+        let fold = Arc::new(EntryFold::new(
+            ParamContainer::zeros_like(skeleton),
+            updates.len(),
+        ));
+        let mut handles = Vec::new();
+        for (pos, u) in updates.iter().enumerate() {
+            let fold = fold.clone();
+            let u = u.clone();
+            let w = weights[pos];
+            let order = orders[pos].clone();
+            handles.push(std::thread::spawn(move || {
+                fold.start_stream(pos, w).unwrap();
+                let names: Vec<String> = u.names().to_vec();
+                for &idx in &order {
+                    let name = &names[idx];
+                    let t = u.get(name).unwrap();
+                    assert_eq!(fold.fold_entry(pos, idx, name, t).unwrap(), FoldOutcome::Folded);
+                }
+                assert_eq!(fold.finish_stream(pos).unwrap(), FoldOutcome::Folded);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (acc, n) = fold.finalize().unwrap();
+        assert_eq!(n, updates.len());
+        acc
+    }
+
+    #[test]
+    fn entry_fold_matches_fedavg_bitwise() {
+        let spec = ModelSpec::llama_mini();
+        let updates: Vec<ParamContainer> =
+            (0..4).map(|i| materialize(&spec, 500 + i as u64)).collect();
+        let weights = [100u64, 50, 75, 10];
+
+        let mut agg = FedAvg::new();
+        for (u, &w) in updates.iter().zip(&weights) {
+            agg.add(u, w).unwrap();
+        }
+        let want = agg.finalize().unwrap();
+
+        let n = updates[0].len();
+        // in-order and scrambled per-position entry orders must agree
+        let in_order: Vec<Vec<usize>> = (0..4).map(|_| (0..n).collect()).collect();
+        let scrambled: Vec<Vec<usize>> = (0..4)
+            .map(|p| {
+                let mut v: Vec<usize> = (0..n).collect();
+                v.rotate_left(p + 1);
+                v
+            })
+            .collect();
+        for orders in [in_order, scrambled] {
+            let got = entry_fold_parallel(&updates[0], &updates, &weights, &orders);
+            assert_eq!(got.max_abs_diff(&want), 0.0);
+            assert_eq!(got.names(), want.names());
+        }
+    }
+
+    #[test]
+    fn entry_fold_rejects_mismatched_shape_and_name() {
+        let mut skel = ParamContainer::new();
+        skel.insert("w", Tensor::from_f32(vec![2], vec![0.0, 0.0]));
+        let fold = EntryFold::new(ParamContainer::zeros_like(&skel), 1);
+        fold.start_stream(0, 1).unwrap();
+        let bad_shape = Tensor::from_f32(vec![1, 2], vec![1.0, 2.0]);
+        assert!(fold.fold_entry(0, 0, "w", &bad_shape).is_err());
+        let ok = Tensor::from_f32(vec![2], vec![1.0, 2.0]);
+        assert!(fold.fold_entry(0, 0, "v", &ok).is_err());
+        assert!(fold.fold_entry(0, 5, "w", &ok).is_err());
+        assert_eq!(fold.fold_entry(0, 0, "w", &ok).unwrap(), FoldOutcome::Folded);
+        assert_eq!(fold.finish_stream(0).unwrap(), FoldOutcome::Folded);
+        let (acc, n) = fold.finalize().unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(acc.get("w").unwrap().as_f32(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn entry_fold_exclusion_and_poison() {
+        let mut skel = ParamContainer::new();
+        skel.insert("w", Tensor::from_f32(vec![1], vec![0.0]));
+        let fold = EntryFold::new(ParamContainer::zeros_like(&skel), 3);
+        let t = Tensor::from_f32(vec![1], vec![4.0]);
+
+        // position 1 contributes; position 0 fails before folding -> clean
+        fold.start_stream(1, 1).unwrap();
+        assert!(fold.exclude(0).unwrap());
+        assert_eq!(fold.fold_entry(1, 0, "w", &t).unwrap(), FoldOutcome::Folded);
+        assert_eq!(fold.finish_stream(1).unwrap(), FoldOutcome::Folded);
+
+        // position 2 folded something -> exclusion refused
+        fold.start_stream(2, 1).unwrap();
+        assert_eq!(fold.fold_entry(2, 0, "w", &t).unwrap(), FoldOutcome::Folded);
+        assert!(!fold.exclude(2).unwrap(), "partial fold must refuse exclusion");
+        assert!(fold.partially_folded(2));
+
+        // poisoning drops everyone still in flight and fails finalize
+        fold.poison("test abort");
+        assert_eq!(fold.finish_stream(2).unwrap(), FoldOutcome::Dropped);
+        assert!(fold.finalize().is_err());
+    }
+
+    #[test]
+    fn entry_fold_incomplete_stream_rejected() {
+        let spec = ModelSpec::llama_mini();
+        let u = materialize(&spec, 600);
+        let fold = EntryFold::new(ParamContainer::zeros_like(&u), 1);
+        fold.start_stream(0, 1).unwrap();
+        let (name, t) = u.iter().next().unwrap();
+        fold.fold_entry(0, 0, name, t).unwrap();
+        assert!(fold.finish_stream(0).is_err(), "missing entries must fail");
     }
 }

@@ -3,25 +3,39 @@
 //!
 //! One session worker per connected client drives its own scatter →
 //! train-wait → gather over its `SfmEndpoint`; results stream back
-//! through a fan-in channel into the O(model) [`FedAvg`] accumulator.
-//! Round wall-clock therefore tracks the slowest *selected* client, not
-//! the sum of all transfers.
+//! through a fan-in channel into the O(model) aggregation state. Round
+//! wall-clock therefore tracks the slowest *selected* client, not the
+//! sum of all transfers.
 //!
-//! Participation is governed by [`crate::config::RoundPolicy`]: per-round client
-//! sampling (deterministic in the job seed), a `min_clients` quorum, a
-//! straggler deadline, and partial aggregation on client failure. The
-//! default policy (all clients, no deadline, abort-on-failure) folds
-//! contributions in registration order and is bit-compatible with the
-//! legacy sequential controller. See DESIGN.md §Round lifecycle.
+//! With `JobConfig.entry_fold` (default on; every built-in filter is
+//! entry-capable) the gather is **entry-streamed**: session workers run
+//! the inbound filter chain per entry as its frames complete and fold
+//! each fp32 tensor straight into a shared [`EntryFold`] accumulator, so
+//! server gather memory is O(accumulator + entry × sessions) instead of
+//! O(model × sessions) — the memory-scalability analogue of the engine's
+//! time-scalability. The per-(position, entry) fold frontier keeps the
+//! fold bit-compatible with the legacy sequential gather under the
+//! default round policy. See DESIGN.md §Memory bounds.
+//!
+//! Participation is governed by [`crate::config::RoundPolicy`]: per-round
+//! client sampling (deterministic in the job seed), a `min_clients`
+//! quorum, a straggler deadline, and partial aggregation on client
+//! failure. A client that fails *before* any of its entries folded is
+//! excluded cleanly (this covers whole-message transfers and most
+//! mid-transfer disconnects); one that fails *after* a partial fold has
+//! tainted the shared accumulator, so the engine **restarts the round**
+//! without it — deterministic trainers make the retry bit-identical to a
+//! round that never selected the failed client.
 
-use super::aggregator::FedAvg;
+use super::aggregator::{EntryFold, FedAvg, FoldOutcome};
 use super::protocol::CtrlMsg;
 use super::{resume_policy, RoundStats};
 use crate::config::JobConfig;
-use crate::filter::{FilterContext, FilterFactory, FilterPoint, FilterSet};
+use crate::filter::{EntryChain, FilterContext, FilterFactory, FilterPoint, FilterSet};
+use crate::memory::{GaugeReservation, COMM_GAUGE};
 use crate::metrics::Report;
 use crate::sfm::SfmEndpoint;
-use crate::streaming::{self, WeightsMsg};
+use crate::streaming::{self, EntryFlow, WeightsMsg};
 use crate::tensor::ParamContainer;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
@@ -49,7 +63,7 @@ pub struct Controller {
     pub rounds: Vec<RoundStats>,
     /// Tasks issued per client (indexed like `clients`), filled during
     /// `run`. With sampling, a client legitimately receives fewer tasks
-    /// than `job.rounds`.
+    /// than `job.rounds`; with round restarts, more.
     pub tasks_sent: Vec<usize>,
 }
 
@@ -60,12 +74,26 @@ struct SessionCtx {
     filters: Arc<FilterSet>,
     job: JobConfig,
     spool: PathBuf,
+    /// Reused per-session inbound chain (the dequantize scratch
+    /// amortizes across entries and rounds).
+    result_chain: Option<EntryChain>,
+}
+
+/// This round's entry-fold handle for one session.
+struct SessionFold {
+    fold: Arc<EntryFold>,
+    pos: usize,
 }
 
 /// Controller → session command.
 enum SessionCmd {
     /// Run one training round starting from these global weights.
-    Task { round: usize, global: ParamContainer },
+    Task {
+        round: usize,
+        attempt: usize,
+        global: Arc<ParamContainer>,
+        fold: Option<SessionFold>,
+    },
     /// Not sampled this round: notify the client, stand by.
     Skip { round: usize },
 }
@@ -74,18 +102,40 @@ enum SessionCmd {
 struct SessionEvent {
     client: usize,
     round: usize,
-    payload: Result<Contribution>,
+    attempt: usize,
+    payload: SessionOutcome,
+}
+
+enum SessionOutcome {
+    Done(Contribution),
+    /// Excluded or poisoned mid-round; the stream was drained and the
+    /// session (and its client) stay healthy.
+    Dropped,
+    Failed(anyhow::Error),
 }
 
 /// One client's completed round.
 struct Contribution {
-    update: ParamContainer,
+    /// The decoded update — `None` when it was entry-folded straight
+    /// into the shared accumulator.
+    update: Option<ParamContainer>,
+    /// Comm-gauge reservation covering `update` while it waits for the
+    /// fold frontier (buffered path only).
+    _mem: Option<GaugeReservation>,
     n_samples: u64,
     losses: Vec<f32>,
     /// Scatter → gather wall-clock inside the session worker.
     seconds: f64,
     /// Wire bytes (sent + received) this round on the client's endpoint.
     comm_bytes: u64,
+    /// Long-lived filter scratch (dequantize buffer) held by the session.
+    scratch_bytes: u64,
+}
+
+/// What a session worker's round produced.
+enum RoundOutcome {
+    Done(Contribution),
+    Dropped,
 }
 
 impl Controller {
@@ -136,11 +186,30 @@ impl Controller {
         self.clients.iter().map(|c| pick(&c.ep.stats)).sum()
     }
 
+    /// Is the gather entry-folded? Requires the config switch and an
+    /// entry-capable inbound chain (probe one instance; per-session
+    /// factory chains share the construction).
+    fn entry_fold_enabled(&self) -> bool {
+        if !self.job.entry_fold {
+            return false;
+        }
+        match &self.filter_factory {
+            Some(f) => (**f)()
+                .entry_chain(FilterPoint::TaskResultInServer)
+                .is_some(),
+            None => self
+                .filters
+                .entry_chain(FilterPoint::TaskResultInServer)
+                .is_some(),
+        }
+    }
+
     /// Run the ScatterAndGather workflow to completion. Returns the final
     /// global weights and fills `self.rounds` + the report's series:
-    /// `global_loss` (per round), `client_loss` / `client_round_secs`
-    /// (per client), and the participation series `clients_sampled`,
-    /// `clients_failed`, `stragglers_dropped`.
+    /// `global_loss` (per round), `client_loss` / `client_round_secs` /
+    /// `session_scratch_bytes` (per client), the participation series
+    /// `clients_sampled`, `clients_failed`, `stragglers_dropped`, and
+    /// the per-round `peak_comm_bytes` gauge readings.
     pub fn run(
         &mut self,
         global: ParamContainer,
@@ -172,6 +241,7 @@ impl Controller {
                 filters,
                 job: self.job.clone(),
                 spool: self.spool_dir.clone(),
+                result_chain: None,
             };
             let evt_tx = evt_tx.clone();
             let h = std::thread::Builder::new()
@@ -209,6 +279,14 @@ impl Controller {
             "final_loss",
             self.rounds.last().map(|r| r.mean_loss as f64).unwrap_or(f64::NAN),
         );
+        report.set_scalar(
+            "peak_comm_bytes",
+            self.rounds
+                .iter()
+                .map(|r| r.peak_comm_bytes)
+                .max()
+                .unwrap_or(0) as f64,
+        );
         for (scalar, series) in [
             ("clients_sampled_total", "clients_sampled"),
             ("clients_failed_total", "clients_failed"),
@@ -245,7 +323,9 @@ impl Controller {
     }
 
     /// The per-round loop: sample, issue commands, fan-in results with
-    /// deadline/quorum enforcement, fold, repeat.
+    /// deadline/quorum enforcement, fold, repeat. Entry-folded rounds
+    /// tainted by a mid-fold failure are restarted without the failed /
+    /// straggling clients.
     fn drive_rounds(
         &mut self,
         mut global: ParamContainer,
@@ -257,6 +337,7 @@ impl Controller {
         let n = names.len();
         let rounds = self.job.rounds;
         let policy = self.job.round_policy.clone();
+        let entry_mode = self.entry_fold_enabled();
         // A client that failed once is excluded from later rounds rather
         // than burning a transfer timeout per round on a broken link.
         let mut dead = vec![false; n];
@@ -264,6 +345,7 @@ impl Controller {
 
         for round in 0..rounds {
             let t0 = Instant::now();
+            COMM_GAUGE.reset_peak();
             let selected = policy.select(n, self.job.seed, round);
             let k = selected.len();
             let quorum = policy.quorum(k);
@@ -271,116 +353,294 @@ impl Controller {
             for (p, &i) in selected.iter().enumerate() {
                 pos_of[i] = p;
             }
-
-            let mut gather = RoundGather::new(round, step_counter, selected);
-            let mut outstanding = 0usize;
+            // This-round-only exclusions (stragglers of a restarted
+            // attempt — they stay alive for future rounds).
+            let mut round_excluded = vec![false; n];
+            let global_arc = Arc::new(global.clone());
             for i in 0..n {
-                let pos = pos_of[i];
-                if pos == usize::MAX {
-                    if !dead[i] {
-                        let _ = cmd_txs[i].send(SessionCmd::Skip { round });
-                    }
-                    continue;
+                if pos_of[i] == usize::MAX && !dead[i] {
+                    let _ = cmd_txs[i].send(SessionCmd::Skip { round });
                 }
-                if dead[i] {
-                    gather.on_err(pos, names, report)?;
-                    continue;
-                }
-                self.tasks_sent[i] += 1;
-                let cmd = SessionCmd::Task {
-                    round,
-                    global: global.clone(),
-                };
-                if cmd_txs[i].send(cmd).is_ok() {
-                    outstanding += 1;
-                } else {
-                    dead[i] = true;
-                    gather.on_err(pos, names, report)?;
-                }
-            }
-            if gather.failed > 0 && !policy.allow_partial {
-                bail!(
-                    "round {round}: {} selected client(s) already failed and allow_partial is off",
-                    gather.failed
-                );
             }
 
-            let deadline = (policy.round_deadline_secs > 0)
-                .then(|| t0 + Duration::from_secs(policy.round_deadline_secs));
-            while outstanding > 0 {
-                let evt = match deadline {
-                    None => evt_rx
-                        .recv()
-                        .map_err(|_| anyhow!("all session workers exited mid-round"))?,
-                    Some(d) => {
-                        let left = d.saturating_duration_since(Instant::now());
-                        if left.is_zero() {
-                            break;
-                        }
-                        match evt_rx.recv_timeout(left) {
-                            Ok(e) => e,
-                            Err(mpsc::RecvTimeoutError::Timeout) => break,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                bail!("all session workers exited mid-round")
-                            }
-                        }
-                    }
+            let mut attempt = 0usize;
+            let (mut gather, fold, stragglers) = loop {
+                attempt += 1;
+                if attempt > k + 1 {
+                    bail!("round {round}: restart budget exhausted after {} attempts", attempt - 1);
+                }
+                let fold = if entry_mode {
+                    Some(Arc::new(EntryFold::new(
+                        ParamContainer::zeros_like(&global),
+                        k,
+                    )))
+                } else {
+                    None
                 };
-                if evt.round != round {
-                    // A straggler from an abandoned round delivered late:
-                    // its session is drained, the result is discarded.
-                    log::warn!(
-                        "round {round}: discarding stale round-{} result from '{}'",
-                        evt.round,
-                        names[evt.client]
-                    );
-                    continue;
-                }
-                let pos = pos_of[evt.client];
-                if pos == usize::MAX || gather.got[pos] {
-                    continue;
-                }
-                outstanding -= 1;
-                match evt.payload {
-                    Ok(c) => gather.on_ok(pos, c, names, report)?,
-                    Err(e) => {
-                        dead[evt.client] = true;
-                        if !policy.allow_partial {
-                            return Err(e.context(format!(
-                                "client '{}' failed in round {round}",
-                                names[evt.client]
-                            )));
+                // Each attempt gets a full deadline budget: a restart
+                // close to the original deadline must not instantly
+                // expire and strip the healthy survivors too.
+                let deadline = (policy.round_deadline_secs > 0)
+                    .then(|| Instant::now() + Duration::from_secs(policy.round_deadline_secs));
+                let mut gather = RoundGather::new(round, step_counter, selected.clone());
+                let mut outstanding = 0usize;
+                let mut pre_stragglers = 0usize;
+                for &i in &selected {
+                    let pos = pos_of[i];
+                    if dead[i] || round_excluded[i] {
+                        if let Some(f) = &fold {
+                            let _ = f.exclude(pos); // fresh fold: always clean
                         }
-                        log::warn!(
-                            "round {round}: excluding failed client '{}': {e:#}",
-                            names[evt.client]
-                        );
+                        if round_excluded[i] {
+                            gather.exclude_silent(pos, names, report)?;
+                            pre_stragglers += 1;
+                        } else {
+                            gather.on_err(pos, names, report)?;
+                        }
+                        continue;
+                    }
+                    self.tasks_sent[i] += 1;
+                    let cmd = SessionCmd::Task {
+                        round,
+                        attempt,
+                        global: global_arc.clone(),
+                        fold: fold.as_ref().map(|f| SessionFold {
+                            fold: f.clone(),
+                            pos,
+                        }),
+                    };
+                    if cmd_txs[i].send(cmd).is_ok() {
+                        outstanding += 1;
+                    } else {
+                        dead[i] = true;
+                        if let Some(f) = &fold {
+                            let _ = f.exclude(pos);
+                        }
                         gather.on_err(pos, names, report)?;
                     }
                 }
-            }
-
-            let stragglers = if outstanding > 0 {
-                if !policy.allow_partial {
+                if gather.failed > 0 && !policy.allow_partial {
+                    if let Some(f) = &fold {
+                        f.poison("round aborted: selected client failed");
+                    }
                     bail!(
-                        "round {round}: {outstanding} client(s) missed the {} s round deadline",
-                        policy.round_deadline_secs
+                        "round {round}: {} selected client(s) already failed and allow_partial is off",
+                        gather.failed
                     );
                 }
-                let s = gather.drop_stragglers(names);
-                gather.advance(names, report)?;
-                s
-            } else {
-                0
+
+                let mut restart = false;
+                while outstanding > 0 {
+                    let evt = match deadline {
+                        None => evt_rx
+                            .recv()
+                            .map_err(|_| anyhow!("all session workers exited mid-round"))?,
+                        Some(d) => {
+                            let left = d.saturating_duration_since(Instant::now());
+                            if left.is_zero() {
+                                break;
+                            }
+                            match evt_rx.recv_timeout(left) {
+                                Ok(e) => e,
+                                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    bail!("all session workers exited mid-round")
+                                }
+                            }
+                        }
+                    };
+                    if evt.round != round || evt.attempt != attempt {
+                        // A straggler from an abandoned round/attempt
+                        // delivered late: its session is drained, the
+                        // result is discarded.
+                        log::warn!(
+                            "round {round}.{attempt}: discarding stale event from '{}' (round {}.{})",
+                            names[evt.client],
+                            evt.round,
+                            evt.attempt
+                        );
+                        continue;
+                    }
+                    let pos = pos_of[evt.client];
+                    if pos == usize::MAX || gather.got[pos] {
+                        continue;
+                    }
+                    outstanding -= 1;
+                    match evt.payload {
+                        SessionOutcome::Done(c) => gather.on_ok(pos, c, names, report)?,
+                        SessionOutcome::Dropped => {
+                            // only reachable after poison/exclusion; keep
+                            // the bookkeeping consistent
+                            gather.got[pos] = true;
+                        }
+                        SessionOutcome::Failed(e) => {
+                            dead[evt.client] = true;
+                            if !policy.allow_partial {
+                                if let Some(f) = &fold {
+                                    f.poison("round aborted: client failed");
+                                }
+                                return Err(e.context(format!(
+                                    "client '{}' failed in round {round}",
+                                    names[evt.client]
+                                )));
+                            }
+                            let clean = match &fold {
+                                Some(f) => f.exclude(pos).unwrap_or(false),
+                                None => true,
+                            };
+                            if clean {
+                                log::warn!(
+                                    "round {round}: excluding failed client '{}': {e:#}",
+                                    names[evt.client]
+                                );
+                                gather.on_err(pos, names, report)?;
+                            } else {
+                                log::warn!(
+                                    "round {round}: client '{}' failed after a partial fold — \
+                                     restarting the round without it: {e:#}",
+                                    names[evt.client]
+                                );
+                                restart = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if restart {
+                    if let Some(f) = &fold {
+                        f.poison("restarting round after mid-fold failure");
+                    }
+                    continue;
+                }
+
+                let stragglers_now = if outstanding > 0 {
+                    // Deadline expired with results still missing.
+                    if !policy.allow_partial {
+                        if let Some(f) = &fold {
+                            f.poison("round deadline exceeded");
+                        }
+                        bail!(
+                            "round {round}: {outstanding} client(s) missed the {} s round deadline",
+                            policy.round_deadline_secs
+                        );
+                    }
+                    let mut need_restart = false;
+                    let mut grace_stragglers = 0usize;
+                    if let Some(f) = &fold {
+                        // Entry-fold cascade: a low-position straggler
+                        // blocks later sessions at the fold frontier, so
+                        // healthy survivors can be "missing" only because
+                        // they are waiting on it. Exclude stragglers one
+                        // at a time from the lowest position and give
+                        // each exclusion a short grace for the unblocked
+                        // survivors' results to land.
+                        'cascade: while outstanding > 0 {
+                            let Some(pos) = (0..k).find(|&p| !gather.got[p]) else {
+                                break;
+                            };
+                            match f.exclude(pos) {
+                                Ok(true) => {}
+                                // Partially folded (or committed without
+                                // its event landing): the accumulator
+                                // cannot drop it — restart.
+                                Ok(false) | Err(_) => {
+                                    need_restart = true;
+                                    break 'cascade;
+                                }
+                            }
+                            log::warn!(
+                                "round {round}: abandoning straggler '{}'",
+                                names[selected[pos]]
+                            );
+                            round_excluded[selected[pos]] = true;
+                            gather.exclude_silent(pos, names, report)?;
+                            grace_stragglers += 1;
+                            let grace = Instant::now() + Duration::from_millis(500);
+                            while outstanding > 0 {
+                                let left = grace.saturating_duration_since(Instant::now());
+                                if left.is_zero() {
+                                    break;
+                                }
+                                let evt = match evt_rx.recv_timeout(left) {
+                                    Ok(e) => e,
+                                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                        bail!("all session workers exited mid-round")
+                                    }
+                                };
+                                if evt.round != round || evt.attempt != attempt {
+                                    continue;
+                                }
+                                let p = pos_of[evt.client];
+                                if p == usize::MAX || gather.got[p] {
+                                    continue;
+                                }
+                                outstanding -= 1;
+                                match evt.payload {
+                                    SessionOutcome::Done(c) => {
+                                        gather.on_ok(p, c, names, report)?
+                                    }
+                                    SessionOutcome::Dropped => gather.got[p] = true,
+                                    SessionOutcome::Failed(e) => {
+                                        dead[evt.client] = true;
+                                        let clean = f.exclude(p).unwrap_or(false);
+                                        if clean {
+                                            log::warn!(
+                                                "round {round}: excluding failed client '{}': {e:#}",
+                                                names[evt.client]
+                                            );
+                                            gather.on_err(p, names, report)?;
+                                        } else {
+                                            need_restart = true;
+                                            break 'cascade;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    } else {
+                        for pos in 0..k {
+                            if !gather.got[pos] {
+                                round_excluded[selected[pos]] = true;
+                            }
+                        }
+                    }
+                    if need_restart {
+                        if let Some(f) = &fold {
+                            f.poison("restarting round after straggler taint");
+                        }
+                        log::warn!(
+                            "round {round}: straggler(s) with partially folded streams — \
+                             restarting the round without them"
+                        );
+                        continue;
+                    }
+                    let s = gather.drop_stragglers(names);
+                    gather.advance(names, report)?;
+                    s + grace_stragglers + pre_stragglers
+                } else {
+                    pre_stragglers
+                };
+                break (gather, fold, stragglers_now);
             };
 
             if gather.completed < quorum {
+                if let Some(f) = &fold {
+                    f.poison("below quorum");
+                }
                 bail!(
                     "round {round}: {}/{k} contributions, below quorum {quorum}",
                     gather.completed
                 );
             }
-            global = gather.agg.finalize()?;
+            global = match &fold {
+                Some(f) => {
+                    let (g, contributions) = f.finalize()?;
+                    debug_assert_eq!(contributions, gather.completed);
+                    g
+                }
+                None => gather.agg.finalize()?,
+            };
 
             step_counter += self.job.train.local_steps;
             let mean_loss = if gather.losses_n > 0 {
@@ -397,11 +657,15 @@ impl Controller {
                 completed: gather.completed,
                 failed: gather.failed,
                 stragglers,
+                peak_comm_bytes: COMM_GAUGE.peak(),
             };
             report.series_mut("global_loss").push(round as f64, mean_loss as f64);
             report
                 .series_mut("round_comm_bytes")
                 .push(round as f64, stats.comm_bytes as f64);
+            report
+                .series_mut("peak_comm_bytes")
+                .push(round as f64, stats.peak_comm_bytes as f64);
             report
                 .series_mut("clients_sampled")
                 .push(round as f64, k as f64);
@@ -412,9 +676,10 @@ impl Controller {
                 .series_mut("stragglers_dropped")
                 .push(round as f64, stats.stragglers as f64);
             log::info!(
-                "round {round}/{rounds}: mean loss {mean_loss:.4}, {}/{k} clients, comm {}, {:.2}s",
+                "round {round}/{rounds}: mean loss {mean_loss:.4}, {}/{k} clients, comm {}, peak comm {}, {:.2}s",
                 stats.completed,
                 crate::util::bytes::human(stats.comm_bytes),
+                crate::util::bytes::human(stats.peak_comm_bytes),
                 stats.seconds
             );
             self.rounds.push(stats);
@@ -425,8 +690,10 @@ impl Controller {
 
 /// Per-round fan-in state: buffers out-of-order arrivals and folds them
 /// in selected-order positions, so the default policy reproduces the
-/// sequential gather bit-for-bit (same FedAvg fold order, same series
-/// order) while concurrent arrivals still stream into one accumulator.
+/// sequential gather bit-for-bit (same fold order, same series order)
+/// while concurrent arrivals still stream into one accumulator. In
+/// entry-fold mode the weights were already folded by the session
+/// workers; this struct then only orders the per-client bookkeeping.
 struct RoundGather {
     round: usize,
     /// Global step index at the start of this round (x axis of
@@ -490,6 +757,14 @@ impl RoundGather {
         self.advance(names, report)
     }
 
+    /// Exclude a position without counting it failed (a straggler
+    /// carried over from a restarted attempt).
+    fn exclude_silent(&mut self, pos: usize, names: &[String], report: &mut Report) -> Result<()> {
+        self.got[pos] = true;
+        self.excluded[pos] = true;
+        self.advance(names, report)
+    }
+
     /// Fold every contribution at the frontier (deterministic order).
     fn advance(&mut self, names: &[String], report: &mut Report) -> Result<()> {
         while self.next_pos < self.selected.len() {
@@ -501,10 +776,17 @@ impl RoundGather {
                 break;
             };
             let name = &names[self.selected[self.next_pos]];
-            self.agg.add(&c.update, c.n_samples)?;
+            if let Some(update) = &c.update {
+                self.agg.add(update, c.n_samples)?;
+            }
             report
                 .series_mut(&format!("client_round_secs/{name}"))
                 .push(self.round as f64, c.seconds);
+            if c.scratch_bytes > 0 {
+                report
+                    .series_mut(&format!("session_scratch_bytes/{name}"))
+                    .push(self.round as f64, c.scratch_bytes as f64);
+            }
             for (j, l) in c.losses.iter().enumerate() {
                 report
                     .series_mut(&format!("client_loss/{name}"))
@@ -515,6 +797,7 @@ impl RoundGather {
             self.round_comm += c.comm_bytes;
             self.completed += 1;
             self.next_pos += 1;
+            // the contribution (and its gauge reservation) drops here
         }
         Ok(())
     }
@@ -540,7 +823,7 @@ impl RoundGather {
 /// Session worker body: execute commands until the controller closes the
 /// channel, then tell the client Done and hand the connection back.
 fn session_loop(
-    ctx: SessionCtx,
+    mut ctx: SessionCtx,
     cmd_rx: mpsc::Receiver<SessionCmd>,
     evt_tx: mpsc::Sender<SessionEvent>,
 ) -> (usize, ClientConn) {
@@ -551,11 +834,21 @@ fn session_loop(
                     log::warn!("session '{}': no-task notify failed: {e:#}", ctx.conn.name);
                 }
             }
-            SessionCmd::Task { round, global } => {
-                let payload = run_client_round(&ctx, round, global);
+            SessionCmd::Task {
+                round,
+                attempt,
+                global,
+                fold,
+            } => {
+                let payload = match run_client_round(&mut ctx, round, global, fold) {
+                    Ok(RoundOutcome::Done(c)) => SessionOutcome::Done(c),
+                    Ok(RoundOutcome::Dropped) => SessionOutcome::Dropped,
+                    Err(e) => SessionOutcome::Failed(e),
+                };
                 let _ = evt_tx.send(SessionEvent {
                     client: ctx.idx,
                     round,
+                    attempt,
                     payload,
                 });
             }
@@ -566,55 +859,107 @@ fn session_loop(
 }
 
 /// One client's scatter → train-wait → gather (the body the legacy
-/// controller ran inline, now per session).
+/// controller ran inline, now per session). With `fold`, the gather is
+/// entry-streamed: each decoded entry runs the inbound chain and folds
+/// straight into the shared accumulator.
 fn run_client_round(
-    ctx: &SessionCtx,
+    ctx: &mut SessionCtx,
     round: usize,
-    global: ParamContainer,
-) -> Result<Contribution> {
-    let c = &ctx.conn;
+    global: Arc<ParamContainer>,
+    fold: Option<SessionFold>,
+) -> Result<RoundOutcome> {
     let t0 = Instant::now();
-    let bytes0 = endpoint_bytes(&c.ep);
+    let bytes0 = endpoint_bytes(&ctx.conn.ep);
     let timeout = ctx.job.transfer_timeout();
     let mode = ctx.job.streaming;
+    let reliable = ctx.job.reliable;
+    let name = ctx.conn.name.clone();
 
     // -- scatter --------------------------------------------------------
     let mut fctx = FilterContext {
         round,
-        peer: c.name.clone(),
+        peer: name.clone(),
         ..Default::default()
     };
-    let msg = ctx
-        .filters
-        .apply(FilterPoint::TaskDataOutServer, WeightsMsg::Plain(global), &mut fctx)
-        .with_context(|| format!("task-data filters for {}", c.name))?;
-    c.ep.send_ctrl(
-        &CtrlMsg::Task {
-            round,
-            local_steps: ctx.job.train.local_steps,
-            headers: fctx.point_headers.clone(),
-        }
-        .to_json(),
-    )?;
-    if ctx.job.reliable {
-        // Resumable protocol: completion ack is built in.
-        streaming::send_weights_resumable(
-            &c.ep,
-            &msg,
+    let out_entry = ctx.job.entry_fold
+        && streaming::entry::entry_capable(&ctx.filters, FilterPoint::TaskDataOutServer);
+    if out_entry {
+        // Header pre-pass, control message, then quantize-while-
+        // serializing — the transformed container never materializes.
+        let plan = streaming::outbound_headers(
+            &global,
+            &ctx.filters,
+            FilterPoint::TaskDataOutServer,
+            &mut fctx,
+        )
+        .with_context(|| format!("task-data filters for {name}"))?;
+        ctx.conn.ep.send_ctrl(
+            &CtrlMsg::Task {
+                round,
+                local_steps: ctx.job.train.local_steps,
+                headers: fctx.point_headers.clone(),
+            }
+            .to_json(),
+        )?;
+        let policy = if reliable {
+            Some(resume_policy(timeout))
+        } else {
+            None
+        };
+        streaming::send_weights_filtered(
+            &ctx.conn.ep,
+            &global,
+            &ctx.filters,
+            FilterPoint::TaskDataOutServer,
+            &fctx,
             mode,
             Some(&ctx.spool),
-            &resume_policy(timeout),
+            policy.as_ref(),
+            Some(&plan),
         )
-        .with_context(|| format!("send task data to {}", c.name))?;
+        .with_context(|| format!("send task data to {name}"))?;
+        if !reliable {
+            // transfer-level ack from the receiver
+            let _ = ctx.conn.ep.recv_event(Some(timeout))?;
+        }
     } else {
-        streaming::send_weights(&c.ep, &msg, mode, Some(&ctx.spool))
-            .with_context(|| format!("send task data to {}", c.name))?;
-        // transfer-level ack from the receiver
-        let _ = c.ep.recv_event(Some(timeout))?;
+        let msg = ctx
+            .filters
+            .apply(
+                FilterPoint::TaskDataOutServer,
+                WeightsMsg::Plain((*global).clone()),
+                &mut fctx,
+            )
+            .with_context(|| format!("task-data filters for {name}"))?;
+        ctx.conn.ep.send_ctrl(
+            &CtrlMsg::Task {
+                round,
+                local_steps: ctx.job.train.local_steps,
+                headers: fctx.point_headers.clone(),
+            }
+            .to_json(),
+        )?;
+        if reliable {
+            // Resumable protocol: completion ack is built in.
+            streaming::send_weights_resumable(
+                &ctx.conn.ep,
+                &msg,
+                mode,
+                Some(&ctx.spool),
+                &resume_policy(timeout),
+            )
+            .with_context(|| format!("send task data to {name}"))?;
+        } else {
+            streaming::send_weights(&ctx.conn.ep, &msg, mode, Some(&ctx.spool))
+                .with_context(|| format!("send task data to {name}"))?;
+            // transfer-level ack from the receiver
+            let _ = ctx.conn.ep.recv_event(Some(timeout))?;
+        }
     }
+    drop(global); // the scatter copy is no longer needed during gather
 
     // -- gather ---------------------------------------------------------
-    let ctrl = CtrlMsg::from_json(&c.ep.recv_ctrl(Some(timeout))?)?;
+    let ctrl = CtrlMsg::from_json(&ctx.conn.ep.recv_ctrl(Some(timeout))?)?;
     let (r_round, n_samples, losses, headers) = match ctrl {
         CtrlMsg::Result {
             round: r,
@@ -623,37 +968,96 @@ fn run_client_round(
             headers,
             ..
         } => (r, n_samples, losses, headers),
-        other => bail!("expected result from {}, got {other:?}", c.name),
+        other => bail!("expected result from {name}, got {other:?}"),
     };
     if r_round != round {
-        bail!("client {} answered round {r_round}, expected {round}", c.name);
+        bail!("client {name} answered round {r_round}, expected {round}");
     }
-    let (msg, _stats) = if ctx.job.reliable {
-        streaming::recv_weights_resumable(&c.ep, Some(&ctx.spool), Some(timeout))
-            .with_context(|| format!("receive result from {}", c.name))?
-    } else {
-        streaming::recv_weights(&c.ep, Some(&ctx.spool))
-            .with_context(|| format!("receive result from {}", c.name))?
-    };
-    let mut fctx = FilterContext {
-        round,
-        peer: c.name.clone(),
-        point_headers: headers,
-    };
-    let msg = ctx.filters.apply(FilterPoint::TaskResultInServer, msg, &mut fctx)?;
-    let update = match msg {
-        WeightsMsg::Plain(p) => p,
-        WeightsMsg::Quantized(_) => {
-            bail!("result still quantized after inbound filters — chain misconfigured")
+
+    if let Some(sf) = fold {
+        // Entry-streamed gather: chain per entry, fold per tensor.
+        sf.fold.start_stream(sf.pos, n_samples)?;
+        if ctx.result_chain.is_none() {
+            ctx.result_chain = ctx.filters.entry_chain(FilterPoint::TaskResultInServer);
         }
-    };
-    Ok(Contribution {
-        update,
-        n_samples,
-        losses,
-        seconds: t0.elapsed().as_secs_f64(),
-        comm_bytes: endpoint_bytes(&c.ep).saturating_sub(bytes0),
-    })
+        let SessionCtx {
+            conn,
+            spool,
+            result_chain,
+            ..
+        } = ctx;
+        let chain = result_chain
+            .as_mut()
+            .ok_or_else(|| anyhow!("inbound chain is not entry-capable"))?;
+        let mut rctx = FilterContext {
+            round,
+            peer: name.clone(),
+            point_headers: headers,
+        };
+        let mut dropped = false;
+        streaming::recv_weights_filtered(
+            &conn.ep,
+            chain,
+            &mut rctx,
+            Some(spool.as_path()),
+            reliable,
+            Some(timeout),
+            &mut |idx, ename, t| match sf.fold.fold_entry(sf.pos, idx, &ename, &t)? {
+                FoldOutcome::Folded => Ok(EntryFlow::Continue),
+                FoldOutcome::Dropped => {
+                    dropped = true;
+                    Ok(EntryFlow::Discard)
+                }
+            },
+        )
+        .with_context(|| format!("receive result from {name}"))?;
+        if dropped {
+            return Ok(RoundOutcome::Dropped);
+        }
+        match sf.fold.finish_stream(sf.pos)? {
+            FoldOutcome::Dropped => Ok(RoundOutcome::Dropped),
+            FoldOutcome::Folded => Ok(RoundOutcome::Done(Contribution {
+                update: None,
+                _mem: None,
+                n_samples,
+                losses,
+                seconds: t0.elapsed().as_secs_f64(),
+                comm_bytes: endpoint_bytes(&conn.ep).saturating_sub(bytes0),
+                scratch_bytes: chain.scratch_bytes(),
+            })),
+        }
+    } else {
+        let (msg, _stats) = if reliable {
+            streaming::recv_weights_resumable(&ctx.conn.ep, Some(&ctx.spool), Some(timeout))
+                .with_context(|| format!("receive result from {name}"))?
+        } else {
+            streaming::recv_weights(&ctx.conn.ep, Some(&ctx.spool))
+                .with_context(|| format!("receive result from {name}"))?
+        };
+        let mut rctx = FilterContext {
+            round,
+            peer: name.clone(),
+            point_headers: headers,
+        };
+        let msg = ctx.filters.apply(FilterPoint::TaskResultInServer, msg, &mut rctx)?;
+        let update = match msg {
+            WeightsMsg::Plain(p) => p,
+            WeightsMsg::Quantized(_) => {
+                bail!("result still quantized after inbound filters — chain misconfigured")
+            }
+        };
+        // Account the update buffered until the fold frontier reaches it.
+        let mem = GaugeReservation::new(&COMM_GAUGE, update.total_bytes());
+        Ok(RoundOutcome::Done(Contribution {
+            update: Some(update),
+            _mem: Some(mem),
+            n_samples,
+            losses,
+            seconds: t0.elapsed().as_secs_f64(),
+            comm_bytes: endpoint_bytes(&ctx.conn.ep).saturating_sub(bytes0),
+            scratch_bytes: 0,
+        }))
+    }
 }
 
 fn endpoint_bytes(ep: &SfmEndpoint) -> u64 {

@@ -1,11 +1,19 @@
 //! Client-side Executor: receives Task Data, runs the local training
 //! task at original precision, returns Task Result (paper §II-A).
+//!
+//! With `entry_fold` (default, mirroring `JobConfig.entry_fold`) both
+//! directions run entry-streamed: inbound task data is dequantized one
+//! entry at a time as frames complete (the quantized container never
+//! materializes), and outbound results are quantized per entry during
+//! serialization after a header pre-pass. Chains with filters lacking
+//! entry support fall back to the whole-message path automatically.
 
 use super::protocol::CtrlMsg;
 use super::{resume_policy, LocalTrainer};
-use crate::filter::{FilterContext, FilterPoint, FilterSet};
+use crate::filter::{EntryChain, FilterContext, FilterPoint, FilterSet};
 use crate::sfm::SfmEndpoint;
-use crate::streaming::{self, WeightsMsg};
+use crate::streaming::wire::Entry;
+use crate::streaming::{self, EntryAssembler, EntryFlow, WeightsMsg};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
@@ -25,6 +33,11 @@ pub struct Executor<T: LocalTrainer> {
     /// Use the resumable out-of-order protocol for weight transfers
     /// (mirrors the job's `reliable` flag).
     reliable: bool,
+    /// Entry-streamed filter × transport pipeline (mirrors the job's
+    /// `entry_fold` flag; defaults on).
+    entry_fold: bool,
+    /// Reused inbound chain (dequantize scratch amortizes across rounds).
+    in_chain: Option<EntryChain>,
 }
 
 impl<T: LocalTrainer> Executor<T> {
@@ -44,6 +57,8 @@ impl<T: LocalTrainer> Executor<T> {
             timeout: Duration::from_secs(crate::config::DEFAULT_TRANSFER_TIMEOUT_SECS),
             mode: None,
             reliable: false,
+            entry_fold: true,
+            in_chain: None,
         }
     }
 
@@ -64,7 +79,7 @@ impl<T: LocalTrainer> Executor<T> {
     /// Main loop: execute tasks until the server says Done. Returns the
     /// number of tasks executed (with client sampling this is legitimately
     /// fewer than the job's round count — unsampled rounds arrive as
-    /// `NoTask` and are skipped).
+    /// `NoTask` and are skipped; with round restarts it can be more).
     pub fn run(&mut self) -> Result<usize> {
         let mut rounds = 0usize;
         loop {
@@ -88,28 +103,62 @@ impl<T: LocalTrainer> Executor<T> {
                 CtrlMsg::Done => return Ok(rounds),
                 other => bail!("unexpected ctrl {other:?}"),
             };
-            let (msg, _stats) = if self.reliable {
-                streaming::recv_weights_resumable(
-                    &self.ep,
-                    Some(&self.spool_dir),
-                    Some(self.timeout),
-                )
-                .context("receive task data")?
-            } else {
-                streaming::recv_weights(&self.ep, Some(&self.spool_dir))
-                    .context("receive task data")?
-            };
 
+            // -- task data in ------------------------------------------------
             let mut ctx = FilterContext {
                 round,
                 peer: "server".into(),
                 point_headers: headers,
             };
-            let msg = self.filters.apply(FilterPoint::TaskDataInClient, msg, &mut ctx)?;
-            let weights = match msg {
-                WeightsMsg::Plain(p) => p,
-                WeightsMsg::Quantized(_) => {
-                    bail!("task data still quantized after inbound filters — chain misconfigured")
+            if self.entry_fold && self.in_chain.is_none() {
+                self.in_chain = self.filters.entry_chain(FilterPoint::TaskDataInClient);
+            }
+            let weights = if self.entry_fold && self.in_chain.is_some() {
+                // Entry-streamed receive: dequantize per entry as frames
+                // complete; reassemble container order from entry indices
+                // (out-of-order-capable transfers may complete units out
+                // of order).
+                let mut asm = EntryAssembler::default();
+                let chain = self.in_chain.as_mut().expect("checked above");
+                streaming::recv_weights_filtered(
+                    &self.ep,
+                    chain,
+                    &mut ctx,
+                    Some(&self.spool_dir),
+                    self.reliable,
+                    Some(self.timeout),
+                    &mut |idx, name, t| {
+                        asm.put(idx, Entry::Plain(name, t))?;
+                        Ok(EntryFlow::Continue)
+                    },
+                )
+                .context("receive task data")?;
+                match asm.into_msg().context("assemble task data")? {
+                    WeightsMsg::Plain(p) => p,
+                    // recv_weights_filtered only delivers plain entries;
+                    // keep this an Err (not a panic) all the same.
+                    WeightsMsg::Quantized(_) => {
+                        bail!("task data still quantized after inbound filters")
+                    }
+                }
+            } else {
+                let (msg, _stats) = if self.reliable {
+                    streaming::recv_weights_resumable(
+                        &self.ep,
+                        Some(&self.spool_dir),
+                        Some(self.timeout),
+                    )
+                    .context("receive task data")?
+                } else {
+                    streaming::recv_weights(&self.ep, Some(&self.spool_dir))
+                        .context("receive task data")?
+                };
+                let msg = self.filters.apply(FilterPoint::TaskDataInClient, msg, &mut ctx)?;
+                match msg {
+                    WeightsMsg::Plain(p) => p,
+                    WeightsMsg::Quantized(_) => {
+                        bail!("task data still quantized after inbound filters — chain misconfigured")
+                    }
                 }
             };
 
@@ -118,40 +167,84 @@ impl<T: LocalTrainer> Executor<T> {
                 .trainer
                 .train(&weights, local_steps, round)
                 .context("local training")?;
+            drop(weights);
 
+            // -- task result out ---------------------------------------------
             let mut out_ctx = FilterContext {
                 round,
                 peer: "server".into(),
                 ..Default::default()
             };
-            let out = self.filters.apply(
-                FilterPoint::TaskResultOutClient,
-                WeightsMsg::Plain(updated),
-                &mut out_ctx,
-            )?;
-            self.ep.send_ctrl(
-                &CtrlMsg::Result {
-                    round,
-                    client: self.name.clone(),
-                    n_samples: self.trainer.n_samples(),
-                    losses,
-                    headers: out_ctx.point_headers.clone(),
-                }
-                .to_json(),
-            )?;
-            if self.reliable {
-                streaming::send_weights_resumable(
+            let out_entry = self.entry_fold
+                && streaming::entry::entry_capable(&self.filters, FilterPoint::TaskResultOutClient);
+            if out_entry {
+                let plan = streaming::outbound_headers(
+                    &updated,
+                    &self.filters,
+                    FilterPoint::TaskResultOutClient,
+                    &mut out_ctx,
+                )
+                .context("task-result filters")?;
+                self.ep.send_ctrl(
+                    &CtrlMsg::Result {
+                        round,
+                        client: self.name.clone(),
+                        n_samples: self.trainer.n_samples(),
+                        losses,
+                        headers: out_ctx.point_headers.clone(),
+                    }
+                    .to_json(),
+                )?;
+                let policy = if self.reliable {
+                    Some(resume_policy(self.timeout))
+                } else {
+                    None
+                };
+                streaming::send_weights_filtered(
                     &self.ep,
-                    &out,
+                    &updated,
+                    &self.filters,
+                    FilterPoint::TaskResultOutClient,
+                    &out_ctx,
                     self.job_mode(),
                     Some(&self.spool_dir),
-                    &resume_policy(self.timeout),
+                    policy.as_ref(),
+                    Some(&plan),
                 )
                 .context("send task result")?;
+                if !self.reliable {
+                    let _ = self.ep.recv_event(Some(self.timeout))?; // transfer ack
+                }
             } else {
-                streaming::send_weights(&self.ep, &out, self.job_mode(), Some(&self.spool_dir))
+                let out = self.filters.apply(
+                    FilterPoint::TaskResultOutClient,
+                    WeightsMsg::Plain(updated),
+                    &mut out_ctx,
+                )?;
+                self.ep.send_ctrl(
+                    &CtrlMsg::Result {
+                        round,
+                        client: self.name.clone(),
+                        n_samples: self.trainer.n_samples(),
+                        losses,
+                        headers: out_ctx.point_headers.clone(),
+                    }
+                    .to_json(),
+                )?;
+                if self.reliable {
+                    streaming::send_weights_resumable(
+                        &self.ep,
+                        &out,
+                        self.job_mode(),
+                        Some(&self.spool_dir),
+                        &resume_policy(self.timeout),
+                    )
                     .context("send task result")?;
-                let _ = self.ep.recv_event(Some(self.timeout))?; // transfer ack
+                } else {
+                    streaming::send_weights(&self.ep, &out, self.job_mode(), Some(&self.spool_dir))
+                        .context("send task result")?;
+                    let _ = self.ep.recv_event(Some(self.timeout))?; // transfer ack
+                }
             }
             rounds += 1;
         }
@@ -174,6 +267,12 @@ impl<T: LocalTrainer> Executor<T> {
 
     pub fn with_reliable(mut self, reliable: bool) -> Self {
         self.reliable = reliable;
+        self
+    }
+
+    /// Entry-streamed pipeline on/off (mirrors `JobConfig.entry_fold`).
+    pub fn with_entry_fold(mut self, on: bool) -> Self {
+        self.entry_fold = on;
         self
     }
 

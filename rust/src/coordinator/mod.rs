@@ -106,6 +106,9 @@ pub struct RoundStats {
     pub failed: usize,
     /// Selected clients abandoned at the round deadline.
     pub stragglers: usize,
+    /// Peak tracked communication-buffer bytes during the round
+    /// ([`crate::memory::COMM_GAUGE`], reset at round start).
+    pub peak_comm_bytes: u64,
 }
 
 /// Retry/resume policy for the coordinator's reliable weight transfers,

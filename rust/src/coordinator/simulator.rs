@@ -70,6 +70,7 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
         let filters = (*make_filters)();
         let mode = job.streaming;
         let reliable = job.reliable;
+        let entry_fold = job.entry_fold;
         let timeout = job.transfer_timeout();
         let spool_c = spool.clone();
         let handle = std::thread::Builder::new()
@@ -84,6 +85,7 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
                 )
                 .with_mode(mode)
                 .with_reliable(reliable)
+                .with_entry_fold(entry_fold)
                 .with_timeout(timeout);
                 exec.register()?;
                 exec.run()

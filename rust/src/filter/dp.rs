@@ -4,10 +4,10 @@
 //! compatibility as future work; this filter is how we test that
 //! composition, see `bench per_layer_sensitivity` and the filter tests).
 
-use super::{Filter, FilterContext};
+use super::{apply_entrywise, EntryFilter, Filter, FilterContext};
+use crate::streaming::wire::Entry;
 use crate::streaming::WeightsMsg;
-use crate::tensor::ParamContainer;
-use crate::util::rng::SplitMix64;
+use crate::util::rng::{fnv1a, SplitMix64};
 use anyhow::{bail, Result};
 
 /// Clips each entry to `clip_norm` (L2) and adds N(0, sigma^2) noise.
@@ -33,33 +33,75 @@ impl Filter for GaussianDpFilter {
     }
 
     fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
-        let c = match msg {
-            WeightsMsg::Plain(c) => c,
-            WeightsMsg::Quantized(_) => {
+        apply_entrywise(
+            &mut GaussianDpEntryFilter::new(self.clip_norm, self.sigma, self.seed),
+            msg,
+            ctx,
+        )
+    }
+
+    fn entry_filter(&self) -> Option<Box<dyn EntryFilter>> {
+        Some(Box::new(GaussianDpEntryFilter::new(
+            self.clip_norm,
+            self.sigma,
+            self.seed,
+        )))
+    }
+}
+
+/// Streaming form of [`GaussianDpFilter`]. The noise stream is a pure
+/// function of `(seed, round, tensor name)` — not of entry order — so
+/// streamed senders can re-evaluate a single entry (retransmissions,
+/// header pre-pass) and reproduce identical bytes.
+pub struct GaussianDpEntryFilter {
+    clip_norm: f32,
+    sigma: f32,
+    seed: u64,
+}
+
+impl GaussianDpEntryFilter {
+    pub fn new(clip_norm: f32, sigma: f32, seed: u64) -> Self {
+        Self {
+            clip_norm,
+            sigma,
+            seed,
+        }
+    }
+}
+
+impl EntryFilter for GaussianDpEntryFilter {
+    fn name(&self) -> &'static str {
+        "gaussian_dp"
+    }
+
+    fn entry(&mut self, _idx: usize, e: Entry, ctx: &mut FilterContext) -> Result<Entry> {
+        let (name, t) = match e {
+            Entry::Plain(n, t) => (n, t),
+            Entry::Quantized(..) => {
                 bail!("DP filter must run before quantization (chain order)")
             }
         };
-        let mut rng = SplitMix64::new(self.seed ^ ctx.round as u64);
-        let mut out = ParamContainer::new();
-        for (name, t) in c.iter() {
-            let src = t.as_f32();
-            let norm: f32 = src.iter().map(|v| v * v).sum::<f32>().sqrt();
-            let scale = if norm > self.clip_norm && norm > 0.0 {
-                self.clip_norm / norm
-            } else {
-                1.0
-            };
-            let mut vals = Vec::with_capacity(src.len());
-            let mut trng = rng.fork(name);
-            for &v in src {
-                vals.push(v * scale + trng.next_normal() * self.sigma);
-            }
-            out.insert(
-                name.to_string(),
-                crate::tensor::Tensor::from_f32(t.meta.shape.clone(), vals),
-            );
+        let src = t.as_f32();
+        let norm: f32 = src.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let scale = if norm > self.clip_norm && norm > 0.0 {
+            self.clip_norm / norm
+        } else {
+            1.0
+        };
+        // Order-independent per-tensor stream: one splitmix step decouples
+        // the round dimension, the name hash decouples tensors.
+        let mut h = SplitMix64::new(
+            self.seed ^ (ctx.round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut trng = SplitMix64::new(h.next_u64() ^ fnv1a(&name));
+        let mut vals = Vec::with_capacity(src.len());
+        for &v in src {
+            vals.push(v * scale + trng.next_normal() * self.sigma);
         }
-        Ok(WeightsMsg::Plain(out))
+        Ok(Entry::Plain(
+            name,
+            crate::tensor::Tensor::from_f32(t.meta.shape.clone(), vals),
+        ))
     }
 }
 
@@ -116,6 +158,35 @@ mod tests {
         ctx.round = 4;
         let c2 = f.process(WeightsMsg::Plain(c), &mut ctx).unwrap();
         assert_ne!(a, c2);
+    }
+
+    #[test]
+    fn entry_noise_is_order_independent() {
+        // Streamed senders re-evaluate single entries (retransmissions,
+        // header pre-pass): the noise must be a pure function of
+        // (seed, round, name), not of entry order.
+        use crate::filter::EntryFilter;
+        use crate::streaming::wire::Entry;
+        let c = materialize(&ModelSpec::llama_mini(), 94);
+        let mut f = GaussianDpEntryFilter::new(1e9, 0.01, 5);
+        let mut ctx = FilterContext {
+            round: 2,
+            ..Default::default()
+        };
+        let entries: Vec<Entry> = c
+            .iter()
+            .map(|(n, t)| Entry::Plain(n.to_string(), t.clone()))
+            .collect();
+        let forward: Vec<Entry> = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| f.entry(i, e.clone(), &mut ctx).unwrap())
+            .collect();
+        let mut g = GaussianDpEntryFilter::new(1e9, 0.01, 5);
+        for (i, e) in entries.iter().enumerate().rev() {
+            let out = g.entry(i, e.clone(), &mut ctx).unwrap();
+            assert_eq!(out, forward[i], "entry {i} must not depend on order");
+        }
     }
 
     #[test]

@@ -1,23 +1,66 @@
-//! Integrity filter pair: the outbound side records a CRC32 digest of the
+//! Integrity filter pair: the outbound side records a digest of the
 //! message in the context headers (which travel with the task message);
 //! the inbound side recomputes and verifies. Demonstrates header-carrying
 //! filters and gives the federated protocol end-to-end corruption
 //! detection beyond per-frame CRCs.
+//!
+//! The digest is composed from per-entry CRC32s keyed by entry *index*
+//! (crc32 over the index-ordered sequence of entry CRCs), so it is
+//! insensitive to the arrival order of an out-of-order streamed receive
+//! while still covering every byte of every entry.
 
-use super::{Filter, FilterContext};
-use crate::streaming::wire;
+use super::{apply_entrywise, EntryFilter, Filter, FilterContext};
+use crate::streaming::wire::{self, Entry};
 use crate::streaming::WeightsMsg;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
+use std::collections::BTreeMap;
 
-fn digest(msg: &WeightsMsg) -> Result<u32> {
-    let mut hasher = crc32fast::Hasher::new();
-    for e in wire::entries_of_ref(msg) {
-        let mut buf = Vec::with_capacity(e.wire_len());
-        e.write_to(&mut buf)?;
-        hasher.update(&buf);
+/// crc32 of one serialized entry.
+fn entry_crc(e: &Entry, buf: &mut Vec<u8>) -> Result<u32> {
+    buf.clear();
+    wire::write_entry(buf, e)?;
+    Ok(crc32fast::hash(buf))
+}
+
+/// Compose index-keyed entry CRCs into the message digest.
+fn compose(crcs: &BTreeMap<usize, u32>) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    for (_, c) in crcs.iter() {
+        h.update(&c.to_le_bytes());
     }
-    Ok(hasher.finalize())
+    h.finalize()
+}
+
+/// Whole-message digest (test/reference form; the filters stream it).
+pub fn digest(msg: &WeightsMsg) -> Result<u32> {
+    let mut crcs = BTreeMap::new();
+    let mut buf = Vec::new();
+    for (i, e) in wire::entries_of(msg).into_iter().enumerate() {
+        crcs.insert(i, entry_crc(&e, &mut buf)?);
+    }
+    Ok(compose(&crcs))
+}
+
+/// Digest accumulator shared by the stamp/verify streaming filters.
+#[derive(Default)]
+struct DigestState {
+    crcs: BTreeMap<usize, u32>,
+    buf: Vec<u8>,
+}
+
+impl DigestState {
+    fn reset(&mut self) {
+        self.crcs.clear();
+    }
+
+    fn absorb(&mut self, idx: usize, e: &Entry) -> Result<()> {
+        let mut buf = std::mem::take(&mut self.buf);
+        let c = entry_crc(e, &mut buf)?;
+        self.buf = buf;
+        self.crcs.insert(idx, c);
+        Ok(())
+    }
 }
 
 /// Outbound: stamp the digest.
@@ -29,10 +72,43 @@ impl Filter for StampIntegrityFilter {
     }
 
     fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
-        let d = digest(&msg)?;
-        ctx.point_headers
-            .insert("integrity_crc32".into(), Json::num(d as f64));
-        Ok(msg)
+        apply_entrywise(&mut StampIntegrityEntryFilter::default(), msg, ctx)
+    }
+
+    fn entry_filter(&self) -> Option<Box<dyn EntryFilter>> {
+        Some(Box::new(StampIntegrityEntryFilter::default()))
+    }
+}
+
+/// Streaming form of [`StampIntegrityFilter`]: entries pass through
+/// unchanged; their CRCs accumulate and the digest is stamped at
+/// `finish`.
+#[derive(Default)]
+pub struct StampIntegrityEntryFilter {
+    state: DigestState,
+}
+
+impl EntryFilter for StampIntegrityEntryFilter {
+    fn name(&self) -> &'static str {
+        "integrity_stamp"
+    }
+
+    fn begin(&mut self, _ctx: &mut FilterContext) -> Result<()> {
+        self.state.reset();
+        Ok(())
+    }
+
+    fn entry(&mut self, idx: usize, e: Entry, _ctx: &mut FilterContext) -> Result<Entry> {
+        self.state.absorb(idx, &e)?;
+        Ok(e)
+    }
+
+    fn finish(&mut self, ctx: &mut FilterContext) -> Result<()> {
+        ctx.point_headers.insert(
+            "integrity_crc32".into(),
+            Json::num(compose(&self.state.crcs) as f64),
+        );
+        Ok(())
     }
 }
 
@@ -45,17 +121,51 @@ impl Filter for VerifyIntegrityFilter {
     }
 
     fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
+        apply_entrywise(&mut VerifyIntegrityEntryFilter::default(), msg, ctx)
+    }
+
+    fn entry_filter(&self) -> Option<Box<dyn EntryFilter>> {
+        Some(Box::new(VerifyIntegrityEntryFilter::default()))
+    }
+}
+
+/// Streaming form of [`VerifyIntegrityFilter`]: accumulates entry CRCs
+/// and compares the composed digest against the stamped header at
+/// `finish`. Note the check lands after the entries have been consumed
+/// downstream — a mismatch surfaces as a per-session error (the session
+/// is quarantined), not as prevention of the already-folded entries.
+#[derive(Default)]
+pub struct VerifyIntegrityEntryFilter {
+    state: DigestState,
+}
+
+impl EntryFilter for VerifyIntegrityEntryFilter {
+    fn name(&self) -> &'static str {
+        "integrity_verify"
+    }
+
+    fn begin(&mut self, _ctx: &mut FilterContext) -> Result<()> {
+        self.state.reset();
+        Ok(())
+    }
+
+    fn entry(&mut self, idx: usize, e: Entry, _ctx: &mut FilterContext) -> Result<Entry> {
+        self.state.absorb(idx, &e)?;
+        Ok(e)
+    }
+
+    fn finish(&mut self, ctx: &mut FilterContext) -> Result<()> {
         if let Some(want) = ctx
             .point_headers
             .get("integrity_crc32")
             .and_then(|j| j.as_u64())
         {
-            let got = digest(&msg)? as u64;
+            let got = compose(&self.state.crcs) as u64;
             if got != want {
                 bail!("integrity digest mismatch: got {got:#x} want {want:#x}");
             }
         }
-        Ok(msg)
+        Ok(())
     }
 }
 
@@ -100,5 +210,40 @@ mod tests {
         VerifyIntegrityFilter
             .process(WeightsMsg::Plain(c), &mut ctx)
             .unwrap();
+    }
+
+    #[test]
+    fn out_of_order_verification_matches() {
+        // An out-of-order streamed receive must verify against an
+        // in-order stamp: the digest is keyed by entry index.
+        let c = materialize(&ModelSpec::llama_mini(), 64);
+        let mut ctx = FilterContext::default();
+        let msg = StampIntegrityFilter
+            .process(WeightsMsg::Plain(c.clone()), &mut ctx)
+            .unwrap();
+        let entries = wire::entries_of(&msg);
+
+        let mut vf = VerifyIntegrityEntryFilter::default();
+        vf.begin(&mut ctx).unwrap();
+        // feed entries in reverse arrival order
+        for (i, e) in entries.into_iter().enumerate().rev() {
+            vf.entry(i, e, &mut ctx).unwrap();
+        }
+        vf.finish(&mut ctx).unwrap();
+    }
+
+    #[test]
+    fn digest_fn_matches_streamed_stamp() {
+        let c = materialize(&ModelSpec::llama_mini(), 65);
+        let msg = WeightsMsg::Plain(c);
+        let d = digest(&msg).unwrap();
+        let mut ctx = FilterContext::default();
+        StampIntegrityFilter.process(msg, &mut ctx).unwrap();
+        let stamped = ctx
+            .point_headers
+            .get("integrity_crc32")
+            .and_then(|j| j.as_u64())
+            .unwrap();
+        assert_eq!(stamped, d as u64);
     }
 }

@@ -15,9 +15,11 @@ pub mod dp;
 pub mod integrity;
 pub mod quantize;
 
+use crate::streaming::wire::Entry;
 use crate::streaming::WeightsMsg;
+use crate::tensor::ParamContainer;
 use crate::util::json::Json;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -79,6 +81,145 @@ pub struct FilterContext {
 pub trait Filter: Send + Sync {
     fn name(&self) -> &'static str;
     fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg>;
+
+    /// A fresh per-message streaming instance of this filter, if it
+    /// supports the entry-streamed contract. All built-in filters do; a
+    /// `None` here makes chains containing this filter fall back to the
+    /// whole-message path.
+    fn entry_filter(&self) -> Option<Box<dyn EntryFilter>> {
+        None
+    }
+}
+
+/// The streaming filter contract: one `(index, entry)` in, one out, plus
+/// chain-level `begin`/`finish` hooks for headers and integrity state.
+/// This is the primary message-transformation contract — the whole-
+/// message [`Filter::process`] API is a thin adapter over it (see
+/// [`apply_entrywise`]) — and what lets the coordinator bound server
+/// memory to O(accumulator + entry) instead of O(model × sessions).
+///
+/// Contract:
+/// * `begin` resets all per-message state; a chain instance may be
+///   reused across messages (and rounds) within one session, so scratch
+///   buffers amortize.
+/// * The entry *transformation* must be a pure function of
+///   `(index, entry, ctx)` — deterministic and order-independent —
+///   because streamed senders re-evaluate individual entries for
+///   retransmissions and run a header pre-pass before the wire pass.
+/// * Cross-entry state (hashers, byte counters) may only influence the
+///   headers stamped/verified in `begin`/`finish`, and is only
+///   meaningful for a single in-order pass over all entries.
+pub trait EntryFilter: Send {
+    fn name(&self) -> &'static str;
+
+    /// Start of a message (reset per-message state, read inbound headers).
+    fn begin(&mut self, _ctx: &mut FilterContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// Transform one entry. `idx` is the entry's container index.
+    fn entry(&mut self, idx: usize, e: Entry, ctx: &mut FilterContext) -> Result<Entry>;
+
+    /// End of a message (stamp outbound headers, verify integrity).
+    fn finish(&mut self, _ctx: &mut FilterContext) -> Result<()> {
+        Ok(())
+    }
+
+    /// Bytes of long-lived scratch this filter currently holds (reported
+    /// per session in the run metrics).
+    fn scratch_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// An ordered, reusable chain of streaming filters for one filter point.
+pub struct EntryChain {
+    filters: Vec<Box<dyn EntryFilter>>,
+}
+
+impl EntryChain {
+    pub fn is_empty(&self) -> bool {
+        self.filters.is_empty()
+    }
+
+    pub fn begin(&mut self, ctx: &mut FilterContext) -> Result<()> {
+        for f in &mut self.filters {
+            f.begin(ctx)?;
+        }
+        Ok(())
+    }
+
+    pub fn entry(&mut self, idx: usize, e: Entry, ctx: &mut FilterContext) -> Result<Entry> {
+        let mut e = e;
+        for f in &mut self.filters {
+            e = f.entry(idx, e, ctx)?;
+        }
+        Ok(e)
+    }
+
+    pub fn finish(&mut self, ctx: &mut FilterContext) -> Result<()> {
+        for f in &mut self.filters {
+            f.finish(ctx)?;
+        }
+        Ok(())
+    }
+
+    pub fn scratch_bytes(&self) -> u64 {
+        self.filters.iter().map(|f| f.scratch_bytes()).sum()
+    }
+}
+
+/// Run a per-message streaming filter over a whole in-memory message —
+/// the adapter that keeps the legacy [`Filter::process`] call sites
+/// compiling on top of the entry-streamed implementations.
+pub fn apply_entrywise(
+    f: &mut dyn EntryFilter,
+    msg: WeightsMsg,
+    ctx: &mut FilterContext,
+) -> Result<WeightsMsg> {
+    f.begin(ctx)?;
+    let entries = match msg {
+        WeightsMsg::Plain(c) => {
+            let names: Vec<String> = c.names().to_vec();
+            let mut c = c;
+            names
+                .into_iter()
+                .map(|n| {
+                    let t = c.remove(&n).expect("name from names()");
+                    Entry::Plain(n, t)
+                })
+                .collect::<Vec<_>>()
+        }
+        WeightsMsg::Quantized(q) => q
+            .entries
+            .into_iter()
+            .map(|(n, t)| Entry::Quantized(n, t))
+            .collect(),
+    };
+    let mut out_plain = ParamContainer::new();
+    let mut out_quant = crate::streaming::wire::QuantizedContainer::default();
+    let (mut saw_plain, mut saw_quant) = (false, false);
+    for (i, e) in entries.into_iter().enumerate() {
+        match f.entry(i, e, ctx)? {
+            Entry::Plain(n, t) => {
+                saw_plain = true;
+                out_plain.insert(n, t);
+            }
+            Entry::Quantized(n, t) => {
+                saw_quant = true;
+                out_quant.entries.push((n, t));
+            }
+        }
+    }
+    f.finish(ctx)?;
+    if saw_plain && saw_quant {
+        bail!("filter '{}' produced mixed entry kinds", f.name());
+    }
+    Ok(if saw_quant {
+        WeightsMsg::Quantized(out_quant)
+    } else {
+        WeightsMsg::Plain(out_plain)
+    })
 }
 
 /// Shared constructor for filter chains. The concurrent round engine
@@ -125,6 +266,19 @@ impl FilterSet {
             }
         }
         Ok(msg)
+    }
+
+    /// Build a reusable streaming chain for `point`, if every filter in
+    /// that chain supports the [`EntryFilter`] contract. An unconfigured
+    /// point yields an empty (pass-through) chain.
+    pub fn entry_chain(&self, point: FilterPoint) -> Option<EntryChain> {
+        let mut filters = Vec::new();
+        if let Some(chain) = self.chains.get(&point) {
+            for f in chain {
+                filters.push(f.entry_filter()?);
+            }
+        }
+        Some(EntryChain { filters })
     }
 
     /// The paper's two-way quantization wiring (§II-C): quantize on both

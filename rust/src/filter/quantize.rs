@@ -4,13 +4,20 @@
 //! training script can be used with and without message quantization with
 //! a simple configuration change": the filters transform the message
 //! representation; training and aggregation always see fp32.
+//!
+//! Both filters are implemented against the streaming [`EntryFilter`]
+//! contract — one entry in, one out — so the coordinator can quantize
+//! during serialization and dequantize as frames complete without ever
+//! materializing a whole-message container. The whole-message
+//! [`Filter::process`] API is the [`apply_entrywise`] adapter.
 
-use super::{Filter, FilterContext};
+use super::{apply_entrywise, EntryFilter, Filter, FilterContext};
 use crate::config::QuantScheme;
-use crate::quant::{dequantize, quantize};
-use crate::streaming::wire::QuantizedContainer;
+use crate::memory::{TrackedF32Buf, COMM_GAUGE};
+use crate::quant::{dequantize_into, quantize};
+use crate::streaming::wire::Entry;
 use crate::streaming::WeightsMsg;
-use crate::tensor::ParamContainer;
+use crate::tensor::Tensor;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 
@@ -34,32 +41,77 @@ impl Filter for QuantizeFilter {
     }
 
     fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
-        let plain = match msg {
-            WeightsMsg::Plain(c) => c,
-            WeightsMsg::Quantized(_) => bail!("quantize filter got an already-quantized message"),
-        };
-        let before = plain.total_bytes();
-        let mut out = QuantizedContainer::default();
-        for (name, t) in plain.iter() {
-            out.entries.push((name.to_string(), quantize(self.scheme, t)?));
+        apply_entrywise(&mut QuantizeEntryFilter::new(self.scheme), msg, ctx)
+    }
+
+    fn entry_filter(&self) -> Option<Box<dyn EntryFilter>> {
+        Some(Box::new(QuantizeEntryFilter::new(self.scheme)))
+    }
+}
+
+/// Streaming form of [`QuantizeFilter`]: quantizes one entry at a time,
+/// accumulating the before/after byte counts it stamps at `finish` (the
+/// counters are meaningful for a single in-order pass; see the
+/// [`EntryFilter`] contract).
+pub struct QuantizeEntryFilter {
+    scheme: QuantScheme,
+    before: u64,
+    after: u64,
+}
+
+impl QuantizeEntryFilter {
+    pub fn new(scheme: QuantScheme) -> Self {
+        assert!(scheme != QuantScheme::None, "use an empty chain for None");
+        Self {
+            scheme,
+            before: 0,
+            after: 0,
         }
-        let after = out.payload_bytes() + out.meta_bytes();
+    }
+}
+
+impl EntryFilter for QuantizeEntryFilter {
+    fn name(&self) -> &'static str {
+        "quantize"
+    }
+
+    fn begin(&mut self, _ctx: &mut FilterContext) -> Result<()> {
+        self.before = 0;
+        self.after = 0;
+        Ok(())
+    }
+
+    fn entry(&mut self, _idx: usize, e: Entry, _ctx: &mut FilterContext) -> Result<Entry> {
+        match e {
+            Entry::Plain(name, t) => {
+                let q = quantize(self.scheme, &t)?;
+                self.before += t.byte_len() as u64;
+                self.after += q.payload_bytes() + q.meta_bytes();
+                Ok(Entry::Quantized(name, q))
+            }
+            Entry::Quantized(name, _) => {
+                bail!("quantize filter got an already-quantized entry '{name}'")
+            }
+        }
+    }
+
+    fn finish(&mut self, ctx: &mut FilterContext) -> Result<()> {
         ctx.point_headers.insert(
             "quantized".into(),
             Json::obj(vec![
                 ("scheme", Json::str(self.scheme.name())),
-                ("bytes_before", Json::num(before as f64)),
-                ("bytes_after", Json::num(after as f64)),
+                ("bytes_before", Json::num(self.before as f64)),
+                ("bytes_after", Json::num(self.after as f64)),
             ]),
         );
         log::debug!(
             "quantize[{}]: {} -> {} bytes ({:.2}%)",
             self.scheme.name(),
-            before,
-            after,
-            100.0 * after as f64 / before as f64
+            self.before,
+            self.after,
+            100.0 * self.after as f64 / self.before.max(1) as f64
         );
-        Ok(WeightsMsg::Quantized(out))
+        Ok(())
     }
 }
 
@@ -80,19 +132,60 @@ impl Filter for DequantizeFilter {
         "dequantize"
     }
 
-    fn process(&self, msg: WeightsMsg, _ctx: &mut FilterContext) -> Result<WeightsMsg> {
-        let q = match msg {
-            WeightsMsg::Quantized(q) => q,
-            // A plain message passing a dequantize point is legal: the
-            // job may run without quantization while the chain stays
-            // configured (the paper's "simple configuration change").
-            WeightsMsg::Plain(c) => return Ok(WeightsMsg::Plain(c)),
-        };
-        let mut out = ParamContainer::new();
-        for (name, qt) in &q.entries {
-            out.insert(name.clone(), dequantize(qt)?);
+    fn process(&self, msg: WeightsMsg, ctx: &mut FilterContext) -> Result<WeightsMsg> {
+        apply_entrywise(&mut DequantizeEntryFilter::new(), msg, ctx)
+    }
+
+    fn entry_filter(&self) -> Option<Box<dyn EntryFilter>> {
+        Some(Box::new(DequantizeEntryFilter::new()))
+    }
+}
+
+/// Streaming form of [`DequantizeFilter`]. The fp32 decode scratch is a
+/// [`TrackedF32Buf`] reused across entries and rounds within a session,
+/// so `COMM_GAUGE` shows a stable O(largest entry) decode cost — the
+/// accounting behind the Table III-style memory-bound assertions.
+pub struct DequantizeEntryFilter {
+    scratch: TrackedF32Buf,
+}
+
+impl DequantizeEntryFilter {
+    pub fn new() -> Self {
+        Self {
+            scratch: TrackedF32Buf::new(&COMM_GAUGE),
         }
-        Ok(WeightsMsg::Plain(out))
+    }
+}
+
+impl Default for DequantizeEntryFilter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EntryFilter for DequantizeEntryFilter {
+    fn name(&self) -> &'static str {
+        "dequantize"
+    }
+
+    fn entry(&mut self, _idx: usize, e: Entry, _ctx: &mut FilterContext) -> Result<Entry> {
+        match e {
+            // A plain entry passing a dequantize point is legal: the job
+            // may run without quantization while the chain stays
+            // configured (the paper's "simple configuration change").
+            Entry::Plain(name, t) => Ok(Entry::Plain(name, t)),
+            Entry::Quantized(name, q) => {
+                self.scratch.clear();
+                dequantize_into(&q, self.scratch.as_mut_vec())?;
+                self.scratch.resync();
+                let t = Tensor::from_f32(q.orig.shape.clone(), self.scratch.as_slice().to_vec());
+                Ok(Entry::Plain(name, t))
+            }
+        }
+    }
+
+    fn scratch_bytes(&self) -> u64 {
+        self.scratch.registered_bytes()
     }
 }
 
@@ -164,5 +257,67 @@ mod tests {
             WeightsMsg::Plain(p) => assert_eq!(p.names(), &names[..]),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn entry_form_matches_whole_message_form() {
+        // Streaming one entry at a time must produce the exact tensors the
+        // whole-message adapter produces (it IS the adapter's engine, but
+        // verify the per-session reuse path: one chain, two messages).
+        let c = materialize(&ModelSpec::llama_mini(), 45);
+        let mut ctx = FilterContext::default();
+        let whole = QuantizeFilter::new(QuantScheme::Nf4)
+            .process(WeightsMsg::Plain(c.clone()), &mut ctx)
+            .unwrap();
+        let want = match whole {
+            WeightsMsg::Quantized(q) => q,
+            _ => panic!(),
+        };
+
+        let mut ef = QuantizeEntryFilter::new(QuantScheme::Nf4);
+        for round in 0..2 {
+            let mut ctx = FilterContext::default();
+            ef.begin(&mut ctx).unwrap();
+            for (i, (n, t)) in c.iter().enumerate() {
+                let out = ef
+                    .entry(i, Entry::Plain(n.to_string(), t.clone()), &mut ctx)
+                    .unwrap();
+                match out {
+                    Entry::Quantized(name, q) => {
+                        assert_eq!(name, want.entries[i].0, "round {round}");
+                        assert_eq!(q, want.entries[i].1, "round {round}");
+                    }
+                    _ => panic!(),
+                }
+            }
+            ef.finish(&mut ctx).unwrap();
+            let h = ctx.point_headers.get("quantized").unwrap();
+            assert_eq!(
+                h.get("bytes_before").unwrap().as_u64().unwrap(),
+                c.total_bytes(),
+                "counters must reset between messages (round {round})"
+            );
+        }
+    }
+
+    #[test]
+    fn dequantize_scratch_is_reused_and_tracked() {
+        let _guard = crate::memory::GAUGE_TEST_LOCK.lock().unwrap();
+        let c = materialize(&ModelSpec::llama_mini(), 46);
+        let mut ef = DequantizeEntryFilter::new();
+        let mut ctx = FilterContext::default();
+        ef.begin(&mut ctx).unwrap();
+        for (i, (n, t)) in c.iter().enumerate() {
+            let q = quantize(QuantScheme::Nf4, t).unwrap();
+            let out = ef.entry(i, Entry::Quantized(n.to_string(), q), &mut ctx).unwrap();
+            match out {
+                Entry::Plain(_, p) => assert_eq!(p.meta.shape, t.meta.shape),
+                _ => panic!(),
+            }
+        }
+        // Scratch registered: exactly one max-entry-sized fp32 buffer.
+        let max_entry = c.max_entry_bytes();
+        assert!(ef.scratch_bytes() >= max_entry, "{}", ef.scratch_bytes());
+        assert!(ef.scratch_bytes() < 4 * max_entry.max(4096), "{}", ef.scratch_bytes());
     }
 }

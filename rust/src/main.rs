@@ -43,7 +43,8 @@ COMMANDS:
                 --local-steps 10 --quant none --streaming regular
                 --trainer pjrt|mock --alpha 0 --out results/run.json
                 --sample-fraction 1.0 --min-clients 0 --round-deadline 0
-                --allow-partial[=false] --transfer-timeout 600]
+                --allow-partial[=false] --transfer-timeout 600
+                --entry-fold true|false]
   server        --listen 127.0.0.1:7777 --job <file>
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
@@ -116,6 +117,13 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
             .map_err(|_| anyhow!("allow-partial: expected true|false, got '{v}'"))?;
     } else if args.flag("allow-partial") {
         job.round_policy.allow_partial = true;
+    }
+    // `--entry-fold false` forces the legacy whole-container pipeline
+    // (the default is the entry-streamed fold).
+    if let Some(v) = args.get("entry-fold") {
+        job.entry_fold = v
+            .parse()
+            .map_err(|_| anyhow!("entry-fold: expected true|false, got '{v}'"))?;
     }
     if let Some(d) = args.get("artifacts") {
         job.artifacts_dir = d.to_string();
@@ -282,6 +290,7 @@ fn cmd_client(args: &Args) -> Result<()> {
     )
     .with_mode(job.streaming)
     .with_reliable(job.reliable)
+    .with_entry_fold(job.entry_fold)
     .with_timeout(job.transfer_timeout());
     let rounds = exec.run()?;
     println!("completed {rounds} task rounds");

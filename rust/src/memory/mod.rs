@@ -32,8 +32,27 @@ impl Gauge {
         self.peak.fetch_max(now, Ordering::Relaxed);
     }
 
+    /// Saturating decrement: a mismatched unregister (double-free of a
+    /// reservation, stale `resync`) clamps at zero instead of wrapping to
+    /// ~u64::MAX and poisoning `current()`/`peak()` for the rest of the
+    /// process.
     pub fn sub(&self, n: u64) {
-        self.cur.fetch_sub(n, Ordering::Relaxed);
+        let mut cur = self.cur.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self
+                .cur
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => {
+                    if cur < n {
+                        log::warn!("gauge underflow: sub {n} from {cur} (clamped to 0)");
+                    }
+                    return;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     pub fn current(&self) -> u64 {
@@ -51,10 +70,17 @@ impl Gauge {
 }
 
 /// Global gauge for communication buffers (serialized blobs, chunk
-/// buffers, reassembly buffers). The model containers themselves are
-/// *not* counted — the paper's comparison is about the *additional*
-/// memory transmission needs.
+/// buffers, reassembly buffers, dequantize scratch, updates buffered for
+/// the fold frontier). The model containers themselves are *not*
+/// counted — the paper's comparison is about the *additional* memory
+/// transmission needs.
 pub static COMM_GAUGE: Gauge = Gauge::new();
+
+/// Serializes tests that assert absolute bounds on the process-global
+/// [`COMM_GAUGE`] (its traffic is shared by every concurrently running
+/// test in a binary). Not part of the public API.
+#[doc(hidden)]
+pub static GAUGE_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// A byte buffer whose lifetime is tracked by a gauge. Use for every
 /// transmission-path allocation so Table III is measurable by accounting
@@ -127,6 +153,93 @@ impl Drop for TrackedBuf {
     }
 }
 
+/// An f32 scratch buffer whose capacity is tracked by a gauge — the
+/// dequantization scratch of the entry-streamed receive path. Reused
+/// across entries (and rounds) within one session, so the gauge shows a
+/// stable O(largest entry) cost instead of alloc/free churn.
+pub struct TrackedF32Buf {
+    data: Vec<f32>,
+    gauge: &'static Gauge,
+    registered: usize,
+}
+
+impl TrackedF32Buf {
+    pub fn new(gauge: &'static Gauge) -> Self {
+        Self {
+            data: Vec::new(),
+            gauge,
+            registered: 0,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_vec(&mut self) -> &mut Vec<f32> {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Registered bytes (capacity × 4).
+    pub fn registered_bytes(&self) -> u64 {
+        (self.registered * 4) as u64
+    }
+
+    /// Re-sync the registered size after growth.
+    pub fn resync(&mut self) {
+        let cap = self.data.capacity();
+        if cap > self.registered {
+            self.gauge.add(((cap - self.registered) * 4) as u64);
+        } else if cap < self.registered {
+            self.gauge.sub(((self.registered - cap) * 4) as u64);
+        }
+        self.registered = cap;
+    }
+}
+
+impl Drop for TrackedF32Buf {
+    fn drop(&mut self) {
+        self.gauge.sub((self.registered * 4) as u64);
+    }
+}
+
+/// RAII byte reservation against a gauge — accounts buffers whose bytes
+/// live in structures we don't own (e.g. a decoded update container
+/// buffered until the fold frontier reaches it).
+pub struct GaugeReservation {
+    gauge: &'static Gauge,
+    bytes: u64,
+}
+
+impl GaugeReservation {
+    pub fn new(gauge: &'static Gauge, bytes: u64) -> Self {
+        gauge.add(bytes);
+        Self { gauge, bytes }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for GaugeReservation {
+    fn drop(&mut self) {
+        self.gauge.sub(self.bytes);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +269,50 @@ mod tests {
             assert!(TEST_GAUGE.current() >= before + 2048);
         }
         assert_eq!(TEST_GAUGE.current(), before);
+    }
+
+    #[test]
+    fn gauge_sub_saturates_instead_of_wrapping() {
+        // Regression: a double-unregister used to wrap `cur` past zero,
+        // poisoning current()/peak() for the rest of the process.
+        let g = Gauge::new();
+        g.add(10);
+        g.sub(100);
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 10);
+        g.add(5);
+        assert_eq!(g.current(), 5, "gauge must stay usable after underflow");
+        assert_eq!(g.peak(), 10);
+    }
+
+    #[test]
+    fn tracked_f32_buf_lifecycle() {
+        static G: Gauge = Gauge::new();
+        let before = G.current();
+        {
+            let mut b = TrackedF32Buf::new(&G);
+            b.as_mut_vec().extend_from_slice(&[0.5f32; 1000]);
+            b.resync();
+            assert!(G.current() >= before + 4000);
+            assert!(b.registered_bytes() >= 4000);
+            // reuse: clear keeps capacity registered
+            b.clear();
+            b.resync();
+            assert!(G.current() >= before + 4000);
+        }
+        assert_eq!(G.current(), before);
+    }
+
+    #[test]
+    fn gauge_reservation_raii() {
+        static G: Gauge = Gauge::new();
+        let before = G.current();
+        {
+            let r = GaugeReservation::new(&G, 4096);
+            assert_eq!(r.bytes(), 4096);
+            assert_eq!(G.current(), before + 4096);
+        }
+        assert_eq!(G.current(), before);
     }
 
     #[test]

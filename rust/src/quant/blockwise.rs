@@ -30,6 +30,30 @@ fn map_4bit(kind: FourBitKind) -> &'static Codebook {
     }
 }
 
+/// Upper bound on a wire-supplied block size. Real encoders use 64/4096;
+/// anything beyond this is corrupt or hostile metadata.
+const MAX_BLOCK_SIZE: usize = 1 << 24;
+
+/// Validate a wire-supplied block size (0 means "use the default"): the
+/// decode loops index `absmax` per block and (for 4-bit) slice the nibble
+/// payload on even block starts, so a hostile `block_size` must be
+/// rejected up front — `Err`, never a panic or a mis-decode.
+fn checked_block_size(declared: usize, default: usize, nibble_packed: bool) -> Result<usize> {
+    let bs = if declared == 0 { default } else { declared };
+    if bs == 0 {
+        bail!("block size resolved to 0");
+    }
+    if bs > MAX_BLOCK_SIZE {
+        bail!("block size {bs} exceeds cap {MAX_BLOCK_SIZE}");
+    }
+    if nibble_packed && bs % 2 != 0 {
+        // An odd block size would make later blocks start mid-byte,
+        // breaking the `payload[base / 2 ..]` nibble indexing.
+        bail!("4-bit block size {bs} must be even");
+    }
+    Ok(bs)
+}
+
 #[inline]
 fn block_absmax(block: &[f32]) -> f32 {
     let mut m = 0f32;
@@ -75,7 +99,7 @@ pub fn decode_8bit(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
     if q.payload.len() != n {
         bail!("8-bit payload length {} != {}", q.payload.len(), n);
     }
-    let bs = if q.meta.block_size == 0 { BLOCK_8BIT } else { q.meta.block_size };
+    let bs = checked_block_size(q.meta.block_size, BLOCK_8BIT, false)?;
     if q.meta.absmax.len() != n.div_ceil(bs) {
         bail!("8-bit absmax count mismatch");
     }
@@ -141,7 +165,7 @@ pub fn decode_4bit(q: &QuantizedTensor, kind: FourBitKind, out: &mut Vec<f32>) -
     if q.payload.len() != n.div_ceil(2) {
         bail!("4-bit payload length {} != {}", q.payload.len(), n.div_ceil(2));
     }
-    let bs = if q.meta.block_size == 0 { BLOCK_4BIT } else { q.meta.block_size };
+    let bs = checked_block_size(q.meta.block_size, BLOCK_4BIT, true)?;
     if q.meta.absmax.len() != n.div_ceil(bs) {
         bail!("4-bit absmax count mismatch");
     }
@@ -278,6 +302,49 @@ mod tests {
         let q = qt(QuantScheme::Blockwise8, 100, p, m);
         let mut out = Vec::new();
         assert!(decode_8bit(&q, &mut out).is_err());
+    }
+
+    #[test]
+    fn corrupt_block_size_rejected() {
+        // Odd 4-bit block size: breaks the even-block-start assumption of
+        // the nibble indexing — must be a clean Err, not a panic or a
+        // silent mis-decode.
+        let src = randn(1000, 7, 1.0);
+        let (p, mut m) = encode_4bit(&src, FourBitKind::Nf4);
+        m.block_size = 63;
+        m.absmax = vec![1.0; 1000usize.div_ceil(63)]; // consistent with the lie
+        let q = qt(QuantScheme::Nf4, 1000, p.clone(), m.clone());
+        let mut out = Vec::new();
+        assert!(decode_4bit(&q, FourBitKind::Nf4, &mut out).is_err());
+
+        // Huge block size: capped.
+        m.block_size = usize::MAX / 2;
+        m.absmax = vec![1.0];
+        let q = qt(QuantScheme::Nf4, 1000, p, m);
+        let mut out = Vec::new();
+        assert!(decode_4bit(&q, FourBitKind::Nf4, &mut out).is_err());
+
+        // Same for the 8-bit decoder.
+        let (p8, mut m8) = encode_8bit(&src);
+        m8.block_size = MAX_BLOCK_SIZE + 1;
+        m8.absmax = vec![1.0];
+        let q8 = qt(QuantScheme::Blockwise8, 1000, p8, m8);
+        let mut out8 = Vec::new();
+        assert!(decode_8bit(&q8, &mut out8).is_err());
+    }
+
+    #[test]
+    fn odd_but_consistent_8bit_block_size_decodes() {
+        // 8-bit payloads are byte-per-element, so an unusual (but sane and
+        // consistent) block size is legal — only 4-bit requires evenness.
+        let src = randn(300, 8, 0.5);
+        let (p, m) = encode_8bit(&src);
+        let mut m2 = m.clone();
+        m2.block_size = BLOCK_8BIT; // explicit default, not 0
+        let q = qt(QuantScheme::Blockwise8, 300, p, m2);
+        let mut out = Vec::new();
+        decode_8bit(&q, &mut out).unwrap();
+        assert_eq!(out.len(), 300);
     }
 
     #[test]

@@ -100,6 +100,16 @@ pub fn quantize(scheme: QuantScheme, t: &Tensor) -> Result<QuantizedTensor> {
 /// metadata produce `Err`, never a panic — wire-received tensors hit
 /// this path directly.
 pub fn dequantize(q: &QuantizedTensor) -> Result<Tensor> {
+    let mut out: Vec<f32> = Vec::with_capacity(q.orig.elems());
+    dequantize_into(q, &mut out)?;
+    Ok(Tensor::from_f32(q.orig.shape.clone(), out))
+}
+
+/// Dequantize appending into a caller-provided buffer — the reusable-
+/// scratch form behind [`dequantize`] and the entry-streamed receive
+/// path (one scratch per session bounds decode memory to O(max entry)
+/// instead of churning a fresh allocation per tensor).
+pub fn dequantize_into(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
     let n = q.orig.elems();
     let expect = payload_dtype(q.scheme)?.size_of_elems(n);
     if q.payload.len() != expect {
@@ -109,23 +119,19 @@ pub fn dequantize(q: &QuantizedTensor) -> Result<Tensor> {
             q.payload.len()
         );
     }
-    let mut out: Vec<f32> = Vec::with_capacity(n);
+    let start = out.len();
     match q.scheme {
         QuantScheme::None => bail!("QuantScheme::None has no codec"),
-        QuantScheme::Fp16 => half::decode_f16(&q.payload, &mut out),
-        QuantScheme::Bf16 => half::decode_bf16(&q.payload, &mut out),
-        QuantScheme::Blockwise8 => blockwise::decode_8bit(q, &mut out)?,
-        QuantScheme::Fp4 => {
-            blockwise::decode_4bit(q, blockwise::FourBitKind::Fp4, &mut out)?
-        }
-        QuantScheme::Nf4 => {
-            blockwise::decode_4bit(q, blockwise::FourBitKind::Nf4, &mut out)?
-        }
+        QuantScheme::Fp16 => half::decode_f16(&q.payload, out),
+        QuantScheme::Bf16 => half::decode_bf16(&q.payload, out),
+        QuantScheme::Blockwise8 => blockwise::decode_8bit(q, out)?,
+        QuantScheme::Fp4 => blockwise::decode_4bit(q, blockwise::FourBitKind::Fp4, out)?,
+        QuantScheme::Nf4 => blockwise::decode_4bit(q, blockwise::FourBitKind::Nf4, out)?,
     }
-    if out.len() != n {
-        bail!("dequantized length {} != expected {}", out.len(), n);
+    if out.len() - start != n {
+        bail!("dequantized length {} != expected {}", out.len() - start, n);
     }
-    Ok(Tensor::from_f32(q.orig.shape.clone(), out))
+    Ok(())
 }
 
 /// Payload dtype a scheme produces (for wire encoding).

@@ -422,6 +422,12 @@ impl UnitSink for BlobSink {
         if i != 0 {
             bail!("blob transfers carry exactly one unit (got unit {i})");
         }
+        // The declared length drives an up-front allocation (random-access
+        // reassembly): cap it so a corrupt u64 cannot request terabytes.
+        const MAX_BLOB: u64 = 16 << 30;
+        if len > MAX_BLOB {
+            bail!("declared blob size {len} exceeds cap {MAX_BLOB}");
+        }
         let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, len as usize);
         buf.as_mut_vec().resize(len as usize, 0);
         buf.resync();
@@ -678,7 +684,10 @@ impl SfmEndpoint {
             .get("total_bytes")
             .and_then(|j| j.as_u64())
             .unwrap_or(0);
-        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, total as usize);
+        // Preallocation hint only (the buffer grows with arriving
+        // chunks): clamp so a corrupt descriptor cannot reserve GBs.
+        let mut buf =
+            TrackedBuf::with_capacity(&COMM_GAUGE, (total as usize).min(1 << 28));
         loop {
             match self.recv_event(timeout)? {
                 Event::UnitStart { .. } => {}

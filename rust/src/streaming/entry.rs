@@ -1,0 +1,390 @@
+//! Entry-streamed filter × transport composition.
+//!
+//! The whole-container path materializes every intermediate
+//! representation (plain container → quantized container → serialized
+//! message); under the concurrent round engine that costs
+//! O(model × sessions) on the server. The functions here run the filter
+//! chain *per entry during (de)serialization* instead:
+//!
+//! * [`outbound_headers`] — one in-order pass over the container through
+//!   a fresh chain, producing the point headers that must travel in the
+//!   task/result control message *before* the weights transfer starts.
+//! * [`send_weights_filtered`] — the wire pass: each entry is
+//!   transformed (e.g. quantized) at the moment it is serialized; no
+//!   transformed container ever exists. Entry transforms are pure per
+//!   the [`EntryFilter`] contract, so the pre-pass, the wire pass and
+//!   any retransmission re-evaluation produce identical bytes.
+//! * [`recv_weights_filtered`] — runs the inbound chain on each entry as
+//!   its frames complete and hands the resulting fp32 tensor to a sink
+//!   (the executor's container builder, or the coordinator's
+//!   [`crate::coordinator::aggregator::EntryFold`]).
+
+use super::object::{self, EntryFlow, TransferStats};
+use super::wire::{self, Entry};
+use crate::config::StreamingMode;
+use crate::filter::{EntryChain, FilterContext, FilterPoint, FilterSet};
+use crate::memory::{TrackedBuf, COMM_GAUGE};
+use crate::sfm::{ResumePolicy, SfmEndpoint, UnitSource};
+use crate::tensor::{ParamContainer, Tensor};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::Write;
+use std::path::Path;
+use std::time::Duration;
+
+/// Can this filter point run entry-streamed? (Every filter in the chain
+/// implements the streaming contract.)
+pub fn entry_capable(set: &FilterSet, point: FilterPoint) -> bool {
+    set.entry_chain(point).is_some()
+}
+
+/// Per-entry wire geometry recorded during the header pre-pass. Handing
+/// it to [`send_weights_filtered`] lets the reliable sender skip its
+/// up-front unit len/crc probe sweep, so streamed sends cost exactly one
+/// extra transform pass (the pre-pass), as documented.
+pub struct OutboundPlan {
+    lens: Vec<u64>,
+    crcs: Vec<u32>,
+}
+
+/// Header pre-pass: run the outbound chain over the container in order,
+/// discarding transformed entries, so `ctx.point_headers` (quantization
+/// sizes, integrity digest, ...) is complete before the control message
+/// is sent. O(entry) memory; the cost is one extra transform pass. The
+/// returned [`OutboundPlan`] carries the per-entry wire geometry for the
+/// wire pass.
+pub fn outbound_headers(
+    weights: &ParamContainer,
+    set: &FilterSet,
+    point: FilterPoint,
+    ctx: &mut FilterContext,
+) -> Result<OutboundPlan> {
+    let mut chain = set
+        .entry_chain(point)
+        .ok_or_else(|| anyhow!("filter chain at {point} is not entry-capable"))?;
+    chain.begin(ctx)?;
+    let n = weights.len();
+    let mut lens = Vec::with_capacity(n);
+    let mut crcs = Vec::with_capacity(n);
+    let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, 0);
+    for (i, (name, t)) in weights.iter().enumerate() {
+        let e = chain.entry(i, Entry::Plain(name.to_string(), t.clone()), ctx)?;
+        buf.as_mut_vec().clear();
+        wire::write_entry(buf.as_mut_vec(), &e)?;
+        buf.resync();
+        lens.push(buf.len() as u64);
+        crcs.push(crc32fast::hash(buf.as_slice()));
+    }
+    chain.finish(ctx)?;
+    Ok(OutboundPlan { lens, crcs })
+}
+
+/// One entry transformed for the wire, serialized into a tracked buffer.
+fn transformed_unit(
+    chain: &mut EntryChain,
+    ctx: &mut FilterContext,
+    weights: &ParamContainer,
+    i: usize,
+) -> Result<(String, TrackedBuf)> {
+    let name = weights.names()[i].clone();
+    let t = weights.get(&name).expect("index from names()").clone();
+    let e = chain.entry(i, Entry::Plain(name.clone(), t), ctx)?;
+    let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, e.wire_len());
+    wire::write_entry(buf.as_mut_vec(), &e)?;
+    buf.resync();
+    Ok((e.name().to_string(), buf))
+}
+
+/// [`UnitSource`] that quantizes/transforms one entry at a time on
+/// demand — the scatter-side memory bound. A one-entry cache serves the
+/// usual in-order pass; retransmissions re-evaluate the entry (transforms
+/// are pure, see the `EntryFilter` contract).
+struct TransformSource<'a> {
+    weights: &'a ParamContainer,
+    chain: EntryChain,
+    ctx: FilterContext,
+    cache_idx: usize,
+    cache: Option<TrackedBuf>,
+    lens: Vec<Option<u64>>,
+    crcs: Vec<Option<u32>>,
+}
+
+impl<'a> TransformSource<'a> {
+    fn new(
+        weights: &'a ParamContainer,
+        mut chain: EntryChain,
+        mut ctx: FilterContext,
+        plan: Option<&OutboundPlan>,
+    ) -> Result<Self> {
+        chain.begin(&mut ctx)?;
+        let n = weights.len();
+        // A pre-pass plan seeds the unit geometry, so the reliable
+        // sender's up-front len/crc sweep hits the cache instead of
+        // re-transforming every entry.
+        let (lens, crcs) = match plan {
+            Some(p) if p.lens.len() == n => (
+                p.lens.iter().map(|&l| Some(l)).collect(),
+                p.crcs.iter().map(|&c| Some(c)).collect(),
+            ),
+            _ => (vec![None; n], vec![None; n]),
+        };
+        Ok(TransformSource {
+            weights,
+            chain,
+            ctx,
+            cache_idx: usize::MAX,
+            cache: None,
+            lens,
+            crcs,
+        })
+    }
+
+    fn ensure(&mut self, i: usize) -> Result<&TrackedBuf> {
+        if self.cache_idx != i || self.cache.is_none() {
+            self.cache = None; // release the previous entry's buffer first
+            let (_, buf) = transformed_unit(&mut self.chain, &mut self.ctx, self.weights, i)?;
+            self.lens[i] = Some(buf.len() as u64);
+            self.crcs[i] = Some(crc32fast::hash(buf.as_slice()));
+            self.cache = Some(buf);
+            self.cache_idx = i;
+        }
+        Ok(self.cache.as_ref().unwrap())
+    }
+}
+
+impl<'a> UnitSource for TransformSource<'a> {
+    fn n_units(&mut self) -> Result<usize> {
+        Ok(self.weights.len())
+    }
+
+    fn unit_meta(&mut self, i: usize) -> Result<Json> {
+        Ok(Json::obj(vec![(
+            "name",
+            Json::str(self.weights.names()[i].clone()),
+        )]))
+    }
+
+    fn unit_len(&mut self, i: usize) -> Result<u64> {
+        if let Some(l) = self.lens[i] {
+            return Ok(l);
+        }
+        self.ensure(i)?;
+        Ok(self.lens[i].expect("set by ensure"))
+    }
+
+    fn read_at(&mut self, i: usize, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let blob = self.ensure(i)?;
+        let off = offset as usize;
+        let end = off
+            .checked_add(buf.len())
+            .filter(|&e| e <= blob.len())
+            .ok_or_else(|| anyhow!("entry read beyond bounds"))?;
+        buf.copy_from_slice(&blob.as_slice()[off..end]);
+        Ok(())
+    }
+
+    fn unit_crc(&mut self, i: usize) -> Result<u32> {
+        if let Some(c) = self.crcs[i] {
+            return Ok(c);
+        }
+        self.ensure(i)?;
+        Ok(self.crcs[i].expect("set by ensure"))
+    }
+}
+
+fn filtered_descriptor(mode: StreamingMode, entries: usize, total_bytes: u64) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("weights")),
+        ("mode", Json::str(mode.name())),
+        ("entries", Json::num(entries as f64)),
+        ("total_bytes", Json::num(total_bytes as f64)),
+    ])
+}
+
+/// Send a plain container through the outbound chain, transforming one
+/// entry at a time during serialization. Call [`outbound_headers`] first
+/// if the chain's headers must travel in the control message.
+#[allow(clippy::too_many_arguments)]
+pub fn send_weights_filtered(
+    ep: &SfmEndpoint,
+    weights: &ParamContainer,
+    set: &FilterSet,
+    point: FilterPoint,
+    ctx: &FilterContext,
+    mode: StreamingMode,
+    spool_dir: Option<&Path>,
+    reliable: Option<&ResumePolicy>,
+    plan: Option<&OutboundPlan>,
+) -> Result<TransferStats> {
+    let t0 = std::time::Instant::now();
+    let mut chain = set
+        .entry_chain(point)
+        .ok_or_else(|| anyhow!("filter chain at {point} is not entry-capable"))?;
+    let n = weights.len();
+    let mut stats = match mode {
+        StreamingMode::Container => {
+            if let Some(policy) = reliable {
+                let mut src = TransformSource::new(weights, chain, ctx.clone(), plan)?;
+                let report =
+                    ep.send_reliable(filtered_descriptor(mode, n, 0), &mut src, policy)?;
+                let wire_bytes: u64 = src.lens.iter().map(|l| l.unwrap_or(0)).sum();
+                let mut s = TransferStats {
+                    wire_bytes,
+                    entries: n,
+                    ..Default::default()
+                };
+                s.absorb(&report);
+                s
+            } else {
+                // Legacy ordered pass: transform + send each entry once.
+                let mut cctx = ctx.clone();
+                chain.begin(&mut cctx)?;
+                let mut tx = ep.begin_object(filtered_descriptor(mode, n, 0))?;
+                let mut wire_bytes = 0u64;
+                for i in 0..n {
+                    let (name, buf) = transformed_unit(&mut chain, &mut cctx, weights, i)?;
+                    tx.begin_unit(Json::obj(vec![
+                        ("index", Json::num(i as f64)),
+                        ("name", Json::str(name)),
+                        ("bytes", Json::num(buf.len() as f64)),
+                    ]))?;
+                    tx.write_all(buf.as_slice())?;
+                    tx.end_unit()?;
+                    wire_bytes += buf.len() as u64;
+                }
+                tx.end_object(Json::Null)?;
+                TransferStats {
+                    wire_bytes,
+                    entries: n,
+                    ..Default::default()
+                }
+            }
+        }
+        StreamingMode::Regular => {
+            // Regular transmission is whole-message by definition; the
+            // win here is skipping the transformed *container* — entries
+            // stream straight into the single serialized blob.
+            let mut cctx = ctx.clone();
+            chain.begin(&mut cctx)?;
+            let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, 8);
+            {
+                let v = blob.as_mut_vec();
+                crate::util::bytes::put_u32(v, wire::MSG_MAGIC);
+                crate::util::bytes::put_u32(v, n as u32);
+            }
+            for (i, (name, t)) in weights.iter().enumerate() {
+                let e = chain.entry(i, Entry::Plain(name.to_string(), t.clone()), &mut cctx)?;
+                wire::write_entry(blob.as_mut_vec(), &e)?;
+                blob.resync();
+            }
+            let total = blob.len() as u64;
+            if let Some(policy) = reliable {
+                let mut src = crate::sfm::SliceSource::new(blob.as_slice(), Json::Null);
+                let report = ep.send_reliable(
+                    filtered_descriptor(mode, n, total),
+                    &mut src,
+                    policy,
+                )?;
+                let mut s = TransferStats {
+                    wire_bytes: total,
+                    entries: n,
+                    ..Default::default()
+                };
+                s.absorb(&report);
+                s
+            } else {
+                let mut tx = ep.begin_object(filtered_descriptor(mode, n, total))?;
+                tx.begin_unit(Json::obj(vec![("bytes", Json::num(total as f64))]))?;
+                tx.write_all(blob.as_slice())?;
+                tx.end_unit()?;
+                tx.end_object(Json::Null)?;
+                TransferStats {
+                    wire_bytes: total,
+                    entries: n,
+                    ..Default::default()
+                }
+            }
+        }
+        StreamingMode::File => {
+            let dir = spool_dir.ok_or_else(|| anyhow!("file streaming needs a spool dir"))?;
+            let path = object::spool_path(dir, "tx");
+            // Spool transformed entries one at a time (O(entry) memory).
+            let file_len = {
+                let f = std::fs::File::create(&path)?;
+                let mut w = std::io::BufWriter::with_capacity(256 * 1024, f);
+                let mut head = Vec::with_capacity(8);
+                crate::util::bytes::put_u32(&mut head, wire::MSG_MAGIC);
+                crate::util::bytes::put_u32(&mut head, n as u32);
+                w.write_all(&head)?;
+                let mut cctx = ctx.clone();
+                chain.begin(&mut cctx)?;
+                for (i, (name, t)) in weights.iter().enumerate() {
+                    let e =
+                        chain.entry(i, Entry::Plain(name.to_string(), t.clone()), &mut cctx)?;
+                    wire::write_entry(&mut w, &e)?;
+                }
+                w.flush()?;
+                std::fs::metadata(&path)?.len()
+            };
+            let result = if let Some(policy) = reliable {
+                object::send_file_resumable(ep, &path, n, policy)
+            } else {
+                object::send_file(ep, &path, n)
+            };
+            std::fs::remove_file(&path).ok();
+            let mut s = result?;
+            s.wire_bytes = file_len;
+            s
+        }
+    };
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+/// Receive a weights transfer, running the inbound chain per entry as
+/// frames complete and delivering each resulting fp32 tensor to `sink`.
+/// `chain.begin` must already reflect the inbound headers via `ctx`.
+/// `chain.finish` runs after the last entry (integrity verification).
+///
+/// The sink returning `EntryFlow::Discard` stops filtering and folds —
+/// the rest of the stream is drained so the transfer protocol completes
+/// cleanly (an abandoned straggler keeps its link usable).
+pub fn recv_weights_filtered(
+    ep: &SfmEndpoint,
+    chain: &mut EntryChain,
+    ctx: &mut FilterContext,
+    spool_dir: Option<&Path>,
+    reliable: bool,
+    timeout: Option<Duration>,
+    sink: &mut dyn FnMut(usize, String, Tensor) -> Result<EntryFlow>,
+) -> Result<TransferStats> {
+    chain.begin(ctx)?;
+    let mut discarded = false;
+    let stats = {
+        let mut on_entry = |i: usize, e: Entry| -> Result<EntryFlow> {
+            let out = chain.entry(i, e, ctx)?;
+            let flow = match out {
+                Entry::Plain(name, t) => sink(i, name, t)?,
+                Entry::Quantized(name, _) => {
+                    bail!("entry '{name}' still quantized after inbound filters — chain misconfigured")
+                }
+            };
+            if flow == EntryFlow::Discard {
+                discarded = true;
+            }
+            Ok(flow)
+        };
+        if reliable {
+            object::recv_weights_resumable_entries(ep, spool_dir, timeout, &mut on_entry)
+        } else {
+            object::recv_weights_entries(ep, spool_dir, &mut on_entry)
+        }
+    }?;
+    if !discarded {
+        // finish hooks (integrity verification) only make sense over a
+        // complete stream; a discarded (excluded/poisoned) receive was
+        // drained, not consumed.
+        chain.finish(ctx)?;
+    }
+    Ok(stats)
+}

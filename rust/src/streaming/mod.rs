@@ -2,14 +2,21 @@
 //! of weight messages, plus the pull-based [`retriever::ObjectRetriever`].
 //!
 //! Both ordered (legacy) and resumable out-of-order disciplines are
-//! provided; see DESIGN.md §Resume for the protocol.
+//! provided; see DESIGN.md §Resume for the protocol. The entry-streamed
+//! forms ([`object::recv_weights_entries`], [`entry::send_weights_filtered`],
+//! [`entry::recv_weights_filtered`]) decode/encode **one entry at a
+//! time** and compose with the per-entry filter chains — the whole-
+//! message APIs are adapters over them (see DESIGN.md §Memory bounds).
 
+pub mod entry;
 pub mod object;
 pub mod retriever;
 pub mod wire;
 
+pub use entry::{outbound_headers, recv_weights_filtered, send_weights_filtered, OutboundPlan};
 pub use object::{
-    recv_file_resumable, recv_weights, recv_weights_resumable, send_file_resumable,
-    send_weights, send_weights_resumable, FileSink, TransferStats,
+    recv_file_resumable, recv_weights, recv_weights_entries, recv_weights_resumable,
+    recv_weights_resumable_entries, send_file_resumable, send_weights, send_weights_resumable,
+    EntryAssembler, EntryFlow, FileSink, TransferStats,
 };
 pub use wire::{QuantizedContainer, TransferManifest, WeightsMsg};

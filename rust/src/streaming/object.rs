@@ -57,7 +57,7 @@ pub struct TransferStats {
 }
 
 impl TransferStats {
-    fn absorb(&mut self, r: &ReliableReport) {
+    pub(crate) fn absorb(&mut self, r: &ReliableReport) {
         self.retransmit_frames += r.retransmit_frames;
         self.retransmit_bytes += r.retransmit_bytes;
         self.nacks += r.nack_rounds;
@@ -88,8 +88,35 @@ pub fn send_weights(
     Ok(stats)
 }
 
-/// Receive a weights message (mode is discovered from the descriptor).
-pub fn recv_weights(ep: &SfmEndpoint, spool_dir: Option<&Path>) -> Result<(WeightsMsg, TransferStats)> {
+/// Hard cap on any single wire-declared buffer (unit or whole message):
+/// matches `wire::MAX_PAYLOAD`. A declared length beyond this is corrupt
+/// or hostile and is rejected before any allocation.
+const MAX_WIRE_ALLOC: u64 = 16 << 30;
+/// Preallocation clamp for buffers that grow with arriving data: a lying
+/// descriptor can cost at most this much up-front reservation; honest
+/// transfers beyond it just grow geometrically.
+const PREALLOC_CAP: usize = 1 << 28;
+
+/// Flow decision returned by an entry-streamed receive callback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryFlow {
+    /// Keep decoding and delivering entries.
+    Continue,
+    /// Stop delivering: drain the remaining wire bytes and return. The
+    /// receive completes the transfer protocol (acks, chunk tables) but
+    /// no further entries are parsed or handed to the callback.
+    Discard,
+}
+
+/// Entry-streamed receive: yields each decoded `(index, entry)` as its
+/// frames complete, in whatever order the wire completes them — the
+/// receive-side half of the O(accumulator + entry) gather bound. The
+/// legacy whole-message [`recv_weights`] is an adapter over this.
+pub fn recv_weights_entries(
+    ep: &SfmEndpoint,
+    spool_dir: Option<&Path>,
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<TransferStats> {
     let t0 = std::time::Instant::now();
     let (descriptor, stream) = match ep.recv_event(None)? {
         Event::Begin { descriptor, stream } => (descriptor, stream),
@@ -100,17 +127,84 @@ pub fn recv_weights(ep: &SfmEndpoint, spool_dir: Option<&Path>) -> Result<(Weigh
         .and_then(|m| m.as_str())
         .and_then(StreamingMode::from_name)
         .ok_or_else(|| anyhow!("descriptor missing mode"))?;
-    let (msg, mut stats) = match mode {
-        StreamingMode::Regular => recv_regular(ep, &descriptor)?,
-        StreamingMode::Container => recv_container(ep, &descriptor)?,
+    let mut stats = match mode {
+        StreamingMode::Regular => recv_regular_entries(ep, &descriptor, on_entry)?,
+        StreamingMode::Container => recv_container_entries(ep, &descriptor, on_entry)?,
         StreamingMode::File => {
             let dir = spool_dir.ok_or_else(|| anyhow!("file streaming needs a spool dir"))?;
-            recv_file_mode(ep, &descriptor, dir)?
+            recv_file_entries(ep, &descriptor, dir, on_entry)?
         }
     };
     ep.send_ack(stream)?;
     stats.seconds = t0.elapsed().as_secs_f64();
-    Ok((msg, stats))
+    Ok(stats)
+}
+
+/// Reassembles `(index, entry)` deliveries into a whole message with
+/// deterministic container order, whatever order the wire completed the
+/// entries in.
+#[derive(Default)]
+pub struct EntryAssembler {
+    slots: Vec<Option<Entry>>,
+    received: usize,
+}
+
+impl EntryAssembler {
+    pub fn put(&mut self, idx: usize, e: Entry) -> Result<()> {
+        if idx >= self.slots.len() {
+            if idx > 1_000_000 {
+                bail!("entry index {idx} unreasonable");
+            }
+            self.slots.resize_with(idx + 1, || None);
+        }
+        if self.slots[idx].is_some() {
+            bail!("duplicate entry at index {idx}");
+        }
+        self.slots[idx] = Some(e);
+        self.received += 1;
+        Ok(())
+    }
+
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    pub fn into_msg(self) -> Result<WeightsMsg> {
+        let mut plain = ParamContainer::new();
+        let mut quant = QuantizedContainer::default();
+        let (mut saw_plain, mut saw_quant) = (false, false);
+        for (i, slot) in self.slots.into_iter().enumerate() {
+            match slot {
+                None => bail!("missing entry at index {i}"),
+                Some(Entry::Plain(n, t)) => {
+                    saw_plain = true;
+                    plain.insert(n, t);
+                }
+                Some(Entry::Quantized(n, q)) => {
+                    saw_quant = true;
+                    quant.entries.push((n, q));
+                }
+            }
+        }
+        if saw_plain && saw_quant {
+            bail!("mixed plain/quantized entries in one message");
+        }
+        Ok(if saw_quant {
+            WeightsMsg::Quantized(quant)
+        } else {
+            WeightsMsg::Plain(plain)
+        })
+    }
+}
+
+/// Receive a weights message (mode is discovered from the descriptor).
+pub fn recv_weights(ep: &SfmEndpoint, spool_dir: Option<&Path>) -> Result<(WeightsMsg, TransferStats)> {
+    let mut asm = EntryAssembler::default();
+    let stats = recv_weights_entries(ep, spool_dir, &mut |i, e| {
+        asm.put(i, e)?;
+        Ok(EntryFlow::Continue)
+    })?;
+    Ok((asm.into_msg()?, stats))
 }
 
 fn descriptor(mode: StreamingMode, msg: &WeightsMsg) -> Json {
@@ -177,20 +271,40 @@ pub fn recv_weights_resumable(
     spool_dir: Option<&Path>,
     timeout: Option<Duration>,
 ) -> Result<(WeightsMsg, TransferStats)> {
+    let mut asm = EntryAssembler::default();
+    let stats = recv_weights_resumable_entries(ep, spool_dir, timeout, &mut |i, e| {
+        asm.put(i, e)?;
+        Ok(EntryFlow::Continue)
+    })?;
+    Ok((asm.into_msg()?, stats))
+}
+
+/// Entry-streamed form of [`recv_weights_resumable`]: each entry is
+/// decoded and delivered as soon as its (possibly out-of-order,
+/// NACK-recovered) frames complete — container mode never materializes
+/// the message. Entries may arrive in any index order; consumers that
+/// need container order reassemble via [`EntryAssembler`] or fold
+/// order-independently (the coordinator's entry fold).
+pub fn recv_weights_resumable_entries(
+    ep: &SfmEndpoint,
+    spool_dir: Option<&Path>,
+    timeout: Option<Duration>,
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<TransferStats> {
     let t0 = std::time::Instant::now();
-    let mut sink = WeightsSink::new(spool_dir.map(|p| p.to_path_buf()));
+    let mut sink = EntryStreamSink::new(spool_dir.map(|p| p.to_path_buf()), on_entry);
     let (descriptor, report) = ep.recv_reliable(&mut sink, timeout)?;
-    let (msg, wire_bytes) = sink.into_msg()?;
+    let (wire_bytes, delivered, discarded) = sink.finish_delivery()?;
     let n = descriptor
         .get("entries")
         .and_then(|j| j.as_usize())
-        .unwrap_or(msg.n_entries());
-    if msg.n_entries() != n {
-        bail!("resumable stream delivered {} of {n} entries", msg.n_entries());
+        .unwrap_or(delivered);
+    if !discarded && delivered != n {
+        bail!("resumable stream delivered {delivered} of {n} entries");
     }
-    let mut stats = reliable_stats(wire_bytes, msg.n_entries(), &report);
+    let mut stats = reliable_stats(wire_bytes, delivered, &report);
     stats.seconds = t0.elapsed().as_secs_f64();
-    Ok((msg, stats))
+    Ok(stats)
 }
 
 fn reliable_stats(wire_bytes: u64, entries: usize, report: &ReliableReport) -> TransferStats {
@@ -475,13 +589,20 @@ impl UnitSink for FileSink {
 }
 
 /// Receive-side dispatcher for resumable weights: storage strategy is
-/// chosen from the descriptor's mode.
-struct WeightsSink {
+/// chosen from the descriptor's mode. Container units are parsed and
+/// delivered to the callback the moment they complete; regular and file
+/// transfers deliver at `finish_delivery` (their storage is whole-object
+/// by nature).
+struct EntryStreamSink<'a> {
     spool_dir: Option<PathBuf>,
-    storage: WeightsStorage,
+    on_entry: &'a mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+    storage: EntryStorage,
+    delivered: usize,
+    discard: bool,
+    wire_bytes: u64,
 }
 
-enum WeightsStorage {
+enum EntryStorage {
     Unset,
     Regular {
         buf: Option<TrackedBuf>,
@@ -490,11 +611,6 @@ enum WeightsStorage {
     },
     Container {
         bufs: Vec<Option<ContainerUnit>>,
-        plain: ParamContainer,
-        quant: QuantizedContainer,
-        saw_plain: bool,
-        saw_quant: bool,
-        wire_bytes: u64,
     },
     File {
         sink: FileSink,
@@ -523,63 +639,66 @@ impl ContainerUnit {
     }
 }
 
-impl WeightsSink {
-    fn new(spool_dir: Option<PathBuf>) -> WeightsSink {
-        WeightsSink {
+impl<'a> EntryStreamSink<'a> {
+    fn new(
+        spool_dir: Option<PathBuf>,
+        on_entry: &'a mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+    ) -> EntryStreamSink<'a> {
+        EntryStreamSink {
             spool_dir,
-            storage: WeightsStorage::Unset,
+            on_entry,
+            storage: EntryStorage::Unset,
+            delivered: 0,
+            discard: false,
+            wire_bytes: 0,
         }
     }
 
-    fn into_msg(self) -> Result<(WeightsMsg, u64)> {
+    /// Deliver whatever the storage still holds (regular blob, spooled
+    /// file) and return `(wire_bytes, delivered, discarded)`.
+    fn finish_delivery(mut self) -> Result<(u64, usize, bool)> {
         match self.storage {
-            WeightsStorage::Unset => bail!("no transfer received"),
-            WeightsStorage::Regular { buf, done, .. } => {
+            EntryStorage::Unset => bail!("no transfer received"),
+            EntryStorage::Regular { buf, done, .. } => {
                 if !done {
                     bail!("regular transfer incomplete");
                 }
                 let blob = buf.ok_or_else(|| anyhow!("regular transfer missing payload"))?;
                 let wire_bytes = blob.len() as u64;
-                let msg = wire::decode_message(&mut blob.as_slice())?;
-                Ok((msg, wire_bytes))
+                let mut delivered = 0usize;
+                let mut discard = false;
+                decode_blob_entries(blob.as_slice(), &mut |i, e| {
+                    let flow = (self.on_entry)(i, e)?;
+                    delivered = i + 1;
+                    if flow == EntryFlow::Discard {
+                        discard = true;
+                    }
+                    Ok(flow)
+                })?;
+                Ok((wire_bytes, delivered, discard))
             }
-            WeightsStorage::Container {
-                plain,
-                quant,
-                saw_plain,
-                saw_quant,
-                wire_bytes,
-                bufs,
-                ..
-            } => {
-                if bufs.iter().any(|b| b.is_some()) {
+            EntryStorage::Container { bufs } => {
+                if !self.discard && bufs.iter().any(|b| b.is_some()) {
                     bail!("container transfer has unparsed units");
                 }
-                if saw_plain && saw_quant {
-                    bail!("mixed entry kinds in container stream");
-                }
-                let msg = if saw_quant {
-                    WeightsMsg::Quantized(quant)
-                } else {
-                    WeightsMsg::Plain(plain)
-                };
-                Ok((msg, wire_bytes))
+                Ok((self.wire_bytes, self.delivered, self.discard))
             }
-            WeightsStorage::File { sink } => {
+            EntryStorage::File { sink } => {
                 if !sink.finished() {
                     bail!("file transfer incomplete");
                 }
                 let path = sink.dest().to_path_buf();
-                let msg = read_spool(&path)?;
                 let wire_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                let result = read_spool_entries(&path, self.on_entry);
                 std::fs::remove_file(&path).ok();
-                Ok((msg, wire_bytes))
+                let (delivered, discarded) = result?;
+                Ok((wire_bytes, delivered, discarded))
             }
         }
     }
 }
 
-impl UnitSink for WeightsSink {
+impl<'a> UnitSink for EntryStreamSink<'a> {
     fn start(&mut self, descriptor: &Json) -> Result<()> {
         let mode = descriptor
             .get("mode")
@@ -587,19 +706,12 @@ impl UnitSink for WeightsSink {
             .and_then(StreamingMode::from_name)
             .ok_or_else(|| anyhow!("resumable descriptor missing mode"))?;
         self.storage = match mode {
-            StreamingMode::Regular => WeightsStorage::Regular {
+            StreamingMode::Regular => EntryStorage::Regular {
                 buf: None,
                 crc: 0,
                 done: false,
             },
-            StreamingMode::Container => WeightsStorage::Container {
-                bufs: Vec::new(),
-                plain: ParamContainer::new(),
-                quant: QuantizedContainer::default(),
-                saw_plain: false,
-                saw_quant: false,
-                wire_bytes: 0,
-            },
+            StreamingMode::Container => EntryStorage::Container { bufs: Vec::new() },
             StreamingMode::File => {
                 let dir = self
                     .spool_dir
@@ -619,7 +731,7 @@ impl UnitSink for WeightsSink {
                     "flare_rx_resume_{}_{seq}.bin",
                     std::process::id()
                 ));
-                WeightsStorage::File {
+                EntryStorage::File {
                     sink: FileSink::new(&dest),
                 }
             }
@@ -635,9 +747,15 @@ impl UnitSink for WeightsSink {
         crc: u32,
         chunk: u64,
     ) -> Result<ChunkTable> {
+        // Random-access reassembly must allocate the full declared unit
+        // up front, so the declared length is validated against the hard
+        // cap first — a corrupt u64 cannot drive the allocation.
+        if len > MAX_WIRE_ALLOC {
+            bail!("declared unit size {len} exceeds cap {MAX_WIRE_ALLOC}");
+        }
         match &mut self.storage {
-            WeightsStorage::Unset => bail!("unit before descriptor"),
-            WeightsStorage::Regular { buf, crc: c, .. } => {
+            EntryStorage::Unset => bail!("unit before descriptor"),
+            EntryStorage::Regular { buf, crc: c, .. } => {
                 if i != 0 {
                     bail!("regular transfers carry exactly one unit (got {i})");
                 }
@@ -648,8 +766,11 @@ impl UnitSink for WeightsSink {
                 *c = crc;
                 Ok(ChunkTable::new(len, chunk))
             }
-            WeightsStorage::Container { bufs, .. } => {
+            EntryStorage::Container { bufs } => {
                 if bufs.len() <= i {
+                    if i > 1_000_000 {
+                        bail!("unit index {i} unreasonable");
+                    }
                     bufs.resize_with(i + 1, || None);
                 }
                 bufs[i] = Some(ContainerUnit {
@@ -659,20 +780,20 @@ impl UnitSink for WeightsSink {
                 });
                 Ok(ChunkTable::new(len, chunk))
             }
-            WeightsStorage::File { sink } => sink.start_unit(i, meta, len, crc, chunk),
+            EntryStorage::File { sink } => sink.start_unit(i, meta, len, crc, chunk),
         }
     }
 
     fn write_at(&mut self, i: usize, offset: u64, data: &[u8]) -> Result<()> {
         match &mut self.storage {
-            WeightsStorage::Unset => bail!("chunk before descriptor"),
-            WeightsStorage::Regular { buf, .. } => {
+            EntryStorage::Unset => bail!("chunk before descriptor"),
+            EntryStorage::Regular { buf, .. } => {
                 let b = buf.as_mut().ok_or_else(|| anyhow!("chunk before unit"))?;
                 let off = offset as usize;
                 b.as_mut_vec()[off..off + data.len()].copy_from_slice(data);
                 Ok(())
             }
-            WeightsStorage::Container { bufs, .. } => {
+            EntryStorage::Container { bufs } => {
                 let u = bufs
                     .get_mut(i)
                     .and_then(|x| x.as_mut())
@@ -681,14 +802,14 @@ impl UnitSink for WeightsSink {
                 u.buf_mut().as_mut_vec()[off..off + data.len()].copy_from_slice(data);
                 Ok(())
             }
-            WeightsStorage::File { sink } => sink.write_at(i, offset, data),
+            EntryStorage::File { sink } => sink.write_at(i, offset, data),
         }
     }
 
     fn finish_unit(&mut self, i: usize) -> Result<()> {
         match &mut self.storage {
-            WeightsStorage::Unset => bail!("finish before descriptor"),
-            WeightsStorage::Regular { buf, crc, done } => {
+            EntryStorage::Unset => bail!("finish before descriptor"),
+            EntryStorage::Regular { buf, crc, done } => {
                 let b = buf.as_ref().ok_or_else(|| anyhow!("finish before unit"))?;
                 let actual = crc32fast::hash(b.as_slice());
                 if actual != *crc {
@@ -697,14 +818,7 @@ impl UnitSink for WeightsSink {
                 *done = true;
                 Ok(())
             }
-            WeightsStorage::Container {
-                bufs,
-                plain,
-                quant,
-                saw_plain,
-                saw_quant,
-                wire_bytes,
-            } => {
+            EntryStorage::Container { bufs } => {
                 let mut u = bufs
                     .get_mut(i)
                     .and_then(|x| x.take())
@@ -715,28 +829,29 @@ impl UnitSink for WeightsSink {
                 if actual != want_crc {
                     bail!("entry {i} crc mismatch");
                 }
-                *wire_bytes += b.len() as u64;
+                self.wire_bytes += b.len() as u64;
+                if self.discard {
+                    return Ok(());
+                }
+                // Decode + deliver immediately — the unit's tracked buffer
+                // is released before the next unit completes, so the
+                // resumable container bound holds: O(entry) per message
+                // plus the small NACK-recovery window.
                 let entry = wire::read_entry(&mut b.as_slice())?;
-                drop(u); // release the comm buffer before the next entry
-                match entry {
-                    Entry::Plain(name, t) => {
-                        *saw_plain = true;
-                        plain.insert(name, t);
-                    }
-                    Entry::Quantized(name, q) => {
-                        *saw_quant = true;
-                        quant.entries.push((name, q));
-                    }
+                drop(u);
+                self.delivered += 1;
+                if (self.on_entry)(i, entry)? == EntryFlow::Discard {
+                    self.discard = true;
                 }
                 Ok(())
             }
-            WeightsStorage::File { sink } => sink.finish_unit(i),
+            EntryStorage::File { sink } => sink.finish_unit(i),
         }
     }
 
     fn checkpoint(&mut self, i: usize, table: &ChunkTable) -> Result<()> {
         match &mut self.storage {
-            WeightsStorage::File { sink } => sink.checkpoint(i, table),
+            EntryStorage::File { sink } => sink.checkpoint(i, table),
             _ => Ok(()), // in-memory storage resumes only within the link
         }
     }
@@ -764,14 +879,25 @@ fn send_regular(ep: &SfmEndpoint, msg: &WeightsMsg) -> Result<TransferStats> {
     })
 }
 
-fn recv_regular(ep: &SfmEndpoint, descriptor: &Json) -> Result<(WeightsMsg, TransferStats)> {
+fn recv_regular_entries(
+    ep: &SfmEndpoint,
+    descriptor: &Json,
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<TransferStats> {
     let total = descriptor
         .get("total_bytes")
         .and_then(|j| j.as_u64())
         .unwrap_or(0);
+    if total > MAX_WIRE_ALLOC {
+        bail!("declared message size {total} exceeds cap {MAX_WIRE_ALLOC}");
+    }
     // Reassembly buffer for the whole message (the receive-side cost of
-    // regular transmission).
-    let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, total as usize);
+    // regular transmission — entries still *decode* one at a time below,
+    // so no second whole-message container materializes). The descriptor
+    // size is only a preallocation *hint*: the buffer grows with the
+    // chunks that actually arrive, so a lying descriptor cannot force a
+    // multi-GB reservation.
+    let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, (total as usize).min(PREALLOC_CAP));
     loop {
         match ep.recv_event(None)? {
             Event::UnitStart { .. } => {}
@@ -787,13 +913,39 @@ fn recv_regular(ep: &SfmEndpoint, descriptor: &Json) -> Result<(WeightsMsg, Tran
             }
         }
     }
-    let msg = wire::decode_message(&mut blob.as_slice())?;
-    let stats = TransferStats {
-        wire_bytes: blob.len() as u64,
-        entries: msg.n_entries(),
+    let wire_bytes = blob.len() as u64;
+    let entries = decode_blob_entries(blob.as_slice(), on_entry)?;
+    Ok(TransferStats {
+        wire_bytes,
+        entries,
         ..Default::default()
-    };
-    Ok((msg, stats))
+    })
+}
+
+/// Decode a serialized whole message entry-by-entry into the callback.
+fn decode_blob_entries(
+    blob: &[u8],
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<usize> {
+    let mut r = blob;
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != wire::MSG_MAGIC {
+        bail!("bad weights-message magic {magic:#x}");
+    }
+    let count = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    if count > 1_000_000 {
+        bail!("entry count {count} unreasonable");
+    }
+    for i in 0..count {
+        let e = wire::read_entry(&mut r)?;
+        if on_entry(i, e)? == EntryFlow::Discard {
+            // Whole blob already in memory: nothing further to drain.
+            return Ok(i + 1);
+        }
+    }
+    Ok(count)
 }
 
 // -- container ----------------------------------------------------------------
@@ -824,18 +976,33 @@ fn send_container(ep: &SfmEndpoint, msg: &WeightsMsg) -> Result<TransferStats> {
     })
 }
 
-fn recv_container(ep: &SfmEndpoint, desc: &Json) -> Result<(WeightsMsg, TransferStats)> {
+fn recv_container_entries(
+    ep: &SfmEndpoint,
+    desc: &Json,
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<TransferStats> {
     let n = desc.get("entries").and_then(|j| j.as_usize()).unwrap_or(0);
-    let mut plain = ParamContainer::new();
-    let mut quant = QuantizedContainer::default();
-    let mut saw_quant = false;
-    let mut saw_plain = false;
+    let mut delivered = 0usize;
+    let mut discard = false;
     let mut wire_bytes = 0u64;
     let mut unit_buf: Option<TrackedBuf> = None;
+    let mut unit_idx = 0usize;
+    let mut next_idx = 0usize;
     loop {
         match ep.recv_event(None)? {
             Event::UnitStart { descriptor, .. } => {
-                let bytes = descriptor.get("bytes").and_then(|j| j.as_usize()).unwrap_or(0);
+                // Preallocation hint only — the unit buffer grows with
+                // the data that actually arrives.
+                let bytes = descriptor
+                    .get("bytes")
+                    .and_then(|j| j.as_usize())
+                    .unwrap_or(0)
+                    .min(PREALLOC_CAP);
+                unit_idx = descriptor
+                    .get("index")
+                    .and_then(|j| j.as_usize())
+                    .unwrap_or(next_idx);
+                next_idx = unit_idx + 1;
                 unit_buf = Some(TrackedBuf::with_capacity(&COMM_GAUGE, bytes));
             }
             Event::Chunk { bytes, last, .. } => {
@@ -847,16 +1014,15 @@ fn recv_container(ep: &SfmEndpoint, desc: &Json) -> Result<(WeightsMsg, Transfer
                 if last {
                     let blob = unit_buf.take().unwrap();
                     wire_bytes += blob.len() as u64;
-                    let entry = wire::read_entry(&mut blob.as_slice())?;
-                    drop(blob); // release the comm buffer before the next entry
-                    match entry {
-                        Entry::Plain(name, t) => {
-                            saw_plain = true;
-                            plain.insert(name, t);
-                        }
-                        Entry::Quantized(name, q) => {
-                            saw_quant = true;
-                            quant.entries.push((name, q));
+                    if !discard {
+                        // Decode ONE entry and hand it off before the next
+                        // unit's bytes arrive — the container-streaming
+                        // memory bound.
+                        let entry = wire::read_entry(&mut blob.as_slice())?;
+                        drop(blob); // release the comm buffer first
+                        delivered += 1;
+                        if on_entry(unit_idx, entry)? == EntryFlow::Discard {
+                            discard = true;
                         }
                     }
                 }
@@ -869,31 +1035,19 @@ fn recv_container(ep: &SfmEndpoint, desc: &Json) -> Result<(WeightsMsg, Transfer
             }
         }
     }
-    if saw_plain && saw_quant {
-        bail!("mixed entry kinds in container stream");
+    if !discard && delivered != n {
+        bail!("container stream delivered {delivered} of {n} entries");
     }
-    let msg = if saw_quant {
-        WeightsMsg::Quantized(quant)
-    } else {
-        WeightsMsg::Plain(plain)
-    };
-    let entries = msg.n_entries();
-    if entries != n {
-        bail!("container stream delivered {entries} of {n} entries");
-    }
-    Ok((
-        msg,
-        TransferStats {
-            wire_bytes,
-            entries,
-            ..Default::default()
-        },
-    ))
+    Ok(TransferStats {
+        wire_bytes,
+        entries: delivered,
+        ..Default::default()
+    })
 }
 
 // -- file ---------------------------------------------------------------------
 
-fn spool_path(dir: &Path, tag: &str) -> PathBuf {
+pub(crate) fn spool_path(dir: &Path, tag: &str) -> PathBuf {
     // Process id + atomic sequence: concurrent session workers spool
     // into the same directory, so a timestamp alone could collide.
     static SPOOL_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
@@ -1020,16 +1174,52 @@ pub fn recv_file_resumable(
     Ok(stats)
 }
 
-fn recv_file_mode(ep: &SfmEndpoint, desc: &Json, dir: &Path) -> Result<(WeightsMsg, TransferStats)> {
+fn recv_file_entries(
+    ep: &SfmEndpoint,
+    desc: &Json,
+    dir: &Path,
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<TransferStats> {
     let path = spool_path(dir, "rx");
     let stats = recv_file(ep, &path)?;
-    let msg = read_spool(&path)?;
-    std::fs::remove_file(&path).ok();
     let n = desc.get("entries").and_then(|j| j.as_usize()).unwrap_or(0);
-    if msg.n_entries() != n {
-        bail!("file stream delivered {} of {n} entries", msg.n_entries());
+    let result = read_spool_entries(&path, on_entry);
+    std::fs::remove_file(&path).ok();
+    let (delivered, discarded) = result?;
+    if !discarded && delivered != n {
+        bail!("file stream delivered {delivered} of {n} entries");
     }
-    Ok((msg, stats))
+    Ok(TransferStats {
+        entries: delivered,
+        ..stats
+    })
+}
+
+/// Iterate a spool file's entries (O(entry) memory). Returns
+/// `(delivered, discarded)`.
+fn read_spool_entries(
+    path: &Path,
+    on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+) -> Result<(usize, bool)> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::with_capacity(256 * 1024, f);
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    if magic != wire::MSG_MAGIC {
+        bail!("bad spool magic {magic:#x}");
+    }
+    let count = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    if count > 1_000_000 {
+        bail!("entry count {count} unreasonable");
+    }
+    for i in 0..count {
+        let e = wire::read_entry(&mut r)?;
+        if on_entry(i, e)? == EntryFlow::Discard {
+            return Ok((i + 1, true));
+        }
+    }
+    Ok((count, false))
 }
 
 /// Receive a file-mode stream directly to disk — O(chunk) memory.
@@ -1164,6 +1354,7 @@ mod tests {
     fn memory_bounds_ordering() {
         // The paper's Fig. 3 claim, as an exact accounting assertion:
         // peak comm-buffer bytes regular > container > file.
+        let _guard = crate::memory::GAUGE_TEST_LOCK.lock().unwrap();
         let dir = std::env::temp_dir();
         let mut peaks = Vec::new();
         for mode in [StreamingMode::Regular, StreamingMode::Container, StreamingMode::File] {
@@ -1244,6 +1435,7 @@ mod tests {
     fn resumable_container_memory_bound_holds() {
         // Out-of-order capable receive must not regress the container
         // memory bound on a clean (in-order) link: one entry at a time.
+        let _guard = crate::memory::GAUGE_TEST_LOCK.lock().unwrap();
         let (a, b) = endpoints();
         let dir = std::env::temp_dir();
         let msg = mini_msg();

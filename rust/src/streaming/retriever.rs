@@ -13,8 +13,8 @@
 //! (same `dest` for files), and receives only the chunks its `.part`
 //! manifest is missing.
 
-use super::object::{self, TransferStats};
-use super::wire::WeightsMsg;
+use super::object::{self, EntryFlow, TransferStats};
+use super::wire::{Entry, WeightsMsg};
 use crate::config::StreamingMode;
 use crate::sfm::{ResumePolicy, SfmEndpoint};
 use crate::util::json::Json;
@@ -178,6 +178,19 @@ impl<'a> ObjectRetriever<'a> {
         object::recv_weights_resumable(self.ep, self.spool_dir.as_deref(), self.timeout)
     }
 
+    /// Retrieve weights entry-by-entry: each `(index, entry)` is handed
+    /// to the callback as its frames complete, so the consumer never
+    /// holds the whole decoded message — integration code can load
+    /// tensors into its own storage (device memory, mmap) one at a time.
+    pub fn retrieve_entries(
+        &self,
+        id: &str,
+        on_entry: &mut dyn FnMut(usize, Entry) -> Result<EntryFlow>,
+    ) -> Result<TransferStats> {
+        self.request(id, false)?;
+        object::recv_weights_entries(self.ep, self.spool_dir.as_deref(), on_entry)
+    }
+
     /// Retrieve a file object into `dest` over the resumable protocol.
     /// On a broken connection the partial state survives as
     /// `<dest>.part` + manifest; calling this again (on a fresh
@@ -264,6 +277,37 @@ mod tests {
         assert_eq!(std::fs::read(&dest).unwrap(), payload);
         std::fs::remove_file(&src).ok();
         std::fs::remove_file(&dest).ok();
+    }
+
+    #[test]
+    fn retrieve_entries_streams_in_container_order() {
+        let (server_ep, client_ep) = endpoints();
+        let msg = WeightsMsg::Plain(materialize(&ModelSpec::llama_mini(), 57));
+        let want = msg.clone();
+        let server = std::thread::spawn(move || {
+            let store = ObjectStore::new(None);
+            store.register("w", StoredObject::Weights(msg, StreamingMode::Container));
+            store.serve_one(&server_ep, Some(Duration::from_secs(10))).unwrap()
+        });
+        let retriever = ObjectRetriever::new(&client_ep, None);
+        let mut seen = Vec::new();
+        let stats = retriever
+            .retrieve_entries("w", &mut |i, e| {
+                seen.push((i, e.name().to_string()));
+                Ok(EntryFlow::Continue)
+            })
+            .unwrap();
+        assert_eq!(server.join().unwrap(), "w");
+        let want_names: Vec<String> = match &want {
+            WeightsMsg::Plain(c) => c.names().to_vec(),
+            _ => unreachable!(),
+        };
+        assert_eq!(seen.len(), want_names.len());
+        for (i, (idx, name)) in seen.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(name, &want_names[i]);
+        }
+        assert_eq!(stats.entries, want_names.len());
     }
 
     #[test]

@@ -183,9 +183,17 @@ pub fn write_entry<W: Write>(w: &mut W, e: &Entry) -> Result<()> {
     Ok(())
 }
 
+/// Read exactly `n` bytes, growing the buffer incrementally. A corrupt
+/// length prefix therefore fails at end-of-input having allocated only
+/// what the stream actually held — it can never request a multi-GB
+/// `Vec` up front from a 100-byte frame.
 fn read_exact_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
-    let mut v = vec![0u8; n];
-    r.read_exact(&mut v)?;
+    const STEP: usize = 1 << 20;
+    let mut v = Vec::with_capacity(n.min(STEP));
+    let got = r.take(n as u64).read_to_end(&mut v)?;
+    if got != n {
+        bail!("truncated input: wanted {n} bytes, stream held {got}");
+    }
     Ok(v)
 }
 
@@ -223,8 +231,16 @@ fn read_f32_vec<R: Read>(r: &mut R, n: usize, cap: usize) -> Result<Vec<f32>> {
 
 /// Maximum sane tensor payload (guards corrupt lengths): 16 GiB.
 const MAX_PAYLOAD: u64 = 16 << 30;
+/// Maximum logical elements a single entry may declare (shape product).
+const MAX_ELEMS: u64 = MAX_PAYLOAD / 4;
 
 /// Deserialize one entry from a reader.
+///
+/// Every wire-declared count is validated against what the header itself
+/// implies *before* the corresponding bytes are read, and all reads are
+/// incremental — no declared length can drive an allocation larger than
+/// the data actually present. Corrupt or hostile input yields `Err`,
+/// never a panic or an OOM.
 pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
     let name_len = read_u16(r)? as usize;
     let name = String::from_utf8(read_exact_vec(r, name_len)?)
@@ -235,15 +251,26 @@ pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
         bail!("{name}: rank {rank} too large");
     }
     let mut shape = Vec::with_capacity(rank);
+    let mut elems: u64 = 1;
     for _ in 0..rank {
         let d = read_u64(r)?;
         if d > u32::MAX as u64 {
             bail!("{name}: dimension {d} too large");
         }
+        elems = elems.saturating_mul(d);
         shape.push(d as usize);
     }
+    if elems > MAX_ELEMS {
+        bail!("{name}: {elems} elements exceed cap {MAX_ELEMS}");
+    }
+    let elems = elems as usize;
     let block_size = read_u32(r)? as usize;
     let absmax_n = read_u32(r)? as usize;
+    // Each absmax covers a block of >= 1 element, so more scales than
+    // elements is structurally impossible.
+    if absmax_n > elems {
+        bail!("{name}: absmax count {absmax_n} exceeds {elems} elements");
+    }
     let absmax = read_f32_vec(r, absmax_n, 1 << 28)?;
     let codebook_n = read_u32(r)? as usize;
     let codebook = read_f32_vec(r, codebook_n, 4096)?;
@@ -251,20 +278,28 @@ pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
     if payload_len > MAX_PAYLOAD {
         bail!("{name}: payload length {payload_len} exceeds cap");
     }
-    let payload = read_exact_vec(r, payload_len as usize)?;
-
-    let elems: usize = shape.iter().product();
+    // The expected payload size is a pure function of the header (shape +
+    // scheme): check the declared length against it *before* reading, so
+    // a lying prefix cannot even start a mismatched read.
+    let expect = if kind == 0 {
+        elems * 4
+    } else {
+        crate::quant::payload_dtype(scheme_from_id(kind)?)?.size_of_elems(elems)
+    };
+    if payload_len != expect as u64 {
+        bail!(
+            "{name}: payload length {payload_len} inconsistent with shape ({expect} expected)"
+        );
+    }
     if kind == 0 {
-        if payload.len() != elems * 4 {
-            bail!("{name}: f32 payload size mismatch");
+        if block_size != 0 || absmax_n != 0 || codebook_n != 0 {
+            bail!("{name}: plain entry carries quantization metadata");
         }
+        let payload = read_exact_vec(r, payload_len as usize)?;
         Ok(Entry::Plain(name, Tensor::new(shape, DType::F32, payload)))
     } else {
         let scheme = scheme_from_id(kind)?;
-        let expect = crate::quant::payload_dtype(scheme)?.size_of_elems(elems);
-        if payload.len() != expect {
-            bail!("{name}: quantized payload size mismatch ({} vs {expect})", payload.len());
-        }
+        let payload = read_exact_vec(r, payload_len as usize)?;
         Ok(Entry::Quantized(
             name,
             QuantizedTensor {
@@ -666,6 +701,72 @@ mod tests {
         )
         .unwrap();
         assert!(decode_message(&mut buf.as_slice()).is_err());
+    }
+
+    /// Hand-build an entry header with attacker-controlled counts.
+    fn hostile_entry(
+        rank: usize,
+        dims: &[u64],
+        kind: u8,
+        block_size: u32,
+        absmax_n: u32,
+        codebook_n: u32,
+        payload_len: u64,
+        trailing: &[u8],
+    ) -> Vec<u8> {
+        let mut buf = Vec::new();
+        b::put_u16(&mut buf, 1);
+        buf.push(b'w');
+        buf.push(kind);
+        buf.push(rank as u8);
+        for &d in dims {
+            b::put_u64(&mut buf, d);
+        }
+        b::put_u32(&mut buf, block_size);
+        b::put_u32(&mut buf, absmax_n);
+        b::put_u32(&mut buf, codebook_n);
+        b::put_u64(&mut buf, payload_len);
+        buf.extend_from_slice(trailing);
+        buf
+    }
+
+    #[test]
+    fn oversized_declared_counts_rejected() {
+        // A 4-element f32 tensor claiming a multi-GB absmax table: the
+        // count exceeds the element count, rejected before any read.
+        let buf = hostile_entry(1, &[4], 5, 64, 0x4000_0000, 0, 2, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Payload length inconsistent with the declared shape.
+        let buf = hostile_entry(1, &[4], 0, 0, 0, 0, u32::MAX as u64, &[0u8; 64]);
+        let err = read_entry(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("inconsistent with shape"), "{err}");
+
+        // Shape product overflow / beyond the element cap.
+        let buf = hostile_entry(2, &[u32::MAX as u64, u32::MAX as u64], 0, 0, 0, 0, 16, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Plain entry smuggling quantization metadata.
+        let buf = hostile_entry(1, &[1], 0, 64, 1, 0, 4, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Codebook beyond the 4096-entry cap.
+        let buf = hostile_entry(1, &[8192], 3, 4096, 2, 60_000, 8192, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_after_honest_header_rejected() {
+        // An honest header whose payload bytes never arrive: the read
+        // fails at end-of-input instead of blocking or panicking, and the
+        // incremental reader only ever allocated what the stream held.
+        let t = Tensor::from_f32(vec![1024], vec![0.5; 1024]);
+        let mut buf = Vec::new();
+        write_entry(&mut buf, &Entry::Plain("w".into(), t)).unwrap();
+        for cut in [buf.len() - 1, buf.len() - 4096, 10, 3] {
+            let short = &buf[..cut];
+            assert!(read_entry(&mut &short[..]).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

@@ -79,6 +79,22 @@ impl ParamContainer {
         Some(t)
     }
 
+    /// A container with the same names/shapes/order and all-zero f32
+    /// values — the pre-seeded skeleton the entry-streamed fold
+    /// accumulates into (entries can then arrive in any order without
+    /// disturbing container order).
+    pub fn zeros_like(other: &ParamContainer) -> ParamContainer {
+        other
+            .iter()
+            .map(|(n, t)| {
+                (
+                    n.to_string(),
+                    Tensor::zeros(t.meta.shape.clone(), DType::F32),
+                )
+            })
+            .collect()
+    }
+
     /// Total payload bytes across all tensors (no metadata).
     pub fn total_bytes(&self) -> u64 {
         self.tensors.iter().map(|t| t.byte_len() as u64).sum()

@@ -1,0 +1,242 @@
+//! Table III-style memory bounds for the entry-streamed gather.
+//!
+//! Two probes, mirroring `rust/src/memory`:
+//! * exact accounting via `COMM_GAUGE` — every transmission-path buffer
+//!   (wire chunks, entry reassembly, dequantize scratch, updates
+//!   buffered for the fold frontier) is registered, so the bounds are
+//!   asserted deterministically;
+//! * process RSS sampling (`memory::rss`), the methodology the paper's
+//!   Table III reports.
+//!
+//! The measured scenario is the issue's acceptance case: 8 concurrent
+//! nf4-quantized clients on faulted links. The whole-container baseline
+//! buffers every in-flight update (O(model × sessions)); the
+//! entry-streamed fold must stay within
+//! `k × max_entry_bytes × sessions` and beat the baseline's peak by ≥2×.
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{FaultProfile, JobConfig, QuantScheme, RoundPolicy, StreamingMode, TrainConfig};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::memory::{rss, COMM_GAUGE};
+use flare::metrics::Report;
+use flare::sfm::{inmem, netsim, SfmEndpoint};
+use flare::tensor::init::materialize;
+use flare::tensor::ParamContainer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// COMM_GAUGE and RSS are process-global; measurements must not overlap.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// ~540 KB fp32 model; largest entry is the 64 KB d_ff projection.
+fn spec() -> ModelSpec {
+    ModelSpec::llama(
+        "membound-tiny",
+        LlamaDims {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            untied_head: true,
+        },
+    )
+}
+
+struct GatherRun {
+    peak_comm: u64,
+    rss_peak_delta: i64,
+    global: ParamContainer,
+}
+
+/// One federated round: `clients` concurrent nf4 sessions over faulted
+/// reliable links, entry-streamed or whole-container per `entry_fold`.
+fn run_gather(clients: usize, entry_fold: bool, faulted: bool) -> GatherRun {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let spool = std::env::temp_dir().join(format!(
+        "flare_membound_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&spool).unwrap();
+    let spec = spec();
+    let initial = materialize(&spec, 11);
+    let job = JobConfig {
+        name: "membound".into(),
+        model: "llama-mini".into(), // unused by the mock path
+        clients,
+        rounds: 1,
+        quant: QuantScheme::Nf4,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 8 * 1024,
+        reliable: true,
+        entry_fold,
+        round_policy: RoundPolicy::default(),
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let fault = FaultProfile {
+        seed: 4242,
+        drop_rate: if faulted { 0.02 } else { 0.0 },
+        dup_rate: if faulted { 0.01 } else { 0.0 },
+        reorder_rate: if faulted { 0.02 } else { 0.0 },
+        ..FaultProfile::NONE
+    };
+
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+        .with_filter_factory(FilterSet::two_way_quantization_factory(job.quant));
+    let mut handles = Vec::new();
+    for i in 0..clients {
+        let mut pair = inmem::pair(4096);
+        if !fault.is_none() {
+            let (faulted_pair, _sa, _sb) = netsim::fault_pair(
+                pair,
+                fault.reseeded(2 * i as u64),
+                fault.reseeded(2 * i as u64 + 1),
+            );
+            pair = faulted_pair;
+        }
+        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
+        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
+        let target = materialize(&spec, 900 + i as u64);
+        let job_c = job.clone();
+        let spool_c = spool.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                client_ep,
+                FilterSet::two_way_quantization(job_c.quant),
+                MockTrainer::new(target, 0.3, 50 + i as u64),
+                spool_c,
+            )
+            .with_mode(job_c.streaming)
+            .with_reliable(job_c.reliable)
+            .with_entry_fold(job_c.entry_fold)
+            .with_timeout(job_c.transfer_timeout());
+            exec.register()?;
+            exec.run()
+        }));
+        controller
+            .accept_client(server_ep, Some(Duration::from_secs(30)))
+            .unwrap();
+    }
+
+    let rss_region = rss::RssRegion::start();
+    COMM_GAUGE.reset_peak();
+    let base = COMM_GAUGE.current();
+    let mut report = Report::new();
+    let global = controller
+        .run(initial, &mut report)
+        .expect("federated round failed");
+    let peak_comm = COMM_GAUGE.peak().saturating_sub(base);
+    let (_rss_peak, rss_delta) = rss_region.sample();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    std::fs::remove_dir_all(&spool).ok();
+    GatherRun {
+        peak_comm,
+        rss_peak_delta: rss_delta,
+        global,
+    }
+}
+
+/// Acceptance: with 8 concurrent faulted nf4 clients, the entry-streamed
+/// gather's tracked peak stays under `k × max_entry × sessions` and
+/// undercuts the whole-container baseline by ≥ 2×; both paths produce
+/// identical global weights.
+#[test]
+fn entry_streamed_gather_bounds_comm_memory() {
+    let _guard = SERIAL.lock().unwrap();
+    let clients = 8usize;
+    let spec = spec();
+    let max_entry = spec.max_param_bytes_f32();
+    let model_bytes = spec.total_bytes_f32();
+
+    let entry = run_gather(clients, true, true);
+    let buffered = run_gather(clients, false, true);
+
+    // Both pipelines agree bit-for-bit on the result.
+    assert_eq!(entry.global.max_abs_diff(&buffered.global), 0.0);
+
+    // The issue's bound: accumulator (untracked model containers) plus a
+    // small per-session multiple of the largest entry — dequantize
+    // scratch, one wire entry in reassembly, and the NACK-recovery
+    // window of partially received units.
+    let k = 6u64;
+    let bound = k * max_entry * clients as u64;
+    assert!(
+        entry.peak_comm < bound,
+        "entry-streamed peak {} exceeds {k} x max_entry x sessions = {bound}",
+        entry.peak_comm
+    );
+    // ...and far under sessions × model.
+    assert!(
+        entry.peak_comm < clients as u64 * model_bytes / 2,
+        "entry-streamed peak {} not << sessions x model {}",
+        entry.peak_comm,
+        clients as u64 * model_bytes
+    );
+
+    // The whole-container baseline buffers full fp32 updates while they
+    // wait for the fold frontier; the entry-streamed path must cut the
+    // tracked peak at least in half (in practice far more).
+    assert!(
+        entry.peak_comm * 2 <= buffered.peak_comm,
+        "expected >= 2x reduction: entry {} vs whole-container {}",
+        entry.peak_comm,
+        buffered.peak_comm
+    );
+    println!(
+        "peak comm bytes: entry-streamed {} vs whole-container {} ({}x reduction; bound {})",
+        entry.peak_comm,
+        buffered.peak_comm,
+        buffered.peak_comm / entry.peak_comm.max(1),
+        bound
+    );
+}
+
+/// RSS-sampled variant (Table III methodology). RSS is noisy — allocator
+/// reuse, test-runner state — so this asserts the coarse claim only: the
+/// entry-streamed gather's peak-RSS growth does not exceed the
+/// whole-container baseline's by more than slack, and on a clean meter
+/// (watermark reset supported, positive signal) it is strictly smaller.
+#[test]
+fn entry_streamed_gather_rss_variant() {
+    let _guard = SERIAL.lock().unwrap();
+    let clients = 8usize;
+
+    // Warm up allocator/thread pools so the measured runs reuse pages.
+    let _ = run_gather(clients, true, false);
+
+    let entry = run_gather(clients, true, false);
+    let buffered = run_gather(clients, false, false);
+
+    println!(
+        "rss peak delta: entry-streamed {} KB vs whole-container {} KB",
+        entry.rss_peak_delta / 1024,
+        buffered.rss_peak_delta / 1024
+    );
+    if entry.rss_peak_delta <= 0 || buffered.rss_peak_delta <= 0 {
+        // Watermark reset unsupported (non-Linux /proc) or the allocator
+        // absorbed everything: nothing meaningful to compare.
+        return;
+    }
+    let spec = spec();
+    let slack = spec.total_bytes_f32() as i64; // one model of noise
+    assert!(
+        entry.rss_peak_delta <= buffered.rss_peak_delta + slack,
+        "entry-streamed RSS {} should not exceed whole-container RSS {} + slack {}",
+        entry.rss_peak_delta,
+        buffered.rss_peak_delta,
+        slack
+    );
+}

@@ -119,6 +119,7 @@ fn run_manual(
             )
             .with_mode(job_c.streaming)
             .with_reliable(job_c.reliable)
+            .with_entry_fold(job_c.entry_fold)
             .with_timeout(job_c.transfer_timeout());
             exec.register()?;
             exec.run()
@@ -351,6 +352,180 @@ fn mid_round_disconnect_aborts_without_allow_partial() {
         msg.contains("failed in round 0"),
         "unexpected abort message: {msg}"
     );
+}
+
+/// Acceptance (entry-streamed fold): with the default policy and no
+/// faults, the entry-folded gather produces bit-identical global weights
+/// to both the direct FedAvg reference and the legacy whole-container
+/// path, across streaming modes and quantization schemes.
+#[test]
+fn entry_streamed_fold_is_bit_compatible() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 7);
+    let n = 4usize;
+    let targets: Vec<ParamContainer> = (0..n).map(|i| materialize(&spec, 700 + i as u64)).collect();
+    let samples = [100u64, 50, 75, 10];
+    let nets = vec![NetProfile::UNLIMITED; n];
+    let no_faults = vec![(FaultProfile::NONE, FaultProfile::NONE); n];
+
+    // Unquantized: the entry fold must equal the sequential FedAvg
+    // reference bit-for-bit, in every streaming mode.
+    for mode in [
+        StreamingMode::Regular,
+        StreamingMode::Container,
+        StreamingMode::File,
+    ] {
+        let mut job = base_job(n, RoundPolicy::default());
+        job.streaming = mode;
+        assert!(job.entry_fold, "entry fold is the default");
+        let r = run_manual(&job, &initial, &targets, &samples, &nets, &no_faults);
+        let global = r.outcome.expect("entry-folded run failed");
+        let all: Vec<usize> = (0..n).collect();
+        let expect = expected_fedavg(&initial, &targets, &samples, &all, job.train.local_steps);
+        assert_eq!(global.max_abs_diff(&expect), 0.0, "{mode:?}");
+        assert_eq!(global.names(), expect.names(), "{mode:?}");
+    }
+
+    // Quantized (nf4, container): entry-streamed quantize-on-serialize +
+    // entry fold must reproduce the whole-container pipeline exactly.
+    let mut job_entry = base_job(n, RoundPolicy::default());
+    job_entry.streaming = StreamingMode::Container;
+    job_entry.quant = QuantScheme::Nf4;
+    let mut job_buffered = job_entry.clone();
+    job_buffered.entry_fold = false;
+    let a = run_manual(&job_entry, &initial, &targets, &samples, &nets, &no_faults);
+    let b = run_manual(&job_buffered, &initial, &targets, &samples, &nets, &no_faults);
+    let ga = a.outcome.expect("entry-folded nf4 run failed");
+    let gb = b.outcome.expect("buffered nf4 run failed");
+    assert_eq!(ga.max_abs_diff(&gb), 0.0, "entry vs whole-container pipeline");
+    assert_eq!(ga.names(), gb.names());
+}
+
+/// Reshapes its first result tensor (same data, different shape) when
+/// malicious; passes through otherwise.
+struct ShapeTrainer {
+    inner: MockTrainer,
+    malicious: bool,
+}
+
+impl LocalTrainer for ShapeTrainer {
+    fn train(
+        &mut self,
+        w: &ParamContainer,
+        steps: usize,
+        round: usize,
+    ) -> anyhow::Result<(ParamContainer, Vec<f32>)> {
+        let (mut out, losses) = self.inner.train(w, steps, round)?;
+        if self.malicious {
+            let name = out.names()[0].clone();
+            let t = out.get(&name).unwrap().clone();
+            let n = t.elems();
+            out.insert(
+                name,
+                flare::tensor::Tensor::from_f32(vec![1, n], t.as_f32().to_vec()),
+            );
+        }
+        Ok((out, losses))
+    }
+
+    fn n_samples(&self) -> u64 {
+        self.inner.n_samples()
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn run_with_malicious_client(
+    initial: &ParamContainer,
+    targets: &[ParamContainer],
+    samples: &[u64],
+    allow_partial: bool,
+) -> (anyhow::Result<ParamContainer>, Vec<anyhow::Result<usize>>) {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let spool = std::env::temp_dir().join(format!(
+        "flare_malicious_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&spool).unwrap();
+    let mut job = base_job(
+        3,
+        RoundPolicy {
+            allow_partial,
+            min_clients: if allow_partial { 2 } else { 0 },
+            ..RoundPolicy::default()
+        },
+    );
+    job.streaming = StreamingMode::Container;
+    job.transfer_timeout_secs = 2;
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone());
+    let mut handles = Vec::new();
+    for i in 0..3usize {
+        let pair = inmem::pair(4096);
+        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
+        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
+        let target = targets[i].clone();
+        let n_samples = samples[i];
+        let job_c = job.clone();
+        let spool_c = spool.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let trainer = ShapeTrainer {
+                inner: MockTrainer::new(target, 0.3, n_samples),
+                malicious: i == 2,
+            };
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                client_ep,
+                FilterSet::new(),
+                trainer,
+                spool_c,
+            )
+            .with_mode(job_c.streaming)
+            .with_timeout(job_c.transfer_timeout());
+            exec.register()?;
+            exec.run()
+        }));
+        controller
+            .accept_client(server_ep, Some(Duration::from_secs(30)))
+            .unwrap();
+    }
+    let mut report = Report::new();
+    let outcome = controller.run(initial.clone(), &mut report);
+    let results = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked"))
+        .collect();
+    (outcome, results)
+}
+
+/// Wire-reachable malicious input: a client ships a same-named tensor
+/// with a different shape. The round must surface a clean per-session
+/// error — quarantining the client, never panicking — and with
+/// `allow_partial` the survivors' round completes bit-exactly.
+#[test]
+fn malicious_shape_is_quarantined_not_a_panic() {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 8);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 800 + i as u64)).collect();
+    let samples = [100u64, 50, 75];
+
+    // Abort-on-failure: clean Err naming the mismatch, no panic.
+    let (outcome, results) = run_with_malicious_client(&initial, &targets, &samples, false);
+    let err = outcome.expect_err("malicious shape must fail the round");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("shape") || msg.contains("does not match"),
+        "error should name the shape mismatch: {msg}"
+    );
+    assert!(results[2].is_err(), "malicious client's session must error");
+
+    // allow_partial: the malicious client is quarantined before anything
+    // of its stream folds (the mismatch is its first entry), and the
+    // survivors' aggregate equals the two-client FedAvg bit-for-bit.
+    let (outcome, results) = run_with_malicious_client(&initial, &targets, &samples, true);
+    let global = outcome.expect("survivors' round must complete");
+    let expect = expected_fedavg(&initial, &targets, &samples, &[0, 1], 3);
+    assert_eq!(global.max_abs_diff(&expect), 0.0);
+    assert!(results[2].is_err());
 }
 
 /// A client past the round deadline is abandoned as a straggler: the

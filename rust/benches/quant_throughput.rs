@@ -1,21 +1,57 @@
-//! P1 — codec throughput: encode/decode MB/s per scheme. The message-
-//! processing hot path of the whole system (every weight byte crosses a
-//! codec twice per round), hence the §Perf optimization target.
+//! P1 — codec throughput: encode/decode MB/s per scheme, scalar
+//! reference vs the chunk-parallel pooled kernels across thread counts.
+//! The message-processing hot path of the whole system (every weight
+//! byte crosses a codec twice per round), hence the §Perf optimization
+//! target; the acceptance bar is >= 2x encode MB/s at 4 threads over the
+//! scalar baseline.
+//!
+//! Run: `cargo bench --bench quant_throughput` (plain binary).
+//! CI runs `--smoke` (small input, single iteration) to keep the
+//! BENCH_JSON output compilable and parseable.
+//!
+//! Each measurement prints one machine-readable line:
+//! `BENCH_JSON {"bench":"quant_throughput","scheme":...,"threads":...}`
+//! with `threads = 0` denoting the scalar reference row.
 
 use flare::config::QuantScheme;
-use flare::quant::{dequantize, quantize};
+use flare::quant::{
+    dequantize_into_scalar, dequantize_into_with, quantize_scalar, quantize_with_threads,
+};
 use flare::tensor::Tensor;
 use flare::util::bench::{bench, print_table};
+use flare::util::json::Json;
 use flare::util::rng::SplitMix64;
 
+struct Row {
+    scheme: &'static str,
+    threads: usize, // 0 = scalar reference
+    enc_mb_s: f64,
+    dec_mb_s: f64,
+}
+
+fn bench_json(r: &Row) {
+    let j = Json::obj(vec![
+        ("bench", Json::str("quant_throughput")),
+        ("scheme", Json::str(r.scheme)),
+        ("threads", Json::num(r.threads as f64)),
+        ("enc_mb_s", Json::num(r.enc_mb_s)),
+        ("dec_mb_s", Json::num(r.dec_mb_s)),
+    ]);
+    println!("BENCH_JSON {j}");
+}
+
 fn main() {
-    let n = 16 << 20; // 64 MB of f32
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n: usize = if smoke { 1 << 20 } else { 16 << 20 }; // 4 / 64 MB fp32
+    let (warmup, iters) = if smoke { (0, 1) } else { (1, 3) };
     let mut rng = SplitMix64::new(3);
     let mut vals = vec![0f32; n];
     rng.fill_normal(&mut vals, 0.05);
     let t = Tensor::from_f32(vec![n], vals);
     let bytes = (n * 4) as u64;
-    let mut rows = Vec::new();
+    let thread_sweep: &[usize] = if smoke { &[2] } else { &[1, 2, 4, 8] };
+
+    let mut rows: Vec<Row> = Vec::new();
     for scheme in [
         QuantScheme::Fp16,
         QuantScheme::Bf16,
@@ -23,22 +59,94 @@ fn main() {
         QuantScheme::Fp4,
         QuantScheme::Nf4,
     ] {
-        let enc = bench(&format!("enc-{}", scheme.name()), 1, 3, || {
-            std::hint::black_box(quantize(scheme, &t).unwrap());
+        // Scalar reference (threads = 0 in the JSON rows).
+        let enc = bench(&format!("enc-scalar-{}", scheme.name()), warmup, iters, || {
+            std::hint::black_box(quantize_scalar(scheme, &t).unwrap());
         });
-        let q = quantize(scheme, &t).unwrap();
-        let dec = bench(&format!("dec-{}", scheme.name()), 1, 3, || {
-            std::hint::black_box(dequantize(&q).unwrap());
+        let q = quantize_scalar(scheme, &t).unwrap();
+        let dec = bench(&format!("dec-scalar-{}", scheme.name()), warmup, iters, || {
+            let mut out = Vec::with_capacity(n);
+            dequantize_into_scalar(&q, &mut out).unwrap();
+            std::hint::black_box(&out);
         });
-        rows.push(vec![
-            scheme.name().to_string(),
-            format!("{:.0}", enc.throughput_mb_s(bytes)),
-            format!("{:.0}", dec.throughput_mb_s(bytes)),
-        ]);
+        rows.push(Row {
+            scheme: scheme.name(),
+            threads: 0,
+            enc_mb_s: enc.throughput_mb_s(bytes),
+            dec_mb_s: dec.throughput_mb_s(bytes),
+        });
+
+        // Parallel pooled kernels across the thread sweep.
+        for &threads in thread_sweep {
+            let enc = bench(
+                &format!("enc-{}-t{}", scheme.name(), threads),
+                warmup,
+                iters,
+                || {
+                    let q = quantize_with_threads(scheme, &t, threads).unwrap();
+                    flare::quant::recycle(std::hint::black_box(q));
+                },
+            );
+            let dec = bench(
+                &format!("dec-{}-t{}", scheme.name(), threads),
+                warmup,
+                iters,
+                || {
+                    let mut out = flare::memory::pool::f32s(n);
+                    dequantize_into_with(&q, &mut out, threads).unwrap();
+                    std::hint::black_box(&out);
+                    flare::memory::pool::give_f32(out);
+                },
+            );
+            rows.push(Row {
+                scheme: scheme.name(),
+                threads,
+                enc_mb_s: enc.throughput_mb_s(bytes),
+                dec_mb_s: dec.throughput_mb_s(bytes),
+            });
+        }
     }
+
+    for r in &rows {
+        bench_json(r);
+    }
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.scheme.to_string(),
+                if r.threads == 0 {
+                    "scalar".into()
+                } else {
+                    format!("{}", r.threads)
+                },
+                format!("{:.0}", r.enc_mb_s),
+                format!("{:.0}", r.dec_mb_s),
+            ]
+        })
+        .collect();
     print_table(
-        "quantization codec throughput (64 MB fp32 input)",
-        &["Scheme", "Encode MB/s", "Decode MB/s"],
-        &rows,
+        &format!(
+            "quantization codec throughput ({} MB fp32 input)",
+            bytes >> 20
+        ),
+        &["Scheme", "Threads", "Encode MB/s", "Decode MB/s"],
+        &table,
     );
+
+    // Speedup summary vs the scalar baseline (the acceptance metric).
+    println!();
+    for scheme in ["blockwise8", "float4", "normfloat4", "fp16", "bf16"] {
+        let Some(base) = rows.iter().find(|r| r.scheme == scheme && r.threads == 0) else {
+            continue;
+        };
+        for r in rows.iter().filter(|r| r.scheme == scheme && r.threads > 0) {
+            println!(
+                "speedup {scheme} t{}: encode {:.2}x, decode {:.2}x",
+                r.threads,
+                r.enc_mb_s / base.enc_mb_s.max(1e-9),
+                r.dec_mb_s / base.dec_mb_s.max(1e-9),
+            );
+        }
+    }
 }

@@ -1,5 +1,11 @@
 //! P1 — SFM transport throughput: in-memory and TCP loopback drivers
-//! across chunk sizes; the transport side of the §Perf budget.
+//! across chunk sizes; the transport side of the §Perf budget. The TCP
+//! path exercises the batched-flush + vectored-write + pooled-frame
+//! send pipeline end to end.
+//!
+//! Run: `cargo bench --bench sfm_throughput` (plain binary).
+//! CI runs `--smoke` (16 MB object, 1 MB chunks only) and parse-checks
+//! the `BENCH_JSON {"bench":"sfm_throughput",...}` lines.
 
 use flare::sfm::tcp::{loopback_listener, TcpDriver};
 use flare::sfm::{inmem, SfmEndpoint};
@@ -18,10 +24,28 @@ fn run(make: impl Fn() -> (SfmEndpoint, SfmEndpoint), chunk: usize, total: usize
     total as f64 / (1 << 20) as f64 / t0.elapsed().as_secs_f64()
 }
 
+fn bench_json(driver: &str, chunk: usize, mb_s: f64, pool_hit_rate: f64) {
+    let j = Json::obj(vec![
+        ("bench", Json::str("sfm_throughput")),
+        ("driver", Json::str(driver)),
+        ("chunk", Json::num(chunk as f64)),
+        ("mb_s", Json::num(mb_s)),
+        ("pool_hit_rate", Json::num(pool_hit_rate)),
+    ]);
+    println!("BENCH_JSON {j}");
+}
+
 fn main() {
-    let total = 256 << 20; // 256 MB
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let total = if smoke { 16 << 20 } else { 256 << 20 };
+    let sweep: &[usize] = if smoke {
+        &[1 << 20]
+    } else {
+        &[64 << 10, 1 << 20, 4 << 20]
+    };
     let mut rows = Vec::new();
-    for chunk in [64 << 10, 1 << 20, 4 << 20] {
+    for &chunk in sweep {
+        let pool0 = flare::memory::pool::global().snapshot();
         let mem = run(
             || {
                 let p = inmem::pair(64);
@@ -30,6 +54,8 @@ fn main() {
             chunk,
             total,
         );
+        let mem_pool = flare::memory::pool::global().snapshot().since(&pool0);
+        let pool1 = flare::memory::pool::global().snapshot();
         let tcp = run(
             || {
                 let l = loopback_listener().unwrap();
@@ -42,15 +68,23 @@ fn main() {
             chunk,
             total,
         );
+        let tcp_pool = flare::memory::pool::global().snapshot().since(&pool1);
+        bench_json("inmem", chunk, mem, mem_pool.hit_rate());
+        bench_json("tcp", chunk, tcp, tcp_pool.hit_rate());
         rows.push(vec![
             flare::util::bytes::human(chunk as u64),
             format!("{mem:.0}"),
             format!("{tcp:.0}"),
+            format!(
+                "{:.0}% / {:.0}%",
+                100.0 * mem_pool.hit_rate(),
+                100.0 * tcp_pool.hit_rate()
+            ),
         ]);
     }
     print_table(
-        "SFM throughput, 256 MB object (MB/s)",
-        &["Chunk", "inmem", "tcp-loopback"],
+        &format!("SFM throughput, {} MB object (MB/s)", total >> 20),
+        &["Chunk", "inmem", "tcp-loopback", "pool hit (mem/tcp)"],
         &rows,
     );
 }

@@ -303,6 +303,11 @@ pub struct JobConfig {
     /// Control-message and weight-transfer timeout used by the
     /// coordinator on both sides, in seconds (>= 1).
     pub transfer_timeout_secs: u64,
+    /// Quantization kernel threads (0 = auto: available parallelism,
+    /// capped). Applied process-wide via `quant::set_encode_threads` when
+    /// a job starts; the parallel kernels are bit-identical to the
+    /// scalar reference at every setting.
+    pub encode_threads: usize,
     pub seed: u64,
     /// Dirichlet alpha for non-IID sharding (0 = IID).
     pub dirichlet_alpha: f64,
@@ -327,6 +332,7 @@ impl Default for JobConfig {
             entry_fold: true,
             round_policy: RoundPolicy::default(),
             transfer_timeout_secs: DEFAULT_TRANSFER_TIMEOUT_SECS,
+            encode_threads: 0,
             seed: 0xF1A2E,
             dirichlet_alpha: 0.0,
             artifacts_dir: "artifacts".into(),
@@ -394,6 +400,7 @@ impl JobConfig {
                 "transfer_timeout_secs" => {
                     cfg.transfer_timeout_secs = req_usize(v, k)? as u64
                 }
+                "encode_threads" => cfg.encode_threads = req_usize(v, k)?,
                 "round_policy" => {
                     let t = v.as_obj().ok_or_else(|| anyhow!("round_policy: not an object"))?;
                     for (pk, pv) in t {
@@ -545,6 +552,7 @@ impl JobConfig {
                 "transfer_timeout_secs",
                 Json::num(self.transfer_timeout_secs as f64),
             ),
+            ("encode_threads", Json::num(self.encode_threads as f64)),
             (
                 "round_policy",
                 Json::obj(vec![
@@ -692,11 +700,14 @@ mod tests {
                 allow_partial: true,
             },
             transfer_timeout_secs: 45,
+            encode_threads: 4,
             ..JobConfig::default()
         };
         let back = JobConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.round_policy, cfg.round_policy);
         assert_eq!(back.transfer_timeout_secs, 45);
+        assert_eq!(back.encode_threads, 4);
+        assert_eq!(JobConfig::default().encode_threads, 0, "default is auto");
         assert!(back.entry_fold, "entry_fold defaults on and round-trips");
         let off = JobConfig {
             entry_fold: false,

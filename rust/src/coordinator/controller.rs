@@ -218,6 +218,8 @@ impl Controller {
         if self.clients.is_empty() {
             bail!("no clients registered");
         }
+        crate::quant::set_encode_threads(self.job.encode_threads);
+        let pool_before = crate::memory::pool::global().snapshot();
         let n = self.clients.len();
         self.tasks_sent = vec![0; n];
         self.rounds.clear();
@@ -319,6 +321,10 @@ impl Controller {
             "dup_chunks_total",
             self.reliability_sum(|s| s.dup_chunks.load(Ordering::Relaxed)) as f64,
         );
+        // Buffer-pool health over this run: the fraction of hot-path
+        // buffer takes served without an allocation (steady state ≈ 1.0).
+        let pool_traffic = crate::memory::pool::global().snapshot().since(&pool_before);
+        report.set_scalar("pool_hit_rate", pool_traffic.hit_rate());
         Ok(global)
     }
 
@@ -1003,7 +1009,12 @@ fn run_client_round(
             reliable,
             Some(timeout),
             &mut |idx, ename, t| match sf.fold.fold_entry(sf.pos, idx, &ename, &t)? {
-                FoldOutcome::Folded => Ok(EntryFlow::Continue),
+                FoldOutcome::Folded => {
+                    // The entry is folded into the shared accumulator;
+                    // cycle its (pool-backed) storage for the next one.
+                    crate::memory::pool::give_bytes(t.data);
+                    Ok(EntryFlow::Continue)
+                }
                 FoldOutcome::Dropped => {
                     dropped = true;
                     Ok(EntryFlow::Discard)

@@ -41,6 +41,8 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
 ) -> Result<SimResult> {
     let spool = spool_dir();
     std::fs::create_dir_all(&spool)?;
+    // Kernel parallelism is a process-global knob (see JobConfig).
+    crate::quant::set_encode_threads(job.encode_threads);
     // The same factory builds the per-client executor chains and the
     // server's per-session chains (the paper's symmetric two-way wiring).
     let make_filters: FilterFactory = Arc::new(make_filters);

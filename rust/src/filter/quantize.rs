@@ -87,6 +87,10 @@ impl EntryFilter for QuantizeEntryFilter {
                 let q = quantize(self.scheme, &t)?;
                 self.before += t.byte_len() as u64;
                 self.after += q.payload_bytes() + q.meta_bytes();
+                // The fp32 input is fully consumed by the encode; cycle
+                // its storage back to the pool (it is owned here — the
+                // chain contract passes entries by value).
+                crate::memory::pool::give_bytes(t.data);
                 Ok(Entry::Quantized(name, q))
             }
             Entry::Quantized(name, _) => {
@@ -178,7 +182,19 @@ impl EntryFilter for DequantizeEntryFilter {
                 self.scratch.clear();
                 dequantize_into(&q, self.scratch.as_mut_vec())?;
                 self.scratch.resync();
-                let t = Tensor::from_f32(q.orig.shape.clone(), self.scratch.as_slice().to_vec());
+                // One copy, scratch -> tensor bytes. (`Tensor::from_f32`
+                // over `scratch.to_vec()` would copy the entry twice.)
+                // Pool-backed: the server's fold sink gives the buffer
+                // back after the entry is folded; client containers that
+                // retain the tensor simply keep the storage.
+                let mut data = crate::memory::pool::bytes(self.scratch.len() * 4);
+                data.extend_from_slice(crate::util::bytes::f32_slice_as_bytes(
+                    self.scratch.as_slice(),
+                ));
+                let t = Tensor::new(q.orig.shape.clone(), crate::tensor::DType::F32, data);
+                // Wire payload + quant metadata are decoded out; cycle
+                // their (pool-sourced) storage back.
+                crate::quant::recycle(q);
                 Ok(Entry::Plain(name, t))
             }
         }

@@ -44,7 +44,7 @@ COMMANDS:
                 --trainer pjrt|mock --alpha 0 --out results/run.json
                 --sample-fraction 1.0 --min-clients 0 --round-deadline 0
                 --allow-partial[=false] --transfer-timeout 600
-                --entry-fold true|false]
+                --entry-fold true|false --encode-threads 0]
   server        --listen 127.0.0.1:7777 --job <file>
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
@@ -128,7 +128,11 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
     if let Some(d) = args.get("artifacts") {
         job.artifacts_dir = d.to_string();
     }
+    // Quantization kernel parallelism (0 = auto).
+    job.encode_threads = args.get_usize("encode-threads", job.encode_threads);
     job.validate()?;
+    // The kernels read a process-global knob (see config::JobConfig).
+    quant::set_encode_threads(job.encode_threads);
     Ok(job)
 }
 
@@ -279,6 +283,8 @@ fn cmd_client(args: &Args) -> Result<()> {
     );
     let job_json = probe.register()?;
     let job = JobConfig::from_json(&job_json)?;
+    // The server's job config carries the kernel parallelism knob.
+    quant::set_encode_threads(job.encode_threads);
     println!("registered with server; job '{}' model '{}'", job.name, job.model);
     let trainer = make_any_trainer(&job, trainer_kind, name_index(&name))?;
     let mut exec = Executor::new(
@@ -395,6 +401,7 @@ fn cmd_stream_bench(args: &Args) -> Result<()> {
     let client = SfmEndpoint::new(pair.b).with_chunk(chunk);
     let spool = std::env::temp_dir();
     flare::memory::COMM_GAUGE.reset_peak();
+    let pool_before = flare::memory::pool::global().snapshot();
     let region = RssRegion::start();
     let t0 = std::time::Instant::now();
     let tx = std::thread::spawn({
@@ -414,6 +421,13 @@ fn cmd_stream_bench(args: &Args) -> Result<()> {
     println!("job time        : {secs:.2} s");
     println!("comm-buffer peak: {}", human(flare::memory::COMM_GAUGE.peak()));
     println!("process RSS peak: {} (delta {})", human(rss_peak), human(rss_delta.max(0) as u64));
+    let pool = flare::memory::pool::global().snapshot().since(&pool_before);
+    println!(
+        "pool hit rate   : {:.1}% ({} takes, {} misses)",
+        100.0 * pool.hit_rate(),
+        pool.takes(),
+        pool.misses
+    );
     Ok(())
 }
 

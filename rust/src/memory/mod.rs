@@ -8,7 +8,10 @@
 //! * [`rss`] — process-level RSS / peak-RSS sampling from `/proc`, the
 //!   methodology the paper's Table III uses.
 
+pub mod pool;
 pub mod rss;
+
+pub use pool::PooledBuf;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,0 +1,458 @@
+//! Size-classed reusable buffer pool — the allocation-free hot path.
+//!
+//! Every streamed chunk, serialized entry, quantized payload and absmax
+//! table used to be a fresh `Vec` that lived for microseconds; under the
+//! concurrent round engine the allocator, not the network, became the
+//! per-entry bottleneck. The pool recycles those buffers process-wide:
+//!
+//! * **Raw arm** ([`bytes`] / [`give_bytes`], [`f32s`] / [`give_f32`]) —
+//!   plain `Vec`s for buffers whose ownership travels (frame payloads,
+//!   `QuantizedTensor::payload`, quant metadata). A vec that is never
+//!   given back is simply dropped — correctness never depends on the
+//!   return, only the steady-state allocation rate does.
+//! * **RAII arm** ([`PooledBuf`]) — a [`COMM_GAUGE`]-registered scratch
+//!   buffer that returns its storage to the pool on drop; the pooled
+//!   successor of [`crate::memory::TrackedBuf`] on the per-entry
+//!   serialization paths.
+//!
+//! Ownership rules (see DESIGN.md §Hot path & buffer pooling): whoever
+//! *takes* a buffer owns it; the last consumer of the bytes gives it
+//! back. Double-give is impossible (moves), missed gives are ordinary
+//! allocations. Idle pooled buffers are NOT gauge-registered — the gauge
+//! measures in-flight transmission memory, and an idle buffer is exactly
+//! not that.
+//!
+//! Size classes are powers of two from 1 KiB to 8 MiB; takes round up to
+//! the class size so a returned buffer serves every later request of its
+//! class. Buffers outside the class range are allocated/dropped normally
+//! (counted as misses/discards, never retained).
+
+use super::{Gauge, COMM_GAUGE};
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// log2 of the smallest pooled class (1 KiB).
+const CLASS_MIN_SHIFT: u32 = 10;
+/// Number of classes: 1 KiB, 2 KiB, ... 8 MiB.
+const N_CLASSES: usize = 14;
+/// Largest pooled byte capacity (8 MiB). Larger buffers bypass the pool
+/// and allocate/free normally — a deliberate trade-off: giant entries
+/// (e.g. a 64 MB embedding layer) are rare per round, while retaining
+/// idle multi-hundred-MB shelves would dwarf the streaming memory bounds
+/// the gauge asserts. Their takes count as misses, so `pool_hit_rate`
+/// makes the bypass visible instead of hiding it.
+pub const MAX_POOLED_BYTES: usize = 1 << (CLASS_MIN_SHIFT + N_CLASSES as u32 - 1);
+/// Idle bytes retained per class, as a count cap derived from a 32 MiB
+/// per-class budget (clamped to [4, 64] buffers).
+const CLASS_BYTE_BUDGET: usize = 32 << 20;
+
+fn class_cap(class_bytes: usize) -> usize {
+    (CLASS_BYTE_BUDGET / class_bytes.max(1)).clamp(4, 64)
+}
+
+/// Class index whose size is >= `cap` (take side), if `cap` is poolable.
+fn class_ceil(cap: usize) -> Option<usize> {
+    if cap == 0 || cap > MAX_POOLED_BYTES {
+        return None;
+    }
+    let bits = usize::BITS - (cap - 1).leading_zeros(); // ceil(log2(cap))
+    Some((bits.max(CLASS_MIN_SHIFT) - CLASS_MIN_SHIFT) as usize)
+}
+
+/// Largest class whose size is <= `capacity` (give side).
+fn class_floor(capacity: usize) -> Option<usize> {
+    if capacity < (1 << CLASS_MIN_SHIFT) {
+        return None;
+    }
+    let bits = usize::BITS - 1 - capacity.leading_zeros(); // floor(log2)
+    Some(((bits - CLASS_MIN_SHIFT) as usize).min(N_CLASSES - 1))
+}
+
+fn class_bytes(idx: usize) -> usize {
+    1 << (CLASS_MIN_SHIFT + idx as u32)
+}
+
+/// Monotone counters of pool traffic. `takes = hits + misses`; a healthy
+/// steady state has `misses ≈ 0` per round.
+#[derive(Debug, Default)]
+struct PoolCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returns: AtomicU64,
+    discards: AtomicU64,
+}
+
+/// Point-in-time snapshot of the pool counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub returns: u64,
+    pub discards: u64,
+}
+
+impl PoolSnapshot {
+    pub fn takes(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1]; 1.0 when there was no traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.takes();
+        if t == 0 {
+            1.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+
+    /// Traffic since `earlier` (counters are monotone).
+    pub fn since(&self, earlier: &PoolSnapshot) -> PoolSnapshot {
+        PoolSnapshot {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            returns: self.returns - earlier.returns,
+            discards: self.discards - earlier.discards,
+        }
+    }
+}
+
+/// The size-classed pool. One global instance serves the whole process
+/// (senders and receivers trade buffers, which is the point).
+pub struct BufferPool {
+    bytes: Vec<Mutex<Vec<Vec<u8>>>>,
+    f32s: Vec<Mutex<Vec<Vec<f32>>>>,
+    counters: PoolCounters,
+}
+
+impl BufferPool {
+    fn new() -> BufferPool {
+        BufferPool {
+            bytes: (0..N_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            f32s: (0..N_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
+            counters: PoolCounters::default(),
+        }
+    }
+
+    pub fn snapshot(&self) -> PoolSnapshot {
+        PoolSnapshot {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            returns: self.counters.returns.load(Ordering::Relaxed),
+            discards: self.counters.discards.load(Ordering::Relaxed),
+        }
+    }
+
+    /// An empty `Vec<u8>` with capacity >= `cap`, recycled when possible.
+    pub fn take_bytes(&self, cap: usize) -> Vec<u8> {
+        if cap == 0 {
+            return Vec::new();
+        }
+        match class_ceil(cap) {
+            Some(idx) => {
+                if let Some(v) = self.bytes[idx].lock().unwrap().pop() {
+                    self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    debug_assert!(v.capacity() >= cap);
+                    return v;
+                }
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(class_bytes(idx))
+            }
+            None => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Return a byte buffer. Cleared here so a pooled buffer can never
+    /// leak stale bytes into a later take.
+    pub fn give_bytes(&self, mut v: Vec<u8>) {
+        let Some(idx) = class_floor(v.capacity()) else {
+            return; // tiny or zero-capacity: not worth pooling
+        };
+        if v.capacity() > MAX_POOLED_BYTES {
+            self.counters.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        v.clear();
+        let mut shelf = self.bytes[idx].lock().unwrap();
+        if shelf.len() >= class_cap(class_bytes(idx)) {
+            self.counters.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        shelf.push(v);
+        self.counters.returns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An empty `Vec<f32>` with capacity >= `elems`, recycled when
+    /// possible. Classes are shared with the byte arm by *byte* size.
+    pub fn take_f32(&self, elems: usize) -> Vec<f32> {
+        if elems == 0 {
+            return Vec::new();
+        }
+        match class_ceil(elems.saturating_mul(4)) {
+            Some(idx) => {
+                if let Some(v) = self.f32s[idx].lock().unwrap().pop() {
+                    self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                    debug_assert!(v.capacity() >= elems);
+                    return v;
+                }
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(class_bytes(idx) / 4)
+            }
+            None => {
+                self.counters.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(elems)
+            }
+        }
+    }
+
+    /// Return an f32 buffer.
+    pub fn give_f32(&self, mut v: Vec<f32>) {
+        let Some(idx) = class_floor(v.capacity().saturating_mul(4)) else {
+            return;
+        };
+        if v.capacity().saturating_mul(4) > MAX_POOLED_BYTES {
+            self.counters.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        v.clear();
+        let mut shelf = self.f32s[idx].lock().unwrap();
+        if shelf.len() >= class_cap(class_bytes(idx)) {
+            self.counters.discards.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        shelf.push(v);
+        self.counters.returns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drop every idle buffer (tests; steady-state misses are measured
+    /// from a known-empty pool).
+    pub fn drain(&self) {
+        for shelf in &self.bytes {
+            shelf.lock().unwrap().clear();
+        }
+        for shelf in &self.f32s {
+            shelf.lock().unwrap().clear();
+        }
+    }
+}
+
+static GLOBAL: Lazy<BufferPool> = Lazy::new(BufferPool::new);
+
+/// The process-global pool.
+pub fn global() -> &'static BufferPool {
+    &GLOBAL
+}
+
+/// Convenience: take a byte buffer from the global pool.
+pub fn bytes(cap: usize) -> Vec<u8> {
+    global().take_bytes(cap)
+}
+
+/// Convenience: return a byte buffer to the global pool.
+pub fn give_bytes(v: Vec<u8>) {
+    global().give_bytes(v)
+}
+
+/// Convenience: take an f32 buffer from the global pool.
+pub fn f32s(elems: usize) -> Vec<f32> {
+    global().take_f32(elems)
+}
+
+/// Convenience: return an f32 buffer to the global pool.
+pub fn give_f32(v: Vec<f32>) {
+    global().give_f32(v)
+}
+
+/// A pooled, gauge-registered byte buffer — the zero-churn successor of
+/// [`crate::memory::TrackedBuf`] on the per-entry serialization paths.
+/// Storage comes from the global pool on construction and returns to it
+/// on drop. The gauge registration follows the *requested / observed*
+/// footprint (`max(initial cap, len at resync)`), not the class-rounded
+/// capacity, so memory-bound assertions measure what the path needs
+/// rather than the pool's rounding.
+pub struct PooledBuf {
+    data: Vec<u8>,
+    gauge: &'static Gauge,
+    registered: u64,
+}
+
+impl PooledBuf {
+    /// Take a buffer with capacity >= `cap`, registered in `COMM_GAUGE`.
+    pub fn take(cap: usize) -> PooledBuf {
+        COMM_GAUGE.add(cap as u64);
+        PooledBuf {
+            data: bytes(cap),
+            gauge: &COMM_GAUGE,
+            registered: cap as u64,
+        }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn as_mut_vec(&mut self) -> &mut Vec<u8> {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    /// Re-sync the gauge after growth: the registered footprint is the
+    /// high-water mark of requested capacity and observed length.
+    pub fn resync(&mut self) {
+        let seen = self.data.len() as u64;
+        if seen > self.registered {
+            self.gauge.add(seen - self.registered);
+            self.registered = seen;
+        }
+    }
+
+    /// Take the inner Vec out (unregisters; storage is NOT returned to
+    /// the pool — ownership moves to the caller, who may `give_bytes` it
+    /// once the bytes are consumed).
+    pub fn into_vec(mut self) -> Vec<u8> {
+        self.gauge.sub(self.registered);
+        self.registered = 0;
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        self.gauge.sub(self.registered);
+        give_bytes(std::mem::take(&mut self.data));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_cover_range() {
+        assert_eq!(class_ceil(0), None);
+        assert_eq!(class_ceil(1), Some(0));
+        assert_eq!(class_ceil(1024), Some(0));
+        assert_eq!(class_ceil(1025), Some(1));
+        assert_eq!(class_ceil(MAX_POOLED_BYTES), Some(N_CLASSES - 1));
+        assert_eq!(class_ceil(MAX_POOLED_BYTES + 1), None);
+        assert_eq!(class_floor(1023), None);
+        assert_eq!(class_floor(1024), Some(0));
+        assert_eq!(class_floor(4096), Some(2));
+        assert_eq!(class_floor(usize::MAX / 2), Some(N_CLASSES - 1));
+        for idx in 0..N_CLASSES {
+            // a buffer taken for class idx must be returnable to class idx
+            assert_eq!(class_floor(class_bytes(idx)), Some(idx));
+        }
+    }
+
+    #[test]
+    fn take_give_cycle_hits() {
+        let pool = BufferPool::new();
+        let s0 = pool.snapshot();
+        let mut v = pool.take_bytes(10_000);
+        assert!(v.capacity() >= 10_000);
+        v.extend_from_slice(&[7u8; 10_000]);
+        pool.give_bytes(v);
+        let v2 = pool.take_bytes(9_000); // same class (16 KiB)
+        assert!(v2.is_empty(), "recycled buffer must arrive cleared");
+        assert!(v2.capacity() >= 9_000);
+        let s1 = pool.snapshot().since(&s0);
+        assert_eq!(s1.hits, 1);
+        assert_eq!(s1.misses, 1);
+        assert_eq!(s1.returns, 1);
+        assert!(s1.hit_rate() > 0.49 && s1.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn oversize_and_tiny_bypass() {
+        let pool = BufferPool::new();
+        let v = pool.take_bytes(MAX_POOLED_BYTES + 1);
+        assert!(v.capacity() > MAX_POOLED_BYTES);
+        pool.give_bytes(v); // discarded, not retained
+        let w = pool.take_bytes(MAX_POOLED_BYTES + 1);
+        assert!(w.capacity() > MAX_POOLED_BYTES);
+        let s = pool.snapshot();
+        assert_eq!(s.hits, 0);
+        pool.give_bytes(Vec::new()); // zero-capacity: silently ignored
+        assert_eq!(pool.snapshot().returns, 0);
+    }
+
+    #[test]
+    fn class_caps_bound_idle_memory() {
+        let pool = BufferPool::new();
+        let cap = class_cap(class_bytes(0));
+        for _ in 0..cap + 10 {
+            pool.give_bytes(Vec::with_capacity(1024));
+        }
+        let s = pool.snapshot();
+        assert_eq!(s.returns, cap as u64);
+        assert_eq!(s.discards, 10);
+    }
+
+    #[test]
+    fn f32_arm_roundtrip() {
+        let pool = BufferPool::new();
+        let mut v = pool.take_f32(1000);
+        assert!(v.capacity() >= 1000);
+        v.extend_from_slice(&[0.5f32; 1000]);
+        pool.give_f32(v);
+        let v2 = pool.take_f32(900);
+        assert!(v2.is_empty() && v2.capacity() >= 900);
+        assert_eq!(pool.snapshot().hits, 1);
+    }
+
+    #[test]
+    fn pooled_buf_gauge_lifecycle() {
+        let _guard = crate::memory::GAUGE_TEST_LOCK.lock().unwrap();
+        let before = COMM_GAUGE.current();
+        {
+            let mut b = PooledBuf::take(2048);
+            assert_eq!(COMM_GAUGE.current(), before + 2048);
+            b.as_mut_vec().extend_from_slice(&[1u8; 4096]);
+            b.resync();
+            assert_eq!(COMM_GAUGE.current(), before + 4096);
+            b.clear();
+            b.resync(); // registration is a high-water mark, not shrunk
+            assert_eq!(COMM_GAUGE.current(), before + 4096);
+        }
+        assert_eq!(COMM_GAUGE.current(), before);
+    }
+
+    #[test]
+    fn pooled_buf_into_vec_unregisters() {
+        let _guard = crate::memory::GAUGE_TEST_LOCK.lock().unwrap();
+        let before = COMM_GAUGE.current();
+        let mut b = PooledBuf::take(100);
+        b.as_mut_vec().extend_from_slice(&[9u8; 50]);
+        let v = b.into_vec();
+        assert_eq!(v.len(), 50);
+        assert_eq!(COMM_GAUGE.current(), before);
+    }
+
+    #[test]
+    fn drain_empties_shelves() {
+        let pool = BufferPool::new();
+        pool.give_bytes(Vec::with_capacity(2048));
+        pool.give_f32(Vec::with_capacity(2048));
+        pool.drain();
+        pool.take_bytes(2000);
+        pool.take_f32(2000);
+        let s = pool.snapshot();
+        assert_eq!(s.hits, 0, "drained pool must not hit");
+    }
+}

@@ -6,15 +6,39 @@
 //! one fp32 in the metadata) and each normalized value is mapped to the
 //! nearest codebook entry. 4-bit codes are packed two per byte
 //! (low nibble first).
+//!
+//! Two kernel families per codec:
+//! * `encode_*` / `decode_*` — the scalar reference: single-threaded,
+//!   allocation per call, the bit-exactness oracle.
+//! * `encode_*_par` / `decode_*_par` — the hot path: chunk-parallel over
+//!   block-aligned spans into caller-provided (pooled) buffers. Blocks
+//!   are independent (per-block absmax, per-block codes; 4-bit blocks
+//!   are even so nibble pairs never straddle a split), so any split is
+//!   byte-identical to the scalar pass — `rust/tests/kernel_equiv.rs`
+//!   proves it for every scheme, tail shape and thread count.
 
 use super::codebook::{dynamic_map_8bit, fp4_map, nf4_map, Codebook, FastEncoder};
+use super::kernels::effective_threads;
 use super::{QuantMeta, QuantizedTensor, BLOCK_4BIT, BLOCK_8BIT};
+use crate::memory::pool;
 use anyhow::{bail, Result};
 use once_cell::sync::Lazy;
 
 static MAP_8BIT: Lazy<Codebook> = Lazy::new(dynamic_map_8bit);
 static MAP_NF4: Lazy<Codebook> = Lazy::new(nf4_map);
 static MAP_FP4: Lazy<Codebook> = Lazy::new(fp4_map);
+
+/// LUT bucket counts (one build per process; the 8-bit LUT is ~256 KiB,
+/// which used to be rebuilt per tensor).
+const BUCKETS_8BIT: usize = 65536;
+const BUCKETS_4BIT: usize = 4096;
+
+static ENC_8BIT: Lazy<FastEncoder<'static>> =
+    Lazy::new(|| FastEncoder::new(&MAP_8BIT, BUCKETS_8BIT));
+static ENC_NF4: Lazy<FastEncoder<'static>> =
+    Lazy::new(|| FastEncoder::new(&MAP_NF4, BUCKETS_4BIT));
+static ENC_FP4: Lazy<FastEncoder<'static>> =
+    Lazy::new(|| FastEncoder::new(&MAP_FP4, BUCKETS_4BIT));
 
 /// Which fixed 4-bit table to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,6 +51,13 @@ fn map_4bit(kind: FourBitKind) -> &'static Codebook {
     match kind {
         FourBitKind::Fp4 => &MAP_FP4,
         FourBitKind::Nf4 => &MAP_NF4,
+    }
+}
+
+fn enc_4bit(kind: FourBitKind) -> &'static FastEncoder<'static> {
+    match kind {
+        FourBitKind::Fp4 => &ENC_FP4,
+        FourBitKind::Nf4 => &ENC_NF4,
     }
 }
 
@@ -54,37 +85,50 @@ fn checked_block_size(declared: usize, default: usize, nibble_packed: bool) -> R
     Ok(bs)
 }
 
+/// Per-block absolute maximum. Four independent accumulators keep the
+/// reduction out of the loop-carried dependency chain (auto-vectorizes);
+/// `f32::max` ignores NaN exactly like the old `if a > m` compare.
 #[inline]
 fn block_absmax(block: &[f32]) -> f32 {
-    let mut m = 0f32;
-    for &x in block {
-        let a = x.abs();
-        if a > m {
-            m = a;
-        }
+    let mut acc = [0f32; 4];
+    let mut it = block.chunks_exact(4);
+    for c in it.by_ref() {
+        acc[0] = acc[0].max(c[0].abs());
+        acc[1] = acc[1].max(c[1].abs());
+        acc[2] = acc[2].max(c[2].abs());
+        acc[3] = acc[3].max(c[3].abs());
     }
-    m
+    for &x in it.remainder() {
+        acc[0] = acc[0].max(x.abs());
+    }
+    acc[0].max(acc[1]).max(acc[2]).max(acc[3])
 }
 
-/// 8-bit encode: returns (payload N bytes, meta { absmax/4096, 256-entry
-/// codebook }).
-pub fn encode_8bit(src: &[f32]) -> (Vec<u8>, QuantMeta) {
-    let cb: &Codebook = &MAP_8BIT;
-    // Perf (§Perf P1): LUT encoder + preallocated output instead of
-    // per-element binary search + push (99 -> ~400 MB/s on the bench).
-    let enc = FastEncoder::new(cb, 65536);
-    let n_blocks = src.len().div_ceil(BLOCK_8BIT);
-    let mut payload = vec![0u8; src.len()];
-    let mut absmax = Vec::with_capacity(n_blocks);
+/// Fused absmax + LUT-encode over a span of whole 8-bit blocks (plus the
+/// final partial block). `pay` and `absmax` are the span's disjoint
+/// output slices.
+fn encode_8bit_span(enc: &FastEncoder<'_>, src: &[f32], pay: &mut [u8], absmax: &mut [f32]) {
     for (bi, block) in src.chunks(BLOCK_8BIT).enumerate() {
         let m = block_absmax(block);
-        absmax.push(m);
+        absmax[bi] = m;
         let inv = if m > 0.0 { 1.0 / m } else { 0.0 };
-        let out = &mut payload[bi * BLOCK_8BIT..bi * BLOCK_8BIT + block.len()];
+        let out = &mut pay[bi * BLOCK_8BIT..bi * BLOCK_8BIT + block.len()];
         for (o, &x) in out.iter_mut().zip(block) {
             *o = enc.encode(x * inv);
         }
     }
+}
+
+/// 8-bit encode: returns (payload N bytes, meta { absmax/4096, 256-entry
+/// codebook }). Scalar reference path.
+pub fn encode_8bit(src: &[f32]) -> (Vec<u8>, QuantMeta) {
+    let cb: &Codebook = &MAP_8BIT;
+    // Perf (§Perf P1): LUT encoder + preallocated output instead of
+    // per-element binary search + push (99 -> ~400 MB/s on the bench).
+    let n_blocks = src.len().div_ceil(BLOCK_8BIT);
+    let mut payload = vec![0u8; src.len()];
+    let mut absmax = vec![0f32; n_blocks];
+    encode_8bit_span(&ENC_8BIT, src, &mut payload, &mut absmax);
     let meta = QuantMeta {
         absmax,
         block_size: BLOCK_8BIT,
@@ -93,8 +137,55 @@ pub fn encode_8bit(src: &[f32]) -> (Vec<u8>, QuantMeta) {
     (payload, meta)
 }
 
-/// 8-bit decode into `out`.
-pub fn decode_8bit(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
+/// 8-bit encode, chunk-parallel into a caller-provided (pooled) payload
+/// buffer. Byte-identical to [`encode_8bit`] for every thread count.
+/// `threads` is the requested count (0 = auto).
+pub fn encode_8bit_par(src: &[f32], payload: &mut Vec<u8>, threads: usize) -> QuantMeta {
+    let cb: &Codebook = &MAP_8BIT;
+    payload.clear();
+    payload.resize(src.len(), 0);
+    let n_blocks = src.len().div_ceil(BLOCK_8BIT);
+    let mut absmax = pool::f32s(n_blocks);
+    absmax.resize(n_blocks, 0.0);
+    let t = effective_threads(threads, src.len());
+    if t <= 1 {
+        encode_8bit_span(&ENC_8BIT, src, payload, &mut absmax);
+    } else {
+        let blocks_per = n_blocks.div_ceil(t);
+        let elems_per = blocks_per * BLOCK_8BIT;
+        std::thread::scope(|s| {
+            let mut src_rest: &[f32] = src;
+            let mut pay_rest: &mut [u8] = payload.as_mut_slice();
+            let mut abs_rest: &mut [f32] = absmax.as_mut_slice();
+            while src_rest.len() > elems_per {
+                let (s0, s1) = src_rest.split_at(elems_per);
+                let (p0, p1) = std::mem::take(&mut pay_rest).split_at_mut(elems_per);
+                let (a0, a1) = std::mem::take(&mut abs_rest).split_at_mut(blocks_per);
+                src_rest = s1;
+                pay_rest = p1;
+                abs_rest = a1;
+                s.spawn(move || encode_8bit_span(&ENC_8BIT, s0, p0, a0));
+            }
+            encode_8bit_span(&ENC_8BIT, src_rest, pay_rest, abs_rest);
+        });
+    }
+    QuantMeta {
+        absmax,
+        block_size: BLOCK_8BIT,
+        codebook: pooled_codebook(cb),
+    }
+}
+
+/// Clone a fixed codebook into a pooled vec (shipped per tensor; ~1 KiB
+/// of per-entry churn on the old path).
+fn pooled_codebook(cb: &Codebook) -> Vec<f32> {
+    let mut v = pool::f32s(cb.values.len());
+    v.extend_from_slice(&cb.values);
+    v
+}
+
+/// Validate 8-bit wire geometry; returns the checked block size.
+fn check_8bit(q: &QuantizedTensor) -> Result<usize> {
     let n = q.orig.elems();
     if q.payload.len() != n {
         bail!("8-bit payload length {} != {}", q.payload.len(), n);
@@ -108,49 +199,108 @@ pub fn decode_8bit(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
     if q.meta.codebook.len() != 256 {
         bail!("8-bit codebook must have 256 entries");
     }
-    let cb = &q.meta.codebook;
-    // Perf P1: preallocate + indexed writes (push() re-checked capacity
-    // per element).
-    let start = out.len();
-    out.resize(start + n, 0.0);
-    let dst = &mut out[start..];
-    for (bi, block) in q.payload.chunks(bs).enumerate() {
-        let m = q.meta.absmax[bi];
+    Ok(bs)
+}
+
+/// Decode a span of whole 8-bit blocks: `pay`/`dst`/`absmax` are the
+/// span's block-aligned slices.
+fn decode_8bit_span(cb: &[f32], pay: &[u8], dst: &mut [f32], absmax: &[f32], bs: usize) {
+    for (bi, block) in pay.chunks(bs).enumerate() {
+        let m = absmax[bi];
         let row = &mut dst[bi * bs..bi * bs + block.len()];
         for (o, &code) in row.iter_mut().zip(block) {
             *o = cb[code as usize] * m;
         }
     }
+}
+
+/// 8-bit decode into `out`. Scalar reference path.
+pub fn decode_8bit(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
+    let bs = check_8bit(q)?;
+    let n = q.orig.elems();
+    // Perf P1: preallocate + indexed writes (push() re-checked capacity
+    // per element).
+    let start = out.len();
+    out.resize(start + n, 0.0);
+    decode_8bit_span(
+        &q.meta.codebook,
+        &q.payload,
+        &mut out[start..],
+        &q.meta.absmax,
+        bs,
+    );
     Ok(())
+}
+
+/// 8-bit decode, chunk-parallel. Byte-identical to [`decode_8bit`].
+pub fn decode_8bit_par(q: &QuantizedTensor, out: &mut Vec<f32>, threads: usize) -> Result<()> {
+    let bs = check_8bit(q)?;
+    let n = q.orig.elems();
+    let start = out.len();
+    out.resize(start + n, 0.0);
+    let n_blocks = q.meta.absmax.len();
+    let t = effective_threads(threads, n);
+    if t <= 1 || n_blocks <= 1 {
+        decode_8bit_span(
+            &q.meta.codebook,
+            &q.payload,
+            &mut out[start..],
+            &q.meta.absmax,
+            bs,
+        );
+        return Ok(());
+    }
+    let blocks_per = n_blocks.div_ceil(t);
+    let elems_per = blocks_per * bs;
+    let cb: &[f32] = &q.meta.codebook;
+    std::thread::scope(|s| {
+        let mut pay_rest: &[u8] = &q.payload;
+        let mut abs_rest: &[f32] = &q.meta.absmax;
+        let mut dst_rest: &mut [f32] = &mut out[start..];
+        while dst_rest.len() > elems_per {
+            let (p0, p1) = pay_rest.split_at(elems_per);
+            let (a0, a1) = abs_rest.split_at(blocks_per);
+            let (d0, d1) = std::mem::take(&mut dst_rest).split_at_mut(elems_per);
+            pay_rest = p1;
+            abs_rest = a1;
+            dst_rest = d1;
+            s.spawn(move || decode_8bit_span(cb, p0, d0, a0, bs));
+        }
+        decode_8bit_span(cb, pay_rest, dst_rest, abs_rest, bs);
+    });
+    Ok(())
+}
+
+/// Fused absmax + encode + branchless nibble pack over a span of whole
+/// 4-bit blocks (plus the final partial block). BLOCK_4BIT is even, so
+/// every block starts on a byte boundary and nibble pairs never straddle
+/// a span split.
+fn encode_4bit_span(enc: &FastEncoder<'_>, src: &[f32], pay: &mut [u8], absmax: &mut [f32]) {
+    for (bi, block) in src.chunks(BLOCK_4BIT).enumerate() {
+        let m = block_absmax(block);
+        absmax[bi] = m;
+        let inv = if m > 0.0 { 1.0 / m } else { 0.0 };
+        let base = bi * (BLOCK_4BIT / 2);
+        let out = &mut pay[base..base + block.len().div_ceil(2)];
+        for (o, pair) in out.iter_mut().zip(block.chunks(2)) {
+            let lo = enc.encode(pair[0] * inv) & 0x0f;
+            let hi = match pair.get(1) {
+                Some(&x1) => (enc.encode(x1 * inv) & 0x0f) << 4,
+                None => 0,
+            };
+            *o = lo | hi;
+        }
+    }
 }
 
 /// 4-bit encode: returns (payload ceil(N/2) bytes, meta { absmax/64 }).
 /// The fp4/nf4 tables are fixed constants on both ends — not shipped —
-/// matching the paper's Table II meta accounting.
+/// matching the paper's Table II meta accounting. Scalar reference path.
 pub fn encode_4bit(src: &[f32], kind: FourBitKind) -> (Vec<u8>, QuantMeta) {
-    let cb = map_4bit(kind);
-    let enc = FastEncoder::new(cb, 4096);
     let n_blocks = src.len().div_ceil(BLOCK_4BIT);
     let mut payload = vec![0u8; src.len().div_ceil(2)];
-    let mut absmax = Vec::with_capacity(n_blocks);
-    // BLOCK_4BIT is even, so nibble pairs never straddle blocks except in
-    // the final partial block, handled by indexing on the flat position.
-    let mut pos = 0usize;
-    for block in src.chunks(BLOCK_4BIT) {
-        let m = block_absmax(block);
-        absmax.push(m);
-        let inv = if m > 0.0 { 1.0 / m } else { 0.0 };
-        for &x in block {
-            let code = enc.encode(x * inv) & 0x0f;
-            let byte = &mut payload[pos / 2];
-            if pos % 2 == 0 {
-                *byte = code;
-            } else {
-                *byte |= code << 4;
-            }
-            pos += 1;
-        }
-    }
+    let mut absmax = vec![0f32; n_blocks];
+    encode_4bit_span(enc_4bit(kind), src, &mut payload, &mut absmax);
     let meta = QuantMeta {
         absmax,
         block_size: BLOCK_4BIT,
@@ -159,8 +309,52 @@ pub fn encode_4bit(src: &[f32], kind: FourBitKind) -> (Vec<u8>, QuantMeta) {
     (payload, meta)
 }
 
-/// 4-bit decode into `out`.
-pub fn decode_4bit(q: &QuantizedTensor, kind: FourBitKind, out: &mut Vec<f32>) -> Result<()> {
+/// 4-bit encode, chunk-parallel into a caller-provided (pooled) payload
+/// buffer. Byte-identical to [`encode_4bit`] for every thread count.
+pub fn encode_4bit_par(
+    src: &[f32],
+    kind: FourBitKind,
+    payload: &mut Vec<u8>,
+    threads: usize,
+) -> QuantMeta {
+    let enc = enc_4bit(kind);
+    payload.clear();
+    payload.resize(src.len().div_ceil(2), 0);
+    let n_blocks = src.len().div_ceil(BLOCK_4BIT);
+    let mut absmax = pool::f32s(n_blocks);
+    absmax.resize(n_blocks, 0.0);
+    let t = effective_threads(threads, src.len());
+    if t <= 1 {
+        encode_4bit_span(enc, src, payload, &mut absmax);
+    } else {
+        let blocks_per = n_blocks.div_ceil(t);
+        let elems_per = blocks_per * BLOCK_4BIT;
+        let bytes_per = blocks_per * (BLOCK_4BIT / 2);
+        std::thread::scope(|s| {
+            let mut src_rest: &[f32] = src;
+            let mut pay_rest: &mut [u8] = payload.as_mut_slice();
+            let mut abs_rest: &mut [f32] = absmax.as_mut_slice();
+            while src_rest.len() > elems_per {
+                let (s0, s1) = src_rest.split_at(elems_per);
+                let (p0, p1) = std::mem::take(&mut pay_rest).split_at_mut(bytes_per);
+                let (a0, a1) = std::mem::take(&mut abs_rest).split_at_mut(blocks_per);
+                src_rest = s1;
+                pay_rest = p1;
+                abs_rest = a1;
+                s.spawn(move || encode_4bit_span(enc, s0, p0, a0));
+            }
+            encode_4bit_span(enc, src_rest, pay_rest, abs_rest);
+        });
+    }
+    QuantMeta {
+        absmax,
+        block_size: BLOCK_4BIT,
+        codebook: Vec::new(),
+    }
+}
+
+/// Validate 4-bit wire geometry; returns the checked block size.
+fn check_4bit(q: &QuantizedTensor) -> Result<usize> {
     let n = q.orig.elems();
     if q.payload.len() != n.div_ceil(2) {
         bail!("4-bit payload length {} != {}", q.payload.len(), n.div_ceil(2));
@@ -169,16 +363,17 @@ pub fn decode_4bit(q: &QuantizedTensor, kind: FourBitKind, out: &mut Vec<f32>) -
     if q.meta.absmax.len() != n.div_ceil(bs) {
         bail!("4-bit absmax count mismatch");
     }
-    let cb = map_4bit(kind);
-    // Perf P1: decode two nibbles per byte with block-hoisted absmax.
-    let start = out.len();
-    out.resize(start + n, 0.0);
-    let dst = &mut out[start..];
-    let values = &cb.values;
+    Ok(bs)
+}
+
+/// Decode a span of whole 4-bit blocks: two nibbles per byte with
+/// block-hoisted absmax. `pay` is the span's byte slice (block starts
+/// are even, so spans split cleanly at `bs / 2` byte boundaries).
+fn decode_4bit_span(values: &[f32], pay: &[u8], dst: &mut [f32], absmax: &[f32], bs: usize) {
     for (bi, brow) in dst.chunks_mut(bs).enumerate() {
-        let m = q.meta.absmax[bi];
+        let m = absmax[bi];
         let base = bi * bs;
-        let bytes = &q.payload[base / 2..(base + brow.len()).div_ceil(2)];
+        let bytes = &pay[base / 2..(base + brow.len()).div_ceil(2)];
         for (j, pair) in brow.chunks_mut(2).enumerate() {
             let byte = bytes[j];
             pair[0] = values[(byte & 0x0f) as usize] * m;
@@ -187,6 +382,66 @@ pub fn decode_4bit(q: &QuantizedTensor, kind: FourBitKind, out: &mut Vec<f32>) -
             }
         }
     }
+}
+
+/// 4-bit decode into `out`. Scalar reference path.
+pub fn decode_4bit(q: &QuantizedTensor, kind: FourBitKind, out: &mut Vec<f32>) -> Result<()> {
+    let bs = check_4bit(q)?;
+    let n = q.orig.elems();
+    let start = out.len();
+    out.resize(start + n, 0.0);
+    decode_4bit_span(
+        &map_4bit(kind).values,
+        &q.payload,
+        &mut out[start..],
+        &q.meta.absmax,
+        bs,
+    );
+    Ok(())
+}
+
+/// 4-bit decode, chunk-parallel. Byte-identical to [`decode_4bit`].
+pub fn decode_4bit_par(
+    q: &QuantizedTensor,
+    kind: FourBitKind,
+    out: &mut Vec<f32>,
+    threads: usize,
+) -> Result<()> {
+    let bs = check_4bit(q)?;
+    let n = q.orig.elems();
+    let start = out.len();
+    out.resize(start + n, 0.0);
+    let n_blocks = q.meta.absmax.len();
+    let t = effective_threads(threads, n);
+    if t <= 1 || n_blocks <= 1 {
+        decode_4bit_span(
+            &map_4bit(kind).values,
+            &q.payload,
+            &mut out[start..],
+            &q.meta.absmax,
+            bs,
+        );
+        return Ok(());
+    }
+    let blocks_per = n_blocks.div_ceil(t);
+    let elems_per = blocks_per * bs;
+    let bytes_per = elems_per / 2; // bs is even, so this is block-aligned
+    let values: &[f32] = &map_4bit(kind).values;
+    std::thread::scope(|s| {
+        let mut pay_rest: &[u8] = &q.payload;
+        let mut abs_rest: &[f32] = &q.meta.absmax;
+        let mut dst_rest: &mut [f32] = &mut out[start..];
+        while dst_rest.len() > elems_per {
+            let (p0, p1) = pay_rest.split_at(bytes_per);
+            let (a0, a1) = abs_rest.split_at(blocks_per);
+            let (d0, d1) = std::mem::take(&mut dst_rest).split_at_mut(elems_per);
+            pay_rest = p1;
+            abs_rest = a1;
+            dst_rest = d1;
+            s.spawn(move || decode_4bit_span(values, p0, d0, a0, bs));
+        }
+        decode_4bit_span(values, pay_rest, dst_rest, abs_rest, bs);
+    });
     Ok(())
 }
 

@@ -153,17 +153,51 @@ fn has_f16c() -> bool {
     }
 }
 
+/// Convert a span: `dst.len() == src.len() * 2`. Elementwise (SIMD and
+/// scalar agree bit-for-bit), so any span split of a larger buffer
+/// produces identical bytes.
+fn encode_f16_slice(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), src.len() * 2);
+    #[cfg(target_arch = "x86_64")]
+    if has_f16c() {
+        unsafe { simd::encode_f16_f16c(src, dst) };
+        return;
+    }
+    for (o, &x) in dst.chunks_exact_mut(2).zip(src) {
+        o.copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+}
+
+fn decode_f16_slice(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 2);
+    #[cfg(target_arch = "x86_64")]
+    if has_f16c() {
+        unsafe { simd::decode_f16_f16c(src, dst) };
+        return;
+    }
+    for (o, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
+fn encode_bf16_slice(src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), src.len() * 2);
+    for (o, &x) in dst.chunks_exact_mut(2).zip(src) {
+        o.copy_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+    }
+}
+
+fn decode_bf16_slice(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 2);
+    for (o, c) in dst.iter_mut().zip(src.chunks_exact(2)) {
+        *o = bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    }
+}
+
 pub fn encode_f16(src: &[f32], dst: &mut Vec<u8>) {
     let start = dst.len();
     dst.resize(start + src.len() * 2, 0);
-    #[cfg(target_arch = "x86_64")]
-    if has_f16c() {
-        unsafe { simd::encode_f16_f16c(src, &mut dst[start..]) };
-        return;
-    }
-    for (o, &x) in dst[start..].chunks_exact_mut(2).zip(src) {
-        o.copy_from_slice(&f32_to_f16_bits(x).to_le_bytes());
-    }
+    encode_f16_slice(src, &mut dst[start..]);
 }
 
 /// Decode f16 bytes; a trailing odd byte is ignored (callers validate
@@ -173,22 +207,13 @@ pub fn decode_f16(src: &[u8], dst: &mut Vec<f32>) {
     let src = &src[..src.len() - src.len() % 2];
     let start = dst.len();
     dst.resize(start + src.len() / 2, 0.0);
-    #[cfg(target_arch = "x86_64")]
-    if has_f16c() {
-        unsafe { simd::decode_f16_f16c(src, &mut dst[start..]) };
-        return;
-    }
-    for (o, c) in dst[start..].iter_mut().zip(src.chunks_exact(2)) {
-        *o = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
-    }
+    decode_f16_slice(src, &mut dst[start..]);
 }
 
 pub fn encode_bf16(src: &[f32], dst: &mut Vec<u8>) {
     let start = dst.len();
     dst.resize(start + src.len() * 2, 0);
-    for (o, &x) in dst[start..].chunks_exact_mut(2).zip(src) {
-        o.copy_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
-    }
+    encode_bf16_slice(src, &mut dst[start..]);
 }
 
 /// Decode bf16 bytes; a trailing odd byte is ignored (see `decode_f16`).
@@ -196,9 +221,95 @@ pub fn decode_bf16(src: &[u8], dst: &mut Vec<f32>) {
     let src = &src[..src.len() - src.len() % 2];
     let start = dst.len();
     dst.resize(start + src.len() / 2, 0.0);
-    for (o, c) in dst[start..].iter_mut().zip(src.chunks_exact(2)) {
-        *o = bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+    decode_bf16_slice(src, &mut dst[start..]);
+}
+
+// -- chunk-parallel forms -----------------------------------------------------
+
+// The conversions are elementwise, so any contiguous split is bitwise
+// identical to the full-slice pass; spans are cut at multiples of 8
+// elements purely to keep the F16C lanes full per thread.
+
+fn par_convert_enc(
+    src: &[f32],
+    dst: &mut [u8],
+    threads: usize,
+    f: fn(&[f32], &mut [u8]),
+) {
+    let t = super::kernels::effective_threads(threads, src.len());
+    if t <= 1 {
+        f(src, dst);
+        return;
     }
+    let per = src.len().div_ceil(t).div_ceil(8) * 8;
+    std::thread::scope(|s| {
+        let mut src_rest: &[f32] = src;
+        let mut dst_rest: &mut [u8] = dst;
+        while src_rest.len() > per {
+            let (s0, s1) = src_rest.split_at(per);
+            let (d0, d1) = std::mem::take(&mut dst_rest).split_at_mut(per * 2);
+            src_rest = s1;
+            dst_rest = d1;
+            s.spawn(move || f(s0, d0));
+        }
+        f(src_rest, dst_rest);
+    });
+}
+
+fn par_convert_dec(
+    src: &[u8],
+    dst: &mut [f32],
+    threads: usize,
+    f: fn(&[u8], &mut [f32]),
+) {
+    let t = super::kernels::effective_threads(threads, dst.len());
+    if t <= 1 {
+        f(src, dst);
+        return;
+    }
+    let per = dst.len().div_ceil(t).div_ceil(8) * 8;
+    std::thread::scope(|s| {
+        let mut src_rest: &[u8] = src;
+        let mut dst_rest: &mut [f32] = dst;
+        while dst_rest.len() > per {
+            let (s0, s1) = src_rest.split_at(per * 2);
+            let (d0, d1) = std::mem::take(&mut dst_rest).split_at_mut(per);
+            src_rest = s1;
+            dst_rest = d1;
+            s.spawn(move || f(s0, d0));
+        }
+        f(src_rest, dst_rest);
+    });
+}
+
+/// f16 encode, chunk-parallel. Bitwise identical to [`encode_f16`].
+pub fn encode_f16_par(src: &[f32], dst: &mut Vec<u8>, threads: usize) {
+    let start = dst.len();
+    dst.resize(start + src.len() * 2, 0);
+    par_convert_enc(src, &mut dst[start..], threads, encode_f16_slice);
+}
+
+/// f16 decode, chunk-parallel. Bitwise identical to [`decode_f16`].
+pub fn decode_f16_par(src: &[u8], dst: &mut Vec<f32>, threads: usize) {
+    let src = &src[..src.len() - src.len() % 2];
+    let start = dst.len();
+    dst.resize(start + src.len() / 2, 0.0);
+    par_convert_dec(src, &mut dst[start..], threads, decode_f16_slice);
+}
+
+/// bf16 encode, chunk-parallel. Bitwise identical to [`encode_bf16`].
+pub fn encode_bf16_par(src: &[f32], dst: &mut Vec<u8>, threads: usize) {
+    let start = dst.len();
+    dst.resize(start + src.len() * 2, 0);
+    par_convert_enc(src, &mut dst[start..], threads, encode_bf16_slice);
+}
+
+/// bf16 decode, chunk-parallel. Bitwise identical to [`decode_bf16`].
+pub fn decode_bf16_par(src: &[u8], dst: &mut Vec<f32>, threads: usize) {
+    let src = &src[..src.len() - src.len() % 2];
+    let start = dst.len();
+    dst.resize(start + src.len() / 2, 0.0);
+    par_convert_dec(src, &mut dst[start..], threads, decode_bf16_slice);
 }
 
 #[cfg(test)]

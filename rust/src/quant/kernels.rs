@@ -1,0 +1,83 @@
+//! Kernel parallelism control for the quantization codecs.
+//!
+//! The encode/decode kernels are chunk-parallel over quantization blocks
+//! (`std::thread::scope`, no work queue): the input is split at block
+//! boundaries into at most `encode_threads` contiguous spans, each thread
+//! writes a disjoint slice of the output, and the split is bit-invariant
+//! — every span computes exactly what the scalar reference computes for
+//! those blocks, so parallel output is byte-identical to scalar output
+//! for every thread count (proven by `rust/tests/kernel_equiv.rs`).
+//!
+//! The thread count is a process-global knob (`JobConfig.encode_threads`
+//! / `--encode-threads`): filters run deep inside per-session chains and
+//! threading a config handle through every call site would couple four
+//! layers to the codec for one integer. 0 means "auto" (available
+//! parallelism, capped).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Hard cap on kernel threads (a fork bomb guard, not a tuning value).
+pub const MAX_ENCODE_THREADS: usize = 32;
+
+/// Below this many elements a tensor is encoded on the calling thread —
+/// spawn overhead would dominate.
+pub const MIN_PAR_ELEMS: usize = 1 << 16;
+
+/// 0 = auto (available parallelism, capped at 8).
+static ENCODE_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-global kernel thread count (0 = auto).
+pub fn set_encode_threads(n: usize) {
+    ENCODE_THREADS.store(n.min(MAX_ENCODE_THREADS), Ordering::Relaxed);
+}
+
+/// The configured kernel thread count (0 = auto). Pass this to the
+/// `*_par` kernels; they resolve auto and clamp per input size.
+pub fn encode_threads() -> usize {
+    ENCODE_THREADS.load(Ordering::Relaxed)
+}
+
+fn auto_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Resolve a requested thread count (0 = auto) against the input size:
+/// never more than one thread per [`MIN_PAR_ELEMS`] elements, never 0.
+pub fn effective_threads(requested: usize, elems: usize) -> usize {
+    let want = if requested == 0 {
+        auto_threads()
+    } else {
+        requested
+    };
+    want.clamp(1, MAX_ENCODE_THREADS)
+        .min((elems / MIN_PAR_ELEMS).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_respects_size_and_caps() {
+        assert_eq!(effective_threads(8, 0), 1);
+        assert_eq!(effective_threads(8, MIN_PAR_ELEMS - 1), 1);
+        assert_eq!(effective_threads(8, MIN_PAR_ELEMS), 1);
+        assert_eq!(effective_threads(8, 2 * MIN_PAR_ELEMS), 2);
+        assert_eq!(effective_threads(2, 100 * MIN_PAR_ELEMS), 2);
+        assert_eq!(effective_threads(1000, usize::MAX / 2), MAX_ENCODE_THREADS);
+        assert!(effective_threads(0, usize::MAX / 2) >= 1);
+    }
+
+    #[test]
+    fn knob_roundtrips_and_clamps() {
+        let prev = encode_threads();
+        set_encode_threads(4);
+        assert_eq!(encode_threads(), 4);
+        set_encode_threads(10_000);
+        assert_eq!(encode_threads(), MAX_ENCODE_THREADS);
+        set_encode_threads(prev);
+    }
+}

@@ -12,9 +12,13 @@
 pub mod blockwise;
 pub mod codebook;
 pub mod half;
+pub mod kernels;
+
+pub use kernels::{encode_threads, set_encode_threads};
 
 use crate::config::model_spec::ModelSpec;
 use crate::config::QuantScheme;
+use crate::memory::pool;
 use crate::tensor::{DType, Tensor, TensorMeta};
 use crate::util::bytes;
 use anyhow::{anyhow, bail, Result};
@@ -64,8 +68,63 @@ impl QuantizedTensor {
     }
 }
 
-/// Quantize an fp32 tensor under `scheme`.
+/// Quantize an fp32 tensor under `scheme` — the hot path: chunk-parallel
+/// kernels (process-global [`encode_threads`] knob) writing into pooled
+/// buffers. Byte-identical to [`quantize_scalar`].
 pub fn quantize(scheme: QuantScheme, t: &Tensor) -> Result<QuantizedTensor> {
+    quantize_with_threads(scheme, t, encode_threads())
+}
+
+/// [`quantize`] with an explicit requested thread count (0 = auto).
+pub fn quantize_with_threads(
+    scheme: QuantScheme,
+    t: &Tensor,
+    threads: usize,
+) -> Result<QuantizedTensor> {
+    if t.meta.dtype != DType::F32 {
+        bail!("quantize expects f32 input, got {}", t.meta.dtype);
+    }
+    let src = t.as_f32();
+    let (payload, meta) = match scheme {
+        QuantScheme::None => bail!("QuantScheme::None has no codec"),
+        QuantScheme::Fp16 => {
+            let mut p = pool::bytes(src.len() * 2);
+            half::encode_f16_par(src, &mut p, threads);
+            (p, QuantMeta::default())
+        }
+        QuantScheme::Bf16 => {
+            let mut p = pool::bytes(src.len() * 2);
+            half::encode_bf16_par(src, &mut p, threads);
+            (p, QuantMeta::default())
+        }
+        QuantScheme::Blockwise8 => {
+            let mut p = pool::bytes(src.len());
+            let m = blockwise::encode_8bit_par(src, &mut p, threads);
+            (p, m)
+        }
+        QuantScheme::Fp4 => {
+            let mut p = pool::bytes(src.len().div_ceil(2));
+            let m = blockwise::encode_4bit_par(src, blockwise::FourBitKind::Fp4, &mut p, threads);
+            (p, m)
+        }
+        QuantScheme::Nf4 => {
+            let mut p = pool::bytes(src.len().div_ceil(2));
+            let m = blockwise::encode_4bit_par(src, blockwise::FourBitKind::Nf4, &mut p, threads);
+            (p, m)
+        }
+    };
+    Ok(QuantizedTensor {
+        scheme,
+        orig: t.meta.clone(),
+        payload,
+        meta,
+    })
+}
+
+/// Scalar single-threaded reference encoder: fresh buffers, no pool, the
+/// bit-exactness oracle for the parallel/pooled path (and the baseline
+/// the `quant_throughput` bench compares against).
+pub fn quantize_scalar(scheme: QuantScheme, t: &Tensor) -> Result<QuantizedTensor> {
     if t.meta.dtype != DType::F32 {
         bail!("quantize expects f32 input, got {}", t.meta.dtype);
     }
@@ -94,6 +153,15 @@ pub fn quantize(scheme: QuantScheme, t: &Tensor) -> Result<QuantizedTensor> {
     })
 }
 
+/// Return a quantized tensor's buffers to the global pool. Call when the
+/// tensor's bytes have been fully consumed (serialized to the wire,
+/// dequantized into fp32) — the per-entry hot loop's take/give cycle.
+pub fn recycle(q: QuantizedTensor) {
+    pool::give_bytes(q.payload);
+    pool::give_f32(q.meta.absmax);
+    pool::give_f32(q.meta.codebook);
+}
+
 /// Dequantize back to fp32 ("original precision").
 ///
 /// Defensive on malformed input: truncated payloads and inconsistent
@@ -108,8 +176,45 @@ pub fn dequantize(q: &QuantizedTensor) -> Result<Tensor> {
 /// Dequantize appending into a caller-provided buffer — the reusable-
 /// scratch form behind [`dequantize`] and the entry-streamed receive
 /// path (one scratch per session bounds decode memory to O(max entry)
-/// instead of churning a fresh allocation per tensor).
+/// instead of churning a fresh allocation per tensor). Chunk-parallel
+/// per the process-global [`encode_threads`] knob.
 pub fn dequantize_into(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
+    dequantize_into_with(q, out, encode_threads())
+}
+
+/// [`dequantize_into`] with an explicit requested thread count (0 =
+/// auto). Bitwise identical to [`dequantize_into_scalar`].
+pub fn dequantize_into_with(q: &QuantizedTensor, out: &mut Vec<f32>, threads: usize) -> Result<()> {
+    let n = q.orig.elems();
+    let expect = payload_dtype(q.scheme)?.size_of_elems(n);
+    if q.payload.len() != expect {
+        bail!(
+            "{:?}: payload {} bytes, expected {expect} for {n} elems",
+            q.scheme,
+            q.payload.len()
+        );
+    }
+    let start = out.len();
+    match q.scheme {
+        QuantScheme::None => bail!("QuantScheme::None has no codec"),
+        QuantScheme::Fp16 => half::decode_f16_par(&q.payload, out, threads),
+        QuantScheme::Bf16 => half::decode_bf16_par(&q.payload, out, threads),
+        QuantScheme::Blockwise8 => blockwise::decode_8bit_par(q, out, threads)?,
+        QuantScheme::Fp4 => {
+            blockwise::decode_4bit_par(q, blockwise::FourBitKind::Fp4, out, threads)?
+        }
+        QuantScheme::Nf4 => {
+            blockwise::decode_4bit_par(q, blockwise::FourBitKind::Nf4, out, threads)?
+        }
+    }
+    if out.len() - start != n {
+        bail!("dequantized length {} != expected {}", out.len() - start, n);
+    }
+    Ok(())
+}
+
+/// Scalar single-threaded reference decoder (see [`quantize_scalar`]).
+pub fn dequantize_into_scalar(q: &QuantizedTensor, out: &mut Vec<f32>) -> Result<()> {
     let n = q.orig.elems();
     let expect = payload_dtype(q.scheme)?.size_of_elems(n);
     if q.payload.len() != expect {

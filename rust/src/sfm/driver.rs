@@ -25,6 +25,13 @@ pub trait Driver: Send {
     /// Like recv, with a timeout; Ok(None) on timeout.
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>>;
 
+    /// Push any internally buffered frames to the peer. Drivers that
+    /// batch writes (TCP) flush on send-window boundaries automatically;
+    /// this forces the boundary early (tests, manual driver use).
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+
     /// Driver name for logs/metrics.
     fn name(&self) -> &'static str;
 

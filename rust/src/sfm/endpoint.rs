@@ -19,14 +19,14 @@
 //!   instead of restarting (see DESIGN.md §Resume).
 
 use super::driver::Driver;
-use super::frame::{flags, Frame, FrameType};
-use crate::memory::{TrackedBuf, COMM_GAUGE};
+use super::frame::{flags, Frame, FrameType, Payload};
+use crate::memory::{pool, GaugeReservation, TrackedBuf, COMM_GAUGE};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default wire chunk size: 1 MB (paper §I).
@@ -540,12 +540,16 @@ impl SfmEndpoint {
     /// arrive first.
     pub fn recv_ctrl(&self, timeout: Option<Duration>) -> Result<Json> {
         if let Some(f) = self.pending_ctrl.lock().unwrap().pop_front() {
-            return parse_json_payload(&f);
+            let msg = parse_json_payload(&f)?;
+            f.payload.recycle();
+            return Ok(msg);
         }
         loop {
             let f = self.recv_frame(timeout)?;
             if f.ftype == FrameType::Ctrl {
-                return parse_json_payload(&f);
+                let msg = parse_json_payload(&f)?;
+                f.payload.recycle();
+                return Ok(msg);
             }
             self.pending_obj.lock().unwrap().push_back(f);
         }
@@ -583,23 +587,31 @@ impl SfmEndpoint {
 
     fn event_of(&self, f: Frame) -> Result<Event> {
         Ok(match f.ftype {
-            FrameType::Begin => Event::Begin {
-                stream: f.stream_id,
-                descriptor: parse_json_payload(&f)?,
-            },
-            FrameType::Unit => Event::UnitStart {
-                stream: f.stream_id,
-                descriptor: parse_json_payload(&f)?,
-            },
+            FrameType::Begin => {
+                let descriptor = parse_json_payload(&f)?;
+                let stream = f.stream_id;
+                f.payload.recycle();
+                Event::Begin { stream, descriptor }
+            }
+            FrameType::Unit => {
+                let descriptor = parse_json_payload(&f)?;
+                let stream = f.stream_id;
+                f.payload.recycle();
+                Event::UnitStart { stream, descriptor }
+            }
             FrameType::Data => {
                 let last = f.is_last_chunk();
                 let offset = f.offset;
                 let unit = f.seq;
                 let stream = f.stream_id;
-                let bytes = if f.flags & flags::COMPRESSED != 0 {
-                    inflate(&f.payload)?
+                let compressed = f.flags & flags::COMPRESSED != 0;
+                let payload = f.payload;
+                let bytes = if compressed {
+                    let out = inflate(&payload)?;
+                    payload.recycle();
+                    out
                 } else {
-                    f.payload
+                    payload.into_vec()
                 };
                 Event::Chunk {
                     stream,
@@ -609,19 +621,25 @@ impl SfmEndpoint {
                     unit,
                 }
             }
-            FrameType::End => Event::End {
-                stream: f.stream_id,
-                trailer: parse_json_payload(&f)?,
-            },
+            FrameType::End => {
+                let trailer = parse_json_payload(&f)?;
+                let stream = f.stream_id;
+                f.payload.recycle();
+                Event::End { stream, trailer }
+            }
             FrameType::Ack => Event::Ack { stream: f.stream_id },
-            FrameType::Resume => Event::Resume {
-                stream: f.stream_id,
-                info: parse_json_payload(&f)?,
-            },
-            FrameType::Nack => Event::Nack {
-                stream: f.stream_id,
-                info: parse_json_payload(&f)?,
-            },
+            FrameType::Resume => {
+                let info = parse_json_payload(&f)?;
+                let stream = f.stream_id;
+                f.payload.recycle();
+                Event::Resume { stream, info }
+            }
+            FrameType::Nack => {
+                let info = parse_json_payload(&f)?;
+                let stream = f.stream_id;
+                f.payload.recycle();
+                Event::Nack { stream, info }
+            }
             FrameType::Ctrl => unreachable!("ctrl handled by callers"),
         })
     }
@@ -694,6 +712,7 @@ impl SfmEndpoint {
                 Event::Chunk { bytes, .. } => {
                     buf.as_mut_vec().extend_from_slice(&bytes);
                     buf.resync();
+                    pool::give_bytes(bytes);
                 }
                 Event::End { .. } => break,
                 Event::Ack { .. } => {}
@@ -734,11 +753,14 @@ impl SfmEndpoint {
             unit_crcs.push(src.unit_crc(i)?);
         }
         let desc = enrich_descriptor(descriptor, n, chunk, &unit_bytes, &unit_crcs);
-        let desc_bytes = desc.to_string().into_bytes();
+        // One immutable descriptor buffer per transfer, refcount-shared
+        // into the initial Begin and every restart resend — Begin frames
+        // used to clone the serialized descriptor on each (re)send.
+        let desc_bytes: Arc<Vec<u8>> = Arc::new(desc.to_string().into_bytes());
         let mut report = ReliableReport::default();
 
         let begin = || {
-            Frame::new(FrameType::Begin, sid, 0, desc_bytes.clone())
+            Frame::new(FrameType::Begin, sid, 0, Payload::shared(desc_bytes.clone()))
                 .with_flags(flags::RELIABLE)
         };
         self.send_frame(begin())?;
@@ -948,6 +970,7 @@ impl SfmEndpoint {
                 }
                 Event::Chunk { stream, bytes, offset, unit, .. } => {
                     if stream != sid || bytes.is_empty() {
+                        pool::give_bytes(bytes);
                         continue;
                     }
                     let i = unit as usize;
@@ -973,6 +996,7 @@ impl SfmEndpoint {
                             }
                         }
                     };
+                    pool::give_bytes(bytes);
                     if dup {
                         report.dup_chunks += 1;
                         self.stats.dup_chunks.fetch_add(1, Ordering::Relaxed);
@@ -1048,8 +1072,6 @@ impl SfmEndpoint {
             }
         }
         let n_chunks = len.div_ceil(chunk);
-        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, chunk as usize);
-        buf.as_mut_vec().resize(chunk as usize, 0);
         for c in 0..n_chunks {
             let off = c * chunk;
             let clen = chunk.min(len - off) as usize;
@@ -1059,7 +1081,7 @@ impl SfmEndpoint {
                     continue;
                 }
             }
-            self.send_data_chunk(sid, i, src, off, clen, c + 1 == n_chunks, &mut buf)?;
+            self.send_data_chunk(sid, i, src, off, clen, c + 1 == n_chunks)?;
             if as_retransmit {
                 report.retransmit_frames += 1;
                 report.retransmit_bytes += clen as u64;
@@ -1072,6 +1094,8 @@ impl SfmEndpoint {
         Ok(())
     }
 
+    /// Read one chunk straight into a pooled frame payload (no staging
+    /// buffer, no copy beyond the source read) and send it.
     fn send_data_chunk(
         &self,
         sid: u64,
@@ -1080,18 +1104,25 @@ impl SfmEndpoint {
         off: u64,
         clen: usize,
         last: bool,
-        buf: &mut TrackedBuf,
     ) -> Result<()> {
-        src.read_at(i, off, &mut buf.as_mut_vec()[..clen])?;
+        let mut buf = pool::bytes(clen);
+        buf.resize(clen, 0);
+        src.read_at(i, off, &mut buf[..clen])?;
         let (payload, mut fl) = if self.compress {
-            (deflate(&buf.as_slice()[..clen])?, flags::COMPRESSED)
+            let c = deflate(&buf)?;
+            pool::give_bytes(buf);
+            (c, flags::COMPRESSED)
         } else {
-            (buf.as_slice()[..clen].to_vec(), 0)
+            (buf, 0)
         };
         fl |= flags::RELIABLE;
         if last {
             fl |= flags::LAST_CHUNK;
         }
+        // Account the in-flight chunk for the duration of the send (the
+        // sender side of the Table III gauge; pooled storage itself is
+        // not registered while idle).
+        let _in_flight = GaugeReservation::new(&COMM_GAUGE, payload.len() as u64);
         self.send_frame(
             Frame::new(FrameType::Data, sid, i as u64, payload)
                 .with_offset(off)
@@ -1121,8 +1152,6 @@ impl SfmEndpoint {
             }
             let len = src.unit_len(i)?;
             let n_chunks = len.div_ceil(chunk);
-            let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, chunk as usize);
-            buf.as_mut_vec().resize(chunk as usize, 0);
             for range in e.get("missing").and_then(|j| j.as_arr()).unwrap_or(&[]) {
                 let pair = range.as_arr().unwrap_or(&[]);
                 let (Some(off), Some(rlen)) = (
@@ -1136,7 +1165,7 @@ impl SfmEndpoint {
                 while c < n_chunks && c * chunk < end {
                     let coff = c * chunk;
                     let clen = chunk.min(len - coff) as usize;
-                    self.send_data_chunk(sid, i, src, coff, clen, c + 1 == n_chunks, &mut buf)?;
+                    self.send_data_chunk(sid, i, src, coff, clen, c + 1 == n_chunks)?;
                     report.retransmit_frames += 1;
                     report.retransmit_bytes += clen as u64;
                     self.stats.retransmit_frames.fetch_add(1, Ordering::Relaxed);
@@ -1405,6 +1434,10 @@ impl<'a> ObjectSender<'a> {
 
     /// Stream `data` as DATA chunks of at most `chunk_bytes`. May be
     /// called repeatedly within a unit. Memory: O(chunk).
+    ///
+    /// Each chunk is copied exactly once, into a pool-recycled frame
+    /// payload (the old path copied it twice: once into a tracked
+    /// staging buffer and again into the frame).
     pub fn write_all(&mut self, data: &[u8]) -> Result<()> {
         if !self.in_unit {
             bail!("write outside unit");
@@ -1413,13 +1446,13 @@ impl<'a> ObjectSender<'a> {
             let (payload, fl) = if self.ep.compress {
                 (deflate(chunk)?, flags::COMPRESSED)
             } else {
-                (chunk.to_vec(), 0)
+                let mut buf = pool::bytes(chunk.len());
+                buf.extend_from_slice(chunk);
+                (buf, 0)
             };
-            // Account the in-flight chunk buffer.
-            let tracked = TrackedBuf::from_vec(&COMM_GAUGE, payload);
-            let f = Frame::new(FrameType::Data, self.sid, self.next_seq(), tracked.as_slice().to_vec())
-                .with_flags(fl);
-            drop(tracked);
+            // Account the in-flight chunk for the duration of the send.
+            let _in_flight = GaugeReservation::new(&COMM_GAUGE, payload.len() as u64);
+            let f = Frame::new(FrameType::Data, self.sid, self.next_seq(), payload).with_flags(fl);
             self.ep.send_frame(f)?;
         }
         Ok(())

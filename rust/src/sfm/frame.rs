@@ -20,6 +20,7 @@
 //! precise missing ranges for retransmission (see DESIGN.md §Resume).
 
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 pub const MAGIC: [u8; 4] = *b"SFM1";
 pub const VERSION: u8 = 2;
@@ -79,6 +80,102 @@ pub mod flags {
     pub const RELIABLE: u16 = 1 << 2;
 }
 
+/// A frame's payload bytes: owned (possibly pool-recycled) or shared.
+///
+/// `Shared` lets one immutable buffer back many frames without copying —
+/// e.g. the reliable sender's Begin descriptor, re-sent on every resume
+/// round, is built once per session and refcounted into each resend.
+/// Owned payloads on the hot path come from [`crate::memory::pool`] and
+/// are given back by the terminal consumer of the bytes (the TCP driver
+/// after the socket write, the receive loop after reassembly) via
+/// [`Payload::recycle`].
+#[derive(Debug, Clone)]
+pub enum Payload {
+    Owned(Vec<u8>),
+    Shared(Arc<Vec<u8>>),
+}
+
+impl Payload {
+    pub fn empty() -> Payload {
+        Payload::Owned(Vec::new())
+    }
+
+    pub fn shared(data: Arc<Vec<u8>>) -> Payload {
+        Payload::Shared(data)
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared(a) => a,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Take the bytes as an owned Vec (copies only if shared with other
+    /// live references).
+    pub fn into_vec(self) -> Vec<u8> {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared(a) => Arc::try_unwrap(a).unwrap_or_else(|a| a.as_slice().to_vec()),
+        }
+    }
+
+    /// Return owned storage to the global buffer pool (no-op for shared
+    /// payloads — their storage belongs to the session).
+    pub fn recycle(self) {
+        if let Payload::Owned(v) = self {
+            crate::memory::pool::give_bytes(v);
+        }
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Payload {
+        Payload::empty()
+    }
+}
+
+impl std::ops::Deref for Payload {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Payload {
+        Payload::Owned(v)
+    }
+}
+
+impl From<Arc<Vec<u8>>> for Payload {
+    fn from(a: Arc<Vec<u8>>) -> Payload {
+        Payload::Shared(a)
+    }
+}
+
+/// Payload equality is byte equality — sharing is a transport detail.
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
 /// One SFM frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
@@ -90,18 +187,23 @@ pub struct Frame {
     /// for DATA frames of reliable transfers; 0 otherwise. With
     /// compression the offset addresses the *plaintext* position.
     pub offset: u64,
-    pub payload: Vec<u8>,
+    pub payload: Payload,
 }
 
 impl Frame {
-    pub fn new(ftype: FrameType, stream_id: u64, seq: u64, payload: Vec<u8>) -> Frame {
+    pub fn new(
+        ftype: FrameType,
+        stream_id: u64,
+        seq: u64,
+        payload: impl Into<Payload>,
+    ) -> Frame {
         Frame {
             ftype,
             flags: 0,
             stream_id,
             seq,
             offset: 0,
-            payload,
+            payload: payload.into(),
         }
     }
 
@@ -178,7 +280,7 @@ impl Frame {
                 stream_id,
                 seq,
                 offset,
-                payload: Vec::new(),
+                payload: Payload::empty(),
             },
             plen,
             crc,
@@ -201,7 +303,7 @@ impl Frame {
         if buf.len() != HEADER_LEN + plen as usize {
             bail!("frame length mismatch: buf {} payload {plen}", buf.len());
         }
-        f.payload = buf[HEADER_LEN..].to_vec();
+        f.payload = buf[HEADER_LEN..].to_vec().into();
         let actual = crc32fast::hash(&f.payload);
         if actual != crc {
             bail!("frame crc mismatch: got {actual:#x} want {crc:#x}");

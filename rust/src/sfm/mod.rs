@@ -24,5 +24,5 @@ pub use endpoint::{
     BlobSink, ChunkTable, Event, ObjectSender, ReliableReport, ResumePolicy, SfmEndpoint,
     SliceSource, UnitSink, UnitSource, DEFAULT_CHUNK,
 };
-pub use frame::{Frame, FrameType};
+pub use frame::{Frame, FrameType, Payload};
 pub use netsim::{fault_pair, FaultDriver, FaultStats, NetSimDriver};

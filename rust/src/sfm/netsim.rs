@@ -79,6 +79,10 @@ impl Driver for NetSimDriver {
         self.inner.recv_timeout(timeout)
     }
 
+    fn flush(&self) -> Result<()> {
+        self.inner.flush()
+    }
+
     fn name(&self) -> &'static str {
         "netsim"
     }
@@ -227,6 +231,10 @@ impl Driver for FaultDriver {
 
     fn recv_timeout(&self, timeout: Duration) -> Result<Option<Frame>> {
         self.inner.recv_timeout(timeout)
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.inner.flush()
     }
 
     fn name(&self) -> &'static str {

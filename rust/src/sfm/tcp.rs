@@ -3,12 +3,17 @@
 //! offline crate set has no gRPC) and the trait keeps the swap trivial.
 
 use super::driver::Driver;
-use super::frame::{Frame, HEADER_LEN};
+use super::frame::{Frame, FrameType, HEADER_LEN};
+use crate::memory::pool;
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Payloads at least this large bypass the BufWriter with a vectored
+/// header+payload write (one syscall, no copy into the buffer).
+const VECTORED_MIN: usize = 16 * 1024;
 
 pub struct TcpDriver {
     writer: Mutex<BufWriter<TcpStream>>,
@@ -51,23 +56,76 @@ impl TcpDriver {
         let mut hdr = [0u8; HEADER_LEN];
         reader.read_exact(&mut hdr).context("read frame header")?;
         let (mut frame, plen, crc) = Frame::decode_header(&hdr)?;
-        let mut payload = vec![0u8; plen as usize];
+        // Pool-recycled payload buffer: the receive loop gives it back
+        // once the bytes are consumed.
+        let mut payload = pool::bytes(plen as usize);
+        payload.resize(plen as usize, 0);
         reader.read_exact(&mut payload).context("read frame payload")?;
         let actual = crc32fast::hash(&payload);
         if actual != crc {
+            pool::give_bytes(payload);
             bail!("tcp frame crc mismatch (stream {})", frame.stream_id);
         }
-        frame.payload = payload;
+        frame.payload = payload.into();
         Ok(frame)
     }
 }
 
+/// Does sending this frame end a send window? Control frames and the
+/// last chunk of a unit mark points where the peer may act on what it
+/// has; mid-unit DATA frames stay buffered (one flush syscall per
+/// window, not per chunk).
+fn ends_send_window(frame: &Frame) -> bool {
+    frame.ftype != FrameType::Data || frame.is_last_chunk()
+}
+
+/// `write_all` over the vectored pair [header, payload], handling short
+/// writes across the boundary.
+fn write_all_vectored(stream: &mut TcpStream, hdr: &[u8], payload: &[u8]) -> std::io::Result<()> {
+    let total = hdr.len() + payload.len();
+    let mut written = 0usize;
+    while written < total {
+        let n = if written < hdr.len() {
+            let bufs = [IoSlice::new(&hdr[written..]), IoSlice::new(payload)];
+            stream.write_vectored(&bufs)?
+        } else {
+            stream.write(&payload[written - hdr.len()..])?
+        };
+        if n == 0 {
+            return Err(std::io::ErrorKind::WriteZero.into());
+        }
+        written += n;
+    }
+    Ok(())
+}
+
 impl Driver for TcpDriver {
     fn send(&self, frame: Frame) -> Result<()> {
-        let mut w = self.writer.lock().unwrap();
-        w.write_all(&frame.encode_header())?;
-        w.write_all(&frame.payload)?;
-        w.flush()?;
+        let flush_now = ends_send_window(&frame);
+        {
+            let mut w = self.writer.lock().unwrap();
+            let hdr = frame.encode_header();
+            if frame.payload.len() >= VECTORED_MIN {
+                // Large chunk: drain the buffered small frames, then hand
+                // header + payload to the kernel in one vectored write —
+                // the payload is never copied into the BufWriter.
+                w.flush()?;
+                write_all_vectored(w.get_mut(), &hdr, &frame.payload)?;
+            } else {
+                w.write_all(&hdr)?;
+                w.write_all(&frame.payload)?;
+            }
+            if flush_now {
+                w.flush()?;
+            }
+        }
+        // The socket owns the bytes now; recycle the in-flight buffer.
+        frame.payload.recycle();
+        Ok(())
+    }
+
+    fn flush(&self) -> Result<()> {
+        self.writer.lock().unwrap().flush()?;
         Ok(())
     }
 
@@ -128,6 +186,7 @@ mod tests {
         client
             .send(Frame::new(FrameType::Data, 3, 0, vec![7; 1000]))
             .unwrap();
+        client.flush().unwrap(); // bare DATA frame: no window boundary
         let ack = client.recv().unwrap();
         assert_eq!(ack.ftype, FrameType::Ack);
         server.join().unwrap();
@@ -245,6 +304,64 @@ mod tests {
                 .send(Frame::new(FrameType::Data, 1, i, vec![(i % 251) as u8; 64]))
                 .unwrap();
         }
+        // Mid-unit DATA frames batch in the send window; force the
+        // boundary the protocol's control frames normally provide.
+        client.flush().unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn data_frames_batch_until_window_boundary() {
+        // Without a window boundary the frames sit in the sender buffer;
+        // a LAST_CHUNK data frame must flush them through.
+        use crate::sfm::frame::flags;
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            let mut seen = 0;
+            while seen < 20 {
+                let f = d.recv().unwrap();
+                assert_eq!(f.payload.len(), 32);
+                seen += 1;
+            }
+        });
+        let client = TcpDriver::connect(&addr).unwrap();
+        for i in 0..19u64 {
+            client
+                .send(Frame::new(FrameType::Data, 1, i, vec![3u8; 32]))
+                .unwrap();
+        }
+        client
+            .send(
+                Frame::new(FrameType::Data, 1, 19, vec![3u8; 32])
+                    .with_flags(flags::LAST_CHUNK),
+            )
+            .unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn vectored_large_payload_roundtrip() {
+        // Payloads over VECTORED_MIN take the vectored fast path; the
+        // peer must see identical bytes.
+        let listener = loopback_listener().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let payload: Vec<u8> = (0..VECTORED_MIN * 3).map(|i| (i % 251) as u8).collect();
+        let want = payload.clone();
+        let server = std::thread::spawn(move || {
+            let d = TcpDriver::accept(&listener).unwrap();
+            d.recv().unwrap()
+        });
+        let client = TcpDriver::connect(&addr).unwrap();
+        client
+            .send(
+                Frame::new(FrameType::Data, 4, 0, payload)
+                    .with_flags(crate::sfm::frame::flags::LAST_CHUNK),
+            )
+            .unwrap();
+        let got = server.join().unwrap();
+        assert_eq!(got.payload, want);
+        assert_eq!(got.stream_id, 4);
     }
 }

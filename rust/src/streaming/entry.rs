@@ -23,7 +23,7 @@ use super::object::{self, EntryFlow, TransferStats};
 use super::wire::{self, Entry};
 use crate::config::StreamingMode;
 use crate::filter::{EntryChain, FilterContext, FilterPoint, FilterSet};
-use crate::memory::{TrackedBuf, COMM_GAUGE};
+use crate::memory::{pool, PooledBuf, TrackedBuf, COMM_GAUGE};
 use crate::sfm::{ResumePolicy, SfmEndpoint, UnitSource};
 use crate::tensor::{ParamContainer, Tensor};
 use crate::util::json::Json;
@@ -31,6 +31,24 @@ use anyhow::{anyhow, bail, Result};
 use std::io::Write;
 use std::path::Path;
 use std::time::Duration;
+
+/// Clone one container entry with pool-recycled storage — the per-entry
+/// fp32 copy handed to the outbound chain (the chain consumes it, and
+/// the quantize filter / [`recycle_entry`] give the bytes back).
+fn pooled_entry_clone(weights: &ParamContainer, name: &str) -> Tensor {
+    let src = weights.get(name).expect("name from names()");
+    let mut data = pool::bytes(src.data.len());
+    data.extend_from_slice(&src.data);
+    Tensor::new(src.meta.shape.clone(), src.meta.dtype, data)
+}
+
+/// Return a fully consumed (serialized) entry's buffers to the pool.
+fn recycle_entry(e: Entry) {
+    match e {
+        Entry::Plain(_, t) => pool::give_bytes(t.data),
+        Entry::Quantized(_, q) => crate::quant::recycle(q),
+    }
+}
 
 /// Can this filter point run entry-streamed? (Every filter in the chain
 /// implements the streaming contract.)
@@ -66,33 +84,40 @@ pub fn outbound_headers(
     let n = weights.len();
     let mut lens = Vec::with_capacity(n);
     let mut crcs = Vec::with_capacity(n);
-    let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, 0);
-    for (i, (name, t)) in weights.iter().enumerate() {
-        let e = chain.entry(i, Entry::Plain(name.to_string(), t.clone()), ctx)?;
-        buf.as_mut_vec().clear();
+    let mut buf = PooledBuf::take(0);
+    for (i, name) in weights.names().iter().enumerate() {
+        let t = pooled_entry_clone(weights, name);
+        let e = chain.entry(i, Entry::Plain(name.clone(), t), ctx)?;
+        buf.clear();
         wire::write_entry(buf.as_mut_vec(), &e)?;
         buf.resync();
         lens.push(buf.len() as u64);
         crcs.push(crc32fast::hash(buf.as_slice()));
+        recycle_entry(e);
     }
     chain.finish(ctx)?;
     Ok(OutboundPlan { lens, crcs })
 }
 
-/// One entry transformed for the wire, serialized into a tracked buffer.
+/// One entry transformed for the wire, serialized into a pooled buffer.
+/// The transformed entry's own buffers (quantized payload, absmax, the
+/// pooled fp32 clone) cycle back to the pool here — per-entry steady
+/// state is allocation-free.
 fn transformed_unit(
     chain: &mut EntryChain,
     ctx: &mut FilterContext,
     weights: &ParamContainer,
     i: usize,
-) -> Result<(String, TrackedBuf)> {
+) -> Result<(String, PooledBuf)> {
     let name = weights.names()[i].clone();
-    let t = weights.get(&name).expect("index from names()").clone();
-    let e = chain.entry(i, Entry::Plain(name.clone(), t), ctx)?;
-    let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, e.wire_len());
+    let t = pooled_entry_clone(weights, &name);
+    let e = chain.entry(i, Entry::Plain(name, t), ctx)?;
+    let mut buf = PooledBuf::take(e.wire_len());
     wire::write_entry(buf.as_mut_vec(), &e)?;
     buf.resync();
-    Ok((e.name().to_string(), buf))
+    let name = e.name().to_string();
+    recycle_entry(e);
+    Ok((name, buf))
 }
 
 /// [`UnitSource`] that quantizes/transforms one entry at a time on
@@ -104,7 +129,7 @@ struct TransformSource<'a> {
     chain: EntryChain,
     ctx: FilterContext,
     cache_idx: usize,
-    cache: Option<TrackedBuf>,
+    cache: Option<PooledBuf>,
     lens: Vec<Option<u64>>,
     crcs: Vec<Option<u32>>,
 }
@@ -139,7 +164,7 @@ impl<'a> TransformSource<'a> {
         })
     }
 
-    fn ensure(&mut self, i: usize) -> Result<&TrackedBuf> {
+    fn ensure(&mut self, i: usize) -> Result<&PooledBuf> {
         if self.cache_idx != i || self.cache.is_none() {
             self.cache = None; // release the previous entry's buffer first
             let (_, buf) = transformed_unit(&mut self.chain, &mut self.ctx, self.weights, i)?;
@@ -272,10 +297,12 @@ pub fn send_weights_filtered(
                 crate::util::bytes::put_u32(v, wire::MSG_MAGIC);
                 crate::util::bytes::put_u32(v, n as u32);
             }
-            for (i, (name, t)) in weights.iter().enumerate() {
-                let e = chain.entry(i, Entry::Plain(name.to_string(), t.clone()), &mut cctx)?;
+            for (i, name) in weights.names().iter().enumerate() {
+                let t = pooled_entry_clone(weights, name);
+                let e = chain.entry(i, Entry::Plain(name.clone(), t), &mut cctx)?;
                 wire::write_entry(blob.as_mut_vec(), &e)?;
                 blob.resync();
+                recycle_entry(e);
             }
             let total = blob.len() as u64;
             if let Some(policy) = reliable {
@@ -318,10 +345,11 @@ pub fn send_weights_filtered(
                 w.write_all(&head)?;
                 let mut cctx = ctx.clone();
                 chain.begin(&mut cctx)?;
-                for (i, (name, t)) in weights.iter().enumerate() {
-                    let e =
-                        chain.entry(i, Entry::Plain(name.to_string(), t.clone()), &mut cctx)?;
+                for (i, name) in weights.names().iter().enumerate() {
+                    let t = pooled_entry_clone(weights, name);
+                    let e = chain.entry(i, Entry::Plain(name.clone(), t), &mut cctx)?;
                     wire::write_entry(&mut w, &e)?;
+                    recycle_entry(e);
                 }
                 w.flush()?;
                 std::fs::metadata(&path)?.len()

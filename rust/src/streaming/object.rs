@@ -22,7 +22,7 @@
 
 use super::wire::{self, Entry, TransferManifest, WeightsMsg};
 use crate::config::StreamingMode;
-use crate::memory::{TrackedBuf, COMM_GAUGE};
+use crate::memory::{pool, PooledBuf, TrackedBuf, COMM_GAUGE};
 use crate::sfm::{
     ChunkTable, Event, ReliableReport, ResumePolicy, SfmEndpoint, SliceSource, UnitSink,
     UnitSource,
@@ -324,7 +324,7 @@ fn reliable_stats(wire_bytes: u64, entries: usize, report: &ReliableReport) -> T
 struct MsgSource<'a> {
     entries: Vec<wire::EntryRef<'a>>,
     cache_idx: usize,
-    cache: Option<TrackedBuf>,
+    cache: Option<PooledBuf>,
     crcs: Vec<Option<u32>>,
 }
 
@@ -340,10 +340,10 @@ impl<'a> MsgSource<'a> {
         }
     }
 
-    fn ensure(&mut self, i: usize) -> Result<&TrackedBuf> {
+    fn ensure(&mut self, i: usize) -> Result<&PooledBuf> {
         if self.cache_idx != i || self.cache.is_none() {
             self.cache = None; // release the previous entry's buffer first
-            let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, self.entries[i].wire_len());
+            let mut buf = PooledBuf::take(self.entries[i].wire_len());
             self.entries[i].write_to(buf.as_mut_vec())?;
             buf.resync();
             self.cache = Some(buf);
@@ -622,15 +622,15 @@ enum EntryStorage {
 /// arrives up front (descriptor geometry), and eagerly allocating every
 /// entry would regress container streaming's O(largest entry) bound.
 struct ContainerUnit {
-    buf: Option<TrackedBuf>,
+    buf: Option<PooledBuf>,
     len: u64,
     crc: u32,
 }
 
 impl ContainerUnit {
-    fn buf_mut(&mut self) -> &mut TrackedBuf {
+    fn buf_mut(&mut self) -> &mut PooledBuf {
         if self.buf.is_none() {
-            let mut b = TrackedBuf::with_capacity(&COMM_GAUGE, self.len as usize);
+            let mut b = PooledBuf::take(self.len as usize);
             b.as_mut_vec().resize(self.len as usize, 0);
             b.resync();
             self.buf = Some(b);
@@ -904,6 +904,7 @@ fn recv_regular_entries(
             Event::Chunk { bytes, .. } => {
                 blob.as_mut_vec().extend_from_slice(&bytes);
                 blob.resync();
+                pool::give_bytes(bytes);
             }
             Event::End { .. } => break,
             Event::Ack { .. } => {}
@@ -956,7 +957,7 @@ fn send_container(ep: &SfmEndpoint, msg: &WeightsMsg) -> Result<TransferStats> {
     let entries = wire::entries_of_ref(msg);
     for (i, eref) in entries.iter().enumerate() {
         // Serialize ONE entry — the container-streaming memory bound.
-        let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, eref.wire_len());
+        let mut buf = PooledBuf::take(eref.wire_len());
         eref.write_to(buf.as_mut_vec())?;
         buf.resync();
         tx.begin_unit(Json::obj(vec![
@@ -985,7 +986,7 @@ fn recv_container_entries(
     let mut delivered = 0usize;
     let mut discard = false;
     let mut wire_bytes = 0u64;
-    let mut unit_buf: Option<TrackedBuf> = None;
+    let mut unit_buf: Option<PooledBuf> = None;
     let mut unit_idx = 0usize;
     let mut next_idx = 0usize;
     loop {
@@ -1003,7 +1004,7 @@ fn recv_container_entries(
                     .and_then(|j| j.as_usize())
                     .unwrap_or(next_idx);
                 next_idx = unit_idx + 1;
-                unit_buf = Some(TrackedBuf::with_capacity(&COMM_GAUGE, bytes));
+                unit_buf = Some(PooledBuf::take(bytes));
             }
             Event::Chunk { bytes, last, .. } => {
                 let buf = unit_buf
@@ -1011,6 +1012,7 @@ fn recv_container_entries(
                     .ok_or_else(|| anyhow!("chunk outside unit"))?;
                 buf.as_mut_vec().extend_from_slice(&bytes);
                 buf.resync();
+                pool::give_bytes(bytes);
                 if last {
                     let blob = unit_buf.take().unwrap();
                     wire_bytes += blob.len() as u64;
@@ -1107,8 +1109,9 @@ pub fn send_file(ep: &SfmEndpoint, path: &Path, entries: usize) -> Result<Transf
     ]))?;
     let f = std::fs::File::open(path)?;
     let mut r = BufReader::with_capacity(ep.chunk_bytes, f);
-    let mut chunk = TrackedBuf::with_capacity(&COMM_GAUGE, ep.chunk_bytes);
+    let mut chunk = PooledBuf::take(ep.chunk_bytes);
     chunk.as_mut_vec().resize(ep.chunk_bytes, 0);
+    chunk.resync();
     loop {
         let n = r.read(chunk.as_mut_vec())?;
         if n == 0 {
@@ -1233,6 +1236,7 @@ pub fn recv_file(ep: &SfmEndpoint, path: &Path) -> Result<TransferStats> {
             Event::Chunk { bytes, .. } => {
                 wire_bytes += bytes.len() as u64;
                 w.write_all(&bytes)?;
+                pool::give_bytes(bytes);
             }
             Event::End { .. } => break,
             Event::Ack { .. } => {}

@@ -197,6 +197,24 @@ fn read_exact_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
     Ok(v)
 }
 
+/// Like [`read_exact_vec`] but pool-backed for pool-sized payloads whose
+/// declared length has already been validated against the entry header
+/// (shape-consistent): a lie can cost at most one pooled class, and the
+/// hot receive loop stops allocating per entry. Oversize payloads keep
+/// the incremental defensive read.
+fn read_payload_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
+    if n > crate::memory::pool::MAX_POOLED_BYTES {
+        return read_exact_vec(r, n);
+    }
+    let mut v = crate::memory::pool::bytes(n);
+    let got = r.take(n as u64).read_to_end(&mut v)?;
+    if got != n {
+        crate::memory::pool::give_bytes(v);
+        bail!("truncated input: wanted {n} bytes, stream held {got}");
+    }
+    Ok(v)
+}
+
 fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
     let mut b2 = [0u8; 2];
     r.read_exact(&mut b2)?;
@@ -225,8 +243,11 @@ fn read_f32_vec<R: Read>(r: &mut R, n: usize, cap: usize) -> Result<Vec<f32>> {
     if n > cap {
         bail!("f32 vector length {n} exceeds cap {cap}");
     }
-    let raw = read_exact_vec(r, n * 4)?;
-    Ok(b::bytes_to_f32_vec(&raw))
+    let raw = read_payload_vec(r, n * 4)?;
+    let mut out = crate::memory::pool::f32s(n);
+    b::extend_f32_from_bytes(&mut out, &raw);
+    crate::memory::pool::give_bytes(raw);
+    Ok(out)
 }
 
 /// Maximum sane tensor payload (guards corrupt lengths): 16 GiB.
@@ -295,11 +316,11 @@ pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
         if block_size != 0 || absmax_n != 0 || codebook_n != 0 {
             bail!("{name}: plain entry carries quantization metadata");
         }
-        let payload = read_exact_vec(r, payload_len as usize)?;
+        let payload = read_payload_vec(r, payload_len as usize)?;
         Ok(Entry::Plain(name, Tensor::new(shape, DType::F32, payload)))
     } else {
         let scheme = scheme_from_id(kind)?;
-        let payload = read_exact_vec(r, payload_len as usize)?;
+        let payload = read_payload_vec(r, payload_len as usize)?;
         Ok(Entry::Quantized(
             name,
             QuantizedTensor {

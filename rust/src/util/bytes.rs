@@ -97,10 +97,19 @@ pub fn f32_slice_as_bytes(xs: &[f32]) -> &[u8] {
 
 /// Decode a little-endian f32 byte buffer into a Vec<f32>.
 pub fn bytes_to_f32_vec(b: &[u8]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(b.len() / 4);
+    extend_f32_from_bytes(&mut out, b);
+    out
+}
+
+/// Decode a little-endian f32 byte buffer appending into `out` (the
+/// pooled-buffer form of [`bytes_to_f32_vec`]).
+pub fn extend_f32_from_bytes(out: &mut Vec<f32>, b: &[u8]) {
     assert_eq!(b.len() % 4, 0, "f32 buffer length must be a multiple of 4");
-    b.chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
+    out.extend(
+        b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
 }
 
 #[cfg(test)]

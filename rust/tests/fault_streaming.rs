@@ -312,6 +312,10 @@ impl Driver for CutoffDriver {
         self.inner.recv_timeout(timeout)
     }
 
+    fn flush(&self) -> anyhow::Result<()> {
+        self.inner.flush()
+    }
+
     fn name(&self) -> &'static str {
         "cutoff"
     }

@@ -1,0 +1,233 @@
+//! Kernel-equivalence property tests: the chunk-parallel, pool-backed
+//! codecs must be **bit-identical** to the scalar reference — same
+//! payload bytes, same metadata, same wire bytes, same decoded f32 bits —
+//! for every scheme, every tail shape (odd lengths, partial blocks,
+//! empty, one element) and every thread count. Quantization is lossy;
+//! parallelization must not be.
+
+use flare::config::QuantScheme;
+use flare::quant::{
+    dequantize_into_scalar, dequantize_into_with, quantize_scalar, quantize_with_threads,
+};
+use flare::streaming::wire::{write_entry, Entry};
+use flare::tensor::Tensor;
+use flare::util::rng::SplitMix64;
+
+const SCHEMES: [QuantScheme; 5] = [
+    QuantScheme::Blockwise8,
+    QuantScheme::Fp4,
+    QuantScheme::Nf4,
+    QuantScheme::Fp16,
+    QuantScheme::Bf16,
+];
+
+/// Lengths chosen to hit every boundary case: empty, single element,
+/// odd nibble tails, exact/±1 block boundaries for both block sizes
+/// (64 and 4096), and sizes large enough that every thread count in
+/// {2, 8} actually splits the input (8 spans need >= 8 x the 64Ki
+/// per-thread minimum — 524_289 is that, plus an odd tail).
+const LENGTHS: [usize; 13] = [
+    0,
+    1,
+    2,
+    63,
+    64,
+    65,
+    4095,
+    4096,
+    4097,
+    9_999,
+    262_144,
+    262_147,
+    524_289,
+];
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn test_tensor(n: usize, seed: u64) -> Tensor {
+    let mut rng = SplitMix64::new(seed);
+    let mut v = vec![0f32; n];
+    rng.fill_normal(&mut v, 0.05);
+    // Salt in exact zeros, negatives and block-dominating outliers so
+    // ties and the absmax element itself are exercised.
+    for (i, x) in v.iter_mut().enumerate() {
+        match i % 97 {
+            0 => *x = 0.0,
+            13 => *x = -*x,
+            41 => *x *= 100.0,
+            _ => {}
+        }
+    }
+    Tensor::from_f32(vec![n], v)
+}
+
+fn wire_bytes_of(e: &Entry) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_entry(&mut buf, e).unwrap();
+    buf
+}
+
+#[test]
+fn parallel_encode_bit_identical_to_scalar() {
+    for scheme in SCHEMES {
+        for (li, &n) in LENGTHS.iter().enumerate() {
+            let t = test_tensor(n, 0xE0 + li as u64);
+            let want = quantize_scalar(scheme, &t).unwrap();
+            for threads in THREADS {
+                // Twice per config: the second pass runs on recycled pool
+                // buffers and must not see stale bytes.
+                for pass in 0..2 {
+                    let got = quantize_with_threads(scheme, &t, threads).unwrap();
+                    assert_eq!(
+                        got.payload, want.payload,
+                        "{scheme:?} n={n} threads={threads} pass={pass}: payload"
+                    );
+                    assert_eq!(
+                        got.meta, want.meta,
+                        "{scheme:?} n={n} threads={threads} pass={pass}: meta"
+                    );
+                    assert_eq!(got.orig, want.orig);
+                    // The wire form (what actually leaves the machine)
+                    // must match byte for byte.
+                    let got_wire = wire_bytes_of(&Entry::Quantized("w".into(), got.clone()));
+                    let want_wire = wire_bytes_of(&Entry::Quantized("w".into(), want.clone()));
+                    assert_eq!(
+                        got_wire, want_wire,
+                        "{scheme:?} n={n} threads={threads}: wire bytes"
+                    );
+                    flare::quant::recycle(got);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_decode_bit_identical_to_scalar() {
+    for scheme in SCHEMES {
+        for (li, &n) in LENGTHS.iter().enumerate() {
+            let t = test_tensor(n, 0xD0 + li as u64);
+            let q = quantize_scalar(scheme, &t).unwrap();
+            let mut want = Vec::new();
+            dequantize_into_scalar(&q, &mut want).unwrap();
+            for threads in THREADS {
+                for pass in 0..2 {
+                    let mut got = Vec::new();
+                    dequantize_into_with(&q, &mut got, threads).unwrap();
+                    assert_eq!(got.len(), want.len());
+                    let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        got_bits, want_bits,
+                        "{scheme:?} n={n} threads={threads} pass={pass}: decoded bits"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_roundtrip_appends_like_scalar() {
+    // dequantize_into appends to a non-empty buffer (the per-session
+    // scratch reuse pattern); parallel spans must respect the offset.
+    let t = test_tensor(70_000, 7);
+    for scheme in SCHEMES {
+        let q = quantize_with_threads(scheme, &t, 8).unwrap();
+        let mut scalar_out = vec![1.5f32; 3];
+        dequantize_into_scalar(&q, &mut scalar_out).unwrap();
+        let mut par_out = vec![1.5f32; 3];
+        dequantize_into_with(&q, &mut par_out, 8).unwrap();
+        assert_eq!(scalar_out.len(), par_out.len());
+        assert_eq!(
+            scalar_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            par_out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{scheme:?}: append-offset decode"
+        );
+        assert_eq!(par_out[..3], [1.5f32; 3], "prefix must be untouched");
+    }
+}
+
+#[test]
+fn global_knob_path_matches_explicit_threads() {
+    // quantize() reads the process-global knob; pin it and compare with
+    // the explicit-thread form (other tests in this binary don't touch
+    // the knob).
+    let t = test_tensor(100_000, 11);
+    for scheme in SCHEMES {
+        flare::quant::set_encode_threads(3);
+        let via_knob = flare::quant::quantize(scheme, &t).unwrap();
+        let explicit = quantize_with_threads(scheme, &t, 3).unwrap();
+        let scalar = quantize_scalar(scheme, &t).unwrap();
+        assert_eq!(via_knob.payload, explicit.payload, "{scheme:?}");
+        assert_eq!(via_knob.payload, scalar.payload, "{scheme:?}");
+        assert_eq!(via_knob.meta, scalar.meta, "{scheme:?}");
+        flare::quant::set_encode_threads(0);
+    }
+}
+
+#[test]
+fn wire_supplied_block_size_decodes_identically_in_parallel() {
+    // The decoder splits spans on the *wire-supplied* block size, which
+    // an attacker (or just a different encoder) controls. Legal but
+    // non-default geometries — odd sizes, one giant block, exact-fit —
+    // must decode to the same bits at every thread count. The absmax
+    // table is re-synthesized to match each declared grid (codes are
+    // grid-independent on the wire).
+    let n = 50_000usize;
+    let t = test_tensor(n, 23);
+    let base8 = quantize_scalar(QuantScheme::Blockwise8, &t).unwrap();
+    for bs in [999usize, 1000, 4096, n, 65_536] {
+        let mut q = base8.clone();
+        q.meta.block_size = bs;
+        q.meta.absmax = (0..n.div_ceil(bs))
+            .map(|i| 0.5 + (i % 7) as f32 * 0.25)
+            .collect();
+        let mut want = Vec::new();
+        dequantize_into_scalar(&q, &mut want).unwrap();
+        for threads in THREADS {
+            let mut got = Vec::new();
+            dequantize_into_with(&q, &mut got, threads).unwrap();
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "8-bit bs={bs} threads={threads}"
+            );
+        }
+    }
+
+    // 4-bit: block size must be even, but is otherwise wire-controlled.
+    let base4 = quantize_scalar(QuantScheme::Nf4, &t).unwrap();
+    for bs in [128usize, 2_000, 49_998, 65_536] {
+        let mut q = base4.clone();
+        q.meta.block_size = bs;
+        q.meta.absmax = (0..n.div_ceil(bs))
+            .map(|i| 1.0 + (i % 5) as f32 * 0.5)
+            .collect();
+        let mut want = Vec::new();
+        dequantize_into_scalar(&q, &mut want).unwrap();
+        for threads in THREADS {
+            let mut got = Vec::new();
+            dequantize_into_with(&q, &mut got, threads).unwrap();
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "4-bit bs={bs} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_meta_rejected_by_parallel_decoders_too() {
+    let t = test_tensor(10_000, 31);
+    for scheme in [QuantScheme::Blockwise8, QuantScheme::Nf4] {
+        let mut q = quantize_scalar(scheme, &t).unwrap();
+        q.meta.absmax.pop();
+        let mut out = Vec::new();
+        assert!(
+            dequantize_into_with(&q, &mut out, 8).is_err(),
+            "{scheme:?}: parallel decode must validate like the scalar path"
+        );
+    }
+}

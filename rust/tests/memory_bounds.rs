@@ -52,11 +52,18 @@ struct GatherRun {
     peak_comm: u64,
     rss_peak_delta: i64,
     global: ParamContainer,
+    report: Report,
 }
 
 /// One federated round: `clients` concurrent nf4 sessions over faulted
 /// reliable links, entry-streamed or whole-container per `entry_fold`.
 fn run_gather(clients: usize, entry_fold: bool, faulted: bool) -> GatherRun {
+    run_gather_rounds(clients, entry_fold, faulted, 1)
+}
+
+/// [`run_gather`] over a configurable round count (the pool steady-state
+/// probe needs multi-round runs).
+fn run_gather_rounds(clients: usize, entry_fold: bool, faulted: bool, rounds: usize) -> GatherRun {
     static SEQ: AtomicU64 = AtomicU64::new(0);
     let spool = std::env::temp_dir().join(format!(
         "flare_membound_{}_{}",
@@ -70,7 +77,7 @@ fn run_gather(clients: usize, entry_fold: bool, faulted: bool) -> GatherRun {
         name: "membound".into(),
         model: "llama-mini".into(), // unused by the mock path
         clients,
-        rounds: 1,
+        rounds,
         quant: QuantScheme::Nf4,
         streaming: StreamingMode::Container,
         chunk_bytes: 8 * 1024,
@@ -146,6 +153,7 @@ fn run_gather(clients: usize, entry_fold: bool, faulted: bool) -> GatherRun {
         peak_comm,
         rss_peak_delta: rss_delta,
         global,
+        report,
     }
 }
 
@@ -201,6 +209,58 @@ fn entry_streamed_gather_bounds_comm_memory() {
         buffered.peak_comm,
         buffered.peak_comm / entry.peak_comm.max(1),
         bound
+    );
+}
+
+/// Buffer-pool steady state: after a warmup run has populated the pool,
+/// an identical multi-round run must serve its frame-path buffers from
+/// the pool — per-round allocations (pool misses) drop to ~zero and the
+/// new `pool_hit_rate` metric reports it.
+#[test]
+fn frame_pool_reaches_steady_state() {
+    let _guard = SERIAL.lock().unwrap();
+    let clients = 2usize;
+
+    // Warmup: first-touch allocations populate the pool (and JIT the
+    // lazy codec tables).
+    let _ = run_gather_rounds(clients, true, false, 1);
+
+    let before = flare::memory::pool::global().snapshot();
+    let run = run_gather_rounds(clients, true, false, 3);
+    let traffic = flare::memory::pool::global().snapshot().since(&before);
+
+    println!(
+        "pool traffic over 3 steady-state rounds: {} takes, {} hits, {} misses ({}% hit)",
+        traffic.takes(),
+        traffic.hits,
+        traffic.misses,
+        (100.0 * traffic.hit_rate()) as u64
+    );
+    assert!(
+        traffic.takes() > 50,
+        "expected real pool traffic, saw {} takes",
+        traffic.takes()
+    );
+    // Steady state: the frame path recycles instead of allocating. A few
+    // misses are tolerated (thread-interleaving can momentarily drain a
+    // class), but the per-round allocation rate must be ~zero.
+    assert!(
+        traffic.hit_rate() >= 0.80,
+        "steady-state hit rate {:.3} ({} misses / {} takes)",
+        traffic.hit_rate(),
+        traffic.misses,
+        traffic.takes()
+    );
+
+    // The metric travels in the run report.
+    let rate = *run
+        .report
+        .scalars
+        .get("pool_hit_rate")
+        .expect("controller must report pool_hit_rate");
+    assert!(
+        (0.0..=1.0).contains(&rate) && rate >= 0.80,
+        "reported pool_hit_rate {rate}"
     );
 }
 

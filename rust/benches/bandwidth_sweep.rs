@@ -45,18 +45,39 @@ fn one_transfer(weights: &flare::tensor::ParamContainer, scheme: QuantScheme, bw
 }
 
 fn main() {
-    let spec = ModelSpec::llama32_1b_scaled(8);
+    // `--smoke`: CI-sized single-iteration sweep that keeps the
+    // BENCH_JSON output compilable and parseable.
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let spec = if smoke {
+        ModelSpec::llama32_1b_scaled(64)
+    } else {
+        ModelSpec::llama32_1b_scaled(8)
+    };
     let weights = materialize(&spec, 31);
     println!(
         "one global-weight transfer, {} ({}), container streaming + netsim",
         spec.name,
         human(spec.total_bytes_f32())
     );
+    let sweep: &[u64] = if smoke {
+        &[1000, 10_000]
+    } else {
+        &[10, 100, 1000, 10_000]
+    };
     let mut rows = Vec::new();
-    for bw in [10u64, 100, 1000, 10_000] {
+    for &bw in sweep {
         let fp32 = one_transfer(&weights, QuantScheme::None, bw);
         let fp16 = one_transfer(&weights, QuantScheme::Fp16, bw);
         let nf4 = one_transfer(&weights, QuantScheme::Nf4, bw);
+        for (scheme, secs) in [("fp32", fp32), ("fp16", fp16), ("nf4", nf4)] {
+            let j = flare::util::json::Json::obj(vec![
+                ("bench", flare::util::json::Json::str("bandwidth_sweep")),
+                ("bw_mbps", flare::util::json::Json::num(bw as f64)),
+                ("scheme", flare::util::json::Json::str(scheme)),
+                ("secs", flare::util::json::Json::num(secs)),
+            ]);
+            println!("BENCH_JSON {j}");
+        }
         rows.push(vec![
             format!("{bw} Mbps"),
             format!("{fp32:.2}"),

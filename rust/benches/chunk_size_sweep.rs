@@ -11,11 +11,21 @@ use flare::util::bench::print_table;
 use flare::util::bytes::human;
 
 fn main() {
-    let spec = ModelSpec::llama32_1b_scaled(8);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let spec = if smoke {
+        ModelSpec::llama32_1b_scaled(64)
+    } else {
+        ModelSpec::llama32_1b_scaled(8)
+    };
     let weights = materialize(&spec, 21);
     let spool = std::env::temp_dir();
+    let sweep: &[usize] = if smoke {
+        &[256 << 10, 1 << 20]
+    } else {
+        &[64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20]
+    };
     let mut rows = Vec::new();
-    for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20] {
+    for &chunk in sweep {
         let msg = WeightsMsg::Plain(weights.clone());
         let pair = inmem::pair(16);
         let a = SfmEndpoint::new(pair.a).with_chunk(chunk);
@@ -32,6 +42,20 @@ fn main() {
         let (_got, stats) = streaming::recv_weights(&b, Some(&spool)).unwrap();
         tx.join().unwrap();
         let secs = t0.elapsed().as_secs_f64();
+        let j = flare::util::json::Json::obj(vec![
+            ("bench", flare::util::json::Json::str("chunk_size_sweep")),
+            ("chunk_bytes", flare::util::json::Json::num(chunk as f64)),
+            (
+                "peak_comm_bytes",
+                flare::util::json::Json::num(COMM_GAUGE.peak() as f64),
+            ),
+            ("secs", flare::util::json::Json::num(secs)),
+            (
+                "mb_s",
+                flare::util::json::Json::num(stats.wire_bytes as f64 / (1 << 20) as f64 / secs),
+            ),
+        ]);
+        println!("BENCH_JSON {j}");
         rows.push(vec![
             human(chunk as u64),
             human(COMM_GAUGE.peak()),

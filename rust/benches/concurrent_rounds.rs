@@ -77,19 +77,24 @@ fn run_shaped(job: &JobConfig, nets: &[NetProfile]) -> Vec<RoundStats> {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = bench_spec();
     let model_bytes = spec.total_bytes_f32();
     let kb = 1024u64;
-    let bws: [u64; 8] = [
-        1500 * kb,
-        2000 * kb,
-        2500 * kb,
-        3000 * kb,
-        4000 * kb,
-        5000 * kb,
-        6000 * kb,
-        8000 * kb,
-    ];
+    let bws: Vec<u64> = if smoke {
+        vec![4000 * kb, 6000 * kb, 8000 * kb, 10_000 * kb]
+    } else {
+        vec![
+            1500 * kb,
+            2000 * kb,
+            2500 * kb,
+            3000 * kb,
+            4000 * kb,
+            5000 * kb,
+            6000 * kb,
+            8000 * kb,
+        ]
+    };
     let nets: Vec<NetProfile> = bws
         .iter()
         .map(|&b| NetProfile {
@@ -128,7 +133,7 @@ fn main() {
     let mut job = JobConfig {
         name: "concurrent-rounds".into(),
         clients: n,
-        rounds: 2,
+        rounds: if smoke { 1 } else { 2 },
         quant: QuantScheme::None,
         streaming: StreamingMode::Regular,
         chunk_bytes: 64 * 1024,
@@ -139,9 +144,22 @@ fn main() {
         ..Default::default()
     };
 
+    let bench_json = |phase: &str, r: &RoundStats| {
+        let j = flare::util::json::Json::obj(vec![
+            ("bench", flare::util::json::Json::str("concurrent_rounds")),
+            ("phase", flare::util::json::Json::str(phase.to_string())),
+            ("round", flare::util::json::Json::num(r.round as f64)),
+            ("secs", flare::util::json::Json::num(r.seconds)),
+            ("sampled", flare::util::json::Json::num(r.sampled as f64)),
+            ("completed", flare::util::json::Json::num(r.completed as f64)),
+        ]);
+        println!("BENCH_JSON {j}");
+    };
+
     let full = run_shaped(&job, &nets);
     let mut rows = Vec::new();
     for r in &full {
+        bench_json("full", r);
         rows.push(vec![
             format!("full {}/{n}", r.completed),
             format!("{:.2}", r.seconds),
@@ -151,13 +169,14 @@ fn main() {
     }
 
     // Sampling half the fleet: rounds track the slowest *selected* client.
-    job.rounds = 4;
+    job.rounds = if smoke { 2 } else { 4 };
     job.round_policy = RoundPolicy {
         sample_fraction: 0.5,
         ..RoundPolicy::default()
     };
     let sampled = run_shaped(&job, &nets);
     for r in &sampled {
+        bench_json("sampled", r);
         rows.push(vec![
             format!("sampled {}/{n}", r.sampled),
             format!("{:.2}", r.seconds),

@@ -12,7 +12,7 @@ use flare::util::json::Json;
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-fn one_transfer(total: usize, chunk: usize, drop_rate: f64) -> Vec<String> {
+fn one_transfer(total: usize, chunk: usize, drop_rate: f64) -> (Vec<String>, Json) {
     let plan = FaultProfile {
         seed: 0xBEEF ^ (drop_rate * 1000.0) as u64,
         drop_rate,
@@ -40,24 +40,53 @@ fn one_transfer(total: usize, chunk: usize, drop_rate: f64) -> Vec<String> {
     let secs = t0.elapsed().as_secs_f64();
     assert_eq!(got.len(), total);
     let offered = a.stats.bytes_sent.load(Ordering::Relaxed);
-    vec![
+    let row = vec![
         format!("{:.0} %", drop_rate * 100.0),
         format!("{:.0}", total as f64 / (1 << 20) as f64 / secs),
         format!("{:.3}x", offered as f64 / total as f64),
         report.retransmit_frames.to_string(),
         report.nack_rounds.to_string(),
-    ]
+    ];
+    let json = Json::obj(vec![
+        ("bench", Json::str("fault_resilience")),
+        ("drop_rate", Json::num(drop_rate)),
+        (
+            "goodput_mb_s",
+            Json::num(total as f64 / (1 << 20) as f64 / secs),
+        ),
+        (
+            "overhead_ratio",
+            Json::num(offered as f64 / total as f64),
+        ),
+        (
+            "retransmit_frames",
+            Json::num(report.retransmit_frames as f64),
+        ),
+        ("nack_rounds", Json::num(report.nack_rounds as f64)),
+    ]);
+    (row, json)
 }
 
 fn main() {
-    let total = 64 << 20; // 64 MB
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let total = if smoke { 4 << 20 } else { 64 << 20 };
     let chunk = 256 << 10;
+    let sweep: &[f64] = if smoke {
+        &[0.0, 0.05]
+    } else {
+        &[0.0, 0.01, 0.05, 0.10, 0.20]
+    };
     let mut rows = Vec::new();
-    for drop in [0.0, 0.01, 0.05, 0.10, 0.20] {
-        rows.push(one_transfer(total, chunk, drop));
+    for &drop in sweep {
+        let (row, json) = one_transfer(total, chunk, drop);
+        println!("BENCH_JSON {json}");
+        rows.push(row);
     }
     print_table(
-        "Resilience — resumable streaming vs frame drop rate (64 MB object)",
+        &format!(
+            "Resilience — resumable streaming vs frame drop rate ({} MB object)",
+            total >> 20
+        ),
         &["drop", "goodput MB/s", "bytes vs ideal", "retx frames", "nack rounds"],
         &rows,
     );

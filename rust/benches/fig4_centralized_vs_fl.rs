@@ -29,10 +29,11 @@ fn main() {
         println!("SKIP: artifacts not built (run `make artifacts`)");
         return;
     }
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut job = JobConfig::default();
     job.name = "fig4".into();
-    job.rounds = env_usize("FLARE_ROUNDS", 3);
-    job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", 5);
+    job.rounds = env_usize("FLARE_ROUNDS", if smoke { 1 } else { 3 });
+    job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", if smoke { 2 } else { 5 });
     let spec = ModelSpec::llama_mini();
     let initial = materialize(&spec, job.seed);
 
@@ -79,6 +80,16 @@ fn main() {
         max_gap = max_gap.max((cp.1 - fp.1).abs());
     }
     let init_loss = c.points[0].1;
+    let j = flare::util::json::Json::obj(vec![
+        ("bench", flare::util::json::Json::str("fig4_centralized_vs_fl")),
+        ("max_gap", flare::util::json::Json::num(max_gap)),
+        ("init_loss", flare::util::json::Json::num(init_loss)),
+        (
+            "final_central",
+            flare::util::json::Json::num(c.points.last().unwrap().1),
+        ),
+    ]);
+    println!("BENCH_JSON {j}");
     println!("\nmax |centralized - FL| across steps: {max_gap:.4} (initial loss {init_loss:.2})");
     assert!(
         max_gap < 0.05 * init_loss,

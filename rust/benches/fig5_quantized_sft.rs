@@ -30,10 +30,11 @@ fn main() {
         println!("SKIP: artifacts not built (run `make artifacts`)");
         return;
     }
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut base_job = JobConfig::default();
     base_job.name = "fig5".into();
-    base_job.rounds = env_usize("FLARE_ROUNDS", 3);
-    base_job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", 5);
+    base_job.rounds = env_usize("FLARE_ROUNDS", if smoke { 1 } else { 3 });
+    base_job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", if smoke { 2 } else { 5 });
     let spec = ModelSpec::llama_mini();
     let initial = materialize(&spec, base_job.seed);
     // The paper fine-tunes a PRETRAINED Llama; from-scratch training is
@@ -98,6 +99,13 @@ fn main() {
             .unwrap();
         let fin = r.report.scalars["final_loss"];
         let comm = r.report.scalars["total_comm_bytes"] as u64;
+        let j = flare::util::json::Json::obj(vec![
+            ("bench", flare::util::json::Json::str("fig5_quantized_sft")),
+            ("scheme", flare::util::json::Json::str(scheme.name())),
+            ("final_loss", flare::util::json::Json::num(fin)),
+            ("comm_bytes", flare::util::json::Json::num(comm as f64)),
+        ]);
+        println!("BENCH_JSON {j}");
         println!(
             "  final loss {fin:.4}  comm {}  {}",
             human(comm),

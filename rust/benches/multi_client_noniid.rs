@@ -23,6 +23,7 @@ fn main() {
         println!("SKIP: artifacts not built (run `make artifacts`)");
         return;
     }
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = ModelSpec::llama_mini();
     let mut rows = Vec::new();
     // (each PJRT client compiles its own executable — keep the default
@@ -36,7 +37,7 @@ fn main() {
         job.name = format!("noniid_a{alpha}_{}", quant.name());
         job.clients = env_usize("FLARE_CLIENTS", 2);
         job.rounds = env_usize("FLARE_ROUNDS", 1);
-        job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", 2);
+        job.train.local_steps = env_usize("FLARE_LOCAL_STEPS", if smoke { 1 } else { 2 });
         job.dirichlet_alpha = alpha;
         job.quant = quant;
         let initial = materialize(&spec, job.seed);
@@ -61,6 +62,14 @@ fn main() {
         )
         .unwrap();
         let s = &r.report.series["global_loss"];
+        let j = flare::util::json::Json::obj(vec![
+            ("bench", flare::util::json::Json::str("multi_client_noniid")),
+            ("alpha", flare::util::json::Json::num(alpha)),
+            ("quant", flare::util::json::Json::str(quant.name())),
+            ("first_loss", flare::util::json::Json::num(s.points[0].1)),
+            ("final_loss", flare::util::json::Json::num(s.last().unwrap())),
+        ]);
+        println!("BENCH_JSON {j}");
         rows.push(vec![
             format!("{alpha}"),
             quant.name().to_string(),

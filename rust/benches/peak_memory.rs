@@ -135,6 +135,10 @@ fn bench_json(path: &str, clients: usize, m: &Measurement, model_bytes: u64, max
 }
 
 fn main() {
+    // Bench setup: hit-rate counters must measure THIS run, not the
+    // process history (satellite fix for flaky pool_hit_rate numbers).
+    flare::memory::pool::reset_stats();
+
     let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = bench_spec();
     let model_bytes = spec.total_bytes_f32();

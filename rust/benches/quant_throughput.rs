@@ -41,6 +41,10 @@ fn bench_json(r: &Row) {
 }
 
 fn main() {
+    // Bench setup: hit-rate counters must measure THIS run, not the
+    // process history (satellite fix for flaky pool_hit_rate numbers).
+    flare::memory::pool::reset_stats();
+
     let smoke = std::env::args().any(|a| a == "--smoke");
     let n: usize = if smoke { 1 << 20 } else { 16 << 20 }; // 4 / 64 MB fp32
     let (warmup, iters) = if smoke { (0, 1) } else { (1, 3) };

@@ -36,6 +36,10 @@ fn bench_json(driver: &str, chunk: usize, mb_s: f64, pool_hit_rate: f64) {
 }
 
 fn main() {
+    // Bench setup: hit-rate counters must measure THIS run, not the
+    // process history (satellite fix for flaky pool_hit_rate numbers).
+    flare::memory::pool::reset_stats();
+
     let smoke = std::env::args().any(|a| a == "--smoke");
     let total = if smoke { 16 << 20 } else { 256 << 20 };
     let sweep: &[usize] = if smoke {

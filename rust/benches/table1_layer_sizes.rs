@@ -55,5 +55,15 @@ fn main() {
     assert_eq!(rows.len(), PAPER.len(), "row count differs from paper");
     assert_eq!(mismatches, 0, "{mismatches} rows differ from the paper");
     assert!((mb(spec.total_bytes_f32()) - 5716.26).abs() < 0.01);
+    let j = flare::util::json::Json::obj(vec![
+        ("bench", flare::util::json::Json::str("table1_layer_sizes")),
+        ("rows", flare::util::json::Json::num(rows.len() as f64)),
+        (
+            "total_mb",
+            flare::util::json::Json::num(mb(spec.total_bytes_f32())),
+        ),
+        ("mismatches", flare::util::json::Json::num(mismatches as f64)),
+    ]);
+    println!("BENCH_JSON {j}");
     println!("TABLE I REPRODUCED EXACTLY");
 }

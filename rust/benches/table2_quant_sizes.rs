@@ -22,11 +22,21 @@ const PAPER: &[(QuantScheme, f64, f64, f64)] = &[
 ];
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let spec = ModelSpec::llama32_1b();
     let mut rows = Vec::new();
     for &(scheme, p_data, p_meta, p_pct) in PAPER {
         let (label, d, m, pct) = table2_row(&spec, scheme);
         let ok = (d - p_data).abs() < 0.01 && (m - p_meta).abs() < 0.02 && (pct - p_pct).abs() < 0.02;
+        let j = flare::util::json::Json::obj(vec![
+            ("bench", flare::util::json::Json::str("table2_quant_sizes")),
+            ("scheme", flare::util::json::Json::str(scheme.name())),
+            ("data_mb", flare::util::json::Json::num(d)),
+            ("meta_mb", flare::util::json::Json::num(m)),
+            ("pct_fp32", flare::util::json::Json::num(pct)),
+            ("matches_paper", flare::util::json::Json::Bool(ok)),
+        ]);
+        println!("BENCH_JSON {j}");
         rows.push(vec![
             label,
             format!("{d:.2}"),
@@ -47,7 +57,13 @@ fn main() {
 
     // Verify analytic == actual encoders on a materialized model.
     let full = std::env::args().any(|a| a == "--full") || std::env::var("FLARE_FULL").is_ok();
-    let verify_spec = if full { ModelSpec::llama32_1b() } else { ModelSpec::llama32_1b_scaled(8) };
+    let verify_spec = if full {
+        ModelSpec::llama32_1b()
+    } else if smoke {
+        ModelSpec::llama32_1b_scaled(32)
+    } else {
+        ModelSpec::llama32_1b_scaled(8)
+    };
     println!(
         "\nverifying analytic sizes against real encoders on {} ({:.0} MB)...",
         verify_spec.name,

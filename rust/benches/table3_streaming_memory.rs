@@ -64,12 +64,15 @@ fn run_one(spec: &ModelSpec, mode: StreamingMode, chunk: usize) -> Row {
 /// Re-exec this binary to measure one mode in a FRESH process, so each
 /// setting's RSS watermark is unpolluted by the previous one (allocators
 /// do not return freed pages; the paper measures separate jobs too).
-fn run_subprocess(mode: StreamingMode, full: bool, chunk: usize) -> Row {
+fn run_subprocess(mode: StreamingMode, full: bool, smoke: bool, chunk: usize) -> Row {
     let exe = std::env::current_exe().unwrap();
     let mut cmd = std::process::Command::new(exe);
     cmd.arg("--one").arg(mode.name()).arg("--chunk-bytes").arg(chunk.to_string());
     if full {
         cmd.arg("--full");
+    }
+    if smoke {
+        cmd.arg("--smoke");
     }
     let out = cmd.output().expect("subprocess");
     let text = String::from_utf8_lossy(&out.stdout);
@@ -96,6 +99,7 @@ fn run_subprocess(mode: StreamingMode, full: bool, chunk: usize) -> Row {
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let full = args.iter().any(|a| a == "--full") || std::env::var("FLARE_FULL").is_ok();
+    let smoke = args.iter().any(|a| a == "--smoke");
     let sweep = args.iter().any(|a| a == "--sweep");
     let chunk = args
         .iter()
@@ -103,7 +107,13 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .and_then(|v| v.parse().ok())
         .unwrap_or(1usize << 20);
-    let spec = if full { ModelSpec::llama32_1b() } else { ModelSpec::llama32_1b_scaled(4) };
+    let spec = if full {
+        ModelSpec::llama32_1b()
+    } else if smoke {
+        ModelSpec::llama32_1b_scaled(16)
+    } else {
+        ModelSpec::llama32_1b_scaled(4)
+    };
 
     // Child mode: measure one setting and emit a parse-friendly line.
     if let Some(i) = args.iter().position(|a| a == "--one") {
@@ -115,8 +125,27 @@ fn main() {
 
     let rows: Vec<Row> = [StreamingMode::Regular, StreamingMode::Container, StreamingMode::File]
         .into_iter()
-        .map(|m| run_subprocess(m, full, chunk))
+        .map(|m| run_subprocess(m, full, smoke, chunk))
         .collect();
+    for r in &rows {
+        let j = flare::util::json::Json::obj(vec![
+            (
+                "bench",
+                flare::util::json::Json::str("table3_streaming_memory"),
+            ),
+            ("setting", flare::util::json::Json::str(r.setting)),
+            (
+                "rss_peak_bytes",
+                flare::util::json::Json::num(r.rss_peak as f64),
+            ),
+            (
+                "peak_comm_bytes",
+                flare::util::json::Json::num(r.comm_peak as f64),
+            ),
+            ("secs", flare::util::json::Json::num(r.secs)),
+        ]);
+        println!("BENCH_JSON {j}");
+    }
     println!(
         "\nmodel {} — {:.0} MB fp32, max layer {:.0} MB, chunk {} (one process per setting)",
         spec.name,

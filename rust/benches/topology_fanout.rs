@@ -1,0 +1,168 @@
+//! Hierarchical relay tier: branching-factor sweep.
+//!
+//! Runs the same nf4 container-mode federated job flat and as trees of
+//! growing branching factor, and reports round wall-clock, the process
+//! comm-buffer peak, the root's fan-in (direct sessions the root folds)
+//! and the relay count. The root's gather cost scales with its *fan-in*,
+//! not the fleet size: a flat root folds C client streams, a tree root
+//! folds ceil(C/branching) relay streams.
+//!
+//! Run: `cargo bench --bench topology_fanout` (plain binary). CI runs
+//! `--smoke` (2-point sweep) and parse-checks the BENCH_JSON lines.
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{JobConfig, QuantScheme, StreamingMode, Topology, TrainConfig};
+use flare::coordinator::simulator::run_simulation;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::memory::COMM_GAUGE;
+use flare::metrics::Report;
+use flare::tensor::init::materialize;
+use flare::util::bench::print_table;
+use flare::util::bytes::human;
+use flare::util::json::Json;
+
+fn bench_spec() -> ModelSpec {
+    // ~540K params (~2.1 MB fp32): transfers dominate, runs stay short.
+    ModelSpec::llama(
+        "bench-tiny",
+        LlamaDims {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_ff: 512,
+            untied_head: true,
+        },
+    )
+}
+
+struct Measurement {
+    round_secs: f64,
+    peak_comm: u64,
+    total_comm: u64,
+    root_fanin: usize,
+    relay_count: usize,
+    final_ok: bool,
+}
+
+fn run_one(clients: usize, topology: Topology, reference: Option<&flare::tensor::ParamContainer>) -> (Measurement, flare::tensor::ParamContainer) {
+    let spec = bench_spec();
+    let initial = materialize(&spec, 1);
+    let job = JobConfig {
+        name: "topology-fanout".into(),
+        clients,
+        rounds: 1,
+        quant: QuantScheme::Nf4,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 64 * 1024,
+        topology,
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let quant = job.quant;
+    COMM_GAUGE.reset_peak();
+    let base = COMM_GAUGE.current();
+    let t0 = std::time::Instant::now();
+    let r = run_simulation(
+        &job,
+        initial,
+        std::sync::Arc::new(move |i| {
+            MockTrainer::new(materialize(&bench_spec(), 100 + i as u64), 0.3, 100)
+        }),
+        move || FilterSet::two_way_quantization(quant),
+    )
+    .expect("federated run failed");
+    let report: &Report = &r.report;
+    let m = Measurement {
+        round_secs: t0.elapsed().as_secs_f64(),
+        peak_comm: COMM_GAUGE.peak().saturating_sub(base),
+        total_comm: report.scalars.get("total_comm_bytes").copied().unwrap_or(0.0) as u64,
+        root_fanin: report
+            .scalars
+            .get("root_fanin")
+            .copied()
+            .unwrap_or(clients as f64) as usize,
+        relay_count: report.scalars.get("relay_count").copied().unwrap_or(0.0) as usize,
+        final_ok: reference
+            .map(|want| r.global.max_abs_diff(want) == 0.0)
+            .unwrap_or(true),
+    };
+    (m, r.global)
+}
+
+fn main() {
+    flare::memory::pool::reset_stats();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let clients = 8usize;
+    let sweep: Vec<Topology> = if smoke {
+        vec![Topology::Flat, Topology::Tree { branching: 4 }]
+    } else {
+        vec![
+            Topology::Flat,
+            Topology::Tree { branching: 2 },
+            Topology::Tree { branching: 4 },
+        ]
+    };
+    let spec = bench_spec();
+    println!(
+        "{clients} clients, model {} fp32, nf4 container streaming, 1 round\n",
+        human(spec.total_bytes_f32())
+    );
+
+    let mut rows = Vec::new();
+    let mut reference: Option<flare::tensor::ParamContainer> = None;
+    for topology in sweep {
+        let (m, global) = run_one(clients, topology, reference.as_ref());
+        if reference.is_none() {
+            reference = Some(global);
+        }
+        let j = Json::obj(vec![
+            ("bench", Json::str("topology_fanout")),
+            ("topology", Json::str(topology.name())),
+            ("branching", Json::num(topology.branching() as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("root_fanin", Json::num(m.root_fanin as f64)),
+            ("relay_count", Json::num(m.relay_count as f64)),
+            ("peak_comm_bytes", Json::num(m.peak_comm as f64)),
+            ("total_comm_bytes", Json::num(m.total_comm as f64)),
+            ("round_secs", Json::num(m.round_secs)),
+            ("bit_identical_to_flat", Json::Bool(m.final_ok)),
+        ]);
+        println!("BENCH_JSON {j}");
+        rows.push(vec![
+            match topology {
+                Topology::Flat => "flat".to_string(),
+                Topology::Tree { branching } => format!("tree b={branching}"),
+            },
+            m.root_fanin.to_string(),
+            m.relay_count.to_string(),
+            human(m.peak_comm),
+            human(m.total_comm),
+            format!("{:.2}", m.round_secs),
+            if m.final_ok { "✓".into() } else { "✗".into() },
+        ]);
+        assert!(m.final_ok, "{topology:?} diverged from the flat aggregate");
+    }
+    print_table(
+        "root fan-in and comm vs topology (final model bit-identical in all)",
+        &[
+            "Topology",
+            "Root fan-in",
+            "Relays",
+            "Comm-buffer peak",
+            "Total wire",
+            "Run (s)",
+            "Bit-id",
+        ],
+        &rows,
+    );
+    println!(
+        "\nthe root folds `root fan-in` streams: a flat root folds every client, a tree \
+         root folds one pre-folded PartialAggregate per relay subtree"
+    );
+}

@@ -246,6 +246,44 @@ impl RoundPolicy {
     }
 }
 
+/// Aggregation topology: a flat single-server gather, or a relay tree
+/// whose intermediate tiers pre-fold entry streams at the edge (see
+/// `crate::topology`). With `Tree`, clients are assigned to relays by a
+/// seeded deterministic shuffle, each relay folds its subtree into one
+/// exact `PartialAggregate`, and the root folds R relay streams instead
+/// of C client streams. The exact Q64.64 fold keeps the final model
+/// bit-identical to the flat run for every branching factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Every client connects straight to the root controller.
+    #[default]
+    Flat,
+    /// Relay tiers with at most `branching` children per node; tiers
+    /// nest automatically until the root's fan-in is within `branching`.
+    Tree { branching: usize },
+}
+
+impl Topology {
+    pub fn is_tree(&self) -> bool {
+        matches!(self, Topology::Tree { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Flat => "flat",
+            Topology::Tree { .. } => "tree",
+        }
+    }
+
+    /// Branching factor (0 for flat).
+    pub fn branching(&self) -> usize {
+        match self {
+            Topology::Flat => 0,
+            Topology::Tree { branching } => *branching,
+        }
+    }
+}
+
 /// Default control/transfer timeout (the old hard-coded value).
 pub const DEFAULT_TRANSFER_TIMEOUT_SECS: u64 = 600;
 
@@ -298,8 +336,13 @@ pub struct JobConfig {
     /// whole-container path (the `peak_memory` bench's baseline).
     pub entry_fold: bool,
     /// Sampling / quorum / deadline / partial-aggregation policy for the
-    /// concurrent round engine.
+    /// concurrent round engine. With a tree topology the policy cascades
+    /// per subtree: the root applies it over its direct children
+    /// (relays), each relay over its own children.
     pub round_policy: RoundPolicy,
+    /// Aggregation topology (flat single server, or a relay tree that
+    /// pre-folds entry streams at the edge).
+    pub topology: Topology,
     /// Control-message and weight-transfer timeout used by the
     /// coordinator on both sides, in seconds (>= 1).
     pub transfer_timeout_secs: u64,
@@ -331,6 +374,7 @@ impl Default for JobConfig {
             reliable: false,
             entry_fold: true,
             round_policy: RoundPolicy::default(),
+            topology: Topology::Flat,
             transfer_timeout_secs: DEFAULT_TRANSFER_TIMEOUT_SECS,
             encode_threads: 0,
             seed: 0xF1A2E,
@@ -401,6 +445,23 @@ impl JobConfig {
                     cfg.transfer_timeout_secs = req_usize(v, k)? as u64
                 }
                 "encode_threads" => cfg.encode_threads = req_usize(v, k)?,
+                "topology" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("topology: not an object"))?;
+                    let mut kind = String::from("flat");
+                    let mut branching = 0usize;
+                    for (tk, tv) in t {
+                        match tk.as_str() {
+                            "kind" => kind = req_str(tv, tk)?,
+                            "branching" => branching = req_usize(tv, tk)?,
+                            other => bail!("unknown topology key '{other}'"),
+                        }
+                    }
+                    cfg.topology = match kind.as_str() {
+                        "flat" => Topology::Flat,
+                        "tree" => Topology::Tree { branching },
+                        other => bail!("unknown topology kind '{other}' (flat|tree)"),
+                    };
+                }
                 "round_policy" => {
                     let t = v.as_obj().ok_or_else(|| anyhow!("round_policy: not an object"))?;
                     for (pk, pv) in t {
@@ -510,6 +571,14 @@ impl JobConfig {
                 self.round_policy.min_clients
             );
         }
+        if let Topology::Tree { branching } = self.topology {
+            if branching < 2 {
+                bail!("topology.branching must be >= 2 for a tree, got {branching}");
+            }
+            if self.clients < 2 {
+                bail!("tree topology needs at least 2 clients");
+            }
+        }
         Ok(())
     }
 
@@ -553,6 +622,13 @@ impl JobConfig {
                 Json::num(self.transfer_timeout_secs as f64),
             ),
             ("encode_threads", Json::num(self.encode_threads as f64)),
+            (
+                "topology",
+                Json::obj(vec![
+                    ("kind", Json::str(self.topology.name())),
+                    ("branching", Json::num(self.topology.branching() as f64)),
+                ]),
+            ),
             (
                 "round_policy",
                 Json::obj(vec![
@@ -779,6 +855,35 @@ mod tests {
         };
         assert_eq!(q.quorum(4), 3);
         assert_eq!(q.quorum(2), 2); // clamped to the selected count
+    }
+
+    #[test]
+    fn topology_roundtrip_and_validation() {
+        let cfg = JobConfig {
+            clients: 8,
+            topology: Topology::Tree { branching: 4 },
+            ..JobConfig::default()
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.topology, Topology::Tree { branching: 4 });
+        assert!(back.topology.is_tree());
+        assert_eq!(back.topology.branching(), 4);
+        // default is flat and round-trips
+        let flat = JobConfig::from_json(&JobConfig::default().to_json()).unwrap();
+        assert_eq!(flat.topology, Topology::Flat);
+        assert!(!flat.topology.is_tree());
+        for bad in [
+            r#"{"clients": 8, "topology": {"kind": "tree", "branching": 1}}"#,
+            r#"{"clients": 8, "topology": {"kind": "ring"}}"#,
+            r#"{"clients": 1, "topology": {"kind": "tree", "branching": 4}}"#,
+            r#"{"topology": {"nonsense": 1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobConfig::from_json(&j).is_err(), "{bad}");
+        }
+        let ok = Json::parse(r#"{"clients": 8, "topology": {"kind": "tree", "branching": 4}}"#)
+            .unwrap();
+        assert!(JobConfig::from_json(&ok).is_ok());
     }
 
     #[test]

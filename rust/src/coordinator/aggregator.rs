@@ -10,20 +10,177 @@
 //!   shared pre-seeded accumulator, so server gather memory is
 //!   O(accumulator + entry × sessions) instead of O(model × sessions).
 //!   A per-(position, entry) frontier keeps the per-element fold order
-//!   identical to the sequential whole-contribution fold, which is what
-//!   makes the default round policy bit-compatible with [`FedAvg`].
+//!   identical to the sequential whole-contribution fold.
+//!
+//! # The weighted-fold invariant (exact Q64.64 accumulation)
+//!
+//! Since the hierarchical relay tier (see `crate::topology`), the
+//! accumulator is an **exact signed Q64.64 fixed-point integer** per
+//! element rather than an f32/f64 float. Each contribution term
+//! `weight × value` is computed once in f64 (exact for every realistic
+//! weight: a 24-bit f32 significand times a ≤ 2^32 integer weight fits
+//! f64's 53-bit mantissa for weights up to 2^29, and is deterministically
+//! rounded beyond that) and then deterministically converted to the fixed
+//! 2^-64 grid. From that point the fold is **integer addition — exact,
+//! associative and commutative** — so the aggregate is bit-identical for
+//! *any* fold order and *any* tier grouping: a root folding R relay
+//! partial sums produces exactly the bytes a flat server folding all C
+//! client updates produces. Relays export their raw fixed-point sums via
+//! [`EntryFold::finalize_partial`] (the `PartialAggregate` wire unit,
+//! `DType::Fx128`) together with the summed weight, and an upstream fold
+//! merges them with plain integer adds. The single float rounding happens
+//! once, at the root's [`finalize`](EntryFold::finalize), identically in
+//! every topology. See DESIGN.md §Topology.
 
-use crate::tensor::{ParamContainer, Tensor};
+use crate::tensor::{DType, ParamContainer, Tensor};
 use anyhow::{anyhow, bail, Result};
 use std::sync::{Condvar, Mutex};
+
+/// One unit on the Q64.64 grid (2^64 as f64 — exactly representable).
+pub const FIXED_ONE: f64 = 18_446_744_073_709_551_616.0;
+/// Largest |weight × value| term accepted (2^62): keeps every term
+/// within i128 after scaling and leaves 64 doubling-steps of headroom
+/// for the sum itself.
+const MAX_TERM_ABS: f64 = (1u64 << 62) as f64;
+/// Largest *leaf* weight accepted when folding fp32 terms: beyond 2^32
+/// samples the f64 `weight × value` product would silently lose
+/// client-update bits. Applies only where the multiplication happens —
+/// a relay's summed subtree weight (the mean's denominator) is not
+/// bounded by it, so tree runs never fail where the flat run succeeds.
+pub const MAX_WEIGHT: u64 = 1 << 32;
+
+/// Deterministically place a term on the Q64.64 grid. Pure function of
+/// the term — independent of fold order, tier, or platform (IEEE f64
+/// arithmetic plus truncating conversion).
+fn to_fixed(v: f64) -> Result<i128> {
+    if !v.is_finite() || v.abs() >= MAX_TERM_ABS {
+        bail!("aggregation term {v} outside the exact Q64.64 range");
+    }
+    Ok((v * FIXED_ONE) as i128)
+}
+
+/// Pass 1 of a fold: prove every term of `t` valid against `dst`
+/// (finite, in the Q64.64 range, magnitude-capped, no i128 overflow)
+/// without mutating anything. Terms are pure functions of the inputs,
+/// so [`apply_fold`] can recompute them infallibly afterwards — the
+/// all-or-nothing guarantee costs zero allocation and no extra copy.
+fn validate_fold(dst: &[i128], t: &Tensor, weight: u64) -> Result<()> {
+    match t.meta.dtype {
+        DType::F32 => {
+            if weight > MAX_WEIGHT {
+                bail!("leaf weight {weight} exceeds the exact-aggregation cap {MAX_WEIGHT}");
+            }
+            let w = weight as f64;
+            for (d, &x) in dst.iter().zip(t.as_f32()) {
+                let term = to_fixed(w * x as f64)?;
+                d.checked_add(term)
+                    .ok_or_else(|| anyhow!("aggregation overflow"))?;
+            }
+        }
+        DType::Fx128 => {
+            // No magnitude cap below the overflow check: a single honest
+            // term may reach MAX_TERM_ABS × 2^64 ≈ 2^126 on the grid, so
+            // any tighter bound would reject partials whose underlying
+            // client streams a flat run accepts. checked_add keeps a
+            // hostile (or overflowing honest) merge a clean, atomic Err;
+            // magnitude *trust* is a placement decision (see DESIGN.md
+            // §Topology — relays are deployment-controlled tiers).
+            for (d, v) in dst.iter().zip(t.iter_i128()) {
+                d.checked_add(v)
+                    .ok_or_else(|| anyhow!("aggregation overflow"))?;
+            }
+        }
+        other => bail!("cannot fold dtype {other} into the aggregate (dequantize first)"),
+    }
+    Ok(())
+}
+
+/// Pass 2 of a fold: apply the terms [`validate_fold`] just proved safe
+/// (identical pure computation, so plain adds cannot overflow here).
+fn apply_fold(dst: &mut [i128], t: &Tensor, weight: u64) {
+    match t.meta.dtype {
+        DType::F32 => {
+            let w = weight as f64;
+            for (d, &x) in dst.iter_mut().zip(t.as_f32()) {
+                // Same pure computation validate_fold just proved safe.
+                *d += to_fixed(w * x as f64).expect("validated term");
+            }
+        }
+        DType::Fx128 => {
+            for (d, v) in dst.iter_mut().zip(t.iter_i128()) {
+                *d += v;
+            }
+        }
+        _ => unreachable!("validate_fold rejects other dtypes"),
+    }
+}
+
+/// Fold one tensor into a fixed-point element sum. fp32 entries fold as
+/// `weight × value` terms; Fx128 entries are hierarchical partial sums
+/// (weights already baked in by the tier below) and merge with plain
+/// integer adds.
+///
+/// **All-or-nothing:** validation runs over the whole tensor before the
+/// first element is touched, so a NaN, an out-of-range term or an
+/// overflow mid-tensor leaves `dst` untouched. The engines'
+/// clean-exclusion logic (`EntryFold::exclude` treating "nothing
+/// folded" as non-tainting) depends on this invariant.
+fn fold_tensor_into(dst: &mut [i128], t: &Tensor, weight: u64) -> Result<()> {
+    validate_fold(dst, t, weight)?;
+    apply_fold(dst, t, weight);
+    Ok(())
+}
+
+/// The one float rounding of a round: fixed sums → weighted-mean fp32
+/// container. Shared by [`FedAvg`] and [`EntryFold`] so the two paths
+/// cannot drift.
+fn finalize_sums(skeleton: &ParamContainer, sums: &[Vec<i128>], total_weight: u64) -> ParamContainer {
+    let total = total_weight as f64;
+    skeleton
+        .iter()
+        .zip(sums)
+        .map(|((n, t), s)| {
+            let vals: Vec<f32> = s
+                .iter()
+                .map(|&v| ((v as f64) / FIXED_ONE / total) as f32)
+                .collect();
+            (n.to_string(), Tensor::from_f32(t.meta.shape.clone(), vals))
+        })
+        .collect()
+}
+
+fn check_foldable_dtype(name: &str, t: &Tensor) -> Result<()> {
+    if !matches!(t.meta.dtype, DType::F32 | DType::Fx128) {
+        bail!(
+            "aggregation requires fp32 containers or fixed-point partials (dequantize first), \
+             got {} at '{name}'",
+            t.meta.dtype
+        );
+    }
+    Ok(())
+}
+
+/// Stream/contribution weights must be non-zero. The `MAX_WEIGHT` cap is
+/// enforced where the fp32 term multiplication happens
+/// ([`fold_tensor_into`]) — an aggregated subtree weight only ever
+/// divides, so relay uplinks may legitimately exceed it.
+fn check_weight(weight: u64) -> Result<()> {
+    if weight == 0 {
+        bail!("zero-weight contribution");
+    }
+    Ok(())
+}
 
 /// Streaming weighted-average aggregator: contributions are folded in one
 /// at a time (the accumulator is the only full-size buffer, so aggregation
 /// memory is O(model), independent of the client count).
 #[derive(Default)]
 pub struct FedAvg {
-    acc: Option<ParamContainer>,
-    total_weight: f64,
+    /// Zero f32 container defining names, shapes and order.
+    skeleton: Option<ParamContainer>,
+    /// Exact Q64.64 element sums, aligned with the skeleton's entries.
+    sums: Vec<Vec<i128>>,
+    total_weight: u64,
     contributions: usize,
 }
 
@@ -32,33 +189,44 @@ impl FedAvg {
         FedAvg::default()
     }
 
-    /// Fold in one client's weights with the given sample weight.
+    /// Seed the accumulator's geometry from a **trusted** container (the
+    /// round's own global weights): every contribution — including the
+    /// first to arrive — then validates names and shapes against it, so
+    /// a malformed first arrival cannot hijack the round's geometry and
+    /// get honest contributions excluded in its stead.
+    pub fn with_skeleton(skeleton: ParamContainer) -> FedAvg {
+        let sums = skeleton.iter().map(|(_, t)| vec![0i128; t.elems()]).collect();
+        FedAvg {
+            skeleton: Some(skeleton),
+            sums,
+            total_weight: 0,
+            contributions: 0,
+        }
+    }
+
+    /// Fold in one client's weights (fp32) or one relay's partial
+    /// aggregate (Fx128) with the given sample weight.
     ///
     /// Validates names *and shapes* against the accumulator before any
     /// arithmetic: a malicious or corrupt client shipping a same-named,
-    /// differently-shaped tensor is a clean `Err`, never a panic in the
-    /// axpy kernel.
+    /// differently-shaped tensor is a clean `Err`, never a panic.
     pub fn add(&mut self, update: &ParamContainer, weight: u64) -> Result<()> {
-        if weight == 0 {
-            bail!("zero-weight contribution");
+        check_weight(weight)?;
+        for (name, t) in update.iter() {
+            check_foldable_dtype(name, t)?;
         }
-        if !update.all_f32() {
-            bail!("aggregation requires fp32 containers (dequantize first)");
-        }
-        let w = weight as f64;
-        match &mut self.acc {
+        match &self.skeleton {
             None => {
-                let mut first = update.clone();
-                first.scale(w as f32);
-                self.acc = Some(first);
+                self.sums = update.iter().map(|(_, t)| vec![0i128; t.elems()]).collect();
+                self.skeleton = Some(ParamContainer::zeros_like(update));
             }
-            Some(acc) => {
-                if acc.names() != update.names() {
+            Some(skel) => {
+                if skel.names() != update.names() {
                     bail!("contribution name set differs from accumulator");
                 }
-                for (name, t) in acc.iter() {
+                for (name, t) in skel.iter() {
                     let u = update.get(name).expect("names checked above");
-                    if u.meta != t.meta {
+                    if u.meta.shape != t.meta.shape {
                         bail!(
                             "contribution shape mismatch at '{name}': {:?} vs accumulator {:?}",
                             u.meta.shape,
@@ -66,10 +234,22 @@ impl FedAvg {
                         );
                     }
                 }
-                acc.axpy(w as f32, update);
             }
         }
-        self.total_weight += w;
+        // Container-atomic: prove every entry's every term safe, then
+        // apply — an Err from `add` never leaves a half-folded
+        // contribution in the accumulator.
+        for (i, (_, t)) in update.iter().enumerate() {
+            validate_fold(&self.sums[i], t, weight)?;
+        }
+        let total = self
+            .total_weight
+            .checked_add(weight)
+            .ok_or_else(|| anyhow!("total contribution weight overflow"))?;
+        for (i, (_, t)) in update.iter().enumerate() {
+            apply_fold(&mut self.sums[i], t, weight);
+        }
+        self.total_weight = total;
         self.contributions += 1;
         Ok(())
     }
@@ -80,14 +260,22 @@ impl FedAvg {
 
     /// Finish the round: return the weighted mean and reset.
     pub fn finalize(&mut self) -> Result<ParamContainer> {
-        let mut acc = match self.acc.take() {
-            Some(a) => a,
-            None => bail!("finalize with no contributions"),
-        };
-        acc.scale((1.0 / self.total_weight) as f32);
-        self.total_weight = 0.0;
+        if self.contributions == 0 {
+            // Covers both the never-seeded and the seeded-but-empty
+            // ([`FedAvg::with_skeleton`]) accumulator.
+            self.skeleton = None;
+            self.sums.clear();
+            bail!("finalize with no contributions");
+        }
+        let skeleton = self
+            .skeleton
+            .take()
+            .expect("contributions imply a skeleton");
+        let sums = std::mem::take(&mut self.sums);
+        let total = self.total_weight;
+        self.total_weight = 0;
         self.contributions = 0;
-        Ok(acc)
+        Ok(finalize_sums(&skeleton, &sums, total))
     }
 }
 
@@ -102,8 +290,10 @@ pub enum FoldOutcome {
 }
 
 struct FoldInner {
-    /// Pre-seeded zero accumulator (defines names, shapes, order).
-    acc: ParamContainer,
+    /// Pre-seeded zero container (defines names, shapes, order).
+    skeleton: ParamContainer,
+    /// Exact Q64.64 element sums, aligned with the skeleton's entries.
+    sums: Vec<Vec<i128>>,
     /// `folded[pos][idx]`: has position `pos` folded entry `idx`?
     folded: Vec<Vec<bool>>,
     folded_count: Vec<usize>,
@@ -116,8 +306,10 @@ struct FoldInner {
 
 impl FoldInner {
     /// May `pos` fold entry `idx` now? The frontier rule: every earlier
-    /// non-excluded position must have folded `idx` first — this is what
-    /// reproduces the sequential fold order per element.
+    /// non-excluded position must have folded `idx` first — this
+    /// reproduces the sequential fold order (the fold itself is exact
+    /// integer addition, so the order no longer changes the result; the
+    /// frontier still bounds how far any one stream can run ahead).
     fn may_fold(&self, pos: usize, idx: usize) -> bool {
         self.folded
             .iter()
@@ -125,19 +317,38 @@ impl FoldInner {
             .zip(&self.excluded)
             .all(|(f, &ex)| ex || f[idx])
     }
+
+    fn committed_weight(&self) -> Result<(u64, usize)> {
+        let mut total = 0u64;
+        let mut contributions = 0usize;
+        for p in 0..self.finished.len() {
+            if self.finished[p] {
+                let w = self.weight[p].ok_or_else(|| anyhow!("finished without weight"))?;
+                total = total
+                    .checked_add(w)
+                    .ok_or_else(|| anyhow!("total contribution weight overflow"))?;
+                contributions += 1;
+            }
+        }
+        Ok((total, contributions))
+    }
 }
 
 /// Shared entry-streamed FedAvg for one round of the concurrent engine.
 ///
 /// * `fold_entry` blocks (condvar) until the caller's position owns the
-///   frontier for that entry, then axpy-folds one tensor under the lock.
-///   Sessions therefore hold at most one decoded entry while waiting —
-///   the O(entry)-per-session bound.
+///   frontier for that entry, then folds one tensor's exact fixed-point
+///   terms under the lock. Sessions therefore hold at most one decoded
+///   entry while waiting — the O(entry)-per-session bound.
 /// * A contribution that fails *before* folding anything is excluded
 ///   cleanly ([`EntryFold::exclude`]); one that fails after a partial
 ///   fold has already mutated the shared accumulator, so the caller must
 ///   [`EntryFold::poison`] the round (the engine restarts it without the
 ///   failed client — see DESIGN.md §Memory bounds).
+/// * A relay tier ends its round with [`EntryFold::finalize_partial`]
+///   instead of [`EntryFold::finalize`]: the raw fixed-point sums leave
+///   as a weight-tagged `PartialAggregate` and the division to fp32
+///   happens once, at the root.
 pub struct EntryFold {
     inner: Mutex<FoldInner>,
     cv: Condvar,
@@ -148,9 +359,11 @@ impl EntryFold {
     /// `k` is the number of selected positions this round.
     pub fn new(skeleton: ParamContainer, k: usize) -> EntryFold {
         let n = skeleton.len();
+        let sums = skeleton.iter().map(|(_, t)| vec![0i128; t.elems()]).collect();
         EntryFold {
             inner: Mutex::new(FoldInner {
-                acc: skeleton,
+                skeleton,
+                sums,
                 folded: vec![vec![false; n]; k],
                 folded_count: vec![0; k],
                 weight: vec![None; k],
@@ -164,9 +377,7 @@ impl EntryFold {
 
     /// Register the session weight before its first entry arrives.
     pub fn start_stream(&self, pos: usize, weight: u64) -> Result<()> {
-        if weight == 0 {
-            bail!("zero-weight contribution");
-        }
+        check_weight(weight)?;
         let mut g = self.inner.lock().unwrap();
         if g.weight[pos].is_some() {
             bail!("stream for position {pos} already started");
@@ -186,19 +397,19 @@ impl EntryFold {
         if g.poisoned.is_some() || g.excluded[pos] {
             return Ok(FoldOutcome::Dropped);
         }
-        let n = g.acc.len();
+        let n = g.skeleton.len();
         if idx >= n {
             bail!("entry index {idx} out of range ({n} entries in accumulator)");
         }
-        if g.acc.names()[idx] != name {
+        if g.skeleton.names()[idx] != name {
             bail!(
                 "entry {idx} named '{name}', accumulator expects '{}'",
-                g.acc.names()[idx]
+                g.skeleton.names()[idx]
             );
         }
         {
-            let slot = g.acc.get(name).expect("index checked");
-            if slot.meta != t.meta {
+            let slot = g.skeleton.get(name).expect("index checked");
+            if slot.meta.shape != t.meta.shape {
                 bail!(
                     "entry '{name}' shape {:?} does not match accumulator {:?}",
                     t.meta.shape,
@@ -206,8 +417,9 @@ impl EntryFold {
                 );
             }
         }
+        check_foldable_dtype(name, t)?;
         let w = match g.weight[pos] {
-            Some(w) => w as f64 as f32,
+            Some(w) => w,
             None => bail!("fold before start_stream for position {pos}"),
         };
         if g.folded[pos][idx] {
@@ -235,12 +447,7 @@ impl EntryFold {
             }
             g = self.cv.wait(g).unwrap();
         }
-        let dst = g.acc.get_mut(name).expect("validated above");
-        let dstv = dst.as_f32_mut();
-        let src = t.as_f32();
-        for (d, s) in dstv.iter_mut().zip(src) {
-            *d += w * *s;
-        }
+        fold_tensor_into(&mut g.sums[idx], t, w)?;
         g.folded[pos][idx] = true;
         g.folded_count[pos] += 1;
         drop(g);
@@ -254,7 +461,7 @@ impl EntryFold {
         if g.poisoned.is_some() || g.excluded[pos] {
             return Ok(FoldOutcome::Dropped);
         }
-        let n = g.acc.len();
+        let n = g.skeleton.len();
         if g.folded_count[pos] != n {
             bail!(
                 "stream for position {pos} delivered {} of {n} entries",
@@ -308,9 +515,8 @@ impl EntryFold {
         self.inner.lock().unwrap().finished[pos]
     }
 
-    /// Weighted mean over the committed streams. Total weight is summed
-    /// in *position* order — the same order the sequential fold
-    /// accumulates it — so the final scale matches bit-for-bit.
+    /// Weighted mean over the committed streams — the round's single
+    /// float rounding (identical in every topology).
     ///
     /// Takes `&self`: abandoned stragglers may still hold a reference
     /// while draining; the accumulator is moved out under the lock (their
@@ -320,24 +526,44 @@ impl EntryFold {
         if let Some(why) = &g.poisoned {
             bail!("entry fold poisoned: {why}");
         }
-        let mut total = 0f64;
-        let mut contributions = 0usize;
-        for p in 0..g.finished.len() {
-            if g.finished[p] {
-                total += g.weight[p].ok_or_else(|| anyhow!("finished without weight"))? as f64;
-                contributions += 1;
-            }
-        }
+        let (total, contributions) = g.committed_weight()?;
         if contributions == 0 {
             bail!("finalize with no contributions");
         }
-        let mut acc = std::mem::take(&mut g.acc);
+        let skeleton = std::mem::take(&mut g.skeleton);
+        let sums = std::mem::take(&mut g.sums);
         // Late fold attempts must drop, not index an empty accumulator.
         g.poisoned = Some("round already finalized".into());
         drop(g);
         self.cv.notify_all();
-        acc.scale((1.0 / total) as f32);
-        Ok((acc, contributions))
+        Ok((finalize_sums(&skeleton, &sums, total), contributions))
+    }
+
+    /// Relay-tier terminal: extract the raw fixed-point sums as a
+    /// weight-tagged `PartialAggregate` (`DType::Fx128` container) plus
+    /// `(total weight, contributions)` — NO division happens here, so an
+    /// upstream fold merging this partial is bit-identical to folding the
+    /// underlying client streams directly.
+    pub fn finalize_partial(&self) -> Result<(ParamContainer, u64, usize)> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(why) = &g.poisoned {
+            bail!("entry fold poisoned: {why}");
+        }
+        let (total, contributions) = g.committed_weight()?;
+        if contributions == 0 {
+            bail!("finalize with no contributions");
+        }
+        let skeleton = std::mem::take(&mut g.skeleton);
+        let sums = std::mem::take(&mut g.sums);
+        g.poisoned = Some("round already finalized".into());
+        drop(g);
+        self.cv.notify_all();
+        let partial: ParamContainer = skeleton
+            .iter()
+            .zip(&sums)
+            .map(|((n, t), s)| (n.to_string(), Tensor::from_i128(t.meta.shape.clone(), s)))
+            .collect();
+        Ok((partial, total, contributions))
     }
 }
 
@@ -410,7 +636,7 @@ mod tests {
 
     #[test]
     fn mismatched_shapes_rejected_cleanly() {
-        // Same name, different shape: must be Err, not an axpy panic.
+        // Same name, different shape: must be Err, not a fold panic.
         let mut a = ParamContainer::new();
         a.insert("w", Tensor::from_f32(vec![2], vec![0.0, 1.0]));
         let mut b = ParamContainer::new();
@@ -426,6 +652,91 @@ mod tests {
         let c = materialize(&ModelSpec::llama_mini(), 73);
         let mut agg = FedAvg::new();
         assert!(agg.add(&c, 0).is_err());
+    }
+
+    #[test]
+    fn oversized_weight_and_terms_rejected() {
+        let c = materialize(&ModelSpec::llama_mini(), 74);
+        let mut agg = FedAvg::new();
+        assert!(agg.add(&c, MAX_WEIGHT + 1).is_err(), "leaf weight beyond cap");
+        // A term outside the Q64.64 range is a clean Err, never silent
+        // saturation.
+        let mut huge = ParamContainer::new();
+        huge.insert("w", Tensor::from_f32(vec![1], vec![f32::MAX]));
+        let mut agg = FedAvg::new();
+        assert!(agg.add(&huge, 1000).is_err());
+        let mut nan = ParamContainer::new();
+        nan.insert("w", Tensor::from_f32(vec![1], vec![f32::NAN]));
+        let mut agg = FedAvg::new();
+        assert!(agg.add(&nan, 1).is_err());
+        // Merging wire partials that would overflow i128 is a clean,
+        // atomic Err — never a wrap, a panic, or a half-folded entry.
+        let mut big = ParamContainer::new();
+        big.insert("w", Tensor::from_i128(vec![1], &[i128::MAX - 10]));
+        let mut agg = FedAvg::new();
+        agg.add(&big, 1).unwrap();
+        assert!(agg.add(&big, 1).is_err(), "second merge must overflow cleanly");
+        // the accumulator survived untouched by the failed merge
+        assert!(agg.finalize().is_ok());
+    }
+
+    #[test]
+    fn trusted_skeleton_rejects_malformed_first_contribution() {
+        // A corrupt FIRST arrival must not define the round's geometry
+        // (and thereby get every honest contribution excluded instead).
+        let mut good = ParamContainer::new();
+        good.insert("w", Tensor::from_f32(vec![2], vec![1.0, 2.0]));
+        let mut evil = ParamContainer::new();
+        evil.insert("not_w", Tensor::from_f32(vec![2], vec![9.0, 9.0]));
+        let mut agg = FedAvg::with_skeleton(ParamContainer::zeros_like(&good));
+        assert!(agg.add(&evil, 1).is_err(), "wrong names rejected up front");
+        agg.add(&good, 1).unwrap();
+        let m = agg.finalize().unwrap();
+        assert_eq!(m.get("w").unwrap().as_f32(), &[1.0, 2.0]);
+        // seeded-but-empty accumulators still refuse to finalize
+        let mut empty = FedAvg::with_skeleton(ParamContainer::zeros_like(&good));
+        assert!(empty.finalize().is_err());
+    }
+
+    #[test]
+    fn failed_fold_leaves_accumulator_untouched() {
+        // A NaN at a NON-first element must not half-fold the entry: the
+        // engines' clean-exclusion logic depends on "error ⇒ nothing
+        // folded".
+        let mut skel = ParamContainer::new();
+        skel.insert("w", Tensor::from_f32(vec![3], vec![0.0; 3]));
+        let fold = EntryFold::new(ParamContainer::zeros_like(&skel), 2);
+        fold.start_stream(0, 1).unwrap();
+        let bad = Tensor::from_f32(vec![3], vec![1.0, f32::NAN, 2.0]);
+        assert!(fold.fold_entry(0, 0, "w", &bad).is_err());
+        // nothing folded → clean exclusion; the survivors' round goes on
+        assert!(fold.exclude(0).unwrap(), "failed fold must not taint");
+        fold.start_stream(1, 2).unwrap();
+        let ok = Tensor::from_f32(vec![3], vec![3.0, 6.0, 9.0]);
+        fold.fold_entry(1, 0, "w", &ok).unwrap();
+        fold.finish_stream(1).unwrap();
+        let (acc, n) = fold.finalize().unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(acc.get("w").unwrap().as_f32(), &[3.0, 6.0, 9.0]);
+    }
+
+    #[test]
+    fn subtree_weights_beyond_leaf_cap_fold_partials() {
+        // A relay's summed subtree weight only divides; it must not trip
+        // the leaf-term cap, or tree runs fail where flat runs succeed.
+        let mut u = ParamContainer::new();
+        u.insert("w", Tensor::from_f32(vec![1], vec![2.0]));
+        let relay = EntryFold::new(ParamContainer::zeros_like(&u), 1);
+        relay.start_stream(0, 100).unwrap();
+        relay.fold_entry(0, 0, "w", u.get("w").unwrap()).unwrap();
+        relay.finish_stream(0).unwrap();
+        let (partial, _, _) = relay.finalize_partial().unwrap();
+        let mut root = FedAvg::new();
+        root.add(&partial, MAX_WEIGHT + 5).unwrap();
+        assert!(root.finalize().is_ok());
+        // ...while an fp32 LEAF fold with that weight stays rejected.
+        let mut agg = FedAvg::new();
+        assert!(agg.add(&u, MAX_WEIGHT + 5).is_err());
     }
 
     // -- entry fold -----------------------------------------------------------
@@ -498,6 +809,99 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_partial_fold_is_bit_identical_to_flat() {
+        // The weighted-fold invariant: fold 4 updates flat, and fold them
+        // as two 2-client partial aggregates merged at a "root" — the
+        // results must agree to the bit, for any grouping.
+        let spec = ModelSpec::llama_mini();
+        let updates: Vec<ParamContainer> =
+            (0..4).map(|i| materialize(&spec, 900 + i as u64)).collect();
+        let weights = [100u64, 50, 75, 10];
+
+        let mut flat = FedAvg::new();
+        for (u, &w) in updates.iter().zip(&weights) {
+            flat.add(u, w).unwrap();
+        }
+        let want = flat.finalize().unwrap();
+
+        for split in 1..4 {
+            // relay tier: two EntryFolds producing PartialAggregates
+            let mut partials = Vec::new();
+            let mut offset = 0usize;
+            for group in [&updates[..split], &updates[split..]] {
+                let fold = EntryFold::new(ParamContainer::zeros_like(&updates[0]), group.len());
+                for (pos, u) in group.iter().enumerate() {
+                    fold.start_stream(pos, weights[offset + pos]).unwrap();
+                    for (idx, (name, t)) in u.iter().enumerate() {
+                        fold.fold_entry(pos, idx, name, t).unwrap();
+                    }
+                    fold.finish_stream(pos).unwrap();
+                }
+                let (partial, total, contribs) = fold.finalize_partial().unwrap();
+                assert_eq!(contribs, group.len());
+                offset += group.len();
+                partials.push((partial, total));
+            }
+            // root tier: merge the partials (reverse order too — exact
+            // integer sums are order-independent)
+            for reverse in [false, true] {
+                let mut root = FedAvg::new();
+                let iter: Vec<_> = if reverse {
+                    partials.iter().rev().collect()
+                } else {
+                    partials.iter().collect()
+                };
+                for (p, total) in iter {
+                    root.add(p, *total).unwrap();
+                }
+                let got = root.finalize().unwrap();
+                assert_eq!(
+                    got.max_abs_diff(&want),
+                    0.0,
+                    "split {split} reverse {reverse}"
+                );
+                assert_eq!(got.names(), want.names());
+            }
+        }
+    }
+
+    #[test]
+    fn entry_fold_accepts_partial_aggregate_entries() {
+        // A root session folding a relay's Fx128 stream: direct integer
+        // merge, weight tag counts toward the mean's denominator.
+        let mut u0 = ParamContainer::new();
+        u0.insert("w", Tensor::from_f32(vec![2], vec![1.0, 2.0]));
+        let mut u1 = ParamContainer::new();
+        u1.insert("w", Tensor::from_f32(vec![2], vec![3.0, 6.0]));
+
+        // relay folds u0 (weight 2) and u1 (weight 2) into one partial
+        let relay = EntryFold::new(ParamContainer::zeros_like(&u0), 2);
+        for (pos, u) in [&u0, &u1].into_iter().enumerate() {
+            relay.start_stream(pos, 2).unwrap();
+            relay.fold_entry(pos, 0, "w", u.get("w").unwrap()).unwrap();
+            relay.finish_stream(pos).unwrap();
+        }
+        let (partial, total, _) = relay.finalize_partial().unwrap();
+        assert_eq!(total, 4);
+        assert_eq!(partial.get("w").unwrap().meta.dtype, DType::Fx128);
+
+        // root folds the partial stream plus one direct client
+        let mut direct = ParamContainer::new();
+        direct.insert("w", Tensor::from_f32(vec![2], vec![8.0, 0.0]));
+        let root = EntryFold::new(ParamContainer::zeros_like(&u0), 2);
+        root.start_stream(0, total).unwrap();
+        root.fold_entry(0, 0, "w", partial.get("w").unwrap()).unwrap();
+        root.finish_stream(0).unwrap();
+        root.start_stream(1, 4).unwrap();
+        root.fold_entry(1, 0, "w", direct.get("w").unwrap()).unwrap();
+        root.finish_stream(1).unwrap();
+        let (acc, n) = root.finalize().unwrap();
+        assert_eq!(n, 2);
+        // mean = (2*[1,2] + 2*[3,6] + 4*[8,0]) / 8 = [40,16]/8 = [5,2]
+        assert_eq!(acc.get("w").unwrap().as_f32(), &[5.0, 2.0]);
+    }
+
+    #[test]
     fn entry_fold_rejects_mismatched_shape_and_name() {
         let mut skel = ParamContainer::new();
         skel.insert("w", Tensor::from_f32(vec![2], vec![0.0, 0.0]));
@@ -538,6 +942,7 @@ mod tests {
         fold.poison("test abort");
         assert_eq!(fold.finish_stream(2).unwrap(), FoldOutcome::Dropped);
         assert!(fold.finalize().is_err());
+        assert!(fold.finalize_partial().is_err());
     }
 
     #[test]

@@ -35,8 +35,8 @@ use crate::filter::{EntryChain, FilterContext, FilterFactory, FilterPoint, Filte
 use crate::memory::{GaugeReservation, COMM_GAUGE};
 use crate::metrics::Report;
 use crate::sfm::SfmEndpoint;
-use crate::streaming::{self, EntryFlow, WeightsMsg};
-use crate::tensor::ParamContainer;
+use crate::streaming::{self, WeightsMsg};
+use crate::tensor::{DType, ParamContainer};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -44,10 +44,13 @@ use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// One connected client from the server's perspective.
+/// One connected client from the server's perspective. With a
+/// hierarchical topology a "client" may be a relay tier: `subtree` is the
+/// number of leaf clients it aggregates for (1 for an ordinary client).
 pub struct ClientConn {
     pub name: String,
     pub ep: SfmEndpoint,
+    pub subtree: usize,
 }
 
 /// The federated server.
@@ -124,6 +127,9 @@ struct Contribution {
     _mem: Option<GaugeReservation>,
     n_samples: u64,
     losses: Vec<f32>,
+    /// Leaf clients folded into this contribution (1 for an ordinary
+    /// client, the subtree's completed count for a relay).
+    contributions: usize,
     /// Scatter → gather wall-clock inside the session worker.
     seconds: f64,
     /// Wire bytes (sent + received) this round on the client's endpoint.
@@ -159,11 +165,12 @@ impl Controller {
         self
     }
 
-    /// Accept a registration on an endpoint and add the client.
+    /// Accept a registration on an endpoint and add the client (or relay
+    /// tier — the controller treats a relay as a weighted contributor).
     pub fn accept_client(&mut self, ep: SfmEndpoint, timeout: Option<Duration>) -> Result<()> {
         let msg = CtrlMsg::from_json(&ep.recv_ctrl(timeout)?)?;
-        let name = match msg {
-            CtrlMsg::Register { client } => client,
+        let (name, subtree) = match msg {
+            CtrlMsg::Register { client, subtree } => (client, subtree),
             other => bail!("expected register, got {other:?}"),
         };
         ep.send_ctrl(
@@ -172,8 +179,15 @@ impl Controller {
             }
             .to_json(),
         )?;
-        log::info!("client '{name}' registered ({})", ep.driver_name());
-        self.clients.push(ClientConn { name, ep });
+        if subtree > 1 {
+            log::info!(
+                "relay '{name}' registered ({}) aggregating {subtree} leaf client(s)",
+                ep.driver_name()
+            );
+        } else {
+            log::info!("client '{name}' registered ({})", ep.driver_name());
+        }
+        self.clients.push(ClientConn { name, ep, subtree });
         Ok(())
     }
 
@@ -215,6 +229,10 @@ impl Controller {
         global: ParamContainer,
         report: &mut Report,
     ) -> Result<ParamContainer> {
+        // Fail fast on misconfiguration (sample_fraction, quorum,
+        // timeouts, topology): a clear error here beats a mid-round
+        // surprise three transfers in.
+        self.job.validate().context("invalid job config")?;
         if self.clients.is_empty() {
             bail!("no clients registered");
         }
@@ -388,7 +406,18 @@ impl Controller {
                 // expire and strip the healthy survivors too.
                 let deadline = (policy.round_deadline_secs > 0)
                     .then(|| Instant::now() + Duration::from_secs(policy.round_deadline_secs));
-                let mut gather = RoundGather::new(round, step_counter, selected.clone());
+                // Buffered mode folds through FedAvg: seed its geometry
+                // from the round's own globals so a malformed first
+                // arrival cannot hijack the name/shape contract.
+                let agg_skeleton =
+                    (!entry_mode).then(|| ParamContainer::zeros_like(&global));
+                let mut gather = RoundGather::new(
+                    round,
+                    step_counter,
+                    selected.clone(),
+                    policy.allow_partial,
+                    agg_skeleton,
+                );
                 let mut outstanding = 0usize;
                 let mut pre_stragglers = 0usize;
                 for &i in &selected {
@@ -661,6 +690,7 @@ impl Controller {
                 seconds: t0.elapsed().as_secs_f64(),
                 sampled: k,
                 completed: gather.completed,
+                leaf_completed: gather.leaf_completed,
                 failed: gather.failed,
                 stragglers,
                 peak_comm_bytes: COMM_GAUGE.peak(),
@@ -675,6 +705,9 @@ impl Controller {
             report
                 .series_mut("clients_sampled")
                 .push(round as f64, k as f64);
+            report
+                .series_mut("leaf_clients_completed")
+                .push(round as f64, stats.leaf_completed as f64);
             report
                 .series_mut("clients_failed")
                 .push(round as f64, stats.failed as f64);
@@ -705,6 +738,9 @@ struct RoundGather {
     /// Global step index at the start of this round (x axis of
     /// `client_loss`).
     step0: usize,
+    /// Buffered-path fold errors (NaN / out-of-range terms in a
+    /// contribution) exclude the contributor instead of aborting the job.
+    allow_partial: bool,
     selected: Vec<usize>,
     /// Positions excluded from the aggregate (failed or straggler).
     excluded: Vec<bool>,
@@ -715,6 +751,9 @@ struct RoundGather {
     agg: FedAvg,
     next_pos: usize,
     completed: usize,
+    /// Leaf clients behind the completed contributions (≥ `completed`
+    /// when relay tiers contribute pre-folded subtrees).
+    leaf_completed: usize,
     failed: usize,
     round_comm: u64,
     losses_sum: f64,
@@ -722,18 +761,29 @@ struct RoundGather {
 }
 
 impl RoundGather {
-    fn new(round: usize, step0: usize, selected: Vec<usize>) -> RoundGather {
+    fn new(
+        round: usize,
+        step0: usize,
+        selected: Vec<usize>,
+        allow_partial: bool,
+        agg_skeleton: Option<ParamContainer>,
+    ) -> RoundGather {
         let k = selected.len();
         RoundGather {
             round,
             step0,
+            allow_partial,
             selected,
             excluded: vec![false; k],
             got: vec![false; k],
             pending: BTreeMap::new(),
-            agg: FedAvg::new(),
+            agg: match agg_skeleton {
+                Some(s) => FedAvg::with_skeleton(s),
+                None => FedAvg::new(),
+            },
             next_pos: 0,
             completed: 0,
+            leaf_completed: 0,
             failed: 0,
             round_comm: 0,
             losses_sum: 0.0,
@@ -783,7 +833,26 @@ impl RoundGather {
             };
             let name = &names[self.selected[self.next_pos]];
             if let Some(update) = &c.update {
-                self.agg.add(update, c.n_samples)?;
+                // `add` is container-atomic: on Err nothing of this
+                // contribution reached the accumulator, so under
+                // `allow_partial` the contributor is excluded exactly
+                // like a failed session instead of aborting the job.
+                if let Err(e) = self.agg.add(update, c.n_samples) {
+                    if !self.allow_partial {
+                        return Err(e.context(format!(
+                            "contribution from '{name}' failed to fold in round {}",
+                            self.round
+                        )));
+                    }
+                    log::warn!(
+                        "round {}: excluding '{name}' at the fold: {e:#}",
+                        self.round
+                    );
+                    self.excluded[self.next_pos] = true;
+                    self.failed += 1;
+                    self.next_pos += 1;
+                    continue; // the contribution (and its reservation) drops
+                }
             }
             report
                 .series_mut(&format!("client_round_secs/{name}"))
@@ -802,6 +871,7 @@ impl RoundGather {
             }
             self.round_comm += c.comm_bytes;
             self.completed += 1;
+            self.leaf_completed += c.contributions.max(1);
             self.next_pos += 1;
             // the contribution (and its gauge reservation) drops here
         }
@@ -965,15 +1035,23 @@ fn run_client_round(
     drop(global); // the scatter copy is no longer needed during gather
 
     // -- gather ---------------------------------------------------------
-    let ctrl = CtrlMsg::from_json(&ctx.conn.ep.recv_ctrl(Some(timeout))?)?;
-    let (r_round, n_samples, losses, headers) = match ctrl {
+    // A registered relay gets proportionate train-wait headroom (see
+    // [`crate::coordinator::SUBTREE_WAIT_FACTOR`]).
+    let train_wait = if ctx.conn.subtree > 1 {
+        timeout.saturating_mul(super::SUBTREE_WAIT_FACTOR)
+    } else {
+        timeout
+    };
+    let ctrl = CtrlMsg::from_json(&ctx.conn.ep.recv_ctrl(Some(train_wait))?)?;
+    let (r_round, n_samples, losses, contributions, headers) = match ctrl {
         CtrlMsg::Result {
             round: r,
             n_samples,
             losses,
+            contributions,
             headers,
             ..
-        } => (r, n_samples, losses, headers),
+        } => (r, n_samples, losses, contributions, headers),
         other => bail!("expected result from {name}, got {other:?}"),
     };
     if r_round != round {
@@ -1001,27 +1079,19 @@ fn run_client_round(
             point_headers: headers,
         };
         let mut dropped = false;
-        streaming::recv_weights_filtered(
-            &conn.ep,
-            chain,
-            &mut rctx,
-            Some(spool.as_path()),
-            reliable,
-            Some(timeout),
-            &mut |idx, ename, t| match sf.fold.fold_entry(sf.pos, idx, &ename, &t)? {
-                FoldOutcome::Folded => {
-                    // The entry is folded into the shared accumulator;
-                    // cycle its (pool-backed) storage for the next one.
-                    crate::memory::pool::give_bytes(t.data);
-                    Ok(EntryFlow::Continue)
-                }
-                FoldOutcome::Dropped => {
-                    dropped = true;
-                    Ok(EntryFlow::Discard)
-                }
-            },
-        )
-        .with_context(|| format!("receive result from {name}"))?;
+        {
+            let mut sink = super::fold_sink(sf.fold.as_ref(), sf.pos, conn.subtree, &mut dropped);
+            streaming::recv_weights_filtered(
+                &conn.ep,
+                chain,
+                &mut rctx,
+                Some(spool.as_path()),
+                reliable,
+                Some(timeout),
+                &mut sink,
+            )
+            .with_context(|| format!("receive result from {name}"))?;
+        }
         if dropped {
             return Ok(RoundOutcome::Dropped);
         }
@@ -1032,6 +1102,7 @@ fn run_client_round(
                 _mem: None,
                 n_samples,
                 losses,
+                contributions,
                 seconds: t0.elapsed().as_secs_f64(),
                 comm_bytes: endpoint_bytes(&conn.ep).saturating_sub(bytes0),
                 scratch_bytes: chain.scratch_bytes(),
@@ -1057,6 +1128,13 @@ fn run_client_round(
                 bail!("result still quantized after inbound filters — chain misconfigured")
             }
         };
+        // Only relay tiers may contribute pre-folded partials (see the
+        // entry-fold sink's matching guard).
+        if ctx.conn.subtree <= 1
+            && update.iter().any(|(_, t)| t.meta.dtype == DType::Fx128)
+        {
+            bail!("leaf client {name} sent a partial aggregate (only relay tiers may pre-fold)");
+        }
         // Account the update buffered until the fold frontier reaches it.
         let mem = GaugeReservation::new(&COMM_GAUGE, update.total_bytes());
         Ok(RoundOutcome::Done(Contribution {
@@ -1064,6 +1142,7 @@ fn run_client_round(
             _mem: Some(mem),
             n_samples,
             losses,
+            contributions,
             seconds: t0.elapsed().as_secs_f64(),
             comm_bytes: endpoint_bytes(&ctx.conn.ep).saturating_sub(bytes0),
             scratch_bytes: 0,

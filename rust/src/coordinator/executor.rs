@@ -67,6 +67,7 @@ impl<T: LocalTrainer> Executor<T> {
         self.ep.send_ctrl(
             &CtrlMsg::Register {
                 client: self.name.clone(),
+                subtree: 1,
             }
             .to_json(),
         )?;
@@ -191,6 +192,7 @@ impl<T: LocalTrainer> Executor<T> {
                         client: self.name.clone(),
                         n_samples: self.trainer.n_samples(),
                         losses,
+                        contributions: 1,
                         headers: out_ctx.point_headers.clone(),
                     }
                     .to_json(),
@@ -227,6 +229,7 @@ impl<T: LocalTrainer> Executor<T> {
                         client: self.name.clone(),
                         n_samples: self.trainer.n_samples(),
                         losses,
+                        contributions: 1,
                         headers: out_ctx.point_headers.clone(),
                     }
                     .to_json(),

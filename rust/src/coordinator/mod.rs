@@ -10,8 +10,9 @@ pub mod executor;
 pub mod protocol;
 pub mod simulator;
 
-use crate::tensor::ParamContainer;
-use anyhow::Result;
+use crate::streaming::EntryFlow;
+use crate::tensor::{DType, ParamContainer, Tensor};
+use anyhow::{bail, Result};
 
 /// Local training abstraction — the Executor's task body.
 ///
@@ -100,8 +101,12 @@ pub struct RoundStats {
     pub seconds: f64,
     /// Clients selected by the sampling policy this round.
     pub sampled: usize,
-    /// Contributions folded into the aggregate.
+    /// Contributions folded into the aggregate (direct sessions — a
+    /// relay tier counts once here).
     pub completed: usize,
+    /// Leaf clients behind the completed contributions (≥ `completed`
+    /// with a hierarchical topology).
+    pub leaf_completed: usize,
     /// Selected clients excluded after an error/disconnect.
     pub failed: usize,
     /// Selected clients abandoned at the round deadline.
@@ -114,8 +119,10 @@ pub struct RoundStats {
 /// Retry/resume policy for the coordinator's reliable weight transfers,
 /// scaled so the sender's silent-round budget tracks the configured
 /// transfer timeout. The default 600 s timeout reproduces the historical
-/// `ResumePolicy::default()` (16 attempts × 2 s ack timeout).
-pub(crate) fn resume_policy(transfer_timeout: std::time::Duration) -> crate::sfm::ResumePolicy {
+/// `ResumePolicy::default()` (16 attempts × 2 s ack timeout). Public:
+/// the relay tier (`crate::topology`) drives the same transfers on both
+/// of its legs.
+pub fn resume_policy(transfer_timeout: std::time::Duration) -> crate::sfm::ResumePolicy {
     let ack = (transfer_timeout / 16).clamp(
         std::time::Duration::from_millis(100),
         std::time::Duration::from_secs(2),
@@ -124,6 +131,46 @@ pub(crate) fn resume_policy(transfer_timeout: std::time::Duration) -> crate::sfm
         max_attempts: 16,
         ack_timeout: ack,
         probe_first: false,
+    }
+}
+
+/// Train-wait headroom multiplier for subtree registrants: a relay's
+/// "training" spans its whole subtree gather, including child failure
+/// detection and one restart, each bounded by the transfer timeout.
+/// Shared by the root engine and the relay tier so a mid-tree relay
+/// never times out a deeper relay earlier than the root times out it.
+pub const SUBTREE_WAIT_FACTOR: u32 = 4;
+
+/// The entry-streamed gather sink shared by root session workers and
+/// relay child sessions: gates wire `PartialAggregate` entries to relay
+/// registrants (`subtree > 1`), folds each tensor into the shared
+/// accumulator, recycles folded pool buffers, and flags a
+/// dropped/drained stream via `dropped`.
+pub fn fold_sink<'a>(
+    fold: &'a aggregator::EntryFold,
+    pos: usize,
+    subtree: usize,
+    dropped: &'a mut bool,
+) -> impl FnMut(usize, String, Tensor) -> Result<EntryFlow> + 'a {
+    move |idx, ename, t| {
+        if t.meta.dtype == DType::Fx128 && subtree <= 1 {
+            bail!(
+                "entry '{ename}': leaf client sent a partial aggregate \
+                 (only relay tiers may pre-fold)"
+            );
+        }
+        match fold.fold_entry(pos, idx, &ename, &t)? {
+            aggregator::FoldOutcome::Folded => {
+                // The entry is folded into the shared accumulator; cycle
+                // its (pool-backed) storage for the next one.
+                crate::memory::pool::give_bytes(t.data);
+                Ok(EntryFlow::Continue)
+            }
+            aggregator::FoldOutcome::Dropped => {
+                *dropped = true;
+                Ok(EntryFlow::Discard)
+            }
+        }
     }
 }
 

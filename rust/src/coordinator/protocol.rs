@@ -12,8 +12,12 @@ use std::collections::BTreeMap;
 /// Protocol operations.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CtrlMsg {
-    /// Client → server on connect.
-    Register { client: String },
+    /// Client (or relay) → server on connect. `subtree` is the number of
+    /// leaf clients this registrant aggregates for: 1 for an ordinary
+    /// client, the subtree's leaf count for a relay tier (see
+    /// `crate::topology`). Absent on the wire means 1, so old peers
+    /// interoperate.
+    Register { client: String, subtree: usize },
     /// Server → client: accepted; carries the job config JSON.
     Welcome { job: Json },
     /// Server → client: a task follows (weights object on the wire next).
@@ -25,12 +29,18 @@ pub enum CtrlMsg {
     /// Server → client: not sampled this round — no task data follows;
     /// stand by for the next control message.
     NoTask { round: usize },
-    /// Client → server: result follows (weights object next).
+    /// Client (or relay) → server: result follows (weights object next).
+    /// For a relay the object is a weight-tagged `PartialAggregate`
+    /// stream, `n_samples` is the subtree's summed weight, `losses` the
+    /// concatenated subtree losses, and `contributions` how many leaf
+    /// clients folded into it (1 for an ordinary client; absent on the
+    /// wire means 1).
     Result {
         round: usize,
         client: String,
         n_samples: u64,
         losses: Vec<f32>,
+        contributions: usize,
         headers: BTreeMap<String, Json>,
     },
     /// Server → client: training finished.
@@ -48,9 +58,10 @@ fn headers_from_json(j: Option<&Json>) -> BTreeMap<String, Json> {
 impl CtrlMsg {
     pub fn to_json(&self) -> Json {
         match self {
-            CtrlMsg::Register { client } => Json::obj(vec![
+            CtrlMsg::Register { client, subtree } => Json::obj(vec![
                 ("op", Json::str("register")),
                 ("client", Json::str(client.clone())),
+                ("subtree", Json::num(*subtree as f64)),
             ]),
             CtrlMsg::Welcome { job } => Json::obj(vec![
                 ("op", Json::str("welcome")),
@@ -75,6 +86,7 @@ impl CtrlMsg {
                 client,
                 n_samples,
                 losses,
+                contributions,
                 headers,
             } => Json::obj(vec![
                 ("op", Json::str("result")),
@@ -85,6 +97,7 @@ impl CtrlMsg {
                     "losses",
                     Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect()),
                 ),
+                ("contributions", Json::num(*contributions as f64)),
                 ("headers", headers_to_json(headers)),
             ]),
             CtrlMsg::Done => Json::obj(vec![("op", Json::str("done"))]),
@@ -103,6 +116,11 @@ impl CtrlMsg {
                     .and_then(|c| c.as_str())
                     .ok_or_else(|| anyhow!("register without client"))?
                     .to_string(),
+                subtree: j
+                    .get("subtree")
+                    .and_then(|s| s.as_usize())
+                    .unwrap_or(1)
+                    .max(1),
             },
             "welcome" => CtrlMsg::Welcome {
                 job: j.get("job").cloned().unwrap_or(Json::Null),
@@ -140,6 +158,11 @@ impl CtrlMsg {
                     .and_then(|l| l.as_arr())
                     .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
                     .unwrap_or_default(),
+                contributions: j
+                    .get("contributions")
+                    .and_then(|c| c.as_usize())
+                    .unwrap_or(1)
+                    .max(1),
                 headers: headers_from_json(j.get("headers")),
             },
             "done" => CtrlMsg::Done,
@@ -159,6 +182,11 @@ mod tests {
         let msgs = vec![
             CtrlMsg::Register {
                 client: "site-1".into(),
+                subtree: 1,
+            },
+            CtrlMsg::Register {
+                client: "relay-0".into(),
+                subtree: 4,
             },
             CtrlMsg::Welcome {
                 job: Json::obj(vec![("rounds", Json::num(5.0))]),
@@ -174,6 +202,15 @@ mod tests {
                 client: "site-1".into(),
                 n_samples: 250,
                 losses: vec![2.5, 2.25],
+                contributions: 1,
+                headers: headers.clone(),
+            },
+            CtrlMsg::Result {
+                round: 3,
+                client: "relay-0".into(),
+                n_samples: 475,
+                losses: vec![2.5, 2.25, 1.5],
+                contributions: 4,
                 headers,
             },
             CtrlMsg::Done,
@@ -182,6 +219,25 @@ mod tests {
             let j = m.to_json();
             let back = CtrlMsg::from_json(&j).unwrap();
             assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn legacy_peers_default_subtree_and_contributions() {
+        // Messages from peers that predate the relay tier carry neither
+        // field; both default to 1.
+        let j = Json::parse(r#"{"op":"register","client":"site-9"}"#).unwrap();
+        match CtrlMsg::from_json(&j).unwrap() {
+            CtrlMsg::Register { client, subtree } => {
+                assert_eq!(client, "site-9");
+                assert_eq!(subtree, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        let j = Json::parse(r#"{"op":"result","round":0,"client":"site-9"}"#).unwrap();
+        match CtrlMsg::from_json(&j).unwrap() {
+            CtrlMsg::Result { contributions, .. } => assert_eq!(contributions, 1),
+            other => panic!("{other:?}"),
         }
     }
 

@@ -39,6 +39,15 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
     make_trainer: TrainerFactory<T>,
     make_filters: impl Fn() -> FilterSet + Send + Sync + 'static,
 ) -> Result<SimResult> {
+    // Fail fast on misconfiguration — a clear error here beats a
+    // mid-round surprise three transfers in.
+    job.validate()?;
+    if job.topology.is_tree() {
+        // Hierarchical relay tier: the multi-tier wiring lives in the
+        // topology subsystem; the result contract is identical.
+        return crate::topology::sim::run_tree_simulation(job, initial, make_trainer, make_filters)
+            .map(crate::topology::sim::TreeSimResult::into_sim_result);
+    }
     let spool = spool_dir();
     std::fs::create_dir_all(&spool)?;
     // Kernel parallelism is a process-global knob (see JobConfig).

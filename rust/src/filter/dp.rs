@@ -76,6 +76,13 @@ impl EntryFilter for GaussianDpEntryFilter {
 
     fn entry(&mut self, _idx: usize, e: Entry, ctx: &mut FilterContext) -> Result<Entry> {
         let (name, t) = match e {
+            // Hierarchical partial aggregates cross tier boundaries
+            // unperturbed: DP noise is a per-client mechanism applied at
+            // the leaf tier, and re-noising a pre-folded sum would add
+            // O(tiers) extra noise to the global model.
+            Entry::Plain(n, t) if t.meta.dtype == crate::tensor::DType::Fx128 => {
+                return Ok(Entry::Plain(n, t));
+            }
             Entry::Plain(n, t) => (n, t),
             Entry::Quantized(..) => {
                 bail!("DP filter must run before quantization (chain order)")

@@ -13,6 +13,9 @@
 //! * [`quant`] — fp16 / bf16 / blockwise8 / fp4 / nf4 codecs.
 //! * [`coordinator`] — concurrent round engine (per-client sessions,
 //!   sampling / quorum / deadlines / partial aggregation) + FedAvg.
+//! * [`topology`] — hierarchical relay-aggregation tier: tree topologies
+//!   whose relays pre-fold entry streams at the edge and ship exact
+//!   `PartialAggregate` sums upstream.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX train step.
 
 pub mod config;
@@ -26,4 +29,5 @@ pub mod runtime;
 pub mod sfm;
 pub mod streaming;
 pub mod tensor;
+pub mod topology;
 pub mod util;

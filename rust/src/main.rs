@@ -44,7 +44,8 @@ COMMANDS:
                 --trainer pjrt|mock --alpha 0 --out results/run.json
                 --sample-fraction 1.0 --min-clients 0 --round-deadline 0
                 --allow-partial[=false] --transfer-timeout 600
-                --entry-fold true|false --encode-threads 0]
+                --entry-fold true|false --encode-threads 0
+                --topology flat|tree --branching 4]
   server        --listen 127.0.0.1:7777 --job <file>
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
@@ -127,6 +128,22 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
     }
     if let Some(d) = args.get("artifacts") {
         job.artifacts_dir = d.to_string();
+    }
+    // Hierarchical relay tier: `--topology tree --branching 4` routes the
+    // simulation through `flare::topology` (relays pre-fold at the edge).
+    if let Some(t) = args.get("topology") {
+        job.topology = match t {
+            "flat" => flare::config::Topology::Flat,
+            "tree" => flare::config::Topology::Tree {
+                branching: args.get_usize("branching", 4),
+            },
+            other => bail!("unknown topology '{other}' (flat|tree)"),
+        };
+    } else if let Some(b) = args.get("branching") {
+        let branching: usize = b
+            .parse()
+            .map_err(|_| anyhow!("branching: expected integer, got '{b}'"))?;
+        job.topology = flare::config::Topology::Tree { branching };
     }
     // Quantization kernel parallelism (0 = auto).
     job.encode_threads = args.get_usize("encode-threads", job.encode_threads);
@@ -239,6 +256,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_server(args: &Args) -> Result<()> {
     let job = job_from_args(args)?;
+    if job.topology.is_tree() {
+        bail!(
+            "`server` drives a flat topology; tree topologies run via `simulate --topology tree` \
+             (or embed flare::topology::RelayNode over TCP endpoints)"
+        );
+    }
     let addr = args.get_or("listen", "127.0.0.1:7777");
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     println!("listening on {addr}, waiting for {} client(s)...", job.clients);
@@ -401,6 +424,7 @@ fn cmd_stream_bench(args: &Args) -> Result<()> {
     let client = SfmEndpoint::new(pair.b).with_chunk(chunk);
     let spool = std::env::temp_dir();
     flare::memory::COMM_GAUGE.reset_peak();
+    flare::memory::pool::reset_stats();
     let pool_before = flare::memory::pool::global().snapshot();
     let region = RssRegion::start();
     let t0 = std::time::Instant::now();

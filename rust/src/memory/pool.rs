@@ -228,6 +228,18 @@ impl BufferPool {
         self.counters.returns.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Zero the traffic counters. Benches and tests call this at setup
+    /// so hit-rate assertions measure *their* run, not whatever warmed
+    /// the process-global pool before them (the counters are otherwise
+    /// monotone for the process lifetime). Idle buffers stay shelved —
+    /// pair with [`BufferPool::drain`] for a fully cold pool.
+    pub fn reset_stats(&self) {
+        self.counters.hits.store(0, Ordering::Relaxed);
+        self.counters.misses.store(0, Ordering::Relaxed);
+        self.counters.returns.store(0, Ordering::Relaxed);
+        self.counters.discards.store(0, Ordering::Relaxed);
+    }
+
     /// Drop every idle buffer (tests; steady-state misses are measured
     /// from a known-empty pool).
     pub fn drain(&self) {
@@ -265,6 +277,12 @@ pub fn f32s(elems: usize) -> Vec<f32> {
 /// Convenience: return an f32 buffer to the global pool.
 pub fn give_f32(v: Vec<f32>) {
     global().give_f32(v)
+}
+
+/// Convenience: zero the global pool's traffic counters (bench/test
+/// setup — see [`BufferPool::reset_stats`]).
+pub fn reset_stats() {
+    global().reset_stats()
 }
 
 /// A pooled, gauge-registered byte buffer — the zero-churn successor of
@@ -442,6 +460,21 @@ mod tests {
         let v = b.into_vec();
         assert_eq!(v.len(), 50);
         assert_eq!(COMM_GAUGE.current(), before);
+    }
+
+    #[test]
+    fn reset_stats_zeroes_counters_but_keeps_shelves() {
+        let pool = BufferPool::new();
+        let v = pool.take_bytes(2048);
+        pool.give_bytes(v);
+        assert!(pool.snapshot().takes() > 0);
+        pool.reset_stats();
+        let s = pool.snapshot();
+        assert_eq!((s.hits, s.misses, s.returns, s.discards), (0, 0, 0, 0));
+        assert_eq!(s.hit_rate(), 1.0, "no traffic after reset");
+        // the shelved buffer survived the reset: next take is a hit
+        let _ = pool.take_bytes(2048);
+        assert_eq!(pool.snapshot().hits, 1);
     }
 
     #[test]

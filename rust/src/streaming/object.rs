@@ -150,6 +150,12 @@ pub struct EntryAssembler {
 }
 
 impl EntryAssembler {
+    /// Record one delivered entry. **Idempotent**: a resumed transfer
+    /// may re-complete (and therefore re-deliver) a unit it already
+    /// delivered before the interruption — an identical duplicate is
+    /// dropped silently. A *conflicting* delivery at the same index
+    /// (different name, shape or bytes) is corruption and stays an
+    /// error.
     pub fn put(&mut self, idx: usize, e: Entry) -> Result<()> {
         if idx >= self.slots.len() {
             if idx > 1_000_000 {
@@ -157,8 +163,11 @@ impl EntryAssembler {
             }
             self.slots.resize_with(idx + 1, || None);
         }
-        if self.slots[idx].is_some() {
-            bail!("duplicate entry at index {idx}");
+        if let Some(have) = &self.slots[idx] {
+            if *have == e {
+                return Ok(()); // duplicate re-delivery (resume re-send)
+            }
+            bail!("conflicting duplicate entry at index {idx}");
         }
         self.slots[idx] = Some(e);
         self.received += 1;
@@ -1461,6 +1470,81 @@ mod tests {
         let peak = COMM_GAUGE.peak() - base;
         let max_entry = ModelSpec::llama_mini().max_param_bytes_f32();
         assert!(peak < 4 * max_entry, "container resumable peak {peak}");
+    }
+
+    #[test]
+    fn entry_assembler_duplicate_deliveries_are_idempotent() {
+        // A resumed transfer can re-complete a unit it already delivered
+        // (the sender's restart re-sends every unit the receiver has not
+        // acked): the same (index, entry) twice must be a silent no-op.
+        let c = materialize(&ModelSpec::llama_mini(), 35);
+        let entries: Vec<Entry> = c
+            .iter()
+            .map(|(n, t)| Entry::Plain(n.to_string(), t.clone()))
+            .collect();
+        let n = entries.len();
+        let mut asm = EntryAssembler::default();
+        // overlapping delivery schedule: prefix, then the full set again
+        for (i, e) in entries.iter().take(n / 2).enumerate() {
+            asm.put(i, e.clone()).unwrap();
+        }
+        for (i, e) in entries.iter().enumerate() {
+            asm.put(i, e.clone()).unwrap();
+        }
+        // a third full pass is still fine
+        for (i, e) in entries.iter().enumerate() {
+            asm.put(i, e.clone()).unwrap();
+        }
+        assert_eq!(asm.received(), n, "duplicates must not inflate the count");
+        match asm.into_msg().unwrap() {
+            WeightsMsg::Plain(p) => {
+                assert_eq!(p.names(), c.names());
+                assert_eq!(p.max_abs_diff(&c), 0.0);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn entry_assembler_conflicting_duplicate_rejected() {
+        // Same index, different content: that is corruption (or a
+        // malicious peer), not a resume artifact.
+        let mut asm = EntryAssembler::default();
+        let a = Entry::Plain(
+            "w".into(),
+            crate::tensor::Tensor::from_f32(vec![2], vec![1.0, 2.0]),
+        );
+        let b = Entry::Plain(
+            "w".into(),
+            crate::tensor::Tensor::from_f32(vec![2], vec![1.0, 3.0]),
+        );
+        asm.put(0, a.clone()).unwrap();
+        let err = asm.put(0, b).unwrap_err().to_string();
+        assert!(err.contains("conflicting"), "{err}");
+        // differently-named duplicate is just as conflicting
+        let c = Entry::Plain(
+            "v".into(),
+            crate::tensor::Tensor::from_f32(vec![2], vec![1.0, 2.0]),
+        );
+        assert!(asm.put(0, c).is_err());
+        // the original survives intact
+        asm.put(1, a.clone()).unwrap();
+        assert_eq!(asm.received(), 2);
+        assert!(asm.into_msg().is_ok());
+    }
+
+    #[test]
+    fn entry_assembler_missing_entry_still_fails() {
+        let mut asm = EntryAssembler::default();
+        asm.put(
+            1,
+            Entry::Plain(
+                "w".into(),
+                crate::tensor::Tensor::from_f32(vec![1], vec![1.0]),
+            ),
+        )
+        .unwrap();
+        assert!(asm.into_msg().is_err(), "index 0 never delivered");
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!
 //! ```text
 //! entry := u16 name_len, name bytes,
-//!          u8 kind (0 = plain f32, else QuantScheme id),
+//!          u8 kind (0 = plain f32, 6 = partial-aggregate Q64.64 fixed
+//!                   point, else QuantScheme id),
 //!          u8 rank, u64 dims[rank],
 //!          u32 block_size,
 //!          u32 absmax_n, f32 absmax[absmax_n],
@@ -114,6 +115,10 @@ impl Entry {
     }
 }
 
+/// Wire kind of a hierarchical partial aggregate (plain Q64.64 entry).
+/// Chosen outside the QuantScheme id range (1..=5).
+const KIND_PARTIAL_FX128: u8 = 6;
+
 fn scheme_id(s: QuantScheme) -> u8 {
     match s {
         QuantScheme::None => 0,
@@ -122,6 +127,15 @@ fn scheme_id(s: QuantScheme) -> u8 {
         QuantScheme::Blockwise8 => 3,
         QuantScheme::Fp4 => 4,
         QuantScheme::Nf4 => 5,
+    }
+}
+
+/// Wire kind byte of a plain entry for the given element dtype.
+fn plain_kind(d: DType) -> Result<u8> {
+    match d {
+        DType::F32 => Ok(0),
+        DType::Fx128 => Ok(KIND_PARTIAL_FX128),
+        other => bail!("plain entries must be f32 or fx128, got {other}"),
     }
 }
 
@@ -141,12 +155,10 @@ pub fn write_entry<W: Write>(w: &mut W, e: &Entry) -> Result<()> {
     let mut head: Vec<u8> = Vec::with_capacity(64);
     match e {
         Entry::Plain(name, t) => {
-            if t.meta.dtype != DType::F32 {
-                bail!("plain entries must be f32");
-            }
+            let kind = plain_kind(t.meta.dtype)?;
             b::put_u16(&mut head, name.len() as u16);
             head.extend_from_slice(name.as_bytes());
-            head.push(0); // kind: plain
+            head.push(kind);
             head.push(t.meta.shape.len() as u8);
             for &d in &t.meta.shape {
                 b::put_u64(&mut head, d as u64);
@@ -302,22 +314,23 @@ pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
     // The expected payload size is a pure function of the header (shape +
     // scheme): check the declared length against it *before* reading, so
     // a lying prefix cannot even start a mismatched read.
-    let expect = if kind == 0 {
-        elems * 4
-    } else {
-        crate::quant::payload_dtype(scheme_from_id(kind)?)?.size_of_elems(elems)
+    let expect = match kind {
+        0 => elems * 4,
+        KIND_PARTIAL_FX128 => elems * 16,
+        _ => crate::quant::payload_dtype(scheme_from_id(kind)?)?.size_of_elems(elems),
     };
     if payload_len != expect as u64 {
         bail!(
             "{name}: payload length {payload_len} inconsistent with shape ({expect} expected)"
         );
     }
-    if kind == 0 {
+    if kind == 0 || kind == KIND_PARTIAL_FX128 {
         if block_size != 0 || absmax_n != 0 || codebook_n != 0 {
             bail!("{name}: plain entry carries quantization metadata");
         }
+        let dtype = if kind == 0 { DType::F32 } else { DType::Fx128 };
         let payload = read_payload_vec(r, payload_len as usize)?;
-        Ok(Entry::Plain(name, Tensor::new(shape, DType::F32, payload)))
+        Ok(Entry::Plain(name, Tensor::new(shape, dtype, payload)))
     } else {
         let scheme = scheme_from_id(kind)?;
         let payload = read_payload_vec(r, payload_len as usize)?;
@@ -433,13 +446,11 @@ pub fn encode_message<W: Write>(w: &mut W, msg: &WeightsMsg) -> Result<()> {
 
 /// Borrow-friendly plain-entry writer (avoids cloning tensor data).
 pub fn write_plain_borrowed<W: Write>(w: &mut W, name: &str, t: &Tensor) -> Result<()> {
-    if t.meta.dtype != DType::F32 {
-        bail!("plain entries must be f32");
-    }
+    let kind = plain_kind(t.meta.dtype)?;
     let mut head: Vec<u8> = Vec::with_capacity(64);
     b::put_u16(&mut head, name.len() as u16);
     head.extend_from_slice(name.as_bytes());
-    head.push(0);
+    head.push(kind);
     head.push(t.meta.shape.len() as u8);
     for &d in &t.meta.shape {
         b::put_u64(&mut head, d as u64);
@@ -690,6 +701,46 @@ mod tests {
             assert_eq!(&got, want);
         }
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn partial_aggregate_entry_roundtrip() {
+        // The hierarchical PartialAggregate unit: plain Q64.64 entries.
+        let vals = [1i128 << 80, -(3i128 << 64), 7, 0];
+        let t = crate::tensor::Tensor::from_i128(vec![2, 2], &vals);
+        let e = Entry::Plain("partial.w".into(), t);
+        let mut buf = Vec::new();
+        write_entry(&mut buf, &e).unwrap();
+        assert_eq!(buf.len(), e.wire_len());
+        let got = read_entry(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, e);
+        match got {
+            Entry::Plain(_, t) => {
+                assert_eq!(t.meta.dtype, crate::tensor::DType::Fx128);
+                assert_eq!(t.iter_i128().collect::<Vec<_>>(), vals);
+            }
+            _ => panic!("wrong variant"),
+        }
+        // borrowed writer emits identical bytes
+        match &e {
+            Entry::Plain(n, t) => {
+                let mut b2 = Vec::new();
+                write_plain_borrowed(&mut b2, n, t).unwrap();
+                assert_eq!(b2, buf);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn partial_aggregate_hostile_headers_rejected() {
+        // fx128 entry smuggling quantization metadata
+        let buf = hostile_entry(1, &[2], 6, 64, 1, 0, 32, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+        // payload length inconsistent with a 16-byte/elem fx128 shape
+        let buf = hostile_entry(1, &[2], 6, 0, 0, 0, 8, &[0u8; 64]);
+        let err = read_entry(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("inconsistent with shape"), "{err}");
     }
 
     #[test]

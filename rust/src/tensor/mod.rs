@@ -26,6 +26,11 @@ pub enum DType {
     I32,
     /// Two 4-bit codes packed per byte (fp4/nf4 payloads).
     U4x2,
+    /// Q64.64 signed fixed-point (one little-endian `i128` per element):
+    /// the exact partial-sum representation carried by hierarchical
+    /// `PartialAggregate` messages. Integer addition is associative, so
+    /// fold results are bit-identical for any tier grouping.
+    Fx128,
 }
 
 impl DType {
@@ -37,6 +42,7 @@ impl DType {
             DType::F16 | DType::BF16 => 2,
             DType::U8 => 1,
             DType::U4x2 => 1, // per *packed* byte; use size_of_elems()
+            DType::Fx128 => 16,
         }
     }
 
@@ -56,6 +62,7 @@ impl DType {
             DType::U8 => "u8",
             DType::I32 => "i32",
             DType::U4x2 => "u4x2",
+            DType::Fx128 => "fx128",
         }
     }
 
@@ -67,6 +74,7 @@ impl DType {
             "u8" | "U8" => DType::U8,
             "i32" | "I32" => DType::I32,
             "u4x2" => DType::U4x2,
+            "fx128" => DType::Fx128,
             _ => return None,
         })
     }
@@ -166,6 +174,28 @@ impl Tensor {
     pub fn to_f32_vec(&self) -> Vec<f32> {
         self.as_f32().to_vec()
     }
+
+    /// Build a Q64.64 fixed-point tensor from i128 values (little-endian
+    /// per element on the wire and in memory).
+    pub fn from_i128(shape: Vec<usize>, values: &[i128]) -> Self {
+        let meta = TensorMeta::new(shape, DType::Fx128);
+        assert_eq!(values.len(), meta.elems());
+        let mut data = Vec::with_capacity(values.len() * 16);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self { meta, data }
+    }
+
+    /// Iterate a Q64.64 tensor's elements (panics if dtype != Fx128).
+    /// Decoded by value from the little-endian buffer, so no alignment
+    /// assumption is made on the byte storage.
+    pub fn iter_i128(&self) -> impl Iterator<Item = i128> + '_ {
+        assert_eq!(self.meta.dtype, DType::Fx128);
+        self.data
+            .chunks_exact(16)
+            .map(|c| i128::from_le_bytes(c.try_into().expect("16-byte chunk")))
+    }
 }
 
 #[cfg(test)]
@@ -183,10 +213,27 @@ mod tests {
 
     #[test]
     fn dtype_name_roundtrip() {
-        for d in [DType::F32, DType::F16, DType::BF16, DType::U8, DType::I32, DType::U4x2] {
+        for d in [
+            DType::F32,
+            DType::F16,
+            DType::BF16,
+            DType::U8,
+            DType::I32,
+            DType::U4x2,
+            DType::Fx128,
+        ] {
             assert_eq!(DType::from_name(d.name()), Some(d));
         }
         assert_eq!(DType::from_name("f64"), None);
+    }
+
+    #[test]
+    fn fx128_roundtrip() {
+        let vals = [0i128, 1, -1, i128::from(u64::MAX) + 7, -(1i128 << 100)];
+        let t = Tensor::from_i128(vec![5], &vals);
+        assert_eq!(t.byte_len(), 80);
+        let back: Vec<i128> = t.iter_i128().collect();
+        assert_eq!(back, vals);
     }
 
     #[test]

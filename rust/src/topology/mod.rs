@@ -1,0 +1,222 @@
+//! Hierarchical relay-aggregation tier (the first multi-node control
+//! plane): tree topologies whose intermediate relays pre-fold entry
+//! streams at the edge, so the root folds R relay streams instead of C
+//! client streams and per-node gather memory stays
+//! O(accumulator + entry × direct children) at every tier.
+//!
+//! Pieces:
+//!
+//! * [`crate::config::Topology`] — the job-level knob (`flat` | `tree`
+//!   with a branching factor), JSON + CLI wired.
+//! * [`plan`] — seeded, deterministic client→relay placement: clients
+//!   are shuffled by the job seed and chunked into subtrees; tiers nest
+//!   until every node's fan-in is within the branching factor.
+//! * [`relay::RelayNode`] — the mid-tier node. Downstream it speaks the
+//!   server side of the coordinator protocol (its children are ordinary
+//!   executors *or deeper relays* — the protocol is the same); upstream
+//!   it speaks the client side, registering with `subtree = leaf count`
+//!   and answering each task with a weight-tagged `PartialAggregate`.
+//! * [`sim`] — multi-tier in-process wiring (the tree analogue of
+//!   `coordinator::simulator::run_simulation`, which delegates here when
+//!   the job's topology is a tree).
+//!
+//! # Correctness invariant
+//!
+//! Scatter is **store-and-forward**: a relay never decodes or
+//! re-encodes task data, so every leaf receives byte-identical (e.g.
+//! nf4-quantized) task messages in any topology. Gather folds into the
+//! exact Q64.64 accumulator ([`crate::coordinator::aggregator`]) whose
+//! integer sums are associative, and partial aggregates travel as raw
+//! fixed-point sums — so the root's final model is **bit-identical** to
+//! the flat single-server run for every branching factor, tier depth and
+//! placement. Integrity digests are re-computed at each tier boundary:
+//! a relay verifies its children's digests (when stamped) and stamps a
+//! fresh digest over the partial it sends up.
+
+pub mod relay;
+pub mod sim;
+
+pub use relay::{RelayNode, RelayRound, RelayStats};
+
+use crate::config::Topology;
+use crate::streaming::WeightsMsg;
+use crate::tensor::{DType, ParamContainer, Tensor};
+use crate::util::rng::SplitMix64;
+
+/// One node of the placement plan: a leaf client (by index into the
+/// job's client list) or a relay subtree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TreeNode {
+    Client(usize),
+    Relay(Vec<TreeNode>),
+}
+
+impl TreeNode {
+    /// Leaf clients under this node.
+    pub fn leaves(&self) -> usize {
+        match self {
+            TreeNode::Client(_) => 1,
+            TreeNode::Relay(children) => children.iter().map(|c| c.leaves()).sum(),
+        }
+    }
+
+    /// Relay nodes in this subtree (including self for relays).
+    pub fn relays(&self) -> usize {
+        match self {
+            TreeNode::Client(_) => 0,
+            TreeNode::Relay(children) => 1 + children.iter().map(|c| c.relays()).sum::<usize>(),
+        }
+    }
+
+    /// Leaf client indices in deterministic (fold) order.
+    pub fn client_indices(&self) -> Vec<usize> {
+        match self {
+            TreeNode::Client(i) => vec![*i],
+            TreeNode::Relay(children) => {
+                children.iter().flat_map(|c| c.client_indices()).collect()
+            }
+        }
+    }
+}
+
+/// Chunk `idx` into `k` deterministic, contiguous, even-sized groups
+/// (sizes differ by at most one).
+fn chunk_even(idx: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let base = idx.len() / k;
+    let extra = idx.len() % k;
+    let mut out = Vec::with_capacity(k);
+    let mut at = 0usize;
+    for g in 0..k {
+        let size = base + usize::from(g < extra);
+        out.push(idx[at..at + size].to_vec());
+        at += size;
+    }
+    out
+}
+
+fn split(idx: &[usize], branching: usize) -> Vec<TreeNode> {
+    if idx.len() <= branching {
+        return idx.iter().map(|&i| TreeNode::Client(i)).collect();
+    }
+    // Prefer the shallowest tree that respects the fan-in bound: as many
+    // groups as needed so each holds ≤ branching clients, nesting deeper
+    // only when even `branching` groups would still overflow.
+    let k = idx.len().div_ceil(branching).min(branching);
+    chunk_even(idx, k)
+        .into_iter()
+        .map(|g| {
+            if g.len() == 1 {
+                TreeNode::Client(g[0])
+            } else {
+                TreeNode::Relay(split(&g, branching))
+            }
+        })
+        .collect()
+}
+
+/// The root's direct children for `clients` under `topology`, with the
+/// seeded deterministic client→relay assignment. Same `(topology,
+/// clients, seed)` → same placement.
+pub fn plan(topology: &Topology, clients: usize, seed: u64) -> Vec<TreeNode> {
+    match topology {
+        Topology::Flat => (0..clients).map(TreeNode::Client).collect(),
+        Topology::Tree { branching } => {
+            let mut idx: Vec<usize> = (0..clients).collect();
+            let mut base = SplitMix64::new(seed);
+            let mut rng = base.fork("topology-assign");
+            rng.shuffle(&mut idx);
+            split(&idx, (*branching).max(2))
+        }
+    }
+}
+
+/// Zero f32 container with the names/shapes/order of a weights message —
+/// the fold skeleton a relay seeds from the (possibly still quantized)
+/// scatter stream it forwards.
+pub fn skeleton_of(msg: &WeightsMsg) -> ParamContainer {
+    match msg {
+        WeightsMsg::Plain(c) => ParamContainer::zeros_like(c),
+        WeightsMsg::Quantized(q) => q
+            .entries
+            .iter()
+            .map(|(n, t)| (n.clone(), Tensor::zeros(t.orig.shape.clone(), DType::F32)))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_plan_is_direct_clients() {
+        let p = plan(&Topology::Flat, 5, 7);
+        assert_eq!(p.len(), 5);
+        assert!(p.iter().all(|n| matches!(n, TreeNode::Client(_))));
+    }
+
+    #[test]
+    fn tree_plan_is_seeded_and_deterministic() {
+        let t = Topology::Tree { branching: 4 };
+        let a = plan(&t, 8, 7);
+        let b = plan(&t, 8, 7);
+        assert_eq!(a, b, "same seed → same placement");
+        // 8 clients at branching 4: exactly two 4-client relays
+        assert_eq!(a.len(), 2);
+        for n in &a {
+            match n {
+                TreeNode::Relay(kids) => assert_eq!(kids.len(), 4),
+                other => panic!("expected relay, got {other:?}"),
+            }
+        }
+        // placement covers every client exactly once
+        let mut all: Vec<usize> = a.iter().flat_map(|n| n.client_indices()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        // a different seed gives a different shuffle (statistically
+        // certain for 8! placements)
+        let c = plan(&t, 8, 8);
+        assert_ne!(
+            a.iter().flat_map(|n| n.client_indices()).collect::<Vec<_>>(),
+            c.iter().flat_map(|n| n.client_indices()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn deep_trees_nest_until_fanin_bounded() {
+        let t = Topology::Tree { branching: 4 };
+        let p = plan(&t, 64, 1);
+        assert!(p.len() <= 4, "root fan-in bounded: {}", p.len());
+        let leaves: usize = p.iter().map(|n| n.leaves()).sum();
+        assert_eq!(leaves, 64);
+        // every relay obeys the fan-in bound
+        fn check(n: &TreeNode, b: usize) {
+            if let TreeNode::Relay(kids) = n {
+                assert!(kids.len() <= b, "fan-in {} > {b}", kids.len());
+                for k in kids {
+                    check(k, b);
+                }
+            }
+        }
+        for n in &p {
+            check(n, 4);
+        }
+        // 64 @ 4 needs two relay tiers
+        let relays: usize = p.iter().map(|n| n.relays()).sum();
+        assert!(relays > 4, "expected nested tiers, got {relays} relays");
+    }
+
+    #[test]
+    fn small_trees_degenerate_gracefully() {
+        let t = Topology::Tree { branching: 8 };
+        // fewer clients than the branching factor: direct connections
+        let p = plan(&t, 3, 1);
+        assert_eq!(p.len(), 3);
+        assert!(p.iter().all(|n| matches!(n, TreeNode::Client(_))));
+        // 5 clients at branching 4 → two relays (3 + 2)
+        let p = plan(&Topology::Tree { branching: 4 }, 5, 1);
+        assert_eq!(p.len(), 2);
+        let sizes: Vec<usize> = p.iter().map(|n| n.leaves()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 5);
+    }
+}

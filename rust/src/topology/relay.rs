@@ -1,0 +1,589 @@
+//! The mid-tier relay node.
+//!
+//! A relay faces both ways:
+//!
+//! * **Downstream** it is a server: it accepts N child registrations
+//!   (ordinary executors or deeper relays — same protocol), forwards
+//!   each task's control message and weight stream **verbatim**
+//!   (store-and-forward, no decode/re-encode, so leaves see
+//!   byte-identical task data in any topology), then gathers each
+//!   child's result through the job's per-session inbound filter chain,
+//!   folding every dequantized entry straight into a local exact
+//!   [`EntryFold`] — gather memory stays O(accumulator + entry × children).
+//! * **Upstream** it is a client: it registers with
+//!   `subtree = leaf count`, and answers each task with a single
+//!   weight-tagged **PartialAggregate** — the raw Q64.64 fixed-point
+//!   sums of its subtree ([`EntryFold::finalize_partial`]) — so the
+//!   parent folds one stream per relay and the final model stays
+//!   bit-identical to the flat run.
+//!
+//! The round policy cascades per subtree: the relay applies client
+//! sampling over its own children (seeded by job seed + relay name), a
+//! configured round deadline caps its train-wait, and under
+//! `allow_partial` a failed child is excluded cleanly — or, when its
+//! stream already tainted the fold, the *subtree* round restarts without
+//! it, mirroring the root engine's semantics. Integrity digests are
+//! re-computed at the tier boundary: children's digests are verified by
+//! the inbound chain, and a fresh digest over the partial aggregate
+//! travels in the upstream result headers.
+
+use super::skeleton_of;
+use crate::config::JobConfig;
+use crate::coordinator::aggregator::{EntryFold, FoldOutcome};
+use crate::coordinator::protocol::CtrlMsg;
+use crate::coordinator::resume_policy;
+use crate::filter::{
+    integrity, EntryChain, FilterContext, FilterFactory, FilterPoint, FilterSet,
+};
+use crate::sfm::SfmEndpoint;
+use crate::streaming::{self, WeightsMsg};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// One child session from the relay's perspective.
+struct Child {
+    ep: SfmEndpoint,
+    name: String,
+    subtree: usize,
+    filters: FilterSet,
+    /// Reused inbound chain (dequantize scratch amortizes across rounds).
+    chain: Option<EntryChain>,
+    /// Failed once: excluded from later rounds instead of burning a
+    /// transfer timeout per round on a broken link.
+    dead: bool,
+}
+
+/// Per-round relay metrics (the `relay_fold_secs` / `relay_fanin`
+/// series).
+#[derive(Debug, Clone)]
+pub struct RelayRound {
+    pub round: usize,
+    /// Scatter-forward end → partial extracted (the subtree gather).
+    pub fold_secs: f64,
+    /// Children tasked this round (after subtree sampling).
+    pub fanin: usize,
+    /// Children whose streams committed into the partial.
+    pub completed: usize,
+    /// Children excluded after an error/disconnect.
+    pub failed: usize,
+}
+
+/// What a relay reports when its job ends.
+#[derive(Debug, Clone)]
+pub struct RelayStats {
+    pub name: String,
+    /// Direct children (clients or deeper relays).
+    pub fanin: usize,
+    /// Leaf clients in the whole subtree.
+    pub leaf_clients: usize,
+    pub rounds: Vec<RelayRound>,
+}
+
+/// Outcome of one child's round inside the relay.
+enum ChildOutcome {
+    Done {
+        losses: Vec<f32>,
+        contributions: usize,
+    },
+    /// Excluded or poisoned mid-round; the stream was drained.
+    Dropped,
+}
+
+/// Unblocks the shared fold the moment a child session dies (error or
+/// panic), *before* its thread is joined: siblings waiting on the dead
+/// position's fold frontier (`fold_entry`'s condvar) would otherwise
+/// never complete, and the reconcile/restart code after the scope join
+/// would be unreachable — a permanent subtree deadlock. Clean exclusion
+/// if the dead stream folded nothing; poison (→ restart without it)
+/// if it already tainted the partial.
+struct FoldAbortGuard<'a> {
+    fold: &'a EntryFold,
+    pos: usize,
+    armed: bool,
+}
+
+impl Drop for FoldAbortGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed && !matches!(self.fold.exclude(self.pos), Ok(true)) {
+            self.fold
+                .poison("subtree round tainted by a failed child session");
+        }
+    }
+}
+
+pub struct RelayNode {
+    name: String,
+    job: JobConfig,
+    up: SfmEndpoint,
+    pending: Vec<SfmEndpoint>,
+    make_filters: FilterFactory,
+    spool: PathBuf,
+}
+
+impl RelayNode {
+    /// `up` is the endpoint toward the parent (root or a higher relay);
+    /// `children` the endpoints its subtree will register on.
+    pub fn new(
+        name: impl Into<String>,
+        job: JobConfig,
+        up: SfmEndpoint,
+        children: Vec<SfmEndpoint>,
+        make_filters: FilterFactory,
+        spool: PathBuf,
+    ) -> RelayNode {
+        RelayNode {
+            name: name.into(),
+            job,
+            up,
+            pending: children,
+            make_filters,
+            spool,
+        }
+    }
+
+    /// Drive the relay to job completion. Accepts the subtree's
+    /// registrations, registers upstream, then serves rounds until the
+    /// parent says Done. On an unrecoverable error the subtree is shut
+    /// down (best effort) before the error propagates — the parent sees
+    /// a failed contributor and applies its own partial-round policy.
+    pub fn run(mut self) -> Result<RelayStats> {
+        let timeout = self.job.transfer_timeout();
+        // Children first: their Welcome needs the job config, which the
+        // relay already carries, and registering upstream with the true
+        // leaf count needs the children's subtree sizes.
+        let mut children: Vec<Child> = Vec::new();
+        for ep in std::mem::take(&mut self.pending) {
+            let msg = CtrlMsg::from_json(&ep.recv_ctrl(Some(timeout))?)?;
+            let (name, subtree) = match msg {
+                CtrlMsg::Register { client, subtree } => (client, subtree),
+                other => bail!("relay {}: expected register, got {other:?}", self.name),
+            };
+            ep.send_ctrl(
+                &CtrlMsg::Welcome {
+                    job: self.job.to_json(),
+                }
+                .to_json(),
+            )?;
+            // Tier-boundary integrity: verify inbound digests when a
+            // lower tier stamped them (a noop for plain clients that
+            // did not).
+            let mut filters = (self.make_filters)();
+            filters.add(
+                FilterPoint::TaskResultInServer,
+                Box::new(integrity::VerifyIntegrityFilter),
+            );
+            log::info!("relay {}: child '{name}' registered ({subtree} leaf/leaves)", self.name);
+            children.push(Child {
+                ep,
+                name,
+                subtree,
+                filters,
+                chain: None,
+                dead: false,
+            });
+        }
+        if children.is_empty() {
+            bail!("relay {}: no children", self.name);
+        }
+        let leaves: usize = children.iter().map(|c| c.subtree).sum();
+        // A single-leaf relay would register subtree = 1 and its partial
+        // would be indistinguishable from a leaf faking one (the parent
+        // gates Fx128 on subtree > 1) — connect that client directly.
+        if leaves < 2 {
+            bail!(
+                "relay {}: needs at least 2 leaf clients (got {leaves}); \
+                 connect a single client directly to the parent",
+                self.name
+            );
+        }
+        self.up.send_ctrl(
+            &CtrlMsg::Register {
+                client: self.name.clone(),
+                subtree: leaves,
+            }
+            .to_json(),
+        )?;
+        match CtrlMsg::from_json(&self.up.recv_ctrl(Some(timeout))?)? {
+            CtrlMsg::Welcome { .. } => {}
+            other => bail!("relay {}: expected welcome, got {other:?}", self.name),
+        }
+
+        let mut stats = RelayStats {
+            name: self.name.clone(),
+            fanin: children.len(),
+            leaf_clients: leaves,
+            rounds: Vec::new(),
+        };
+        loop {
+            // Idle wait between rounds is unbounded on purpose (round
+            // pacing is the parent's business); our own transfers below
+            // are bounded by the job timeout.
+            let ctrl = CtrlMsg::from_json(&self.up.recv_ctrl(None)?)?;
+            match ctrl {
+                CtrlMsg::Done => {
+                    for c in &children {
+                        let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
+                    }
+                    return Ok(stats);
+                }
+                CtrlMsg::NoTask { round } => {
+                    // Whole subtree idles this round.
+                    for c in children.iter().filter(|c| !c.dead) {
+                        let _ = c.ep.send_ctrl(&CtrlMsg::NoTask { round }.to_json());
+                    }
+                }
+                CtrlMsg::Task {
+                    round,
+                    local_steps,
+                    headers,
+                } => match self.run_round(&mut children, round, local_steps, &headers) {
+                    Ok(r) => stats.rounds.push(r),
+                    Err(e) => {
+                        for c in &children {
+                            let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
+                        }
+                        return Err(e.context(format!("relay {}: round {round}", self.name)));
+                    }
+                },
+                other => bail!("relay {}: unexpected ctrl {other:?}", self.name),
+            }
+        }
+    }
+
+    /// One task: forward the scatter verbatim, gather + pre-fold the
+    /// subtree, ship the partial aggregate upstream.
+    fn run_round(
+        &self,
+        children: &mut [Child],
+        round: usize,
+        local_steps: usize,
+        headers: &BTreeMap<String, Json>,
+    ) -> Result<RelayRound> {
+        let job = &self.job;
+        let timeout = job.transfer_timeout();
+        let policy = &job.round_policy;
+
+        // -- scatter in (opaque: quantized bytes stay quantized) ---------
+        let (msg, _stats) = if job.reliable {
+            streaming::recv_weights_resumable(&self.up, Some(&self.spool), Some(timeout))
+                .context("receive task data from parent")?
+        } else {
+            streaming::recv_weights(&self.up, Some(&self.spool))
+                .context("receive task data from parent")?
+        };
+        let t_fold = Instant::now();
+
+        // -- subtree sampling (policy cascade) ---------------------------
+        let n = children.len();
+        let relay_seed = {
+            let mut base = SplitMix64::new(job.seed);
+            let mut fork = base.fork(&self.name);
+            fork.next_u64()
+        };
+        let selected = policy.select(n, relay_seed, round);
+        let k = selected.len();
+        let quorum = policy.quorum(k);
+        let mut pos_of = vec![usize::MAX; n];
+        for (p, &i) in selected.iter().enumerate() {
+            pos_of[i] = p;
+        }
+        for (i, c) in children.iter().enumerate() {
+            if pos_of[i] == usize::MAX && !c.dead {
+                let _ = c.ep.send_ctrl(&CtrlMsg::NoTask { round }.to_json());
+            }
+        }
+
+        let skeleton = skeleton_of(&msg);
+        let mut attempt = 0usize;
+        let (losses, completed, failed, total_weight, contribs_total) = loop {
+            attempt += 1;
+            if attempt > k + 1 {
+                bail!("restart budget exhausted after {} attempts", attempt - 1);
+            }
+            let fold = EntryFold::new(skeleton.clone(), k);
+            for (i, c) in children.iter().enumerate() {
+                if pos_of[i] != usize::MAX && c.dead {
+                    let _ = fold.exclude(pos_of[i]);
+                }
+            }
+
+            // One scoped worker per tasked child: forward + gather + fold
+            // concurrently (subtree wall-clock tracks its slowest child).
+            let mut outcomes: Vec<Option<Result<ChildOutcome>>> =
+                (0..k).map(|_| None).collect();
+            {
+                let fold_ref = &fold;
+                let msg_ref = &msg;
+                let spool = self.spool.as_path();
+                let outcome_slots = &mut outcomes;
+                std::thread::scope(|s| {
+                    let mut handles = Vec::new();
+                    for (i, child) in children.iter_mut().enumerate() {
+                        let pos = pos_of[i];
+                        if pos == usize::MAX || child.dead {
+                            continue;
+                        }
+                        handles.push((
+                            pos,
+                            s.spawn(move || {
+                                let mut guard = FoldAbortGuard {
+                                    fold: fold_ref,
+                                    pos,
+                                    armed: true,
+                                };
+                                let r = child_round(
+                                    child, pos, round, local_steps, headers, msg_ref,
+                                    fold_ref, job, spool,
+                                );
+                                if r.is_ok() {
+                                    guard.armed = false;
+                                }
+                                r
+                            }),
+                        ));
+                    }
+                    for (pos, h) in handles {
+                        outcome_slots[pos] = Some(
+                            h.join()
+                                .unwrap_or_else(|_| Err(anyhow!("child session panicked"))),
+                        );
+                    }
+                });
+            }
+
+            // -- reconcile the attempt ----------------------------------
+            let mut losses_per_pos: Vec<Vec<f32>> = vec![Vec::new(); k];
+            let mut completed = 0usize;
+            let mut failed = 0usize;
+            let mut contribs_total = 0usize;
+            let mut restart = false;
+            for (pos, &ci) in selected.iter().enumerate() {
+                match outcomes[pos].take() {
+                    None => {
+                        // Pre-excluded: this child died in an earlier
+                        // round (or attempt) and was never dispatched.
+                        failed += 1;
+                    }
+                    Some(Ok(ChildOutcome::Done {
+                        losses,
+                        contributions,
+                    })) => {
+                        completed += 1;
+                        contribs_total += contributions;
+                        losses_per_pos[pos] = losses;
+                    }
+                    Some(Ok(ChildOutcome::Dropped)) => {}
+                    Some(Err(e)) => {
+                        children[ci].dead = true;
+                        if !policy.allow_partial {
+                            fold.poison("subtree round aborted: child failed");
+                            return Err(e.context(format!(
+                                "child '{}' failed",
+                                children[ci].name
+                            )));
+                        }
+                        match fold.exclude(pos) {
+                            Ok(true) => {
+                                log::warn!(
+                                    "relay {}: excluding failed child '{}': {e:#}",
+                                    self.name,
+                                    children[ci].name
+                                );
+                                failed += 1;
+                            }
+                            // Partially folded: the shared partial is
+                            // tainted — restart the subtree round
+                            // without this child.
+                            Ok(false) | Err(_) => {
+                                log::warn!(
+                                    "relay {}: child '{}' failed after a partial fold — \
+                                     restarting the subtree round without it: {e:#}",
+                                    self.name,
+                                    children[ci].name
+                                );
+                                restart = true;
+                            }
+                        }
+                    }
+                }
+            }
+            if restart {
+                fold.poison("restarting subtree round after mid-fold failure");
+                continue;
+            }
+            if completed < quorum {
+                bail!("{completed}/{k} children contributed, below subtree quorum {quorum}");
+            }
+            let (partial, total_weight, folded) = fold.finalize_partial()?;
+            debug_assert_eq!(folded, completed);
+            let losses: Vec<f32> = losses_per_pos.into_iter().flatten().collect();
+            // keep the partial alive past the loop via the tuple below
+            break (
+                (losses, partial),
+                completed,
+                failed,
+                total_weight,
+                contribs_total,
+            );
+        };
+        let (losses, partial) = losses;
+        let fold_secs = t_fold.elapsed().as_secs_f64();
+
+        // -- partial aggregate out (fresh tier-boundary digest) ----------
+        let pmsg = WeightsMsg::Plain(partial);
+        let mut up_headers = BTreeMap::new();
+        up_headers.insert(
+            "integrity_crc32".to_string(),
+            Json::num(integrity::digest(&pmsg)? as f64),
+        );
+        self.up.send_ctrl(
+            &CtrlMsg::Result {
+                round,
+                client: self.name.clone(),
+                n_samples: total_weight,
+                losses,
+                contributions: contribs_total,
+                headers: up_headers,
+            }
+            .to_json(),
+        )?;
+        if job.reliable {
+            streaming::send_weights_resumable(
+                &self.up,
+                &pmsg,
+                job.streaming,
+                Some(&self.spool),
+                &resume_policy(timeout),
+            )
+            .context("send partial aggregate to parent")?;
+        } else {
+            streaming::send_weights(&self.up, &pmsg, job.streaming, Some(&self.spool))
+                .context("send partial aggregate to parent")?;
+            let _ = self.up.recv_event(Some(timeout))?; // transfer ack
+        }
+        Ok(RelayRound {
+            round,
+            fold_secs,
+            fanin: k,
+            completed,
+            failed,
+        })
+    }
+}
+
+/// One child's round inside the relay: forward the task, await the
+/// result, run the inbound chain per entry and fold into the shared
+/// subtree accumulator.
+#[allow(clippy::too_many_arguments)]
+fn child_round(
+    child: &mut Child,
+    pos: usize,
+    round: usize,
+    local_steps: usize,
+    headers: &BTreeMap<String, Json>,
+    msg: &WeightsMsg,
+    fold: &EntryFold,
+    job: &JobConfig,
+    spool: &Path,
+) -> Result<ChildOutcome> {
+    let timeout = job.transfer_timeout();
+    let mode = job.streaming;
+    let reliable = job.reliable;
+    let name = child.name.clone();
+
+    // -- forward scatter verbatim ---------------------------------------
+    child.ep.send_ctrl(
+        &CtrlMsg::Task {
+            round,
+            local_steps,
+            headers: headers.clone(),
+        }
+        .to_json(),
+    )?;
+    if reliable {
+        streaming::send_weights_resumable(
+            &child.ep,
+            msg,
+            mode,
+            Some(spool),
+            &resume_policy(timeout),
+        )
+        .with_context(|| format!("forward task data to {name}"))?;
+    } else {
+        streaming::send_weights(&child.ep, msg, mode, Some(spool))
+            .with_context(|| format!("forward task data to {name}"))?;
+        let _ = child.ep.recv_event(Some(timeout))?; // transfer ack
+    }
+
+    // -- await the result (deadline cascade caps the train wait; a
+    // deeper relay child gets the same subtree headroom the root
+    // engine grants — see [`crate::coordinator::SUBTREE_WAIT_FACTOR`])
+    let base = if child.subtree > 1 {
+        timeout.saturating_mul(crate::coordinator::SUBTREE_WAIT_FACTOR)
+    } else {
+        timeout
+    };
+    let wait = if job.round_policy.round_deadline_secs > 0 {
+        base.min(Duration::from_secs(job.round_policy.round_deadline_secs))
+    } else {
+        base
+    };
+    let ctrl = CtrlMsg::from_json(&child.ep.recv_ctrl(Some(wait))?)?;
+    let (r_round, n_samples, losses, contributions, rheaders) = match ctrl {
+        CtrlMsg::Result {
+            round: r,
+            n_samples,
+            losses,
+            contributions,
+            headers,
+            ..
+        } => (r, n_samples, losses, contributions, headers),
+        other => bail!("expected result from {name}, got {other:?}"),
+    };
+    if r_round != round {
+        bail!("child {name} answered round {r_round}, expected {round}");
+    }
+
+    // -- entry-streamed fold into the shared subtree partial ------------
+    fold.start_stream(pos, n_samples)?;
+    if child.chain.is_none() {
+        child.chain = child.filters.entry_chain(FilterPoint::TaskResultInServer);
+    }
+    let chain = child
+        .chain
+        .as_mut()
+        .ok_or_else(|| anyhow!("inbound chain is not entry-capable"))?;
+    let mut rctx = FilterContext {
+        round,
+        peer: name.clone(),
+        point_headers: rheaders,
+    };
+    let mut dropped = false;
+    {
+        let mut sink = crate::coordinator::fold_sink(fold, pos, child.subtree, &mut dropped);
+        streaming::recv_weights_filtered(
+            &child.ep,
+            chain,
+            &mut rctx,
+            Some(spool),
+            reliable,
+            Some(timeout),
+            &mut sink,
+        )
+        .with_context(|| format!("receive result from {name}"))?;
+    }
+    if dropped {
+        return Ok(ChildOutcome::Dropped);
+    }
+    match fold.finish_stream(pos)? {
+        FoldOutcome::Dropped => Ok(ChildOutcome::Dropped),
+        FoldOutcome::Folded => Ok(ChildOutcome::Done {
+            losses,
+            contributions,
+        }),
+    }
+}

@@ -1,0 +1,333 @@
+//! Multi-tier in-process simulation: the tree analogue of
+//! [`crate::coordinator::simulator::run_simulation`].
+//!
+//! The seeded placement plan ([`super::plan`]) is realized recursively:
+//! each relay node gets one in-memory (or fault-injected) uplink pair
+//! and the parent-side endpoints of its children; leaf clients run the
+//! ordinary [`Executor`] — they cannot tell a relay from the root. The
+//! root runs the unmodified [`Controller`], which sees R weighted
+//! contributors instead of C clients. Relay statistics fan back into the
+//! report as per-tier series (`relay_fanin/<name>`,
+//! `relay_fold_secs/<name>`) plus `root_peak_comm_bytes`.
+
+use super::{plan, RelayNode, RelayStats, TreeNode};
+use crate::config::{FaultProfile, JobConfig, NetProfile};
+use crate::coordinator::controller::Controller;
+use crate::coordinator::executor::Executor;
+use crate::coordinator::simulator::{SimResult, TrainerFactory};
+use crate::coordinator::LocalTrainer;
+use crate::filter::{integrity, FilterFactory, FilterPoint, FilterSet};
+use crate::metrics::Report;
+use crate::sfm::{inmem, netsim, SfmEndpoint};
+use crate::tensor::ParamContainer;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Knobs the public simulation entrypoint does not expose — the
+/// deterministic failure harness for relay tiers.
+#[derive(Default)]
+pub struct TreeSimOptions {
+    /// Fault profiles injected on the link between the root and its
+    /// top-level child at the given plan index: `(to_child, to_root)`.
+    /// The relay-kill scenarios drive this.
+    pub uplink_faults: BTreeMap<usize, (FaultProfile, FaultProfile)>,
+    /// Fault profiles injected on a specific leaf client's access link,
+    /// keyed by client index: `(to_client, to_relay)`. Overrides the
+    /// job-level fault schedule for that client — the
+    /// child-under-a-relay failure scenarios drive this.
+    pub leaf_faults: BTreeMap<usize, (FaultProfile, FaultProfile)>,
+}
+
+/// Outcome of a tree-simulated federated run.
+pub struct TreeSimResult {
+    pub global: ParamContainer,
+    pub report: Report,
+    /// Per-relay statistics, in registration order.
+    pub relays: Vec<RelayStats>,
+}
+
+impl TreeSimResult {
+    pub fn into_sim_result(self) -> SimResult {
+        SimResult {
+            global: self.global,
+            report: self.report,
+        }
+    }
+}
+
+struct Spawned<T: LocalTrainer + 'static> {
+    job: JobConfig,
+    make_trainer: TrainerFactory<T>,
+    make_filters: FilterFactory,
+    spool: PathBuf,
+    leaf_faults: BTreeMap<usize, (FaultProfile, FaultProfile)>,
+    client_handles: Vec<(usize, JoinHandle<Result<usize>>)>,
+    relay_handles: Vec<JoinHandle<Result<RelayStats>>>,
+    relay_names: Vec<String>,
+}
+
+impl<T: LocalTrainer + 'static> Spawned<T> {
+    /// Build one plan node's process(es); returns the parent-side
+    /// endpoint its parent folds from.
+    fn spawn_node(
+        &mut self,
+        node: &TreeNode,
+        path: &str,
+        uplink_fault: Option<(FaultProfile, FaultProfile)>,
+    ) -> Result<SfmEndpoint> {
+        match node {
+            TreeNode::Client(i) => self.spawn_client(*i, uplink_fault),
+            TreeNode::Relay(children) => {
+                let mut child_eps = Vec::with_capacity(children.len());
+                for (j, child) in children.iter().enumerate() {
+                    let child_path = format!("{path}.{j}");
+                    child_eps.push(self.spawn_node(child, &child_path, None)?);
+                }
+                let name = format!("relay-{path}");
+                self.relay_names.push(name.clone());
+                let up = self.link(uplink_fault, NetProfile::UNLIMITED)?;
+                let relay = RelayNode::new(
+                    name.clone(),
+                    self.job.clone(),
+                    up.1,
+                    child_eps,
+                    self.make_filters.clone(),
+                    self.spool.clone(),
+                );
+                let h = std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || relay.run())?;
+                self.relay_handles.push(h);
+                Ok(up.0)
+            }
+        }
+    }
+
+    fn spawn_client(
+        &mut self,
+        i: usize,
+        uplink_fault: Option<(FaultProfile, FaultProfile)>,
+    ) -> Result<SfmEndpoint> {
+        // Leaf links carry the job's net shaping and (reseeded) fault
+        // schedule exactly like the flat simulator, so flat-vs-tree
+        // comparisons exercise identical access links. An explicit
+        // per-leaf override (failure harness) wins over both.
+        let fault = self
+            .leaf_faults
+            .get(&i)
+            .copied()
+            .or(uplink_fault)
+            .or_else(|| {
+                (!self.job.fault.is_none()).then(|| {
+                    (
+                        self.job.fault.reseeded(2 * i as u64),
+                        self.job.fault.reseeded(2 * i as u64 + 1),
+                    )
+                })
+            });
+        let (server_ep, client_ep) = {
+            let mut pair = inmem::pair(4096);
+            if self.job.net != NetProfile::UNLIMITED {
+                pair = netsim::shape_pair(pair, self.job.net);
+            }
+            if let Some((to_client, to_server)) = fault {
+                let (faulted, _sa, _sb) = netsim::fault_pair(pair, to_client, to_server);
+                pair = faulted;
+            }
+            (
+                SfmEndpoint::new(pair.a).with_chunk(self.job.chunk_bytes as usize),
+                SfmEndpoint::new(pair.b).with_chunk(self.job.chunk_bytes as usize),
+            )
+        };
+        let make_trainer = self.make_trainer.clone();
+        let filters = (*self.make_filters)();
+        let job = self.job.clone();
+        let spool = self.spool.clone();
+        let h = std::thread::Builder::new()
+            .name(format!("client-{i}"))
+            .spawn(move || -> Result<usize> {
+                let mut exec = Executor::new(
+                    format!("site-{}", i + 1),
+                    client_ep,
+                    filters,
+                    make_trainer(i),
+                    spool,
+                )
+                .with_mode(job.streaming)
+                .with_reliable(job.reliable)
+                .with_entry_fold(job.entry_fold)
+                .with_timeout(job.transfer_timeout());
+                exec.register()?;
+                exec.run()
+            })?;
+        self.client_handles.push((i, h));
+        Ok(server_ep)
+    }
+
+    /// A (possibly fault-injected) link; returns (parent side, child side).
+    fn link(
+        &self,
+        fault: Option<(FaultProfile, FaultProfile)>,
+        net: NetProfile,
+    ) -> Result<(SfmEndpoint, SfmEndpoint)> {
+        let mut pair = inmem::pair(4096);
+        if net != NetProfile::UNLIMITED {
+            pair = netsim::shape_pair(pair, net);
+        }
+        if let Some((to_child, to_parent)) = fault {
+            let (faulted, _sa, _sb) = netsim::fault_pair(pair, to_child, to_parent);
+            pair = faulted;
+        }
+        Ok((
+            SfmEndpoint::new(pair.a).with_chunk(self.job.chunk_bytes as usize),
+            SfmEndpoint::new(pair.b).with_chunk(self.job.chunk_bytes as usize),
+        ))
+    }
+}
+
+/// Run a complete federated job over the job's tree topology, in
+/// process. Same contract as
+/// [`crate::coordinator::simulator::run_simulation`], which delegates
+/// here when `job.topology` is a tree.
+pub fn run_tree_simulation<T: LocalTrainer + 'static>(
+    job: &JobConfig,
+    initial: ParamContainer,
+    make_trainer: TrainerFactory<T>,
+    make_filters: impl Fn() -> FilterSet + Send + Sync + 'static,
+) -> Result<TreeSimResult> {
+    run_tree_simulation_with(
+        job,
+        initial,
+        make_trainer,
+        Arc::new(make_filters),
+        TreeSimOptions::default(),
+    )
+}
+
+/// [`run_tree_simulation`] with the failure-injection harness exposed.
+pub fn run_tree_simulation_with<T: LocalTrainer + 'static>(
+    job: &JobConfig,
+    initial: ParamContainer,
+    make_trainer: TrainerFactory<T>,
+    make_filters: FilterFactory,
+    opts: TreeSimOptions,
+) -> Result<TreeSimResult> {
+    job.validate()?;
+    if !job.topology.is_tree() {
+        bail!("run_tree_simulation needs a tree topology (got flat)");
+    }
+    let spool = std::env::temp_dir().join(format!("flare_tree_spool_{}", std::process::id()));
+    std::fs::create_dir_all(&spool)?;
+    crate::quant::set_encode_threads(job.encode_threads);
+
+    let nodes = plan(&job.topology, job.clients, job.seed);
+    let mut spawned = Spawned {
+        job: job.clone(),
+        make_trainer,
+        make_filters: make_filters.clone(),
+        spool: spool.clone(),
+        leaf_faults: opts.leaf_faults.clone(),
+        client_handles: Vec::new(),
+        relay_handles: Vec::new(),
+        relay_names: Vec::new(),
+    };
+
+    // The root verifies the fresh tier-boundary digests every relay
+    // stamps on its partial aggregates (a noop for direct clients).
+    let user_filters = make_filters.clone();
+    let root_factory: FilterFactory = Arc::new(move || {
+        let mut set = (*user_filters)();
+        set.add(
+            FilterPoint::TaskResultInServer,
+            Box::new(integrity::VerifyIntegrityFilter),
+        );
+        set
+    });
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+        .with_filter_factory(root_factory);
+
+    let mut root_eps = Vec::with_capacity(nodes.len());
+    for (i, node) in nodes.iter().enumerate() {
+        let fault = opts.uplink_faults.get(&i).copied();
+        root_eps.push(spawned.spawn_node(node, &i.to_string(), fault)?);
+    }
+    let root_fanin = root_eps.len();
+    for ep in root_eps {
+        controller.accept_client(ep, Some(std::time::Duration::from_secs(60)))?;
+    }
+
+    let mut report = Report::new();
+    report.set_label("job", job.name.clone());
+    report.set_label("model", job.model.clone());
+    report.set_label("quant", job.quant.name());
+    report.set_label("streaming", job.streaming.name());
+    report.set_label("topology", job.topology.name());
+    let run_outcome = controller.run(initial, &mut report);
+
+    // Collect the tiers before judging the run: even on an aborted job
+    // the sub-processes must be reaped.
+    let mut relays = Vec::new();
+    let mut relay_failures = Vec::new();
+    for (h, name) in spawned
+        .relay_handles
+        .into_iter()
+        .zip(spawned.relay_names.iter())
+    {
+        match h.join().expect("relay thread panicked") {
+            Ok(stats) => relays.push(stats),
+            Err(e) => relay_failures.push((name.clone(), e)),
+        }
+    }
+    let mut client_failures = Vec::new();
+    for (i, h) in spawned.client_handles {
+        if let Err(e) = h.join().expect("client thread panicked") {
+            client_failures.push((i, e));
+        }
+    }
+    let global = run_outcome?;
+    if !job.round_policy.allow_partial {
+        if let Some((name, e)) = relay_failures.into_iter().next() {
+            bail!("relay {name} failed: {e:#}");
+        }
+        if let Some((i, e)) = client_failures.into_iter().next() {
+            bail!("client {i} failed: {e:#}");
+        }
+    } else {
+        for (name, e) in &relay_failures {
+            log::warn!("relay {name} failed mid-job (tolerated by allow_partial): {e:#}");
+        }
+        for (i, e) in &client_failures {
+            log::warn!("client {i} failed mid-job (tolerated by allow_partial): {e:#}");
+        }
+    }
+
+    // Per-tier series + root-scope scalars.
+    for rs in &relays {
+        for rr in &rs.rounds {
+            report
+                .series_mut(&format!("relay_fanin/{}", rs.name))
+                .push(rr.round as f64, rr.fanin as f64);
+            report
+                .series_mut(&format!("relay_fold_secs/{}", rs.name))
+                .push(rr.round as f64, rr.fold_secs);
+        }
+    }
+    report.set_scalar("relay_count", relays.len() as f64);
+    report.set_scalar("root_fanin", root_fanin as f64);
+    // In this single-address-space simulation COMM_GAUGE is shared by
+    // every tier, so this scalar is an UPPER BOUND on the root's own
+    // gather peak (root + relays + clients together). Over real
+    // transports each process's controller reports its own true value.
+    report.set_scalar(
+        "root_peak_comm_bytes",
+        report.scalars.get("peak_comm_bytes").copied().unwrap_or(0.0),
+    );
+    Ok(TreeSimResult {
+        global,
+        report,
+        relays,
+    })
+}

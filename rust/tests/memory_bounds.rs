@@ -225,6 +225,10 @@ fn frame_pool_reaches_steady_state() {
     // lazy codec tables).
     let _ = run_gather_rounds(clients, true, false, 1);
 
+    // Counters from whatever ran earlier in this process (other tests
+    // share the global pool) must not bleed into this measurement —
+    // reset, then snapshot-diff for belt and braces.
+    flare::memory::pool::reset_stats();
     let before = flare::memory::pool::global().snapshot();
     let run = run_gather_rounds(clients, true, false, 3);
     let traffic = flare::memory::pool::global().snapshot().since(&before);

@@ -1,0 +1,517 @@
+//! Hierarchical relay-aggregation tier: acceptance scenarios.
+//!
+//! * A seeded 2-tier run (8 clients, branching 4, nf4 quantization,
+//!   `RoundPolicy::default()`) produces a final model **bit-identical**
+//!   to the flat single-server run — the exact Q64.64 weighted-fold
+//!   invariant plus verbatim scatter forwarding make this a guarantee,
+//!   not a tolerance.
+//! * The root folds R relay streams instead of C client streams, with
+//!   comm-buffer peaks far below the whole-container flat baseline.
+//! * A relay killed mid-round under `allow_partial` yields the
+//!   survivors-only FedAvg result.
+//! * The same relay runs unchanged over real TCP endpoints.
+//!
+//! Tests share the process-global COMM_GAUGE and buffer pool, so they
+//! serialize on a file-local mutex like `memory_bounds.rs`.
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{
+    FaultProfile, JobConfig, QuantScheme, RoundPolicy, StreamingMode, Topology, TrainConfig,
+};
+use flare::coordinator::aggregator::FedAvg;
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::simulator::run_simulation;
+use flare::coordinator::{LocalTrainer, MockTrainer};
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::tcp::{loopback_listener, TcpDriver};
+use flare::sfm::SfmEndpoint;
+use flare::tensor::init::materialize;
+use flare::tensor::ParamContainer;
+use flare::topology::sim::{run_tree_simulation_with, TreeSimOptions};
+use flare::topology::plan;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// ~135K-parameter model (~540 KB fp32): transfers dominate, runs stay
+/// fast.
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::llama(
+        "tiny",
+        LlamaDims {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            untied_head: true,
+        },
+    )
+}
+
+/// Heterogeneous FedAvg weights so the weighted fold is actually
+/// exercised.
+const SAMPLES: [u64; 8] = [100, 50, 75, 10, 33, 66, 99, 1];
+
+fn trainer_factory(
+    spec: ModelSpec,
+) -> flare::coordinator::simulator::TrainerFactory<MockTrainer> {
+    Arc::new(move |i| {
+        MockTrainer::new(
+            materialize(&spec, 100 + i as u64),
+            0.3,
+            SAMPLES[i % SAMPLES.len()],
+        )
+    })
+}
+
+fn base_job(clients: usize, quant: QuantScheme, topology: Topology) -> JobConfig {
+    JobConfig {
+        name: "topology".into(),
+        clients,
+        rounds: 2,
+        quant,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 64 * 1024,
+        topology,
+        train: TrainConfig {
+            local_steps: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn run(job: &JobConfig) -> flare::coordinator::simulator::SimResult {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 1);
+    let quant = job.quant;
+    run_simulation(
+        job,
+        initial,
+        trainer_factory(spec),
+        move || FilterSet::two_way_quantization(quant),
+    )
+    .unwrap_or_else(|e| panic!("simulation failed: {e:#}"))
+}
+
+/// FedAvg over the given clients' mock updates, computed directly — the
+/// reference every topology's aggregate must match bit-for-bit.
+fn expected_fedavg(clients: &[usize], local_steps: usize, rounds: usize) -> ParamContainer {
+    let spec = tiny_spec();
+    let mut global = materialize(&spec, 1);
+    for round in 0..rounds {
+        let mut agg = FedAvg::new();
+        for &i in clients {
+            let mut t = MockTrainer::new(
+                materialize(&spec, 100 + i as u64),
+                0.3,
+                SAMPLES[i % SAMPLES.len()],
+            );
+            let (w, _losses) = t.train(&global, local_steps, round).unwrap();
+            agg.add(&w, SAMPLES[i % SAMPLES.len()]).unwrap();
+        }
+        global = agg.finalize().unwrap();
+    }
+    global
+}
+
+/// Acceptance: the seeded 2-tier run (8 clients, branching 4, nf4,
+/// default policy) is bit-identical to the flat single-server run. The
+/// exact integer fold makes this hold for every grouping; nf4 on the
+/// leaf legs stays bit-compatible because relays forward the scatter
+/// verbatim and partial aggregates travel losslessly.
+#[test]
+fn tree_run_bit_identical_to_flat_under_nf4() {
+    let _guard = SERIAL.lock().unwrap();
+    let flat = run(&base_job(8, QuantScheme::Nf4, Topology::Flat));
+    let tree = run(&base_job(8, QuantScheme::Nf4, Topology::Tree { branching: 4 }));
+
+    assert_eq!(tree.global.names(), flat.global.names());
+    assert_eq!(
+        tree.global.max_abs_diff(&flat.global),
+        0.0,
+        "tree aggregate must be bit-identical to the flat run"
+    );
+
+    // Structure: 8 clients at branching 4 = two 4-client relays.
+    assert_eq!(tree.report.scalars["relay_count"], 2.0);
+    assert_eq!(tree.report.scalars["root_fanin"], 2.0);
+    // Every leaf client's update reached the aggregate, every round.
+    let leaves = &tree.report.series["leaf_clients_completed"];
+    assert_eq!(leaves.points.len(), 2);
+    assert!(leaves.points.iter().all(|&(_, y)| y == 8.0), "{leaves:?}");
+    // Per-tier series exist with one point per round.
+    for relay in ["relay-0", "relay-1"] {
+        let fanin = &tree.report.series[&format!("relay_fanin/{relay}")];
+        assert_eq!(fanin.points.len(), 2, "{relay}");
+        assert!(fanin.points.iter().all(|&(_, y)| y == 4.0), "{relay}");
+        let folds = &tree.report.series[&format!("relay_fold_secs/{relay}")];
+        assert_eq!(folds.points.len(), 2, "{relay}");
+    }
+    // The flat run must agree with the direct FedAvg reference too when
+    // no codec is involved — sanity that the harness measures the right
+    // thing (nf4 runs cannot be compared to an unquantized reference).
+    let flat_plain = run(&base_job(8, QuantScheme::None, Topology::Flat));
+    let tree_plain = run(&base_job(8, QuantScheme::None, Topology::Tree { branching: 4 }));
+    let want = expected_fedavg(&(0..8).collect::<Vec<_>>(), 3, 2);
+    assert_eq!(flat_plain.global.max_abs_diff(&want), 0.0);
+    assert_eq!(tree_plain.global.max_abs_diff(&want), 0.0);
+}
+
+/// Three-tier tree (branching 2 over 8 clients → relays of relays):
+/// mid-tier relays merge their children's Fx128 partial aggregates, and
+/// the result is still bit-identical to flat.
+#[test]
+fn deep_tree_bit_identical_to_flat() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut flat_job = base_job(8, QuantScheme::Blockwise8, Topology::Flat);
+    let mut tree_job = base_job(8, QuantScheme::Blockwise8, Topology::Tree { branching: 2 });
+    flat_job.rounds = 1;
+    tree_job.rounds = 1;
+    let flat = run(&flat_job);
+    let tree = run(&tree_job);
+    assert_eq!(tree.global.max_abs_diff(&flat.global), 0.0);
+    // 8 @ branching 2: root → 2 relays → 4 relays → 8 clients.
+    assert_eq!(tree.report.scalars["relay_count"], 6.0);
+    assert_eq!(tree.report.scalars["root_fanin"], 2.0);
+}
+
+/// Root gather accounting: the root folds R pre-folded streams instead
+/// of C client streams, and the tree run's comm-buffer peak stays far
+/// below the flat whole-container baseline (the gauge is process-wide
+/// in this single-address-space simulation, so it covers root + relays
+/// + clients together — an upper bound on the root's own share).
+#[test]
+fn tree_root_folds_r_streams_with_bounded_buffers() {
+    let _guard = SERIAL.lock().unwrap();
+    let gauge = &flare::memory::COMM_GAUGE;
+
+    // Flat baseline with the whole-container gather (entry_fold off):
+    // the O(model × sessions) world.
+    let mut buffered_job = base_job(8, QuantScheme::Nf4, Topology::Flat);
+    buffered_job.rounds = 1;
+    buffered_job.entry_fold = false;
+    gauge.reset_peak();
+    let base = gauge.current();
+    let flat_buffered = run(&buffered_job);
+    let flat_peak = gauge.peak().saturating_sub(base);
+
+    let mut tree_job = base_job(8, QuantScheme::Nf4, Topology::Tree { branching: 4 });
+    tree_job.rounds = 1;
+    gauge.reset_peak();
+    let base = gauge.current();
+    let tree = run(&tree_job);
+    let tree_peak = gauge.peak().saturating_sub(base);
+
+    // Same math, different topology…
+    assert_eq!(tree.global.max_abs_diff(&flat_buffered.global), 0.0);
+
+    // …but the root folds 2 relay streams, not 8 client streams:
+    let root_sessions: Vec<&String> = tree
+        .report
+        .series
+        .keys()
+        .filter(|k| k.starts_with("client_round_secs/"))
+        .collect();
+    assert_eq!(
+        root_sessions.len(),
+        2,
+        "root should gather exactly the relays: {root_sessions:?}"
+    );
+    assert!(
+        root_sessions.iter().all(|k| k.contains("relay-")),
+        "{root_sessions:?}"
+    );
+    assert_eq!(tree.report.scalars["root_fanin"], 2.0);
+    assert!(tree.report.scalars["root_peak_comm_bytes"] > 0.0);
+
+    // O(accumulator + entry × fan-in) vs O(model × sessions): the whole
+    // tree (every tier together — it runs 2x the session count of the
+    // flat run in this one address space) still stays well under the
+    // flat whole-container peak, because no tier ever buffers a whole
+    // in-flight model.
+    assert!(
+        tree_peak * 3 <= flat_peak * 2,
+        "tree peak {tree_peak} not well below whole-container flat peak {flat_peak}"
+    );
+}
+
+/// Acceptance: a relay killed mid-round (seeded uplink blackout) under
+/// `allow_partial` yields the survivors-only FedAvg result, bit-exactly.
+#[test]
+fn relay_killed_mid_round_yields_survivors_only_fedavg() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut job = base_job(8, QuantScheme::None, Topology::Tree { branching: 4 });
+    job.rounds = 1;
+    job.reliable = true;
+    job.chunk_bytes = 16 * 1024;
+    job.transfer_timeout_secs = 2;
+    job.round_policy = RoundPolicy {
+        allow_partial: true,
+        min_clients: 1,
+        ..RoundPolicy::default()
+    };
+
+    // Kill relay 0's uplink for good after 64 KB of upstream bytes —
+    // registration and scatter acks fit well below that, so the blackout
+    // lands mid-partial-upload.
+    let kill = FaultProfile {
+        seed: 4242,
+        disconnect_at_bytes: 64 * 1024,
+        disconnect_frames: u64::MAX,
+        ..FaultProfile::NONE
+    };
+    let opts = TreeSimOptions {
+        uplink_faults: BTreeMap::from([(0usize, (FaultProfile::NONE, kill))]),
+        ..TreeSimOptions::default()
+    };
+
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 1);
+    let quant = job.quant;
+    let r = run_tree_simulation_with(
+        &job,
+        initial,
+        trainer_factory(spec),
+        Arc::new(move || FilterSet::two_way_quantization(quant)),
+        opts,
+    )
+    .expect("partial tree round must complete");
+
+    // Survivors = relay 1's subtree under the seeded placement.
+    let nodes = plan(&job.topology, job.clients, job.seed);
+    assert_eq!(nodes.len(), 2);
+    let survivors = nodes[1].client_indices();
+    assert_eq!(survivors.len(), 4);
+    let expect = expected_fedavg(&survivors, job.train.local_steps, 1);
+    assert_eq!(
+        r.global.max_abs_diff(&expect),
+        0.0,
+        "global must equal FedAvg over exactly the surviving subtree"
+    );
+    // …and that is measurably different from the full 8-client result.
+    let full = expected_fedavg(&(0..8).collect::<Vec<_>>(), job.train.local_steps, 1);
+    assert!(r.global.max_abs_diff(&full) > 1e-4);
+
+    // Only the surviving subtree's leaves made it into the round.
+    let leaves = &r.report.series["leaf_clients_completed"];
+    assert_eq!(leaves.last(), Some(4.0), "{leaves:?}");
+    // The dead relay is reported: its stats never joined cleanly, so
+    // exactly one relay's stats survive alongside the failure.
+    assert_eq!(r.relays.len(), 1, "only the surviving relay reports stats");
+    assert_eq!(r.relays[0].fanin, 4);
+}
+
+/// Regression (subtree fault cascade): a leaf client killed mid-upload
+/// *under a relay* must unblock its siblings' fold frontier (the relay
+/// excludes/poisons the shared fold the moment the child session dies)
+/// — not deadlock the subtree — and the job completes with everyone
+/// else, bit-exactly.
+#[test]
+fn leaf_killed_under_a_relay_excludes_only_that_leaf() {
+    let _guard = SERIAL.lock().unwrap();
+    let mut job = base_job(8, QuantScheme::None, Topology::Tree { branching: 4 });
+    job.rounds = 1;
+    job.reliable = true;
+    job.chunk_bytes = 16 * 1024;
+    job.transfer_timeout_secs = 2;
+    job.round_policy = RoundPolicy {
+        allow_partial: true,
+        min_clients: 1,
+        ..RoundPolicy::default()
+    };
+
+    // Kill the FIRST client of relay 0's subtree (fold position 0 — the
+    // position every sibling's frontier waits on) mid-result-upload.
+    let nodes = plan(&job.topology, job.clients, job.seed);
+    let dead = nodes[0].client_indices()[0];
+    let kill = FaultProfile {
+        seed: 77,
+        disconnect_at_bytes: 48 * 1024,
+        disconnect_frames: u64::MAX,
+        ..FaultProfile::NONE
+    };
+    let opts = TreeSimOptions {
+        leaf_faults: BTreeMap::from([(dead, (FaultProfile::NONE, kill))]),
+        ..TreeSimOptions::default()
+    };
+
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 1);
+    let quant = job.quant;
+    let r = run_tree_simulation_with(
+        &job,
+        initial,
+        trainer_factory(spec),
+        Arc::new(move || FilterSet::two_way_quantization(quant)),
+        opts,
+    )
+    .expect("partial subtree round must complete");
+
+    let survivors: Vec<usize> = (0..8).filter(|&i| i != dead).collect();
+    let expect = expected_fedavg(&survivors, job.train.local_steps, 1);
+    assert_eq!(
+        r.global.max_abs_diff(&expect),
+        0.0,
+        "global must equal FedAvg over everyone except the dead leaf"
+    );
+    // Both relays survived and reported; 7 of 8 leaves folded.
+    assert_eq!(r.relays.len(), 2);
+    assert_eq!(r.report.series["leaf_clients_completed"].last(), Some(7.0));
+}
+
+/// The relay tier is transport-agnostic: the same RelayNode drives real
+/// TCP endpoints, and the result still matches the flat in-process run
+/// bit-for-bit.
+#[test]
+fn tree_over_tcp_matches_flat_in_process() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    let mut job = base_job(4, QuantScheme::Blockwise8, Topology::Tree { branching: 2 });
+    job.rounds = 2;
+    let chunk = job.chunk_bytes as usize;
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 1);
+    let quant = job.quant;
+    let factory: flare::filter::FilterFactory =
+        Arc::new(move || FilterSet::two_way_quantization(quant));
+    let spool = std::env::temp_dir();
+
+    let root_listener = loopback_listener().unwrap();
+    let root_addr = root_listener.local_addr().unwrap().to_string();
+
+    // Two relays, two clients each (explicit wiring — the plan's seeded
+    // placement is a simulator concern; over TCP, whoever connects is a
+    // child, and the exact fold is grouping-independent anyway).
+    let mut relay_handles = Vec::new();
+    let mut client_handles = Vec::new();
+    for r in 0..2usize {
+        let relay_listener = loopback_listener().unwrap();
+        let relay_addr = relay_listener.local_addr().unwrap().to_string();
+        for c in 0..2usize {
+            let i = 2 * r + c;
+            let relay_addr = relay_addr.clone();
+            let spool = spool.clone();
+            let spec = spec.clone();
+            let job_c = job.clone();
+            client_handles.push(std::thread::spawn(move || {
+                let driver = TcpDriver::connect(&relay_addr).unwrap();
+                let mut exec = Executor::new(
+                    format!("site-{}", i + 1),
+                    SfmEndpoint::new(Box::new(driver)).with_chunk(chunk),
+                    FilterSet::two_way_quantization(job_c.quant),
+                    MockTrainer::new(materialize(&spec, 100 + i as u64), 0.3, SAMPLES[i]),
+                    spool,
+                )
+                .with_mode(job_c.streaming)
+                .with_timeout(job_c.transfer_timeout());
+                exec.register().unwrap();
+                exec.run().unwrap()
+            }));
+        }
+        let root_addr = root_addr.clone();
+        let job_r = job.clone();
+        let factory = factory.clone();
+        let spool = spool.clone();
+        relay_handles.push(std::thread::spawn(move || {
+            let up = SfmEndpoint::new(Box::new(TcpDriver::connect(&root_addr).unwrap()))
+                .with_chunk(chunk);
+            let kids: Vec<SfmEndpoint> = (0..2)
+                .map(|_| {
+                    SfmEndpoint::new(Box::new(TcpDriver::accept(&relay_listener).unwrap()))
+                        .with_chunk(chunk)
+                })
+                .collect();
+            flare::topology::RelayNode::new(
+                format!("relay-{r}"),
+                job_r,
+                up,
+                kids,
+                factory,
+                spool,
+            )
+            .run()
+            .unwrap()
+        }));
+    }
+
+    let user_factory = factory.clone();
+    let root_factory: flare::filter::FilterFactory = Arc::new(move || {
+        let mut set = (*user_factory)();
+        set.add(
+            flare::filter::FilterPoint::TaskResultInServer,
+            Box::new(flare::filter::integrity::VerifyIntegrityFilter),
+        );
+        set
+    });
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+        .with_filter_factory(root_factory);
+    for _ in 0..2 {
+        let driver = TcpDriver::accept(&root_listener).unwrap();
+        controller
+            .accept_client(
+                SfmEndpoint::new(Box::new(driver)).with_chunk(chunk),
+                Some(std::time::Duration::from_secs(60)),
+            )
+            .unwrap();
+    }
+    let mut report = Report::new();
+    let global = controller.run(initial, &mut report).unwrap();
+    for h in relay_handles {
+        let stats = h.join().unwrap();
+        assert_eq!(stats.fanin, 2);
+        assert_eq!(stats.leaf_clients, 2);
+        assert_eq!(stats.rounds.len(), job.rounds);
+    }
+    for h in client_handles {
+        assert_eq!(h.join().unwrap(), job.rounds);
+    }
+
+    // Flat in-process reference with identical clients and trainers.
+    let mut flat_job = job.clone();
+    flat_job.topology = Topology::Flat;
+    let flat = run(&flat_job);
+    assert_eq!(global.names(), flat.global.names());
+    assert_eq!(
+        global.max_abs_diff(&flat.global),
+        0.0,
+        "TCP tree must match the flat in-process run bit-for-bit"
+    );
+    // The root saw two weighted contributors covering 4 leaves.
+    assert_eq!(report.series["leaf_clients_completed"].last(), Some(4.0));
+}
+
+/// Satellite: misconfigured jobs fail fast at construction/run start
+/// with a clear message — not three transfers into a round.
+#[test]
+fn invalid_config_fails_fast() {
+    let mut job = JobConfig::default();
+    job.round_policy.sample_fraction = 0.0;
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), std::env::temp_dir());
+    let mut report = Report::new();
+    let err = controller
+        .run(ParamContainer::new(), &mut report)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("invalid job config"), "{err}");
+
+    let spec = tiny_spec();
+    let err = run_simulation(
+        &job,
+        materialize(&spec, 1),
+        trainer_factory(spec.clone()),
+        FilterSet::new,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("sample_fraction"), "{err:#}");
+
+    // zero transfer timeout: same fail-fast path
+    let mut job = JobConfig::default();
+    job.transfer_timeout_secs = 0;
+    assert!(job.validate().is_err());
+}

@@ -1,0 +1,267 @@
+//! Asynchronous (buffered) vs synchronous aggregation under stragglers:
+//! the paper-motivating scenario for FedBuff-style folding. A seeded
+//! 100:1 log-spaced speed spread plus a churn plan (blackouts on a
+//! quarter of the fleet) gate every synchronous round on its slowest
+//! survivor, while the buffered engine keeps folding whatever arrives.
+//! Both modes ingest the same contribution budget over identical links;
+//! the headline metric is wall-clock per ingested contribution and the
+//! time at which each mode's loss first crosses the sync run's
+//! first-round loss (time-to-target).
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{
+    AggregationConfig, AggregationMode, FaultProfile, JobConfig, QuantScheme, RoundPolicy,
+    StreamingMode, TrainConfig,
+};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::{inmem, netsim, SfmEndpoint};
+use flare::tensor::init::materialize;
+use flare::util::bench::print_table;
+use flare::util::json::Json;
+use std::time::Duration;
+
+const SEED: u64 = 0xA51C_0DE5;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::llama(
+        "tiny",
+        LlamaDims {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            untied_head: true,
+        },
+    )
+}
+
+struct Scenario {
+    clients: usize,
+    /// Synchronous rounds; the buffered run gets the same fold budget.
+    sync_rounds: usize,
+    buffer_k: usize,
+    spread: f64,
+    base_bps: u64,
+    churn_fraction: f64,
+}
+
+struct RunOut {
+    wall_secs: f64,
+    folds: usize,
+    final_loss: f64,
+    /// (elapsed seconds, mean loss) per aggregate publication.
+    loss_curve: Vec<(f64, f64)>,
+}
+
+fn run_mode(sc: &Scenario, mode: AggregationMode) -> RunOut {
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 3);
+    let fold_budget = sc.sync_rounds * sc.clients;
+    let rounds = match mode {
+        AggregationMode::Sync => sc.sync_rounds,
+        AggregationMode::Buffered => fold_budget / sc.buffer_k,
+    };
+    let job = JobConfig {
+        name: format!("async-vs-sync-{mode:?}"),
+        clients: sc.clients,
+        rounds,
+        quant: QuantScheme::Nf4,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 32 * 1024,
+        reliable: true,
+        round_policy: RoundPolicy {
+            allow_partial: true,
+            ..Default::default()
+        },
+        aggregation: AggregationConfig {
+            mode,
+            buffer_k: sc.buffer_k,
+            staleness_alpha: 0.5,
+        },
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    // Identical seeded environment for both modes: a log-spaced
+    // slot→speed assignment and a churn plan of mid-transfer blackouts.
+    let nets = netsim::speed_spread(sc.base_bps, sc.spread, sc.clients, SEED);
+    let churn = netsim::churn_plan(
+        FaultProfile {
+            seed: SEED,
+            drop_rate: 0.01,
+            reorder_rate: 0.01,
+            ..FaultProfile::NONE
+        },
+        sc.clients,
+        sc.churn_fraction,
+        256 * 1024,
+        16,
+        SEED,
+    );
+
+    let spool = std::env::temp_dir().join(format!(
+        "flare_bench_async_{}_{:?}",
+        std::process::id(),
+        mode
+    ));
+    std::fs::create_dir_all(&spool).unwrap();
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+        .with_filter_factory(FilterSet::two_way_quantization_factory(job.quant));
+
+    let mut handles = Vec::new();
+    for i in 0..sc.clients {
+        let mut pair = inmem::pair(4096);
+        pair = netsim::shape_pair(pair, nets[i]);
+        if !churn[i].is_none() {
+            let (faulted, _sa, _sb) =
+                netsim::fault_pair(pair, churn[i].reseeded(2 * i as u64), churn[i].reseeded(2 * i as u64 + 1));
+            pair = faulted;
+        }
+        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
+        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
+        let job_c = job.clone();
+        let spool_c = spool.clone();
+        let target = materialize(&spec, 200 + i as u64);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                client_ep,
+                FilterSet::two_way_quantization(job_c.quant),
+                MockTrainer::new(target, 0.3, 40 + 10 * i as u64),
+                spool_c,
+            )
+            .with_mode(job_c.streaming)
+            .with_reliable(job_c.reliable)
+            .with_entry_fold(job_c.entry_fold)
+            .with_timeout(job_c.transfer_timeout());
+            exec.register()?;
+            exec.run()
+        }));
+        controller
+            .accept_client(server_ep, Some(Duration::from_secs(60)))
+            .unwrap();
+    }
+
+    let mut report = Report::new();
+    let t0 = std::time::Instant::now();
+    controller.run(initial, &mut report).expect("run failed");
+    let wall_secs = t0.elapsed().as_secs_f64();
+    for h in handles {
+        h.join().expect("client thread panicked").unwrap();
+    }
+    std::fs::remove_dir_all(&spool).ok();
+
+    // Loss per aggregate publication, on a shared elapsed-seconds axis.
+    let mut loss_curve = Vec::new();
+    let mut elapsed = 0.0;
+    let mut folds = 0usize;
+    for r in &controller.rounds {
+        elapsed += r.seconds;
+        folds += r.completed;
+        if r.mean_loss.is_finite() {
+            loss_curve.push((elapsed, r.mean_loss as f64));
+        }
+    }
+    let final_loss = loss_curve.last().map(|&(_, l)| l).unwrap_or(f64::NAN);
+    RunOut {
+        wall_secs,
+        folds,
+        final_loss,
+        loss_curve,
+    }
+}
+
+/// Seconds at which `curve` first reaches `target` loss (NaN if never).
+fn time_to(curve: &[(f64, f64)], target: f64) -> f64 {
+    curve
+        .iter()
+        .find(|&&(_, l)| l <= target)
+        .map(|&(t, _)| t)
+        .unwrap_or(f64::NAN)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let sc = if smoke {
+        Scenario {
+            clients: 3,
+            sync_rounds: 1,
+            buffer_k: 3,
+            spread: 8.0,
+            base_bps: 16_000_000,
+            churn_fraction: 0.34,
+        }
+    } else {
+        Scenario {
+            clients: 8,
+            sync_rounds: 3,
+            buffer_k: 4,
+            spread: 100.0,
+            base_bps: 16_000_000,
+            churn_fraction: 0.25,
+        }
+    };
+
+    let sync = run_mode(&sc, AggregationMode::Sync);
+    let buffered = run_mode(&sc, AggregationMode::Buffered);
+
+    // Time-to-target: when does each mode first match the sync run's
+    // first published loss? (A level both runs provably visit.)
+    let target = sync.loss_curve.first().map(|&(_, l)| l).unwrap_or(f64::NAN);
+    let sync_tt = time_to(&sync.loss_curve, target);
+    let buf_tt = time_to(&buffered.loss_curve, target);
+
+    let mut rows = Vec::new();
+    for (name, out, tt) in [("sync", &sync, sync_tt), ("buffered", &buffered, buf_tt)] {
+        let json = Json::obj(vec![
+            ("bench", Json::str("async_vs_sync")),
+            ("mode", Json::str(name)),
+            ("clients", Json::num(sc.clients as f64)),
+            ("speed_spread", Json::num(sc.spread)),
+            ("churn_fraction", Json::num(sc.churn_fraction)),
+            ("folds", Json::num(out.folds as f64)),
+            ("wall_secs", Json::num(out.wall_secs)),
+            ("secs_per_fold", Json::num(out.wall_secs / out.folds.max(1) as f64)),
+            ("final_loss", Json::num(out.final_loss)),
+            ("time_to_target_secs", Json::num(tt)),
+        ]);
+        println!("BENCH_JSON {json}");
+        rows.push(vec![
+            name.to_string(),
+            out.folds.to_string(),
+            format!("{:.2}", out.wall_secs),
+            format!("{:.3}", out.wall_secs / out.folds.max(1) as f64),
+            format!("{:.4}", out.final_loss),
+            format!("{tt:.2}"),
+        ]);
+    }
+    print_table(
+        &format!(
+            "Async (buffered) vs sync aggregation — {} clients, {:.0}:1 speed spread, {:.0}% churn",
+            sc.clients,
+            sc.spread,
+            sc.churn_fraction * 100.0
+        ),
+        &["mode", "folds", "wall s", "s/fold", "final loss", "t-to-target s"],
+        &rows,
+    );
+
+    if !smoke {
+        assert!(
+            buffered.wall_secs < sync.wall_secs,
+            "buffered must ingest the same fold budget faster than sync \
+             ({:.2}s vs {:.2}s) under a {:.0}:1 spread with churn",
+            buffered.wall_secs,
+            sync.wall_secs,
+            sc.spread
+        );
+    }
+}

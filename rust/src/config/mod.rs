@@ -284,6 +284,62 @@ impl Topology {
     }
 }
 
+/// Aggregation control-plane mode: the classic synchronous round engine
+/// or the FedBuff-style buffered asynchronous engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggregationMode {
+    /// Barrier-synchronous rounds: every round waits on the slowest
+    /// selected client (modulo the round policy's deadline/quorum).
+    #[default]
+    Sync,
+    /// FedBuff: the server folds each contribution the moment it
+    /// arrives, weighted by a staleness discount computed on the exact
+    /// fixed-point grid, and publishes a new global version every
+    /// `buffer_k` folds. No round barrier.
+    Buffered,
+}
+
+impl AggregationMode {
+    pub fn from_name(s: &str) -> Option<AggregationMode> {
+        match s {
+            "sync" => Some(AggregationMode::Sync),
+            "buffered" => Some(AggregationMode::Buffered),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationMode::Sync => "sync",
+            AggregationMode::Buffered => "buffered",
+        }
+    }
+}
+
+/// Buffered-mode (FedBuff) aggregation parameters. Ignored under
+/// [`AggregationMode::Sync`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AggregationConfig {
+    pub mode: AggregationMode,
+    /// Contributions folded between global-version snapshots (K).
+    pub buffer_k: usize,
+    /// Staleness-discount exponent α in `w(τ) = base / (1+τ)^α`.
+    /// Restricted to half-integer steps (2α ∈ ℕ) so the weight is
+    /// representable exactly on the Q32.32 grid via an integer square
+    /// root — no float path touches the fold.
+    pub staleness_alpha: f64,
+}
+
+impl Default for AggregationConfig {
+    fn default() -> Self {
+        Self {
+            mode: AggregationMode::Sync,
+            buffer_k: 4,
+            staleness_alpha: 0.5,
+        }
+    }
+}
+
 /// Default control/transfer timeout (the old hard-coded value).
 pub const DEFAULT_TRANSFER_TIMEOUT_SECS: u64 = 600;
 
@@ -343,6 +399,9 @@ pub struct JobConfig {
     /// Aggregation topology (flat single server, or a relay tree that
     /// pre-folds entry streams at the edge).
     pub topology: Topology,
+    /// Control-plane aggregation mode (synchronous rounds vs FedBuff
+    /// buffered asynchrony) and its buffered-mode parameters.
+    pub aggregation: AggregationConfig,
     /// Control-message and weight-transfer timeout used by the
     /// coordinator on both sides, in seconds (>= 1).
     pub transfer_timeout_secs: u64,
@@ -375,6 +434,7 @@ impl Default for JobConfig {
             entry_fold: true,
             round_policy: RoundPolicy::default(),
             topology: Topology::Flat,
+            aggregation: AggregationConfig::default(),
             transfer_timeout_secs: DEFAULT_TRANSFER_TIMEOUT_SECS,
             encode_threads: 0,
             seed: 0xF1A2E,
@@ -461,6 +521,26 @@ impl JobConfig {
                         "tree" => Topology::Tree { branching },
                         other => bail!("unknown topology kind '{other}' (flat|tree)"),
                     };
+                }
+                "aggregation" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("aggregation: not an object"))?;
+                    for (ak, av) in t {
+                        match ak.as_str() {
+                            "mode" => {
+                                let s = req_str(av, ak)?;
+                                cfg.aggregation.mode = AggregationMode::from_name(&s)
+                                    .ok_or_else(|| {
+                                        anyhow!("unknown aggregation mode '{s}' (sync|buffered)")
+                                    })?;
+                            }
+                            "buffer_k" => cfg.aggregation.buffer_k = req_usize(av, ak)?,
+                            "staleness_alpha" => {
+                                cfg.aggregation.staleness_alpha =
+                                    av.as_f64().ok_or_else(|| anyhow!("{ak}: not a number"))?
+                            }
+                            other => bail!("unknown aggregation key '{other}'"),
+                        }
+                    }
                 }
                 "round_policy" => {
                     let t = v.as_obj().ok_or_else(|| anyhow!("round_policy: not an object"))?;
@@ -579,6 +659,25 @@ impl JobConfig {
                 bail!("tree topology needs at least 2 clients");
             }
         }
+        if self.aggregation.buffer_k == 0 {
+            bail!("aggregation.buffer_k must be >= 1");
+        }
+        let a = self.aggregation.staleness_alpha;
+        if !(0.0..=8.0).contains(&a) {
+            bail!("aggregation.staleness_alpha must be in [0, 8], got {a}");
+        }
+        // Exact integer weights need (1+τ)^(2α) ∈ ℕ, hence half-steps.
+        if (2.0 * a).fract() != 0.0 {
+            bail!("aggregation.staleness_alpha must be a multiple of 0.5 (exact fixed-point weights), got {a}");
+        }
+        if self.aggregation.mode == AggregationMode::Buffered {
+            if self.round_policy.sample_fraction != 1.0 {
+                bail!("buffered aggregation folds every arrival; round_policy.sample_fraction must be 1.0");
+            }
+            if self.round_policy.round_deadline_secs != 0 {
+                bail!("buffered aggregation has no round barrier; round_policy.round_deadline_secs must be 0");
+            }
+        }
         Ok(())
     }
 
@@ -627,6 +726,17 @@ impl JobConfig {
                 Json::obj(vec![
                     ("kind", Json::str(self.topology.name())),
                     ("branching", Json::num(self.topology.branching() as f64)),
+                ]),
+            ),
+            (
+                "aggregation",
+                Json::obj(vec![
+                    ("mode", Json::str(self.aggregation.mode.name())),
+                    ("buffer_k", Json::num(self.aggregation.buffer_k as f64)),
+                    (
+                        "staleness_alpha",
+                        Json::num(self.aggregation.staleness_alpha),
+                    ),
                 ]),
             ),
             (
@@ -855,6 +965,53 @@ mod tests {
         };
         assert_eq!(q.quorum(4), 3);
         assert_eq!(q.quorum(2), 2); // clamped to the selected count
+    }
+
+    #[test]
+    fn aggregation_roundtrip_and_validation() {
+        let cfg = JobConfig {
+            clients: 4,
+            aggregation: AggregationConfig {
+                mode: AggregationMode::Buffered,
+                buffer_k: 3,
+                staleness_alpha: 1.5,
+            },
+            ..JobConfig::default()
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.aggregation, cfg.aggregation);
+        // default is sync and round-trips
+        let d = JobConfig::from_json(&JobConfig::default().to_json()).unwrap();
+        assert_eq!(d.aggregation.mode, AggregationMode::Sync);
+        assert_eq!(d.aggregation.buffer_k, 4);
+        assert_eq!(d.aggregation.staleness_alpha, 0.5);
+        for bad in [
+            r#"{"aggregation": {"mode": "eventually"}}"#,
+            r#"{"aggregation": {"buffer_k": 0}}"#,
+            r#"{"aggregation": {"staleness_alpha": -0.5}}"#,
+            r#"{"aggregation": {"staleness_alpha": 9.0}}"#,
+            // non-half-step alpha breaks the exact integer-weight grid
+            r#"{"aggregation": {"staleness_alpha": 0.3}}"#,
+            r#"{"aggregation": {"nonsense": 1}}"#,
+            // buffered mode folds every arrival: no sampling, no deadline
+            r#"{"clients": 4, "aggregation": {"mode": "buffered"},
+                "round_policy": {"sample_fraction": 0.5}}"#,
+            r#"{"clients": 4, "aggregation": {"mode": "buffered"},
+                "round_policy": {"round_deadline_secs": 30}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobConfig::from_json(&j).is_err(), "{bad}");
+        }
+        let ok = Json::parse(
+            r#"{"clients": 4, "aggregation": {"mode": "buffered", "buffer_k": 2,
+                "staleness_alpha": 1.0}}"#,
+        )
+        .unwrap();
+        let cfg = JobConfig::from_json(&ok).unwrap();
+        assert_eq!(cfg.aggregation.mode, AggregationMode::Buffered);
+        assert_eq!(cfg.aggregation.buffer_k, 2);
+        assert_eq!(AggregationMode::from_name("sync"), Some(AggregationMode::Sync));
+        assert_eq!(AggregationMode::from_name("nope"), None);
     }
 
     #[test]

@@ -149,7 +149,7 @@ fn finalize_sums(skeleton: &ParamContainer, sums: &[Vec<i128>], total_weight: u6
         .collect()
 }
 
-fn check_foldable_dtype(name: &str, t: &Tensor) -> Result<()> {
+pub(crate) fn check_foldable_dtype(name: &str, t: &Tensor) -> Result<()> {
     if !matches!(t.meta.dtype, DType::F32 | DType::Fx128) {
         bail!(
             "aggregation requires fp32 containers or fixed-point partials (dequantize first), \

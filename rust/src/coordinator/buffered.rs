@@ -1,0 +1,1175 @@
+//! Buffered asynchronous aggregation (FedBuff, `AggregationMode::Buffered`).
+//!
+//! The synchronous engine (`controller::drive_rounds`) prices every round
+//! at the slowest selected client. This module is the other control
+//! plane: each session worker re-tasks its client as soon as the previous
+//! exchange finishes and the driver acks its fold (continuous local
+//! training against the latest global), and a single sequential
+//! **driver** folds each contribution into a [`BufferedAggregator`] the
+//! moment it arrives — no round barrier anywhere. After every `buffer_k`
+//! folds the driver snapshots a new global **version** and publishes it;
+//! workers pick it up on their next issue. The per-session ack keeps a
+//! client's staleness a pure function of the contribution schedule
+//! rather than of driver queue latency.
+//!
+//! # Exact staleness-weighted folds
+//!
+//! A contribution trained against version `b` and folded at version `c`
+//! is `τ = c − b` versions stale and enters the fold with weight
+//! `w(τ) = base / (1+τ)^α`. The weight is computed **entirely in integer
+//! arithmetic** on a Q32.32 grid (config restricts α to half-steps so
+//! `(1+τ)^(2α)` is a u128 integer and one integer square root finishes
+//! the job), and each `weight × value` term lands on the same exact
+//! Q64.64 grid the synchronous fold uses, via an exact split-limb
+//! multiply. From there the fold is i128 addition — associative and
+//! commutative — so a snapshot is **bit-identical for any arrival
+//! permutation of the same contribution multiset with the same staleness
+//! assignment** (the property `tests/async_fold.rs` drives). The single
+//! float rounding happens once, at [`BufferedAggregator::snapshot`].
+//!
+//! # The version ledger
+//!
+//! [`VersionLedger`] pins one outstanding issued version per session and
+//! quarantines anything that contradicts it: results echoing a version
+//! that was never issued (stale or from the future), duplicate re-sends
+//! of an already-folded result, and nonzero declared staleness tags
+//! (sessions are lock-step per exchange, so the server *computes* τ; a
+//! declaration is a protocol violation). Quarantine excludes the
+//! contribution atomically — the accumulator validates every term before
+//! applying any — and retires the offending session.
+//!
+//! Unlike the entry-streamed synchronous gather, v1 of the buffered
+//! engine assembles each contribution whole before handing it to the
+//! driver (gather memory O(model × in-flight sessions)); the fold-versus-
+//! arrival race that entry streaming would add is not worth it until the
+//! mode has mileage. See DESIGN.md §Asynchronous aggregation.
+
+use super::aggregator::{check_foldable_dtype, FIXED_ONE, MAX_WEIGHT};
+use super::controller::{endpoint_bytes, ClientConn, Controller};
+use super::protocol::CtrlMsg;
+use super::{resume_policy, RoundStats, SUBTREE_WAIT_FACTOR};
+use crate::config::JobConfig;
+use crate::filter::{EntryChain, FilterContext, FilterPoint, FilterSet};
+use crate::memory::{GaugeReservation, COMM_GAUGE};
+use crate::metrics::Report;
+use crate::streaming::wire::Entry;
+use crate::streaming::{self, EntryAssembler, EntryFlow, WeightsMsg};
+use crate::tensor::{DType, ParamContainer, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// One unit on the Q32.32 staleness-weight grid (2^32).
+pub const W_ONE: u128 = 1u128 << 32;
+/// Largest |value| accepted in a buffered f32 fold (2^22). Tighter than
+/// the synchronous `MAX_TERM_ABS` because the split-limb weight multiply
+/// needs `|value × 2^64| < 2^86` to stay exact in u128; model weights
+/// live many orders of magnitude below either bound.
+const MAX_BUF_VAL: f64 = (1u64 << 22) as f64;
+
+/// floor(√n) for u128, by Newton's method seeded above the root.
+pub fn isqrt_u128(n: u128) -> u128 {
+    if n < 2 {
+        return n;
+    }
+    let bits = 128 - n.leading_zeros();
+    let mut x = 1u128 << bits.div_ceil(2);
+    loop {
+        let y = (x + n / x) / 2;
+        if y >= x {
+            return x;
+        }
+        x = y;
+    }
+}
+
+/// The staleness-discounted weight `base / (1+τ)^α` on the Q32.32 grid,
+/// computed without a float anywhere: with `alpha2 = 2α` (an integer by
+/// config), `p = (1+τ)^alpha2` is an exact u128, `s = isqrt(p · 2^64)`
+/// is exactly `⌊2^32·√p⌋`, and the weight is `⌊base · 2^64 / s⌋`.
+///
+/// * τ = 0 gives exactly `base · 2^32` (no discount, bit-for-bit).
+/// * integer α gives exactly `⌊base · 2^32 / (1+τ)^α⌋` (p is a perfect
+///   square, so the square root is exact).
+///
+/// Errs when the contribution is too stale for the grid (`p ≥ 2^64`) —
+/// its weight would be below one grid step of any realistic base, so the
+/// driver drops it rather than fold a zero.
+pub fn staleness_weight_fx(base: u64, tau: u64, alpha2: u32) -> Result<u128> {
+    if base == 0 {
+        bail!("zero-weight contribution");
+    }
+    if base > MAX_WEIGHT {
+        bail!("weight {base} exceeds the exact-aggregation cap {MAX_WEIGHT}");
+    }
+    let b = (tau as u128) + 1;
+    let mut p: u128 = 1;
+    for _ in 0..alpha2 {
+        p = p
+            .checked_mul(b)
+            .ok_or_else(|| anyhow!("staleness {tau} overflows the weight grid"))?;
+    }
+    if p >= 1u128 << 64 {
+        bail!("staleness {tau} discounts below the Q32.32 weight grid");
+    }
+    let s = isqrt_u128(p << 64);
+    let w = ((base as u128) << 64) / s;
+    if w == 0 {
+        bail!("staleness weight underflow (τ = {tau})");
+    }
+    Ok(w)
+}
+
+/// Exact `⌊(w_fx × mag) / 2^32⌋` without u128 overflow, by splitting the
+/// magnitude at bit 32: `w·⌊m/2^32⌋ + ⌊w·(m mod 2^32)/2^32⌋` composes
+/// the floor exactly.
+fn scale_mag(w_fx: u128, mag: u128) -> Result<u128> {
+    let hi = w_fx
+        .checked_mul(mag >> 32)
+        .ok_or_else(|| anyhow!("staleness-weighted term overflow"))?;
+    let lo = w_fx
+        .checked_mul(mag & 0xFFFF_FFFF)
+        .ok_or_else(|| anyhow!("staleness-weighted term overflow"))?
+        >> 32;
+    hi.checked_add(lo)
+        .ok_or_else(|| anyhow!("staleness-weighted term overflow"))
+}
+
+/// One weighted f32 term on the Q64.64 grid: `⌊w_fx · (x · 2^64) / 2^32⌋`
+/// with truncation toward zero — a pure integer function of `(x, w_fx)`,
+/// independent of fold order.
+fn weighted_term_f32(x: f32, w_fx: u128) -> Result<i128> {
+    let v = x as f64;
+    if !v.is_finite() || v.abs() >= MAX_BUF_VAL {
+        bail!("aggregation term {v} outside the buffered fold's exact range");
+    }
+    let fixed = (v * FIXED_ONE) as i128;
+    let m = scale_mag(w_fx, fixed.unsigned_abs())?;
+    if m > i128::MAX as u128 {
+        bail!("staleness-weighted term overflow");
+    }
+    Ok(if fixed < 0 { -(m as i128) } else { m as i128 })
+}
+
+/// One rescaled Fx128 partial-sum term: the tier below already baked the
+/// per-leaf weights in, so staleness only *rescales* the whole partial
+/// by `r_fx = w(τ)/base` on the same grid.
+fn weighted_term_fx(v: i128, r_fx: u128) -> Result<i128> {
+    let m = scale_mag(r_fx, v.unsigned_abs())?;
+    if m > i128::MAX as u128 {
+        bail!("staleness-weighted term overflow");
+    }
+    Ok(if v < 0 { -(m as i128) } else { m as i128 })
+}
+
+/// The buffered-mode accumulator: an exact Q64.64 integer sum per
+/// element plus a Q32.32 total weight, folded strictly in arrival order
+/// by the driver thread and reset at every published snapshot.
+///
+/// Every fold is **all-or-nothing**: pass 1 proves each term (finite,
+/// in range, no i128/u128 overflow) against the current sums, pass 2
+/// recomputes the identical pure terms and applies them. A quarantined
+/// contribution therefore leaves no trace.
+pub struct BufferedAggregator {
+    skeleton: ParamContainer,
+    sums: Vec<Vec<i128>>,
+    total_weight_fx: u128,
+    folds_in_window: usize,
+    buffer_k: usize,
+    alpha2: u32,
+    version: u64,
+}
+
+impl BufferedAggregator {
+    /// `skeleton` fixes the trusted geometry (an all-zeros clone of the
+    /// global); `alpha2` is `2α` from the validated job config.
+    pub fn new(skeleton: ParamContainer, buffer_k: usize, alpha2: u32) -> BufferedAggregator {
+        let sums = skeleton.iter().map(|(_, t)| vec![0i128; t.elems()]).collect();
+        BufferedAggregator {
+            skeleton,
+            sums,
+            total_weight_fx: 0,
+            folds_in_window: 0,
+            buffer_k: buffer_k.max(1),
+            alpha2,
+            version: 0,
+        }
+    }
+
+    /// Latest published version (0 until the first snapshot).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Contributions folded since the last snapshot.
+    pub fn pending(&self) -> usize {
+        self.folds_in_window
+    }
+
+    /// Fold one contribution with staleness `tau`. Returns `true` when
+    /// the window is full and [`snapshot`](Self::snapshot) should run.
+    /// On `Err` nothing reached the accumulator.
+    pub fn fold(&mut self, update: &ParamContainer, n_samples: u64, tau: u64) -> Result<bool> {
+        if n_samples == 0 {
+            bail!("zero-weight contribution");
+        }
+        if self.skeleton.names() != update.names() {
+            bail!("contribution names do not match the aggregation skeleton");
+        }
+        let mut has_fx = false;
+        let mut has_f32 = false;
+        for ((name, s), (_, u)) in self.skeleton.iter().zip(update.iter()) {
+            if s.meta.shape != u.meta.shape {
+                bail!(
+                    "shape mismatch at '{name}': {:?} vs {:?}",
+                    u.meta.shape,
+                    s.meta.shape
+                );
+            }
+            check_foldable_dtype(name, u)?;
+            match u.meta.dtype {
+                DType::Fx128 => has_fx = true,
+                _ => has_f32 = true,
+            }
+        }
+        if has_fx && has_f32 {
+            bail!("contribution mixes fp32 entries with fixed-point partials");
+        }
+        // An Fx128 partial carries its leaf weights inside the sums, so
+        // staleness rescales it with the unit-base ratio and its summed
+        // subtree weight scales the denominator by the same ratio. A
+        // plain fp32 contribution uses the full discounted weight on
+        // both sides. Either way numerator and denominator stay
+        // consistent to the last grid step.
+        let (w_fx, contrib_weight_fx) = if has_fx {
+            let r = staleness_weight_fx(1, tau, self.alpha2)?;
+            let cw = (n_samples as u128)
+                .checked_mul(r)
+                .ok_or_else(|| anyhow!("total-weight overflow"))?;
+            (r, cw)
+        } else {
+            let w = staleness_weight_fx(n_samples, tau, self.alpha2)?;
+            (w, w)
+        };
+        let new_total = self
+            .total_weight_fx
+            .checked_add(contrib_weight_fx)
+            .ok_or_else(|| anyhow!("total-weight overflow"))?;
+
+        // Pass 1: prove every term without touching the sums.
+        for ((_, t), s) in update.iter().zip(&self.sums) {
+            match t.meta.dtype {
+                DType::F32 => {
+                    for (d, &x) in s.iter().zip(t.as_f32()) {
+                        let term = weighted_term_f32(x, w_fx)?;
+                        d.checked_add(term)
+                            .ok_or_else(|| anyhow!("aggregation overflow"))?;
+                    }
+                }
+                DType::Fx128 => {
+                    for (d, v) in s.iter().zip(t.iter_i128()) {
+                        let term = weighted_term_fx(v, w_fx)?;
+                        d.checked_add(term)
+                            .ok_or_else(|| anyhow!("aggregation overflow"))?;
+                    }
+                }
+                _ => unreachable!("check_foldable_dtype admits F32 | Fx128"),
+            }
+        }
+        // Pass 2: identical pure terms, now infallible.
+        for ((_, t), s) in update.iter().zip(&mut self.sums) {
+            match t.meta.dtype {
+                DType::F32 => {
+                    for (d, &x) in s.iter_mut().zip(t.as_f32()) {
+                        *d += weighted_term_f32(x, w_fx).expect("validated term");
+                    }
+                }
+                DType::Fx128 => {
+                    for (d, v) in s.iter_mut().zip(t.iter_i128()) {
+                        *d += weighted_term_fx(v, w_fx).expect("validated term");
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        self.total_weight_fx = new_total;
+        self.folds_in_window += 1;
+        Ok(self.folds_in_window >= self.buffer_k)
+    }
+
+    /// Publish the window: the one float rounding (fixed sums → weighted
+    /// mean fp32), a version bump, and a reset for the next window.
+    pub fn snapshot(&mut self) -> Result<ParamContainer> {
+        if self.folds_in_window == 0 {
+            bail!("snapshot of an empty buffer window");
+        }
+        let total = self.total_weight_fx as f64 / W_ONE as f64;
+        let out: ParamContainer = self
+            .skeleton
+            .iter()
+            .zip(&self.sums)
+            .map(|((n, t), s)| {
+                let vals: Vec<f32> = s
+                    .iter()
+                    .map(|&v| ((v as f64) / FIXED_ONE / total) as f32)
+                    .collect();
+                (n.to_string(), Tensor::from_f32(t.meta.shape.clone(), vals))
+            })
+            .collect();
+        self.version += 1;
+        for s in &mut self.sums {
+            s.fill(0);
+        }
+        self.total_weight_fx = 0;
+        self.folds_in_window = 0;
+        Ok(out)
+    }
+}
+
+/// Per-session issued-version bookkeeping. The invariants:
+///
+/// 1. A session has at most one outstanding issued version.
+/// 2. A result is accepted iff it echoes exactly that outstanding
+///    version — anything else (never issued, already folded, replayed,
+///    ahead of the server) quarantines.
+/// 3. Sessions are lock-step per exchange, so a result's *declared*
+///    staleness tag must be 0; the server computes the real τ as
+///    `current − base` at fold time.
+pub struct VersionLedger {
+    outstanding: Vec<Option<u64>>,
+}
+
+impl VersionLedger {
+    pub fn new(sessions: usize) -> VersionLedger {
+        VersionLedger {
+            outstanding: vec![None; sessions],
+        }
+    }
+
+    /// Record a task issue. Erring on a double-issue keeps a driver bug
+    /// from silently widening what `accept` would admit.
+    pub fn issue(&mut self, session: usize, version: u64) -> Result<()> {
+        let slot = self
+            .outstanding
+            .get_mut(session)
+            .ok_or_else(|| anyhow!("ledger: unknown session {session}"))?;
+        if let Some(v) = slot {
+            bail!("ledger: session {session} already has version {v} outstanding");
+        }
+        *slot = Some(version);
+        Ok(())
+    }
+
+    /// Validate a result against the ledger; on success clears the
+    /// outstanding issue and returns the server-computed staleness.
+    pub fn accept(
+        &mut self,
+        session: usize,
+        base_version: u64,
+        current_version: u64,
+        declared_staleness: u64,
+    ) -> Result<u64> {
+        let slot = self
+            .outstanding
+            .get_mut(session)
+            .ok_or_else(|| anyhow!("ledger: unknown session {session}"))?;
+        match *slot {
+            None => bail!(
+                "session {session}: unsolicited or duplicate result for version {base_version}"
+            ),
+            Some(v) if v != base_version => bail!(
+                "session {session}: result echoes version {base_version}, issued {v} \
+                 (stale or replayed)"
+            ),
+            Some(_) => {}
+        }
+        if base_version > current_version {
+            bail!(
+                "session {session}: version {base_version} is from the future \
+                 (current {current_version})"
+            );
+        }
+        if declared_staleness != 0 {
+            bail!(
+                "session {session}: declared staleness tag {declared_staleness} contradicts \
+                 the lock-step session ledger"
+            );
+        }
+        *slot = None;
+        Ok(current_version - base_version)
+    }
+}
+
+/// State shared between the driver and the session workers.
+struct BufShared {
+    version: u64,
+    global: Arc<ParamContainer>,
+    done: bool,
+    dead: Vec<bool>,
+    /// Results from each session the driver has fully handled (folded,
+    /// quarantined, or discarded). A worker blocks on [`SharedState::cv`]
+    /// until its own count catches up before re-tasking, so the version
+    /// it issues against always reflects every one of its prior folds —
+    /// without this, a session's staleness tags would depend on how fast
+    /// the driver drains its queue, not on the contribution schedule.
+    acked: Vec<u64>,
+}
+
+/// The shared state plus the ack condvar the workers park on.
+struct SharedState {
+    mu: Mutex<BufShared>,
+    cv: Condvar,
+}
+
+/// Session → driver fan-in. Per-sender mpsc FIFO guarantees the driver
+/// sees a session's `Issued` before the matching `Result`.
+enum BufEvent {
+    Issued {
+        client: usize,
+        version: u64,
+    },
+    Result {
+        client: usize,
+        base_version: u64,
+        declared: u64,
+        n_samples: u64,
+        losses: Vec<f32>,
+        contributions: usize,
+        update: ParamContainer,
+        /// Gauge reservation covering `update` while it queues for the
+        /// driver's fold.
+        _mem: GaugeReservation,
+        comm_bytes: u64,
+        seconds: f64,
+    },
+    Failed {
+        client: usize,
+        err: anyhow::Error,
+    },
+}
+
+/// Everything one buffered session worker owns.
+struct BufCtx {
+    idx: usize,
+    conn: ClientConn,
+    filters: Arc<FilterSet>,
+    job: JobConfig,
+    spool: PathBuf,
+    /// Reused inbound chain (dequantize scratch amortizes across folds).
+    result_chain: Option<EntryChain>,
+}
+
+impl Controller {
+    /// The buffered (FedBuff) engine. Same contract as [`Controller::run`]
+    /// — which dispatches here when `job.aggregation.mode` says so — with
+    /// `job.rounds` reinterpreted as the number of global versions to
+    /// publish.
+    pub(crate) fn run_buffered(
+        &mut self,
+        global: ParamContainer,
+        report: &mut Report,
+    ) -> Result<ParamContainer> {
+        self.job.validate().context("invalid job config")?;
+        if self.clients.is_empty() {
+            bail!("no clients registered");
+        }
+        crate::quant::set_encode_threads(self.job.encode_threads);
+        let pool_before = crate::memory::pool::global().snapshot();
+        let n = self.clients.len();
+        self.tasks_sent = vec![0; n];
+        self.rounds.clear();
+
+        let target_versions = self.job.rounds as u64;
+        let buffer_k = self.job.aggregation.buffer_k;
+        let alpha2 = (2.0 * self.job.aggregation.staleness_alpha) as u32;
+        let allow_partial = self.job.round_policy.allow_partial;
+
+        let shared = Arc::new(SharedState {
+            mu: Mutex::new(BufShared {
+                version: 0,
+                global: Arc::new(global.clone()),
+                done: false,
+                dead: vec![false; n],
+                acked: vec![0; n],
+            }),
+            cv: Condvar::new(),
+        });
+        let (evt_tx, evt_rx) = mpsc::channel::<BufEvent>();
+        let conns = std::mem::take(&mut self.clients);
+        let names: Vec<String> = conns.iter().map(|c| c.name.clone()).collect();
+        let subtrees: Vec<usize> = conns.iter().map(|c| c.subtree).collect();
+        let mut handles = Vec::with_capacity(n);
+        for (i, conn) in conns.into_iter().enumerate() {
+            let filters = match &self.filter_factory {
+                Some(f) => Arc::new((**f)()),
+                None => self.filters.clone(),
+            };
+            let ctx = BufCtx {
+                idx: i,
+                conn,
+                filters,
+                job: self.job.clone(),
+                spool: self.spool_dir.clone(),
+                result_chain: None,
+            };
+            let shared = shared.clone();
+            let evt_tx = evt_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("buf-session-{i}"))
+                .spawn(move || buffered_session(ctx, shared, evt_tx))?;
+            handles.push(h);
+        }
+        drop(evt_tx);
+
+        let mut ledger = VersionLedger::new(n);
+        let mut agg =
+            BufferedAggregator::new(ParamContainer::zeros_like(&global), buffer_k, alpha2);
+        let mut latest = global;
+        let t0 = Instant::now();
+        COMM_GAUGE.reset_peak();
+        let mut fatal: Option<anyhow::Error> = None;
+        let mut quarantined = 0u64;
+        let mut failed_total = 0u64;
+        // Per-window (between snapshots) tallies, mirroring RoundStats.
+        let mut win_t0 = Instant::now();
+        let (mut win_loss_sum, mut win_loss_n) = (0f64, 0usize);
+        let mut win_comm = 0u64;
+        let mut win_leaf = 0usize;
+        let mut win_failed = 0usize;
+
+        let retire = |who: usize, sh: &SharedState| {
+            let mut s = sh.mu.lock().unwrap();
+            s.dead[who] = true;
+            if s.dead.iter().all(|&d| d) && !s.done {
+                // Nobody left to reach the target; unblock nothing (all
+                // workers are exiting anyway) but record the state.
+                log::warn!("buffered run: all sessions retired at version {}", s.version);
+            }
+            sh.cv.notify_all();
+        };
+        // Mark a session's result fully handled and wake its worker.
+        let ack = |who: usize, sh: &SharedState| {
+            let mut s = sh.mu.lock().unwrap();
+            s.acked[who] += 1;
+            sh.cv.notify_all();
+        };
+        let flag_done = |sh: &SharedState| {
+            let mut s = sh.mu.lock().unwrap();
+            s.done = true;
+            sh.cv.notify_all();
+        };
+
+        for evt in evt_rx.iter() {
+            match evt {
+                BufEvent::Issued { client, version } => {
+                    // Count every issue (the client-side executed-task
+                    // reconciliation needs it), but don't re-open the
+                    // ledger for a retired session. The ack handshake
+                    // means a worker can no longer issue past its own
+                    // quarantine; this guard is defense in depth.
+                    self.tasks_sent[client] += 1;
+                    if shared.mu.lock().unwrap().dead[client] {
+                        continue;
+                    }
+                    if let Err(e) = ledger.issue(client, version) {
+                        fatal.get_or_insert(e);
+                        flag_done(&shared);
+                    }
+                }
+                BufEvent::Failed { client, err } => {
+                    failed_total += 1;
+                    win_failed += 1;
+                    log::warn!(
+                        "buffered session '{}' failed: {err:#}",
+                        names[client]
+                    );
+                    retire(client, &shared);
+                    if !allow_partial {
+                        fatal.get_or_insert(
+                            err.context(format!("client '{}' failed", names[client])),
+                        );
+                        flag_done(&shared);
+                    }
+                }
+                BufEvent::Result {
+                    client,
+                    base_version,
+                    declared,
+                    n_samples,
+                    losses,
+                    contributions,
+                    update,
+                    _mem,
+                    comm_bytes,
+                    seconds,
+                } => {
+                    let (cur, done) = {
+                        let s = shared.mu.lock().unwrap();
+                        (s.version, s.done)
+                    };
+                    if done {
+                        ack(client, &shared);
+                        continue; // late arrival after the target version
+                    }
+                    let tau = match ledger.accept(client, base_version, cur, declared) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            quarantined += 1;
+                            win_failed += 1;
+                            log::warn!(
+                                "quarantining result from '{}': {e:#}",
+                                names[client]
+                            );
+                            retire(client, &shared);
+                            if !allow_partial {
+                                fatal.get_or_insert(e);
+                                flag_done(&shared);
+                            }
+                            continue;
+                        }
+                    };
+                    // Defense in depth behind the worker-side bail: only
+                    // relay tiers may contribute pre-folded partials.
+                    if subtrees[client] <= 1
+                        && update.iter().any(|(_, t)| t.meta.dtype == DType::Fx128)
+                    {
+                        quarantined += 1;
+                        win_failed += 1;
+                        log::warn!(
+                            "quarantining result from '{}': leaf sent a partial aggregate",
+                            names[client]
+                        );
+                        retire(client, &shared);
+                        continue;
+                    }
+                    let ready = match agg.fold(&update, n_samples, tau) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            quarantined += 1;
+                            win_failed += 1;
+                            log::warn!(
+                                "quarantining result from '{}' at the fold: {e:#}",
+                                names[client]
+                            );
+                            retire(client, &shared);
+                            if !allow_partial {
+                                fatal.get_or_insert(e);
+                                flag_done(&shared);
+                            }
+                            continue;
+                        }
+                    };
+                    report.series_mut("staleness_hist").bump(tau as f64);
+                    report
+                        .series_mut(&format!("client_round_secs/{}", names[client]))
+                        .push(cur as f64, seconds);
+                    for l in &losses {
+                        win_loss_sum += *l as f64;
+                        win_loss_n += 1;
+                    }
+                    win_comm += comm_bytes;
+                    win_leaf += contributions.max(1);
+                    if ready {
+                        let g = match agg.snapshot() {
+                            Ok(g) => g,
+                            Err(e) => {
+                                // Unreachable (`ready` implies a non-empty
+                                // window) but must not strand the workers.
+                                fatal.get_or_insert(e);
+                                flag_done(&shared);
+                                ack(client, &shared);
+                                continue;
+                            }
+                        };
+                        let v = agg.version();
+                        {
+                            let mut s = shared.mu.lock().unwrap();
+                            s.version = v;
+                            s.global = Arc::new(g.clone());
+                            if v >= target_versions {
+                                s.done = true;
+                            }
+                            shared.cv.notify_all();
+                        }
+                        let mean_loss = if win_loss_n > 0 {
+                            (win_loss_sum / win_loss_n as f64) as f32
+                        } else {
+                            f32::NAN
+                        };
+                        report
+                            .series_mut("global_version")
+                            .push(t0.elapsed().as_secs_f64(), v as f64);
+                        report
+                            .series_mut("version_mean_loss")
+                            .push(v as f64, mean_loss as f64);
+                        report
+                            .series_mut("version_comm_bytes")
+                            .push(v as f64, win_comm as f64);
+                        self.rounds.push(RoundStats {
+                            round: (v - 1) as usize,
+                            mean_loss,
+                            comm_bytes: win_comm,
+                            seconds: win_t0.elapsed().as_secs_f64(),
+                            sampled: buffer_k,
+                            completed: buffer_k,
+                            leaf_completed: win_leaf,
+                            failed: win_failed,
+                            stragglers: 0,
+                            peak_comm_bytes: COMM_GAUGE.peak(),
+                        });
+                        COMM_GAUGE.reset_peak();
+                        latest = g;
+                        win_t0 = Instant::now();
+                        (win_loss_sum, win_loss_n) = (0.0, 0);
+                        win_comm = 0;
+                        win_leaf = 0;
+                        win_failed = 0;
+                    }
+                    // Ack strictly after any snapshot this fold caused:
+                    // the worker's next issue then sees the bumped
+                    // version, keeping its staleness schedule-determined.
+                    ack(client, &shared);
+                }
+            }
+        }
+
+        // Channel closed: every worker saw done/dead (or failed) and is
+        // returning its connection after telling the client Done.
+        let mut conns: Vec<Option<ClientConn>> = (0..n).map(|_| None).collect();
+        for h in handles {
+            match h.join() {
+                Ok((i, conn)) => conns[i] = Some(conn),
+                Err(_) => bail!("buffered session worker panicked"),
+            }
+        }
+        self.clients = conns.into_iter().flatten().collect();
+        if let Some(e) = fatal {
+            return Err(e.context("buffered aggregation aborted"));
+        }
+        let final_version = shared.mu.lock().unwrap().version;
+        if final_version < target_versions {
+            if allow_partial && final_version > 0 {
+                log::warn!(
+                    "buffered run ended at version {final_version} of {target_versions} \
+                     (all sessions retired)"
+                );
+            } else {
+                bail!(
+                    "buffered run ended at version {final_version} of {target_versions}: \
+                     every session failed or was quarantined"
+                );
+            }
+        }
+        report.set_scalar("final_version", final_version as f64);
+        report.set_scalar("quarantined_total", quarantined as f64);
+        report.set_scalar("clients_failed_total", failed_total as f64);
+        self.finish_report(report, &pool_before);
+        Ok(latest)
+    }
+}
+
+/// Worker body: continuously re-task the client against the freshest
+/// published global until the driver flags done (or retires us), then
+/// tell the client Done and hand the connection back.
+fn buffered_session(
+    mut ctx: BufCtx,
+    shared: Arc<SharedState>,
+    evt_tx: mpsc::Sender<BufEvent>,
+) -> (usize, ClientConn) {
+    let mut sent = 0u64;
+    loop {
+        let (version, global) = {
+            let mut s = shared.mu.lock().unwrap();
+            // Re-task only once the driver has handled our last result:
+            // the version we train against then reflects every one of
+            // our own folds, so staleness is a pure function of the
+            // contribution schedule, not of driver queue latency.
+            while s.acked[ctx.idx] < sent && !s.done && !s.dead[ctx.idx] {
+                s = shared.cv.wait(s).unwrap();
+            }
+            if s.done || s.dead[ctx.idx] {
+                break;
+            }
+            (s.version, s.global.clone())
+        };
+        if evt_tx
+            .send(BufEvent::Issued {
+                client: ctx.idx,
+                version,
+            })
+            .is_err()
+        {
+            break;
+        }
+        match buffered_exchange(&mut ctx, version, global) {
+            Ok(evt) => {
+                sent += 1;
+                if evt_tx.send(evt).is_err() {
+                    break;
+                }
+            }
+            Err(err) => {
+                let _ = evt_tx.send(BufEvent::Failed {
+                    client: ctx.idx,
+                    err,
+                });
+                break;
+            }
+        }
+    }
+    let _ = ctx.conn.ep.send_ctrl(&CtrlMsg::Done.to_json());
+    (ctx.idx, ctx.conn)
+}
+
+/// One scatter → train-wait → gather exchange under a `VersionedTask`.
+/// The transport legs mirror the synchronous session body exactly; only
+/// the control frames and the whole-contribution assembly differ.
+fn buffered_exchange(
+    ctx: &mut BufCtx,
+    version: u64,
+    global: Arc<ParamContainer>,
+) -> Result<BufEvent> {
+    let t0 = Instant::now();
+    let bytes0 = endpoint_bytes(&ctx.conn.ep);
+    let timeout = ctx.job.transfer_timeout();
+    let mode = ctx.job.streaming;
+    let reliable = ctx.job.reliable;
+    let name = ctx.conn.name.clone();
+
+    // -- scatter --------------------------------------------------------
+    let mut fctx = FilterContext {
+        round: version as usize,
+        peer: name.clone(),
+        ..Default::default()
+    };
+    let out_entry = ctx.job.entry_fold
+        && streaming::entry::entry_capable(&ctx.filters, FilterPoint::TaskDataOutServer);
+    if out_entry {
+        let plan = streaming::outbound_headers(
+            &global,
+            &ctx.filters,
+            FilterPoint::TaskDataOutServer,
+            &mut fctx,
+        )
+        .with_context(|| format!("task-data filters for {name}"))?;
+        ctx.conn.ep.send_ctrl(
+            &CtrlMsg::VersionedTask {
+                version,
+                local_steps: ctx.job.train.local_steps,
+                headers: fctx.point_headers.clone(),
+            }
+            .to_json(),
+        )?;
+        let policy = if reliable {
+            Some(resume_policy(timeout))
+        } else {
+            None
+        };
+        streaming::send_weights_filtered(
+            &ctx.conn.ep,
+            &global,
+            &ctx.filters,
+            FilterPoint::TaskDataOutServer,
+            &fctx,
+            mode,
+            Some(&ctx.spool),
+            policy.as_ref(),
+            Some(&plan),
+        )
+        .with_context(|| format!("send task data to {name}"))?;
+        if !reliable {
+            let _ = ctx.conn.ep.recv_event(Some(timeout))?;
+        }
+    } else {
+        let msg = ctx
+            .filters
+            .apply(
+                FilterPoint::TaskDataOutServer,
+                WeightsMsg::Plain((*global).clone()),
+                &mut fctx,
+            )
+            .with_context(|| format!("task-data filters for {name}"))?;
+        ctx.conn.ep.send_ctrl(
+            &CtrlMsg::VersionedTask {
+                version,
+                local_steps: ctx.job.train.local_steps,
+                headers: fctx.point_headers.clone(),
+            }
+            .to_json(),
+        )?;
+        if reliable {
+            streaming::send_weights_resumable(
+                &ctx.conn.ep,
+                &msg,
+                mode,
+                Some(&ctx.spool),
+                &resume_policy(timeout),
+            )
+            .with_context(|| format!("send task data to {name}"))?;
+        } else {
+            streaming::send_weights(&ctx.conn.ep, &msg, mode, Some(&ctx.spool))
+                .with_context(|| format!("send task data to {name}"))?;
+            let _ = ctx.conn.ep.recv_event(Some(timeout))?;
+        }
+    }
+    drop(global);
+
+    // -- gather ---------------------------------------------------------
+    let train_wait = if ctx.conn.subtree > 1 {
+        timeout.saturating_mul(SUBTREE_WAIT_FACTOR)
+    } else {
+        timeout
+    };
+    let ctrl = CtrlMsg::from_json(&ctx.conn.ep.recv_ctrl(Some(train_wait))?)?;
+    let (base_version, declared, n_samples, losses, contributions, headers) = match ctrl {
+        CtrlMsg::VersionedResult {
+            version: v,
+            n_samples,
+            staleness,
+            losses,
+            contributions,
+            headers,
+            ..
+        } => (v, staleness, n_samples, losses, contributions, headers),
+        other => bail!("expected versioned result from {name}, got {other:?}"),
+    };
+
+    let mut rctx = FilterContext {
+        round: version as usize,
+        peer: name.clone(),
+        point_headers: headers,
+    };
+    if ctx.job.entry_fold && ctx.result_chain.is_none() {
+        ctx.result_chain = ctx.filters.entry_chain(FilterPoint::TaskResultInServer);
+    }
+    let update = if ctx.job.entry_fold && ctx.result_chain.is_some() {
+        // Entry-streamed receive, whole-contribution assemble: the
+        // driver folds strictly in arrival order, so the stream cannot
+        // fold in place (v1 trade-off, see the module docs).
+        let mut asm = EntryAssembler::default();
+        let chain = ctx.result_chain.as_mut().expect("checked above");
+        streaming::recv_weights_filtered(
+            &ctx.conn.ep,
+            chain,
+            &mut rctx,
+            Some(ctx.spool.as_path()),
+            reliable,
+            Some(timeout),
+            &mut |idx, ename, t| {
+                asm.put(idx, Entry::Plain(ename, t))?;
+                Ok(EntryFlow::Continue)
+            },
+        )
+        .with_context(|| format!("receive result from {name}"))?;
+        match asm.into_msg().with_context(|| format!("assemble result from {name}"))? {
+            WeightsMsg::Plain(p) => p,
+            WeightsMsg::Quantized(_) => {
+                bail!("result still quantized after inbound filters")
+            }
+        }
+    } else {
+        let (msg, _stats) = if reliable {
+            streaming::recv_weights_resumable(&ctx.conn.ep, Some(&ctx.spool), Some(timeout))
+                .with_context(|| format!("receive result from {name}"))?
+        } else {
+            streaming::recv_weights(&ctx.conn.ep, Some(&ctx.spool))
+                .with_context(|| format!("receive result from {name}"))?
+        };
+        let msg = ctx
+            .filters
+            .apply(FilterPoint::TaskResultInServer, msg, &mut rctx)?;
+        match msg {
+            WeightsMsg::Plain(p) => p,
+            WeightsMsg::Quantized(_) => {
+                bail!("result still quantized after inbound filters — chain misconfigured")
+            }
+        }
+    };
+    if ctx.conn.subtree <= 1 && update.iter().any(|(_, t)| t.meta.dtype == DType::Fx128) {
+        bail!("leaf client {name} sent a partial aggregate (only relay tiers may pre-fold)");
+    }
+    let mem = GaugeReservation::new(&COMM_GAUGE, update.total_bytes());
+    Ok(BufEvent::Result {
+        client: ctx.idx,
+        base_version,
+        declared,
+        n_samples,
+        losses,
+        contributions,
+        update,
+        _mem: mem,
+        comm_bytes: endpoint_bytes(&ctx.conn.ep).saturating_sub(bytes0),
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_spec::ModelSpec;
+    use crate::tensor::init::materialize;
+
+    #[test]
+    fn staleness_weight_is_exact_on_the_grid() {
+        // τ = 0: exactly base · 2^32 for any α.
+        for alpha2 in [0u32, 1, 2, 3, 8] {
+            assert_eq!(
+                staleness_weight_fx(100, 0, alpha2).unwrap(),
+                100 * W_ONE,
+                "alpha2 = {alpha2}"
+            );
+        }
+        // Integer α (alpha2 even): (1+τ)^(2α) is a perfect square, so
+        // the weight is exactly ⌊base · 2^32 / (1+τ)^α⌋.
+        for (base, tau, alpha, expect) in [
+            (100u64, 1u64, 1u32, 100 * W_ONE / 2),
+            (100, 3, 1, 100 * W_ONE / 4),
+            (7, 2, 2, 7 * W_ONE / 9),
+            (1, 9, 1, W_ONE / 10),
+        ] {
+            assert_eq!(
+                staleness_weight_fx(base, tau, 2 * alpha).unwrap(),
+                expect,
+                "base {base}, τ {tau}, α {alpha}"
+            );
+        }
+        // Half-step α = ½: w(τ=3) = base·2^32/√4 = base·2^31 exactly.
+        assert_eq!(staleness_weight_fx(8, 3, 1).unwrap(), 8 * W_ONE / 2);
+        // Monotone decreasing in τ.
+        let ws: Vec<u128> = (0..6)
+            .map(|t| staleness_weight_fx(50, t, 1).unwrap())
+            .collect();
+        assert!(ws.windows(2).all(|w| w[1] < w[0]), "{ws:?}");
+        // Degenerate inputs err cleanly.
+        assert!(staleness_weight_fx(0, 0, 2).is_err());
+        assert!(staleness_weight_fx(MAX_WEIGHT + 1, 0, 2).is_err());
+        // Too stale for the grid: (1+τ)^16 ≥ 2^64.
+        assert!(staleness_weight_fx(10, 100, 16).is_err());
+    }
+
+    #[test]
+    fn isqrt_is_exact_floor() {
+        for n in 0u128..200 {
+            let r = isqrt_u128(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "n = {n}");
+        }
+        for p in [1u128 << 64, (1u128 << 64) + 1, u128::MAX] {
+            let r = isqrt_u128(p);
+            assert!(r * r <= p);
+            let r1 = r + 1; // r ≤ 2^64 − 1, so r + 1 cannot overflow
+            if let Some(sq) = r1.checked_mul(r1) {
+                assert!(sq > p);
+            }
+        }
+        assert_eq!(isqrt_u128(1u128 << 64), 1u128 << 32);
+    }
+
+    #[test]
+    fn weighted_terms_have_no_float_path() {
+        // The f32 term must equal the all-integer reference computed
+        // with full-width arithmetic on small magnitudes.
+        for (x, w) in [(0.5f32, 3 * W_ONE), (-0.25, W_ONE / 2), (1.0, 7 * W_ONE / 3)] {
+            let fixed = ((x as f64) * FIXED_ONE) as i128;
+            let expect_mag = (w * fixed.unsigned_abs()) >> 32;
+            let got = weighted_term_f32(x, w).unwrap();
+            assert_eq!(got.unsigned_abs(), expect_mag, "x {x}, w {w}");
+            assert_eq!(got < 0, x < 0.0);
+        }
+        // Hostile values err, they don't poison.
+        assert!(weighted_term_f32(f32::NAN, W_ONE).is_err());
+        assert!(weighted_term_f32(f32::INFINITY, W_ONE).is_err());
+        assert!(weighted_term_f32(1e30, W_ONE).is_err());
+    }
+
+    #[test]
+    fn fold_is_arrival_order_invariant() {
+        let spec = ModelSpec::llama_mini();
+        let contribs: Vec<(ParamContainer, u64, u64)> = (0u64..5)
+            .map(|i| (materialize(&spec, 300 + i), 10 + i, i % 3))
+            .collect();
+        let snap = |order: &[usize]| {
+            let mut agg = BufferedAggregator::new(
+                ParamContainer::zeros_like(&contribs[0].0),
+                contribs.len(),
+                1, // α = ½
+            );
+            let mut ready = false;
+            for &i in order {
+                let (c, w, tau) = &contribs[i];
+                ready = agg.fold(c, *w, *tau).unwrap();
+            }
+            assert!(ready);
+            agg.snapshot().unwrap()
+        };
+        let a = snap(&[0, 1, 2, 3, 4]);
+        let b = snap(&[4, 2, 0, 3, 1]);
+        let c = snap(&[1, 0, 4, 2, 3]);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "permutation changed the snapshot");
+        assert_eq!(a.max_abs_diff(&c), 0.0, "permutation changed the snapshot");
+    }
+
+    #[test]
+    fn fold_quarantines_atomically() {
+        let spec = ModelSpec::llama_mini();
+        let good = materialize(&spec, 1);
+        let mut agg = BufferedAggregator::new(ParamContainer::zeros_like(&good), 2, 1);
+        agg.fold(&good, 5, 0).unwrap();
+        let before_pending = agg.pending();
+        // NaN mid-container must leave the accumulator untouched.
+        let mut bad = materialize(&spec, 2);
+        let last = bad.names().last().unwrap().to_string();
+        bad.get_mut(&last).unwrap().as_f32_mut()[0] = f32::NAN;
+        assert!(agg.fold(&bad, 5, 0).is_err());
+        assert_eq!(agg.pending(), before_pending);
+        // Zero weight and geometry mismatches quarantine too.
+        assert!(agg.fold(&good, 0, 0).is_err());
+        // ...and an honest second fold still completes the window.
+        assert!(agg.fold(&good, 5, 0).unwrap());
+        let g = agg.snapshot().unwrap();
+        // Equal contributions with equal weight: the mean is the value.
+        assert!(g.max_abs_diff(&good) < 1e-6);
+        assert_eq!(agg.version(), 1);
+    }
+
+    #[test]
+    fn ledger_quarantines_protocol_violations() {
+        let mut l = VersionLedger::new(2);
+        l.issue(0, 3).unwrap();
+        // Stale echo (client answers an older version than issued).
+        assert!(l.accept(0, 2, 5, 0).is_err());
+        // Version from the future.
+        l.issue(1, 9).unwrap();
+        assert!(l.accept(1, 9, 5, 0).is_err());
+        // Nonzero declared staleness tag contradicts lock-step sessions.
+        assert!(l.accept(0, 3, 5, 2).is_err());
+        // The honest path: τ = current − base.
+        assert_eq!(l.accept(0, 3, 5, 0).unwrap(), 2);
+        // Duplicate re-send of the same result.
+        assert!(l.accept(0, 3, 5, 0).is_err());
+        // Unsolicited result (never issued).
+        let mut l2 = VersionLedger::new(1);
+        assert!(l2.accept(0, 0, 0, 0).is_err());
+        // Double-issue is a driver bug, caught loudly.
+        let mut l3 = VersionLedger::new(1);
+        l3.issue(0, 1).unwrap();
+        assert!(l3.issue(0, 2).is_err());
+    }
+
+    #[test]
+    fn snapshot_resets_the_window() {
+        let spec = ModelSpec::llama_mini();
+        let c = materialize(&spec, 7);
+        let mut agg = BufferedAggregator::new(ParamContainer::zeros_like(&c), 1, 0);
+        assert!(agg.snapshot().is_err(), "empty window cannot snapshot");
+        assert!(agg.fold(&c, 3, 0).unwrap());
+        let g1 = agg.snapshot().unwrap();
+        assert!(g1.max_abs_diff(&c) < 1e-6);
+        // The next window starts from zero, not from the last sums.
+        let c2 = materialize(&spec, 8);
+        assert!(agg.fold(&c2, 9, 0).unwrap());
+        let g2 = agg.snapshot().unwrap();
+        assert!(g2.max_abs_diff(&c2) < 1e-6);
+        assert_eq!(agg.version(), 2);
+    }
+}

@@ -58,8 +58,10 @@ pub struct Controller {
     pub job: JobConfig,
     /// Base filter set, shared by all sessions unless a per-session
     /// factory is installed ([`Controller::with_filter_factory`]).
-    filters: Arc<FilterSet>,
-    filter_factory: Option<FilterFactory>,
+    /// `pub(crate)`: the buffered engine (`super::buffered`) builds its
+    /// session workers from the same fields.
+    pub(crate) filters: Arc<FilterSet>,
+    pub(crate) filter_factory: Option<FilterFactory>,
     pub clients: Vec<ClientConn>,
     pub spool_dir: PathBuf,
     /// Round statistics, filled during `run`.
@@ -229,6 +231,11 @@ impl Controller {
         global: ParamContainer,
         report: &mut Report,
     ) -> Result<ParamContainer> {
+        // Buffered (FedBuff) aggregation is a different control plane:
+        // no round barrier, fold-on-arrival, versioned snapshots.
+        if self.job.aggregation.mode == crate::config::AggregationMode::Buffered {
+            return self.run_buffered(global, report);
+        }
         // Fail fast on misconfiguration (sample_fraction, quorum,
         // timeouts, topology): a clear error here beats a mid-round
         // surprise three transfers in.
@@ -294,6 +301,18 @@ impl Controller {
         }
         self.clients = conns.into_iter().flatten().collect();
 
+        self.finish_report(report, &pool_before);
+        Ok(global)
+    }
+
+    /// Run-wide report scalars, written once the sessions are reaped.
+    /// Shared with the buffered engine (`super::buffered`), whose version
+    /// snapshots land in `self.rounds` just like synchronous rounds.
+    pub(crate) fn finish_report(
+        &self,
+        report: &mut Report,
+        pool_before: &crate::memory::pool::PoolSnapshot,
+    ) {
         report.set_scalar("total_comm_bytes", self.comm_bytes() as f64);
         report.set_scalar(
             "final_loss",
@@ -341,9 +360,8 @@ impl Controller {
         );
         // Buffer-pool health over this run: the fraction of hot-path
         // buffer takes served without an allocation (steady state ≈ 1.0).
-        let pool_traffic = crate::memory::pool::global().snapshot().since(&pool_before);
+        let pool_traffic = crate::memory::pool::global().snapshot().since(pool_before);
         report.set_scalar("pool_hit_rate", pool_traffic.hit_rate());
-        Ok(global)
     }
 
     /// The per-round loop: sample, issue commands, fan-in results with
@@ -1150,7 +1168,7 @@ fn run_client_round(
     }
 }
 
-fn endpoint_bytes(ep: &SfmEndpoint) -> u64 {
+pub(crate) fn endpoint_bytes(ep: &SfmEndpoint) -> u64 {
     ep.stats.bytes_sent.load(Ordering::Relaxed) + ep.stats.bytes_received.load(Ordering::Relaxed)
 }
 

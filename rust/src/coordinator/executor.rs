@@ -91,12 +91,21 @@ impl<T: LocalTrainer> Executor<T> {
             // transfers. A dead server surfaces as a driver error (TCP
             // reset / closed channel), not as a hang.
             let ctrl = CtrlMsg::from_json(&self.ep.recv_ctrl(None)?)?;
-            let (round, local_steps, headers) = match ctrl {
+            let (round, local_steps, headers, version) = match ctrl {
                 CtrlMsg::Task {
                     round,
                     local_steps,
                     headers,
-                } => (round, local_steps, headers),
+                } => (round, local_steps, headers, None),
+                // Buffered (FedBuff) aggregation: the global version
+                // replaces the round number. The task body is identical —
+                // only the result frame differs (it echoes the version so
+                // the server's ledger can compute staleness).
+                CtrlMsg::VersionedTask {
+                    version,
+                    local_steps,
+                    headers,
+                } => (version as usize, local_steps, headers, Some(version)),
                 CtrlMsg::NoTask { round } => {
                     log::debug!("client '{}': not sampled in round {round}", self.name);
                     continue;
@@ -187,15 +196,9 @@ impl<T: LocalTrainer> Executor<T> {
                 )
                 .context("task-result filters")?;
                 self.ep.send_ctrl(
-                    &CtrlMsg::Result {
-                        round,
-                        client: self.name.clone(),
-                        n_samples: self.trainer.n_samples(),
-                        losses,
-                        contributions: 1,
-                        headers: out_ctx.point_headers.clone(),
-                    }
-                    .to_json(),
+                    &self
+                        .result_ctrl(version, round, losses, out_ctx.point_headers.clone())
+                        .to_json(),
                 )?;
                 let policy = if self.reliable {
                     Some(resume_policy(self.timeout))
@@ -224,15 +227,9 @@ impl<T: LocalTrainer> Executor<T> {
                     &mut out_ctx,
                 )?;
                 self.ep.send_ctrl(
-                    &CtrlMsg::Result {
-                        round,
-                        client: self.name.clone(),
-                        n_samples: self.trainer.n_samples(),
-                        losses,
-                        contributions: 1,
-                        headers: out_ctx.point_headers.clone(),
-                    }
-                    .to_json(),
+                    &self
+                        .result_ctrl(version, round, losses, out_ctx.point_headers.clone())
+                        .to_json(),
                 )?;
                 if self.reliable {
                     streaming::send_weights_resumable(
@@ -250,6 +247,38 @@ impl<T: LocalTrainer> Executor<T> {
                 }
             }
             rounds += 1;
+        }
+    }
+
+    /// The result control frame: `Result` for a synchronous round,
+    /// `VersionedResult` echoing the task's version under buffered
+    /// aggregation. A lock-step client always declares staleness 0 — the
+    /// server computes the real τ from its ledger.
+    fn result_ctrl(
+        &self,
+        version: Option<u64>,
+        round: usize,
+        losses: Vec<f32>,
+        headers: std::collections::BTreeMap<String, Json>,
+    ) -> CtrlMsg {
+        match version {
+            Some(v) => CtrlMsg::VersionedResult {
+                version: v,
+                client: self.name.clone(),
+                n_samples: self.trainer.n_samples(),
+                staleness: 0,
+                losses,
+                contributions: 1,
+                headers,
+            },
+            None => CtrlMsg::Result {
+                round,
+                client: self.name.clone(),
+                n_samples: self.trainer.n_samples(),
+                losses,
+                contributions: 1,
+                headers,
+            },
         }
     }
 

@@ -5,6 +5,7 @@
 //! streaming mode.
 
 pub mod aggregator;
+pub mod buffered;
 pub mod controller;
 pub mod executor;
 pub mod protocol;

@@ -43,6 +43,32 @@ pub enum CtrlMsg {
         contributions: usize,
         headers: BTreeMap<String, Json>,
     },
+    /// Server → client under buffered (FedBuff) aggregation: train
+    /// against global `version` (weights object on the wire next). The
+    /// version replaces the round number — clients echo it back so the
+    /// server's ledger can compute staleness at fold time.
+    VersionedTask {
+        version: u64,
+        local_steps: usize,
+        headers: BTreeMap<String, Json>,
+    },
+    /// Client (or relay) → server under buffered aggregation: a
+    /// contribution trained against global `version` follows.
+    /// `staleness` is the sender's *declared* extra staleness (a relay
+    /// forwarding partials it pre-folded tags how stale they were when
+    /// it folded them; an ordinary lock-step client always declares 0).
+    /// The server cross-checks the declaration against its version
+    /// ledger and quarantines mismatches — it is advisory, never
+    /// trusted arithmetic input.
+    VersionedResult {
+        version: u64,
+        client: String,
+        n_samples: u64,
+        staleness: u64,
+        losses: Vec<f32>,
+        contributions: usize,
+        headers: BTreeMap<String, Json>,
+    },
     /// Server → client: training finished.
     Done,
 }
@@ -93,6 +119,37 @@ impl CtrlMsg {
                 ("round", Json::num(*round as f64)),
                 ("client", Json::str(client.clone())),
                 ("n_samples", Json::num(*n_samples as f64)),
+                (
+                    "losses",
+                    Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect()),
+                ),
+                ("contributions", Json::num(*contributions as f64)),
+                ("headers", headers_to_json(headers)),
+            ]),
+            CtrlMsg::VersionedTask {
+                version,
+                local_steps,
+                headers,
+            } => Json::obj(vec![
+                ("op", Json::str("vtask")),
+                ("version", Json::num(*version as f64)),
+                ("local_steps", Json::num(*local_steps as f64)),
+                ("headers", headers_to_json(headers)),
+            ]),
+            CtrlMsg::VersionedResult {
+                version,
+                client,
+                n_samples,
+                staleness,
+                losses,
+                contributions,
+                headers,
+            } => Json::obj(vec![
+                ("op", Json::str("vresult")),
+                ("version", Json::num(*version as f64)),
+                ("client", Json::str(client.clone())),
+                ("n_samples", Json::num(*n_samples as f64)),
+                ("staleness", Json::num(*staleness as f64)),
                 (
                     "losses",
                     Json::Arr(losses.iter().map(|&l| Json::num(l as f64)).collect()),
@@ -165,6 +222,43 @@ impl CtrlMsg {
                     .max(1),
                 headers: headers_from_json(j.get("headers")),
             },
+            "vtask" => CtrlMsg::VersionedTask {
+                // No legacy default: a versioned task without its version
+                // is meaningless, so parsing bails (hostile-input tests).
+                version: j
+                    .get("version")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("vtask without version"))?,
+                local_steps: j
+                    .get("local_steps")
+                    .and_then(|r| r.as_usize())
+                    .unwrap_or(1),
+                headers: headers_from_json(j.get("headers")),
+            },
+            "vresult" => CtrlMsg::VersionedResult {
+                version: j
+                    .get("version")
+                    .and_then(|v| v.as_u64())
+                    .ok_or_else(|| anyhow!("vresult without version"))?,
+                client: j
+                    .get("client")
+                    .and_then(|c| c.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                n_samples: j.get("n_samples").and_then(|n| n.as_u64()).unwrap_or(1),
+                staleness: j.get("staleness").and_then(|s| s.as_u64()).unwrap_or(0),
+                losses: j
+                    .get("losses")
+                    .and_then(|l| l.as_arr())
+                    .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
+                    .unwrap_or_default(),
+                contributions: j
+                    .get("contributions")
+                    .and_then(|c| c.as_usize())
+                    .unwrap_or(1)
+                    .max(1),
+                headers: headers_from_json(j.get("headers")),
+            },
             "done" => CtrlMsg::Done,
             other => bail!("unknown ctrl op '{other}'"),
         })
@@ -213,6 +307,20 @@ mod tests {
                 contributions: 4,
                 headers,
             },
+            CtrlMsg::VersionedTask {
+                version: 7,
+                local_steps: 10,
+                headers: BTreeMap::new(),
+            },
+            CtrlMsg::VersionedResult {
+                version: 7,
+                client: "site-1".into(),
+                n_samples: 250,
+                staleness: 2,
+                losses: vec![1.5, 1.25],
+                contributions: 1,
+                headers: BTreeMap::new(),
+            },
             CtrlMsg::Done,
         ];
         for m in msgs {
@@ -237,6 +345,25 @@ mod tests {
         let j = Json::parse(r#"{"op":"result","round":0,"client":"site-9"}"#).unwrap();
         match CtrlMsg::from_json(&j).unwrap() {
             CtrlMsg::Result { contributions, .. } => assert_eq!(contributions, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn versioned_messages_require_a_version() {
+        // A versioned frame with the version stripped must bail, not
+        // default — there is no meaningful legacy fallback.
+        assert!(CtrlMsg::from_json(&Json::parse(r#"{"op":"vtask"}"#).unwrap()).is_err());
+        assert!(
+            CtrlMsg::from_json(&Json::parse(r#"{"op":"vresult","client":"x"}"#).unwrap()).is_err()
+        );
+        // ...while staleness defaults to 0 for plain clients.
+        let j = Json::parse(r#"{"op":"vresult","version":3,"client":"site-1"}"#).unwrap();
+        match CtrlMsg::from_json(&j).unwrap() {
+            CtrlMsg::VersionedResult { staleness, version, .. } => {
+                assert_eq!(staleness, 0);
+                assert_eq!(version, 3);
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -6,7 +6,7 @@
 use super::controller::Controller;
 use super::executor::Executor;
 use super::LocalTrainer;
-use crate::config::{JobConfig, NetProfile};
+use crate::config::{FaultProfile, JobConfig, NetProfile};
 use crate::filter::{FilterFactory, FilterSet};
 use crate::metrics::Report;
 use crate::sfm::{inmem, netsim, SfmEndpoint};
@@ -26,6 +26,17 @@ pub struct SimResult {
     pub report: Report,
 }
 
+/// Per-client link shaping for heterogeneous-fleet scenarios — the
+/// asynchronous-aggregation experiments' seeded 100:1 speed spread with
+/// churn ([`crate::sfm::netsim::speed_spread`] /
+/// [`crate::sfm::netsim::churn_plan`] build these). A uniform run uses
+/// the job's own `net` / `fault` via [`run_simulation`].
+#[derive(Debug, Clone, Copy)]
+pub struct LinkPlan {
+    pub net: NetProfile,
+    pub fault: FaultProfile,
+}
+
 /// Run a complete federated job in-process.
 ///
 /// * `job` — rounds, clients, streaming mode, chunk size, net profile.
@@ -39,10 +50,31 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
     make_trainer: TrainerFactory<T>,
     make_filters: impl Fn() -> FilterSet + Send + Sync + 'static,
 ) -> Result<SimResult> {
+    run_simulation_with_links(job, initial, make_trainer, make_filters, None)
+}
+
+/// [`run_simulation`] with an optional per-client link plan overriding
+/// the job's uniform `net` / `fault` (flat topology only — tree runs
+/// shape links per tier in the topology subsystem).
+pub fn run_simulation_with_links<T: LocalTrainer + 'static>(
+    job: &JobConfig,
+    initial: ParamContainer,
+    make_trainer: TrainerFactory<T>,
+    make_filters: impl Fn() -> FilterSet + Send + Sync + 'static,
+    links: Option<Vec<LinkPlan>>,
+) -> Result<SimResult> {
     // Fail fast on misconfiguration — a clear error here beats a
     // mid-round surprise three transfers in.
     job.validate()?;
+    if let Some(l) = &links {
+        if l.len() != job.clients {
+            bail!("link plan covers {} clients, job has {}", l.len(), job.clients);
+        }
+    }
     if job.topology.is_tree() {
+        if links.is_some() {
+            bail!("per-client link plans are flat-topology only");
+        }
         // Hierarchical relay tier: the multi-tier wiring lives in the
         // topology subsystem; the result contract is identical.
         return crate::topology::sim::run_tree_simulation(job, initial, make_trainer, make_filters)
@@ -59,19 +91,23 @@ pub fn run_simulation<T: LocalTrainer + 'static>(
         .with_filter_factory(make_filters.clone());
     let mut client_handles = Vec::new();
     for i in 0..job.clients {
+        let (net, fault) = match &links {
+            Some(l) => (l[i].net, l[i].fault),
+            None => (job.net, job.fault),
+        };
         // Larger in-flight window when faults are on: retransmission
         // bursts must not deadlock against a blocked reverse path.
-        let mut pair = inmem::pair(if job.fault.is_none() { 64 } else { 1024 });
-        if job.net != NetProfile::UNLIMITED {
-            pair = netsim::shape_pair(pair, job.net);
+        let mut pair = inmem::pair(if fault.is_none() { 64 } else { 1024 });
+        if net != NetProfile::UNLIMITED {
+            pair = netsim::shape_pair(pair, net);
         }
-        if !job.fault.is_none() {
+        if !fault.is_none() {
             // Independent deterministic fault streams per client and
             // direction (server→client salt 2i, client→server 2i+1).
             let (faulted, _sa, _sb) = netsim::fault_pair(
                 pair,
-                job.fault.reseeded(2 * i as u64),
-                job.fault.reseeded(2 * i as u64 + 1),
+                fault.reseeded(2 * i as u64),
+                fault.reseeded(2 * i as u64 + 1),
             );
             pair = faulted;
         }

@@ -45,7 +45,9 @@ COMMANDS:
                 --sample-fraction 1.0 --min-clients 0 --round-deadline 0
                 --allow-partial[=false] --transfer-timeout 600
                 --entry-fold true|false --encode-threads 0
-                --topology flat|tree --branching 4]
+                --topology flat|tree --branching 4
+                --aggregation-mode sync|buffered --buffer-k 4
+                --staleness-alpha 0.5]
   server        --listen 127.0.0.1:7777 --job <file>
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
@@ -145,6 +147,16 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
             .map_err(|_| anyhow!("branching: expected integer, got '{b}'"))?;
         job.topology = flare::config::Topology::Tree { branching };
     }
+    // Asynchronous buffered (FedBuff) aggregation: `--aggregation-mode
+    // buffered --buffer-k 4 --staleness-alpha 0.5` replaces the round
+    // barrier with staleness-weighted folds on arrival.
+    if let Some(m) = args.get("aggregation-mode") {
+        job.aggregation.mode = flare::config::AggregationMode::from_name(m)
+            .ok_or_else(|| anyhow!("bad aggregation-mode '{m}' (sync|buffered)"))?;
+    }
+    job.aggregation.buffer_k = args.get_usize("buffer-k", job.aggregation.buffer_k);
+    job.aggregation.staleness_alpha =
+        args.get_f64("staleness-alpha", job.aggregation.staleness_alpha);
     // Quantization kernel parallelism (0 = auto).
     job.encode_threads = args.get_usize("encode-threads", job.encode_threads);
     job.validate()?;

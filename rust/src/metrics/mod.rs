@@ -28,6 +28,17 @@ impl Series {
         self.points.iter().map(|p| p.1).sum()
     }
 
+    /// Histogram-style increment: bump the y of the point whose x equals
+    /// `x` (push a fresh `(x, 1)` bucket if none exists). Keeps sparse
+    /// integer histograms — e.g. staleness counts — as an ordinary
+    /// series without a second container type.
+    pub fn bump(&mut self, x: f64) {
+        match self.points.iter_mut().find(|p| p.0 == x) {
+            Some(p) => p.1 += 1.0,
+            None => self.points.push((x, 1.0)),
+        }
+    }
+
     pub fn mean_tail(&self, n: usize) -> f64 {
         let k = self.points.len().min(n);
         if k == 0 {

@@ -246,6 +246,64 @@ impl Driver for FaultDriver {
     }
 }
 
+/// A deterministic heterogeneous-fleet bandwidth plan: `n` profiles
+/// log-uniformly spread over `[base_bps / ratio, base_bps]`, assigned to
+/// client slots by a seeded shuffle. `ratio = 100.0` reproduces the
+/// 100:1 fast/slow spread of the asynchronous-aggregation experiments —
+/// the spread itself is exact (fastest/slowest always differ by
+/// `ratio`); only *which* slot is slow depends on the seed.
+pub fn speed_spread(base_bps: u64, ratio: f64, n: usize, seed: u64) -> Vec<NetProfile> {
+    assert!(base_bps > 0 && ratio >= 1.0, "need base_bps > 0, ratio >= 1");
+    let mut profiles: Vec<NetProfile> = (0..n)
+        .map(|i| {
+            // log-spaced ladder from slowest (i = 0) to fastest (i = n-1)
+            let f = if n > 1 { i as f64 / (n - 1) as f64 } else { 1.0 };
+            let bps = (base_bps as f64 / ratio.powf(1.0 - f)).max(1.0) as u64;
+            NetProfile {
+                bandwidth_bps: bps,
+                latency_us: 0,
+            }
+        })
+        .collect();
+    // Seeded Fisher–Yates: the slot→speed assignment is a pure function
+    // of the seed.
+    let mut rng = SplitMix64::new(seed ^ 0x5EED_5EED_5EED_5EED);
+    for i in (1..n).rev() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        profiles.swap(i, j);
+    }
+    profiles
+}
+
+/// A deterministic churn plan: per-client fault profiles where every
+/// client whose seeded coin lands under `churn_fraction` gets `base`'s
+/// drop/dup/reorder schedule plus a mid-transfer blackout
+/// (`disconnect_at_bytes`), and the rest run clean. Pair with
+/// [`FaultProfile::reseeded`] per direction as usual.
+pub fn churn_plan(
+    base: FaultProfile,
+    n: usize,
+    churn_fraction: f64,
+    disconnect_at_bytes: u64,
+    disconnect_frames: u64,
+    seed: u64,
+) -> Vec<FaultProfile> {
+    let mut rng = SplitMix64::new(seed ^ 0xC4_u64.rotate_left(17));
+    (0..n)
+        .map(|i| {
+            let coin = (rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64;
+            if coin < churn_fraction {
+                let mut f = base.reseeded(i as u64);
+                f.disconnect_at_bytes = disconnect_at_bytes;
+                f.disconnect_frames = disconnect_frames;
+                f
+            } else {
+                FaultProfile::NONE
+            }
+        })
+        .collect()
+}
+
 /// Wrap the a→b direction of a pair with `plan_a` and the b→a direction
 /// with `plan_b`. Returns the pair plus both fault-counter handles.
 pub fn fault_pair(
@@ -437,5 +495,43 @@ mod tests {
         let missing: Vec<u64> = (0..20).filter(|s| !seqs.contains(s)).collect();
         assert_eq!(missing.len(), 3);
         assert_eq!(missing[2] - missing[0], 2, "blackout must be contiguous: {missing:?}");
+    }
+
+    #[test]
+    fn speed_spread_is_seeded_and_exact() {
+        let bps = |v: &[NetProfile]| v.iter().map(|p| p.bandwidth_bps).collect::<Vec<_>>();
+        let a = speed_spread(100_000_000, 100.0, 8, 7);
+        assert_eq!(a.len(), 8);
+        // determinism: same seed, same slot assignment
+        assert_eq!(bps(&a), bps(&speed_spread(100_000_000, 100.0, 8, 7)));
+        // the spread itself is exact regardless of the shuffle
+        let min = a.iter().map(|p| p.bandwidth_bps).min().unwrap();
+        let max = a.iter().map(|p| p.bandwidth_bps).max().unwrap();
+        assert_eq!(max, 100_000_000);
+        assert_eq!(max, min * 100);
+        // ratio 1 degenerates to a homogeneous fleet
+        let flat = speed_spread(5_000, 1.0, 4, 3);
+        assert!(flat.iter().all(|p| p.bandwidth_bps == 5_000));
+    }
+
+    #[test]
+    fn churn_plan_is_seeded_and_bounded() {
+        let base = FaultProfile {
+            seed: 9,
+            drop_rate: 0.05,
+            ..FaultProfile::NONE
+        };
+        let all = churn_plan(base, 16, 1.0, 4096, 5, 1);
+        assert!(all.iter().all(|f| f.disconnect_at_bytes == 4096 && f.disconnect_frames == 5));
+        // reseeded per client: no two churned clients share a schedule
+        assert_ne!(all[0].seed, all[1].seed);
+        let none = churn_plan(base, 16, 0.0, 4096, 5, 1);
+        assert!(none.iter().all(|f| f.is_none()));
+        // determinism: same seed, same victim set
+        let a = churn_plan(base, 16, 0.5, 4096, 5, 42);
+        let b = churn_plan(base, 16, 0.5, 4096, 5, 42);
+        let victims =
+            |v: &[FaultProfile]| v.iter().map(|f| !f.is_none()).collect::<Vec<_>>();
+        assert_eq!(victims(&a), victims(&b));
     }
 }

@@ -828,6 +828,34 @@ mod tests {
     }
 
     #[test]
+    fn fx128_partial_hostile_shapes_rejected() {
+        // Per-dimension cap: a dimension that only fits u64 is rejected
+        // before the element count can wrap into something allocatable.
+        let buf = hostile_entry(2, &[u64::MAX / 4, 8], 6, 0, 0, 0, 32, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Saturated shape product beyond the element cap, fx128 flavor.
+        let buf = hostile_entry(2, &[u32::MAX as u64, u32::MAX as u64], 6, 0, 0, 0, 32, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Rank-0 partial must still demand exactly one 16-byte element.
+        let buf = hostile_entry(0, &[], 6, 0, 0, 0, 15, &[0u8; 64]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // A partial smuggling a codebook alongside plain Q64.64 data.
+        let buf = hostile_entry(1, &[2], 6, 0, 0, 16, 32, &[0u8; 128]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Honest fx128 header whose payload is cut mid-element: fails at
+        // end-of-input, never a partial tensor.
+        let t = Tensor::from_i128(vec![4], &[1, 2, 3, 4]);
+        let mut buf = Vec::new();
+        write_entry(&mut buf, &Entry::Plain("p".into(), t)).unwrap();
+        let short = &buf[..buf.len() - 7];
+        assert!(read_entry(&mut &short[..]).is_err());
+    }
+
+    #[test]
     fn truncated_after_honest_header_rejected() {
         // An honest header whose payload bytes never arrive: the read
         // fails at end-of-input instead of blocking or panicking, and the

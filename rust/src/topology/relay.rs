@@ -240,13 +240,39 @@ impl RelayNode {
                     round,
                     local_steps,
                     headers,
-                } => match self.run_round(&mut children, round, local_steps, &headers) {
+                } => match self.run_round(&mut children, round, local_steps, &headers, None) {
                     Ok(r) => stats.rounds.push(r),
                     Err(e) => {
                         for c in &children {
                             let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
                         }
                         return Err(e.context(format!("relay {}: round {round}", self.name)));
+                    }
+                },
+                // Buffered (FedBuff) aggregation: the parent tasks the
+                // relay against a global version. The subtree still runs
+                // lock-step *inside* this exchange — children see the
+                // same version and the relay ships one versioned partial
+                // back, declaring staleness 0 (the parent's ledger
+                // computes the real τ; see DESIGN.md §Asynchronous
+                // aggregation).
+                CtrlMsg::VersionedTask {
+                    version,
+                    local_steps,
+                    headers,
+                } => match self.run_round(
+                    &mut children,
+                    version as usize,
+                    local_steps,
+                    &headers,
+                    Some(version),
+                ) {
+                    Ok(r) => stats.rounds.push(r),
+                    Err(e) => {
+                        for c in &children {
+                            let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
+                        }
+                        return Err(e.context(format!("relay {}: version {version}", self.name)));
                     }
                 },
                 other => bail!("relay {}: unexpected ctrl {other:?}", self.name),
@@ -262,6 +288,7 @@ impl RelayNode {
         round: usize,
         local_steps: usize,
         headers: &BTreeMap<String, Json>,
+        version: Option<u64>,
     ) -> Result<RelayRound> {
         let job = &self.job;
         let timeout = job.transfer_timeout();
@@ -337,7 +364,7 @@ impl RelayNode {
                                 };
                                 let r = child_round(
                                     child, pos, round, local_steps, headers, msg_ref,
-                                    fold_ref, job, spool,
+                                    fold_ref, job, spool, version,
                                 );
                                 if r.is_ok() {
                                     guard.armed = false;
@@ -440,17 +467,27 @@ impl RelayNode {
             "integrity_crc32".to_string(),
             Json::num(integrity::digest(&pmsg)? as f64),
         );
-        self.up.send_ctrl(
-            &CtrlMsg::Result {
+        let up_ctrl = match version {
+            // Lock-step with the parent's issue: declared staleness 0.
+            Some(v) => CtrlMsg::VersionedResult {
+                version: v,
+                client: self.name.clone(),
+                n_samples: total_weight,
+                staleness: 0,
+                losses,
+                contributions: contribs_total,
+                headers: up_headers,
+            },
+            None => CtrlMsg::Result {
                 round,
                 client: self.name.clone(),
                 n_samples: total_weight,
                 losses,
                 contributions: contribs_total,
                 headers: up_headers,
-            }
-            .to_json(),
-        )?;
+            },
+        };
+        self.up.send_ctrl(&up_ctrl.to_json())?;
         if job.reliable {
             streaming::send_weights_resumable(
                 &self.up,
@@ -489,6 +526,7 @@ fn child_round(
     fold: &EntryFold,
     job: &JobConfig,
     spool: &Path,
+    version: Option<u64>,
 ) -> Result<ChildOutcome> {
     let timeout = job.transfer_timeout();
     let mode = job.streaming;
@@ -496,14 +534,19 @@ fn child_round(
     let name = child.name.clone();
 
     // -- forward scatter verbatim ---------------------------------------
-    child.ep.send_ctrl(
-        &CtrlMsg::Task {
+    let fwd = match version {
+        Some(v) => CtrlMsg::VersionedTask {
+            version: v,
+            local_steps,
+            headers: headers.clone(),
+        },
+        None => CtrlMsg::Task {
             round,
             local_steps,
             headers: headers.clone(),
-        }
-        .to_json(),
-    )?;
+        },
+    };
+    child.ep.send_ctrl(&fwd.to_json())?;
     if reliable {
         streaming::send_weights_resumable(
             &child.ep,
@@ -533,16 +576,44 @@ fn child_round(
         base
     };
     let ctrl = CtrlMsg::from_json(&child.ep.recv_ctrl(Some(wait))?)?;
-    let (r_round, n_samples, losses, contributions, rheaders) = match ctrl {
-        CtrlMsg::Result {
-            round: r,
-            n_samples,
-            losses,
-            contributions,
-            headers,
-            ..
-        } => (r, n_samples, losses, contributions, headers),
-        other => bail!("expected result from {name}, got {other:?}"),
+    let (r_round, n_samples, losses, contributions, rheaders) = match (ctrl, version) {
+        (
+            CtrlMsg::Result {
+                round: r,
+                n_samples,
+                losses,
+                contributions,
+                headers,
+                ..
+            },
+            None,
+        ) => (r, n_samples, losses, contributions, headers),
+        (
+            CtrlMsg::VersionedResult {
+                version: v,
+                n_samples,
+                staleness,
+                losses,
+                contributions,
+                headers,
+                ..
+            },
+            Some(issued),
+        ) => {
+            if v != issued {
+                bail!("child {name} answered version {v}, expected {issued}");
+            }
+            // The child is lock-step with this exchange; a nonzero
+            // declared tag contradicts that and would skew the parent's
+            // staleness accounting — quarantine the child.
+            if staleness != 0 {
+                bail!(
+                    "child {name} declared staleness {staleness} on a lock-step exchange"
+                );
+            }
+            (round, n_samples, losses, contributions, headers)
+        }
+        (other, _) => bail!("expected result from {name}, got {other:?}"),
     };
     if r_round != round {
         bail!("child {name} answered round {r_round}, expected {round}");

@@ -1,0 +1,542 @@
+//! Buffered (FedBuff-style) aggregation invariants, from the fold grid
+//! up through the engine:
+//!
+//! * property: a buffered window's snapshot is bit-identical under any
+//!   arrival-order permutation of its contributions — the ISSUE's core
+//!   determinism claim, checked over seeded random contribution sets
+//!   with mixed staleness tags;
+//! * property: staleness weights are exact integers on the Q32.32 grid
+//!   (cross-checked against an independent u128 reference — no float
+//!   touches the comparison);
+//! * end-to-end: the same federated buffered run, with client speeds
+//!   permuted so contributions arrive in every possible order, produces
+//!   the same global bit-for-bit;
+//! * end-to-end hostile corpus: a raw-protocol client sending stale or
+//!   never-issued version echoes, replayed results, contradictory
+//!   staleness declarations, and leaf Fx128 partials is quarantined or
+//!   failed cleanly while the honest client carries the run to its
+//!   version target.
+
+mod common;
+
+use flare::config::{
+    AggregationConfig, AggregationMode, JobConfig, QuantScheme, RoundPolicy, StreamingMode,
+    TrainConfig,
+};
+use flare::coordinator::buffered::{staleness_weight_fx, BufferedAggregator, W_ONE};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::protocol::CtrlMsg;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::{ResumePolicy, SfmEndpoint};
+use flare::streaming::{recv_weights_resumable, send_weights_resumable, WeightsMsg};
+use flare::tensor::init::materialize;
+use flare::tensor::{ParamContainer, Tensor};
+use flare::util::prop::{check, PropConfig};
+use flare::util::rng::SplitMix64;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property: fold is invariant under arrival-order permutations
+// ---------------------------------------------------------------------------
+
+/// One generated contribution: values for the two skeleton tensors,
+/// a sample count and a staleness tag.
+#[derive(Debug, Clone)]
+struct Contrib {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    n_samples: u64,
+    tau: u64,
+}
+
+fn skeleton() -> ParamContainer {
+    let mut c = ParamContainer::new();
+    c.insert("layer.a", Tensor::from_f32(vec![16], vec![0.0; 16]));
+    c.insert("layer.b", Tensor::from_f32(vec![4, 8], vec![0.0; 32]));
+    c
+}
+
+fn contrib_container(c: &Contrib) -> ParamContainer {
+    let mut p = ParamContainer::new();
+    p.insert("layer.a", Tensor::from_f32(vec![16], c.a.clone()));
+    p.insert("layer.b", Tensor::from_f32(vec![4, 8], c.b.clone()));
+    p
+}
+
+fn gen_vals(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * 1000.0).collect()
+}
+
+fn gen_contribs(rng: &mut SplitMix64) -> (u32, Vec<Contrib>) {
+    let alpha2 = rng.next_below(5) as u32; // α ∈ {0, 0.5, 1, 1.5, 2}
+    let n = 2 + rng.next_below(5) as usize;
+    let contribs = (0..n)
+        .map(|_| Contrib {
+            a: gen_vals(rng, 16),
+            b: gen_vals(rng, 32),
+            n_samples: 1 + rng.next_below(1000),
+            tau: rng.next_below(8),
+        })
+        .collect();
+    (alpha2, contribs)
+}
+
+/// Fold `contribs` in the given order (buffer_k = n, so the window
+/// closes exactly on the last fold) and return the snapshot.
+fn fold_in_order(alpha2: u32, contribs: &[Contrib], order: &[usize]) -> ParamContainer {
+    let mut agg = BufferedAggregator::new(skeleton(), contribs.len(), alpha2);
+    for (k, &i) in order.iter().enumerate() {
+        let c = &contribs[i];
+        let ready = agg
+            .fold(&contrib_container(c), c.n_samples, c.tau)
+            .expect("bounded contribution must fold");
+        assert_eq!(ready, k + 1 == contribs.len(), "window closes on the k-th fold only");
+    }
+    agg.snapshot().expect("closed window must snapshot")
+}
+
+/// The ISSUE's core claim: a window's snapshot depends only on the
+/// *multiset* of (update, n_samples, τ) it folded, never on arrival
+/// order. Checked with each contribution keeping its own staleness tag
+/// (the equal-tag case of the issue text is the special case τ_i = τ_j).
+#[test]
+fn prop_snapshot_is_invariant_under_arrival_permutations() {
+    check(
+        cfg(64),
+        "buffered fold permutation invariance",
+        |rng| {
+            let (alpha2, contribs) = gen_contribs(rng);
+            // Three independent permutations of the arrival order.
+            let mut orders = Vec::new();
+            for _ in 0..3 {
+                let mut ord: Vec<usize> = (0..contribs.len()).collect();
+                rng.shuffle(&mut ord);
+                orders.push(ord);
+            }
+            (alpha2, contribs, orders)
+        },
+        |(alpha2, contribs, orders)| {
+            let identity: Vec<usize> = (0..contribs.len()).collect();
+            let want = fold_in_order(*alpha2, contribs, &identity);
+            for ord in orders {
+                let got = fold_in_order(*alpha2, contribs, ord);
+                if want.max_abs_diff(&got) != 0.0 {
+                    return Err(format!("snapshot differs for arrival order {ord:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Same claim with every contribution tagged the same staleness — the
+/// literal wording of the acceptance test — across all τ on the small
+/// grid.
+#[test]
+fn prop_equal_staleness_window_is_order_invariant() {
+    check(
+        cfg(32),
+        "equal-staleness permutation invariance",
+        |rng| {
+            let (alpha2, mut contribs) = gen_contribs(rng);
+            let tau = rng.next_below(8);
+            for c in &mut contribs {
+                c.tau = tau;
+            }
+            let mut ord: Vec<usize> = (0..contribs.len()).collect();
+            rng.shuffle(&mut ord);
+            (alpha2, contribs, ord)
+        },
+        |(alpha2, contribs, ord)| {
+            let identity: Vec<usize> = (0..contribs.len()).collect();
+            let want = fold_in_order(*alpha2, contribs, &identity);
+            let got = fold_in_order(*alpha2, contribs, ord);
+            if want.max_abs_diff(&got) != 0.0 {
+                return Err(format!("equal-τ snapshot differs for order {ord:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Property: staleness weights are exact on the Q32.32 grid
+// ---------------------------------------------------------------------------
+
+/// Independent floor-sqrt via binary search — deliberately a different
+/// algorithm from the production Newton iteration.
+fn isqrt_ref(n: u128) -> u128 {
+    let (mut lo, mut hi) = (0u128, 1u128 << 64);
+    while lo < hi {
+        let mid = lo + (hi - lo + 1) / 2;
+        if mid.checked_mul(mid).map(|sq| sq <= n).unwrap_or(false) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// `w(τ) = base / (1+τ)^α` on the weight grid, cross-checked in pure
+/// u128 arithmetic: for integer α the quotient is computed directly;
+/// for half-integer α the production value must equal
+/// `⌊base·2^64 / ⌊√((1+τ)^2α · 2^64)⌋⌋` with an independently derived
+/// square root. No float appears on either side.
+#[test]
+fn prop_staleness_weights_match_u128_reference() {
+    check(
+        cfg(256),
+        "staleness weight exactness",
+        |rng| {
+            let base = 1 + rng.next_below(1 << 20);
+            let tau = rng.next_below(100);
+            let alpha2 = rng.next_below(9) as u32; // α ∈ [0, 4] half-steps
+            (base, tau, alpha2)
+        },
+        |&(base, tau, alpha2)| {
+            let w = staleness_weight_fx(base, tau, alpha2).map_err(|e| e.to_string())?;
+            let b = (tau as u128) + 1;
+            let p = (0..alpha2).try_fold(1u128, |p, _| p.checked_mul(b)).unwrap();
+            if tau == 0 && w != (base as u128) * W_ONE {
+                return Err(format!("τ=0 must be exactly base·2^32, got {w}"));
+            }
+            if alpha2 % 2 == 0 {
+                let denom = (0..alpha2 / 2).fold(1u128, |d, _| d * b);
+                let want = ((base as u128) << 32) / denom;
+                if w != want {
+                    return Err(format!("integer-α weight {w} != exact quotient {want}"));
+                }
+            }
+            let s = isqrt_ref(p << 64);
+            if w != ((base as u128) << 64) / s {
+                return Err(format!("weight {w} disagrees with the independent isqrt path"));
+            }
+            if let Ok(w_staler) = staleness_weight_fx(base, tau + 1, alpha2) {
+                if alpha2 > 0 && w_staler > w {
+                    return Err("discount must be monotone in τ".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: arrival order permuted via client speed assignment
+// ---------------------------------------------------------------------------
+
+fn buffered_perm_job(name: &str) -> JobConfig {
+    JobConfig {
+        name: name.into(),
+        clients: 3,
+        rounds: 1, // one global version: a single buffered window
+        quant: QuantScheme::None,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        aggregation: AggregationConfig {
+            mode: AggregationMode::Buffered,
+            buffer_k: 3,
+            staleness_alpha: 1.0,
+        },
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Run the 3-client buffered cluster with bandwidth `bws[perm[i]]`
+/// assigned to client `i`; everything else (targets, samples, seeds) is
+/// pinned to the client index.
+fn run_perm(
+    job: &JobConfig,
+    initial: &ParamContainer,
+    perm: &[usize; 3],
+) -> (ParamContainer, Vec<(f64, f64)>) {
+    let spec = common::tiny_spec();
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 700 + i)).collect();
+    let samples = [40u64, 90, 140];
+    // < 2:1 spread: the slowest first exchange still lands well before
+    // the fastest *second* exchange, so window 1 is always one
+    // contribution per client — only the arrival order permutes.
+    let bws = [4_000_000u64, 3_400_000, 2_800_000];
+    let links: Vec<common::Link> = (0..3)
+        .map(|i| common::Link {
+            net: common::net(bws[perm[i]]),
+            ..common::Link::default()
+        })
+        .collect();
+    let controller = Controller::new(
+        job.clone(),
+        FilterSet::new(),
+        common::fresh_spool("async_perm"),
+    );
+    let r = common::run_cluster(
+        job,
+        controller,
+        initial,
+        &links,
+        |i| MockTrainer::new(targets[i].clone(), 0.3, samples[i]),
+        |_| FilterSet::new(),
+    );
+    let global = r.outcome.expect("buffered permutation run failed");
+    for res in r.client_results {
+        res.unwrap();
+    }
+    (global, r.report.series["staleness_hist"].points.clone())
+}
+
+/// Acceptance: the snapshot at version 1 is bit-identical no matter
+/// which client's contribution arrives first, second or third — probed
+/// by assigning the link speeds in all six permutations. Every
+/// contribution folds at τ = 0 (equal staleness tags), because no
+/// snapshot can intervene before the window closes.
+#[test]
+fn buffered_snapshot_bit_identical_across_arrival_orders() {
+    let perms: [[usize; 3]; 6] = [
+        [0, 1, 2],
+        [0, 2, 1],
+        [1, 0, 2],
+        [1, 2, 0],
+        [2, 0, 1],
+        [2, 1, 0],
+    ];
+    let job = buffered_perm_job("buffered-perm");
+    let initial = materialize(&common::tiny_spec(), 17);
+    let (want, hist0) = run_perm(&job, &initial, &perms[0]);
+    assert_eq!(hist0, vec![(0.0, 3.0)], "all folds in window 1 carry τ = 0");
+    for perm in &perms[1..] {
+        let (got, hist) = run_perm(&job, &initial, perm);
+        assert_eq!(
+            want.max_abs_diff(&got),
+            0.0,
+            "snapshot differs for speed assignment {perm:?}"
+        );
+        assert_eq!(hist, hist0, "staleness tags differ for {perm:?}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end hostile corpus: versioned-protocol violations quarantine
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Hostile {
+    /// Echo a version that was never issued (far in the future).
+    NeverIssuedVersion,
+    /// Reply honestly once, then re-send a result for the already-folded
+    /// version on the next exchange.
+    ReplayPreviousResult,
+    /// Echo the right version but declare a nonzero staleness tag,
+    /// contradicting the lock-step session ledger.
+    DeclaredStaleness,
+    /// A leaf sending a pre-folded Fx128 partial (relay-tier privilege).
+    LeafFx128Partial,
+}
+
+/// A raw-protocol client: registers like an executor, then answers
+/// `VersionedTask`s with the behavior's crafted `VersionedResult`s.
+fn hostile_client(ep: SfmEndpoint, behavior: Hostile, spool: PathBuf) {
+    let timeout = Duration::from_secs(30);
+    let policy = ResumePolicy {
+        max_attempts: 8,
+        ack_timeout: Duration::from_secs(5),
+        probe_first: false,
+    };
+    ep.send_ctrl(
+        &CtrlMsg::Register {
+            client: "mallory".into(),
+            subtree: 1,
+        }
+        .to_json(),
+    )
+    .unwrap();
+    let _welcome = ep.recv_ctrl(Some(timeout)).unwrap();
+    let mut exchange = 0u64;
+    let mut first_version = 0u64;
+    loop {
+        let ctrl = match ep.recv_ctrl(Some(timeout)) {
+            Ok(j) => CtrlMsg::from_json(&j).unwrap(),
+            Err(_) => break, // server side retired us and hung up
+        };
+        let version = match ctrl {
+            CtrlMsg::VersionedTask { version, .. } => version,
+            CtrlMsg::Done => break,
+            other => panic!("unexpected ctrl for hostile client: {other:?}"),
+        };
+        let (msg, _stats) = recv_weights_resumable(&ep, Some(&spool), Some(timeout)).unwrap();
+        let global = match msg {
+            WeightsMsg::Plain(p) => p,
+            other => panic!("expected plain task data, got {other:?}"),
+        };
+
+        let (echo_version, declared, update) = match behavior {
+            Hostile::NeverIssuedVersion => (version + 1000, 0, global),
+            Hostile::ReplayPreviousResult if exchange == 0 => {
+                first_version = version;
+                (version, 0, global) // honest warm-up contribution
+            }
+            Hostile::ReplayPreviousResult => (first_version, 0, global),
+            Hostile::DeclaredStaleness => (version, 3, global),
+            Hostile::LeafFx128Partial => {
+                let mut p = ParamContainer::new();
+                p.insert("partial", Tensor::from_i128(vec![2], &[1i128 << 64, 2i128 << 64]));
+                (version, 0, p)
+            }
+        };
+        ep.send_ctrl(
+            &CtrlMsg::VersionedResult {
+                version: echo_version,
+                client: "mallory".into(),
+                n_samples: 10,
+                staleness: declared,
+                losses: vec![1.0],
+                contributions: 1,
+                headers: BTreeMap::new(),
+            }
+            .to_json(),
+        )
+        .unwrap();
+        send_weights_resumable(
+            &ep,
+            &WeightsMsg::Plain(update),
+            StreamingMode::Container,
+            Some(&spool),
+            &policy,
+        )
+        .unwrap();
+        exchange += 1;
+    }
+}
+
+/// Drive a buffered run with one slow honest executor and one fast
+/// hostile raw client; returns the run report. The honest client is
+/// bandwidth-shaped so every hostile exchange resolves long before the
+/// run can reach its version target.
+fn hostile_run(behavior: Hostile) -> Report {
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 33);
+    let job = JobConfig {
+        name: "buffered-hostile".into(),
+        clients: 2,
+        rounds: 2, // target versions
+        quant: QuantScheme::None,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 32 * 1024,
+        reliable: true,
+        entry_fold: false,
+        round_policy: RoundPolicy {
+            allow_partial: true,
+            ..Default::default()
+        },
+        aggregation: AggregationConfig {
+            mode: AggregationMode::Buffered,
+            buffer_k: 1, // snapshot every fold: versions advance eagerly
+            staleness_alpha: 0.5,
+        },
+        train: TrainConfig {
+            local_steps: 1,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let spool = common::fresh_spool("async_hostile");
+    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone());
+
+    // Honest executor on a ~2 MB/s link: each of its exchanges takes
+    // hundreds of milliseconds, so the unshaped hostile client always
+    // gets its protocol violation in first.
+    let honest_link = common::Link {
+        net: common::net(2_000_000),
+        ..common::Link::default()
+    };
+    let (server_ep, client_ep) = common::wire(&job, &honest_link);
+    let target = materialize(&spec, 500);
+    let job_c = job.clone();
+    let spool_c = spool.clone();
+    let honest = std::thread::spawn(move || -> anyhow::Result<usize> {
+        let mut exec = Executor::new(
+            "site-1",
+            client_ep,
+            FilterSet::new(),
+            MockTrainer::new(target, 0.3, 64),
+            spool_c,
+        )
+        .with_mode(job_c.streaming)
+        .with_reliable(job_c.reliable)
+        .with_entry_fold(job_c.entry_fold)
+        .with_timeout(job_c.transfer_timeout());
+        exec.register()?;
+        exec.run()
+    });
+    controller
+        .accept_client(server_ep, Some(Duration::from_secs(30)))
+        .unwrap();
+
+    let (server_ep, client_ep) = common::wire(&job, &common::Link::default());
+    let spool_m = spool.join("mallory");
+    std::fs::create_dir_all(&spool_m).unwrap();
+    let mallory = std::thread::spawn(move || hostile_client(client_ep, behavior, spool_m));
+    controller
+        .accept_client(server_ep, Some(Duration::from_secs(30)))
+        .unwrap();
+
+    let mut report = Report::new();
+    let outcome = controller.run(initial, &mut report);
+    honest.join().expect("honest client panicked").unwrap();
+    mallory.join().expect("hostile client panicked");
+    std::fs::remove_dir_all(&spool).ok();
+    outcome.expect("honest client must carry the run to its target");
+    report
+}
+
+/// Acceptance: each hostile behavior is excluded cleanly — the session
+/// is quarantined (ledger/fold violations) or failed (transport-layer
+/// bail), the run still reaches its version target on the honest
+/// client, and nothing hostile leaks into the accounting.
+#[test]
+fn hostile_versioned_results_quarantine_cleanly() {
+    for behavior in [
+        Hostile::NeverIssuedVersion,
+        Hostile::DeclaredStaleness,
+        Hostile::ReplayPreviousResult,
+    ] {
+        let report = hostile_run(behavior);
+        assert_eq!(
+            report.scalars["final_version"], 2.0,
+            "{behavior:?}: run must still reach its version target"
+        );
+        assert_eq!(
+            report.scalars["quarantined_total"], 1.0,
+            "{behavior:?}: exactly one quarantine expected"
+        );
+        assert_eq!(
+            report.scalars["clients_failed_total"], 0.0,
+            "{behavior:?}: a quarantine is not a transport failure"
+        );
+    }
+
+    // The leaf partial is rejected by the session worker before it ever
+    // reaches the ledger, so it surfaces as a failed session instead.
+    let report = hostile_run(Hostile::LeafFx128Partial);
+    assert_eq!(report.scalars["final_version"], 2.0);
+    assert_eq!(
+        report.scalars["clients_failed_total"], 1.0,
+        "a leaf Fx128 partial must fail the session at the gather"
+    );
+}

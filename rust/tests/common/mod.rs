@@ -1,0 +1,191 @@
+//! Shared harness for the integration tests: the tiny benchmark model,
+//! per-client link shaping/fault wiring, the manual federated-cluster
+//! runner (per-client networks, which `run_simulation` does not expose),
+//! and the direct FedAvg reference fold.
+//!
+//! Each `[[test]]` target compiles this as `mod common;`, so helpers a
+//! given test does not use are expected dead code here.
+
+#![allow(dead_code)]
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{FaultProfile, JobConfig, NetProfile};
+use flare::coordinator::aggregator::FedAvg;
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::{LocalTrainer, MockTrainer, RoundStats};
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::{inmem, netsim, SfmEndpoint};
+use flare::tensor::ParamContainer;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// ~135K-parameter model (~540 KB fp32): big enough that bandwidth
+/// shaping dominates round time, small enough for fast tests.
+pub fn tiny_spec() -> ModelSpec {
+    ModelSpec::llama(
+        "tiny",
+        LlamaDims {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            untied_head: true,
+        },
+    )
+}
+
+pub fn net(bytes_per_sec: u64) -> NetProfile {
+    NetProfile {
+        bandwidth_bps: bytes_per_sec,
+        latency_us: 200,
+    }
+}
+
+/// A unique spool directory per call — tests in one binary share a
+/// process, so a static sequence keeps concurrent runs from colliding.
+pub fn fresh_spool(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "flare_{}_{}_{}",
+        tag,
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One client's link: bandwidth shaping plus per-direction fault
+/// profiles over an in-memory pair.
+#[derive(Clone, Copy)]
+pub struct Link {
+    pub net: NetProfile,
+    pub to_client: FaultProfile,
+    pub to_server: FaultProfile,
+    /// In-memory channel depth (frames).
+    pub buffer: usize,
+}
+
+impl Default for Link {
+    fn default() -> Self {
+        Link {
+            net: NetProfile::UNLIMITED,
+            to_client: FaultProfile::NONE,
+            to_server: FaultProfile::NONE,
+            buffer: 1024,
+        }
+    }
+}
+
+/// Build the (server, client) endpoint pair for one link, applying
+/// bandwidth shaping and fault injection only when configured so the
+/// clean path stays zero-overhead.
+pub fn wire(job: &JobConfig, link: &Link) -> (SfmEndpoint, SfmEndpoint) {
+    let mut pair = inmem::pair(link.buffer);
+    if link.net != NetProfile::UNLIMITED {
+        pair = netsim::shape_pair(pair, link.net);
+    }
+    if !link.to_client.is_none() || !link.to_server.is_none() {
+        let (faulted, _sa, _sb) = netsim::fault_pair(pair, link.to_client, link.to_server);
+        pair = faulted;
+    }
+    (
+        SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize),
+        SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize),
+    )
+}
+
+/// Outcome of one manually wired federated run.
+pub struct ClusterRun {
+    pub outcome: anyhow::Result<ParamContainer>,
+    pub report: Report,
+    pub rounds: Vec<RoundStats>,
+    pub tasks_sent: Vec<usize>,
+    pub client_results: Vec<anyhow::Result<usize>>,
+}
+
+/// Drive a pre-built controller against `links.len()` executor threads
+/// (named `site-1..=site-N`, wired per [`wire`]). The controller comes
+/// in ready-made so callers can attach filter factories; its spool dir
+/// is reused for the clients.
+pub fn run_cluster<T, FT, FC>(
+    job: &JobConfig,
+    mut controller: Controller,
+    initial: &ParamContainer,
+    links: &[Link],
+    make_trainer: FT,
+    client_filters: FC,
+) -> ClusterRun
+where
+    T: LocalTrainer + Send + 'static,
+    FT: Fn(usize) -> T,
+    FC: Fn(usize) -> FilterSet,
+{
+    let spool = controller.spool_dir.clone();
+    let mut handles = Vec::new();
+    for (i, link) in links.iter().enumerate() {
+        let (server_ep, client_ep) = wire(job, link);
+        let trainer = make_trainer(i);
+        let filters = client_filters(i);
+        let job_c = job.clone();
+        let spool_c = spool.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                client_ep,
+                filters,
+                trainer,
+                spool_c,
+            )
+            .with_mode(job_c.streaming)
+            .with_reliable(job_c.reliable)
+            .with_entry_fold(job_c.entry_fold)
+            .with_timeout(job_c.transfer_timeout());
+            exec.register()?;
+            exec.run()
+        }));
+        controller
+            .accept_client(server_ep, Some(Duration::from_secs(30)))
+            .unwrap();
+    }
+
+    let mut report = Report::new();
+    let outcome = controller.run(initial.clone(), &mut report);
+    let client_results = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked"))
+        .collect();
+    ClusterRun {
+        outcome,
+        report,
+        rounds: controller.rounds.clone(),
+        tasks_sent: controller.tasks_sent.clone(),
+        client_results,
+    }
+}
+
+/// One FedAvg round over the given clients' mock updates, computed
+/// directly — the reference an engine's aggregate must match
+/// bit-for-bit. `targets`/`samples` are indexed by absolute client
+/// index; `clients` selects the participants.
+pub fn fedavg_step(
+    global: &ParamContainer,
+    targets: &[ParamContainer],
+    samples: &[u64],
+    clients: &[usize],
+    local_steps: usize,
+    round: usize,
+) -> ParamContainer {
+    let mut agg = FedAvg::new();
+    for &i in clients {
+        let mut t = MockTrainer::new(targets[i].clone(), 0.3, samples[i]);
+        let (w, _losses) = t.train(global, local_steps, round).unwrap();
+        agg.add(&w, samples[i]).unwrap();
+    }
+    agg.finalize().unwrap()
+}

@@ -14,38 +14,26 @@
 //! entry-streamed fold must stay within
 //! `k × max_entry_bytes × sessions` and beat the baseline's peak by ≥2×.
 
-use flare::config::model_spec::{LlamaDims, ModelSpec};
+mod common;
+
+use common::{fresh_spool, run_cluster, Link};
+use flare::config::model_spec::ModelSpec;
 use flare::config::{FaultProfile, JobConfig, QuantScheme, RoundPolicy, StreamingMode, TrainConfig};
 use flare::coordinator::controller::Controller;
-use flare::coordinator::executor::Executor;
 use flare::coordinator::MockTrainer;
 use flare::filter::FilterSet;
 use flare::memory::{rss, COMM_GAUGE};
 use flare::metrics::Report;
-use flare::sfm::{inmem, netsim, SfmEndpoint};
 use flare::tensor::init::materialize;
 use flare::tensor::ParamContainer;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
 
 /// COMM_GAUGE and RSS are process-global; measurements must not overlap.
 static SERIAL: Mutex<()> = Mutex::new(());
 
 /// ~540 KB fp32 model; largest entry is the 64 KB d_ff projection.
 fn spec() -> ModelSpec {
-    ModelSpec::llama(
-        "membound-tiny",
-        LlamaDims {
-            vocab: 64,
-            d_model: 64,
-            n_layers: 2,
-            n_heads: 4,
-            n_kv_heads: 2,
-            d_ff: 256,
-            untied_head: true,
-        },
-    )
+    common::tiny_spec()
 }
 
 struct GatherRun {
@@ -64,13 +52,7 @@ fn run_gather(clients: usize, entry_fold: bool, faulted: bool) -> GatherRun {
 /// [`run_gather`] over a configurable round count (the pool steady-state
 /// probe needs multi-round runs).
 fn run_gather_rounds(clients: usize, entry_fold: bool, faulted: bool, rounds: usize) -> GatherRun {
-    static SEQ: AtomicU64 = AtomicU64::new(0);
-    let spool = std::env::temp_dir().join(format!(
-        "flare_membound_{}_{}",
-        std::process::id(),
-        SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    std::fs::create_dir_all(&spool).unwrap();
+    let spool = fresh_spool("membound");
     let spec = spec();
     let initial = materialize(&spec, 11);
     let job = JobConfig {
@@ -98,62 +80,44 @@ fn run_gather_rounds(clients: usize, entry_fold: bool, faulted: bool, rounds: us
         ..FaultProfile::NONE
     };
 
-    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
+    let controller = Controller::new(job.clone(), FilterSet::new(), spool.clone())
         .with_filter_factory(FilterSet::two_way_quantization_factory(job.quant));
-    let mut handles = Vec::new();
-    for i in 0..clients {
-        let mut pair = inmem::pair(4096);
-        if !fault.is_none() {
-            let (faulted_pair, _sa, _sb) = netsim::fault_pair(
-                pair,
-                fault.reseeded(2 * i as u64),
-                fault.reseeded(2 * i as u64 + 1),
-            );
-            pair = faulted_pair;
-        }
-        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
-        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
-        let target = materialize(&spec, 900 + i as u64);
-        let job_c = job.clone();
-        let spool_c = spool.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
-            let mut exec = Executor::new(
-                format!("site-{}", i + 1),
-                client_ep,
-                FilterSet::two_way_quantization(job_c.quant),
-                MockTrainer::new(target, 0.3, 50 + i as u64),
-                spool_c,
-            )
-            .with_mode(job_c.streaming)
-            .with_reliable(job_c.reliable)
-            .with_entry_fold(job_c.entry_fold)
-            .with_timeout(job_c.transfer_timeout());
-            exec.register()?;
-            exec.run()
-        }));
-        controller
-            .accept_client(server_ep, Some(Duration::from_secs(30)))
-            .unwrap();
-    }
+    let links: Vec<Link> = (0..clients)
+        .map(|i| Link {
+            buffer: 4096,
+            to_client: fault.reseeded(2 * i as u64),
+            to_server: fault.reseeded(2 * i as u64 + 1),
+            ..Link::default()
+        })
+        .collect();
 
+    // The gauge/RSS window opens before the clients wire up; registration
+    // traffic is a few control frames, noise next to the model transfers
+    // the bounds are about.
     let rss_region = rss::RssRegion::start();
     COMM_GAUGE.reset_peak();
     let base = COMM_GAUGE.current();
-    let mut report = Report::new();
-    let global = controller
-        .run(initial, &mut report)
-        .expect("federated round failed");
+    let quant = job.quant;
+    let r = run_cluster(
+        &job,
+        controller,
+        &initial,
+        &links,
+        |i| MockTrainer::new(materialize(&spec, 900 + i as u64), 0.3, 50 + i as u64),
+        |_| FilterSet::two_way_quantization(quant),
+    );
+    let global = r.outcome.expect("federated round failed");
     let peak_comm = COMM_GAUGE.peak().saturating_sub(base);
     let (_rss_peak, rss_delta) = rss_region.sample();
-    for h in handles {
-        h.join().unwrap().unwrap();
+    for res in r.client_results {
+        res.unwrap();
     }
     std::fs::remove_dir_all(&spool).ok();
     GatherRun {
         peak_comm,
         rss_peak_delta: rss_delta,
         global,
-        report,
+        report: r.report,
     }
 }
 

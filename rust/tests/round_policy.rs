@@ -7,45 +7,17 @@
 //! manufactured with bandwidth-shaped links — never with sleeps in test
 //! code.
 
-use flare::config::model_spec::{LlamaDims, ModelSpec};
+mod common;
+
+use common::{fedavg_step, fresh_spool, net, run_cluster, tiny_spec, ClusterRun, Link};
 use flare::config::{
     FaultProfile, JobConfig, NetProfile, QuantScheme, RoundPolicy, StreamingMode, TrainConfig,
 };
-use flare::coordinator::aggregator::FedAvg;
 use flare::coordinator::controller::Controller;
-use flare::coordinator::executor::Executor;
-use flare::coordinator::{LocalTrainer, MockTrainer, RoundStats};
+use flare::coordinator::{LocalTrainer, MockTrainer};
 use flare::filter::FilterSet;
-use flare::metrics::Report;
-use flare::sfm::{inmem, netsim, SfmEndpoint};
 use flare::tensor::init::materialize;
 use flare::tensor::ParamContainer;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
-
-/// ~135K-parameter model (~540 KB fp32): big enough that bandwidth
-/// shaping dominates round time, small enough for fast tests.
-fn tiny_spec() -> ModelSpec {
-    ModelSpec::llama(
-        "tiny",
-        LlamaDims {
-            vocab: 64,
-            d_model: 64,
-            n_layers: 2,
-            n_heads: 4,
-            n_kv_heads: 2,
-            d_ff: 256,
-            untied_head: true,
-        },
-    )
-}
-
-fn net(bytes_per_sec: u64) -> NetProfile {
-    NetProfile {
-        bandwidth_bps: bytes_per_sec,
-        latency_us: 200,
-    }
-}
 
 fn base_job(clients: usize, policy: RoundPolicy) -> JobConfig {
     JobConfig {
@@ -64,17 +36,9 @@ fn base_job(clients: usize, policy: RoundPolicy) -> JobConfig {
     }
 }
 
-/// Outcome of one manually wired federated run (per-client network
-/// shaping and fault injection, which `run_simulation` does not expose).
-struct ManualRun {
-    outcome: anyhow::Result<ParamContainer>,
-    report: Report,
-    rounds: Vec<RoundStats>,
-    tasks_sent: Vec<usize>,
-    client_results: Vec<anyhow::Result<usize>>,
-}
-
-#[allow(clippy::type_complexity)]
+/// One manually wired federated run (per-client network shaping and
+/// fault injection, which `run_simulation` does not expose) — a thin
+/// wrapper over [`common::run_cluster`] with this file's trainer setup.
 fn run_manual(
     job: &JobConfig,
     initial: &ParamContainer,
@@ -82,66 +46,25 @@ fn run_manual(
     samples: &[u64],
     nets: &[NetProfile],
     faults: &[(FaultProfile, FaultProfile)],
-) -> ManualRun {
-    static SPOOL_SEQ: AtomicU64 = AtomicU64::new(0);
-    let spool = std::env::temp_dir().join(format!(
-        "flare_round_policy_{}_{}",
-        std::process::id(),
-        SPOOL_SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    std::fs::create_dir_all(&spool).unwrap();
-
-    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone());
-    let mut handles = Vec::new();
-    for i in 0..job.clients {
-        let mut pair = inmem::pair(1024);
-        if nets[i] != NetProfile::UNLIMITED {
-            pair = netsim::shape_pair(pair, nets[i]);
-        }
-        let (to_client, to_server) = faults[i];
-        if !to_client.is_none() || !to_server.is_none() {
-            let (faulted, _sa, _sb) = netsim::fault_pair(pair, to_client, to_server);
-            pair = faulted;
-        }
-        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
-        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
-        let target = targets[i].clone();
-        let n_samples = samples[i];
-        let job_c = job.clone();
-        let spool_c = spool.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
-            let mut exec = Executor::new(
-                format!("site-{}", i + 1),
-                client_ep,
-                FilterSet::two_way_quantization(job_c.quant),
-                MockTrainer::new(target, 0.3, n_samples),
-                spool_c,
-            )
-            .with_mode(job_c.streaming)
-            .with_reliable(job_c.reliable)
-            .with_entry_fold(job_c.entry_fold)
-            .with_timeout(job_c.transfer_timeout());
-            exec.register()?;
-            exec.run()
-        }));
-        controller
-            .accept_client(server_ep, Some(Duration::from_secs(30)))
-            .unwrap();
-    }
-
-    let mut report = Report::new();
-    let outcome = controller.run(initial.clone(), &mut report);
-    let client_results = handles
-        .into_iter()
-        .map(|h| h.join().expect("client thread panicked"))
+) -> ClusterRun {
+    let controller = Controller::new(job.clone(), FilterSet::new(), fresh_spool("round_policy"));
+    let links: Vec<Link> = (0..job.clients)
+        .map(|i| Link {
+            net: nets[i],
+            to_client: faults[i].0,
+            to_server: faults[i].1,
+            ..Link::default()
+        })
         .collect();
-    ManualRun {
-        outcome,
-        report,
-        rounds: controller.rounds.clone(),
-        tasks_sent: controller.tasks_sent.clone(),
-        client_results,
-    }
+    let quant = job.quant;
+    run_cluster(
+        job,
+        controller,
+        initial,
+        &links,
+        |i| MockTrainer::new(targets[i].clone(), 0.3, samples[i]),
+        |_| FilterSet::two_way_quantization(quant),
+    )
 }
 
 /// FedAvg over the given clients' mock updates, computed directly — the
@@ -153,13 +76,7 @@ fn expected_fedavg(
     clients: &[usize],
     local_steps: usize,
 ) -> ParamContainer {
-    let mut agg = FedAvg::new();
-    for &i in clients {
-        let mut t = MockTrainer::new(targets[i].clone(), 0.3, samples[i]);
-        let (w, _losses) = t.train(initial, local_steps, 0).unwrap();
-        agg.add(&w, samples[i]).unwrap();
-    }
-    agg.finalize().unwrap()
+    fedavg_step(initial, targets, samples, clients, local_steps, 0)
 }
 
 /// Acceptance: with 8 clients on heterogeneous bandwidths, a concurrent
@@ -440,13 +357,6 @@ fn run_with_malicious_client(
     samples: &[u64],
     allow_partial: bool,
 ) -> (anyhow::Result<ParamContainer>, Vec<anyhow::Result<usize>>) {
-    static SEQ: AtomicU64 = AtomicU64::new(0);
-    let spool = std::env::temp_dir().join(format!(
-        "flare_malicious_{}_{}",
-        std::process::id(),
-        SEQ.fetch_add(1, Ordering::Relaxed)
-    ));
-    std::fs::create_dir_all(&spool).unwrap();
     let mut job = base_job(
         3,
         RoundPolicy {
@@ -457,44 +367,26 @@ fn run_with_malicious_client(
     );
     job.streaming = StreamingMode::Container;
     job.transfer_timeout_secs = 2;
-    let mut controller = Controller::new(job.clone(), FilterSet::new(), spool.clone());
-    let mut handles = Vec::new();
-    for i in 0..3usize {
-        let pair = inmem::pair(4096);
-        let server_ep = SfmEndpoint::new(pair.a).with_chunk(job.chunk_bytes as usize);
-        let client_ep = SfmEndpoint::new(pair.b).with_chunk(job.chunk_bytes as usize);
-        let target = targets[i].clone();
-        let n_samples = samples[i];
-        let job_c = job.clone();
-        let spool_c = spool.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<usize> {
-            let trainer = ShapeTrainer {
-                inner: MockTrainer::new(target, 0.3, n_samples),
-                malicious: i == 2,
-            };
-            let mut exec = Executor::new(
-                format!("site-{}", i + 1),
-                client_ep,
-                FilterSet::new(),
-                trainer,
-                spool_c,
-            )
-            .with_mode(job_c.streaming)
-            .with_timeout(job_c.transfer_timeout());
-            exec.register()?;
-            exec.run()
-        }));
-        controller
-            .accept_client(server_ep, Some(Duration::from_secs(30)))
-            .unwrap();
-    }
-    let mut report = Report::new();
-    let outcome = controller.run(initial.clone(), &mut report);
-    let results = handles
-        .into_iter()
-        .map(|h| h.join().expect("client thread panicked"))
-        .collect();
-    (outcome, results)
+    let controller = Controller::new(job.clone(), FilterSet::new(), fresh_spool("malicious"));
+    let links = vec![
+        Link {
+            buffer: 4096,
+            ..Link::default()
+        };
+        3
+    ];
+    let r = run_cluster(
+        &job,
+        controller,
+        initial,
+        &links,
+        |i| ShapeTrainer {
+            inner: MockTrainer::new(targets[i].clone(), 0.3, samples[i]),
+            malicious: i == 2,
+        },
+        |_| FilterSet::new(),
+    );
+    (r.outcome, r.client_results)
 }
 
 /// Wire-reachable malicious input: a client ships a same-named tensor

@@ -14,11 +14,13 @@
 //! Tests share the process-global COMM_GAUGE and buffer pool, so they
 //! serialize on a file-local mutex like `memory_bounds.rs`.
 
-use flare::config::model_spec::{LlamaDims, ModelSpec};
+mod common;
+
+use common::tiny_spec;
+use flare::config::model_spec::ModelSpec;
 use flare::config::{
     FaultProfile, JobConfig, QuantScheme, RoundPolicy, StreamingMode, Topology, TrainConfig,
 };
-use flare::coordinator::aggregator::FedAvg;
 use flare::coordinator::controller::Controller;
 use flare::coordinator::executor::Executor;
 use flare::coordinator::simulator::run_simulation;
@@ -35,23 +37,6 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 static SERIAL: Mutex<()> = Mutex::new(());
-
-/// ~135K-parameter model (~540 KB fp32): transfers dominate, runs stay
-/// fast.
-fn tiny_spec() -> ModelSpec {
-    ModelSpec::llama(
-        "tiny",
-        LlamaDims {
-            vocab: 64,
-            d_model: 64,
-            n_layers: 2,
-            n_heads: 4,
-            n_kv_heads: 2,
-            d_ff: 256,
-            untied_head: true,
-        },
-    )
-}
 
 /// Heterogeneous FedAvg weights so the weighted fold is actually
 /// exercised.
@@ -103,19 +88,11 @@ fn run(job: &JobConfig) -> flare::coordinator::simulator::SimResult {
 /// reference every topology's aggregate must match bit-for-bit.
 fn expected_fedavg(clients: &[usize], local_steps: usize, rounds: usize) -> ParamContainer {
     let spec = tiny_spec();
+    let targets: Vec<ParamContainer> = (0..8).map(|i| materialize(&spec, 100 + i)).collect();
+    let samples: Vec<u64> = (0..8).map(|i| SAMPLES[i % SAMPLES.len()]).collect();
     let mut global = materialize(&spec, 1);
     for round in 0..rounds {
-        let mut agg = FedAvg::new();
-        for &i in clients {
-            let mut t = MockTrainer::new(
-                materialize(&spec, 100 + i as u64),
-                0.3,
-                SAMPLES[i % SAMPLES.len()],
-            );
-            let (w, _losses) = t.train(&global, local_steps, round).unwrap();
-            agg.add(&w, SAMPLES[i % SAMPLES.len()]).unwrap();
-        }
-        global = agg.finalize().unwrap();
+        global = common::fedavg_step(&global, &targets, &samples, clients, local_steps, round);
     }
     global
 }

@@ -1,0 +1,334 @@
+//! C100K churn bench — session-engine scalability under join/leave churn.
+//!
+//! Phase 1 sizes the *threaded* engine: one OS thread per parked session
+//! (the pre-reactor execution model), admitted in waves until the engine's
+//! resident-set growth crosses a fixed budget. Phase 2 parks an order of
+//! magnitude more sessions on the readiness-driven reactor inside the same
+//! budget, then replays a seeded join/leave churn plan against the live
+//! fleet. Both phases pre-create their in-memory transports before taking
+//! the RSS baseline, so the deltas measure the engine (thread stacks vs
+//! session records), not wiring shared by both.
+//!
+//! Every wave emits a `BENCH_JSON` trajectory row (sessions vs RSS vs
+//! wall-clock); the summary row carries the threaded-vs-reactor ceiling
+//! ratio. Full mode asserts the acceptance bar: the reactor must hold
+//! >= 10_000 live sessions, >= 10x the threaded ceiling, with RSS growth
+//! still inside the budget at the 10x crossing. `--smoke` shrinks every
+//! knob for CI and skips the RSS asserts (shared runners can't promise
+//! memory behaviour).
+//!
+//! Run: `cargo bench --bench c100k_churn [-- --smoke]`
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use flare::memory::rss::rss_now;
+use flare::reactor::{Reactor, Step, WakeReason};
+use flare::sfm::{inmem, SfmEndpoint};
+use flare::util::bench::print_table;
+use flare::util::bytes::human;
+use flare::util::json::Json;
+use flare::util::rng::SplitMix64;
+
+fn hello() -> Json {
+    Json::obj(vec![("type", Json::str("hello"))])
+}
+
+fn welcome() -> Json {
+    Json::obj(vec![("type", Json::str("welcome"))])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit_row(
+    engine: &str,
+    phase: &str,
+    sessions: usize,
+    rss_delta: u64,
+    wall: Duration,
+    workers_live: usize,
+    workers_peak: usize,
+) {
+    let j = Json::obj(vec![
+        ("bench", Json::str("c100k_churn")),
+        ("row", Json::str("trajectory")),
+        ("engine", Json::str(engine)),
+        ("phase", Json::str(phase)),
+        ("sessions_live", Json::num(sessions as f64)),
+        ("rss_delta_bytes", Json::num(rss_delta as f64)),
+        ("wall_secs", Json::num(wall.as_secs_f64())),
+        ("workers_live", Json::num(workers_live as f64)),
+        ("workers_peak", Json::num(workers_peak as f64)),
+    ]);
+    println!("BENCH_JSON {j}");
+}
+
+/// One threaded-engine session: handshake, then block until the peer hangs
+/// up — exactly how the threaded controller parks an idle client, with one
+/// OS thread pinned for the session's whole lifetime.
+fn threaded_session(ep: SfmEndpoint) {
+    if ep.recv_ctrl(Some(Duration::from_secs(60))).is_err() {
+        return;
+    }
+    let _ = ep.send_ctrl(&welcome());
+    let _ = ep.recv_ctrl(None); // parked until disconnect
+}
+
+/// Admit thread-per-session clients in waves until RSS growth crosses
+/// `budget` (or `cap` sessions). Returns the largest session count still
+/// inside the budget and the RSS delta at that count.
+fn probe_threaded(cap: usize, wave: usize, budget: u64) -> (usize, u64) {
+    let mut servers: Vec<Option<SfmEndpoint>> = Vec::with_capacity(cap);
+    let mut clients: Vec<Option<SfmEndpoint>> = Vec::with_capacity(cap);
+    for _ in 0..cap {
+        let p = inmem::pair(4);
+        servers.push(Some(SfmEndpoint::new(p.a)));
+        clients.push(Some(SfmEndpoint::new(p.b)));
+    }
+    let rss0 = rss_now();
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(cap);
+    let mut ceiling = 0usize;
+    let mut ceiling_rss = 0u64;
+    'waves: for start in (0..cap).step_by(wave) {
+        let end = (start + wave).min(cap);
+        for slot in start..end {
+            let ep = servers[slot].take().unwrap();
+            match thread::Builder::new()
+                .name(format!("sess-{slot}"))
+                .spawn(move || threaded_session(ep))
+            {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Out of threads IS the threaded ceiling.
+                    eprintln!("threaded probe: spawn failed at {} sessions: {e}", handles.len());
+                    break 'waves;
+                }
+            }
+            let c = clients[slot].as_ref().unwrap();
+            if c.send_ctrl(&hello()).is_err() {
+                break 'waves;
+            }
+            // Wait for the welcome so the session thread exists and its
+            // stack is resident before we measure.
+            if c.recv_ctrl(Some(Duration::from_secs(30))).is_err() {
+                break 'waves;
+            }
+        }
+        let delta = rss_now().saturating_sub(rss0);
+        emit_row("threaded", "ramp", handles.len(), delta, t0.elapsed(), handles.len(), handles.len());
+        if delta > budget {
+            break;
+        }
+        ceiling = handles.len();
+        ceiling_rss = delta;
+    }
+    // Hang up every client; parked threads observe the disconnect and exit.
+    clients.clear();
+    for h in handles {
+        let _ = h.join();
+    }
+    (ceiling.max(1), ceiling_rss)
+}
+
+/// Reactor-engine session: drain control frames (answering the first with
+/// a welcome), park between wakes, retire when the peer hangs up. Costs a
+/// session record while parked — no thread, no stack.
+fn reactor_step(ep: Arc<SfmEndpoint>) -> impl FnMut(WakeReason) -> Step + Send + 'static {
+    let mut welcomed = false;
+    move |_reason| loop {
+        match ep.try_recv_ctrl(Duration::ZERO) {
+            Ok(Some(_msg)) => {
+                if !welcomed {
+                    welcomed = true;
+                    if ep.send_ctrl(&welcome()).is_err() {
+                        return Step::Done;
+                    }
+                }
+            }
+            Ok(None) => return Step::Park,
+            Err(_) => return Step::Done, // peer hung up: retire
+        }
+    }
+}
+
+/// Spawn a readiness-driven session and complete its handshake; returns
+/// once the session is parked with the welcome consumed.
+fn join_session(reactor: &Reactor, server: Arc<SfmEndpoint>, client: &SfmEndpoint) -> anyhow::Result<()> {
+    let step_ep = Arc::clone(&server);
+    let (_id, has_waker) = reactor.spawn_on(&server, reactor_step(step_ep));
+    assert!(has_waker, "inmem driver must deliver wakes");
+    client.send_ctrl(&hello())?;
+    client.recv_ctrl(Some(Duration::from_secs(30)))?;
+    Ok(())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let budget: u64 = if smoke { 6 << 20 } else { 16 << 20 };
+    let probe_cap = if smoke { 256 } else { 3000 };
+    let probe_wave = 256;
+    let ramp_wave = 512;
+
+    println!(
+        "c100k_churn: session-engine scalability (smoke={smoke}, rss budget={})",
+        human(budget)
+    );
+
+    let (threaded_max, threaded_rss) = probe_threaded(probe_cap, probe_wave, budget);
+    println!(
+        "threaded ceiling: {threaded_max} sessions (rss delta {})",
+        human(threaded_rss)
+    );
+
+    // Let the OS reclaim probe thread stacks before re-baselining.
+    thread::sleep(Duration::from_millis(200));
+
+    let target = if smoke {
+        1500
+    } else {
+        (10 * threaded_max).clamp(12_000, 40_000)
+    };
+    let churn_steps = if smoke { 3 } else { 10 };
+    let churn_size = (target / 50).max(1);
+    let pool = target + churn_steps * churn_size;
+
+    // Two workers are plenty: parked sessions cost no threads, and the
+    // handshake bodies are microseconds long.
+    let reactor = Reactor::new(2);
+    let mut servers: Vec<Option<Arc<SfmEndpoint>>> = Vec::with_capacity(pool);
+    let mut clients: Vec<Option<SfmEndpoint>> = Vec::with_capacity(pool);
+    for _ in 0..pool {
+        let p = inmem::pair(4);
+        servers.push(Some(Arc::new(SfmEndpoint::new(p.a))));
+        clients.push(Some(SfmEndpoint::new(p.b)));
+    }
+    let rss0 = rss_now();
+    let t0 = Instant::now();
+
+    let ten_x = 10 * threaded_max;
+    let mut rss_at_10x: Option<u64> = None;
+    let mut max_live = 0usize;
+    let mut max_delta = 0u64;
+
+    for start in (0..target).step_by(ramp_wave) {
+        let end = (start + ramp_wave).min(target);
+        for slot in start..end {
+            let server = servers[slot].take().unwrap();
+            let client = clients[slot].as_ref().unwrap();
+            join_session(&reactor, server, client).expect("reactor join");
+        }
+        let live = reactor.session_count();
+        let delta = rss_now().saturating_sub(rss0);
+        let (wl, wp) = reactor.worker_stats();
+        emit_row("reactor", "ramp", live, delta, t0.elapsed(), wl, wp);
+        max_live = max_live.max(live);
+        max_delta = max_delta.max(delta);
+        if rss_at_10x.is_none() && live >= ten_x {
+            rss_at_10x = Some(delta);
+        }
+    }
+
+    // Seeded churn plan: each step hangs up a random 2% of the fleet and
+    // admits the same number of fresh sessions from the pre-created pool.
+    let mut rng = SplitMix64::new(0xC100_C0DE);
+    let mut active: Vec<usize> = (0..target).collect();
+    let mut next_join = target;
+    let mut joins_total = 0usize;
+    let mut leaves_total = 0usize;
+    for _step in 0..churn_steps {
+        let before = reactor.session_count();
+        rng.shuffle(&mut active);
+        let k = churn_size.min(active.len());
+        for _ in 0..k {
+            let slot = active.pop().unwrap();
+            clients[slot] = None; // hang up → waker fires → session retires
+        }
+        let want = before - k;
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while reactor.session_count() > want && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(
+            reactor.session_count(),
+            want,
+            "sessions failed to retire after hangup"
+        );
+        for _ in 0..k {
+            let slot = next_join;
+            next_join += 1;
+            let server = servers[slot].take().unwrap();
+            let client = clients[slot].as_ref().unwrap();
+            join_session(&reactor, server, client).expect("churn join");
+            active.push(slot);
+        }
+        leaves_total += k;
+        joins_total += k;
+        let live = reactor.session_count();
+        let delta = rss_now().saturating_sub(rss0);
+        let (wl, wp) = reactor.worker_stats();
+        emit_row("reactor", "churn", live, delta, t0.elapsed(), wl, wp);
+        max_live = max_live.max(live);
+        max_delta = max_delta.max(delta);
+    }
+
+    let (_, workers_peak) = reactor.worker_stats();
+    let ratio = max_live as f64 / threaded_max as f64;
+    print_table(
+        "c100k churn: session ceilings",
+        &["engine", "max sessions", "rss delta", "threads (peak)"],
+        &[
+            vec![
+                "threaded".into(),
+                threaded_max.to_string(),
+                human(threaded_rss),
+                threaded_max.to_string(),
+            ],
+            vec![
+                "reactor".into(),
+                max_live.to_string(),
+                human(max_delta),
+                workers_peak.to_string(),
+            ],
+        ],
+    );
+    println!("reactor/threaded ceiling ratio: {ratio:.1}x");
+
+    let j = Json::obj(vec![
+        ("bench", Json::str("c100k_churn")),
+        ("row", Json::str("summary")),
+        ("smoke", Json::num(if smoke { 1 } else { 0 })),
+        ("budget_bytes", Json::num(budget as f64)),
+        ("threaded_max_sessions", Json::num(threaded_max as f64)),
+        ("threaded_rss_delta_bytes", Json::num(threaded_rss as f64)),
+        ("reactor_max_sessions", Json::num(max_live as f64)),
+        ("reactor_rss_delta_bytes", Json::num(max_delta as f64)),
+        (
+            "rss_delta_at_10x_bytes",
+            Json::num(rss_at_10x.map(|b| b as f64).unwrap_or(-1.0)),
+        ),
+        ("ceiling_ratio", Json::num(ratio)),
+        ("churn_joins", Json::num(joins_total as f64)),
+        ("churn_leaves", Json::num(leaves_total as f64)),
+        ("workers_peak", Json::num(workers_peak as f64)),
+    ]);
+    println!("BENCH_JSON {j}");
+
+    if !smoke {
+        assert!(
+            max_live >= 10_000,
+            "reactor must hold >= 10k concurrent sessions, got {max_live}"
+        );
+        assert!(
+            max_live >= 10 * threaded_max,
+            "reactor ceiling {max_live} is under 10x the threaded ceiling {threaded_max}"
+        );
+        let at10 = rss_at_10x.expect("ramp crossed the 10x mark");
+        assert!(
+            at10 <= budget,
+            "rss delta {} at the 10x crossing exceeds the {} budget",
+            human(at10),
+            human(budget)
+        );
+    }
+}

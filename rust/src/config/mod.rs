@@ -316,6 +316,47 @@ impl AggregationMode {
     }
 }
 
+/// Session engine driving per-client protocol sessions on the server and
+/// relay tiers. `Threaded` is the legacy thread-per-session engine and
+/// the bit-identity reference; `Reactor` multiplexes sessions onto
+/// [`crate::reactor::Reactor`]'s elastic worker pool (parked sessions
+/// hold no thread), lifting the node's session ceiling by an order of
+/// magnitude at the same RSS (`benches/c100k_churn.rs`). Both engines run
+/// the same protocol bodies, so globals are bit-identical under either.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SessionEngine {
+    #[default]
+    Threaded,
+    Reactor,
+}
+
+impl SessionEngine {
+    pub fn from_name(s: &str) -> Option<SessionEngine> {
+        match s {
+            "threaded" => Some(SessionEngine::Threaded),
+            "reactor" => Some(SessionEngine::Reactor),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SessionEngine::Threaded => "threaded",
+            SessionEngine::Reactor => "reactor",
+        }
+    }
+
+    /// Default engine, honouring the `FLARE_SESSION_ENGINE` environment
+    /// override (how CI replays the full suite under both engines
+    /// without touching every test's config).
+    fn default_from_env() -> SessionEngine {
+        match std::env::var("FLARE_SESSION_ENGINE") {
+            Ok(s) => SessionEngine::from_name(s.trim()).unwrap_or_default(),
+            Err(_) => SessionEngine::Threaded,
+        }
+    }
+}
+
 /// Buffered-mode (FedBuff) aggregation parameters. Ignored under
 /// [`AggregationMode::Sync`].
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -402,6 +443,10 @@ pub struct JobConfig {
     /// Control-plane aggregation mode (synchronous rounds vs FedBuff
     /// buffered asynchrony) and its buffered-mode parameters.
     pub aggregation: AggregationConfig,
+    /// Session engine on the server/relay side: legacy thread-per-session
+    /// or the readiness-driven reactor. Purely an execution-resource
+    /// choice — aggregation results are bit-identical under both.
+    pub session_engine: SessionEngine,
     /// Control-message and weight-transfer timeout used by the
     /// coordinator on both sides, in seconds (>= 1).
     pub transfer_timeout_secs: u64,
@@ -435,6 +480,7 @@ impl Default for JobConfig {
             round_policy: RoundPolicy::default(),
             topology: Topology::Flat,
             aggregation: AggregationConfig::default(),
+            session_engine: SessionEngine::default_from_env(),
             transfer_timeout_secs: DEFAULT_TRANSFER_TIMEOUT_SECS,
             encode_threads: 0,
             seed: 0xF1A2E,
@@ -503,6 +549,11 @@ impl JobConfig {
                 }
                 "transfer_timeout_secs" => {
                     cfg.transfer_timeout_secs = req_usize(v, k)? as u64
+                }
+                "session_engine" => {
+                    let s = req_str(v, k)?;
+                    cfg.session_engine = SessionEngine::from_name(&s)
+                        .ok_or_else(|| anyhow!("unknown session engine '{s}' (threaded|reactor)"))?;
                 }
                 "encode_threads" => cfg.encode_threads = req_usize(v, k)?,
                 "topology" => {
@@ -716,6 +767,7 @@ impl JobConfig {
             ),
             ("reliable", Json::Bool(self.reliable)),
             ("entry_fold", Json::Bool(self.entry_fold)),
+            ("session_engine", Json::str(self.session_engine.name())),
             (
                 "transfer_timeout_secs",
                 Json::num(self.transfer_timeout_secs as f64),
@@ -965,6 +1017,28 @@ mod tests {
         };
         assert_eq!(q.quorum(4), 3);
         assert_eq!(q.quorum(2), 2); // clamped to the selected count
+    }
+
+    #[test]
+    fn session_engine_roundtrip_and_validation() {
+        let cfg = JobConfig {
+            session_engine: SessionEngine::Reactor,
+            ..JobConfig::default()
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.session_engine, SessionEngine::Reactor);
+        // explicit config beats any env default, and names roundtrip
+        for e in [SessionEngine::Threaded, SessionEngine::Reactor] {
+            assert_eq!(SessionEngine::from_name(e.name()), Some(e));
+        }
+        assert_eq!(SessionEngine::from_name("greenlet"), None);
+        let bad = Json::parse(r#"{"session_engine": "greenlet"}"#).unwrap();
+        assert!(JobConfig::from_json(&bad).is_err());
+        let ok = Json::parse(r#"{"session_engine": "reactor"}"#).unwrap();
+        assert_eq!(
+            JobConfig::from_json(&ok).unwrap().session_engine,
+            SessionEngine::Reactor
+        );
     }
 
     #[test]

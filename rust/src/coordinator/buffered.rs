@@ -48,10 +48,11 @@ use super::aggregator::{check_foldable_dtype, FIXED_ONE, MAX_WEIGHT};
 use super::controller::{endpoint_bytes, ClientConn, Controller};
 use super::protocol::CtrlMsg;
 use super::{resume_policy, RoundStats, SUBTREE_WAIT_FACTOR};
-use crate::config::JobConfig;
+use crate::config::{JobConfig, SessionEngine};
 use crate::filter::{EntryChain, FilterContext, FilterPoint, FilterSet};
 use crate::memory::{GaugeReservation, COMM_GAUGE};
 use crate::metrics::Report;
+use crate::reactor::{Reactor, Step, WakeReason};
 use crate::streaming::wire::Entry;
 use crate::streaming::{self, EntryAssembler, EntryFlow, WeightsMsg};
 use crate::tensor::{DType, ParamContainer, Tensor};
@@ -496,10 +497,16 @@ impl Controller {
             cv: Condvar::new(),
         });
         let (evt_tx, evt_rx) = mpsc::channel::<BufEvent>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, ClientConn)>();
         let conns = std::mem::take(&mut self.clients);
         let names: Vec<String> = conns.iter().map(|c| c.name.clone()).collect();
         let subtrees: Vec<usize> = conns.iter().map(|c| c.subtree).collect();
+        let reactor = match self.job.session_engine {
+            SessionEngine::Threaded => None,
+            SessionEngine::Reactor => Some(Reactor::new(n + 1)),
+        };
         let mut handles = Vec::with_capacity(n);
+        let mut wake_ids = Vec::with_capacity(n);
         for (i, conn) in conns.into_iter().enumerate() {
             let filters = match &self.filter_factory {
                 Some(f) => Arc::new((**f)()),
@@ -515,12 +522,34 @@ impl Controller {
             };
             let shared = shared.clone();
             let evt_tx = evt_tx.clone();
-            let h = std::thread::Builder::new()
-                .name(format!("buf-session-{i}"))
-                .spawn(move || buffered_session(ctx, shared, evt_tx))?;
-            handles.push(h);
+            match &reactor {
+                None => {
+                    let h = std::thread::Builder::new()
+                        .name(format!("buf-session-{i}"))
+                        .spawn(move || buffered_session(ctx, shared, evt_tx))?;
+                    handles.push(h);
+                }
+                Some(r) => {
+                    wake_ids.push(r.spawn(buffered_step(ctx, shared, evt_tx, done_tx.clone())));
+                }
+            }
         }
         drop(evt_tx);
+        drop(done_tx);
+        // Reactor sessions park instead of waiting on the condvar, so
+        // every shared-state transition a worker can wait on must also
+        // deliver an engine wake (a no-op under the threaded engine).
+        let reactor_handle = reactor.as_ref().map(|r| r.handle());
+        let engine_wake = move |who: usize| {
+            if let Some(h) = &reactor_handle {
+                h.wake(wake_ids[who]);
+            }
+        };
+        let engine_wake_all = || {
+            for i in 0..n {
+                engine_wake(i);
+            }
+        };
 
         let mut ledger = VersionLedger::new(n);
         let mut agg =
@@ -547,17 +576,23 @@ impl Controller {
                 log::warn!("buffered run: all sessions retired at version {}", s.version);
             }
             sh.cv.notify_all();
+            drop(s);
+            engine_wake(who);
         };
         // Mark a session's result fully handled and wake its worker.
         let ack = |who: usize, sh: &SharedState| {
             let mut s = sh.mu.lock().unwrap();
             s.acked[who] += 1;
             sh.cv.notify_all();
+            drop(s);
+            engine_wake(who);
         };
         let flag_done = |sh: &SharedState| {
             let mut s = sh.mu.lock().unwrap();
             s.done = true;
             sh.cv.notify_all();
+            drop(s);
+            engine_wake_all();
         };
 
         for evt in evt_rx.iter() {
@@ -683,7 +718,7 @@ impl Controller {
                             }
                         };
                         let v = agg.version();
-                        {
+                        let now_done = {
                             let mut s = shared.mu.lock().unwrap();
                             s.version = v;
                             s.global = Arc::new(g.clone());
@@ -691,6 +726,10 @@ impl Controller {
                                 s.done = true;
                             }
                             shared.cv.notify_all();
+                            s.done
+                        };
+                        if now_done {
+                            engine_wake_all();
                         }
                         let mean_loss = if win_loss_n > 0 {
                             (win_loss_sum / win_loss_n as f64) as f32
@@ -734,13 +773,23 @@ impl Controller {
             }
         }
 
-        // Channel closed: every worker saw done/dead (or failed) and is
+        // Channel closed: every session saw done/dead (or failed) and is
         // returning its connection after telling the client Done.
         let mut conns: Vec<Option<ClientConn>> = (0..n).map(|_| None).collect();
-        for h in handles {
-            match h.join() {
-                Ok((i, conn)) => conns[i] = Some(conn),
-                Err(_) => bail!("buffered session worker panicked"),
+        match reactor {
+            None => {
+                for h in handles {
+                    match h.join() {
+                        Ok((i, conn)) => conns[i] = Some(conn),
+                        Err(_) => bail!("buffered session worker panicked"),
+                    }
+                }
+            }
+            Some(r) => {
+                while let Ok((i, conn)) = done_rx.recv() {
+                    conns[i] = Some(conn);
+                }
+                drop(r); // joins the worker pool and the timer thread
             }
         }
         self.clients = conns.into_iter().flatten().collect();
@@ -820,6 +869,79 @@ fn buffered_session(
     }
     let _ = ctx.conn.ep.send_ctrl(&CtrlMsg::Done.to_json());
     (ctx.idx, ctx.conn)
+}
+
+/// Retire a reactor session: tell the client Done, hand the connection
+/// back through the fan-in, and finish the step.
+fn retire_session(
+    ctx: &mut Option<BufCtx>,
+    done_tx: &mpsc::Sender<(usize, ClientConn)>,
+) -> Step {
+    if let Some(c) = ctx.take() {
+        let _ = c.conn.ep.send_ctrl(&CtrlMsg::Done.to_json());
+        let _ = done_tx.send((c.idx, c.conn));
+    }
+    Step::Done
+}
+
+/// Reactor form of [`buffered_session`]: one full versioned exchange per
+/// step, parked threadless while the driver's ack is outstanding (the
+/// driver's `engine_wake` resumes it). The exchange body and the
+/// ack-before-reissue ordering are identical to the threaded worker, so
+/// staleness assignments — and therefore the exact Q64.64 folds — match
+/// bit-for-bit.
+fn buffered_step(
+    ctx: BufCtx,
+    shared: Arc<SharedState>,
+    evt_tx: mpsc::Sender<BufEvent>,
+    done_tx: mpsc::Sender<(usize, ClientConn)>,
+) -> impl FnMut(WakeReason) -> Step + Send + 'static {
+    let mut ctx = Some(ctx);
+    let mut sent = 0u64;
+    move |_reason| {
+        let idx = match ctx.as_ref() {
+            Some(c) => c.idx,
+            None => return Step::Done,
+        };
+        let (version, global) = {
+            let s = shared.mu.lock().unwrap();
+            if s.done || s.dead[idx] {
+                drop(s);
+                return retire_session(&mut ctx, &done_tx);
+            }
+            if s.acked[idx] < sent {
+                // Driver hasn't handled our last result yet; its ack
+                // wakes us, keeping staleness schedule-determined.
+                return Step::Park;
+            }
+            (s.version, s.global.clone())
+        };
+        if evt_tx
+            .send(BufEvent::Issued {
+                client: idx,
+                version,
+            })
+            .is_err()
+        {
+            return retire_session(&mut ctx, &done_tx);
+        }
+        let c = ctx.as_mut().expect("buffered session ctx");
+        match buffered_exchange(c, version, global) {
+            Ok(evt) => {
+                sent += 1;
+                if evt_tx.send(evt).is_err() {
+                    return retire_session(&mut ctx, &done_tx);
+                }
+                // Re-check state promptly; the next pass parks until the
+                // driver acks this result.
+                Step::Yield
+            }
+            Err(err) => {
+                let _ = evt_tx.send(BufEvent::Failed { client: idx, err });
+                retire_session(&mut ctx, &done_tx)
+            }
+        }
+    }
 }
 
 /// One scatter → train-wait → gather exchange under a `VersionedTask`.

@@ -26,11 +26,20 @@
 //! tainted the shared accumulator, so the engine **restarts the round**
 //! without it — deterministic trainers make the retry bit-identical to a
 //! round that never selected the failed client.
+//!
+//! With `JobConfig.session_engine: reactor` the per-client sessions run
+//! on the readiness-driven [`crate::reactor`] engine instead of one
+//! thread each: sessions park threadless between commands and an
+//! elastic worker pool executes the identical round bodies, so a node
+//! multiplexes tens of thousands of idle sessions at a few hundred
+//! bytes apiece while the fold stays bit-identical to the threaded
+//! engine.
 
 use super::aggregator::{EntryFold, FedAvg, FoldOutcome};
 use super::protocol::CtrlMsg;
 use super::{resume_policy, RoundStats};
-use crate::config::JobConfig;
+use crate::config::{JobConfig, SessionEngine};
+use crate::reactor::{Reactor, ReactorHandle, SessionId, Step, WakeReason};
 use crate::filter::{EntryChain, FilterContext, FilterFactory, FilterPoint, FilterSet};
 use crate::memory::{GaugeReservation, COMM_GAUGE};
 use crate::metrics::Report;
@@ -101,6 +110,43 @@ enum SessionCmd {
     },
     /// Not sampled this round: notify the client, stand by.
     Skip { round: usize },
+}
+
+/// Round-loop handle to one session, abstracting over the engine. The
+/// threaded engine's sessions block on their command channel; reactor
+/// sessions are parked and must be woken after a command is queued.
+/// Dropping the port closes the channel (and, on the reactor, delivers
+/// the shutdown wake), which is how the round loop retires sessions.
+enum SessionPort {
+    Thread(mpsc::Sender<SessionCmd>),
+    Reactor {
+        /// `Option` so `Drop` can close the channel *before* the wake.
+        tx: Option<mpsc::Sender<SessionCmd>>,
+        handle: ReactorHandle,
+        id: SessionId,
+    },
+}
+
+impl SessionPort {
+    fn send(&self, cmd: SessionCmd) -> std::result::Result<(), ()> {
+        match self {
+            SessionPort::Thread(tx) => tx.send(cmd).map_err(|_| ()),
+            SessionPort::Reactor { tx, handle, id } => {
+                tx.as_ref().ok_or(())?.send(cmd).map_err(|_| ())?;
+                handle.wake(*id);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Drop for SessionPort {
+    fn drop(&mut self) {
+        if let SessionPort::Reactor { tx, handle, id } = self {
+            drop(tx.take()); // disconnect first, then deliver the wake
+            handle.wake(*id);
+        }
+    }
 }
 
 /// Session → controller fan-in event (one per issued task).
@@ -249,12 +295,22 @@ impl Controller {
         self.tasks_sent = vec![0; n];
         self.rounds.clear();
 
-        // One session worker per client; the fan-in channel carries
-        // finished contributions back in arrival order.
+        // One session per client; the fan-in channel carries finished
+        // contributions back in arrival order. Under the threaded engine
+        // each session owns a thread; under the reactor engine sessions
+        // park threadless between commands and an elastic worker pool
+        // (sized so every concurrently-tasked fold stream can run — the
+        // EntryFold frontier blocks, see `crate::reactor::core`) executes
+        // the identical round bodies.
         let (evt_tx, evt_rx) = mpsc::channel::<SessionEvent>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, ClientConn)>();
         let conns = std::mem::take(&mut self.clients);
         let names: Vec<String> = conns.iter().map(|c| c.name.clone()).collect();
-        let mut cmd_txs = Vec::with_capacity(n);
+        let reactor = match self.job.session_engine {
+            SessionEngine::Threaded => None,
+            SessionEngine::Reactor => Some(Reactor::new(n + 1)),
+        };
+        let mut ports = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for (i, conn) in conns.into_iter().enumerate() {
             let (cmd_tx, cmd_rx) = mpsc::channel::<SessionCmd>();
@@ -271,32 +327,57 @@ impl Controller {
                 result_chain: None,
             };
             let evt_tx = evt_tx.clone();
-            let h = std::thread::Builder::new()
-                .name(format!("session-{i}"))
-                .spawn(move || session_loop(ctx, cmd_rx, evt_tx))?;
-            cmd_txs.push(cmd_tx);
-            handles.push(h);
+            match &reactor {
+                None => {
+                    let h = std::thread::Builder::new()
+                        .name(format!("session-{i}"))
+                        .spawn(move || session_loop(ctx, cmd_rx, evt_tx))?;
+                    ports.push(SessionPort::Thread(cmd_tx));
+                    handles.push(h);
+                }
+                Some(r) => {
+                    let id = r.spawn(session_step(ctx, cmd_rx, evt_tx, done_tx.clone()));
+                    ports.push(SessionPort::Reactor {
+                        tx: Some(cmd_tx),
+                        handle: r.handle(),
+                        id,
+                    });
+                }
+            }
         }
-        drop(evt_tx); // workers hold the only senders
+        drop(evt_tx); // sessions hold the only senders
+        drop(done_tx);
 
-        let outcome = self.drive_rounds(global, report, &names, &cmd_txs, &evt_rx);
+        let outcome = self.drive_rounds(global, report, &names, &ports, &evt_rx);
 
         // Closing the command channels shuts the sessions down: each
-        // worker drains any in-flight round, tells its client Done, and
+        // one drains any in-flight round, tells its client Done, and
         // returns the connection.
-        drop(cmd_txs);
+        drop(ports);
         let global = match outcome {
             Ok(g) => g,
             // Abort: don't block on stragglers or hung transfers — the
-            // detached workers drain and send Done on their own.
+            // detached sessions drain and send Done on their own.
             Err(e) => return Err(e),
         };
 
         let mut conns: Vec<Option<ClientConn>> = (0..n).map(|_| None).collect();
-        for h in handles {
-            match h.join() {
-                Ok((i, conn)) => conns[i] = Some(conn),
-                Err(_) => bail!("session worker panicked"),
+        match reactor {
+            None => {
+                for h in handles {
+                    match h.join() {
+                        Ok((i, conn)) => conns[i] = Some(conn),
+                        Err(_) => bail!("session worker panicked"),
+                    }
+                }
+            }
+            Some(r) => {
+                // Every retiring session sends its connection back; the
+                // channel closes once the last session step is dropped.
+                while let Ok((i, conn)) = done_rx.recv() {
+                    conns[i] = Some(conn);
+                }
+                drop(r); // joins the worker pool and the timer thread
             }
         }
         self.clients = conns.into_iter().flatten().collect();
@@ -373,7 +454,7 @@ impl Controller {
         mut global: ParamContainer,
         report: &mut Report,
         names: &[String],
-        cmd_txs: &[mpsc::Sender<SessionCmd>],
+        ports: &[SessionPort],
         evt_rx: &mpsc::Receiver<SessionEvent>,
     ) -> Result<ParamContainer> {
         let n = names.len();
@@ -401,7 +482,7 @@ impl Controller {
             let global_arc = Arc::new(global.clone());
             for i in 0..n {
                 if pos_of[i] == usize::MAX && !dead[i] {
-                    let _ = cmd_txs[i].send(SessionCmd::Skip { round });
+                    let _ = ports[i].send(SessionCmd::Skip { round });
                 }
             }
 
@@ -462,7 +543,7 @@ impl Controller {
                             pos,
                         }),
                     };
-                    if cmd_txs[i].send(cmd).is_ok() {
+                    if ports[i].send(cmd).is_ok() {
                         outstanding += 1;
                     } else {
                         dead[i] = true;
@@ -950,6 +1031,64 @@ fn session_loop(
     }
     let _ = ctx.conn.ep.send_ctrl(&CtrlMsg::Done.to_json());
     (ctx.idx, ctx.conn)
+}
+
+/// Reactor form of [`session_loop`]: the same command → round-body →
+/// event cycle written as a resumable step. Parked between commands the
+/// session holds no thread; a pool worker runs each command with the
+/// identical blocking body ([`run_client_round`]), so the fold order —
+/// and therefore the aggregate — is bit-identical to the threaded
+/// engine under `RoundPolicy::default()`. On disconnect the session
+/// tells its client Done, hands the connection back, and retires.
+fn session_step(
+    ctx: SessionCtx,
+    cmd_rx: mpsc::Receiver<SessionCmd>,
+    evt_tx: mpsc::Sender<SessionEvent>,
+    done_tx: mpsc::Sender<(usize, ClientConn)>,
+) -> impl FnMut(WakeReason) -> Step + Send + 'static {
+    let mut ctx = Some(ctx);
+    move |_reason| loop {
+        match cmd_rx.try_recv() {
+            Ok(cmd) => {
+                let Some(c) = ctx.as_mut() else {
+                    return Step::Done;
+                };
+                match cmd {
+                    SessionCmd::Skip { round } => {
+                        if let Err(e) = c.conn.ep.send_ctrl(&CtrlMsg::NoTask { round }.to_json()) {
+                            log::warn!("session '{}': no-task notify failed: {e:#}", c.conn.name);
+                        }
+                    }
+                    SessionCmd::Task {
+                        round,
+                        attempt,
+                        global,
+                        fold,
+                    } => {
+                        let payload = match run_client_round(c, round, global, fold) {
+                            Ok(RoundOutcome::Done(contrib)) => SessionOutcome::Done(contrib),
+                            Ok(RoundOutcome::Dropped) => SessionOutcome::Dropped,
+                            Err(e) => SessionOutcome::Failed(e),
+                        };
+                        let _ = evt_tx.send(SessionEvent {
+                            client: c.idx,
+                            round,
+                            attempt,
+                            payload,
+                        });
+                    }
+                }
+            }
+            Err(mpsc::TryRecvError::Empty) => return Step::Park,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                if let Some(c) = ctx.take() {
+                    let _ = c.conn.ep.send_ctrl(&CtrlMsg::Done.to_json());
+                    let _ = done_tx.send((c.idx, c.conn));
+                }
+                return Step::Done;
+            }
+        }
+    }
 }
 
 /// One client's scatter → train-wait → gather (the body the legacy

@@ -13,6 +13,9 @@
 //! * [`quant`] — fp16 / bf16 / blockwise8 / fp4 / nf4 codecs.
 //! * [`coordinator`] — concurrent round engine (per-client sessions,
 //!   sampling / quorum / deadlines / partial aggregation) + FedAvg.
+//! * [`reactor`] — readiness-driven session engine (C100K): parked
+//!   sessions hold no thread; an elastic worker pool plus a deadline
+//!   wheel multiplex tens of thousands of sessions per node.
 //! * [`topology`] — hierarchical relay-aggregation tier: tree topologies
 //!   whose relays pre-fold entry streams at the edge and ship exact
 //!   `PartialAggregate` sums upstream.
@@ -25,6 +28,7 @@ pub mod filter;
 pub mod memory;
 pub mod metrics;
 pub mod quant;
+pub mod reactor;
 pub mod runtime;
 pub mod sfm;
 pub mod streaming;

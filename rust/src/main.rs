@@ -4,6 +4,7 @@
 //!   simulate      in-process federated run (paper's evaluation setup)
 //!   server        listen for TCP clients and run the controller
 //!   client        connect to a server and execute tasks
+//!   relay         mid-tier relay: pre-fold a subtree between clients and server
 //!   train         centralized baseline training
 //!   layer-sizes   print Table I (layer-wise model sizes)
 //!   quantize      print Table II (message sizes under quantization)
@@ -47,9 +48,11 @@ COMMANDS:
                 --entry-fold true|false --encode-threads 0
                 --topology flat|tree --branching 4
                 --aggregation-mode sync|buffered --buffer-k 4
-                --staleness-alpha 0.5]
+                --staleness-alpha 0.5 --session-engine threaded|reactor]
   server        --listen 127.0.0.1:7777 --job <file>
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
+  relay         --connect 127.0.0.1:7777 --listen 127.0.0.1:7778 --name relay-1
+                [--children N | --clients N --branching 4 --index 0] --job <file>
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
   layer-sizes   [--model 1b]                      (Table I)
   quantize      [--model 1b] [--encode]           (Table II)
@@ -65,6 +68,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "server" => cmd_server(&args),
         "client" => cmd_client(&args),
+        "relay" => cmd_relay(&args),
         "train" => cmd_train(&args),
         "layer-sizes" => cmd_layer_sizes(&args),
         "quantize" => cmd_quantize(&args),
@@ -157,6 +161,12 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
     job.aggregation.buffer_k = args.get_usize("buffer-k", job.aggregation.buffer_k);
     job.aggregation.staleness_alpha =
         args.get_f64("staleness-alpha", job.aggregation.staleness_alpha);
+    // Session engine on the server/relay side: thread-per-session or the
+    // readiness-driven reactor (results are bit-identical under both).
+    if let Some(se) = args.get("session-engine") {
+        job.session_engine = flare::config::SessionEngine::from_name(se)
+            .ok_or_else(|| anyhow!("bad session-engine '{se}' (threaded|reactor)"))?;
+    }
     // Quantization kernel parallelism (0 = auto).
     job.encode_threads = args.get_usize("encode-threads", job.encode_threads);
     job.validate()?;
@@ -335,6 +345,92 @@ fn cmd_client(args: &Args) -> Result<()> {
     .with_timeout(job.transfer_timeout());
     let rounds = exec.run()?;
     println!("completed {rounds} task rounds");
+    Ok(())
+}
+
+/// How many child connections this relay should accept: `--children N`
+/// explicitly, or derived from the planned tree (`--clients` +
+/// `--branching`, same [`flare::topology::plan`] the simulator uses)
+/// where `--index` selects which of the root's relay subtrees this
+/// process serves.
+fn relay_fanout(args: &Args, job: &JobConfig) -> Result<usize> {
+    if let Some(n) = args.get("children") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow!("children: expected integer, got '{n}'"))?;
+        if n == 0 {
+            bail!("relay needs at least one child");
+        }
+        return Ok(n);
+    }
+    let branching = match job.topology {
+        flare::config::Topology::Tree { branching } => branching,
+        flare::config::Topology::Flat => args.get_usize("branching", 4),
+    };
+    if args.get("clients").is_none() {
+        // No plan inputs: a single-tier relay taking `branching` clients.
+        return Ok(branching);
+    }
+    let nodes = flare::topology::plan(
+        &flare::config::Topology::Tree { branching },
+        job.clients,
+        job.seed,
+    );
+    let index = args.get_usize("index", 0);
+    match nodes.get(index) {
+        Some(flare::topology::TreeNode::Relay(children)) => Ok(children.len()),
+        Some(flare::topology::TreeNode::Client(_)) => bail!(
+            "planned subtree {index} is a direct client, not a relay — \
+             connect it straight to the server"
+        ),
+        None => bail!(
+            "planned tree has only {} root subtree(s), no index {index}",
+            nodes.len()
+        ),
+    }
+}
+
+/// Mid-tier relay over TCP: accept child registrations on `--listen`,
+/// register upstream at `--connect`, pre-fold the subtree every round.
+/// The job config (file or flags) must match the server's — the relay
+/// forwards it to its children in their Welcome.
+fn cmd_relay(args: &Args) -> Result<()> {
+    let job = job_from_args(args)?;
+    let name = args.get_or("name", "relay-1").to_string();
+    let upstream = args.get_or("connect", "127.0.0.1:7777");
+    let listen = args.get_or("listen", "127.0.0.1:7778");
+    let fanout = relay_fanout(args, &job)?;
+    let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+    println!(
+        "relay '{name}': engine {}, waiting for {fanout} child connection(s) on {listen}...",
+        job.session_engine.name()
+    );
+    let mut children = Vec::with_capacity(fanout);
+    for _ in 0..fanout {
+        let driver = TcpDriver::accept(&listener)?;
+        children.push(SfmEndpoint::new(Box::new(driver)).with_chunk(job.chunk_bytes as usize));
+    }
+    let driver = TcpDriver::connect(upstream).with_context(|| format!("connect {upstream}"))?;
+    let up = SfmEndpoint::new(Box::new(driver)).with_chunk(job.chunk_bytes as usize);
+    let spool = std::env::temp_dir().join(format!("flare_relay_{}", std::process::id()));
+    std::fs::create_dir_all(&spool)?;
+    let quant = job.quant;
+    let node = flare::topology::RelayNode::new(
+        name,
+        job,
+        up,
+        children,
+        std::sync::Arc::new(move || FilterSet::two_way_quantization(quant)),
+        spool,
+    );
+    let stats = node.run()?;
+    println!(
+        "relay '{}' done: {} children, {} leaves, {} round(s) served",
+        stats.name,
+        stats.fanin,
+        stats.leaf_clients,
+        stats.rounds.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,666 @@
+//! Readiness-driven session engine.
+//!
+//! The threaded engine owns one OS thread per session for the session's
+//! whole lifetime — including every second it spends parked in a
+//! `recv_timeout` or waiting for a round to open. The reactor inverts
+//! that: a session is a heap-allocated state machine (`FnMut(WakeReason)
+//! -> Step`) that only occupies a thread while it is actually stepping.
+//! Parked sessions cost a map entry and their captured state — no stack,
+//! no kernel task — which is what lets one node hold 10k–100k of them.
+//!
+//! Three cooperating parts:
+//!
+//! - **Sessions**: spawned with [`Reactor::spawn`] (woken explicitly via
+//!   [`ReactorHandle::wake`]) or [`Reactor::spawn_on`] (woken by driver
+//!   readiness — the endpoint's [`DriverWaker`] fires when the peer sends
+//!   or disconnects). A step runs until it returns [`Step::Park`] /
+//!   [`Step::ParkFor`] (wait for readiness / deadline), [`Step::Yield`]
+//!   (requeue for fairness), or [`Step::Done`].
+//! - **Elastic worker pool**: workers are spawned on demand up to
+//!   `max_workers` and reaped after an idle keepalive. Steps are allowed
+//!   to block (the ported consumers run their existing blocking protocol
+//!   bodies unchanged — that is what keeps them bit-identical to the
+//!   threaded engine), so `max_workers` must be at least the number of
+//!   steps that can block on each other: the shared `EntryFold` frontier
+//!   makes concurrently-tasked fold streams interdependent, so consumers
+//!   size the pool to their fan-in (see `coordinator`/`topology`).
+//! - **Deadline wheel + timer thread**: every `ParkFor` arms one wheel
+//!   timer; a single timer thread sleeps until the earliest deadline and
+//!   requeues expired sessions with [`WakeReason::Deadline`]. This
+//!   replaces the per-thread timeout sleeps of the threaded engine.
+//!
+//! Wake coalescing: a wake for an idle session queues it; for a queued
+//! session it is absorbed; for a running session it marks re-run, so the
+//! session steps again after parking. Combined with edge-style wakers
+//! (the in-memory driver fires on every peer send and on disconnect)
+//! this yields the standard edge-triggered contract: **a step must drain
+//! its readiness source until empty before parking**, or it may sleep on
+//! buffered input.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::reactor::wheel::DeadlineWheel;
+use crate::sfm::driver::DriverWaker;
+use crate::sfm::SfmEndpoint;
+
+/// Identifies a session within one reactor.
+pub type SessionId = u64;
+
+/// Why a session step is being run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeReason {
+    /// Explicit wake ([`ReactorHandle::wake`]) or driver readiness.
+    Notified,
+    /// A `ParkFor` deadline elapsed.
+    Deadline,
+}
+
+/// What a session step wants next.
+pub enum Step {
+    /// Sleep until the next wake. The step must have drained its
+    /// readiness source first (edge-triggered contract).
+    Park,
+    /// Sleep until a wake or until the deadline elapses, whichever is
+    /// first. Replaces `recv_timeout`-style waits.
+    ParkFor(Duration),
+    /// Requeue immediately (fairness point between work items).
+    Yield,
+    /// Session complete: the closure is dropped and the id retired.
+    Done,
+}
+
+type StepFn = Box<dyn FnMut(WakeReason) -> Step + Send>;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RunState {
+    /// Parked: not queued, not running. The only state with an armed timer.
+    Idle,
+    /// In the run queue awaiting a worker.
+    Queued,
+    /// A worker is inside the step closure.
+    Running,
+    /// Running, and a wake arrived meanwhile: requeue on park.
+    RunningWake,
+}
+
+struct Session {
+    /// Taken by the worker while stepping (so the core lock is not held
+    /// across user code), restored on park/yield.
+    step: Option<StepFn>,
+    state: RunState,
+    reason: WakeReason,
+    timer: Option<u64>,
+}
+
+struct Core {
+    sessions: HashMap<SessionId, Session>,
+    queue: VecDeque<SessionId>,
+    wheel: DeadlineWheel,
+    next_id: SessionId,
+    idle_workers: usize,
+    live_workers: usize,
+    peak_workers: usize,
+    max_workers: usize,
+    keepalive: Duration,
+    shutdown: bool,
+}
+
+struct Shared {
+    mu: Mutex<Core>,
+    /// Workers wait here for queue items.
+    cv: Condvar,
+    /// The timer thread waits here for earlier deadlines / shutdown.
+    timer_cv: Condvar,
+    /// JoinHandles of spawned workers. Lock order: `mu` before `workers`.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Cheap, clonable wake handle. Holds only a weak reference, so wakers
+/// stored inside drivers never keep a dead reactor alive.
+#[derive(Clone)]
+pub struct ReactorHandle {
+    shared: Weak<Shared>,
+}
+
+impl ReactorHandle {
+    /// Wake `id`. Returns false if the reactor is gone or the session
+    /// already completed (both benign — e.g. a disconnect racing a Done).
+    pub fn wake(&self, id: SessionId) -> bool {
+        let Some(shared) = self.shared.upgrade() else {
+            return false;
+        };
+        let mut core = shared.mu.lock().unwrap();
+        wake_locked(&shared, &mut core, id)
+    }
+
+    /// A [`DriverWaker`] that wakes `id`; hand this to
+    /// `SfmEndpoint::register_waker`.
+    pub fn waker(&self, id: SessionId) -> DriverWaker {
+        let h = self.clone();
+        Arc::new(move || {
+            h.wake(id);
+        })
+    }
+}
+
+/// The session engine. Dropping it shuts the pool down and joins every
+/// worker plus the timer thread; sessions still registered are dropped
+/// (their closures and captured endpoints are freed), which a peer
+/// observes as a disconnect.
+pub struct Reactor {
+    shared: Arc<Shared>,
+    timer: Option<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// `max_workers` caps concurrent steps. Because ported consumers run
+    /// blocking protocol bodies, size it to the largest set of sessions
+    /// that must make progress together (e.g. fan-in + 1 for a shared
+    /// `EntryFold`); parked sessions are free regardless.
+    pub fn new(max_workers: usize) -> Reactor {
+        Reactor::with_keepalive(max_workers, Duration::from_millis(250))
+    }
+
+    pub fn with_keepalive(max_workers: usize, keepalive: Duration) -> Reactor {
+        let shared = Arc::new(Shared {
+            mu: Mutex::new(Core {
+                sessions: HashMap::new(),
+                queue: VecDeque::new(),
+                wheel: DeadlineWheel::with_defaults(),
+                next_id: 1,
+                idle_workers: 0,
+                live_workers: 0,
+                peak_workers: 0,
+                max_workers: max_workers.max(1),
+                keepalive,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            timer_cv: Condvar::new(),
+            workers: Mutex::new(Vec::new()),
+        });
+        let timer = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("flare-reactor-timer".into())
+                .spawn(move || timer_loop(&sh))
+                .expect("spawn reactor timer thread")
+        };
+        Reactor {
+            shared,
+            timer: Some(timer),
+        }
+    }
+
+    pub fn handle(&self) -> ReactorHandle {
+        ReactorHandle {
+            shared: Arc::downgrade(&self.shared),
+        }
+    }
+
+    /// Register a session and queue its first step (reason `Notified`).
+    pub fn spawn<F>(&self, step: F) -> SessionId
+    where
+        F: FnMut(WakeReason) -> Step + Send + 'static,
+    {
+        let mut core = self.shared.mu.lock().unwrap();
+        let id = core.next_id;
+        core.next_id += 1;
+        core.sessions.insert(
+            id,
+            Session {
+                step: Some(Box::new(step)),
+                state: RunState::Queued,
+                reason: WakeReason::Notified,
+                timer: None,
+            },
+        );
+        core.queue.push_back(id);
+        dispatch(&self.shared, &mut core);
+        id
+    }
+
+    /// Spawn a readiness-driven session: registers a waker on `ep`'s
+    /// driver so peer sends and disconnects wake it. The initial queued
+    /// step covers anything that arrived before registration. Returns
+    /// `(id, has_waker)`; when the driver cannot deliver wakes
+    /// (`has_waker == false`, e.g. plain TCP), the step must use
+    /// `ParkFor` poll ticks instead of `Park`.
+    pub fn spawn_on<F>(&self, ep: &SfmEndpoint, step: F) -> (SessionId, bool)
+    where
+        F: FnMut(WakeReason) -> Step + Send + 'static,
+    {
+        let id = self.spawn(step);
+        let has_waker = ep.register_waker(self.handle().waker(id));
+        (id, has_waker)
+    }
+
+    /// Wake `id` (see [`ReactorHandle::wake`]).
+    pub fn wake(&self, id: SessionId) -> bool {
+        let mut core = self.shared.mu.lock().unwrap();
+        wake_locked(&self.shared, &mut core, id)
+    }
+
+    /// Sessions currently registered (parked, queued, or running).
+    pub fn session_count(&self) -> usize {
+        self.shared.mu.lock().unwrap().sessions.len()
+    }
+
+    /// `(live, peak)` worker-thread counts — the "threads track active
+    /// work, not sessions" claim in numbers.
+    pub fn worker_stats(&self) -> (usize, usize) {
+        let core = self.shared.mu.lock().unwrap();
+        (core.live_workers, core.peak_workers)
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        {
+            let mut core = self.shared.mu.lock().unwrap();
+            core.shutdown = true;
+            self.shared.cv.notify_all();
+            self.shared.timer_cv.notify_all();
+        }
+        let handles = std::mem::take(&mut *self.shared.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(t) = self.timer.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Queue-state transition for a wake. Core lock held.
+fn wake_locked(shared: &Arc<Shared>, core: &mut Core, id: SessionId) -> bool {
+    let Some(sess) = core.sessions.get_mut(&id) else {
+        return false;
+    };
+    match sess.state {
+        RunState::Idle => {
+            if let Some(t) = sess.timer.take() {
+                core.wheel.cancel(t);
+            }
+            sess.reason = WakeReason::Notified;
+            sess.state = RunState::Queued;
+            core.queue.push_back(id);
+            dispatch(shared, core);
+        }
+        RunState::Queued => {} // absorbed
+        RunState::Running => {
+            core.sessions.get_mut(&id).unwrap().state = RunState::RunningWake;
+        }
+        RunState::RunningWake => {} // absorbed
+    }
+    true
+}
+
+/// Make sure a worker will service the queue: notify an idle one, or
+/// grow the pool if under the cap. Core lock held (lock order mu →
+/// workers).
+fn dispatch(shared: &Arc<Shared>, core: &mut Core) {
+    if core.queue.is_empty() {
+        return;
+    }
+    if core.idle_workers > 0 {
+        shared.cv.notify_one();
+        return;
+    }
+    if core.live_workers >= core.max_workers {
+        return; // running workers will drain the queue as they finish
+    }
+    core.live_workers += 1;
+    core.peak_workers = core.peak_workers.max(core.live_workers);
+    let sh = Arc::clone(shared);
+    match std::thread::Builder::new()
+        .name("flare-reactor".into())
+        .spawn(move || worker_loop(&sh))
+    {
+        Ok(h) => {
+            let mut workers = shared.workers.lock().unwrap();
+            workers.retain(|w| !w.is_finished()); // detach-drop reaped workers
+            workers.push(h);
+        }
+        Err(e) => {
+            core.live_workers -= 1;
+            log::warn!("reactor worker spawn failed: {e}");
+            shared.cv.notify_one();
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    let mut core = shared.mu.lock().unwrap();
+    loop {
+        // Claim the next queued session, or idle out.
+        let id = loop {
+            if core.shutdown {
+                core.live_workers -= 1;
+                return;
+            }
+            if let Some(id) = core.queue.pop_front() {
+                break id;
+            }
+            core.idle_workers += 1;
+            let keepalive = core.keepalive;
+            let (c, timeout) = shared.cv.wait_timeout(core, keepalive).unwrap();
+            core = c;
+            core.idle_workers -= 1;
+            if timeout.timed_out() && core.queue.is_empty() && !core.shutdown {
+                core.live_workers -= 1;
+                return; // elastic reap: idle past keepalive
+            }
+        };
+        let Some(sess) = core.sessions.get_mut(&id) else {
+            continue; // retired while queued (cannot happen today; defensive)
+        };
+        sess.state = RunState::Running;
+        let reason = sess.reason;
+        sess.reason = WakeReason::Notified;
+        let mut step = sess.step.take().expect("queued session owns its step");
+
+        drop(core);
+        let out = step(reason);
+        core = shared.mu.lock().unwrap();
+
+        if core.shutdown {
+            core.live_workers -= 1;
+            return;
+        }
+        let Some(sess) = core.sessions.get_mut(&id) else {
+            continue;
+        };
+        match out {
+            Step::Done => {
+                core.sessions.remove(&id);
+            }
+            Step::Yield => {
+                sess.step = Some(step);
+                sess.state = RunState::Queued;
+                core.queue.push_back(id);
+            }
+            Step::Park | Step::ParkFor(_) => {
+                sess.step = Some(step);
+                if sess.state == RunState::RunningWake {
+                    // A wake raced the step: run again rather than sleep.
+                    sess.state = RunState::Queued;
+                    sess.reason = WakeReason::Notified;
+                    core.queue.push_back(id);
+                } else {
+                    sess.state = RunState::Idle;
+                    if let Step::ParkFor(d) = out {
+                        let t = core.wheel.insert(Instant::now() + d, id);
+                        sess.timer = Some(t);
+                        shared.timer_cv.notify_one();
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn timer_loop(shared: &Arc<Shared>) {
+    let mut core = shared.mu.lock().unwrap();
+    loop {
+        if core.shutdown {
+            return;
+        }
+        let now = Instant::now();
+        for token in core.wheel.expired(now) {
+            let id = token as SessionId;
+            // Only Idle sessions hold armed timers; anything else means
+            // the session raced a wake or completed — skip.
+            let Some(sess) = core.sessions.get_mut(&id) else {
+                continue;
+            };
+            if sess.state != RunState::Idle {
+                continue;
+            }
+            sess.timer = None;
+            sess.reason = WakeReason::Deadline;
+            sess.state = RunState::Queued;
+            core.queue.push_back(id);
+            dispatch(shared, &mut core);
+        }
+        core = match core.wheel.next_deadline() {
+            Some(dl) => {
+                let wait = dl.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    continue;
+                }
+                shared.timer_cv.wait_timeout(core, wait).unwrap().0
+            }
+            None => shared.timer_cv.wait(core).unwrap().0,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
+
+    fn wait_until(timeout: Duration, mut pred: impl FnMut() -> bool) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if pred() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        pred()
+    }
+
+    #[test]
+    fn spawn_runs_and_done_retires() {
+        let r = Reactor::new(2);
+        let (tx, rx) = mpsc::channel();
+        r.spawn(move |reason| {
+            tx.send(reason).unwrap();
+            Step::Done
+        });
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            WakeReason::Notified
+        );
+        assert!(wait_until(Duration::from_secs(5), || r.session_count() == 0));
+    }
+
+    #[test]
+    fn park_then_wake_reruns() {
+        let r = Reactor::new(2);
+        let steps = Arc::new(AtomicUsize::new(0));
+        let s = Arc::clone(&steps);
+        let id = r.spawn(move |_| {
+            if s.fetch_add(1, Ordering::SeqCst) == 0 {
+                Step::Park
+            } else {
+                Step::Done
+            }
+        });
+        assert!(wait_until(Duration::from_secs(5), || {
+            steps.load(Ordering::SeqCst) == 1
+        }));
+        assert!(r.wake(id));
+        assert!(wait_until(Duration::from_secs(5), || r.session_count() == 0));
+        assert_eq!(steps.load(Ordering::SeqCst), 2);
+        // waking a retired session is a benign no-op
+        assert!(!r.wake(id));
+    }
+
+    #[test]
+    fn park_for_fires_deadline_not_early() {
+        let r = Reactor::new(2);
+        let (tx, rx) = mpsc::channel();
+        let start = Instant::now();
+        let mut first = true;
+        r.spawn(move |reason| {
+            if first {
+                first = false;
+                return Step::ParkFor(Duration::from_millis(50));
+            }
+            tx.send((reason, start.elapsed())).unwrap();
+            Step::Done
+        });
+        let (reason, elapsed) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(reason, WakeReason::Deadline);
+        assert!(elapsed >= Duration::from_millis(50), "fired early: {elapsed:?}");
+    }
+
+    #[test]
+    fn wake_cancels_deadline() {
+        let r = Reactor::new(2);
+        let (tx, rx) = mpsc::channel();
+        let mut first = true;
+        let id = r.spawn(move |reason| {
+            if first {
+                first = false;
+                return Step::ParkFor(Duration::from_secs(60));
+            }
+            tx.send(reason).unwrap();
+            Step::Done
+        });
+        assert!(wait_until(Duration::from_secs(5), || r.wake(id)));
+        // Must arrive as Notified, long before the 60 s deadline.
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(5)).unwrap(),
+            WakeReason::Notified
+        );
+    }
+
+    #[test]
+    fn wake_during_run_coalesces_to_one_rerun() {
+        let r = Reactor::new(2);
+        let steps = Arc::new(AtomicUsize::new(0));
+        let (enter_tx, enter_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let s = Arc::clone(&steps);
+        let id = r.spawn(move |_| {
+            let n = s.fetch_add(1, Ordering::SeqCst);
+            if n == 0 {
+                enter_tx.send(()).unwrap();
+                release_rx.recv().unwrap(); // hold the step open
+                Step::Park
+            } else {
+                Step::Park
+            }
+        });
+        enter_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // Several wakes while the step is running must coalesce.
+        for _ in 0..5 {
+            r.wake(id);
+        }
+        release_tx.send(()).unwrap();
+        assert!(wait_until(Duration::from_secs(5), || {
+            steps.load(Ordering::SeqCst) == 2
+        }));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(steps.load(Ordering::SeqCst), 2, "wakes did not coalesce");
+    }
+
+    #[test]
+    fn pool_grows_to_cap_and_parked_sessions_hold_no_thread() {
+        let r = Reactor::with_keepalive(3, Duration::from_millis(50));
+        let (enter_tx, enter_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let release_rx = Arc::new(Mutex::new(release_rx));
+        // Two sessions that block inside their step force two live workers.
+        for _ in 0..2 {
+            let etx = enter_tx.clone();
+            let rrx = Arc::clone(&release_rx);
+            r.spawn(move |_| {
+                etx.send(()).unwrap();
+                rrx.lock().unwrap().recv().unwrap();
+                Step::Done
+            });
+        }
+        enter_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        enter_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let (live, peak) = r.worker_stats();
+        assert!(live >= 2 && peak >= 2, "live={live} peak={peak}");
+        release_tx.send(()).unwrap();
+        release_tx.send(()).unwrap();
+
+        // 500 parked sessions: session count is 500, but the pool stays
+        // at the cap and then reaps to zero — parked sessions own no
+        // thread.
+        for _ in 0..500 {
+            r.spawn(|_| Step::Park);
+        }
+        assert!(wait_until(Duration::from_secs(5), || r.session_count() == 500));
+        let (_, peak) = r.worker_stats();
+        assert!(peak <= 3, "pool exceeded cap: {peak}");
+        assert!(
+            wait_until(Duration::from_secs(5), || r.worker_stats().0 == 0),
+            "idle workers were not reaped"
+        );
+    }
+
+    #[test]
+    fn yield_requeues_fairly() {
+        let r = Reactor::new(1); // single worker: yields must interleave
+        let order = Arc::new(Mutex::new(Vec::new()));
+        for tag in 0..2 {
+            let ord = Arc::clone(&order);
+            let mut remaining = 3;
+            r.spawn(move |_| {
+                ord.lock().unwrap().push(tag);
+                remaining -= 1;
+                if remaining == 0 {
+                    Step::Done
+                } else {
+                    Step::Yield
+                }
+            });
+        }
+        assert!(wait_until(Duration::from_secs(5), || r.session_count() == 0));
+        let ord = order.lock().unwrap().clone();
+        assert_eq!(ord.len(), 6);
+        // With a single worker and round-robin requeue the two sessions
+        // strictly alternate.
+        assert_eq!(ord, vec![0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn driver_waker_wakes_parked_session_and_disconnect_completes_it() {
+        use crate::sfm::inmem;
+        use crate::util::json::Json;
+
+        let pair = inmem::pair(8);
+        let server = SfmEndpoint::new(pair.a);
+        let client = SfmEndpoint::new(pair.b);
+
+        let r = Reactor::new(2);
+        let (tx, rx) = mpsc::channel();
+        let (_id, has_waker) = r.spawn_on(&server, move |_| {
+            // Edge-triggered: drain until empty, then park.
+            loop {
+                match server.try_recv_ctrl(Duration::ZERO) {
+                    Ok(Some(msg)) => tx.send(msg).unwrap(),
+                    Ok(None) => return Step::Park,
+                    Err(_) => return Step::Done, // peer disconnected
+                }
+            }
+        });
+        assert!(has_waker, "inmem driver must support wakers");
+
+        // Give the session time to park, then a peer send must wake it.
+        std::thread::sleep(Duration::from_millis(20));
+        client.send_ctrl(&Json::obj(vec![("op", Json::str("ping"))])).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.get("op").and_then(Json::as_str), Some("ping"));
+
+        // Dropping the client endpoint must wake the parked session so it
+        // observes the disconnect and retires itself.
+        drop(client);
+        assert!(
+            wait_until(Duration::from_secs(5), || r.session_count() == 0),
+            "disconnect did not complete the session"
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! C100K session engine: readiness-driven multiplexing of client
+//! sessions onto a small elastic worker pool.
+//!
+//! - [`core`]: the [`Reactor`] — per-session state machines, wake
+//!   coalescing, elastic workers, and the timer thread.
+//! - [`wheel`]: the [`DeadlineWheel`] backing every `ParkFor` deadline.
+//!
+//! Consumers select the engine with the `session_engine` job-config key
+//! (`threaded` | `reactor`); the threaded engine remains the default and
+//! the bit-identity reference. See DESIGN.md §Session engine.
+
+pub mod core;
+pub mod wheel;
+
+pub use self::core::{Reactor, ReactorHandle, SessionId, Step, WakeReason};
+pub use self::wheel::DeadlineWheel;

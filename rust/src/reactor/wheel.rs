@@ -1,0 +1,260 @@
+//! Hashed deadline wheel: the reactor's single timer structure.
+//!
+//! The threaded engine pays for time with blocked threads — every
+//! `transfer_timeout` / round-deadline wait parks an OS thread in
+//! `recv_timeout` or `Condvar::wait_timeout`. The reactor replaces all of
+//! that with one wheel: a ring of coarse slots (default 2 ms ticks, 512
+//! slots ≈ 1 s horizon) for the common short deadline, plus a `BTreeMap`
+//! overflow for anything beyond the horizon. One timer thread sleeps
+//! until [`DeadlineWheel::next_deadline`] and drains
+//! [`DeadlineWheel::expired`] — O(1) insert/cancel, O(slots) scan, no
+//! thread per deadline.
+//!
+//! Semantics: **fire-not-before**. A deadline is rounded *up* to the next
+//! tick boundary, so a timer never fires early; it may fire up to one
+//! tick late (plus scheduler noise), which is the same contract as the
+//! `recv_timeout`-based waits it replaces.
+
+use std::collections::{BTreeMap, HashSet};
+use std::time::{Duration, Instant};
+
+/// Id returned by [`DeadlineWheel::insert`], used to cancel.
+pub type TimerId = u64;
+
+struct Timer {
+    id: TimerId,
+    token: u64,
+    at_tick: u64,
+}
+
+pub struct DeadlineWheel {
+    tick_nanos: u64,
+    origin: Instant,
+    slots: Vec<Vec<Timer>>,
+    /// Absolute tick index the next `expired` drain starts at. Ring
+    /// entries always satisfy `cursor <= at_tick < cursor + slots.len()`.
+    cursor: u64,
+    ring_count: usize,
+    overflow: BTreeMap<u64, Vec<Timer>>,
+    /// Cancelled-but-not-yet-drained ids. Callers cancel only armed
+    /// timers (never ids that already fired), so this set is bounded by
+    /// the number of in-flight timers.
+    cancelled: HashSet<TimerId>,
+    next_id: TimerId,
+}
+
+impl DeadlineWheel {
+    pub fn new(tick: Duration, slots: usize) -> DeadlineWheel {
+        assert!(slots > 0, "wheel needs at least one slot");
+        let tick_nanos = (tick.as_nanos() as u64).max(1);
+        DeadlineWheel {
+            tick_nanos,
+            origin: Instant::now(),
+            slots: (0..slots).map(|_| Vec::new()).collect(),
+            cursor: 0,
+            ring_count: 0,
+            overflow: BTreeMap::new(),
+            cancelled: HashSet::new(),
+            next_id: 1,
+        }
+    }
+
+    /// Default geometry: 2 ms ticks, 512 slots (~1 s ring horizon).
+    pub fn with_defaults() -> DeadlineWheel {
+        DeadlineWheel::new(Duration::from_millis(2), 512)
+    }
+
+    /// Tick index whose boundary is at or after `at` (ceil — never early).
+    fn tick_ceil(&self, at: Instant) -> u64 {
+        let nanos = at.saturating_duration_since(self.origin).as_nanos() as u64;
+        nanos.div_ceil(self.tick_nanos)
+    }
+
+    /// Last tick boundary at or before `now` (floor — fire only what is
+    /// genuinely due).
+    fn tick_floor(&self, now: Instant) -> u64 {
+        let nanos = now.saturating_duration_since(self.origin).as_nanos() as u64;
+        nanos / self.tick_nanos
+    }
+
+    fn instant_of_tick(&self, tick: u64) -> Instant {
+        self.origin + Duration::from_nanos(tick.saturating_mul(self.tick_nanos))
+    }
+
+    /// Arm a timer firing `token` at (not before) `deadline`.
+    pub fn insert(&mut self, deadline: Instant, token: u64) -> TimerId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let at_tick = self.tick_ceil(deadline).max(self.cursor);
+        let t = Timer { id, token, at_tick };
+        if at_tick < self.cursor + self.slots.len() as u64 {
+            let n = self.slots.len() as u64;
+            self.slots[(at_tick % n) as usize].push(t);
+            self.ring_count += 1;
+        } else {
+            self.overflow.entry(at_tick).or_default().push(t);
+        }
+        id
+    }
+
+    /// Cancel an armed timer. Must only be called for ids that have not
+    /// fired yet (the caller clears its handle on fire).
+    pub fn cancel(&mut self, id: TimerId) {
+        self.cancelled.insert(id);
+    }
+
+    /// Earliest armed (non-cancelled) deadline, if any.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        let mut best: Option<u64> = None;
+        for slot in &self.slots {
+            for t in slot {
+                if !self.cancelled.contains(&t.id) && best.map_or(true, |b| t.at_tick < b) {
+                    best = Some(t.at_tick);
+                }
+            }
+        }
+        for (&k, ts) in &self.overflow {
+            if best.is_some_and(|b| b <= k) {
+                break;
+            }
+            if ts.iter().any(|t| !self.cancelled.contains(&t.id)) {
+                best = Some(k);
+            }
+        }
+        best.map(|b| self.instant_of_tick(b))
+    }
+
+    /// Drain every timer due at `now`; returns their tokens. Cancelled
+    /// timers are silently discarded (and forgotten).
+    pub fn expired(&mut self, now: Instant) -> Vec<u64> {
+        let now_tick = self.tick_floor(now);
+        let mut out = Vec::new();
+        // Overflow entries are keyed by absolute tick; anything due fires
+        // straight from the map (it never migrated into the ring).
+        while let Some(entry) = self.overflow.first_entry() {
+            if *entry.key() > now_tick {
+                break;
+            }
+            for t in entry.remove() {
+                if !self.cancelled.remove(&t.id) {
+                    out.push(t.token);
+                }
+            }
+        }
+        // Ring catch-up. An empty ring fast-forwards the cursor so an
+        // idle wheel never replays millions of empty ticks.
+        let n = self.slots.len() as u64;
+        while self.cursor <= now_tick {
+            if self.ring_count == 0 {
+                self.cursor = now_tick + 1;
+                break;
+            }
+            let slot = (self.cursor % n) as usize;
+            // The slot can hold entries a whole ring-revolution out
+            // (at_tick = cursor + k·slots): fire only what is due.
+            let mut kept = Vec::new();
+            for t in self.slots[slot].drain(..) {
+                if t.at_tick <= now_tick {
+                    self.ring_count -= 1;
+                    if !self.cancelled.remove(&t.id) {
+                        out.push(t.token);
+                    }
+                } else {
+                    kept.push(t);
+                }
+            }
+            self.slots[slot] = kept;
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn fires_in_deadline_order_never_early() {
+        let mut w = DeadlineWheel::new(ms(1), 64);
+        let now = Instant::now();
+        w.insert(now + ms(30), 3);
+        w.insert(now + ms(10), 1);
+        w.insert(now + ms(20), 2);
+        assert!(w.expired(now + ms(5)).is_empty(), "nothing due yet");
+        assert_eq!(w.expired(now + ms(12)), vec![1]);
+        // 2 and 3 fire together once both are due, overflow/ring order.
+        let mut late = w.expired(now + ms(40));
+        late.sort_unstable();
+        assert_eq!(late, vec![2, 3]);
+        assert!(w.next_deadline().is_none());
+    }
+
+    #[test]
+    fn cancel_suppresses_fire() {
+        let mut w = DeadlineWheel::new(ms(1), 64);
+        let now = Instant::now();
+        let a = w.insert(now + ms(5), 10);
+        let b = w.insert(now + ms(5), 11);
+        w.cancel(a);
+        assert_eq!(w.expired(now + ms(10)), vec![11]);
+        // the cancelled id is forgotten after its slot drains
+        assert!(w.cancelled.is_empty());
+        let _ = b;
+    }
+
+    #[test]
+    fn overflow_beyond_ring_horizon() {
+        // 8 slots × 1 ms = 8 ms horizon; a 50 ms timer must overflow and
+        // still fire exactly once.
+        let mut w = DeadlineWheel::new(ms(1), 8);
+        let now = Instant::now();
+        w.insert(now + ms(50), 7);
+        assert!(w.expired(now + ms(8)).is_empty());
+        assert!(w.expired(now + ms(49)).is_empty());
+        assert_eq!(w.expired(now + ms(51)), vec![7]);
+        assert!(w.expired(now + ms(200)).is_empty());
+    }
+
+    #[test]
+    fn ring_wrap_distinguishes_revolutions() {
+        // Two timers hashing to the same slot, one revolution apart: the
+        // early drain must not fire the later one.
+        let mut w = DeadlineWheel::new(ms(1), 4);
+        let now = Instant::now();
+        w.insert(now + ms(2), 1);
+        // After advancing past tick 2, insert at tick 6 → same slot (6%4 == 2%4).
+        assert_eq!(w.expired(now + ms(3)), vec![1]);
+        w.insert(now + ms(6), 2);
+        assert!(w.expired(now + ms(5)).is_empty());
+        assert_eq!(w.expired(now + ms(7)), vec![2]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_earliest_live_timer() {
+        let mut w = DeadlineWheel::new(ms(1), 16);
+        let now = Instant::now();
+        assert!(w.next_deadline().is_none());
+        let a = w.insert(now + ms(5), 1);
+        w.insert(now + ms(100), 2); // overflow
+        let nd = w.next_deadline().unwrap();
+        assert!(nd <= now + ms(6) && nd >= now + ms(4), "{:?}", nd - now);
+        w.cancel(a);
+        let nd = w.next_deadline().unwrap();
+        assert!(nd >= now + ms(99), "cancel must advance next_deadline");
+    }
+
+    #[test]
+    fn idle_wheel_fast_forwards() {
+        let mut w = DeadlineWheel::new(Duration::from_micros(10), 32);
+        let now = Instant::now();
+        // A long idle gap must not spin the cursor through every tick.
+        assert!(w.expired(now + Duration::from_secs(3600)).is_empty());
+        w.insert(now + Duration::from_secs(3601), 5);
+        assert_eq!(w.expired(now + Duration::from_secs(3602)), vec![5]);
+    }
+}

@@ -10,7 +10,15 @@
 
 use super::frame::Frame;
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Duration;
+
+/// Readiness callback for the reactor session engine. A driver that
+/// accepts one fires it whenever the *receive* side may have become
+/// ready: a peer send, a peer disconnect. Wakers must be cheap,
+/// non-blocking, and tolerant of spurious calls — the reactor coalesces
+/// them into at most one extra session step.
+pub type DriverWaker = Arc<dyn Fn() + Send + Sync>;
 
 /// One endpoint of a frame transport. `send` must be safe to call from
 /// one thread while another blocks in `recv` (senders and receivers are
@@ -40,6 +48,17 @@ pub trait Driver: Send {
     /// layer — but `send_monolithic` honours it.
     fn max_message_bytes(&self) -> Option<u64> {
         Some(2 << 30)
+    }
+
+    /// Install a readiness waker (reactor engine). Returns `true` if the
+    /// driver will fire `w` on future receive-side readiness (peer send
+    /// or disconnect); implementations should also fire it once
+    /// immediately so a registration racing an in-flight frame is never
+    /// lost. The default (`false`) means readiness cannot be signalled —
+    /// reactor sessions on such drivers must poll via `ParkFor` ticks.
+    /// Decorators forward to their inner driver.
+    fn register_waker(&self, _w: DriverWaker) -> bool {
+        false
     }
 }
 

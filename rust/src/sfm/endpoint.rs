@@ -503,6 +503,13 @@ impl SfmEndpoint {
         self.next_stream.fetch_add(1, Ordering::Relaxed)
     }
 
+    /// Install a readiness waker on the underlying driver (reactor
+    /// engine). Returns `true` if the driver can signal readiness; see
+    /// [`crate::sfm::driver::Driver::register_waker`].
+    pub fn register_waker(&self, w: crate::sfm::driver::DriverWaker) -> bool {
+        self.driver.register_waker(w)
+    }
+
     fn send_frame(&self, f: Frame) -> Result<()> {
         self.stats.frames_sent.fetch_add(1, Ordering::Relaxed);
         self.stats
@@ -553,6 +560,70 @@ impl SfmEndpoint {
             }
             self.pending_obj.lock().unwrap().push_back(f);
         }
+    }
+
+    /// Like [`SfmEndpoint::recv_ctrl`] but a timeout yields `Ok(None)`
+    /// instead of an error — the reactor step primitive. A step drains
+    /// with `Duration::ZERO` until `None`, then parks (edge-triggered
+    /// contract); `Err` still means the peer is gone.
+    pub fn try_recv_ctrl(&self, timeout: Duration) -> Result<Option<Json>> {
+        if let Some(f) = self.pending_ctrl.lock().unwrap().pop_front() {
+            let msg = parse_json_payload(&f)?;
+            f.payload.recycle();
+            return Ok(Some(msg));
+        }
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.driver.recv_timeout(remaining)? {
+                None => return Ok(None),
+                Some(f) => {
+                    self.stats.frames_received.fetch_add(1, Ordering::Relaxed);
+                    self.stats
+                        .bytes_received
+                        .fetch_add(f.wire_len() as u64, Ordering::Relaxed);
+                    if f.ftype == FrameType::Ctrl {
+                        let msg = parse_json_payload(&f)?;
+                        f.payload.recycle();
+                        return Ok(Some(msg));
+                    }
+                    self.pending_obj.lock().unwrap().push_back(f);
+                    if remaining.is_zero() {
+                        return Ok(None);
+                    }
+                }
+            }
+        }
+    }
+
+    // -- raw frame tee (pipelined relay scatter) -------------------------------
+
+    /// Receive the next raw *object* frame without decoding it. Ctrl
+    /// frames arriving in between are buffered for `recv_ctrl`. This is
+    /// the relay's tee primitive: upstream scatter frames are forwarded
+    /// to children verbatim (after sharing the payload) while a local
+    /// copy is decoded — streaming instead of store-and-forward.
+    pub fn recv_obj_frame(&self, timeout: Option<Duration>) -> Result<Frame> {
+        if let Some(f) = self.pending_obj.lock().unwrap().pop_front() {
+            return Ok(f);
+        }
+        loop {
+            let f = self.recv_frame(timeout)?;
+            if f.ftype == FrameType::Ctrl {
+                self.pending_ctrl.lock().unwrap().push_back(f);
+                continue;
+            }
+            return Ok(f);
+        }
+    }
+
+    /// Forward a raw frame verbatim (stream id, seq, offset, flags and
+    /// payload untouched). Receivers key transfers on the Begin frame's
+    /// stream id, so upstream ids are safe to propagate; convert the
+    /// payload to [`Payload::shared`] first when fanning one frame out to
+    /// several children so the bytes are refcounted, not copied.
+    pub fn forward_frame(&self, f: Frame) -> Result<()> {
+        self.send_frame(f)
     }
 
     // -- object sending --------------------------------------------------------

@@ -2,24 +2,56 @@
 //! simulator and by all transport-independent tests. The bound provides
 //! real backpressure: a fast sender blocks once `capacity` frames are in
 //! flight, bounding buffered memory like a TCP window would.
+//!
+//! Readiness: each direction carries a [`DriverWaker`] slot. A send
+//! fires the *peer's* waker after the frame is enqueued, and dropping an
+//! endpoint fires it one last time so a parked reactor session observes
+//! the disconnect instead of sleeping forever. Registration fires the
+//! waker once immediately, closing the race with frames that arrived
+//! before the slot was filled.
 
-use super::driver::{Driver, DriverPair};
+use super::driver::{Driver, DriverPair, DriverWaker};
 use super::frame::Frame;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+#[derive(Default)]
+struct WakerSlot(Mutex<Option<DriverWaker>>);
+
+impl WakerSlot {
+    fn set(&self, w: DriverWaker) {
+        *self.0.lock().unwrap() = Some(w);
+    }
+
+    fn fire(&self) {
+        // Clone out of the lock so the callback runs unlocked (it may
+        // take the reactor core lock).
+        let w = self.0.lock().unwrap().clone();
+        if let Some(w) = w {
+            w();
+        }
+    }
+}
 
 pub struct InMemDriver {
     tx: SyncSender<Frame>,
     rx: Mutex<Receiver<Frame>>,
+    /// Waker the peer registered: fired after each of our sends and on
+    /// our drop (their receive side became ready / closed).
+    peer_waker: Arc<WakerSlot>,
+    /// Waker we registered (slot owned by this side, fired by the peer).
+    my_waker: Arc<WakerSlot>,
 }
 
 impl Driver for InMemDriver {
     fn send(&self, frame: Frame) -> Result<()> {
         self.tx
             .send(frame)
-            .map_err(|_| anyhow!("inmem peer disconnected"))
+            .map_err(|_| anyhow!("inmem peer disconnected"))?;
+        self.peer_waker.fire();
+        Ok(())
     }
 
     fn recv(&self) -> Result<Frame> {
@@ -41,6 +73,21 @@ impl Driver for InMemDriver {
     fn name(&self) -> &'static str {
         "inmem"
     }
+
+    fn register_waker(&self, w: DriverWaker) -> bool {
+        self.my_waker.set(w);
+        // Fire once now: anything already buffered predates the slot.
+        self.my_waker.fire();
+        true
+    }
+}
+
+impl Drop for InMemDriver {
+    fn drop(&mut self) {
+        // The channel sender drops with us; wake the peer so a parked
+        // session sees the disconnect.
+        self.peer_waker.fire();
+    }
 }
 
 /// Create a connected loopback pair with `capacity` frames of in-flight
@@ -48,14 +95,20 @@ impl Driver for InMemDriver {
 pub fn pair(capacity: usize) -> DriverPair {
     let (tx_ab, rx_ab) = sync_channel(capacity);
     let (tx_ba, rx_ba) = sync_channel(capacity);
+    let slot_a = Arc::new(WakerSlot::default()); // woken by b's sends
+    let slot_b = Arc::new(WakerSlot::default()); // woken by a's sends
     DriverPair {
         a: Box::new(InMemDriver {
             tx: tx_ab,
             rx: Mutex::new(rx_ba),
+            peer_waker: Arc::clone(&slot_b),
+            my_waker: slot_a.clone(),
         }),
         b: Box::new(InMemDriver {
             tx: tx_ba,
             rx: Mutex::new(rx_ab),
+            peer_waker: slot_a,
+            my_waker: slot_b,
         }),
     }
 }
@@ -64,6 +117,7 @@ pub fn pair(capacity: usize) -> DriverPair {
 mod tests {
     use super::*;
     use crate::sfm::frame::FrameType;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn two_way_traffic() {
@@ -106,5 +160,25 @@ mod tests {
             got += 1;
         }
         sender.join().unwrap();
+    }
+
+    #[test]
+    fn waker_fires_on_registration_send_and_disconnect() {
+        let p = pair(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        // Registration itself fires once (covers pre-registered frames).
+        assert!(p.a.register_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        })));
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        // A peer send fires a's waker; a's own send must not.
+        p.b.send(Frame::new(FrameType::Ctrl, 1, 0, vec![])).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        p.a.send(Frame::new(FrameType::Ctrl, 2, 0, vec![])).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        // Peer drop fires it one last time.
+        drop(p.b);
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
 }

@@ -14,7 +14,7 @@
 //! loss on the outgoing link; wrap each direction separately (with
 //! [`FaultProfile::reseeded`]) for asymmetric links.
 
-use super::driver::{Driver, DriverPair};
+use super::driver::{Driver, DriverPair, DriverWaker};
 use super::frame::{Frame, FrameType};
 use crate::config::{FaultProfile, NetProfile};
 use crate::util::rng::SplitMix64;
@@ -89,6 +89,10 @@ impl Driver for NetSimDriver {
 
     fn max_message_bytes(&self) -> Option<u64> {
         self.inner.max_message_bytes()
+    }
+
+    fn register_waker(&self, w: DriverWaker) -> bool {
+        self.inner.register_waker(w)
     }
 }
 
@@ -243,6 +247,13 @@ impl Driver for FaultDriver {
 
     fn max_message_bytes(&self) -> Option<u64> {
         self.inner.max_message_bytes()
+    }
+
+    // Faults are injected on *send*, before the inner driver sees the
+    // frame, so a dropped frame never fires the peer's waker — readiness
+    // stays truthful under fault schedules.
+    fn register_waker(&self, w: DriverWaker) -> bool {
+        self.inner.register_waker(w)
     }
 }
 

@@ -48,6 +48,27 @@ impl TcpDriver {
         Self::from_stream(stream)
     }
 
+    /// Non-blocking accept for the reactor registration path: `Ok(None)`
+    /// when no connection is pending, so one wheel-ticked session can
+    /// service the listener instead of a thread parked in `accept`. The
+    /// listener must be in non-blocking mode
+    /// (`listener.set_nonblocking(true)`); accepted streams are switched
+    /// back to blocking before wrapping.
+    ///
+    /// Established TCP connections have no readiness waker (`register_waker`
+    /// stays `false`): reactor sessions on TCP poll via `ParkFor` deadline
+    /// ticks — the deadline wheel is the hand-rolled poller.
+    pub fn accept_nonblocking(listener: &TcpListener) -> Result<Option<TcpDriver>> {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("reset accepted stream to blocking")?;
+                Ok(Some(Self::from_stream(stream)?))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e).context("accept (non-blocking)"),
+        }
+    }
+
     pub fn peer(&self) -> &str {
         &self.peer
     }
@@ -190,6 +211,29 @@ mod tests {
         let ack = client.recv().unwrap();
         assert_eq!(ack.ftype, FrameType::Ack);
         server.join().unwrap();
+    }
+
+    #[test]
+    fn nonblocking_accept_polls_then_connects() {
+        let listener = loopback_listener().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        // Nothing pending: poll returns None, not a block or an error.
+        assert!(TcpDriver::accept_nonblocking(&listener).unwrap().is_none());
+        let client = TcpDriver::connect(&addr).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let server = loop {
+            if let Some(d) = TcpDriver::accept_nonblocking(&listener).unwrap() {
+                break d;
+            }
+            assert!(std::time::Instant::now() < deadline, "accept never became ready");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // The accepted stream is blocking again: a normal roundtrip works.
+        client
+            .send(Frame::new(FrameType::Ctrl, 1, 0, b"{}".to_vec()))
+            .unwrap();
+        assert_eq!(server.recv().unwrap().payload, b"{}".to_vec());
     }
 
     #[test]

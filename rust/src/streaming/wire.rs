@@ -7,7 +7,9 @@
 //! ```text
 //! entry := u16 name_len, name bytes,
 //!          u8 kind (0 = plain f32, 6 = partial-aggregate Q64.64 fixed
-//!                   point, else QuantScheme id),
+//!                   point (16-byte LE, legacy decode), 7 = partial
+//!                   aggregate as zigzag LEB128 varints (current
+//!                   encoding), else QuantScheme id),
 //!          u8 rank, u64 dims[rank],
 //!          u32 block_size,
 //!          u32 absmax_n, f32 absmax[absmax_n],
@@ -101,23 +103,135 @@ impl Entry {
 
     /// Serialized size of this entry in bytes.
     pub fn wire_len(&self) -> usize {
-        let (name, rank, absmax, codebook, payload) = match self {
-            Entry::Plain(n, t) => (n.len(), t.meta.shape.len(), 0, 0, t.data.len()),
-            Entry::Quantized(n, q) => (
-                n.len(),
-                q.orig.shape.len(),
-                q.meta.absmax.len(),
-                q.meta.codebook.len(),
-                q.payload.len(),
-            ),
-        };
-        2 + name + 1 + 1 + 8 * rank + 4 + 4 + 4 * absmax + 4 + 4 * codebook + 8 + payload
+        match self {
+            Entry::Plain(n, t) => plain_wire_len(n, t),
+            Entry::Quantized(n, q) => {
+                2 + n.len()
+                    + 1
+                    + 1
+                    + 8 * q.orig.shape.len()
+                    + 4
+                    + 4
+                    + 4 * q.meta.absmax.len()
+                    + 4
+                    + 4 * q.meta.codebook.len()
+                    + 8
+                    + q.payload.len()
+            }
+        }
     }
 }
 
-/// Wire kind of a hierarchical partial aggregate (plain Q64.64 entry).
-/// Chosen outside the QuantScheme id range (1..=5).
+/// Wire kind of a hierarchical partial aggregate (plain Q64.64 entry)
+/// as fixed 16-byte little-endian values. Chosen outside the
+/// QuantScheme id range (1..=5). Decode-only since the varint encoding
+/// landed; kept so spooled/in-flight streams from older senders parse.
 const KIND_PARTIAL_FX128: u8 = 6;
+/// Wire kind of a partial aggregate encoded as zigzag LEB128 varints:
+/// one base-128 group per 7 payload bits, low groups first, high bit =
+/// continuation. A Q64.64 sum of O(1)-magnitude weights uses ~66 bits
+/// (10 bytes) instead of the fixed 16, and zero/near-zero entries
+/// collapse to a byte or two; the worst case is ceil(128/7) = 19 bytes.
+const KIND_PARTIAL_VARINT: u8 = 7;
+/// Worst-case serialized size of one zigzag LEB128 i128.
+const FX128_VARINT_MAX: usize = 19;
+
+/// Zigzag-fold a signed value so sign bits don't force max-length
+/// varints: 0, -1, 1, -2, ... → 0, 1, 2, 3, ...
+fn zigzag_i128(v: i128) -> u128 {
+    ((v << 1) ^ (v >> 127)) as u128
+}
+
+/// Serialized varint size of one Q64.64 value.
+fn fx128_varint_len(v: i128) -> usize {
+    let bits = 128 - zigzag_i128(v).leading_zeros() as usize;
+    bits.div_ceil(7).max(1)
+}
+
+/// Append one value as a zigzag LEB128 varint.
+fn push_fx128_varint(out: &mut Vec<u8>, v: i128) {
+    let mut z = zigzag_i128(v);
+    loop {
+        let byte = (z & 0x7f) as u8;
+        z >>= 7;
+        if z == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Varint-encode a raw Fx128 payload (16-byte LE values).
+fn encode_fx128_varints(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len());
+    for c in data.chunks_exact(16) {
+        push_fx128_varint(&mut out, i128::from_le_bytes(c.try_into().unwrap()));
+    }
+    out
+}
+
+/// Wire bytes a raw Fx128 payload occupies under the varint encoding.
+fn fx128_payload_wire_len(data: &[u8]) -> usize {
+    data.chunks_exact(16)
+        .map(|c| fx128_varint_len(i128::from_le_bytes(c.try_into().unwrap())))
+        .sum()
+}
+
+/// Serialized header + payload size of a plain entry (the varint scan
+/// makes this O(elements) for Fx128 entries — the same cost class as
+/// writing them).
+fn plain_wire_len(name: &str, t: &Tensor) -> usize {
+    let payload = if t.meta.dtype == DType::Fx128 {
+        fx128_payload_wire_len(&t.data)
+    } else {
+        t.data.len()
+    };
+    2 + name.len() + 1 + 1 + 8 * t.meta.shape.len() + 4 + 4 + 4 + 8 + payload
+}
+
+/// Decode exactly `elems` zigzag LEB128 varints into a raw 16-byte-LE
+/// Fx128 payload. Hostile input — truncated mid-varint, trailing
+/// garbage, varints overflowing 128 bits or padded past 19 bytes —
+/// yields `Err`, never a panic; consumption is exact by construction.
+fn decode_fx128_varints(src: &[u8], elems: usize) -> Result<Vec<u8>> {
+    let n16 = elems * 16;
+    let mut out = if n16 <= crate::memory::pool::MAX_POOLED_BYTES {
+        crate::memory::pool::bytes(n16)
+    } else {
+        Vec::with_capacity(n16)
+    };
+    let mut i = 0usize;
+    for _ in 0..elems {
+        let mut z: u128 = 0;
+        let mut shift = 0u32;
+        loop {
+            let Some(&byte) = src.get(i) else {
+                bail!("varint payload truncated mid-value");
+            };
+            i += 1;
+            // The 19th group holds the top 128 - 18*7 = 2 bits: a larger
+            // group or a further continuation would overflow i128.
+            if shift == 126 && (byte & 0x7f) > 0x03 {
+                bail!("varint overflows 128 bits");
+            }
+            z |= ((byte & 0x7f) as u128) << shift;
+            if byte & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+            if shift > 126 {
+                bail!("varint longer than {FX128_VARINT_MAX} bytes");
+            }
+        }
+        let v = ((z >> 1) as i128) ^ -((z & 1) as i128);
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    if i != src.len() {
+        bail!("{} trailing bytes after the last varint", src.len() - i);
+    }
+    Ok(out)
+}
 
 fn scheme_id(s: QuantScheme) -> u8 {
     match s {
@@ -134,7 +248,7 @@ fn scheme_id(s: QuantScheme) -> u8 {
 fn plain_kind(d: DType) -> Result<u8> {
     match d {
         DType::F32 => Ok(0),
-        DType::Fx128 => Ok(KIND_PARTIAL_FX128),
+        DType::Fx128 => Ok(KIND_PARTIAL_VARINT),
         other => bail!("plain entries must be f32 or fx128, got {other}"),
     }
 }
@@ -154,22 +268,7 @@ fn scheme_from_id(id: u8) -> Result<QuantScheme> {
 pub fn write_entry<W: Write>(w: &mut W, e: &Entry) -> Result<()> {
     let mut head: Vec<u8> = Vec::with_capacity(64);
     match e {
-        Entry::Plain(name, t) => {
-            let kind = plain_kind(t.meta.dtype)?;
-            b::put_u16(&mut head, name.len() as u16);
-            head.extend_from_slice(name.as_bytes());
-            head.push(kind);
-            head.push(t.meta.shape.len() as u8);
-            for &d in &t.meta.shape {
-                b::put_u64(&mut head, d as u64);
-            }
-            b::put_u32(&mut head, 0); // block_size
-            b::put_u32(&mut head, 0); // absmax_n
-            b::put_u32(&mut head, 0); // codebook_n
-            b::put_u64(&mut head, t.data.len() as u64);
-            w.write_all(&head)?;
-            w.write_all(&t.data)?;
-        }
+        Entry::Plain(name, t) => write_plain_borrowed(w, name, t)?,
         Entry::Quantized(name, q) => {
             b::put_u16(&mut head, name.len() as u16);
             head.extend_from_slice(name.as_bytes());
@@ -311,25 +410,44 @@ pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
     if payload_len > MAX_PAYLOAD {
         bail!("{name}: payload length {payload_len} exceeds cap");
     }
-    // The expected payload size is a pure function of the header (shape +
-    // scheme): check the declared length against it *before* reading, so
-    // a lying prefix cannot even start a mismatched read.
+    // The expected payload size is a function of the header (shape +
+    // scheme) — exact for fixed-width kinds, a tight range for varints —
+    // checked *before* reading, so a lying prefix cannot even start a
+    // grossly mismatched read.
     let expect = match kind {
-        0 => elems * 4,
-        KIND_PARTIAL_FX128 => elems * 16,
-        _ => crate::quant::payload_dtype(scheme_from_id(kind)?)?.size_of_elems(elems),
+        0 => Some(elems * 4),
+        KIND_PARTIAL_FX128 => Some(elems * 16),
+        // Value-dependent: at least one byte per element, at most the
+        // 19-byte worst case. The exact count is enforced by the
+        // decoder's exact-consumption rule below.
+        KIND_PARTIAL_VARINT => None,
+        _ => Some(crate::quant::payload_dtype(scheme_from_id(kind)?)?.size_of_elems(elems)),
     };
-    if payload_len != expect as u64 {
+    if let Some(expect) = expect {
+        if payload_len != expect as u64 {
+            bail!(
+                "{name}: payload length {payload_len} inconsistent with shape ({expect} expected)"
+            );
+        }
+    } else if payload_len < elems as u64 || payload_len > (elems * FX128_VARINT_MAX) as u64 {
         bail!(
-            "{name}: payload length {payload_len} inconsistent with shape ({expect} expected)"
+            "{name}: varint payload length {payload_len} inconsistent with {elems} elements"
         );
     }
-    if kind == 0 || kind == KIND_PARTIAL_FX128 {
+    if kind == 0 || kind == KIND_PARTIAL_FX128 || kind == KIND_PARTIAL_VARINT {
         if block_size != 0 || absmax_n != 0 || codebook_n != 0 {
             bail!("{name}: plain entry carries quantization metadata");
         }
         let dtype = if kind == 0 { DType::F32 } else { DType::Fx128 };
-        let payload = read_payload_vec(r, payload_len as usize)?;
+        let payload = if kind == KIND_PARTIAL_VARINT {
+            let raw = read_payload_vec(r, payload_len as usize)?;
+            let decoded = decode_fx128_varints(&raw, elems)
+                .map_err(|e| e.context(format!("{name}: varint payload")))?;
+            crate::memory::pool::give_bytes(raw);
+            decoded
+        } else {
+            read_payload_vec(r, payload_len as usize)?
+        };
         Ok(Entry::Plain(name, Tensor::new(shape, dtype, payload)))
     } else {
         let scheme = scheme_from_id(kind)?;
@@ -368,9 +486,7 @@ impl<'a> EntryRef<'a> {
     /// Serialized size of this entry in bytes.
     pub fn wire_len(&self) -> usize {
         match self {
-            EntryRef::Plain(n, t) => {
-                2 + n.len() + 1 + 1 + 8 * t.meta.shape.len() + 4 + 4 + 4 + 8 + t.data.len()
-            }
+            EntryRef::Plain(n, t) => plain_wire_len(n, t),
             EntryRef::Quantized(n, q) => {
                 2 + n.len()
                     + 1
@@ -444,9 +560,12 @@ pub fn encode_message<W: Write>(w: &mut W, msg: &WeightsMsg) -> Result<()> {
     Ok(())
 }
 
-/// Borrow-friendly plain-entry writer (avoids cloning tensor data).
+/// Borrow-friendly plain-entry writer (avoids cloning tensor data;
+/// Fx128 payloads are varint-encoded on the way out).
 pub fn write_plain_borrowed<W: Write>(w: &mut W, name: &str, t: &Tensor) -> Result<()> {
     let kind = plain_kind(t.meta.dtype)?;
+    let varint = (kind == KIND_PARTIAL_VARINT).then(|| encode_fx128_varints(&t.data));
+    let payload: &[u8] = varint.as_deref().unwrap_or(&t.data);
     let mut head: Vec<u8> = Vec::with_capacity(64);
     b::put_u16(&mut head, name.len() as u16);
     head.extend_from_slice(name.as_bytes());
@@ -458,9 +577,9 @@ pub fn write_plain_borrowed<W: Write>(w: &mut W, name: &str, t: &Tensor) -> Resu
     b::put_u32(&mut head, 0);
     b::put_u32(&mut head, 0);
     b::put_u32(&mut head, 0);
-    b::put_u64(&mut head, t.data.len() as u64);
+    b::put_u64(&mut head, payload.len() as u64);
     w.write_all(&head)?;
-    w.write_all(&t.data)?;
+    w.write_all(payload)?;
     Ok(())
 }
 
@@ -605,12 +724,7 @@ impl TransferManifest {
 /// Total serialized size of a message.
 pub fn message_wire_len(msg: &WeightsMsg) -> u64 {
     let entries: u64 = match msg {
-        WeightsMsg::Plain(c) => c
-            .iter()
-            .map(|(n, t)| {
-                (2 + n.len() + 1 + 1 + 8 * t.meta.shape.len() + 4 + 4 + 4 + 8 + t.data.len()) as u64
-            })
-            .sum(),
+        WeightsMsg::Plain(c) => c.iter().map(|(n, t)| plain_wire_len(n, t) as u64).sum(),
         WeightsMsg::Quantized(q) => q
             .entries
             .iter()
@@ -729,6 +843,116 @@ mod tests {
                 assert_eq!(b2, buf);
             }
             _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn fx128_varint_roundtrip_extremes() {
+        let vals = [
+            0i128,
+            1,
+            -1,
+            i128::MAX,
+            i128::MIN,
+            1i128 << 64,
+            -(1i128 << 64),
+            (7i128 << 64) + 12345,
+            -42,
+        ];
+        let t = Tensor::from_i128(vec![vals.len()], &vals);
+        let e = Entry::Plain("p".into(), t);
+        let mut buf = Vec::new();
+        write_entry(&mut buf, &e).unwrap();
+        assert_eq!(buf.len(), e.wire_len());
+        let got = read_entry(&mut buf.as_slice()).unwrap();
+        assert_eq!(got, e);
+        match got {
+            Entry::Plain(_, t) => {
+                assert_eq!(t.meta.dtype, DType::Fx128);
+                assert_eq!(t.iter_i128().collect::<Vec<_>>(), vals);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn fx128_varint_compacts_small_magnitudes() {
+        // Q64.64 sums of O(1)-magnitude weights fit in ~10 varint bytes;
+        // zeros collapse to one. The fixed encoding burned 16 per value.
+        let vals: Vec<i128> =
+            (0..64i128).map(|i| if i % 2 == 0 { 0 } else { i << 64 }).collect();
+        let t = Tensor::from_i128(vec![64], &vals);
+        let fixed_payload = 64 * 16;
+        let header = 2 + 1 + 1 + 1 + 8 + 4 + 4 + 4 + 8;
+        let e = Entry::Plain("p".into(), t);
+        assert!(
+            e.wire_len() < header + fixed_payload / 2,
+            "varint payload should beat half the fixed encoding, got {}",
+            e.wire_len()
+        );
+        let mut buf = Vec::new();
+        write_entry(&mut buf, &e).unwrap();
+        assert_eq!(buf.len(), e.wire_len());
+        assert_eq!(read_entry(&mut buf.as_slice()).unwrap(), e);
+    }
+
+    #[test]
+    fn fx128_varint_hostile_payloads_rejected() {
+        // Declared length below one byte per element.
+        let buf = hostile_entry(1, &[4], 7, 0, 0, 0, 3, &[0u8; 64]);
+        let err = read_entry(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("inconsistent with 4 elements"), "{err}");
+
+        // Declared length above the 19-byte worst case per element.
+        let buf = hostile_entry(1, &[4], 7, 0, 0, 0, 4 * 19 + 1, &[0u8; 128]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+
+        // Truncated mid-varint: third value is a lone continuation byte.
+        let buf = hostile_entry(1, &[4], 7, 0, 0, 0, 4, &[0x80, 0x00, 0x01, 0x80]);
+        let err = format!("{:#}", read_entry(&mut buf.as_slice()).unwrap_err());
+        assert!(err.contains("truncated mid-value"), "{err}");
+
+        // Trailing bytes after the last value.
+        let buf = hostile_entry(1, &[1], 7, 0, 0, 0, 2, &[0x01, 0x01]);
+        let err = format!("{:#}", read_entry(&mut buf.as_slice()).unwrap_err());
+        assert!(err.contains("trailing bytes"), "{err}");
+
+        // 19th group carrying more than the top 2 payload bits.
+        let mut overflow = vec![0xffu8; 18];
+        overflow.push(0x04);
+        let buf = hostile_entry(1, &[1], 7, 0, 0, 0, 19, &overflow);
+        let err = format!("{:#}", read_entry(&mut buf.as_slice()).unwrap_err());
+        assert!(err.contains("overflows 128 bits"), "{err}");
+
+        // Continuation past the 19-byte cap.
+        let mut long = vec![0xffu8; 18];
+        long.push(0x83);
+        long.push(0x00);
+        let buf = hostile_entry(1, &[2], 7, 0, 0, 0, 20, &long);
+        let err = format!("{:#}", read_entry(&mut buf.as_slice()).unwrap_err());
+        assert!(err.contains("longer than 19 bytes"), "{err}");
+
+        // Varint entry smuggling quantization metadata.
+        let buf = hostile_entry(1, &[2], 7, 64, 0, 0, 2, &[0x00, 0x00]);
+        assert!(read_entry(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn fx128_legacy_fixed_decode_still_accepted() {
+        // A spooled/in-flight stream from a pre-varint sender: kind 6
+        // fixed 16-byte values must keep decoding bit-exactly.
+        let vals = [1i128 << 80, -(3i128 << 64), 7, 0];
+        let mut payload = Vec::new();
+        for v in vals {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let buf = hostile_entry(1, &[4], 6, 0, 0, 0, 64, &payload);
+        match read_entry(&mut buf.as_slice()).unwrap() {
+            Entry::Plain(_, t) => {
+                assert_eq!(t.meta.dtype, DType::Fx128);
+                assert_eq!(t.iter_i128().collect::<Vec<_>>(), vals);
+            }
+            _ => panic!("wrong variant"),
         }
     }
 

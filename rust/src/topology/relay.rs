@@ -5,17 +5,36 @@
 //! * **Downstream** it is a server: it accepts N child registrations
 //!   (ordinary executors or deeper relays — same protocol), forwards
 //!   each task's control message and weight stream **verbatim**
-//!   (store-and-forward, no decode/re-encode, so leaves see
-//!   byte-identical task data in any topology), then gathers each
-//!   child's result through the job's per-session inbound filter chain,
-//!   folding every dequantized entry straight into a local exact
-//!   [`EntryFold`] — gather memory stays O(accumulator + entry × children).
+//!   (leaves see byte-identical task data in any topology), then
+//!   gathers each child's result through the job's per-session inbound
+//!   filter chain, folding every dequantized entry straight into a
+//!   local exact [`EntryFold`] — gather memory stays
+//!   O(accumulator + entry × children).
 //! * **Upstream** it is a client: it registers with
 //!   `subtree = leaf count`, and answers each task with a single
 //!   weight-tagged **PartialAggregate** — the raw Q64.64 fixed-point
 //!   sums of its subtree ([`EntryFold::finalize_partial`]) — so the
 //!   parent folds one stream per relay and the final model stays
 //!   bit-identical to the flat run.
+//!
+//! Two session engines drive the child sessions, selected by the job's
+//! `session_engine` knob:
+//!
+//! * **threaded** (default) — one scoped thread per tasked child, the
+//!   original code path; the scatter is store-and-forward (decode the
+//!   full message, then re-send it per child).
+//! * **reactor** — every child session is parked on a
+//!   [`crate::reactor::Reactor`] and holds no thread between rounds,
+//!   so deep fan-outs scale past the thread-per-child ceiling. On
+//!   non-reliable jobs the reactor engine also **pipelines** the
+//!   scatter: each upstream frame is fanned out to the tasked children
+//!   *as it arrives* (payload refcounted, never copied), while a
+//!   loopback decode reconstructs the message for the fold skeleton
+//!   and any restart attempts — tier latency drops from O(model) to
+//!   O(frame). Fan-out is sequential per frame, so one slow child link
+//!   head-of-line blocks its siblings within a frame; that is the
+//!   bounded price of the zero-buffer path. Both engines run the same
+//!   gather/fold protocol and produce bit-identical partials.
 //!
 //! The round policy cascades per subtree: the relay applies client
 //! sampling over its own children (seeded by job seed + relay name), a
@@ -28,33 +47,36 @@
 //! travels in the upstream result headers.
 
 use super::skeleton_of;
-use crate::config::JobConfig;
+use crate::config::{JobConfig, SessionEngine};
 use crate::coordinator::aggregator::{EntryFold, FoldOutcome};
 use crate::coordinator::protocol::CtrlMsg;
 use crate::coordinator::resume_policy;
 use crate::filter::{
     integrity, EntryChain, FilterContext, FilterFactory, FilterPoint, FilterSet,
 };
-use crate::sfm::SfmEndpoint;
+use crate::reactor::{Reactor, SessionId, Step, WakeReason};
+use crate::sfm::{inmem, FrameType, Payload, SfmEndpoint};
 use crate::streaming::{self, WeightsMsg};
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// One child session from the relay's perspective.
 struct Child {
-    ep: SfmEndpoint,
+    /// Shared with the relay main loop: between rounds the session is
+    /// parked (reactor) or blocked on a command channel (threaded), so
+    /// the main loop can write idle-path ctrls (NoTask / Done) on the
+    /// endpoint without contention.
+    ep: Arc<SfmEndpoint>,
     name: String,
     subtree: usize,
     filters: FilterSet,
     /// Reused inbound chain (dequantize scratch amortizes across rounds).
     chain: Option<EntryChain>,
-    /// Failed once: excluded from later rounds instead of burning a
-    /// transfer timeout per round on a broken link.
-    dead: bool,
 }
 
 /// Per-round relay metrics (the `relay_fold_secs` / `relay_fanin`
@@ -91,6 +113,68 @@ enum ChildOutcome {
     },
     /// Excluded or poisoned mid-round; the stream was drained.
     Dropped,
+}
+
+/// One round's work order for a parked reactor child session.
+struct ChildCmd {
+    round: usize,
+    attempt: usize,
+    local_steps: usize,
+    headers: BTreeMap<String, Json>,
+    msg: Arc<WeightsMsg>,
+    fold: Arc<EntryFold>,
+    pos: usize,
+    version: Option<u64>,
+    /// The relay main loop already tee-forwarded the scatter (pipelined
+    /// path): skip the forward, consume the transfer ack, gather only.
+    gather_only: bool,
+}
+
+/// A reactor child session's answer to one [`ChildCmd`].
+struct ChildEvent {
+    idx: usize,
+    round: usize,
+    attempt: usize,
+    outcome: Result<ChildOutcome>,
+}
+
+/// The relay's child sessions under either engine.
+enum ChildSessions {
+    Threaded(Vec<Child>),
+    Reactor {
+        /// Owns the worker pool; dropped (joined) when the relay exits.
+        reactor: Reactor,
+        txs: Vec<mpsc::Sender<ChildCmd>>,
+        ids: Vec<SessionId>,
+        evt_rx: mpsc::Receiver<ChildEvent>,
+        /// Endpoint handles for the main loop's idle-path ctrls and the
+        /// pipelined scatter tee.
+        eps: Vec<Arc<SfmEndpoint>>,
+    },
+}
+
+impl ChildSessions {
+    fn len(&self) -> usize {
+        match self {
+            ChildSessions::Threaded(c) => c.len(),
+            ChildSessions::Reactor { eps, .. } => eps.len(),
+        }
+    }
+
+    fn ep(&self, i: usize) -> &SfmEndpoint {
+        match self {
+            ChildSessions::Threaded(c) => &c[i].ep,
+            ChildSessions::Reactor { eps, .. } => &eps[i],
+        }
+    }
+
+    /// Best-effort Done to every child (job teardown). Sessions are
+    /// idle between rounds, so the endpoints are uncontended.
+    fn send_done_all(&self) {
+        for i in 0..self.len() {
+            let _ = self.ep(i).send_ctrl(&CtrlMsg::Done.to_json());
+        }
+    }
 }
 
 /// Unblocks the shared fold the moment a child session dies (error or
@@ -178,12 +262,11 @@ impl RelayNode {
             );
             log::info!("relay {}: child '{name}' registered ({subtree} leaf/leaves)", self.name);
             children.push(Child {
-                ep,
+                ep: Arc::new(ep),
                 name,
                 subtree,
                 filters,
                 chain: None,
-                dead: false,
             });
         }
         if children.is_empty() {
@@ -212,9 +295,52 @@ impl RelayNode {
             other => bail!("relay {}: expected welcome, got {other:?}", self.name),
         }
 
+        let n = children.len();
+        let names: Vec<String> = children.iter().map(|c| c.name.clone()).collect();
+        // Failed once: excluded from later rounds instead of burning a
+        // transfer timeout per round on a broken link. Hoisted out of
+        // `Child` so the main loop reads it while reactor sessions own
+        // their `Child`.
+        let mut dead = vec![false; n];
+        let mut sessions = match self.job.session_engine {
+            SessionEngine::Threaded => ChildSessions::Threaded(children),
+            SessionEngine::Reactor => {
+                // +1 so the elastic pool always outnumbers the tasked
+                // fold streams: `fold_entry` blocks on the frontier
+                // condvar, and a pool smaller than the stream count
+                // would park a stream the frontier is waiting on.
+                let reactor = Reactor::new(n + 1);
+                let (evt_tx, evt_rx) = mpsc::channel::<ChildEvent>();
+                let mut txs = Vec::with_capacity(n);
+                let mut ids = Vec::with_capacity(n);
+                let mut eps = Vec::with_capacity(n);
+                for (i, child) in children.into_iter().enumerate() {
+                    let (cmd_tx, cmd_rx) = mpsc::channel::<ChildCmd>();
+                    eps.push(child.ep.clone());
+                    let id = reactor.spawn(child_step(
+                        i,
+                        child,
+                        self.job.clone(),
+                        self.spool.clone(),
+                        cmd_rx,
+                        evt_tx.clone(),
+                    ));
+                    txs.push(cmd_tx);
+                    ids.push(id);
+                }
+                ChildSessions::Reactor {
+                    reactor,
+                    txs,
+                    ids,
+                    evt_rx,
+                    eps,
+                }
+            }
+        };
+
         let mut stats = RelayStats {
             name: self.name.clone(),
-            fanin: children.len(),
+            fanin: n,
             leaf_clients: leaves,
             rounds: Vec::new(),
         };
@@ -225,27 +351,35 @@ impl RelayNode {
             let ctrl = CtrlMsg::from_json(&self.up.recv_ctrl(None)?)?;
             match ctrl {
                 CtrlMsg::Done => {
-                    for c in &children {
-                        let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
-                    }
+                    sessions.send_done_all();
                     return Ok(stats);
                 }
                 CtrlMsg::NoTask { round } => {
                     // Whole subtree idles this round.
-                    for c in children.iter().filter(|c| !c.dead) {
-                        let _ = c.ep.send_ctrl(&CtrlMsg::NoTask { round }.to_json());
+                    for i in 0..n {
+                        if !dead[i] {
+                            let _ = sessions
+                                .ep(i)
+                                .send_ctrl(&CtrlMsg::NoTask { round }.to_json());
+                        }
                     }
                 }
                 CtrlMsg::Task {
                     round,
                     local_steps,
                     headers,
-                } => match self.run_round(&mut children, round, local_steps, &headers, None) {
+                } => match self.run_round(
+                    &mut sessions,
+                    &names,
+                    &mut dead,
+                    round,
+                    local_steps,
+                    &headers,
+                    None,
+                ) {
                     Ok(r) => stats.rounds.push(r),
                     Err(e) => {
-                        for c in &children {
-                            let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
-                        }
+                        sessions.send_done_all();
                         return Err(e.context(format!("relay {}: round {round}", self.name)));
                     }
                 },
@@ -261,7 +395,9 @@ impl RelayNode {
                     local_steps,
                     headers,
                 } => match self.run_round(
-                    &mut children,
+                    &mut sessions,
+                    &names,
+                    &mut dead,
                     version as usize,
                     local_steps,
                     &headers,
@@ -269,9 +405,7 @@ impl RelayNode {
                 ) {
                     Ok(r) => stats.rounds.push(r),
                     Err(e) => {
-                        for c in &children {
-                            let _ = c.ep.send_ctrl(&CtrlMsg::Done.to_json());
-                        }
+                        sessions.send_done_all();
                         return Err(e.context(format!("relay {}: version {version}", self.name)));
                     }
                 },
@@ -280,11 +414,15 @@ impl RelayNode {
         }
     }
 
-    /// One task: forward the scatter verbatim, gather + pre-fold the
+    /// One task: forward the scatter (verbatim store-and-forward, or
+    /// frame-pipelined on the reactor engine), gather + pre-fold the
     /// subtree, ship the partial aggregate upstream.
+    #[allow(clippy::too_many_arguments)]
     fn run_round(
         &self,
-        children: &mut [Child],
+        sessions: &mut ChildSessions,
+        names: &[String],
+        dead: &mut [bool],
         round: usize,
         local_steps: usize,
         headers: &BTreeMap<String, Json>,
@@ -293,19 +431,13 @@ impl RelayNode {
         let job = &self.job;
         let timeout = job.transfer_timeout();
         let policy = &job.round_policy;
-
-        // -- scatter in (opaque: quantized bytes stay quantized) ---------
-        let (msg, _stats) = if job.reliable {
-            streaming::recv_weights_resumable(&self.up, Some(&self.spool), Some(timeout))
-                .context("receive task data from parent")?
-        } else {
-            streaming::recv_weights(&self.up, Some(&self.spool))
-                .context("receive task data from parent")?
-        };
-        let t_fold = Instant::now();
+        let n = sessions.len();
 
         // -- subtree sampling (policy cascade) ---------------------------
-        let n = children.len();
+        // Sampling needs only (n, seed, round), so it runs *before* the
+        // scatter arrives — the pipelined path must know the fan-out
+        // targets per frame. Protocol-equivalent to sampling after the
+        // scatter: children observe the same ctrl-then-stream order.
         let relay_seed = {
             let mut base = SplitMix64::new(job.seed);
             let mut fork = base.fork(&self.name);
@@ -318,11 +450,69 @@ impl RelayNode {
         for (p, &i) in selected.iter().enumerate() {
             pos_of[i] = p;
         }
-        for (i, c) in children.iter().enumerate() {
-            if pos_of[i] == usize::MAX && !c.dead {
-                let _ = c.ep.send_ctrl(&CtrlMsg::NoTask { round }.to_json());
+        for i in 0..n {
+            if pos_of[i] == usize::MAX && !dead[i] {
+                let _ = sessions
+                    .ep(i)
+                    .send_ctrl(&CtrlMsg::NoTask { round }.to_json());
             }
         }
+
+        // -- scatter in --------------------------------------------------
+        // Reactor engine + non-reliable transfers: tee each upstream
+        // frame to the tasked children as it arrives (the task ctrl goes
+        // out first, exactly as `child_round` would). Otherwise decode
+        // locally and let each child session re-send (store-and-forward;
+        // the resumable discipline needs a seekable local copy anyway).
+        let pipelined = !job.reliable && matches!(sessions, ChildSessions::Reactor { .. });
+        let (msg, teed) = if pipelined {
+            let fwd = match version {
+                Some(v) => CtrlMsg::VersionedTask {
+                    version: v,
+                    local_steps,
+                    headers: headers.clone(),
+                },
+                None => CtrlMsg::Task {
+                    round,
+                    local_steps,
+                    headers: headers.clone(),
+                },
+            };
+            let ChildSessions::Reactor { eps, .. } = &*sessions else {
+                unreachable!("pipelined implies the reactor engine");
+            };
+            let mut targets: Vec<Arc<SfmEndpoint>> = Vec::with_capacity(k);
+            for i in 0..n {
+                if pos_of[i] != usize::MAX && !dead[i] {
+                    // A dead link here is the same failure `child_round`
+                    // would hit on its ctrl forward: the child's gather
+                    // session reports it and the reconcile below marks
+                    // it dead — siblings are unaffected.
+                    if eps[i].send_ctrl(&fwd.to_json()).is_ok() {
+                        targets.push(eps[i].clone());
+                    } else {
+                        log::warn!(
+                            "relay {}: task ctrl to '{}' failed; skipping its tee",
+                            self.name,
+                            names[i]
+                        );
+                    }
+                }
+            }
+            let m = tee_scatter(&self.up, &targets, &self.spool, timeout)
+                .context("pipelined scatter from parent")?;
+            (Arc::new(m), true)
+        } else {
+            let (m, _stats) = if job.reliable {
+                streaming::recv_weights_resumable(&self.up, Some(&self.spool), Some(timeout))
+                    .context("receive task data from parent")?
+            } else {
+                streaming::recv_weights(&self.up, Some(&self.spool))
+                    .context("receive task data from parent")?
+            };
+            (Arc::new(m), false)
+        };
+        let t_fold = Instant::now();
 
         let skeleton = skeleton_of(&msg);
         let mut attempt = 0usize;
@@ -331,55 +521,116 @@ impl RelayNode {
             if attempt > k + 1 {
                 bail!("restart budget exhausted after {} attempts", attempt - 1);
             }
-            let fold = EntryFold::new(skeleton.clone(), k);
-            for (i, c) in children.iter().enumerate() {
-                if pos_of[i] != usize::MAX && c.dead {
+            let fold = Arc::new(EntryFold::new(skeleton.clone(), k));
+            for i in 0..n {
+                if pos_of[i] != usize::MAX && dead[i] {
                     let _ = fold.exclude(pos_of[i]);
                 }
             }
 
-            // One scoped worker per tasked child: forward + gather + fold
-            // concurrently (subtree wall-clock tracks its slowest child).
             let mut outcomes: Vec<Option<Result<ChildOutcome>>> =
                 (0..k).map(|_| None).collect();
-            {
-                let fold_ref = &fold;
-                let msg_ref = &msg;
-                let spool = self.spool.as_path();
-                let outcome_slots = &mut outcomes;
-                std::thread::scope(|s| {
-                    let mut handles = Vec::new();
-                    for (i, child) in children.iter_mut().enumerate() {
+            match &mut *sessions {
+                // One scoped worker per tasked child: forward + gather +
+                // fold concurrently (subtree wall-clock tracks its
+                // slowest child).
+                ChildSessions::Threaded(children) => {
+                    let fold_ref: &EntryFold = &fold;
+                    let msg_ref: &WeightsMsg = &msg;
+                    let spool = self.spool.as_path();
+                    let outcome_slots = &mut outcomes;
+                    std::thread::scope(|s| {
+                        let mut handles = Vec::new();
+                        for (i, child) in children.iter_mut().enumerate() {
+                            let pos = pos_of[i];
+                            if pos == usize::MAX || dead[i] {
+                                continue;
+                            }
+                            handles.push((
+                                pos,
+                                s.spawn(move || {
+                                    let mut guard = FoldAbortGuard {
+                                        fold: fold_ref,
+                                        pos,
+                                        armed: true,
+                                    };
+                                    let r = child_round(
+                                        child, pos, round, local_steps, headers, msg_ref,
+                                        fold_ref, job, spool, version,
+                                    );
+                                    if r.is_ok() {
+                                        guard.armed = false;
+                                    }
+                                    r
+                                }),
+                            ));
+                        }
+                        for (pos, h) in handles {
+                            outcome_slots[pos] = Some(
+                                h.join()
+                                    .unwrap_or_else(|_| Err(anyhow!("child session panicked"))),
+                            );
+                        }
+                    });
+                }
+                // Parked sessions: hand each tasked child a work order
+                // and wake it; the elastic pool runs the same gather
+                // bodies the scoped threads would.
+                ChildSessions::Reactor {
+                    reactor,
+                    txs,
+                    ids,
+                    evt_rx,
+                    ..
+                } => {
+                    let mut outstanding = 0usize;
+                    for i in 0..n {
                         let pos = pos_of[i];
-                        if pos == usize::MAX || child.dead {
+                        if pos == usize::MAX || dead[i] {
                             continue;
                         }
-                        handles.push((
+                        let cmd = ChildCmd {
+                            round,
+                            attempt,
+                            local_steps,
+                            headers: headers.clone(),
+                            msg: msg.clone(),
+                            fold: fold.clone(),
                             pos,
-                            s.spawn(move || {
-                                let mut guard = FoldAbortGuard {
-                                    fold: fold_ref,
-                                    pos,
-                                    armed: true,
-                                };
-                                let r = child_round(
-                                    child, pos, round, local_steps, headers, msg_ref,
-                                    fold_ref, job, spool, version,
-                                );
-                                if r.is_ok() {
-                                    guard.armed = false;
-                                }
-                                r
-                            }),
-                        ));
+                            version,
+                            gather_only: teed && attempt == 1,
+                        };
+                        if txs[i].send(cmd).is_ok() {
+                            reactor.wake(ids[i]);
+                            outstanding += 1;
+                        } else {
+                            // Session gone (step closure dropped). Treat
+                            // like a pre-excluded dead child so siblings
+                            // never block on this fold position.
+                            log::warn!(
+                                "relay {}: child session '{}' is gone",
+                                self.name,
+                                names[i]
+                            );
+                            dead[i] = true;
+                            let _ = fold.exclude(pos);
+                        }
                     }
-                    for (pos, h) in handles {
-                        outcome_slots[pos] = Some(
-                            h.join()
-                                .unwrap_or_else(|_| Err(anyhow!("child session panicked"))),
-                        );
+                    while outstanding > 0 {
+                        let evt = evt_rx
+                            .recv()
+                            .map_err(|_| anyhow!("all child sessions exited mid-round"))?;
+                        if evt.round != round || evt.attempt != attempt {
+                            continue; // stale (defensive; attempts drain fully)
+                        }
+                        let pos = pos_of[evt.idx];
+                        if pos == usize::MAX || outcomes[pos].is_some() {
+                            continue;
+                        }
+                        outcomes[pos] = Some(evt.outcome);
+                        outstanding -= 1;
                     }
-                });
+                }
             }
 
             // -- reconcile the attempt ----------------------------------
@@ -405,20 +656,19 @@ impl RelayNode {
                     }
                     Some(Ok(ChildOutcome::Dropped)) => {}
                     Some(Err(e)) => {
-                        children[ci].dead = true;
+                        dead[ci] = true;
                         if !policy.allow_partial {
                             fold.poison("subtree round aborted: child failed");
-                            return Err(e.context(format!(
-                                "child '{}' failed",
-                                children[ci].name
-                            )));
+                            return Err(
+                                e.context(format!("child '{}' failed", names[ci]))
+                            );
                         }
                         match fold.exclude(pos) {
                             Ok(true) => {
                                 log::warn!(
                                     "relay {}: excluding failed child '{}': {e:#}",
                                     self.name,
-                                    children[ci].name
+                                    names[ci]
                                 );
                                 failed += 1;
                             }
@@ -430,7 +680,7 @@ impl RelayNode {
                                     "relay {}: child '{}' failed after a partial fold — \
                                      restarting the subtree round without it: {e:#}",
                                     self.name,
-                                    children[ci].name
+                                    names[ci]
                                 );
                                 restart = true;
                             }
@@ -512,9 +762,150 @@ impl RelayNode {
     }
 }
 
-/// One child's round inside the relay: forward the task, await the
-/// result, run the inbound chain per entry and fold into the shared
-/// subtree accumulator.
+/// The reactor engine's per-child state machine: parked between rounds,
+/// woken with a [`ChildCmd`] per attempt, running the exact threaded
+/// gather body ([`child_round`] / [`child_gather`]) on a pool worker.
+/// Command-channel disconnect (relay teardown) retires the session.
+fn child_step(
+    idx: usize,
+    mut child: Child,
+    job: JobConfig,
+    spool: PathBuf,
+    cmd_rx: mpsc::Receiver<ChildCmd>,
+    evt_tx: mpsc::Sender<ChildEvent>,
+) -> impl FnMut(WakeReason) -> Step + Send + 'static {
+    move |_reason| loop {
+        match cmd_rx.try_recv() {
+            Ok(cmd) => {
+                let outcome = run_child_cmd(&mut child, &cmd, &job, &spool);
+                let _ = evt_tx.send(ChildEvent {
+                    idx,
+                    round: cmd.round,
+                    attempt: cmd.attempt,
+                    outcome,
+                });
+            }
+            Err(mpsc::TryRecvError::Empty) => return Step::Park,
+            Err(mpsc::TryRecvError::Disconnected) => return Step::Done,
+        }
+    }
+}
+
+/// One work order on a reactor child session, under the same
+/// [`FoldAbortGuard`] discipline as a scoped gather thread.
+fn run_child_cmd(
+    child: &mut Child,
+    cmd: &ChildCmd,
+    job: &JobConfig,
+    spool: &Path,
+) -> Result<ChildOutcome> {
+    let mut guard = FoldAbortGuard {
+        fold: cmd.fold.as_ref(),
+        pos: cmd.pos,
+        armed: true,
+    };
+    let r = if cmd.gather_only {
+        // The relay main loop tee-forwarded ctrl + stream already; the
+        // child's transfer ack is (or will be) queued on our endpoint.
+        // Consume it eventfully — `recv_ctrl` would misfile an Ack
+        // frame — then gather as usual.
+        match child.ep.recv_event(Some(job.transfer_timeout())) {
+            Ok(_) => child_gather(
+                child,
+                cmd.pos,
+                cmd.round,
+                cmd.fold.as_ref(),
+                job,
+                spool,
+                cmd.version,
+            ),
+            Err(e) => Err(e.context(format!("transfer ack from {}", child.name))),
+        }
+    } else {
+        child_round(
+            child,
+            cmd.pos,
+            cmd.round,
+            cmd.local_steps,
+            &cmd.headers,
+            cmd.msg.as_ref(),
+            cmd.fold.as_ref(),
+            job,
+            spool,
+            cmd.version,
+        )
+    };
+    if r.is_ok() {
+        guard.armed = false;
+    }
+    r
+}
+
+/// Pipelined relay scatter: fan each upstream frame out to the tasked
+/// children *as it arrives* — payloads are promoted to
+/// [`Payload::Shared`] so the fan-out refcounts one buffer instead of
+/// copying per child — while a loopback decode thread reconstructs the
+/// [`WeightsMsg`] (fold skeleton + restart attempts) from the same
+/// frames. The raw tee bypasses the normal receive path, so the
+/// transfer ack the parent blocks on is sent explicitly at the end.
+fn tee_scatter(
+    up: &SfmEndpoint,
+    children: &[Arc<SfmEndpoint>],
+    spool: &Path,
+    timeout: Duration,
+) -> Result<WeightsMsg> {
+    let pair = inmem::pair(256);
+    let decode = SfmEndpoint::new(pair.b);
+    let feed_driver = pair.a;
+    std::thread::scope(|s| -> Result<WeightsMsg> {
+        // `feed` lives inside the scope closure: an early error return
+        // drops it, which unblocks (errors out) the decode thread so
+        // the implicit scope join cannot deadlock.
+        let feed = SfmEndpoint::new(feed_driver);
+        let h = s.spawn(move || streaming::recv_weights(&decode, Some(spool)));
+        let mut forward_ok = vec![true; children.len()];
+        let mut ack_stream = None;
+        loop {
+            let mut f = up
+                .recv_obj_frame(Some(timeout))
+                .context("pipelined scatter: receive from parent")?;
+            if f.ftype == FrameType::Begin && ack_stream.is_none() {
+                ack_stream = Some(f.stream_id);
+            }
+            let payload = std::mem::take(&mut f.payload);
+            f.payload = match payload {
+                Payload::Owned(v) => Payload::Shared(Arc::new(v)),
+                shared => shared,
+            };
+            let last = f.ftype == FrameType::End;
+            for (ci, ep) in children.iter().enumerate() {
+                // A failing child link only silences its own tee — its
+                // gather session times out and the round reconcile
+                // handles it like any other child failure.
+                if forward_ok[ci] && ep.forward_frame(f.clone()).is_err() {
+                    forward_ok[ci] = false;
+                }
+            }
+            feed.forward_frame(f)?;
+            if last {
+                break;
+            }
+        }
+        let (msg, _stats) = h
+            .join()
+            .map_err(|_| anyhow!("pipelined scatter: decode panicked"))?
+            .context("pipelined scatter: loopback decode")?;
+        // The raw tee consumed the frames, so the receive-side transfer
+        // ack the parent is waiting on must be sent explicitly.
+        if let Some(sid) = ack_stream {
+            up.send_ack(sid)?;
+        }
+        Ok(msg)
+    })
+}
+
+/// One child's round inside the relay: forward the task, then gather
+/// ([`child_gather`]).
 #[allow(clippy::too_many_arguments)]
 fn child_round(
     child: &mut Child,
@@ -529,8 +920,6 @@ fn child_round(
     version: Option<u64>,
 ) -> Result<ChildOutcome> {
     let timeout = job.transfer_timeout();
-    let mode = job.streaming;
-    let reliable = job.reliable;
     let name = child.name.clone();
 
     // -- forward scatter verbatim ---------------------------------------
@@ -547,24 +936,43 @@ fn child_round(
         },
     };
     child.ep.send_ctrl(&fwd.to_json())?;
-    if reliable {
+    if job.reliable {
         streaming::send_weights_resumable(
             &child.ep,
             msg,
-            mode,
+            job.streaming,
             Some(spool),
             &resume_policy(timeout),
         )
         .with_context(|| format!("forward task data to {name}"))?;
     } else {
-        streaming::send_weights(&child.ep, msg, mode, Some(spool))
+        streaming::send_weights(&child.ep, msg, job.streaming, Some(spool))
             .with_context(|| format!("forward task data to {name}"))?;
         let _ = child.ep.recv_event(Some(timeout))?; // transfer ack
     }
 
-    // -- await the result (deadline cascade caps the train wait; a
-    // deeper relay child gets the same subtree headroom the root
-    // engine grants — see [`crate::coordinator::SUBTREE_WAIT_FACTOR`])
+    child_gather(child, pos, round, fold, job, spool, version)
+}
+
+/// The gather half of a child's round: await the result ctrl (deadline
+/// cascade caps the train wait), then run the inbound chain per entry
+/// and fold into the shared subtree accumulator.
+fn child_gather(
+    child: &mut Child,
+    pos: usize,
+    round: usize,
+    fold: &EntryFold,
+    job: &JobConfig,
+    spool: &Path,
+    version: Option<u64>,
+) -> Result<ChildOutcome> {
+    let timeout = job.transfer_timeout();
+    let reliable = job.reliable;
+    let name = child.name.clone();
+
+    // -- await the result (a deeper relay child gets the same subtree
+    // headroom the root engine grants — see
+    // [`crate::coordinator::SUBTREE_WAIT_FACTOR`])
     let base = if child.subtree > 1 {
         timeout.saturating_mul(crate::coordinator::SUBTREE_WAIT_FACTOR)
     } else {

@@ -1,0 +1,353 @@
+//! Threaded/reactor session-engine equivalence under seeded faults.
+//!
+//! The reactor engine re-runs the exact blocking protocol bodies of the
+//! threaded engine, just scheduled by readiness instead of by one pinned
+//! OS thread per session — so every observable outcome must be
+//! *identical*, not merely close. These tests replay the seeded fault
+//! schedules from `fault_streaming.rs` (drop + dup + reorder rates,
+//! bandwidth skew, disconnect-at-byte-N blackouts) under both values of
+//! `session_engine` and assert:
+//!
+//! * bit-identical final globals (the Q64.64 fold is arrival-order
+//!   invariant, and the per-session byte streams are unchanged);
+//! * identical quarantine and staleness metrics for buffered runs;
+//! * identical survivor sets when a relay's leaf dies mid-upload;
+//! * the reactor-only pipelined relay scatter matches the threaded
+//!   store-and-forward scatter bit-for-bit.
+//!
+//! Tests share the process-global comm gauge and buffer pool, so they
+//! serialize on a file-local mutex like `topology.rs`.
+
+mod common;
+
+use flare::config::{
+    AggregationConfig, AggregationMode, FaultProfile, JobConfig, QuantScheme, RoundPolicy,
+    SessionEngine, StreamingMode, Topology, TrainConfig,
+};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::tensor::init::materialize;
+use flare::tensor::ParamContainer;
+use flare::topology::plan;
+use flare::topology::sim::{run_tree_simulation_with, TreeSimOptions};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const SAMPLES: [u64; 8] = [100, 50, 75, 10, 33, 66, 99, 1];
+
+/// One synchronous federated run over links with seeded drop + dup +
+/// reorder schedules. Returns the global plus the engine-independent
+/// round accounting.
+fn sync_faulted_run(engine: SessionEngine) -> (ParamContainer, Vec<usize>, f64) {
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 7);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 300 + i)).collect();
+    let job = JobConfig {
+        name: "reactor-equiv-sync".into(),
+        clients: 3,
+        rounds: 2,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        session_engine: engine,
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let fault = FaultProfile {
+        seed: 6006,
+        drop_rate: 0.04,
+        dup_rate: 0.03,
+        reorder_rate: 0.05,
+        ..FaultProfile::NONE
+    };
+    let links = vec![
+        common::Link {
+            to_client: fault.reseeded(1),
+            to_server: fault.reseeded(2),
+            ..common::Link::default()
+        },
+        common::Link::default(),
+        common::Link {
+            to_client: fault.reseeded(3),
+            to_server: fault.reseeded(4),
+            ..common::Link::default()
+        },
+    ];
+    let controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        common::fresh_spool("req_sync"),
+    );
+    let r = common::run_cluster(
+        &job,
+        controller,
+        &initial,
+        &links,
+        |i| MockTrainer::new(targets[i].clone(), 0.3, SAMPLES[i]),
+        |_| FilterSet::two_way_quantization(QuantScheme::Blockwise8),
+    );
+    let global = r.outcome.expect("sync faulted run failed");
+    for res in r.client_results {
+        res.unwrap();
+    }
+    let quarantined = r
+        .report
+        .scalars
+        .get("quarantined_total")
+        .copied()
+        .unwrap_or(0.0);
+    (global, r.tasks_sent, quarantined)
+}
+
+#[test]
+fn sync_rounds_bit_identical_across_engines() {
+    let _guard = SERIAL.lock().unwrap();
+    let (g_thr, tasks_thr, q_thr) = sync_faulted_run(SessionEngine::Threaded);
+    let (g_rea, tasks_rea, q_rea) = sync_faulted_run(SessionEngine::Reactor);
+    assert_eq!(
+        g_thr.max_abs_diff(&g_rea),
+        0.0,
+        "reactor sync global must be bit-identical to threaded"
+    );
+    assert_eq!(tasks_thr, tasks_rea, "per-round task fan-out must match");
+    assert_eq!(q_thr, q_rea, "quarantine totals must match");
+}
+
+/// One buffered (FedBuff) run over faulted, bandwidth-skewed links —
+/// the `buffered_replay_run` scenario from `fault_streaming.rs`, with
+/// the session engine pinned. Returns (global, staleness histogram,
+/// final version, quarantined total).
+fn buffered_faulted_run(engine: SessionEngine) -> (ParamContainer, Vec<(f64, f64)>, f64, f64) {
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 21);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 400 + i)).collect();
+    let samples = [100u64, 50, 75];
+    let job = JobConfig {
+        name: "reactor-equiv-buffered".into(),
+        clients: 3,
+        rounds: 2, // target global versions
+        quant: QuantScheme::None,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        session_engine: engine,
+        aggregation: AggregationConfig {
+            mode: AggregationMode::Buffered,
+            buffer_k: 3,
+            staleness_alpha: 1.0,
+        },
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let slow_fault = FaultProfile {
+        seed: 0xA5A5,
+        drop_rate: 0.03,
+        reorder_rate: 0.03,
+        ..FaultProfile::NONE
+    };
+    let links = vec![
+        common::Link {
+            net: common::net(8 * 1024 * 1024),
+            ..common::Link::default()
+        },
+        common::Link {
+            net: common::net(2 * 1024 * 1024),
+            ..common::Link::default()
+        },
+        common::Link {
+            net: common::net(512 * 1024),
+            to_client: slow_fault.reseeded(0),
+            to_server: slow_fault.reseeded(1),
+            ..common::Link::default()
+        },
+    ];
+    let controller = Controller::new(job.clone(), FilterSet::new(), common::fresh_spool("req_buf"));
+    let r = common::run_cluster(
+        &job,
+        controller,
+        &initial,
+        &links,
+        |i| MockTrainer::new(targets[i].clone(), 0.3, samples[i]),
+        |_| FilterSet::new(),
+    );
+    let global = r.outcome.expect("buffered run failed");
+    for res in r.client_results {
+        res.unwrap();
+    }
+    let hist = r.report.series["staleness_hist"].points.clone();
+    let version = r.report.scalars["final_version"];
+    let quarantined = r.report.scalars["quarantined_total"];
+    (global, hist, version, quarantined)
+}
+
+#[test]
+fn buffered_staleness_metrics_identical_across_engines() {
+    let _guard = SERIAL.lock().unwrap();
+    let (g_thr, h_thr, v_thr, q_thr) = buffered_faulted_run(SessionEngine::Threaded);
+    let (g_rea, h_rea, v_rea, q_rea) = buffered_faulted_run(SessionEngine::Reactor);
+    assert_eq!(v_thr, 2.0, "threaded run must reach its version target");
+    assert_eq!(v_rea, 2.0, "reactor run must reach its version target");
+    assert_eq!(
+        g_thr.max_abs_diff(&g_rea),
+        0.0,
+        "reactor buffered global must be bit-identical to threaded"
+    );
+    assert_eq!(h_thr, h_rea, "staleness histograms must be identical");
+    assert_eq!(q_thr, q_rea, "quarantine totals must be identical");
+    assert_eq!(q_thr, 0.0);
+}
+
+fn tree_trainers() -> flare::coordinator::simulator::TrainerFactory<MockTrainer> {
+    let spec = common::tiny_spec();
+    Arc::new(move |i| {
+        MockTrainer::new(
+            materialize(&spec, 100 + i as u64),
+            0.3,
+            SAMPLES[i % SAMPLES.len()],
+        )
+    })
+}
+
+fn expected_fedavg(clients: &[usize], local_steps: usize, rounds: usize) -> ParamContainer {
+    let spec = common::tiny_spec();
+    let targets: Vec<ParamContainer> = (0..8).map(|i| materialize(&spec, 100 + i)).collect();
+    let samples: Vec<u64> = (0..8).map(|i| SAMPLES[i % SAMPLES.len()]).collect();
+    let mut global = materialize(&spec, 1);
+    for round in 0..rounds {
+        global = common::fedavg_step(&global, &targets, &samples, clients, local_steps, round);
+    }
+    global
+}
+
+/// One 2-tier tree run where a leaf under relay 0 blacks out at byte N
+/// of its result upload (seeded disconnect-at-byte-N schedule). Returns
+/// (global, dead leaf index, leaves completed, surviving relay count).
+fn relay_leaf_blackout_run(engine: SessionEngine) -> (ParamContainer, usize, f64, usize) {
+    let job = JobConfig {
+        name: "reactor-equiv-relay".into(),
+        clients: 8,
+        rounds: 1,
+        quant: QuantScheme::None,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        transfer_timeout_secs: 2,
+        session_engine: engine,
+        topology: Topology::Tree { branching: 4 },
+        round_policy: RoundPolicy {
+            allow_partial: true,
+            min_clients: 1,
+            ..RoundPolicy::default()
+        },
+        train: TrainConfig {
+            local_steps: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let nodes = plan(&job.topology, job.clients, job.seed);
+    let dead = nodes[0].client_indices()[0];
+    let kill = FaultProfile {
+        seed: 77,
+        disconnect_at_bytes: 48 * 1024,
+        disconnect_frames: u64::MAX,
+        ..FaultProfile::NONE
+    };
+    let opts = TreeSimOptions {
+        leaf_faults: BTreeMap::from([(dead, (FaultProfile::NONE, kill))]),
+        ..TreeSimOptions::default()
+    };
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 1);
+    let r = run_tree_simulation_with(
+        &job,
+        initial,
+        tree_trainers(),
+        Arc::new(|| FilterSet::two_way_quantization(QuantScheme::None)),
+        opts,
+    )
+    .expect("partial subtree round must complete");
+    let leaves = r.report.series["leaf_clients_completed"].last().unwrap();
+    (r.global, dead, leaves, r.relays.len())
+}
+
+#[test]
+fn relay_leaf_blackout_identical_across_engines() {
+    let _guard = SERIAL.lock().unwrap();
+    let (g_thr, dead_thr, l_thr, rl_thr) = relay_leaf_blackout_run(SessionEngine::Threaded);
+    let (g_rea, dead_rea, l_rea, rl_rea) = relay_leaf_blackout_run(SessionEngine::Reactor);
+    assert_eq!(dead_thr, dead_rea);
+    assert_eq!(
+        g_thr.max_abs_diff(&g_rea),
+        0.0,
+        "reactor relay global must be bit-identical to threaded"
+    );
+    assert_eq!(l_thr, l_rea, "leaf completion counts must match");
+    assert_eq!(l_thr, 7.0);
+    assert_eq!(rl_thr, rl_rea, "surviving relay counts must match");
+    // Both engines computed FedAvg over exactly the survivors.
+    let survivors: Vec<usize> = (0..8).filter(|&i| i != dead_thr).collect();
+    let want = expected_fedavg(&survivors, 3, 1);
+    assert_eq!(g_thr.max_abs_diff(&want), 0.0);
+}
+
+/// The reactor's pipelined relay scatter (unreliable mode: units stream
+/// to children as they arrive instead of store-and-forward) must be an
+/// invisible optimization: bit-identical to the threaded engine and to
+/// the direct FedAvg reference.
+#[test]
+fn pipelined_relay_scatter_matches_threaded() {
+    let _guard = SERIAL.lock().unwrap();
+    let run = |engine: SessionEngine| {
+        let job = JobConfig {
+            name: "reactor-equiv-pipelined".into(),
+            clients: 4,
+            rounds: 2,
+            quant: QuantScheme::None,
+            streaming: StreamingMode::Container,
+            chunk_bytes: 16 * 1024,
+            reliable: false, // unlocks the pipelined scatter on the reactor
+            session_engine: engine,
+            topology: Topology::Tree { branching: 2 },
+            train: TrainConfig {
+                local_steps: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let spec = common::tiny_spec();
+        let initial = materialize(&spec, 1);
+        run_tree_simulation_with(
+            &job,
+            initial,
+            tree_trainers(),
+            Arc::new(|| FilterSet::two_way_quantization(QuantScheme::None)),
+            TreeSimOptions::default(),
+        )
+        .expect("pipelined tree run failed")
+    };
+    let thr = run(SessionEngine::Threaded);
+    let rea = run(SessionEngine::Reactor);
+    assert_eq!(
+        thr.global.max_abs_diff(&rea.global),
+        0.0,
+        "pipelined scatter must be bit-identical to store-and-forward"
+    );
+    let want = expected_fedavg(&[0, 1, 2, 3], 2, 2);
+    assert_eq!(thr.global.max_abs_diff(&want), 0.0);
+    assert_eq!(rea.global.max_abs_diff(&want), 0.0);
+    assert_eq!(
+        thr.report.series["leaf_clients_completed"].last(),
+        rea.report.series["leaf_clients_completed"].last()
+    );
+}

@@ -32,6 +32,11 @@
 //! once, at the root's [`finalize`](EntryFold::finalize), identically in
 //! every topology. See DESIGN.md §Topology.
 
+// Accumulator integer math in this module must be overflow-explicit:
+// `flare-lint` pass `unchecked_arith` and the clippy deny below reject
+// bare `+`-family operators on the fold paths.
+#![deny(clippy::arithmetic_side_effects)]
+
 use crate::tensor::{DType, ParamContainer, Tensor};
 use anyhow::{anyhow, bail, Result};
 use std::sync::{Condvar, Mutex};
@@ -52,6 +57,8 @@ pub const MAX_WEIGHT: u64 = 1 << 32;
 /// Deterministically place a term on the Q64.64 grid. Pure function of
 /// the term — independent of fold order, tier, or platform (IEEE f64
 /// arithmetic plus truncating conversion).
+// flare-lint: allow(float_in_fold): this fn IS the float→grid rounding
+// boundary — each term crosses into Q64.64 exactly once, right here.
 fn to_fixed(v: f64) -> Result<i128> {
     if !v.is_finite() || v.abs() >= MAX_TERM_ABS {
         bail!("aggregation term {v} outside the exact Q64.64 range");
@@ -64,6 +71,8 @@ fn to_fixed(v: f64) -> Result<i128> {
 /// without mutating anything. Terms are pure functions of the inputs,
 /// so [`apply_fold`] can recompute them infallibly afterwards — the
 /// all-or-nothing guarantee costs zero allocation and no extra copy.
+// flare-lint: allow(float_in_fold): the `weight × value` product is the
+// defined f64 step *before* the grid (module docs); to_fixed rounds it.
 fn validate_fold(dst: &[i128], t: &Tensor, weight: u64) -> Result<()> {
     match t.meta.dtype {
         DType::F32 => {
@@ -96,19 +105,23 @@ fn validate_fold(dst: &[i128], t: &Tensor, weight: u64) -> Result<()> {
 }
 
 /// Pass 2 of a fold: apply the terms [`validate_fold`] just proved safe
-/// (identical pure computation, so plain adds cannot overflow here).
+/// (identical pure computation, so the checked adds cannot fail here —
+/// the `expect`s are unreachable by construction).
+// flare-lint: allow(float_in_fold): recomputes the exact pure terms
+// validate_fold proved; to_fixed is the single rounding boundary.
 fn apply_fold(dst: &mut [i128], t: &Tensor, weight: u64) {
     match t.meta.dtype {
         DType::F32 => {
             let w = weight as f64;
             for (d, &x) in dst.iter_mut().zip(t.as_f32()) {
                 // Same pure computation validate_fold just proved safe.
-                *d += to_fixed(w * x as f64).expect("validated term");
+                let term = to_fixed(w * x as f64).expect("validated term");
+                *d = d.checked_add(term).expect("validated fold sum");
             }
         }
         DType::Fx128 => {
             for (d, v) in dst.iter_mut().zip(t.iter_i128()) {
-                *d += v;
+                *d = d.checked_add(v).expect("validated fold sum");
             }
         }
         _ => unreachable!("validate_fold rejects other dtypes"),
@@ -250,7 +263,7 @@ impl FedAvg {
             apply_fold(&mut self.sums[i], t, weight);
         }
         self.total_weight = total;
-        self.contributions += 1;
+        self.contributions = self.contributions.saturating_add(1);
         Ok(())
     }
 
@@ -327,7 +340,7 @@ impl FoldInner {
                 total = total
                     .checked_add(w)
                     .ok_or_else(|| anyhow!("total contribution weight overflow"))?;
-                contributions += 1;
+                contributions = contributions.saturating_add(1);
             }
         }
         Ok((total, contributions))
@@ -449,7 +462,7 @@ impl EntryFold {
         }
         fold_tensor_into(&mut g.sums[idx], t, w)?;
         g.folded[pos][idx] = true;
-        g.folded_count[pos] += 1;
+        g.folded_count[pos] = g.folded_count[pos].saturating_add(1);
         drop(g);
         self.cv.notify_all();
         Ok(FoldOutcome::Folded)
@@ -568,6 +581,7 @@ impl EntryFold {
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::config::model_spec::ModelSpec;

@@ -44,6 +44,11 @@
 //! arrival race that entry streaming would add is not worth it until the
 //! mode has mileage. See DESIGN.md §Asynchronous aggregation.
 
+// Accumulator integer math in this module must be overflow-explicit:
+// `flare-lint` pass `unchecked_arith` and the clippy deny below reject
+// bare `+`-family operators on the fold paths.
+#![deny(clippy::arithmetic_side_effects)]
+
 use super::aggregator::{check_foldable_dtype, FIXED_ONE, MAX_WEIGHT};
 use super::controller::{endpoint_bytes, ClientConn, Controller};
 use super::protocol::CtrlMsg;
@@ -63,6 +68,9 @@ use std::time::Instant;
 
 /// One unit on the Q32.32 staleness-weight grid (2^32).
 pub const W_ONE: u128 = 1u128 << 32;
+/// One unit on the Q64.64 value grid (2^64), as an integer. Multiplying
+/// by this (checked) is the overflow-explicit spelling of `<< 64`.
+const Q64_ONE: u128 = 1u128 << 64;
 /// Largest |value| accepted in a buffered f32 fold (2^22). Tighter than
 /// the synchronous `MAX_TERM_ABS` because the split-limb weight multiply
 /// needs `|value × 2^64| < 2^86` to stay exact in u128; model weights
@@ -70,12 +78,20 @@ pub const W_ONE: u128 = 1u128 << 32;
 const MAX_BUF_VAL: f64 = (1u64 << 22) as f64;
 
 /// floor(√n) for u128, by Newton's method seeded above the root.
+// The iteration is overflow-free by construction: the seed `x = 2^⌈bits/2⌉`
+// is ≥ √n, every iterate stays ≥ √n until convergence, so `n / x ≤ x` and
+// `x + n / x ≤ 2x ≤ 2^65`; `x` is never zero. Spelling each step checked
+// would obscure the invariant, so the deny is waived for this fn only.
+// flare-lint: allow(unchecked_arith): Newton iterates bounded by the seed; see above.
+#[allow(clippy::arithmetic_side_effects)]
 pub fn isqrt_u128(n: u128) -> u128 {
     if n < 2 {
         return n;
     }
     let bits = 128 - n.leading_zeros();
-    let mut x = 1u128 << bits.div_ceil(2);
+    let mut x = 1u128
+        .checked_shl(bits.div_ceil(2))
+        .expect("shift ≤ 64 for any u128 bit length");
     loop {
         let y = (x + n / x) / 2;
         if y >= x {
@@ -104,18 +120,22 @@ pub fn staleness_weight_fx(base: u64, tau: u64, alpha2: u32) -> Result<u128> {
     if base > MAX_WEIGHT {
         bail!("weight {base} exceeds the exact-aggregation cap {MAX_WEIGHT}");
     }
-    let b = (tau as u128) + 1;
+    let b = (tau as u128).saturating_add(1);
     let mut p: u128 = 1;
     for _ in 0..alpha2 {
         p = p
             .checked_mul(b)
             .ok_or_else(|| anyhow!("staleness {tau} overflows the weight grid"))?;
     }
-    if p >= 1u128 << 64 {
+    if p >= Q64_ONE {
         bail!("staleness {tau} discounts below the Q32.32 weight grid");
     }
-    let s = isqrt_u128(p << 64);
-    let w = ((base as u128) << 64) / s;
+    let s = isqrt_u128(p.checked_mul(Q64_ONE).expect("p < 2^64 checked above"));
+    let w = (base as u128)
+        .checked_mul(Q64_ONE)
+        .expect("base ≤ 2^32 fits the high limb")
+        .checked_div(s)
+        .expect("isqrt of a positive grid value is positive");
     if w == 0 {
         bail!("staleness weight underflow (τ = {tau})");
     }
@@ -125,6 +145,10 @@ pub fn staleness_weight_fx(base: u64, tau: u64, alpha2: u32) -> Result<u128> {
 /// Exact `⌊(w_fx × mag) / 2^32⌋` without u128 overflow, by splitting the
 /// magnitude at bit 32: `w·⌊m/2^32⌋ + ⌊w·(m mod 2^32)/2^32⌋` composes
 /// the floor exactly.
+// Only the literal-amount `>> 32` / `& mask` limb splits are unchecked;
+// they cannot overflow or panic. Both products and the recombining add
+// stay `checked_*`.
+#[allow(clippy::arithmetic_side_effects)]
 fn scale_mag(w_fx: u128, mag: u128) -> Result<u128> {
     let hi = w_fx
         .checked_mul(mag >> 32)
@@ -140,6 +164,11 @@ fn scale_mag(w_fx: u128, mag: u128) -> Result<u128> {
 /// One weighted f32 term on the Q64.64 grid: `⌊w_fx · (x · 2^64) / 2^32⌋`
 /// with truncation toward zero — a pure integer function of `(x, w_fx)`,
 /// independent of fold order.
+// flare-lint: allow(float_in_fold): this fn IS the float→grid rounding
+// boundary for buffered folds — `x · 2^64` crosses into Q64.64 exactly
+// once, right here, after the range check.
+// The negation is proven in range by the `m > i128::MAX` bail above it.
+#[allow(clippy::arithmetic_side_effects)]
 fn weighted_term_f32(x: f32, w_fx: u128) -> Result<i128> {
     let v = x as f64;
     if !v.is_finite() || v.abs() >= MAX_BUF_VAL {
@@ -156,6 +185,8 @@ fn weighted_term_f32(x: f32, w_fx: u128) -> Result<i128> {
 /// One rescaled Fx128 partial-sum term: the tier below already baked the
 /// per-leaf weights in, so staleness only *rescales* the whole partial
 /// by `r_fx = w(τ)/base` on the same grid.
+// The negation is proven in range by the `m > i128::MAX` bail above it.
+#[allow(clippy::arithmetic_side_effects)]
 fn weighted_term_fx(v: i128, r_fx: u128) -> Result<i128> {
     let m = scale_mag(r_fx, v.unsigned_abs())?;
     if m > i128::MAX as u128 {
@@ -283,24 +314,29 @@ impl BufferedAggregator {
             match t.meta.dtype {
                 DType::F32 => {
                     for (d, &x) in s.iter_mut().zip(t.as_f32()) {
-                        *d += weighted_term_f32(x, w_fx).expect("validated term");
+                        let term = weighted_term_f32(x, w_fx).expect("validated term");
+                        *d = d.checked_add(term).expect("validated fold sum");
                     }
                 }
                 DType::Fx128 => {
                     for (d, v) in s.iter_mut().zip(t.iter_i128()) {
-                        *d += weighted_term_fx(v, w_fx).expect("validated term");
+                        let term = weighted_term_fx(v, w_fx).expect("validated term");
+                        *d = d.checked_add(term).expect("validated fold sum");
                     }
                 }
                 _ => unreachable!(),
             }
         }
         self.total_weight_fx = new_total;
-        self.folds_in_window += 1;
+        self.folds_in_window = self.folds_in_window.saturating_add(1);
         Ok(self.folds_in_window >= self.buffer_k)
     }
 
     /// Publish the window: the one float rounding (fixed sums → weighted
     /// mean fp32), a version bump, and a reset for the next window.
+    // flare-lint: allow(float_in_fold): this fn IS the fixed→float rounding
+    // boundary — the exact Q64.64 sums leave the grid exactly once, here.
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn snapshot(&mut self) -> Result<ParamContainer> {
         if self.folds_in_window == 0 {
             bail!("snapshot of an empty buffer window");
@@ -318,7 +354,7 @@ impl BufferedAggregator {
                 (n.to_string(), Tensor::from_f32(t.meta.shape.clone(), vals))
             })
             .collect();
-        self.version += 1;
+        self.version = self.version.checked_add(1).expect("version counter overflow");
         for s in &mut self.sums {
             s.fill(0);
         }
@@ -466,6 +502,11 @@ impl Controller {
     /// — which dispatches here when `job.aggregation.mode` says so — with
     /// `job.rounds` reinterpreted as the number of global versions to
     /// publish.
+    // flare-lint: allow(float_in_fold): everything float in this fn is a
+    // reporting series / config scalar; the fold math lives entirely in
+    // BufferedAggregator and the weight fns above.
+    // Driver bookkeeping (metric sums, schedule math) — not accumulator math.
+    #[allow(clippy::arithmetic_side_effects)]
     pub(crate) fn run_buffered(
         &mut self,
         global: ParamContainer,
@@ -582,7 +623,7 @@ impl Controller {
         // Mark a session's result fully handled and wake its worker.
         let ack = |who: usize, sh: &SharedState| {
             let mut s = sh.mu.lock().unwrap();
-            s.acked[who] += 1;
+            s.acked[who] = s.acked[who].saturating_add(1);
             sh.cv.notify_all();
             drop(s);
             engine_wake(who);
@@ -603,7 +644,7 @@ impl Controller {
                     // ledger for a retired session. The ack handshake
                     // means a worker can no longer issue past its own
                     // quarantine; this guard is defense in depth.
-                    self.tasks_sent[client] += 1;
+                    self.tasks_sent[client] = self.tasks_sent[client].saturating_add(1);
                     if shared.mu.lock().unwrap().dead[client] {
                         continue;
                     }
@@ -613,8 +654,8 @@ impl Controller {
                     }
                 }
                 BufEvent::Failed { client, err } => {
-                    failed_total += 1;
-                    win_failed += 1;
+                    failed_total = failed_total.saturating_add(1);
+                    win_failed = win_failed.saturating_add(1);
                     log::warn!(
                         "buffered session '{}' failed: {err:#}",
                         names[client]
@@ -650,8 +691,8 @@ impl Controller {
                     let tau = match ledger.accept(client, base_version, cur, declared) {
                         Ok(t) => t,
                         Err(e) => {
-                            quarantined += 1;
-                            win_failed += 1;
+                            quarantined = quarantined.saturating_add(1);
+                            win_failed = win_failed.saturating_add(1);
                             log::warn!(
                                 "quarantining result from '{}': {e:#}",
                                 names[client]
@@ -669,8 +710,8 @@ impl Controller {
                     if subtrees[client] <= 1
                         && update.iter().any(|(_, t)| t.meta.dtype == DType::Fx128)
                     {
-                        quarantined += 1;
-                        win_failed += 1;
+                        quarantined = quarantined.saturating_add(1);
+                        win_failed = win_failed.saturating_add(1);
                         log::warn!(
                             "quarantining result from '{}': leaf sent a partial aggregate",
                             names[client]
@@ -681,8 +722,8 @@ impl Controller {
                     let ready = match agg.fold(&update, n_samples, tau) {
                         Ok(r) => r,
                         Err(e) => {
-                            quarantined += 1;
-                            win_failed += 1;
+                            quarantined = quarantined.saturating_add(1);
+                            win_failed = win_failed.saturating_add(1);
                             log::warn!(
                                 "quarantining result from '{}' at the fold: {e:#}",
                                 names[client]
@@ -700,11 +741,12 @@ impl Controller {
                         .series_mut(&format!("client_round_secs/{}", names[client]))
                         .push(cur as f64, seconds);
                     for l in &losses {
+                        // flare-lint: allow(unchecked_arith): f64 metric accumulator cannot overflow-panic.
                         win_loss_sum += *l as f64;
-                        win_loss_n += 1;
+                        win_loss_n = win_loss_n.saturating_add(1);
                     }
-                    win_comm += comm_bytes;
-                    win_leaf += contributions.max(1);
+                    win_comm = win_comm.saturating_add(comm_bytes);
+                    win_leaf = win_leaf.saturating_add(contributions.max(1));
                     if ready {
                         let g = match agg.snapshot() {
                             Ok(g) => g,
@@ -821,6 +863,8 @@ impl Controller {
 /// Worker body: continuously re-task the client against the freshest
 /// published global until the driver flags done (or retires us), then
 /// tell the client Done and hand the connection back.
+// Session bookkeeping (byte counts, timings) — not accumulator math.
+#[allow(clippy::arithmetic_side_effects)]
 fn buffered_session(
     mut ctx: BufCtx,
     shared: Arc<SharedState>,
@@ -853,7 +897,7 @@ fn buffered_session(
         }
         match buffered_exchange(&mut ctx, version, global) {
             Ok(evt) => {
-                sent += 1;
+                sent = sent.saturating_add(1);
                 if evt_tx.send(evt).is_err() {
                     break;
                 }
@@ -890,6 +934,8 @@ fn retire_session(
 /// ack-before-reissue ordering are identical to the threaded worker, so
 /// staleness assignments — and therefore the exact Q64.64 folds — match
 /// bit-for-bit.
+// Session bookkeeping — not accumulator math.
+#[allow(clippy::arithmetic_side_effects)]
 fn buffered_step(
     ctx: BufCtx,
     shared: Arc<SharedState>,
@@ -926,9 +972,13 @@ fn buffered_step(
             return retire_session(&mut ctx, &done_tx);
         }
         let c = ctx.as_mut().expect("buffered session ctx");
+        // flare-lint: allow(blocking_in_step): the exchange body still blocks
+        // on the transport inside this step — the known debt tracked by
+        // ROADMAP "Reactor-native protocol bodies" (workers are sized to the
+        // fold fan-in until the body is decomposed into per-frame steps).
         match buffered_exchange(c, version, global) {
             Ok(evt) => {
-                sent += 1;
+                sent = sent.saturating_add(1);
                 if evt_tx.send(evt).is_err() {
                     return retire_session(&mut ctx, &done_tx);
                 }
@@ -947,6 +997,8 @@ fn buffered_step(
 /// One scatter → train-wait → gather exchange under a `VersionedTask`.
 /// The transport legs mirror the synchronous session body exactly; only
 /// the control frames and the whole-contribution assembly differ.
+// Transport bookkeeping (byte counts, timings) — not accumulator math.
+#[allow(clippy::arithmetic_side_effects)]
 fn buffered_exchange(
     ctx: &mut BufCtx,
     version: u64,
@@ -1127,6 +1179,7 @@ fn buffered_exchange(
 }
 
 #[cfg(test)]
+#[allow(clippy::arithmetic_side_effects)]
 mod tests {
     use super::*;
     use crate::config::model_spec::ModelSpec;

@@ -1065,6 +1065,10 @@ fn session_step(
                         global,
                         fold,
                     } => {
+                        // flare-lint: allow(blocking_in_step): the round body
+                        // still blocks on the transport inside this step — the
+                        // known debt tracked by ROADMAP "Reactor-native
+                        // protocol bodies" (workers sized to the fold fan-in).
                         let payload = match run_client_round(c, round, global, fold) {
                             Ok(RoundOutcome::Done(contrib)) => SessionOutcome::Done(contrib),
                             Ok(RoundOutcome::Dropped) => SessionOutcome::Dropped,

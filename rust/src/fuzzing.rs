@@ -1,0 +1,82 @@
+//! Library entry points for the fuzz targets.
+//!
+//! Three drivers share these functions so they exercise identical code:
+//!
+//! * the cargo-fuzz / libFuzzer targets under `fuzz/fuzz_targets/`
+//!   (coverage-guided, run by the correctness workflow),
+//! * the offline smoke loop (`cargo xtask fuzz --secs N`), which replays
+//!   the committed corpora plus seeded mutations with no extra
+//!   dependencies,
+//! * the named regression tests in `rust/tests/props.rs`, which pin the
+//!   hostile inputs these targets are built to catch.
+//!
+//! Contract: each fn accepts **arbitrary** bytes and must either parse
+//! or return an error internally — a panic, abort, overflow, or
+//! unbounded allocation is the bug being hunted. Where a roundtrip
+//! oracle is cheap, the fn asserts it, so logic regressions (not just
+//! crashes) surface as fuzz findings.
+
+use crate::sfm::frame::{Frame, HEADER_LEN};
+use crate::streaming::wire;
+
+/// SFM frame header and whole-frame decode on arbitrary bytes, plus an
+/// encode→decode oracle when the input happens to parse.
+pub fn fuzz_frame_header(data: &[u8]) {
+    let _ = Frame::decode_header_slice(data);
+    if let Ok(f) = Frame::decode(data) {
+        // Accepted frames must re-encode to the identical wire image
+        // (the header is a pure function of the frame fields).
+        let re = f.encode();
+        assert_eq!(re, data, "frame did not re-encode canonically");
+        assert_eq!(re.len(), HEADER_LEN + f.payload.len());
+    }
+}
+
+/// Streaming entry decode (`read_entry`) on arbitrary bytes — covers the
+/// plain f32 / Fx128 (kind 6) / varint (kind 7) and quantized kinds,
+/// with a write→read oracle on the accept path.
+pub fn fuzz_entry_decode(data: &[u8]) {
+    let mut r = data;
+    if let Ok(entry) = wire::read_entry(&mut r) {
+        let mut out = Vec::new();
+        wire::write_entry(&mut out, &entry).expect("accepted entry must re-encode");
+        let mut r2 = out.as_slice();
+        let back = wire::read_entry(&mut r2).expect("re-encoded entry must re-decode");
+        assert_eq!(back.name(), entry.name(), "entry name did not roundtrip");
+        assert!(r2.is_empty(), "re-decode left trailing bytes");
+    }
+}
+
+/// Zigzag LEB128 varint decode on arbitrary bytes, plus an
+/// encode→decode roundtrip over the input viewed as i128 values. The
+/// first byte selects the declared element count so the fuzzer can
+/// explore count/payload mismatches.
+pub fn fuzz_varint(data: &[u8]) {
+    let Some((&n, src)) = data.split_first() else {
+        return;
+    };
+    // Decode direction: hostile payload against a declared count.
+    let elems = (n as usize) % 33;
+    let _ = wire::decode_fx128_varints(src, elems);
+
+    // Roundtrip oracle: every i128 must survive encode→decode exactly,
+    // including i128::MIN / i128::MAX patterns the fuzzer will find.
+    let vals: Vec<i128> = src
+        .chunks_exact(16)
+        .map(|c| i128::from_le_bytes(c.try_into().expect("16-byte chunk")))
+        .collect();
+    if vals.is_empty() {
+        return;
+    }
+    let mut enc = Vec::new();
+    for &v in &vals {
+        wire::push_fx128_varint(&mut enc, v);
+    }
+    let dec = wire::decode_fx128_varints(&enc, vals.len())
+        .expect("encoder output must always decode");
+    assert_eq!(dec.len(), vals.len() * 16);
+    for (i, &v) in vals.iter().enumerate() {
+        let got = &dec[i * 16..(i + 1) * 16];
+        assert_eq!(got, v.to_le_bytes(), "varint roundtrip mismatch at {i}");
+    }
+}

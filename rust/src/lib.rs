@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod filter;
+pub mod fuzzing;
 pub mod memory;
 pub mod metrics;
 pub mod quant;

@@ -127,7 +127,10 @@ pub struct BufferPool {
 }
 
 impl BufferPool {
-    fn new() -> BufferPool {
+    /// A fresh, empty pool. The process normally uses [`global`]; the
+    /// model tests (`rust/tests/concurrency_models.rs`) build isolated
+    /// instances so their counter assertions see only their own traffic.
+    pub fn new() -> BufferPool {
         BufferPool {
             bytes: (0..N_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
             f32s: (0..N_CLASSES).map(|_| Mutex::new(Vec::new())).collect(),
@@ -249,6 +252,12 @@ impl BufferPool {
         for shelf in &self.f32s {
             shelf.lock().unwrap().clear();
         }
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> BufferPool {
+        BufferPool::new()
     }
 }
 

@@ -109,6 +109,11 @@ pub fn bf16_bits_to_f32(b: u16) -> f32 {
 
 #[cfg(target_arch = "x86_64")]
 mod simd {
+    // SAFETY: callers must guarantee the CPU supports F16C (this
+    // is `unsafe fn` solely for `target_feature`) and that
+    // `dst.len() == src.len() * 2`. All loads/stores are the unaligned
+    // variants and stay in bounds: `chunks * 8 <= src.len()` and
+    // `chunks * 16 <= dst.len()`; the scalar tail is safe indexing.
     #[target_feature(enable = "f16c")]
     pub unsafe fn encode_f16_f16c(src: &[f32], dst: &mut [u8]) {
         use std::arch::x86_64::*;
@@ -126,6 +131,11 @@ mod simd {
         }
     }
 
+    // SAFETY: callers must guarantee the CPU supports F16C (this
+    // is `unsafe fn` solely for `target_feature`) and that
+    // `src.len() == dst.len() * 2`. All loads/stores are the unaligned
+    // variants and stay in bounds: `chunks * 16 <= src.len()` and
+    // `chunks * 8 <= dst.len()`; the scalar tail is safe indexing.
     #[target_feature(enable = "f16c")]
     pub unsafe fn decode_f16_f16c(src: &[u8], dst: &mut [f32]) {
         use std::arch::x86_64::*;
@@ -160,6 +170,9 @@ fn encode_f16_slice(src: &[f32], dst: &mut [u8]) {
     debug_assert_eq!(dst.len(), src.len() * 2);
     #[cfg(target_arch = "x86_64")]
     if has_f16c() {
+        // SAFETY: F16C presence was just runtime-detected, and every caller
+        // passes matched spans (`dst.len() == src.len() * 2`, asserted
+        // above), satisfying the intrinsic fn's contract.
         unsafe { simd::encode_f16_f16c(src, dst) };
         return;
     }
@@ -172,6 +185,9 @@ fn decode_f16_slice(src: &[u8], dst: &mut [f32]) {
     debug_assert_eq!(src.len(), dst.len() * 2);
     #[cfg(target_arch = "x86_64")]
     if has_f16c() {
+        // SAFETY: F16C presence was just runtime-detected, and every caller
+        // passes matched spans (`src.len() == dst.len() * 2`, asserted
+        // above), satisfying the intrinsic fn's contract.
         unsafe { simd::decode_f16_f16c(src, dst) };
         return;
     }

@@ -42,6 +42,7 @@ use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::reactor::state::{on_claim, on_deadline, on_park, on_wake, ParkEffect, RunState, WakeEffect};
 use crate::reactor::wheel::DeadlineWheel;
 use crate::sfm::driver::DriverWaker;
 use crate::sfm::SfmEndpoint;
@@ -73,18 +74,6 @@ pub enum Step {
 }
 
 type StepFn = Box<dyn FnMut(WakeReason) -> Step + Send>;
-
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum RunState {
-    /// Parked: not queued, not running. The only state with an armed timer.
-    Idle,
-    /// In the run queue awaiting a worker.
-    Queued,
-    /// A worker is inside the step closure.
-    Running,
-    /// Running, and a wake arrived meanwhile: requeue on park.
-    RunningWake,
-}
 
 struct Session {
     /// Taken by the worker while stepping (so the core lock is not held
@@ -275,26 +264,25 @@ impl Drop for Reactor {
     }
 }
 
-/// Queue-state transition for a wake. Core lock held.
+/// Queue-state transition for a wake. Core lock held. The transition
+/// itself lives in [`crate::reactor::state`] (model-checked); this fn
+/// applies its effect to the queue, the wheel, and the pool.
 fn wake_locked(shared: &Arc<Shared>, core: &mut Core, id: SessionId) -> bool {
     let Some(sess) = core.sessions.get_mut(&id) else {
         return false;
     };
-    match sess.state {
-        RunState::Idle => {
+    let (next, effect) = on_wake(sess.state);
+    sess.state = next;
+    match effect {
+        WakeEffect::Enqueue => {
             if let Some(t) = sess.timer.take() {
                 core.wheel.cancel(t);
             }
             sess.reason = WakeReason::Notified;
-            sess.state = RunState::Queued;
             core.queue.push_back(id);
             dispatch(shared, core);
         }
-        RunState::Queued => {} // absorbed
-        RunState::Running => {
-            core.sessions.get_mut(&id).unwrap().state = RunState::RunningWake;
-        }
-        RunState::RunningWake => {} // absorbed
+        WakeEffect::Absorbed | WakeEffect::MarkRerun => {}
     }
     true
 }
@@ -358,7 +346,7 @@ fn worker_loop(shared: &Arc<Shared>) {
         let Some(sess) = core.sessions.get_mut(&id) else {
             continue; // retired while queued (cannot happen today; defensive)
         };
-        sess.state = RunState::Running;
+        sess.state = on_claim(sess.state);
         let reason = sess.reason;
         sess.reason = WakeReason::Notified;
         let mut step = sess.step.take().expect("queued session owns its step");
@@ -385,17 +373,20 @@ fn worker_loop(shared: &Arc<Shared>) {
             }
             Step::Park | Step::ParkFor(_) => {
                 sess.step = Some(step);
-                if sess.state == RunState::RunningWake {
-                    // A wake raced the step: run again rather than sleep.
-                    sess.state = RunState::Queued;
-                    sess.reason = WakeReason::Notified;
-                    core.queue.push_back(id);
-                } else {
-                    sess.state = RunState::Idle;
-                    if let Step::ParkFor(d) = out {
-                        let t = core.wheel.insert(Instant::now() + d, id);
-                        sess.timer = Some(t);
-                        shared.timer_cv.notify_one();
+                let (next, effect) = on_park(sess.state);
+                sess.state = next;
+                match effect {
+                    ParkEffect::Requeue => {
+                        // A wake raced the step: run again rather than sleep.
+                        sess.reason = WakeReason::Notified;
+                        core.queue.push_back(id);
+                    }
+                    ParkEffect::Sleep => {
+                        if let Step::ParkFor(d) = out {
+                            let t = core.wheel.insert(Instant::now() + d, id);
+                            sess.timer = Some(t);
+                            shared.timer_cv.notify_one();
+                        }
                     }
                 }
             }
@@ -417,12 +408,12 @@ fn timer_loop(shared: &Arc<Shared>) {
             let Some(sess) = core.sessions.get_mut(&id) else {
                 continue;
             };
-            if sess.state != RunState::Idle {
+            let Some(next) = on_deadline(sess.state) else {
                 continue;
-            }
+            };
             sess.timer = None;
             sess.reason = WakeReason::Deadline;
-            sess.state = RunState::Queued;
+            sess.state = next;
             core.queue.push_back(id);
             dispatch(shared, &mut core);
         }

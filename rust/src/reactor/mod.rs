@@ -3,6 +3,8 @@
 //!
 //! - [`core`]: the [`Reactor`] — per-session state machines, wake
 //!   coalescing, elastic workers, and the timer thread.
+//! - [`state`]: the pure run-state transition functions the engine and
+//!   the concurrency models (`rust/tests/concurrency_models.rs`) share.
 //! - [`wheel`]: the [`DeadlineWheel`] backing every `ParkFor` deadline.
 //!
 //! Consumers select the engine with the `session_engine` job-config key
@@ -10,6 +12,7 @@
 //! the bit-identity reference. See DESIGN.md §Session engine.
 
 pub mod core;
+pub mod state;
 pub mod wheel;
 
 pub use self::core::{Reactor, ReactorHandle, SessionId, Step, WakeReason};

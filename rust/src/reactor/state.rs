@@ -1,0 +1,133 @@
+//! Pure run-state transitions for the reactor session lifecycle.
+//!
+//! Factored out of [`core`](super::core) so the engine, the exhaustive
+//! sequential models, and the loom models (compiled with `--cfg loom`,
+//! see `rust/tests/concurrency_models.rs`) all drive exactly the same
+//! transition logic. The engine applies these under its core lock; the
+//! functions themselves are total, side-effect free, and cheap to
+//! exhaustively enumerate.
+//!
+//! The protocol these encode (see the `core` module docs):
+//!
+//! * a wake for an **idle** session queues it (and cancels its timer);
+//! * a wake for a **queued** session is absorbed;
+//! * a wake for a **running** session marks it to re-run, so the step
+//!   observes work that arrived while it was executing;
+//! * a parking session sleeps only if no wake raced its step;
+//! * a deadline fires only for an idle session — any other state means
+//!   the timer raced a wake or completion and must be ignored.
+
+/// Scheduling state of one session. Exposed (with the transition fns)
+/// for the model tests; the engine stores it per session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RunState {
+    /// Parked: not queued, not running. The only state with an armed timer.
+    Idle,
+    /// In the run queue awaiting a worker.
+    Queued,
+    /// A worker is inside the step closure.
+    Running,
+    /// Running, and a wake arrived meanwhile: requeue on park.
+    RunningWake,
+}
+
+/// What the caller must do after applying a wake transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeEffect {
+    /// Idle → Queued: cancel any armed timer and push onto the run queue.
+    Enqueue,
+    /// Already queued or already marked for re-run: the wake is absorbed.
+    Absorbed,
+    /// Running → RunningWake: the running step will requeue when it parks.
+    MarkRerun,
+}
+
+/// What the caller must do after a step returned `Park`/`ParkFor`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParkEffect {
+    /// A wake raced the step: push back onto the run queue, do not sleep.
+    Requeue,
+    /// Genuinely idle: arm the deadline timer if the step asked for one.
+    Sleep,
+}
+
+/// Wake transition: total over all states, so a waker never needs to
+/// know what the session is doing.
+#[must_use]
+pub fn on_wake(s: RunState) -> (RunState, WakeEffect) {
+    match s {
+        RunState::Idle => (RunState::Queued, WakeEffect::Enqueue),
+        RunState::Queued => (RunState::Queued, WakeEffect::Absorbed),
+        RunState::Running => (RunState::RunningWake, WakeEffect::MarkRerun),
+        RunState::RunningWake => (RunState::RunningWake, WakeEffect::Absorbed),
+    }
+}
+
+/// Claim transition: a worker pops the session off the run queue and
+/// enters its step. Only a queued session can be claimed.
+#[must_use]
+pub fn on_claim(s: RunState) -> RunState {
+    debug_assert!(s == RunState::Queued, "claimed a session that was not queued");
+    RunState::Running
+}
+
+/// Park transition, applied after the step returns with the lock
+/// reacquired: `RunningWake` means a wake raced the step and the session
+/// must run again rather than sleep.
+#[must_use]
+pub fn on_park(s: RunState) -> (RunState, ParkEffect) {
+    debug_assert!(
+        s == RunState::Running || s == RunState::RunningWake,
+        "parked a session that was not running"
+    );
+    match s {
+        RunState::RunningWake => (RunState::Queued, ParkEffect::Requeue),
+        _ => (RunState::Idle, ParkEffect::Sleep),
+    }
+}
+
+/// Deadline transition: `Some(Queued)` if the timer fire is live, `None`
+/// if it raced a wake or completion and must be dropped. Only an idle
+/// session holds an armed timer.
+#[must_use]
+pub fn on_deadline(s: RunState) -> Option<RunState> {
+    (s == RunState::Idle).then_some(RunState::Queued)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [RunState; 4] = [
+        RunState::Idle,
+        RunState::Queued,
+        RunState::Running,
+        RunState::RunningWake,
+    ];
+
+    #[test]
+    fn wake_is_total_and_idempotent() {
+        for s in ALL {
+            let (s1, _) = on_wake(s);
+            let (s2, e2) = on_wake(s1);
+            assert_eq!(s1, s2, "second wake must not move the state again");
+            assert_ne!(e2, WakeEffect::Enqueue, "second wake must be absorbed");
+        }
+    }
+
+    #[test]
+    fn park_after_racing_wake_requeues() {
+        let (s, _) = on_wake(RunState::Running);
+        assert_eq!(s, RunState::RunningWake);
+        let (s, e) = on_park(s);
+        assert_eq!(s, RunState::Queued);
+        assert_eq!(e, ParkEffect::Requeue);
+    }
+
+    #[test]
+    fn deadline_fires_only_when_idle() {
+        for s in ALL {
+            assert_eq!(on_deadline(s).is_some(), s == RunState::Idle);
+        }
+    }
+}

@@ -127,6 +127,9 @@ mod pjrt {
         if tokens.len() != n {
             bail!("token count {} != shape product {n}", tokens.len());
         }
+        // SAFETY: a byte view of an i32 slice — the pointer is valid for
+        // `len * 4` bytes (one allocation), u8 has alignment 1, and any
+        // byte pattern is a valid u8. The borrow of `tokens` outlives it.
         let bytes = unsafe {
             std::slice::from_raw_parts(tokens.as_ptr() as *const u8, tokens.len() * 4)
         };

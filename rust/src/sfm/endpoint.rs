@@ -211,6 +211,8 @@ impl ChunkTable {
     }
 
     /// Hex serialization of the bitmap (for `.part` manifests).
+    // flare-lint: allow(uncapped_alloc): encoder side — sized from our own
+    // chunk table, not a wire-declared length.
     pub fn to_hex(&self) -> String {
         let n_bytes = (self.n_chunks() as usize).div_ceil(8);
         let mut s = String::with_capacity(n_bytes * 2);
@@ -428,6 +430,8 @@ impl UnitSink for BlobSink {
         if len > MAX_BLOB {
             bail!("declared blob size {len} exceeds cap {MAX_BLOB}");
         }
+        // flare-lint: allow(uncapped_alloc): random-access reassembly needs
+        // the full reserve; `len` is validated against MAX_BLOB just above.
         let mut buf = TrackedBuf::with_capacity(&COMM_GAUGE, len as usize);
         buf.as_mut_vec().resize(len as usize, 0);
         buf.resync();
@@ -817,7 +821,10 @@ impl SfmEndpoint {
         // Per-unit geometry travels in the descriptor so a resuming
         // receiver can rebuild its chunk tables (e.g. from a `.part`
         // manifest) and answer a probe before any UNIT frame arrives.
+        // flare-lint: allow(uncapped_alloc): sender side — `n` counts the
+        // local source's units, not a wire-declared length.
         let mut unit_bytes = Vec::with_capacity(n);
+        // flare-lint: allow(uncapped_alloc): sender side (see above).
         let mut unit_crcs = Vec::with_capacity(n);
         for i in 0..n {
             unit_bytes.push(src.unit_len(i)?);

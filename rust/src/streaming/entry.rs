@@ -82,7 +82,10 @@ pub fn outbound_headers(
         .ok_or_else(|| anyhow!("filter chain at {point} is not entry-capable"))?;
     chain.begin(ctx)?;
     let n = weights.len();
+    // flare-lint: allow(uncapped_alloc): sender side — `n` counts the local
+    // container's entries, not a wire-declared length.
     let mut lens = Vec::with_capacity(n);
+    // flare-lint: allow(uncapped_alloc): sender side (see above).
     let mut crcs = Vec::with_capacity(n);
     let mut buf = PooledBuf::take(0);
     for (i, name) in weights.names().iter().enumerate() {

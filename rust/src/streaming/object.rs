@@ -242,6 +242,8 @@ pub fn send_weights_resumable(
     let mut stats = match mode {
         StreamingMode::Regular => {
             let total = wire::message_wire_len(msg) as usize;
+            // flare-lint: allow(uncapped_alloc): sender side — sized from
+            // the in-memory message being serialized.
             let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, total);
             wire::encode_message(blob.as_mut_vec(), msg)?;
             blob.resync();
@@ -768,6 +770,8 @@ impl<'a> UnitSink for EntryStreamSink<'a> {
                 if i != 0 {
                     bail!("regular transfers carry exactly one unit (got {i})");
                 }
+                // flare-lint: allow(uncapped_alloc): `len` is validated
+                // against MAX_WIRE_ALLOC just above.
                 let mut b = TrackedBuf::with_capacity(&COMM_GAUGE, len as usize);
                 b.as_mut_vec().resize(len as usize, 0);
                 b.resync();
@@ -872,6 +876,8 @@ fn send_regular(ep: &SfmEndpoint, msg: &WeightsMsg) -> Result<TransferStats> {
     // Whole-message serialization: this buffer IS the paper's "memory
     // pre-allocated to hold the entire message".
     let total = wire::message_wire_len(msg) as usize;
+    // flare-lint: allow(uncapped_alloc): sender side — sized from the
+    // in-memory message being serialized.
     let mut blob = TrackedBuf::with_capacity(&COMM_GAUGE, total);
     wire::encode_message(blob.as_mut_vec(), msg)?;
     blob.resync();
@@ -1117,6 +1123,8 @@ pub fn send_file(ep: &SfmEndpoint, path: &Path, entries: usize) -> Result<Transf
         ("bytes", Json::num(len as f64)),
     ]))?;
     let f = std::fs::File::open(path)?;
+    // flare-lint: allow(uncapped_alloc): config-sized read buffer, not a
+    // wire-declared length.
     let mut r = BufReader::with_capacity(ep.chunk_bytes, f);
     let mut chunk = PooledBuf::take(ep.chunk_bytes);
     chunk.as_mut_vec().resize(ep.chunk_bytes, 0);

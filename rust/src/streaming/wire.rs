@@ -148,8 +148,9 @@ fn fx128_varint_len(v: i128) -> usize {
     bits.div_ceil(7).max(1)
 }
 
-/// Append one value as a zigzag LEB128 varint.
-fn push_fx128_varint(out: &mut Vec<u8>, v: i128) {
+/// Append one value as a zigzag LEB128 varint. (`pub(crate)` for the
+/// fuzz entry points in [`crate::fuzzing`].)
+pub(crate) fn push_fx128_varint(out: &mut Vec<u8>, v: i128) {
     let mut z = zigzag_i128(v);
     loop {
         let byte = (z & 0x7f) as u8;
@@ -164,18 +165,25 @@ fn push_fx128_varint(out: &mut Vec<u8>, v: i128) {
 
 /// Varint-encode a raw Fx128 payload (16-byte LE values).
 fn encode_fx128_varints(data: &[u8]) -> Vec<u8> {
+    // flare-lint: allow(uncapped_alloc): encoder side — `data` is an
+    // in-memory payload we already hold, not a wire-declared length.
     let mut out = Vec::with_capacity(data.len());
     for c in data.chunks_exact(16) {
-        push_fx128_varint(&mut out, i128::from_le_bytes(c.try_into().unwrap()));
+        push_fx128_varint(&mut out, fx128_le(c));
     }
     out
 }
 
 /// Wire bytes a raw Fx128 payload occupies under the varint encoding.
 fn fx128_payload_wire_len(data: &[u8]) -> usize {
-    data.chunks_exact(16)
-        .map(|c| fx128_varint_len(i128::from_le_bytes(c.try_into().unwrap())))
-        .sum()
+    data.chunks_exact(16).map(|c| fx128_varint_len(fx128_le(c))).sum()
+}
+
+/// Exact 16-byte LE slice → i128, for `chunks_exact(16)` frames.
+// flare-lint: allow(panic_path): `chunks_exact(16)` guarantees the width;
+// the expect is unreachable by construction.
+fn fx128_le(c: &[u8]) -> i128 {
+    i128::from_le_bytes(c.try_into().expect("16-byte chunk"))
 }
 
 /// Serialized header + payload size of a plain entry (the varint scan
@@ -194,12 +202,13 @@ fn plain_wire_len(name: &str, t: &Tensor) -> usize {
 /// Fx128 payload. Hostile input — truncated mid-varint, trailing
 /// garbage, varints overflowing 128 bits or padded past 19 bytes —
 /// yields `Err`, never a panic; consumption is exact by construction.
-fn decode_fx128_varints(src: &[u8], elems: usize) -> Result<Vec<u8>> {
+/// (`pub(crate)` for the fuzz entry points in [`crate::fuzzing`].)
+pub(crate) fn decode_fx128_varints(src: &[u8], elems: usize) -> Result<Vec<u8>> {
     let n16 = elems * 16;
     let mut out = if n16 <= crate::memory::pool::MAX_POOLED_BYTES {
         crate::memory::pool::bytes(n16)
     } else {
-        Vec::with_capacity(n16)
+        bounded_prealloc(n16, PREALLOC_CAP_BYTES)
     };
     let mut i = 0usize;
     for _ in 0..elems {
@@ -347,7 +356,7 @@ fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
 fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
     let mut b1 = [0u8; 1];
     r.read_exact(&mut b1)?;
-    Ok(b1[0])
+    Ok(u8::from_le_bytes(b1))
 }
 
 fn read_f32_vec<R: Read>(r: &mut R, n: usize, cap: usize) -> Result<Vec<f32>> {
@@ -363,8 +372,19 @@ fn read_f32_vec<R: Read>(r: &mut R, n: usize, cap: usize) -> Result<Vec<f32>> {
 
 /// Maximum sane tensor payload (guards corrupt lengths): 16 GiB.
 const MAX_PAYLOAD: u64 = 16 << 30;
+/// Cap for speculative preallocations sized from wire-declared lengths.
+pub const PREALLOC_CAP_BYTES: usize = 1 << 20;
 /// Maximum logical elements a single entry may declare (shape product).
 const MAX_ELEMS: u64 = MAX_PAYLOAD / 4;
+
+/// The hostile-allocation boundary: every `Vec::with_capacity` sized from
+/// a *wire-decoded* length must flow through here (enforced by the
+/// `flare-lint` pass `uncapped_alloc`). The reserve is clamped to `cap` —
+/// decoded data still grows the vec to its true size incrementally, so a
+/// forged length can cost at most `cap` bytes of speculative memory.
+pub fn bounded_prealloc<T>(declared: usize, cap: usize) -> Vec<T> {
+    Vec::with_capacity(declared.min(cap))
+}
 
 /// Deserialize one entry from a reader.
 ///
@@ -382,7 +402,7 @@ pub fn read_entry<R: Read>(r: &mut R) -> Result<Entry> {
     if rank > 8 {
         bail!("{name}: rank {rank} too large");
     }
-    let mut shape = Vec::with_capacity(rank);
+    let mut shape = bounded_prealloc(rank, 8);
     let mut elems: u64 = 1;
     for _ in 0..rank {
         let d = read_u64(r)?;
@@ -584,12 +604,15 @@ pub fn write_plain_borrowed<W: Write>(w: &mut W, name: &str, t: &Tensor) -> Resu
 }
 
 /// Borrow-friendly quantized-entry writer.
+// flare-lint: allow(uncapped_alloc): encoder side — the head is sized from
+// the in-memory quantized tensor we are writing, not a wire length.
 pub fn write_quantized_borrowed<W: Write>(
     w: &mut W,
     name: &str,
     q: &QuantizedTensor,
 ) -> Result<()> {
-    let mut head: Vec<u8> = Vec::with_capacity(64 + 4 * q.meta.absmax.len() + 4 * q.meta.codebook.len());
+    let mut head: Vec<u8> =
+        Vec::with_capacity(64 + 4 * q.meta.absmax.len() + 4 * q.meta.codebook.len());
     b::put_u16(&mut head, name.len() as u16);
     head.extend_from_slice(name.as_bytes());
     head.push(scheme_id(q.scheme));

@@ -158,16 +158,27 @@ impl Tensor {
     /// Borrow the buffer as `&[f32]` (panics if dtype != F32).
     pub fn as_f32(&self) -> &[f32] {
         assert_eq!(self.meta.dtype, DType::F32);
-        unsafe {
-            std::slice::from_raw_parts(self.data.as_ptr() as *const f32, self.elems())
-        }
+        // SAFETY: `align_to` is sound for any input; f32 has no invalid bit
+        // patterns, so reinterpreting initialized bytes is well-defined. The
+        // asserts turn a misaligned or short buffer into a panic, never UB.
+        let (pre, mid, post) = unsafe { self.data.align_to::<f32>() };
+        assert!(pre.is_empty() && post.is_empty(), "misaligned f32 tensor buffer");
+        assert_eq!(mid.len(), self.elems());
+        mid
     }
 
     /// Borrow the buffer as `&mut [f32]` (panics if dtype != F32).
     pub fn as_f32_mut(&mut self) -> &mut [f32] {
         assert_eq!(self.meta.dtype, DType::F32);
         let n = self.elems();
-        unsafe { std::slice::from_raw_parts_mut(self.data.as_mut_ptr() as *mut f32, n) }
+        // SAFETY: `align_to_mut` is sound for any input; f32 and u8 both
+        // tolerate every initialized bit pattern, so views through either
+        // type are well-defined. The asserts turn a misaligned or short
+        // buffer into a panic, never UB.
+        let (pre, mid, post) = unsafe { self.data.align_to_mut::<f32>() };
+        assert!(pre.is_empty() && post.is_empty(), "misaligned f32 tensor buffer");
+        assert_eq!(mid.len(), n);
+        mid
     }
 
     /// Copy out as f32 vec.

@@ -46,6 +46,11 @@
 //! the inbound chain, and a fresh digest over the partial aggregate
 //! travels in the upstream result headers.
 
+// The fold math in this module delegates to `EntryFold` (deny-checked in
+// `coordinator/aggregator.rs`); the deny below keeps any accumulator
+// arithmetic that lands here overflow-explicit.
+#![deny(clippy::arithmetic_side_effects)]
+
 use super::skeleton_of;
 use crate::config::{JobConfig, SessionEngine};
 use crate::coordinator::aggregator::{EntryFold, FoldOutcome};
@@ -234,6 +239,8 @@ impl RelayNode {
     /// parent says Done. On an unrecoverable error the subtree is shut
     /// down (best effort) before the error propagates — the parent sees
     /// a failed contributor and applies its own partial-round policy.
+    // Orchestration-only arithmetic (pool sizing); fold math is EntryFold's.
+    #[allow(clippy::arithmetic_side_effects)]
     pub fn run(mut self) -> Result<RelayStats> {
         let timeout = self.job.transfer_timeout();
         // Children first: their Welcome needs the job config, which the
@@ -417,7 +424,9 @@ impl RelayNode {
     /// One task: forward the scatter (verbatim store-and-forward, or
     /// frame-pipelined on the reactor engine), gather + pre-fold the
     /// subtree, ship the partial aggregate upstream.
-    #[allow(clippy::too_many_arguments)]
+    // Orchestration bookkeeping (attempt budget, fan-in counts); the fold
+    // itself is EntryFold's checked i128 sum.
+    #[allow(clippy::too_many_arguments, clippy::arithmetic_side_effects)]
     fn run_round(
         &self,
         sessions: &mut ChildSessions,
@@ -517,7 +526,7 @@ impl RelayNode {
         let skeleton = skeleton_of(&msg);
         let mut attempt = 0usize;
         let (losses, completed, failed, total_weight, contribs_total) = loop {
-            attempt += 1;
+            attempt = attempt.saturating_add(1);
             if attempt > k + 1 {
                 bail!("restart budget exhausted after {} attempts", attempt - 1);
             }
@@ -602,7 +611,7 @@ impl RelayNode {
                         };
                         if txs[i].send(cmd).is_ok() {
                             reactor.wake(ids[i]);
-                            outstanding += 1;
+                            outstanding = outstanding.saturating_add(1);
                         } else {
                             // Session gone (step closure dropped). Treat
                             // like a pre-excluded dead child so siblings
@@ -628,7 +637,7 @@ impl RelayNode {
                             continue;
                         }
                         outcomes[pos] = Some(evt.outcome);
-                        outstanding -= 1;
+                        outstanding = outstanding.saturating_sub(1);
                     }
                 }
             }
@@ -644,14 +653,14 @@ impl RelayNode {
                     None => {
                         // Pre-excluded: this child died in an earlier
                         // round (or attempt) and was never dispatched.
-                        failed += 1;
+                        failed = failed.saturating_add(1);
                     }
                     Some(Ok(ChildOutcome::Done {
                         losses,
                         contributions,
                     })) => {
-                        completed += 1;
-                        contribs_total += contributions;
+                        completed = completed.saturating_add(1);
+                        contribs_total = contribs_total.saturating_add(contributions);
                         losses_per_pos[pos] = losses;
                     }
                     Some(Ok(ChildOutcome::Dropped)) => {}
@@ -670,7 +679,7 @@ impl RelayNode {
                                     self.name,
                                     names[ci]
                                 );
-                                failed += 1;
+                                failed = failed.saturating_add(1);
                             }
                             // Partially folded: the shared partial is
                             // tainted — restart the subtree round
@@ -715,6 +724,8 @@ impl RelayNode {
         let mut up_headers = BTreeMap::new();
         up_headers.insert(
             "integrity_crc32".to_string(),
+            // flare-lint: allow(float_in_fold): serialization boundary — a
+            // CRC header value, not fold math.
             Json::num(integrity::digest(&pmsg)? as f64),
         );
         let up_ctrl = match version {
@@ -777,6 +788,9 @@ fn child_step(
     move |_reason| loop {
         match cmd_rx.try_recv() {
             Ok(cmd) => {
+                // flare-lint: allow(blocking_in_step): the gather body still
+                // blocks on the transport inside this step — the known debt
+                // tracked by ROADMAP "Reactor-native protocol bodies".
                 let outcome = run_child_cmd(&mut child, &cmd, &job, &spool);
                 let _ = evt_tx.send(ChildEvent {
                     idx,

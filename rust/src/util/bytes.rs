@@ -92,6 +92,9 @@ pub fn get_f32(buf: &[u8], at: usize) -> Option<f32> {
 /// Reinterpret a `&[f32]` as bytes (little-endian hosts only, which is all
 /// we target; checked by a unit test).
 pub fn f32_slice_as_bytes(xs: &[f32]) -> &[u8] {
+    // SAFETY: a byte view of an f32 slice — the pointer is valid for
+    // `len * 4` bytes (one allocation), u8 has alignment 1, and any byte
+    // pattern is a valid u8. The returned borrow is tied to `xs`.
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 

@@ -1,0 +1,490 @@
+//! Concurrency models for the reactor core.
+//!
+//! Two tiers share the same transition logic
+//! ([`flare::reactor::state`]):
+//!
+//! * **Sequential exhaustive models** (always run under plain
+//!   `cargo test`): depth-first enumeration of every reachable
+//!   interleaving of wake / claim / park / deadline events against the
+//!   pure transition functions, plus exhaustive operation orderings
+//!   against the real [`DeadlineWheel`] and [`BufferPool`].
+//! * **Loom models** (`#[cfg(loom)]`, compiled only with
+//!   `RUSTFLAGS="--cfg loom"` and the transient `loom` dependency the
+//!   correctness workflow adds): the same protocols driven from real
+//!   threads under loom's model checker, exploring every lock
+//!   acquisition order.
+//!
+//! Run the loom tier locally with:
+//!
+//! ```text
+//! cargo add loom && RUSTFLAGS="--cfg loom" cargo test --test concurrency_models
+//! ```
+
+use flare::memory::pool::BufferPool;
+use flare::reactor::state::{on_claim, on_deadline, on_park, on_wake, ParkEffect, RunState, WakeEffect};
+use flare::reactor::DeadlineWheel;
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
+
+/// One session plus the engine-visible bookkeeping the transitions
+/// drive: how many queue entries reference it and whether a wheel timer
+/// is armed. Mirrors `reactor::core`'s per-session effects exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct SessionModel {
+    state: RunState,
+    /// Run-queue entries referencing this session. Invariant: <= 1.
+    queued: u8,
+    /// An armed wheel timer. Invariant: only while `Idle`.
+    timer: bool,
+}
+
+impl SessionModel {
+    fn parked() -> SessionModel {
+        SessionModel {
+            state: RunState::Idle,
+            queued: 0,
+            timer: false,
+        }
+    }
+
+    fn wake(&mut self) {
+        let (next, effect) = on_wake(self.state);
+        self.state = next;
+        if effect == WakeEffect::Enqueue {
+            self.timer = false; // wake cancels the armed timer
+            self.queued += 1;
+        }
+    }
+
+    fn claim(&mut self) {
+        assert!(self.queued > 0, "claim without a queue entry");
+        self.queued -= 1;
+        self.state = on_claim(self.state);
+    }
+
+    /// Step returned `Park` (no deadline): sleep without arming a timer.
+    fn park(&mut self) {
+        let (next, effect) = on_park(self.state);
+        self.state = next;
+        if effect == ParkEffect::Requeue {
+            self.queued += 1;
+        }
+    }
+
+    /// Step returned `ParkFor`: arm a timer when genuinely sleeping.
+    fn park_for(&mut self) {
+        let (next, effect) = on_park(self.state);
+        self.state = next;
+        match effect {
+            ParkEffect::Requeue => self.queued += 1,
+            ParkEffect::Sleep => self.timer = true,
+        }
+    }
+
+    fn deadline_fire(&mut self) {
+        assert!(self.timer, "deadline fired without an armed timer");
+        // The engine re-checks the state under the lock before requeueing.
+        if let Some(next) = on_deadline(self.state) {
+            self.timer = false;
+            self.state = next;
+            self.queued += 1;
+        }
+    }
+
+    fn check_invariants(&self) {
+        assert!(self.queued <= 1, "session queued twice: {self:?}");
+        assert_eq!(
+            self.state == RunState::Queued,
+            self.queued == 1,
+            "queue entry and Queued state must agree: {self:?}"
+        );
+        if self.timer {
+            assert_eq!(
+                self.state,
+                RunState::Idle,
+                "armed timer outside Idle: {self:?}"
+            );
+        }
+    }
+}
+
+/// Events the environment can inject. `Claim` and `ParkFor` are only
+/// enabled when the engine would perform them.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Wake,
+    Claim,
+    Park,
+    ParkFor,
+    DeadlineFire,
+}
+
+fn enabled(m: &SessionModel) -> Vec<Ev> {
+    let mut evs = vec![Ev::Wake];
+    if m.state == RunState::Queued && m.queued > 0 {
+        evs.push(Ev::Claim);
+    }
+    if m.state == RunState::Running || m.state == RunState::RunningWake {
+        evs.push(Ev::Park);
+        evs.push(Ev::ParkFor);
+    }
+    if m.timer {
+        evs.push(Ev::DeadlineFire);
+    }
+    evs
+}
+
+fn apply(m: &mut SessionModel, ev: Ev) {
+    match ev {
+        Ev::Wake => m.wake(),
+        Ev::Claim => m.claim(),
+        Ev::Park => m.park(),
+        Ev::ParkFor => m.park_for(),
+        Ev::DeadlineFire => m.deadline_fire(),
+    }
+}
+
+/// Exhaustive DFS over every event interleaving up to `depth`, checking
+/// the engine invariants at each node. The state space is tiny (4 states
+/// × 2 queue × 2 timer), so the visited-set closes it completely.
+#[test]
+fn run_state_transitions_hold_invariants_exhaustively() {
+    fn dfs(m: SessionModel, depth: u32, visited: &mut HashSet<(SessionModel, u32)>) {
+        if !visited.insert((m, depth)) {
+            return;
+        }
+        m.check_invariants();
+        if depth == 0 {
+            return;
+        }
+        for ev in enabled(&m) {
+            let mut next = m;
+            apply(&mut next, ev);
+            dfs(next, depth - 1, visited);
+        }
+    }
+    let mut visited = HashSet::new();
+    dfs(SessionModel::parked(), 12, &mut visited);
+    // 5 invariant-consistent (state, queued, timer) combinations over the
+    // depth range; anything far below that means events stopped firing.
+    assert!(visited.len() > 25, "state space unexpectedly small: {}", visited.len());
+}
+
+/// The coalescing theorem: any number of wakes racing one running step
+/// results in exactly one requeue — the session never sleeps through a
+/// wake and is never queued twice.
+#[test]
+fn wakes_racing_a_step_coalesce_to_one_requeue() {
+    for wakes_before_park in 0..4 {
+        for wakes_after_park in 0..4 {
+            let mut m = SessionModel {
+                state: RunState::Running,
+                queued: 0,
+                timer: false,
+            };
+            for _ in 0..wakes_before_park {
+                m.wake();
+                m.check_invariants();
+            }
+            m.park_for();
+            m.check_invariants();
+            for _ in 0..wakes_after_park {
+                m.wake();
+                m.check_invariants();
+            }
+            let woken = wakes_before_park + wakes_after_park > 0;
+            assert_eq!(
+                m.state == RunState::Queued,
+                woken,
+                "before={wakes_before_park} after={wakes_after_park}"
+            );
+            assert_eq!(m.queued, u8::from(woken));
+        }
+    }
+}
+
+/// Deadline-vs-wake race, both orders: exactly one of them requeues the
+/// session, never both.
+#[test]
+fn deadline_and_wake_requeue_exactly_once() {
+    // Order 1: wake first cancels the timer; the fire never happens.
+    let mut m = SessionModel::parked();
+    m.timer = true;
+    m.wake();
+    m.check_invariants();
+    assert!(!m.timer, "wake must cancel the armed timer");
+    assert_eq!(m.queued, 1);
+
+    // Order 2: fire first; the late wake is absorbed.
+    let mut m = SessionModel::parked();
+    m.timer = true;
+    m.deadline_fire();
+    m.check_invariants();
+    m.wake();
+    m.check_invariants();
+    assert_eq!(m.queued, 1, "late wake must be absorbed, not double-queue");
+}
+
+// ---------------------------------------------------------------------------
+// DeadlineWheel: arm / cancel vs fire, exhaustively over cancel subsets
+// and drain times.
+// ---------------------------------------------------------------------------
+
+/// For every subset of timers cancelled and every drain schedule, a
+/// cancelled timer never fires and a live one fires exactly once, never
+/// early.
+#[test]
+fn wheel_cancel_subsets_fire_exactly_the_live_timers() {
+    let ticks = [2u64, 4, 6];
+    for cancel_mask in 0u32..8 {
+        for drain_split in 0..4u64 {
+            let mut w = DeadlineWheel::new(Duration::from_millis(1), 8);
+            let now = Instant::now();
+            let ids: Vec<_> = ticks
+                .iter()
+                .enumerate()
+                .map(|(tok, &t)| w.insert(now + Duration::from_millis(t), tok as u64))
+                .collect();
+            for (tok, id) in ids.iter().enumerate() {
+                if cancel_mask & (1 << tok) != 0 {
+                    w.cancel(*id);
+                }
+            }
+            // Drain in two stages around `drain_split` ms, then late.
+            let mut fired = Vec::new();
+            fired.extend(w.expired(now + Duration::from_millis(drain_split * 2)));
+            fired.extend(w.expired(now + Duration::from_millis(20)));
+            fired.sort_unstable();
+            let expect: Vec<u64> = (0..3u64)
+                .filter(|tok| cancel_mask & (1 << tok) == 0)
+                .collect();
+            assert_eq!(
+                fired, expect,
+                "mask={cancel_mask:#b} split={drain_split}: wrong fire set"
+            );
+            // And nothing fires twice.
+            assert!(w.expired(now + Duration::from_millis(100)).is_empty());
+        }
+    }
+}
+
+/// Cancelling after a partial drain (timer already due but not yet
+/// drained) still suppresses the fire — the reactor does this when a
+/// wake cancels a timer whose deadline already passed.
+#[test]
+fn wheel_cancel_between_due_and_drain_suppresses_fire() {
+    let mut w = DeadlineWheel::new(Duration::from_millis(1), 8);
+    let now = Instant::now();
+    let id = w.insert(now + Duration::from_millis(2), 7);
+    // The deadline passes (no drain yet), then the cancel lands.
+    w.cancel(id);
+    assert!(
+        w.expired(now + Duration::from_millis(10)).is_empty(),
+        "cancelled timer fired"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// BufferPool: take / give traffic discipline over exhaustive op strings.
+// ---------------------------------------------------------------------------
+
+/// Every take/give sequence of length 8 keeps the counters consistent,
+/// returns only cleared buffers, and never hits more than was shelved.
+#[test]
+fn pool_counters_consistent_over_all_op_sequences() {
+    for ops in 0u32..(1 << 8) {
+        let pool = BufferPool::new();
+        let mut takes = 0u64;
+        let mut held: Vec<Vec<u8>> = Vec::new();
+        for bit in 0..8 {
+            if ops & (1 << bit) == 0 {
+                let v = pool.take_bytes(2048);
+                assert!(v.is_empty(), "recycled buffer must arrive cleared");
+                assert!(v.capacity() >= 2048);
+                takes += 1;
+                held.push(v);
+            } else if let Some(mut v) = held.pop() {
+                v.extend_from_slice(&[0xAB; 64]); // dirty it before giving
+                pool.give_bytes(v);
+            }
+            let s = pool.snapshot();
+            assert_eq!(s.takes(), takes, "takes = hits + misses");
+            assert!(s.hits <= s.returns, "cannot hit more than was shelved");
+            assert!(s.discards == 0, "class cap cannot trip at this depth");
+        }
+    }
+}
+
+/// The class shelf is bounded: giving far more buffers than the class
+/// cap retains only the cap and discards the rest.
+#[test]
+fn pool_shelf_is_bounded_by_class_cap() {
+    let pool = BufferPool::new();
+    for _ in 0..200 {
+        pool.give_bytes(Vec::with_capacity(2048));
+    }
+    let s = pool.snapshot();
+    assert_eq!(s.returns + s.discards, 200);
+    assert!(s.returns <= 64, "class cap exceeded: {} retained", s.returns);
+    assert!(s.discards >= 136);
+}
+
+// ---------------------------------------------------------------------------
+// Loom tier: the same protocols under a model checker that explores
+// every lock-acquisition order. Compiled only with --cfg loom.
+// ---------------------------------------------------------------------------
+
+#[cfg(loom)]
+mod loom_models {
+    use super::*;
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    /// A wake racing a parking step, through a real lock: the session
+    /// must end Queued with exactly one queue entry in every
+    /// interleaving (the lost-wakeup bug this protocol exists to kill).
+    #[test]
+    fn wake_racing_park_is_never_lost() {
+        loom::model(|| {
+            let cell = Arc::new(Mutex::new(SessionModel {
+                state: RunState::Running,
+                queued: 0,
+                timer: false,
+            }));
+            let waker = {
+                let cell = Arc::clone(&cell);
+                thread::spawn(move || {
+                    let mut m = cell.lock().unwrap();
+                    m.wake();
+                    m.check_invariants();
+                })
+            };
+            {
+                let mut m = cell.lock().unwrap();
+                m.park_for();
+                m.check_invariants();
+            }
+            waker.join().unwrap();
+            let m = cell.lock().unwrap();
+            assert_eq!(m.state, RunState::Queued, "wake was lost");
+            assert_eq!(m.queued, 1);
+            assert!(!m.timer, "timer must not stay armed past the wake");
+        });
+    }
+
+    /// Two concurrent wakers against one parking step: still exactly one
+    /// queue entry (coalescing under contention).
+    #[test]
+    fn concurrent_wakes_coalesce() {
+        loom::model(|| {
+            let cell = Arc::new(Mutex::new(SessionModel {
+                state: RunState::Running,
+                queued: 0,
+                timer: false,
+            }));
+            let spawn_waker = |cell: &Arc<Mutex<SessionModel>>| {
+                let cell = Arc::clone(cell);
+                thread::spawn(move || {
+                    let mut m = cell.lock().unwrap();
+                    m.wake();
+                    m.check_invariants();
+                })
+            };
+            let w1 = spawn_waker(&cell);
+            let w2 = spawn_waker(&cell);
+            {
+                let mut m = cell.lock().unwrap();
+                m.park_for();
+                m.check_invariants();
+            }
+            w1.join().unwrap();
+            w2.join().unwrap();
+            let m = cell.lock().unwrap();
+            assert_eq!(m.state, RunState::Queued);
+            assert_eq!(m.queued, 1, "wakes must coalesce to one queue entry");
+        });
+    }
+
+    /// DeadlineWheel arm/cancel vs the timer thread's drain, through a
+    /// real lock: the token fires exactly once XOR the cancel won.
+    #[test]
+    fn wheel_cancel_vs_fire_exactly_once() {
+        loom::model(|| {
+            let now = Instant::now();
+            let mut wheel = DeadlineWheel::new(Duration::from_millis(1), 8);
+            let id = wheel.insert(now + Duration::from_millis(1), 42);
+            // (wheel, armed-timer handle, fired tokens) — the engine's
+            // `sess.timer` guard, modeled faithfully: both sides take the
+            // lock and check/clear the handle before acting.
+            let cell = Arc::new(Mutex::new((wheel, Some(id), Vec::new())));
+            let canceller = {
+                let cell = Arc::clone(&cell);
+                thread::spawn(move || {
+                    let mut g = cell.lock().unwrap();
+                    let (wheel, timer, _) = &mut *g;
+                    if let Some(t) = timer.take() {
+                        wheel.cancel(t);
+                        true
+                    } else {
+                        false
+                    }
+                })
+            };
+            let fired_here = {
+                let mut g = cell.lock().unwrap();
+                let (wheel, timer, fired) = &mut *g;
+                let mut any = false;
+                for tok in wheel.expired(now + Duration::from_millis(10)) {
+                    if timer.take().is_some() {
+                        fired.push(tok);
+                        any = true;
+                    }
+                }
+                any
+            };
+            let cancelled = canceller.join().unwrap();
+            let g = cell.lock().unwrap();
+            assert!(
+                cancelled != fired_here,
+                "token must fire exactly once XOR be cancelled"
+            );
+            assert_eq!(g.2.len(), usize::from(fired_here));
+        });
+    }
+
+    /// The pool's give discipline under concurrent take/give: the shelf
+    /// stays bounded and every shelved buffer is cleared.
+    #[test]
+    fn pool_take_give_discipline_under_races() {
+        const CAP: usize = 2;
+        loom::model(|| {
+            let shelf: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(Vec::new()));
+            let worker = |shelf: &Arc<Mutex<Vec<Vec<u8>>>>| {
+                let shelf = Arc::clone(shelf);
+                thread::spawn(move || {
+                    // take: pop a recycled buffer or allocate fresh
+                    let mut v = shelf
+                        .lock()
+                        .unwrap()
+                        .pop()
+                        .unwrap_or_else(|| Vec::with_capacity(64));
+                    assert!(v.is_empty(), "recycled buffer must arrive cleared");
+                    v.extend_from_slice(&[1, 2, 3]);
+                    // give: clear, then shelve only under the cap
+                    v.clear();
+                    let mut s = shelf.lock().unwrap();
+                    if s.len() < CAP {
+                        s.push(v);
+                    }
+                })
+            };
+            let a = worker(&shelf);
+            let b = worker(&shelf);
+            a.join().unwrap();
+            b.join().unwrap();
+            let s = shelf.lock().unwrap();
+            assert!(s.len() <= CAP, "shelf exceeded its cap");
+            assert!(s.iter().all(|v| v.is_empty()), "dirty buffer shelved");
+        });
+    }
+}

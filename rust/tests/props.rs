@@ -428,3 +428,165 @@ fn prop_f16_total_order_preserved() {
         },
     );
 }
+
+// ---------------------------------------------------------------------------
+// Fuzz-derived regressions.
+//
+// Each test pins a hostile input class the fuzz targets (`fuzz/` and
+// `cargo xtask fuzz`) probe, as a named always-on regression: a
+// reintroduced panic or accepted-garbage bug fails here in tier-1 CI
+// before any fuzzer has to rediscover it. The byte patterns mirror the
+// committed seed corpus under `fuzz/corpora/`.
+// ---------------------------------------------------------------------------
+
+/// Build raw entry bytes by hand so tests can express frames the encoder
+/// would refuse to produce (the whole point of a decode regression).
+fn raw_entry_bytes(
+    name: &str,
+    kind: u8,
+    shape: &[u64],
+    block_size: u32,
+    absmax: &[f32],
+    codebook: &[f32],
+    payload: &[u8],
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.push(kind);
+    out.push(shape.len() as u8);
+    for &d in shape {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    out.extend_from_slice(&block_size.to_le_bytes());
+    out.extend_from_slice(&(absmax.len() as u32).to_le_bytes());
+    for &a in absmax {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+    out.extend_from_slice(&(codebook.len() as u32).to_le_bytes());
+    for &c in codebook {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn fuzz_regression_varint_longer_than_19_bytes_rejected() {
+    // 19 continuation groups followed by a terminator: the 20th group
+    // would shift past bit 126. Must be a decode error, not a
+    // shift-overflow panic.
+    let mut payload = vec![0x80u8; 19];
+    payload.push(0x01);
+    let bytes = raw_entry_bytes("agg", 7, &[2], 0, &[], &[], &payload);
+    let err = wire::read_entry(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("varint"), "{err:#}");
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_varint_19th_group_overflow_rejected() {
+    // At shift 126 only two value bits remain; a final group of 0x04
+    // would overflow i128 and must be rejected, not wrapped.
+    let mut payload = vec![0x80u8; 18];
+    payload.push(0x04);
+    let bytes = raw_entry_bytes("agg", 7, &[1], 0, &[], &[], &payload);
+    let err = wire::read_entry(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("overflows 128 bits"), "{err:#}");
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_varint_truncated_mid_value_rejected() {
+    // Second varint ends on a continuation byte: truncated mid-value.
+    let payload = [0x00u8, 0x80];
+    let bytes = raw_entry_bytes("agg", 7, &[2], 0, &[], &[], &payload);
+    let err = wire::read_entry(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated mid-value"), "{err:#}");
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_varint_payload_count_mismatch_rejected() {
+    // One zero varint where two elements were declared: below the
+    // 1-byte-per-element floor, rejected before any payload read.
+    let bytes = raw_entry_bytes("agg", 7, &[2], 0, &[], &[], &[0x00]);
+    let err = wire::read_entry(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("inconsistent"), "{err:#}");
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_zigzag_i128_extremes_roundtrip() {
+    // The fuzz driver's internal oracle re-encodes each 16-byte chunk as
+    // a zigzag varint and asserts an exact roundtrip; i128::MIN is the
+    // classic `(v << 1) ^ (v >> 127)` edge case.
+    for v in [i128::MIN, i128::MAX, -1i128, 0, 1, i128::from(u64::MAX)] {
+        let mut data = vec![0u8]; // declared elems for the decode half
+        data.extend_from_slice(&v.to_le_bytes());
+        flare::fuzzing::fuzz_varint(&data);
+    }
+}
+
+#[test]
+fn fuzz_regression_entry_absmax_exceeding_elems_rejected() {
+    // Three absmax scales for a two-element tensor: metadata cannot
+    // outnumber the data it scales.
+    let bytes = raw_entry_bytes("bad", 1, &[2], 1, &[1.0, 2.0, 3.0], &[], &[0u8; 4]);
+    let err = wire::read_entry(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("absmax"), "{err:#}");
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_entry_fx128_length_mismatch_rejected() {
+    // Kind-6 entries are exactly 16 bytes per element; a short payload
+    // must fail the shape-consistency check, not read garbage.
+    let bytes = raw_entry_bytes("agg", 6, &[2], 0, &[], &[], &[0u8; 16]);
+    let err = wire::read_entry(&mut bytes.as_slice()).unwrap_err();
+    assert!(format!("{err:#}").contains("inconsistent"), "{err:#}");
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_entry_huge_declared_payload_rejected() {
+    // A declared dim of 2^30 f32s passes the element cap but the 2^32
+    // payload length must be rejected (or fail the incremental read)
+    // without a multi-gigabyte allocation up front.
+    let mut bytes = raw_entry_bytes("huge", 0, &[1 << 30], 0, &[], &[], &[]);
+    // Patch payload_len (last 8 bytes, since payload is empty) to 2^32.
+    let n = bytes.len();
+    bytes[n - 8..].copy_from_slice(&(1u64 << 32).to_le_bytes());
+    assert!(wire::read_entry(&mut bytes.as_slice()).is_err());
+    flare::fuzzing::fuzz_entry_decode(&bytes);
+}
+
+#[test]
+fn fuzz_regression_frame_truncated_at_every_byte_rejected() {
+    use flare::sfm::{Frame, FrameType};
+    let frame = Frame::new(FrameType::Data, 7, 3, vec![1u8, 2, 3, 4]);
+    let enc = frame.encode();
+    for cut in 0..enc.len() {
+        assert!(Frame::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        flare::fuzzing::fuzz_frame_header(&enc[..cut]);
+    }
+    // And the untruncated frame still roundtrips via the fuzz oracle.
+    flare::fuzzing::fuzz_frame_header(&enc);
+}
+
+#[test]
+fn fuzz_regression_frame_bad_magic_and_version_rejected() {
+    use flare::sfm::{Frame, FrameType};
+    let enc = Frame::new(FrameType::Ctrl, 1, 0, Vec::new()).encode();
+
+    let mut bad_magic = enc.clone();
+    bad_magic[0] = b'X';
+    assert!(Frame::decode(&bad_magic).is_err());
+    flare::fuzzing::fuzz_frame_header(&bad_magic);
+
+    let mut bad_version = enc;
+    bad_version[4] = 0xFF;
+    assert!(Frame::decode(&bad_version).is_err());
+    flare::fuzzing::fuzz_frame_header(&bad_version);
+}

@@ -1,0 +1,44 @@
+//! Violation fixture for the `blocking_in_step` pass. Every line carrying
+//! a BAD marker must be flagged; every other line must be accepted.
+//! The pass only polices fns whose signature mentions `WakeReason` (the
+//! reactor step shape). This file is never compiled — it is input data
+//! for `cargo xtask lint --fixture blocking_in_step` and the self-tests.
+
+pub enum WakeReason {
+    Readable,
+    Timer,
+}
+
+pub struct Step;
+
+pub fn session_step(why: WakeReason, rx: &std::sync::mpsc::Receiver<u8>) -> Step {
+    match why {
+        WakeReason::Timer => {
+            std::thread::sleep(std::time::Duration::from_millis(1)); // BAD
+        }
+        WakeReason::Readable => {
+            let _ = rx.recv(); // BAD
+        }
+    }
+    Step
+}
+
+pub fn exchange_step(why: WakeReason, c: &mut u8) -> Step {
+    let _ = why;
+    buffered_exchange(c); // BAD
+    Step
+}
+
+pub fn step_with_marker(why: WakeReason, rx: &std::sync::mpsc::Receiver<u8>) -> Step {
+    let _ = why;
+    // flare-lint: allow(blocking_in_step): tracked in ROADMAP "Reactor-native protocol bodies".
+    let _ = rx.recv_timeout(std::time::Duration::from_millis(1));
+    Step
+}
+
+fn buffered_exchange(_c: &mut u8) {}
+
+pub fn not_a_step(rx: &std::sync::mpsc::Receiver<u8>) -> u8 {
+    // No WakeReason in the signature: blocking is fine off the reactor.
+    rx.recv().unwrap_or(0)
+}

@@ -1,0 +1,39 @@
+//! Violation fixture for the `float_in_fold` pass. Every line carrying a
+//! BAD marker must be flagged; every other line must be accepted.
+//! This file is never compiled — it is input data for `cargo xtask lint
+//! --fixture float_in_fold` and the lint self-tests.
+
+pub fn fold_sum(acc: u64, term: u64) -> u64 {
+    let wrong = acc as f64; // BAD
+    let also = (term as f32) + 1.0; // BAD
+    let scaled = 2.0 * 3.5; // BAD
+    let roundtrip = f64::from_bits(acc); // BAD
+    let _ = (wrong, also, scaled, roundtrip);
+    acc
+}
+
+pub fn finalize_round(acc: u64) -> f64 {
+    // `finalize*` fns are the allowlisted rounding boundary: exact
+    // fixed-point state may leave the fold as a float exactly once.
+    acc as f64
+}
+
+pub fn fold_allowed(acc: u64) -> u64 {
+    // flare-lint: allow(float_in_fold): telemetry-only conversion.
+    let _ = acc as f64;
+    acc
+}
+
+const SCALE: f64 = 1.5; // const items are compile-time evaluated
+
+pub fn integer_only(acc: u64, term: u64) -> u64 {
+    acc.checked_add(term).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn floats_are_fine_in_tests() {
+        let _ = 1u64 as f64;
+    }
+}

@@ -1,0 +1,35 @@
+//! Violation fixture for the `missing_safety` pass. Every line carrying
+//! a BAD marker must be flagged; every other line must be accepted.
+//! This file is never compiled — it is input data for `cargo xtask lint
+//! --fixture missing_safety` and the lint self-tests.
+
+pub fn view_bytes(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) } // BAD
+}
+
+pub fn view_bytes_documented(v: &[u32]) -> &[u8] {
+    // SAFETY: the pointer is valid for len*4 bytes, u8 has alignment 1,
+    // and any byte pattern is a valid u8.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Widening load helper used by a SIMD decode path.
+// SAFETY: callers must guarantee the CPU supports AVX2; this is an
+// `unsafe fn` solely because of `target_feature`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn widen(_v: &[u8]) {}
+
+pub fn trusted_cast(v: &[u32]) -> &[u8] {
+    // flare-lint: allow(missing_safety): contract documented at module level.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unsafe_in_tests_is_not_policed() {
+        let v = [1u32];
+        let b = unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, 4) };
+        assert_eq!(b.len(), 4);
+    }
+}

@@ -1,0 +1,42 @@
+//! Violation fixture for the `panic_path` pass. Every line carrying a
+//! BAD marker must be flagged; every other line must be accepted.
+//! Slice indexing is only policed inside `read_*` / `decode*` / `parse*`
+//! fns (the wire-decode shape). This file is never compiled — it is
+//! input data for `cargo xtask lint --fixture panic_path` and the
+//! self-tests.
+
+pub fn decode_header(buf: &[u8]) -> u32 {
+    let first = buf[0]; // BAD
+    let magic = u32::from_le_bytes(buf[..4].try_into().unwrap()); // BAD
+    let _ = first;
+    magic
+}
+
+pub fn read_magic(buf: &[u8]) -> u32 {
+    u32::from_le_bytes(buf[..4].try_into().expect("length checked")) // BAD
+}
+
+pub fn read_u16(buf: &[u8]) -> Option<u16> {
+    let b: [u8; 2] = buf.get(..2)?.try_into().ok()?;
+    Some(u16::from_le_bytes(b))
+}
+
+pub fn parse_kind(k: u8) -> u8 {
+    match k {
+        0 | 1 => k,
+        _ => unreachable!("validated upstream"), // BAD
+    }
+}
+
+/// Proven in-bounds: every call site passes a literal offset with
+/// `at + N <= HEADER_LEN`.
+// flare-lint: allow(panic_path): offset is a checked literal.
+fn decode_field(h: &[u8]) -> u8 {
+    h[8]
+}
+
+pub fn plain_index(v: &[u8]) -> u8 {
+    // Slice indexing outside the decode shape is not policed here
+    // (clippy::indexing_slicing territory, not flare-lint's).
+    v[0]
+}

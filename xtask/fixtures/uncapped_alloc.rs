@@ -1,0 +1,47 @@
+//! Violation fixture for the `uncapped_alloc` pass. Every line carrying
+//! a BAD marker must be flagged; every other line must be accepted.
+//! This file is never compiled — it is input data for `cargo xtask lint
+//! --fixture uncapped_alloc` and the lint self-tests.
+
+pub const MAX_ELEMS: usize = 1 << 20;
+
+pub fn bounded_prealloc<T>(declared: usize, cap: usize) -> Vec<T> {
+    Vec::with_capacity(declared.min(cap))
+}
+
+pub fn decode_lens(n: usize, rank: usize) -> Vec<u32> {
+    let mut lens: Vec<u32> = Vec::with_capacity(n); // BAD
+    lens.reserve(rank); // BAD
+    lens
+}
+
+pub fn decode_capped(n: usize) -> Vec<u32> {
+    let a: Vec<u32> = Vec::with_capacity(n.min(MAX_ELEMS));
+    let b: Vec<u32> = Vec::with_capacity(MAX_ELEMS);
+    let c: Vec<u32> = Vec::with_capacity(64 * 1024);
+    let d: Vec<u32> = bounded_prealloc(n, MAX_ELEMS);
+    let _ = (a, b, c);
+    d
+}
+
+pub struct TrackedBuf;
+
+impl TrackedBuf {
+    pub fn with_capacity(_acct: usize, _cap: usize) -> TrackedBuf {
+        TrackedBuf
+    }
+}
+
+pub fn tracked(declared: usize) -> TrackedBuf {
+    let ok = TrackedBuf::with_capacity(declared, MAX_ELEMS);
+    let bad = TrackedBuf::with_capacity(16, declared); // BAD
+    let _ = ok;
+    bad
+}
+
+pub fn sender_side(payload: &[u8]) -> Vec<u8> {
+    // flare-lint: allow(uncapped_alloc): encoder side — length is locally produced.
+    let mut out = Vec::with_capacity(payload.len());
+    out.extend_from_slice(payload);
+    out
+}

@@ -1,0 +1,48 @@
+//! Violation fixture for the `unchecked_arith` pass. Every line carrying
+//! a BAD marker must be flagged; every other line must be accepted.
+//! This file is never compiled — it is input data for `cargo xtask lint
+//! --fixture unchecked_arith` and the lint self-tests.
+
+pub fn accumulate(mut total: u64, parts: &[u64]) -> u64 {
+    for p in parts {
+        total += *p; // BAD
+    }
+    total
+}
+
+pub fn scale(mut x: u64) -> u64 {
+    x *= 3; // BAD
+    x <<= 1; // BAD
+    let hi = x << 8; // BAD
+    x -= 1; // BAD
+    x ^ hi
+}
+
+pub fn checked(mut x: u64) -> u64 {
+    x = x.checked_add(2).unwrap_or(u64::MAX);
+    x = x.saturating_mul(3);
+    x = x.checked_shl(1).unwrap_or(0);
+    x
+}
+
+pub fn counter_allowed(mut x: u64) -> u64 {
+    // flare-lint: allow(unchecked_arith): bench-only counter, wrap is fine.
+    x += 1;
+    x
+}
+
+const ONE_MB: usize = 1 << 20; // const items are compile-time evaluated
+
+pub fn uses_const() -> usize {
+    ONE_MB
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bare_ops_are_fine_in_tests() {
+        let mut x = 0u64;
+        x += 255;
+        assert_eq!(x, 255);
+    }
+}

@@ -1,0 +1,1011 @@
+//! flare-lint: invariant-enforcing static analysis over `rust/src`.
+//!
+//! A token-level walk (comment/string-scrubbed source, brace-depth fn
+//! tracking) with codebase-specific passes:
+//!
+//! * `float_in_fold` — no float arithmetic / `as f64` casts in the fold
+//!   modules outside the declared rounding boundaries.
+//! * `unchecked_arith` — no bare `+=`/`-=`/`*=`/`<<` on accumulator
+//!   paths; use `checked_*`/`saturating_*`.
+//! * `blocking_in_step` — no blocking calls inside reactor step closures
+//!   (fns whose signature mentions `WakeReason`).
+//! * `uncapped_alloc` — `with_capacity`/`reserve` in wire-decode files
+//!   must be literal-sized, `.min(...)`-capped, SCREAMING_CASE-const
+//!   sized, or flow through `bounded_prealloc`.
+//! * `panic_path` — no `unwrap`/`expect`/panicking macros or slice
+//!   indexing in wire/frame decode paths.
+//! * `missing_safety` — every `unsafe` needs a `// SAFETY:` comment on
+//!   the line or in the comment/attribute block directly above.
+//!
+//! Escape hatch (each use must carry a reason):
+//! `// flare-lint: allow(<pass>[, <pass>]): reason` — on the flagged
+//! line, in the comment block directly above it, or in the comment block
+//! above the enclosing `fn` (item-level).
+//!
+//! The rules are deliberately token-level, not AST-level: they run with
+//! zero dependencies, survive partial / in-progress edits, and the few
+//! constructs they cannot see (type-resolved arithmetic) are covered by
+//! the `#![deny(clippy::arithmetic_side_effects)]` attributes the fold
+//! modules carry.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// Pass names, in report order.
+pub const PASSES: [&str; 6] = [
+    "float_in_fold",
+    "unchecked_arith",
+    "blocking_in_step",
+    "uncapped_alloc",
+    "panic_path",
+    "missing_safety",
+];
+
+/// Fold/accumulator modules: determinism + checked-arithmetic passes.
+const FOLD_FILES: [&str; 3] = [
+    "coordinator/aggregator.rs",
+    "coordinator/buffered.rs",
+    "topology/relay.rs",
+];
+
+/// Wire-decode files: hostile-allocation pass.
+const WIRE_ALLOC_FILES: [&str; 6] = [
+    "streaming/wire.rs",
+    "streaming/entry.rs",
+    "streaming/object.rs",
+    "sfm/frame.rs",
+    "sfm/endpoint.rs",
+    "sfm/tcp.rs",
+];
+
+/// Frame/entry parsing files: panic-path pass.
+const PANIC_FILES: [&str; 2] = ["streaming/wire.rs", "sfm/frame.rs"];
+
+/// Primitives that block the calling thread.
+const BLOCKING_TOKENS: [&str; 7] = [
+    "thread::sleep",
+    ".recv()",
+    ".recv_timeout(",
+    ".join()",
+    ".wait(",
+    ".wait_timeout(",
+    ".wait_while(",
+];
+
+/// Known-blocking protocol bodies (ROADMAP "reactor-native protocol
+/// bodies"): calling one from a reactor step is flagged until the body
+/// is decomposed into non-blocking per-frame steps.
+const BLOCKING_FNS: [&str; 7] = [
+    "buffered_exchange(",
+    "run_client_round(",
+    "run_child_cmd(",
+    "child_round(",
+    "child_gather(",
+    "recv_ctrl(",
+    "recv_event(",
+];
+
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+/// Helpers that implement the allocation cap; flowing a wire length
+/// through one of these satisfies `uncapped_alloc`.
+const CAPPED_ALLOC_HELPERS: [&str; 2] = ["bounded_prealloc", "bounded_vec"];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub pass: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.pass, self.msg)
+    }
+}
+
+#[derive(Clone, Default)]
+struct LineInfo {
+    fn_name: String,
+    sig: String,
+    /// Line index of the enclosing fn's `fn` keyword.
+    fn_line: Option<usize>,
+    in_test: bool,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+// -- scrubber -----------------------------------------------------------------
+
+/// Blank comments and string/char contents, preserving the line layout,
+/// so token passes never fire on prose. Multi-byte UTF-8 sequences are
+/// blanked byte-for-byte (they only occur in comments/strings here).
+fn scrub(src: &str) -> Vec<String> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum St {
+        Code,
+        Line,
+        Block,
+        Str,
+        RawStr,
+        Char,
+    }
+    let s = src.as_bytes();
+    let n = s.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut st = St::Code;
+    let mut depth = 0usize;
+    let mut raw_hashes = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = s[i];
+        let nx = if i + 1 < n { s[i + 1] } else { 0 };
+        match st {
+            St::Code => {
+                if c == b'/' && nx == b'/' {
+                    st = St::Line;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                }
+                if c == b'/' && nx == b'*' {
+                    st = St::Block;
+                    depth = 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                }
+                if c == b'"' {
+                    st = St::Str;
+                    out.push(b'"');
+                    i += 1;
+                    continue;
+                }
+                // Raw / byte strings: r" r#" br" b" br##"
+                if c == b'r' || c == b'b' {
+                    let prev = if i > 0 { s[i - 1] } else { b' ' };
+                    if !is_ident(prev) {
+                        let mut j = i;
+                        if s[j] == b'b' {
+                            j += 1;
+                        }
+                        if j < n && s[j] == b'r' {
+                            j += 1;
+                            let mut h = 0usize;
+                            while j < n && s[j] == b'#' {
+                                h += 1;
+                                j += 1;
+                            }
+                            if j < n && s[j] == b'"' {
+                                for _ in i..j {
+                                    out.push(b' ');
+                                }
+                                out.push(b'"');
+                                raw_hashes = h;
+                                st = St::RawStr;
+                                i = j + 1;
+                                continue;
+                            }
+                        } else if j < n && s[j] == b'"' && s[i] == b'b' {
+                            out.extend_from_slice(b" \"");
+                            st = St::Str;
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == b'\'' {
+                    if nx == b'\\' {
+                        st = St::Char;
+                        out.push(b'\'');
+                        i += 1;
+                        continue;
+                    }
+                    if i + 2 < n && s[i + 2] == b'\'' {
+                        out.extend_from_slice(b"' '");
+                        i += 3;
+                        continue;
+                    }
+                    // Lifetime tick.
+                    out.push(b'\'');
+                    i += 1;
+                    continue;
+                }
+                out.push(c);
+                i += 1;
+            }
+            St::Line => {
+                if c == b'\n' {
+                    st = St::Code;
+                    out.push(b'\n');
+                } else {
+                    out.push(b' ');
+                }
+                i += 1;
+            }
+            St::Block => {
+                if c == b'*' && nx == b'/' {
+                    depth -= 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    if depth == 0 {
+                        st = St::Code;
+                    }
+                    continue;
+                }
+                if c == b'/' && nx == b'*' {
+                    depth += 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                    continue;
+                }
+                out.push(if c == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+            }
+            St::Str | St::Char => {
+                let close = if st == St::Str { b'"' } else { b'\'' };
+                if c == b'\\' {
+                    // Keep escaped newlines as newlines so line numbers
+                    // stay aligned (string continuation escapes).
+                    if nx == b'\n' {
+                        out.extend_from_slice(b" \n");
+                    } else {
+                        out.extend_from_slice(b"  ");
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == close {
+                    st = St::Code;
+                    out.push(close);
+                } else {
+                    out.push(if c == b'\n' { b'\n' } else { b' ' });
+                }
+                i += 1;
+            }
+            St::RawStr => {
+                if c == b'"' {
+                    let end = i + 1 + raw_hashes;
+                    if end <= n && s[i + 1..end].iter().all(|&b| b == b'#') {
+                        out.push(b'"');
+                        for _ in 0..raw_hashes {
+                            out.push(b' ');
+                        }
+                        i = end;
+                        st = St::Code;
+                        continue;
+                    }
+                }
+                out.push(if c == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out)
+        .split('\n')
+        .map(|l| l.to_string())
+        .collect()
+}
+
+// -- fn-context analysis ------------------------------------------------------
+
+/// Per-line enclosing-fn name/signature and `#[cfg(test)]` region flag,
+/// from brace-depth tracking over scrubbed source.
+fn analyze(code: &[String]) -> Vec<LineInfo> {
+    struct PendingFn {
+        name: String,
+        sig: String,
+        seen_paren: bool,
+        def_line: usize,
+    }
+    let mut infos: Vec<LineInfo> = Vec::with_capacity(code.len());
+    // (name, sig, open_depth, def_line)
+    let mut fn_stack: Vec<(String, String, i64, usize)> = Vec::new();
+    let mut depth: i64 = 0;
+    let mut pending: Option<PendingFn> = None;
+    let mut test_pending = false;
+    let mut test_depth: Option<i64> = None;
+    for (lineno, line) in code.iter().enumerate() {
+        let info = match fn_stack.last() {
+            Some((name, sig, _, def)) => LineInfo {
+                fn_name: name.clone(),
+                sig: sig.clone(),
+                fn_line: Some(*def),
+                in_test: test_depth.is_some(),
+            },
+            None => LineInfo {
+                in_test: test_depth.is_some(),
+                ..LineInfo::default()
+            },
+        };
+        infos.push(info);
+        if line.contains("#[cfg(test") || line.contains("#[test]") {
+            test_pending = true;
+        }
+        let b = line.as_bytes();
+        let ln = b.len();
+        let mut i = 0usize;
+        while i < ln {
+            let c = b[i];
+            if c == b'{' {
+                if let Some(p) = pending.take() {
+                    fn_stack.push((p.name, p.sig, depth, p.def_line));
+                } else if test_pending && test_depth.is_none() {
+                    test_depth = Some(depth);
+                    test_pending = false;
+                }
+                depth += 1;
+                i += 1;
+                continue;
+            }
+            if c == b'}' {
+                depth -= 1;
+                if fn_stack.last().is_some_and(|t| t.2 == depth) {
+                    fn_stack.pop();
+                }
+                if test_depth == Some(depth) {
+                    test_depth = None;
+                }
+                i += 1;
+                continue;
+            }
+            if c == b';' {
+                // `;` before the arg list: a fn-typed field or trait
+                // method declaration, not a definition.
+                if pending.as_ref().is_some_and(|p| !p.seen_paren) {
+                    pending = None;
+                    i += 1;
+                    continue;
+                }
+            }
+            if c == b'f' && line[i..].starts_with("fn ") {
+                let prev = if i > 0 { b[i - 1] } else { b' ' };
+                if !is_ident(prev) {
+                    let mut j = i + 3;
+                    while j < ln && b[j] == b' ' {
+                        j += 1;
+                    }
+                    let mut k = j;
+                    while k < ln && is_ident(b[k]) {
+                        k += 1;
+                    }
+                    if k > j {
+                        pending = Some(PendingFn {
+                            name: line[j..k].to_string(),
+                            sig: String::new(),
+                            seen_paren: false,
+                            def_line: lineno,
+                        });
+                        i = k;
+                        continue;
+                    }
+                }
+            }
+            if let Some(p) = &mut pending {
+                if c == b'(' {
+                    p.seen_paren = true;
+                }
+                p.sig.push(c as char);
+            }
+            i += 1;
+        }
+        if let Some(p) = &mut pending {
+            p.sig.push(' ');
+        }
+    }
+    infos
+}
+
+// -- token + escape-hatch helpers ---------------------------------------------
+
+/// Word-boundary occurrence of `pat` in `line`.
+fn find_token(line: &str, pat: &str) -> bool {
+    let lb = line.as_bytes();
+    let pb = pat.as_bytes();
+    let mut start = 0usize;
+    while let Some(off) = line[start..].find(pat) {
+        let p = start + off;
+        let mut ok = true;
+        if is_ident(pb[0]) && p > 0 && is_ident(lb[p - 1]) {
+            ok = false;
+        }
+        let q = p + pat.len();
+        if is_ident(pb[pb.len() - 1]) && q < lb.len() && is_ident(lb[q]) {
+            ok = false;
+        }
+        if ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// `// flare-lint: allow(a, b)` carrying `pass`?
+fn marker_has(line: &str, pass: &str) -> bool {
+    const MARKER: &str = "flare-lint: allow(";
+    let Some(p) = line.find(MARKER) else {
+        return false;
+    };
+    let inner = &line[p + MARKER.len()..];
+    let Some(q) = inner.find(')') else {
+        return false;
+    };
+    inner[..q].split(',').any(|s| s.trim() == pass)
+}
+
+/// Scan the contiguous comment/attribute block directly above `idx`.
+fn block_above_has(raw: &[&str], idx: usize, pass: &str) -> bool {
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = raw[j].trim();
+        if t.starts_with("//") {
+            if marker_has(t, pass) {
+                return true;
+            }
+        } else if !(t.is_empty() || t.starts_with("#[")) {
+            return false;
+        }
+    }
+    false
+}
+
+/// The escape hatch: a marker on the line, in the comment block directly
+/// above it, or (item-level) in the comment block above the enclosing fn.
+fn allowed(raw: &[&str], idx: usize, pass: &str, fn_line: Option<usize>) -> bool {
+    if marker_has(raw[idx], pass) || block_above_has(raw, idx, pass) {
+        return true;
+    }
+    if let Some(fl) = fn_line {
+        if fl < raw.len() && (marker_has(raw[fl], pass) || block_above_has(raw, fl, pass)) {
+            return true;
+        }
+    }
+    false
+}
+
+fn is_const_item(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("const ")
+        || t.starts_with("pub const ")
+        || t.starts_with("pub(crate) const ")
+        || t.starts_with("static ")
+        || t.starts_with("pub static ")
+}
+
+// -- passes -------------------------------------------------------------------
+
+type Ctx<'a> = (&'a str, &'a [&'a str], &'a [String], &'a [LineInfo]);
+
+fn push(out: &mut Vec<Finding>, ctx: Ctx, i: usize, pass: &'static str, msg: String) {
+    out.push(Finding {
+        file: ctx.0.to_string(),
+        line: i + 1,
+        pass,
+        msg,
+    });
+}
+
+/// Pass 1: determinism — no float math in fold modules outside the
+/// declared `finalize*` / allow-marked rounding boundaries.
+fn float_in_fold(ctx: Ctx, out: &mut Vec<Finding>) {
+    let (_, raw, code, info) = ctx;
+    for (i, line) in code.iter().enumerate() {
+        if info[i].in_test || info[i].fn_name.starts_with("finalize") {
+            continue;
+        }
+        // Const items are compile-time: a float const is a grid constant,
+        // not runtime fold math.
+        if is_const_item(line) {
+            continue;
+        }
+        let mut hits: Vec<String> = Vec::new();
+        for pat in ["as f64", "as f32", "f64::", "f32::"] {
+            if find_token(line, pat) {
+                hits.push(pat.to_string());
+            }
+        }
+        if float_literal_arith(line) {
+            hits.push("float-literal arithmetic".to_string());
+        }
+        for h in hits {
+            if !allowed(raw, i, "float_in_fold", info[i].fn_line) {
+                push(out, ctx, i, "float_in_fold", format!("float math in fold path: `{h}`"));
+            }
+        }
+    }
+}
+
+/// A float literal adjacent to an arithmetic operator (`x * 0.5`).
+fn float_literal_arith(line: &str) -> bool {
+    let b = line.as_bytes();
+    let ln = b.len();
+    let mut j = 0usize;
+    while j < ln {
+        if !b[j].is_ascii_digit() {
+            j += 1;
+            continue;
+        }
+        let mut k = j;
+        while k < ln && (b[k].is_ascii_digit() || b[k] == b'_') {
+            k += 1;
+        }
+        let starts_number = j == 0 || (!is_ident(b[j - 1]) && b[j - 1] != b'.');
+        if starts_number && k < ln && b[k] == b'.' && k + 1 < ln && b[k + 1].is_ascii_digit() {
+            let mut e = k + 1;
+            while e < ln && (b[e].is_ascii_digit() || b[e] == b'_') {
+                e += 1;
+            }
+            let before = line[..j].trim_end();
+            let after = line[e..].trim_start();
+            let bad_before = matches!(before.as_bytes().last().copied(), Some(b'+' | b'-' | b'*' | b'/'))
+                && !matches!(
+                    before.get(before.len().saturating_sub(2)..),
+                    Some("+=" | "-=" | "*=" | "/=")
+                );
+            let bad_after = matches!(after.as_bytes().first().copied(), Some(b'+' | b'*' | b'/'));
+            if bad_before || bad_after {
+                return true;
+            }
+            j = e;
+            continue;
+        }
+        j = k;
+    }
+    false
+}
+
+/// Pass 2: checked arithmetic — no bare compound ops / shifts on
+/// accumulator paths. Plain binary `+`/`*` are covered by the
+/// `clippy::arithmetic_side_effects` deny the fold modules carry (clippy
+/// has real type info; a token pass would drown in false positives).
+fn unchecked_arith(ctx: Ctx, out: &mut Vec<Finding>) {
+    let (_, raw, code, info) = ctx;
+    for (i, line) in code.iter().enumerate() {
+        if info[i].in_test || is_const_item(line) {
+            continue;
+        }
+        let mut hits: Vec<&str> = Vec::new();
+        for pat in ["+=", "-=", "*=", "<<=", "<<"] {
+            let mut start = 0usize;
+            while let Some(off) = line[start..].find(pat) {
+                let p = start + off;
+                start = p + pat.len();
+                if pat == "<<" && line[p..].starts_with("<<=") {
+                    continue; // reported as <<=
+                }
+                if matches!(pat, "+=" | "-=" | "*=") && p > 0 {
+                    let prev = line.as_bytes()[p - 1];
+                    if matches!(prev, b'+' | b'-' | b'*' | b'<' | b'>' | b'=' | b'!') {
+                        continue;
+                    }
+                }
+                hits.push(pat);
+            }
+        }
+        for h in hits {
+            if !allowed(raw, i, "unchecked_arith", info[i].fn_line) {
+                push(
+                    out,
+                    ctx,
+                    i,
+                    "unchecked_arith",
+                    format!("bare `{h}` on accumulator path; use checked_*/saturating_*"),
+                );
+            }
+        }
+    }
+}
+
+/// Pass 3: no blocking calls inside reactor step closures — any fn whose
+/// signature mentions `WakeReason` (step factories and the closures they
+/// return).
+fn blocking_in_step(ctx: Ctx, out: &mut Vec<Finding>) {
+    let (_, raw, code, info) = ctx;
+    for (i, line) in code.iter().enumerate() {
+        if info[i].in_test || !info[i].sig.contains("WakeReason") {
+            continue;
+        }
+        for pat in BLOCKING_TOKENS.iter().chain(BLOCKING_FNS.iter()) {
+            if line.contains(pat) && !allowed(raw, i, "blocking_in_step", info[i].fn_line) {
+                let name = pat.trim_matches(|c| c == '(' || c == '.');
+                push(
+                    out,
+                    ctx,
+                    i,
+                    "blocking_in_step",
+                    format!("blocking call `{name}` inside a reactor step"),
+                );
+            }
+        }
+    }
+}
+
+/// Pass 4: hostile allocation — speculative reserves in wire-decode
+/// files must be provably bounded.
+fn uncapped_alloc(ctx: Ctx, out: &mut Vec<Finding>) {
+    let (_, raw, code, info) = ctx;
+    for (i, line) in code.iter().enumerate() {
+        if info[i].in_test {
+            continue;
+        }
+        for pat in ["with_capacity(", ".reserve("] {
+            let mut start = 0usize;
+            while let Some(off) = line[start..].find(pat) {
+                let p = start + off;
+                start = p + 1;
+                let before = &line[..p];
+                if before.trim_end().ends_with("fn") {
+                    continue; // the helper's own definition
+                }
+                // Balanced-paren arg text (single line; multi-line args
+                // count as uncapped unless marked).
+                let args = balanced_args(&line[p + pat.len()..]);
+                if CAPPED_ALLOC_HELPERS.iter().any(|h| before.contains(h)) {
+                    continue;
+                }
+                let arg = if before.contains("TrackedBuf") {
+                    last_top_level_arg(&args)
+                } else {
+                    first_top_level_arg(&args)
+                };
+                if capped_expr(&arg) {
+                    continue;
+                }
+                if !allowed(raw, i, "uncapped_alloc", info[i].fn_line) {
+                    let shown: String = arg.trim().chars().take(40).collect();
+                    push(
+                        out,
+                        ctx,
+                        i,
+                        "uncapped_alloc",
+                        format!("allocation from runtime length `{shown}` without a cap"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn balanced_args(rest: &str) -> String {
+    let mut depth = 1i32;
+    let mut args = String::new();
+    for c in rest.chars() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        args.push(c);
+    }
+    args
+}
+
+fn first_top_level_arg(args: &str) -> String {
+    let mut depth = 0i32;
+    let mut out = String::new();
+    for c in args.chars() {
+        match c {
+            '(' | '[' | '<' => depth += 1,
+            ')' | ']' | '>' => depth -= 1,
+            ',' if depth == 0 => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn last_top_level_arg(args: &str) -> String {
+    let mut depth = 0i32;
+    let mut out = String::new();
+    for c in args.chars() {
+        match c {
+            '(' | '[' | '<' => depth += 1,
+            ')' | ']' | '>' => depth -= 1,
+            ',' if depth == 0 => {
+                out.clear();
+                continue;
+            }
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Is this reserve expression provably bounded? Literal arithmetic,
+/// `.min(...)`-clamped, or sized by SCREAMING_CASE constants.
+fn capped_expr(arg: &str) -> bool {
+    let a = arg.trim();
+    if a.is_empty() {
+        return false;
+    }
+    if a.contains(".min(") {
+        return true;
+    }
+    let b = a.as_bytes();
+    let mut j = 0usize;
+    while j < b.len() {
+        let c = b[j];
+        if is_ident(c) {
+            let mut k = j;
+            while k < b.len() && is_ident(b[k]) {
+                k += 1;
+            }
+            let word = &a[j..k];
+            let digits = word.bytes().all(|x| x.is_ascii_digit());
+            let screaming = !word.bytes().any(|x| x.is_ascii_lowercase());
+            if !(digits || word == "usize" || word == "as" || screaming) {
+                return false; // lowercase identifier → runtime value
+            }
+            j = k;
+            continue;
+        }
+        if matches!(c, b' ' | b'\t' | b'*' | b'+' | b'-' | b'/' | b'(' | b')' | b'<' | b'>' | b':' | b'&') {
+            j += 1;
+            continue;
+        }
+        return false;
+    }
+    true
+}
+
+/// Pass 5a: no panic paths in wire/frame decoding.
+fn panic_path(ctx: Ctx, out: &mut Vec<Finding>) {
+    let (_, raw, code, info) = ctx;
+    for (i, line) in code.iter().enumerate() {
+        if info[i].in_test {
+            continue;
+        }
+        for pat in PANIC_TOKENS {
+            let hit = if pat.starts_with('.') {
+                line.contains(pat)
+            } else {
+                find_token(line, pat)
+            };
+            if hit {
+                if !allowed(raw, i, "panic_path", info[i].fn_line) {
+                    let name = pat.trim_matches(|c| c == '(' || c == '.' || c == '!');
+                    push(out, ctx, i, "panic_path", format!("`{name}` in wire/frame decode path"));
+                }
+                break;
+            }
+        }
+        // Slice indexing inside decode-path fns.
+        let fname = &info[i].fn_name;
+        if fname.starts_with("read_")
+            || fname.starts_with("decode")
+            || fname.starts_with("parse")
+            || fname.contains("decode")
+        {
+            let b = line.as_bytes();
+            for j in 1..b.len() {
+                // The preceding-char gate excludes attributes (`#[`) and
+                // macro invocations (`vec![`) by construction.
+                if b[j] == b'[' && (is_ident(b[j - 1]) || matches!(b[j - 1], b')' | b']')) {
+                    if !allowed(raw, i, "panic_path", info[i].fn_line) {
+                        push(
+                            out,
+                            ctx,
+                            i,
+                            "panic_path",
+                            "slice index in decode path (use get()/split helpers)".to_string(),
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Pass 5b: every `unsafe` carries a `// SAFETY:` comment — on the line
+/// or in the contiguous comment/attribute block directly above.
+fn missing_safety(ctx: Ctx, out: &mut Vec<Finding>) {
+    let (_, raw, code, info) = ctx;
+    for (i, line) in code.iter().enumerate() {
+        if info[i].in_test || !find_token(line, "unsafe") {
+            continue;
+        }
+        let has = |l: &str| l.contains("SAFETY:") || l.contains("# Safety");
+        let mut found = has(raw[i]);
+        let mut j = i;
+        while !found && j > 0 {
+            j -= 1;
+            let t = raw[j].trim();
+            if t.starts_with("//") || t.starts_with("#[") {
+                found = has(t);
+            } else {
+                break;
+            }
+        }
+        if !found && !allowed(raw, i, "missing_safety", info[i].fn_line) {
+            push(
+                out,
+                ctx,
+                i,
+                "missing_safety",
+                "`unsafe` without a `// SAFETY:` comment".to_string(),
+            );
+        }
+    }
+}
+
+// -- drivers ------------------------------------------------------------------
+
+fn file_matches(rel: &str, set: &[&str]) -> bool {
+    set.iter().any(|s| rel.ends_with(s))
+}
+
+/// Lint one source string. `passes` restricts the set; `force` bypasses
+/// the per-pass file filters (fixture mode).
+pub fn lint_source(rel: &str, src: &str, passes: Option<&[String]>, force: bool) -> Vec<Finding> {
+    let raw_owned: Vec<&str> = src.split('\n').collect();
+    let mut code = scrub(src);
+    while code.len() < raw_owned.len() {
+        code.push(String::new());
+    }
+    let info = analyze(&code);
+    let mut out = Vec::new();
+    let run = |name: &str| passes.map_or(true, |ps| ps.iter().any(|p| p == name));
+    let ctx: Ctx = (rel, &raw_owned, &code, &info);
+    if run("float_in_fold") && (force || file_matches(rel, &FOLD_FILES)) {
+        float_in_fold(ctx, &mut out);
+    }
+    if run("unchecked_arith") && (force || file_matches(rel, &FOLD_FILES)) {
+        unchecked_arith(ctx, &mut out);
+    }
+    if run("blocking_in_step") {
+        blocking_in_step(ctx, &mut out);
+    }
+    if run("uncapped_alloc") && (force || file_matches(rel, &WIRE_ALLOC_FILES)) {
+        uncapped_alloc(ctx, &mut out);
+    }
+    if run("panic_path") && (force || file_matches(rel, &PANIC_FILES)) {
+        panic_path(ctx, &mut out);
+    }
+    if run("missing_safety") {
+        missing_safety(ctx, &mut out);
+    }
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, files)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`).
+pub fn lint_tree(root: &Path, passes: Option<&[String]>) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    let mut out = Vec::new();
+    for f in files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&f)?;
+        out.extend(lint_source(&rel, &src, passes, false));
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn repo_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+    }
+
+    fn fixture(pass: &str) -> String {
+        let p = repo_root().join("xtask/fixtures").join(format!("{pass}.rs"));
+        fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+    }
+
+    /// Each fixture must be flagged by its pass, and only on the lines
+    /// marked `// BAD` — every unmarked line is either clean or carries
+    /// an allow-marker the pass must honor.
+    fn check_fixture(pass: &str) {
+        let src = fixture(pass);
+        let findings = lint_source("fixture.rs", &src, Some(&[pass.to_string()]), true);
+        assert!(!findings.is_empty(), "{pass}: fixture produced no findings");
+        let lines: Vec<&str> = src.split('\n').collect();
+        let bad: Vec<usize> = lines
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.contains("// BAD"))
+            .map(|(i, _)| i + 1)
+            .collect();
+        let mut flagged: Vec<usize> = findings.iter().map(|f| f.line).collect();
+        flagged.sort_unstable();
+        flagged.dedup();
+        assert_eq!(
+            flagged, bad,
+            "{pass}: flagged lines {flagged:?} != `// BAD` lines {bad:?}"
+        );
+    }
+
+    #[test]
+    fn fixtures_flagged_exactly() {
+        for pass in PASSES {
+            check_fixture(pass);
+        }
+    }
+
+    #[test]
+    fn clean_tree_passes() {
+        let root = repo_root().join("rust/src");
+        let findings = lint_tree(&root, None).expect("walk rust/src");
+        let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        assert!(findings.is_empty(), "lint findings on the tree:\n{}", report.join("\n"));
+    }
+
+    fn only(pass: &str) -> Vec<String> {
+        vec![pass.to_string()]
+    }
+
+    #[test]
+    fn allow_marker_forms() {
+        let ps = only("unchecked_arith");
+        let pass = Some(&ps[..]);
+        // Same line.
+        let s = "fn f(x: u64) { let mut a = x; a += 1; } // flare-lint: allow(unchecked_arith): t";
+        assert!(lint_source("x.rs", s, pass, true).is_empty());
+        // Block above the line.
+        let s = "fn f(x: u64) {\n    let mut a = x;\n    // flare-lint: allow(unchecked_arith): t\n    a += 1;\n}";
+        assert!(lint_source("x.rs", s, pass, true).is_empty());
+        // Item-level: block above the enclosing fn, through attributes.
+        let s = "// flare-lint: allow(unchecked_arith): t\n#[inline]\nfn f(x: u64) {\n    let mut a = x;\n    a += 1;\n}";
+        assert!(lint_source("x.rs", s, pass, true).is_empty());
+        // A marker for a different pass does not leak.
+        let s = "fn f(x: u64) { let mut a = x; a += 1; } // flare-lint: allow(panic_path): t";
+        assert_eq!(lint_source("x.rs", s, pass, true).len(), 1);
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let ps = only("unchecked_arith");
+        let s = "#[cfg(test)]\nmod tests {\n    fn f(x: u64) { let mut a = x; a += 1; }\n}";
+        assert!(lint_source("x.rs", s, Some(&ps[..]), true).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_trip_passes() {
+        let ps = only("unchecked_arith");
+        let s = "fn f() { let s = \"a += 1\"; /* a += 1 */ let _ = s; } // a += 1";
+        assert!(lint_source("x.rs", s, Some(&ps[..]), true).is_empty());
+    }
+}

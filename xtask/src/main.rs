@@ -1,0 +1,316 @@
+//! Repo automation driver: `cargo xtask <command>`.
+//!
+//! * `cargo xtask lint` — run flare-lint over `rust/src`; nonzero exit
+//!   on any finding. `--pass <name>` restricts the passes; `--fixture
+//!   <pass>` lints the checked-in violation fixture instead (expected to
+//!   exit nonzero — CI asserts that each fixture still trips its pass).
+//! * `cargo xtask fuzz --secs <n>` — offline, dependency-free fuzz
+//!   smoke: replays the committed seed corpora through the library's
+//!   fuzz entry points, then runs seeded random mutations of them for
+//!   the time budget. Crashing inputs are written to
+//!   `target/fuzz-crashes/` and fail the run. `--target <name>` selects
+//!   one of frame_header / entry_decode / varint.
+
+mod lint;
+
+use std::env;
+use std::fs;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::time::{Duration, Instant};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level under the repo root")
+        .to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    match cmd {
+        "lint" => cmd_lint(&args[1..]),
+        "fuzz" => cmd_fuzz(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask <lint|fuzz> [options]");
+            eprintln!("  lint [--pass <name>]... [--fixture <pass>] [--root <dir>]");
+            eprintln!("  fuzz [--secs <n>] [--target <name>]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+// -- lint ---------------------------------------------------------------------
+
+fn cmd_lint(args: &[String]) -> ExitCode {
+    let mut passes: Vec<String> = Vec::new();
+    let mut fixture: Option<String> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--pass" => match it.next() {
+                Some(p) => passes.push(p.clone()),
+                None => return usage("--pass needs a value"),
+            },
+            "--fixture" => match it.next() {
+                Some(p) => fixture = Some(p.clone()),
+                None => return usage("--fixture needs a value"),
+            },
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return usage("--root needs a value"),
+            },
+            other => return usage(&format!("unknown lint option `{other}`")),
+        }
+    }
+    for p in &passes {
+        if !lint::PASSES.contains(&p.as_str()) {
+            return usage(&format!("unknown pass `{p}` (have: {})", lint::PASSES.join(", ")));
+        }
+    }
+
+    let findings = if let Some(pass) = fixture {
+        if !lint::PASSES.contains(&pass.as_str()) {
+            return usage(&format!("unknown fixture pass `{pass}`"));
+        }
+        let path = repo_root().join("xtask/fixtures").join(format!("{pass}.rs"));
+        let src = match fs::read_to_string(&path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        // Fixture mode forces the single pass and bypasses file filters.
+        lint::lint_source("fixture.rs", &src, Some(&[pass]), true)
+    } else {
+        let root = root.unwrap_or_else(|| repo_root().join("rust/src"));
+        let sel = if passes.is_empty() { None } else { Some(&passes[..]) };
+        match lint::lint_tree(&root, sel) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("lint walk failed: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    };
+
+    for f in &findings {
+        println!("{f}");
+    }
+    println!("-- {} finding(s)", findings.len());
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("xtask: {msg}");
+    ExitCode::from(2)
+}
+
+// -- fuzz smoke ---------------------------------------------------------------
+
+type FuzzFn = fn(&[u8]);
+
+const FUZZ_TARGETS: [(&str, FuzzFn); 3] = [
+    ("frame_header", flare::fuzzing::fuzz_frame_header),
+    ("entry_decode", flare::fuzzing::fuzz_entry_decode),
+    ("varint", flare::fuzzing::fuzz_varint),
+];
+
+fn cmd_fuzz(args: &[String]) -> ExitCode {
+    let mut secs: u64 = 30;
+    let mut target: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--secs" => match it.next().and_then(|v| v.parse().ok()) {
+                Some(v) => secs = v,
+                None => return usage("--secs needs an integer"),
+            },
+            "--target" => match it.next() {
+                Some(t) => target = Some(t.clone()),
+                None => return usage("--target needs a value"),
+            },
+            other => return usage(&format!("unknown fuzz option `{other}`")),
+        }
+    }
+    let selected: Vec<_> = FUZZ_TARGETS
+        .iter()
+        .filter(|(name, _)| match target.as_deref() {
+            Some(t) => t == *name,
+            None => true,
+        })
+        .collect();
+    if selected.is_empty() {
+        let names: Vec<&str> = FUZZ_TARGETS.iter().map(|(n, _)| n).copied().collect();
+        return usage(&format!("unknown target (have: {})", names.join(", ")));
+    }
+    let budget = Duration::from_secs(secs) / selected.len() as u32;
+    let mut failed = false;
+    for (name, f) in selected {
+        match smoke_target(name, *f, budget) {
+            Ok(execs) => println!("fuzz {name}: {execs} execs, no crashes"),
+            Err(path) => {
+                eprintln!("fuzz {name}: CRASH — input saved to {}", path.display());
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+/// Replay the seed corpus, then mutate seeds under a deterministic
+/// xorshift stream until the budget is spent. Returns the exec count,
+/// or the path of a crashing input.
+fn smoke_target(name: &str, f: FuzzFn, budget: Duration) -> Result<u64, PathBuf> {
+    let corpus_dir = repo_root().join("fuzz/corpora").join(name);
+    let mut corpus: Vec<Vec<u8>> = Vec::new();
+    if let Ok(rd) = fs::read_dir(&corpus_dir) {
+        let mut paths: Vec<_> = rd.flatten().map(|e| e.path()).collect();
+        paths.sort();
+        for p in paths {
+            if let Ok(b) = fs::read(&p) {
+                corpus.push(b);
+            }
+        }
+    }
+    if corpus.is_empty() {
+        // No committed seeds: start from something tiny and let the
+        // mutator grow it.
+        corpus.push(vec![0u8; 8]);
+    }
+
+    let mut execs = 0u64;
+    let mut run = |data: &[u8]| -> Result<(), PathBuf> {
+        execs += 1;
+        let r = catch_unwind(AssertUnwindSafe(|| f(data)));
+        if r.is_err() {
+            Err(save_crash(name, data))
+        } else {
+            Ok(())
+        }
+    };
+
+    for seed in &corpus {
+        run(seed)?;
+    }
+    let mut rng = Xorshift::new(0x5EED_F1A2_E000_0001 ^ name.len() as u64);
+    let t0 = Instant::now();
+    let mut buf: Vec<u8> = Vec::new();
+    while t0.elapsed() < budget {
+        // A batch per clock check keeps the loop hot.
+        for _ in 0..256 {
+            let base = &corpus[rng.next() as usize % corpus.len()];
+            buf.clear();
+            buf.extend_from_slice(base);
+            mutate(&mut buf, &mut rng);
+            run(&buf)?;
+        }
+    }
+    Ok(execs)
+}
+
+fn save_crash(name: &str, data: &[u8]) -> PathBuf {
+    let dir = repo_root().join("target/fuzz-crashes");
+    let _ = fs::create_dir_all(&dir);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in data {
+        h = (h ^ b as u64).wrapping_mul(0x1000_0000_01b3);
+    }
+    let path = dir.join(format!("{name}-{h:016x}.bin"));
+    let _ = fs::write(&path, data);
+    path
+}
+
+struct Xorshift(u64);
+
+impl Xorshift {
+    fn new(seed: u64) -> Xorshift {
+        Xorshift(seed.max(1))
+    }
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x
+    }
+}
+
+/// Byte-level mutations: flips, arithmetic nudges, truncation, extension,
+/// and interesting-value splices — the classic libFuzzer-lite set.
+fn mutate(buf: &mut Vec<u8>, rng: &mut Xorshift) {
+    let rounds = 1 + (rng.next() % 4) as usize;
+    for _ in 0..rounds {
+        match rng.next() % 6 {
+            0 => {
+                // Bit flip.
+                if !buf.is_empty() {
+                    let i = rng.next() as usize % buf.len();
+                    buf[i] ^= 1 << (rng.next() % 8);
+                }
+            }
+            1 => {
+                // Byte overwrite.
+                if !buf.is_empty() {
+                    let i = rng.next() as usize % buf.len();
+                    buf[i] = rng.next() as u8;
+                }
+            }
+            2 => {
+                // Truncate.
+                if buf.len() > 1 {
+                    let keep = 1 + rng.next() as usize % (buf.len() - 1);
+                    buf.truncate(keep);
+                }
+            }
+            3 => {
+                // Extend with random bytes.
+                let n = 1 + (rng.next() % 16) as usize;
+                for _ in 0..n {
+                    buf.push(rng.next() as u8);
+                }
+            }
+            4 => {
+                // Splice an interesting little-endian value.
+                const INTERESTING: [u64; 8] = [
+                    0,
+                    1,
+                    0x7f,
+                    0xff,
+                    0x7fff_ffff,
+                    0xffff_ffff,
+                    u64::MAX / 2,
+                    u64::MAX,
+                ];
+                let v = INTERESTING[rng.next() as usize % INTERESTING.len()]
+                    .to_le_bytes();
+                if buf.len() >= 8 {
+                    let i = rng.next() as usize % (buf.len() - 7);
+                    buf[i..i + 8].copy_from_slice(&v);
+                }
+            }
+            _ => {
+                // Duplicate a slice of itself (repetition bugs).
+                if !buf.is_empty() && buf.len() < 1 << 16 {
+                    let i = rng.next() as usize % buf.len();
+                    let n = (rng.next() as usize % 16).min(buf.len() - i);
+                    let chunk: Vec<u8> = buf[i..i + n].to_vec();
+                    buf.extend_from_slice(&chunk);
+                }
+            }
+        }
+    }
+}

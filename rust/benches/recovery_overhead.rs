@@ -1,0 +1,192 @@
+//! Journal overhead and replay cost (ISSUE 9 acceptance bench).
+//!
+//! Two questions, one BENCH_JSON row each:
+//!
+//! 1. **Write-path overhead** — wall-clock of an identical synchronous
+//!    federated run with the write-ahead journal off, fsynced at seal
+//!    points (the default), and fsynced on every record. The acceptance
+//!    bar is journal-on (seal) within 10% of journal-off on the smoke
+//!    shape; the row carries `overhead_pct` so CI plots the trend
+//!    instead of hard-failing on a noisy runner.
+//! 2. **Replay scaling** — time for `Journal::open` + `recover` over
+//!    synthesized journals with a growing number of round checkpoints,
+//!    each carrying a full model snapshot: the restart-latency curve.
+
+use flare::config::model_spec::{LlamaDims, ModelSpec};
+use flare::config::{FsyncPolicy, JobConfig, JournalConfig, QuantScheme, StreamingMode, TrainConfig};
+use flare::coordinator::journal::{self, Journal, Record, StatsRec};
+use flare::coordinator::simulator::run_simulation;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::tensor::init::materialize;
+use flare::util::bench::print_table;
+use flare::util::json::Json;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn tiny_spec() -> ModelSpec {
+    ModelSpec::llama(
+        "tiny",
+        LlamaDims {
+            vocab: 64,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 256,
+            untied_head: true,
+        },
+    )
+}
+
+fn bench_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flare_recovery_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+    dir
+}
+
+/// One synchronous run; returns wall seconds. `fsync: None` = journal off.
+fn timed_run(rounds: usize, clients: usize, fsync: Option<FsyncPolicy>, tag: &str) -> f64 {
+    let journal = match fsync {
+        Some(policy) => JournalConfig {
+            path: bench_dir().join(format!("{tag}.journal")).to_string_lossy().into_owned(),
+            fsync: policy,
+        },
+        None => JournalConfig::default(),
+    };
+    let job = JobConfig {
+        name: format!("recovery-bench-{tag}"),
+        clients,
+        rounds,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 64 * 1024,
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        journal,
+        ..Default::default()
+    };
+    let spec = tiny_spec();
+    let initial = materialize(&spec, 7);
+    let targets: Vec<_> = (0..clients).map(|i| materialize(&spec, 300 + i as u64)).collect();
+    let t0 = Instant::now();
+    let r = run_simulation(
+        &job,
+        initial,
+        Arc::new(move |i| MockTrainer::new(targets[i].clone(), 0.3, 10 + i as u64)),
+        || FilterSet::two_way_quantization(QuantScheme::Blockwise8),
+    )
+    .expect("bench run failed");
+    let secs = t0.elapsed().as_secs_f64();
+    assert!(r.report.series["global_loss"].points.len() >= rounds);
+    secs
+}
+
+/// Synthesize a journal with `checkpoints` full-model round checkpoints
+/// (plus per-round start records), then time open + replay.
+fn timed_replay(checkpoints: usize) -> (f64, u64) {
+    let path = bench_dir().join(format!("replay_{checkpoints}.journal"));
+    let _ = std::fs::remove_file(&path);
+    let global = materialize(&tiny_spec(), 7);
+    {
+        let (mut j, _) = Journal::open(&path, FsyncPolicy::Never).expect("create journal");
+        j.append(&Record::JobMeta { seed: 7, rounds: checkpoints as u64, clients: 4, buffered: false })
+            .expect("meta");
+        for round in 0..checkpoints as u64 {
+            j.append(&Record::RoundStart { round, attempt: 1, selected: vec![0, 1, 2, 3] })
+                .expect("start");
+            let stats = StatsRec { round, sampled: 4, completed: 4, ..StatsRec::default() };
+            j.append(&Record::RoundComplete { stats, global: global.clone() }).expect("checkpoint");
+        }
+        j.sync().expect("sync");
+    }
+    let bytes = std::fs::metadata(&path).expect("stat journal").len();
+    let t0 = Instant::now();
+    let (_j, records) = Journal::open(&path, FsyncPolicy::Never).expect("reopen journal");
+    let st = journal::recover(&records);
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(st.next_round, checkpoints as u64);
+    (secs, bytes)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (rounds, clients) = if smoke { (3, 3) } else { (8, 4) };
+
+    let mut rows = Vec::new();
+    let base = timed_run(rounds, clients, None, "off");
+    for (label, fsync) in [
+        ("off", None),
+        ("seal", Some(FsyncPolicy::Seal)),
+        ("always", Some(FsyncPolicy::Always)),
+    ] {
+        // The "off" row reuses the already-measured baseline so every
+        // overhead percentage shares one reference.
+        let secs = if fsync.is_none() { base } else { timed_run(rounds, clients, fsync, label) };
+        let overhead_pct = (secs / base - 1.0) * 100.0;
+        let json = Json::obj(vec![
+            ("bench", Json::str("recovery_overhead")),
+            ("variant", Json::str("write_path")),
+            ("journal", Json::str(label)),
+            ("rounds", Json::num(rounds as f64)),
+            ("clients", Json::num(clients as f64)),
+            ("secs", Json::num(secs)),
+            ("rounds_per_s", Json::num(rounds as f64 / secs)),
+            ("overhead_pct", Json::num(overhead_pct)),
+        ]);
+        println!("BENCH_JSON {json}");
+        rows.push(vec![
+            label.to_string(),
+            format!("{secs:.3}"),
+            format!("{:.2}", rounds as f64 / secs),
+            format!("{overhead_pct:+.1} %"),
+        ]);
+        // Acceptance bar, asserted on the full shape only (the smoke
+        // run is too short for a stable ratio on a shared runner).
+        if !smoke && label == "seal" {
+            assert!(
+                overhead_pct < 10.0,
+                "seal-policy journaling costs {overhead_pct:.1}% (bar: <10%)"
+            );
+        }
+    }
+    print_table(
+        &format!("Journal write-path overhead ({rounds} rounds x {clients} clients)"),
+        &["journal", "secs", "rounds/s", "vs off"],
+        &rows,
+    );
+
+    let sweep: &[usize] = if smoke { &[4, 16] } else { &[4, 16, 64] };
+    let mut rows = Vec::new();
+    for &checkpoints in sweep {
+        let (secs, bytes) = timed_replay(checkpoints);
+        let json = Json::obj(vec![
+            ("bench", Json::str("recovery_overhead")),
+            ("variant", Json::str("replay")),
+            ("checkpoints", Json::num(checkpoints as f64)),
+            ("journal_mb", Json::num(bytes as f64 / (1 << 20) as f64)),
+            ("replay_ms", Json::num(secs * 1e3)),
+            (
+                "replay_mb_s",
+                Json::num(bytes as f64 / (1 << 20) as f64 / secs.max(1e-9)),
+            ),
+        ]);
+        println!("BENCH_JSON {json}");
+        rows.push(vec![
+            checkpoints.to_string(),
+            format!("{:.2}", bytes as f64 / (1 << 20) as f64),
+            format!("{:.2}", secs * 1e3),
+            format!("{:.0}", bytes as f64 / (1 << 20) as f64 / secs.max(1e-9)),
+        ]);
+    }
+    print_table(
+        "Journal replay scaling (open + recover, full-model checkpoints)",
+        &["checkpoints", "journal MB", "replay ms", "MB/s"],
+        &rows,
+    );
+
+    let _ = std::fs::remove_dir_all(bench_dir());
+}

@@ -404,6 +404,57 @@ impl Default for TrainConfig {
     }
 }
 
+/// When the coordinator journal flushes appended records to stable
+/// storage (see `coordinator::journal`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// Never fsync — fastest; a crash may lose the unflushed suffix
+    /// (recovery still works, it just redoes more).
+    Never,
+    /// Fsync on checkpoint records (completed rounds / sealed
+    /// snapshots). The default: checkpoints are the only records whose
+    /// loss costs recomputation of a whole round.
+    #[default]
+    Seal,
+    /// Fsync every record — maximum durability, highest overhead.
+    Always,
+}
+
+impl FsyncPolicy {
+    pub fn from_name(s: &str) -> Option<FsyncPolicy> {
+        Some(match s {
+            "never" => FsyncPolicy::Never,
+            "seal" => FsyncPolicy::Seal,
+            "always" => FsyncPolicy::Always,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Never => "never",
+            FsyncPolicy::Seal => "seal",
+            FsyncPolicy::Always => "always",
+        }
+    }
+}
+
+/// Crash-recovery write-ahead journal for the coordination tier. An
+/// empty `path` (the default) disables journaling entirely.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct JournalConfig {
+    /// Journal file path; empty = journaling off.
+    pub path: String,
+    /// Fsync policy for appended records.
+    pub fsync: FsyncPolicy,
+}
+
+impl JournalConfig {
+    pub fn enabled(&self) -> bool {
+        !self.path.is_empty()
+    }
+}
+
 /// Full federated job description.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
@@ -460,6 +511,9 @@ pub struct JobConfig {
     pub dirichlet_alpha: f64,
     /// Path to the AOT artifacts directory.
     pub artifacts_dir: String,
+    /// Durable round/version write-ahead journal; lets a restarted
+    /// coordinator resume mid-run bit-identically.
+    pub journal: JournalConfig,
 }
 
 impl Default for JobConfig {
@@ -486,6 +540,7 @@ impl Default for JobConfig {
             seed: 0xF1A2E,
             dirichlet_alpha: 0.0,
             artifacts_dir: "artifacts".into(),
+            journal: JournalConfig::default(),
         }
     }
 }
@@ -610,6 +665,22 @@ impl JobConfig {
                                     pv.as_bool().ok_or_else(|| anyhow!("{pk}: not a bool"))?
                             }
                             other => bail!("unknown round_policy key '{other}'"),
+                        }
+                    }
+                }
+                "journal" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("journal: not an object"))?;
+                    for (jk, jv) in t {
+                        match jk.as_str() {
+                            "path" => cfg.journal.path = req_str(jv, jk)?,
+                            "fsync" => {
+                                let s = req_str(jv, jk)?;
+                                cfg.journal.fsync =
+                                    FsyncPolicy::from_name(&s).ok_or_else(|| {
+                                        anyhow!("unknown journal fsync policy '{s}' (never|seal|always)")
+                                    })?;
+                            }
+                            other => bail!("unknown journal key '{other}'"),
                         }
                     }
                 }
@@ -810,6 +881,13 @@ impl JobConfig {
                 ]),
             ),
             (
+                "journal",
+                Json::obj(vec![
+                    ("path", Json::str(self.journal.path.clone())),
+                    ("fsync", Json::str(self.journal.fsync.name())),
+                ]),
+            ),
+            (
                 "fault",
                 Json::obj(vec![
                     ("seed", Json::num(self.fault.seed as f64)),
@@ -981,6 +1059,45 @@ mod tests {
         )
         .unwrap();
         assert!(JobConfig::from_json(&ok).is_ok());
+    }
+
+    #[test]
+    fn journal_roundtrip_json_and_validation() {
+        // Default: disabled, omitted path round-trips as disabled.
+        let d = JobConfig::default();
+        assert!(!d.journal.enabled());
+        assert_eq!(d.journal.fsync, FsyncPolicy::Seal);
+        let back = JobConfig::from_json(&d.to_json()).unwrap();
+        assert!(!back.journal.enabled());
+
+        let cfg = JobConfig {
+            journal: JournalConfig {
+                path: "/tmp/run.journal".into(),
+                fsync: FsyncPolicy::Always,
+            },
+            ..JobConfig::default()
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.journal, cfg.journal);
+        assert!(back.journal.enabled());
+
+        for (name, policy) in [
+            ("never", FsyncPolicy::Never),
+            ("seal", FsyncPolicy::Seal),
+            ("always", FsyncPolicy::Always),
+        ] {
+            assert_eq!(FsyncPolicy::from_name(name), Some(policy));
+            assert_eq!(policy.name(), name);
+        }
+
+        for bad in [
+            r#"{"journal": {"fsync": "sometimes"}}"#,
+            r#"{"journal": {"nonsense": 1}}"#,
+            r#"{"journal": "not-an-object"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobConfig::from_json(&j).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -51,6 +51,7 @@
 
 use super::aggregator::{check_foldable_dtype, FIXED_ONE, MAX_WEIGHT};
 use super::controller::{endpoint_bytes, ClientConn, Controller};
+use super::journal::{self, Record, StatsRec};
 use super::protocol::CtrlMsg;
 use super::{resume_policy, RoundStats, SUBTREE_WAIT_FACTOR};
 use crate::config::{JobConfig, SessionEngine};
@@ -227,6 +228,22 @@ impl BufferedAggregator {
             alpha2,
             version: 0,
         }
+    }
+
+    /// Journal-recovery constructor: an empty accumulator that resumes
+    /// version numbering at `version` (the last sealed snapshot replayed
+    /// from the write-ahead journal). The sums start clean — folds
+    /// journaled after that seal are redone live by the restarted
+    /// driver, so the reopened window converges bit-identically.
+    pub fn with_version(
+        skeleton: ParamContainer,
+        buffer_k: usize,
+        alpha2: u32,
+        version: u64,
+    ) -> BufferedAggregator {
+        let mut a = Self::new(skeleton, buffer_k, alpha2);
+        a.version = version;
+        a
     }
 
     /// Latest published version (0 until the first snapshot).
@@ -527,11 +544,36 @@ impl Controller {
         let alpha2 = (2.0 * self.job.aggregation.staleness_alpha) as u32;
         let allow_partial = self.job.round_policy.allow_partial;
 
+        // Crash recovery: replay the journal (no-op when disabled),
+        // restore the last sealed global + version, and seed the
+        // version-window series/counters from the journaled history.
+        self.recover_journal().context("journal recovery")?;
+        let mut journal = self.journal.take();
+        let resume = self.resume.take().unwrap_or_default();
+        let start_version = resume.version;
+        let global = match resume.global {
+            Some(g) => g,
+            None => global,
+        };
+        for s in &resume.stats {
+            let v = s.round.saturating_add(1) as f64;
+            report
+                .series_mut("version_mean_loss")
+                .push(v, s.mean_loss as f64);
+            report
+                .series_mut("version_comm_bytes")
+                .push(v, s.comm_bytes as f64);
+            self.rounds.push(s.clone());
+        }
+        for &tau in &resume.staleness {
+            report.series_mut("staleness_hist").bump(tau as f64);
+        }
+
         let shared = Arc::new(SharedState {
             mu: Mutex::new(BufShared {
-                version: 0,
+                version: start_version,
                 global: Arc::new(global.clone()),
-                done: false,
+                done: start_version >= target_versions,
                 dead: vec![false; n],
                 acked: vec![0; n],
             }),
@@ -593,14 +635,18 @@ impl Controller {
         };
 
         let mut ledger = VersionLedger::new(n);
-        let mut agg =
-            BufferedAggregator::new(ParamContainer::zeros_like(&global), buffer_k, alpha2);
+        let mut agg = BufferedAggregator::with_version(
+            ParamContainer::zeros_like(&global),
+            buffer_k,
+            alpha2,
+            start_version,
+        );
         let mut latest = global;
         let t0 = Instant::now();
         COMM_GAUGE.reset_peak();
         let mut fatal: Option<anyhow::Error> = None;
-        let mut quarantined = 0u64;
-        let mut failed_total = 0u64;
+        let mut quarantined = resume.quarantined;
+        let mut failed_total = resume.failed;
         // Per-window (between snapshots) tallies, mirroring RoundStats.
         let mut win_t0 = Instant::now();
         let (mut win_loss_sum, mut win_loss_n) = (0f64, 0usize);
@@ -648,6 +694,17 @@ impl Controller {
                     if shared.mu.lock().unwrap().dead[client] {
                         continue;
                     }
+                    if let Err(e) = journal::append_opt(
+                        &mut journal,
+                        &Record::VersionIssued {
+                            client: names[client].clone(),
+                            version,
+                        },
+                    ) {
+                        fatal.get_or_insert(e);
+                        flag_done(&shared);
+                        continue;
+                    }
                     if let Err(e) = ledger.issue(client, version) {
                         fatal.get_or_insert(e);
                         flag_done(&shared);
@@ -660,6 +717,15 @@ impl Controller {
                         "buffered session '{}' failed: {err:#}",
                         names[client]
                     );
+                    if let Err(e) = journal::append_opt(
+                        &mut journal,
+                        &Record::SessionFailed {
+                            client: names[client].clone(),
+                        },
+                    ) {
+                        fatal.get_or_insert(e);
+                        flag_done(&shared);
+                    }
                     retire(client, &shared);
                     if !allow_partial {
                         fatal.get_or_insert(
@@ -697,6 +763,16 @@ impl Controller {
                                 "quarantining result from '{}': {e:#}",
                                 names[client]
                             );
+                            if let Err(je) = journal::append_opt(
+                                &mut journal,
+                                &Record::Quarantined {
+                                    client: names[client].clone(),
+                                    version: base_version,
+                                },
+                            ) {
+                                fatal.get_or_insert(je);
+                                flag_done(&shared);
+                            }
                             retire(client, &shared);
                             if !allow_partial {
                                 fatal.get_or_insert(e);
@@ -716,6 +792,16 @@ impl Controller {
                             "quarantining result from '{}': leaf sent a partial aggregate",
                             names[client]
                         );
+                        if let Err(je) = journal::append_opt(
+                            &mut journal,
+                            &Record::Quarantined {
+                                client: names[client].clone(),
+                                version: base_version,
+                            },
+                        ) {
+                            fatal.get_or_insert(je);
+                            flag_done(&shared);
+                        }
                         retire(client, &shared);
                         continue;
                     }
@@ -728,6 +814,16 @@ impl Controller {
                                 "quarantining result from '{}' at the fold: {e:#}",
                                 names[client]
                             );
+                            if let Err(je) = journal::append_opt(
+                                &mut journal,
+                                &Record::Quarantined {
+                                    client: names[client].clone(),
+                                    version: base_version,
+                                },
+                            ) {
+                                fatal.get_or_insert(je);
+                                flag_done(&shared);
+                            }
                             retire(client, &shared);
                             if !allow_partial {
                                 fatal.get_or_insert(e);
@@ -736,6 +832,22 @@ impl Controller {
                             continue;
                         }
                     };
+                    // Journaled folds commit at the next seal during
+                    // recovery; post-seal folds are redone live by the
+                    // reconnected sessions.
+                    if let Err(e) = journal::append_opt(
+                        &mut journal,
+                        &Record::FoldApplied {
+                            client: names[client].clone(),
+                            version: cur,
+                            tau,
+                        },
+                    ) {
+                        fatal.get_or_insert(e);
+                        flag_done(&shared);
+                        ack(client, &shared);
+                        continue;
+                    }
                     report.series_mut("staleness_hist").bump(tau as f64);
                     report
                         .series_mut(&format!("client_round_secs/{}", names[client]))
@@ -778,16 +890,7 @@ impl Controller {
                         } else {
                             f32::NAN
                         };
-                        report
-                            .series_mut("global_version")
-                            .push(t0.elapsed().as_secs_f64(), v as f64);
-                        report
-                            .series_mut("version_mean_loss")
-                            .push(v as f64, mean_loss as f64);
-                        report
-                            .series_mut("version_comm_bytes")
-                            .push(v as f64, win_comm as f64);
-                        self.rounds.push(RoundStats {
+                        let stats = RoundStats {
                             round: (v - 1) as usize,
                             mean_loss,
                             comm_bytes: win_comm,
@@ -798,7 +901,32 @@ impl Controller {
                             failed: win_failed,
                             stragglers: 0,
                             peak_comm_bytes: COMM_GAUGE.peak(),
-                        });
+                        };
+                        // Seal the version durably (fsync point under the
+                        // default policy) before reporting it.
+                        if let Err(e) = journal::append_opt(
+                            &mut journal,
+                            &Record::SnapshotSealed {
+                                version: v,
+                                stats: StatsRec::from_stats(&stats),
+                                global: g.clone(),
+                            },
+                        ) {
+                            fatal.get_or_insert(e);
+                            flag_done(&shared);
+                            ack(client, &shared);
+                            continue;
+                        }
+                        report
+                            .series_mut("global_version")
+                            .push(t0.elapsed().as_secs_f64(), v as f64);
+                        report
+                            .series_mut("version_mean_loss")
+                            .push(v as f64, mean_loss as f64);
+                        report
+                            .series_mut("version_comm_bytes")
+                            .push(v as f64, win_comm as f64);
+                        self.rounds.push(stats);
                         COMM_GAUGE.reset_peak();
                         latest = g;
                         win_t0 = Instant::now();
@@ -835,6 +963,10 @@ impl Controller {
             }
         }
         self.clients = conns.into_iter().flatten().collect();
+        if let Some(j) = &mut journal {
+            let _ = j.sync();
+        }
+        self.journal = journal;
         if let Some(e) = fatal {
             return Err(e.context("buffered aggregation aborted"));
         }
@@ -855,6 +987,8 @@ impl Controller {
         report.set_scalar("final_version", final_version as f64);
         report.set_scalar("quarantined_total", quarantined as f64);
         report.set_scalar("clients_failed_total", failed_total as f64);
+        // A completed run must leave no stale resume artifacts behind.
+        crate::streaming::object::sweep_spool(&self.spool_dir);
         self.finish_report(report, &pool_before);
         Ok(latest)
     }

@@ -36,9 +36,11 @@
 //! engine.
 
 use super::aggregator::{EntryFold, FedAvg, FoldOutcome};
+use super::journal::{self, Journal, Record, RecoveredState, StatsRec};
 use super::protocol::CtrlMsg;
 use super::{resume_policy, RoundStats};
 use crate::config::{JobConfig, SessionEngine};
+use crate::util::json::Json;
 use crate::reactor::{Reactor, ReactorHandle, SessionId, Step, WakeReason};
 use crate::filter::{EntryChain, FilterContext, FilterFactory, FilterPoint, FilterSet};
 use crate::memory::{GaugeReservation, COMM_GAUGE};
@@ -79,6 +81,15 @@ pub struct Controller {
     /// `run`. With sampling, a client legitimately receives fewer tasks
     /// than `job.rounds`; with round restarts, more.
     pub tasks_sent: Vec<usize>,
+    /// Open write-ahead journal ([`super::journal`]); populated by
+    /// `recover_journal` when `job.journal` is enabled.
+    pub(crate) journal: Option<Journal>,
+    /// State replayed from the journal by `recover_journal`; consumed by
+    /// `run` / `run_buffered` to resume mid-job.
+    pub(crate) resume: Option<RecoveredState>,
+    /// Chaos hook: induce a coordinator crash (journal append error)
+    /// after this many total journal records.
+    pub(crate) crash_after: Option<u64>,
 }
 
 /// Everything one session worker needs to drive its client.
@@ -202,6 +213,83 @@ impl Controller {
             spool_dir,
             rounds: Vec::new(),
             tasks_sent: Vec::new(),
+            journal: None,
+            resume: None,
+            crash_after: None,
+        }
+    }
+
+    /// Chaos hook (recovery tests): make the journal return an error —
+    /// simulating a coordinator kill — once `n` total records have been
+    /// written. The failing record itself is durable, exactly like a
+    /// `SIGKILL` landing after the write.
+    pub fn with_crash_after(mut self, n: u64) -> Controller {
+        self.crash_after = Some(n);
+        self
+    }
+
+    /// Open the configured journal (if any) and replay its records.
+    ///
+    /// Idempotent, and a no-op when `job.journal` is disabled. `run` /
+    /// `run_buffered` call it lazily, but harnesses that want the
+    /// recovered state advertised in `Welcome` (relay/client
+    /// reconciliation) should call it *before* `accept_client`.
+    pub fn recover_journal(&mut self) -> Result<()> {
+        if self.journal.is_some() || !self.job.journal.enabled() {
+            return Ok(());
+        }
+        let path = PathBuf::from(&self.job.journal.path);
+        let (mut j, records) = Journal::open(&path, self.job.journal.fsync)?;
+        let st = journal::recover(&records);
+        let buffered = self.job.aggregation.mode == crate::config::AggregationMode::Buffered;
+        st.check_meta(
+            self.job.seed,
+            self.job.rounds as u64,
+            self.job.clients as u64,
+            buffered,
+        )?;
+        if let Some(n) = self.crash_after {
+            j.set_crash_after(n);
+        }
+        if st.meta.is_none() {
+            j.append(&Record::JobMeta {
+                seed: self.job.seed,
+                rounds: self.job.rounds as u64,
+                clients: self.job.clients as u64,
+                buffered,
+            })?;
+        }
+        if st.is_resume() {
+            log::info!(
+                "journal {}: resuming after {} record(s) (next round {}, version {})",
+                path.display(),
+                st.records,
+                st.next_round,
+                st.version
+            );
+            // Recovered-round supersession: partial spool/.part state
+            // from before the restart can never complete — sweep it.
+            let swept = crate::streaming::object::sweep_spool(&self.spool_dir);
+            if swept > 0 {
+                log::info!("swept {swept} stale spool artifact(s) from {}", self.spool_dir.display());
+            }
+        }
+        self.journal = Some(j);
+        self.resume = Some(st);
+        Ok(())
+    }
+
+    /// Recovered-state summary advertised in `Welcome` (`Null` on a
+    /// fresh run). Re-registering clients/relays use it to reconcile:
+    /// spool artifacts and in-flight rounds from before the restart are
+    /// superseded.
+    fn resume_json(&self) -> Json {
+        match &self.resume {
+            Some(st) if st.is_resume() => Json::obj(vec![
+                ("next_round", Json::num(st.next_round as f64)),
+                ("version", Json::num(st.version as f64)),
+            ]),
+            _ => Json::Null,
         }
     }
 
@@ -224,6 +312,7 @@ impl Controller {
         ep.send_ctrl(
             &CtrlMsg::Welcome {
                 job: self.job.to_json(),
+                resume: self.resume_json(),
             }
             .to_json(),
         )?;
@@ -295,6 +384,33 @@ impl Controller {
         self.tasks_sent = vec![0; n];
         self.rounds.clear();
 
+        // Crash recovery: replay the journal (no-op when disabled),
+        // restore the last checkpointed global and the journaled
+        // per-round stats/series, and resume at the next round.
+        self.recover_journal().context("journal recovery")?;
+        let mut journal = self.journal.take();
+        let resume = self.resume.take().unwrap_or_default();
+        let start_round = resume.next_round as usize;
+        let global = match resume.global {
+            Some(g) => g,
+            None => global,
+        };
+        for s in &resume.stats {
+            let x = s.round as f64;
+            report.series_mut("global_loss").push(x, s.mean_loss as f64);
+            report.series_mut("round_comm_bytes").push(x, s.comm_bytes as f64);
+            report.series_mut("peak_comm_bytes").push(x, s.peak_comm_bytes as f64);
+            report.series_mut("clients_sampled").push(x, s.sampled as f64);
+            report
+                .series_mut("leaf_clients_completed")
+                .push(x, s.leaf_completed as f64);
+            report.series_mut("clients_failed").push(x, s.failed as f64);
+            report
+                .series_mut("stragglers_dropped")
+                .push(x, s.stragglers as f64);
+            self.rounds.push(s.clone());
+        }
+
         // One session per client; the fan-in channel carries finished
         // contributions back in arrival order. Under the threaded engine
         // each session owns a thread; under the reactor engine sessions
@@ -348,7 +464,9 @@ impl Controller {
         drop(evt_tx); // sessions hold the only senders
         drop(done_tx);
 
-        let outcome = self.drive_rounds(global, report, &names, &ports, &evt_rx);
+        let outcome =
+            self.drive_rounds(global, report, &names, &ports, &evt_rx, &mut journal, start_round);
+        self.journal = journal;
 
         // Closing the command channels shuts the sessions down: each
         // one drains any in-flight round, tells its client Done, and
@@ -381,6 +499,13 @@ impl Controller {
             }
         }
         self.clients = conns.into_iter().flatten().collect();
+
+        // A completed run leaves no stale resume artifacts: flush the
+        // journal and sweep orphaned `.part`/manifest/spool temporaries.
+        if let Some(j) = &mut self.journal {
+            let _ = j.sync();
+        }
+        crate::streaming::object::sweep_spool(&self.spool_dir);
 
         self.finish_report(report, &pool_before);
         Ok(global)
@@ -456,6 +581,8 @@ impl Controller {
         names: &[String],
         ports: &[SessionPort],
         evt_rx: &mpsc::Receiver<SessionEvent>,
+        journal: &mut Option<Journal>,
+        start_round: usize,
     ) -> Result<ParamContainer> {
         let n = names.len();
         let rounds = self.job.rounds;
@@ -464,9 +591,12 @@ impl Controller {
         // A client that failed once is excluded from later rounds rather
         // than burning a transfer timeout per round on a broken link.
         let mut dead = vec![false; n];
-        let mut step_counter = 0usize;
+        // Resuming mid-job: the step counter picks up where the
+        // journaled rounds left off, so client_loss x-coordinates and
+        // trainer round indices match an uninterrupted run.
+        let mut step_counter = start_round * self.job.train.local_steps;
 
-        for round in 0..rounds {
+        for round in start_round..rounds {
             let t0 = Instant::now();
             COMM_GAUGE.reset_peak();
             let selected = policy.select(n, self.job.seed, round);
@@ -492,6 +622,14 @@ impl Controller {
                 if attempt > k + 1 {
                     bail!("round {round}: restart budget exhausted after {} attempts", attempt - 1);
                 }
+                journal::append_opt(
+                    journal,
+                    &Record::RoundStart {
+                        round: round as u64,
+                        attempt: attempt as u32,
+                        selected: selected.iter().map(|&i| i as u32).collect(),
+                    },
+                )?;
                 let fold = if entry_mode {
                     Some(Arc::new(EntryFold::new(
                         ParamContainer::zeros_like(&global),
@@ -820,6 +958,16 @@ impl Controller {
                 crate::util::bytes::human(stats.peak_comm_bytes),
                 stats.seconds
             );
+            // Checkpoint: round stats + the folded global, fsynced under
+            // the default `seal` policy. A restart replays up to here
+            // and re-executes only the rounds after it.
+            journal::append_opt(
+                journal,
+                &Record::RoundComplete {
+                    stats: StatsRec::from_stats(&stats),
+                    global: global.clone(),
+                },
+            )?;
             self.rounds.push(stats);
         }
         Ok(global)

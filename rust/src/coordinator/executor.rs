@@ -64,6 +64,14 @@ impl<T: LocalTrainer> Executor<T> {
 
     /// Register with the server; returns the job config it sent.
     pub fn register(&self) -> Result<Json> {
+        Ok(self.register_full()?.0)
+    }
+
+    /// Register with the server; returns the job config plus the
+    /// server's recovery summary (`Null` unless the coordinator resumed
+    /// from its journal — then `{next_round, version}` tells a
+    /// reconnecting client that pre-restart rounds are superseded).
+    pub fn register_full(&self) -> Result<(Json, Json)> {
         self.ep.send_ctrl(
             &CtrlMsg::Register {
                 client: self.name.clone(),
@@ -72,7 +80,7 @@ impl<T: LocalTrainer> Executor<T> {
             .to_json(),
         )?;
         match CtrlMsg::from_json(&self.ep.recv_ctrl(Some(self.timeout))?)? {
-            CtrlMsg::Welcome { job } => Ok(job),
+            CtrlMsg::Welcome { job, resume } => Ok((job, resume)),
             other => bail!("expected welcome, got {other:?}"),
         }
     }

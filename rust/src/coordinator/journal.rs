@@ -1,0 +1,924 @@
+//! Crash-recovery write-ahead journal for the coordination tier
+//! (ISSUE 9 tentpole).
+//!
+//! The controller (sync rounds) and the buffered driver (FedBuff
+//! version windows) append length-prefixed, CRC-framed records to an
+//! append-only file as they cross durable boundaries: round/attempt
+//! starts with the sampled-client set, version issuance/retirement,
+//! accepted folds, quarantines, and — the checkpoints — completed-round
+//! globals and sealed accumulator snapshots. A restarted coordinator
+//! replays the journal, restores the last checkpointed global, and
+//! resumes mid-run; because trainers are pure functions of the issued
+//! weights, client sampling is seeded, and the fold grid is exact
+//! i128/Q64.64 integer arithmetic (PRs 5–6), re-executing the suffix
+//! after the last checkpoint produces a final global **bit-identical**
+//! to an uninterrupted run.
+//!
+//! ## Wire format
+//!
+//! ```text
+//! file  := MAGIC (8 bytes) record*
+//! record:= len:u32le  crc:u32le(crc32 of payload)  payload[len]
+//! ```
+//!
+//! The payload starts with a one-byte tag (see [`Record`]). Torn tails
+//! are expected — a crash can land mid-`write_all` — so the scanner
+//! stops at the first short/corrupt record and `open` truncates the
+//! file back to the last good boundary before appending. Decode is
+//! hostile-input hardened: it is panic-free and allocation-capped
+//! (enforced by the `flare-lint` `panic_path` / `uncapped_alloc`
+//! passes) and fuzzed via `flare::fuzzing::fuzz_journal`.
+
+use std::fs::OpenOptions;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::FsyncPolicy;
+use crate::coordinator::RoundStats;
+use crate::streaming::wire::bounded_prealloc;
+use crate::tensor::{DType, ParamContainer, Tensor, TensorMeta};
+use crate::util::bytes::{get_u16, get_u32, get_u64, put_u16, put_u32, put_u64};
+
+/// File magic: "FLJN" + format version 1.
+pub const MAGIC: [u8; 8] = *b"FLJN\x01\x00\x00\x00";
+
+/// Largest payload a frame may declare; anything bigger is treated as
+/// corruption (a torn length word reads as garbage far beyond this).
+pub const MAX_RECORD_BYTES: u32 = 1 << 28;
+/// Longest client/tensor name accepted by decode.
+pub const MAX_NAME_BYTES: usize = 4096;
+/// Most dimensions a journaled tensor may declare.
+pub const MAX_DIMS: usize = 8;
+/// Speculative-allocation caps for decoded collections; real data still
+/// grows vectors to their true size incrementally.
+pub const MAX_SELECTED_PREALLOC: usize = 1 << 16;
+pub const MAX_ENTRIES_PREALLOC: usize = 1 << 10;
+
+/// Exact-bit copy of [`RoundStats`]: floats are carried as raw bit
+/// patterns so replayed stats (and the fuzz roundtrip oracle) compare
+/// with `Eq`, NaNs included.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StatsRec {
+    pub round: u64,
+    pub mean_loss_bits: u32,
+    pub comm_bytes: u64,
+    pub seconds_bits: u64,
+    pub sampled: u64,
+    pub completed: u64,
+    pub leaf_completed: u64,
+    pub failed: u64,
+    pub stragglers: u64,
+    pub peak_comm_bytes: u64,
+}
+
+impl StatsRec {
+    pub fn from_stats(s: &RoundStats) -> Self {
+        StatsRec {
+            round: s.round as u64,
+            mean_loss_bits: s.mean_loss.to_bits(),
+            comm_bytes: s.comm_bytes,
+            seconds_bits: s.seconds.to_bits(),
+            sampled: s.sampled as u64,
+            completed: s.completed as u64,
+            leaf_completed: s.leaf_completed as u64,
+            failed: s.failed as u64,
+            stragglers: s.stragglers as u64,
+            peak_comm_bytes: s.peak_comm_bytes,
+        }
+    }
+
+    pub fn to_stats(&self) -> RoundStats {
+        RoundStats {
+            round: self.round as usize,
+            mean_loss: f32::from_bits(self.mean_loss_bits),
+            comm_bytes: self.comm_bytes,
+            seconds: f64::from_bits(self.seconds_bits),
+            sampled: self.sampled as usize,
+            completed: self.completed as usize,
+            leaf_completed: self.leaf_completed as usize,
+            failed: self.failed as usize,
+            stragglers: self.stragglers as usize,
+            peak_comm_bytes: self.peak_comm_bytes,
+        }
+    }
+}
+
+/// One journaled event. Tags are part of the on-disk format — append
+/// new variants, never renumber.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Record {
+    /// Tag 1 — written once when a journal is created; guards against
+    /// resuming a journal that belongs to a different job.
+    JobMeta { seed: u64, rounds: u64, clients: u64, buffered: bool },
+    /// Tag 2 — a sync round attempt began with this sampled-client set.
+    RoundStart { round: u64, attempt: u32, selected: Vec<u32> },
+    /// Tag 3 — checkpoint: a sync round folded + finalized this global.
+    RoundComplete { stats: StatsRec, global: ParamContainer },
+    /// Tag 4 — FedBuff ledger issued `version` to `client`.
+    VersionIssued { client: String, version: u64 },
+    /// Tag 5 — FedBuff ledger retired `client`'s outstanding version.
+    VersionRetired { client: String },
+    /// Tag 6 — checkpoint: the buffered accumulator sealed `version`.
+    SnapshotSealed { version: u64, stats: StatsRec, global: ParamContainer },
+    /// Tag 7 — a contribution was folded into the open version window.
+    FoldApplied { client: String, version: u64, tau: u64 },
+    /// Tag 8 — a contribution was rejected and quarantined.
+    Quarantined { client: String, version: u64 },
+    /// Tag 9 — a session died before contributing.
+    SessionFailed { client: String },
+}
+
+impl Record {
+    /// Checkpoints are the records `FsyncPolicy::Seal` flushes on.
+    pub fn is_checkpoint(&self) -> bool {
+        matches!(
+            self,
+            Record::JobMeta { .. } | Record::RoundComplete { .. } | Record::SnapshotSealed { .. }
+        )
+    }
+}
+
+// -- encode -------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u16(out, s.len().min(u16::MAX as usize) as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_stats(out: &mut Vec<u8>, s: &StatsRec) {
+    put_u64(out, s.round);
+    put_u32(out, s.mean_loss_bits);
+    put_u64(out, s.comm_bytes);
+    put_u64(out, s.seconds_bits);
+    put_u64(out, s.sampled);
+    put_u64(out, s.completed);
+    put_u64(out, s.leaf_completed);
+    put_u64(out, s.failed);
+    put_u64(out, s.stragglers);
+    put_u64(out, s.peak_comm_bytes);
+}
+
+fn dtype_code(d: DType) -> u8 {
+    match d {
+        DType::F32 => 0,
+        DType::F16 => 1,
+        DType::BF16 => 2,
+        DType::U8 => 3,
+        DType::I32 => 4,
+        DType::U4x2 => 5,
+        DType::Fx128 => 6,
+    }
+}
+
+fn dtype_from_code(c: u8) -> Option<DType> {
+    Some(match c {
+        0 => DType::F32,
+        1 => DType::F16,
+        2 => DType::BF16,
+        3 => DType::U8,
+        4 => DType::I32,
+        5 => DType::U4x2,
+        6 => DType::Fx128,
+        _ => return None,
+    })
+}
+
+fn put_container(out: &mut Vec<u8>, c: &ParamContainer) {
+    put_u32(out, c.len().min(u32::MAX as usize) as u32);
+    for (name, t) in c.iter() {
+        put_str(out, name);
+        out.push(dtype_code(t.meta.dtype));
+        out.push(t.meta.shape.len().min(u8::MAX as usize) as u8);
+        for &d in &t.meta.shape {
+            put_u64(out, d as u64);
+        }
+        put_u64(out, t.data.len() as u64);
+        out.extend_from_slice(&t.data);
+    }
+}
+
+/// Encode one record payload (tag byte + body, no framing).
+pub fn encode_record(rec: &Record) -> Vec<u8> {
+    let mut out = Vec::new();
+    match rec {
+        Record::JobMeta { seed, rounds, clients, buffered } => {
+            out.push(1);
+            put_u64(&mut out, *seed);
+            put_u64(&mut out, *rounds);
+            put_u64(&mut out, *clients);
+            out.push(u8::from(*buffered));
+        }
+        Record::RoundStart { round, attempt, selected } => {
+            out.push(2);
+            put_u64(&mut out, *round);
+            put_u32(&mut out, *attempt);
+            put_u32(&mut out, selected.len().min(u32::MAX as usize) as u32);
+            for &s in selected {
+                put_u32(&mut out, s);
+            }
+        }
+        Record::RoundComplete { stats, global } => {
+            out.push(3);
+            put_stats(&mut out, stats);
+            put_container(&mut out, global);
+        }
+        Record::VersionIssued { client, version } => {
+            out.push(4);
+            put_u64(&mut out, *version);
+            put_str(&mut out, client);
+        }
+        Record::VersionRetired { client } => {
+            out.push(5);
+            put_str(&mut out, client);
+        }
+        Record::SnapshotSealed { version, stats, global } => {
+            out.push(6);
+            put_u64(&mut out, *version);
+            put_stats(&mut out, stats);
+            put_container(&mut out, global);
+        }
+        Record::FoldApplied { client, version, tau } => {
+            out.push(7);
+            put_u64(&mut out, *version);
+            put_u64(&mut out, *tau);
+            put_str(&mut out, client);
+        }
+        Record::Quarantined { client, version } => {
+            out.push(8);
+            put_u64(&mut out, *version);
+            put_str(&mut out, client);
+        }
+        Record::SessionFailed { client } => {
+            out.push(9);
+            put_str(&mut out, client);
+        }
+    }
+    out
+}
+
+/// Frame a payload (`len`, `crc32`, bytes) onto `out`.
+pub fn frame_payload(out: &mut Vec<u8>, payload: &[u8]) {
+    put_u32(out, payload.len().min(u32::MAX as usize) as u32);
+    put_u32(out, crc32fast::hash(payload));
+    out.extend_from_slice(payload);
+}
+
+// -- decode (panic-free, allocation-capped) -----------------------------------
+
+/// Byte cursor over a record payload. Every read is bounds-checked; no
+/// method panics on any input.
+struct Rd<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, at: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let v = self.b.get(self.at).copied().ok_or_else(|| anyhow!("journal: short read (u8)"))?;
+        self.at += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let v = get_u16(self.b, self.at).ok_or_else(|| anyhow!("journal: short read (u16)"))?;
+        self.at += 2;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let v = get_u32(self.b, self.at).ok_or_else(|| anyhow!("journal: short read (u32)"))?;
+        self.at += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let v = get_u64(self.b, self.at).ok_or_else(|| anyhow!("journal: short read (u64)"))?;
+        self.at += 8;
+        Ok(v)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.at.checked_add(n).ok_or_else(|| anyhow!("journal: length overflow"))?;
+        let v = self.b.get(self.at..end).ok_or_else(|| anyhow!("journal: short read ({n} bytes)"))?;
+        self.at = end;
+        Ok(v)
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.at)
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("journal: {} trailing bytes after record", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+fn rd_str(r: &mut Rd) -> Result<String> {
+    let n = r.u16()? as usize;
+    if n > MAX_NAME_BYTES {
+        bail!("journal: name length {n} exceeds cap {MAX_NAME_BYTES}");
+    }
+    String::from_utf8(r.bytes(n)?.to_vec()).map_err(|_| anyhow!("journal: name not utf-8"))
+}
+
+fn rd_stats(r: &mut Rd) -> Result<StatsRec> {
+    Ok(StatsRec {
+        round: r.u64()?,
+        mean_loss_bits: r.u32()?,
+        comm_bytes: r.u64()?,
+        seconds_bits: r.u64()?,
+        sampled: r.u64()?,
+        completed: r.u64()?,
+        leaf_completed: r.u64()?,
+        failed: r.u64()?,
+        stragglers: r.u64()?,
+        peak_comm_bytes: r.u64()?,
+    })
+}
+
+fn rd_container(r: &mut Rd) -> Result<ParamContainer> {
+    let n = r.u32()? as usize;
+    // Every entry costs ≥ 12 bytes on the wire; reject counts the
+    // remaining payload cannot possibly hold before any allocation.
+    if n > r.remaining() / 12 + 1 {
+        bail!("journal: container declares {n} entries beyond payload");
+    }
+    let mut c = ParamContainer::new();
+    for _ in 0..n {
+        let name = rd_str(r)?;
+        let dtype = dtype_from_code(r.u8()?).ok_or_else(|| anyhow!("journal: unknown dtype code"))?;
+        let ndims = r.u8()? as usize;
+        if ndims > MAX_DIMS {
+            bail!("journal: {ndims} dims exceeds cap {MAX_DIMS}");
+        }
+        let mut shape: Vec<usize> = bounded_prealloc(ndims, MAX_DIMS);
+        let mut elems: usize = 1;
+        for _ in 0..ndims {
+            let d = r.u64()?;
+            let d = usize::try_from(d).map_err(|_| anyhow!("journal: dim overflows usize"))?;
+            elems = elems.checked_mul(d).ok_or_else(|| anyhow!("journal: element count overflow"))?;
+            shape.push(d);
+        }
+        let expect = match dtype {
+            DType::U4x2 => elems.div_ceil(2),
+            d => elems
+                .checked_mul(d.byte_size())
+                .ok_or_else(|| anyhow!("journal: byte length overflow"))?,
+        };
+        let data_len = r.u64()?;
+        let data_len =
+            usize::try_from(data_len).map_err(|_| anyhow!("journal: data length overflows usize"))?;
+        if data_len != expect {
+            bail!("journal: tensor '{name}' declares {data_len} bytes, shape implies {expect}");
+        }
+        let data = r.bytes(data_len)?.to_vec();
+        c.insert(name, Tensor { meta: TensorMeta::new(shape, dtype), data });
+    }
+    Ok(c)
+}
+
+/// Decode one record payload (tag byte + body). Hostile input yields
+/// `Err`, never a panic or an unbounded allocation.
+pub fn decode_record(payload: &[u8]) -> Result<Record> {
+    let mut r = Rd::new(payload);
+    let rec = match r.u8()? {
+        1 => Record::JobMeta {
+            seed: r.u64()?,
+            rounds: r.u64()?,
+            clients: r.u64()?,
+            buffered: r.u8()? != 0,
+        },
+        2 => {
+            let round = r.u64()?;
+            let attempt = r.u32()?;
+            let n = r.u32()? as usize;
+            if n > r.remaining() / 4 {
+                bail!("journal: RoundStart declares {n} clients beyond payload");
+            }
+            let mut selected: Vec<u32> = bounded_prealloc(n, MAX_SELECTED_PREALLOC);
+            for _ in 0..n {
+                selected.push(r.u32()?);
+            }
+            Record::RoundStart { round, attempt, selected }
+        }
+        3 => Record::RoundComplete { stats: rd_stats(&mut r)?, global: rd_container(&mut r)? },
+        4 => Record::VersionIssued { version: r.u64()?, client: rd_str(&mut r)? },
+        5 => Record::VersionRetired { client: rd_str(&mut r)? },
+        6 => Record::SnapshotSealed {
+            version: r.u64()?,
+            stats: rd_stats(&mut r)?,
+            global: rd_container(&mut r)?,
+        },
+        7 => Record::FoldApplied { version: r.u64()?, tau: r.u64()?, client: rd_str(&mut r)? },
+        8 => Record::Quarantined { version: r.u64()?, client: rd_str(&mut r)? },
+        9 => Record::SessionFailed { client: rd_str(&mut r)? },
+        t => bail!("journal: unknown record tag {t}"),
+    };
+    r.finish()?;
+    Ok(rec)
+}
+
+/// Scan a framed record region (the file body after [`MAGIC`]).
+///
+/// Returns the decoded prefix plus the byte offset of the first
+/// bad/short frame — the torn-tail boundary the file is truncated to
+/// before new appends. Corruption never propagates: the scan stops at
+/// the first frame whose length, CRC, or payload fails to validate.
+pub fn scan_records(body: &[u8]) -> (Vec<Record>, usize) {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    loop {
+        let Some(len) = get_u32(body, at) else { break };
+        let Some(crc) = get_u32(body, at + 4) else { break };
+        if len > MAX_RECORD_BYTES {
+            break;
+        }
+        let start = at + 8;
+        let Some(end) = start.checked_add(len as usize) else { break };
+        let Some(payload) = body.get(start..end) else { break };
+        if crc32fast::hash(payload) != crc {
+            break;
+        }
+        let Ok(rec) = decode_record(payload) else { break };
+        out.push(rec);
+        at = end;
+    }
+    (out, at)
+}
+
+// -- recovery -----------------------------------------------------------------
+
+/// State replayed from a journal, consumed by `Controller::run` /
+/// `run_buffered` to resume a job.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveredState {
+    /// `(seed, rounds, clients, buffered)` from the `JobMeta` record.
+    pub meta: Option<(u64, u64, u64, bool)>,
+    /// Sync rounds already checkpointed; resume at this round index.
+    pub next_round: u64,
+    /// Buffered versions already sealed; the accumulator resumes here.
+    pub version: u64,
+    /// Global weights at the last checkpoint.
+    pub global: Option<ParamContainer>,
+    /// Per-round / per-version stats replayed from checkpoints.
+    pub stats: Vec<RoundStats>,
+    /// Staleness values of folds committed by a seal. Folds journaled
+    /// after the last seal are *not* included — the reopened window
+    /// redoes them live, so replaying them would double-count.
+    pub staleness: Vec<u64>,
+    /// Quarantine events journaled (committed immediately).
+    pub quarantined: u64,
+    /// Session-failure events journaled (committed immediately).
+    pub failed: u64,
+    /// Records replayed (for logging/tests).
+    pub records: u64,
+}
+
+impl RecoveredState {
+    pub fn is_resume(&self) -> bool {
+        self.next_round > 0 || self.version > 0
+    }
+
+    /// Guard against resuming a journal written by a different job.
+    pub fn check_meta(&self, seed: u64, rounds: u64, clients: u64, buffered: bool) -> Result<()> {
+        let Some((js, jr, jc, jb)) = self.meta else { return Ok(()) };
+        if (js, jr, jc, jb) != (seed, rounds, clients, buffered) {
+            bail!(
+                "journal belongs to a different job: journal (seed {js:#x}, rounds {jr}, \
+                 clients {jc}, buffered {jb}) vs job (seed {seed:#x}, rounds {rounds}, \
+                 clients {clients}, buffered {buffered})"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Fold a decoded record sequence into a [`RecoveredState`].
+pub fn recover(records: &[Record]) -> RecoveredState {
+    let mut st = RecoveredState::default();
+    // Folds ride in a pending buffer and commit only when a seal
+    // confirms the window they entered survived to a checkpoint.
+    let mut pending_taus: Vec<u64> = Vec::new();
+    for rec in records {
+        match rec {
+            Record::JobMeta { seed, rounds, clients, buffered } => {
+                st.meta = Some((*seed, *rounds, *clients, *buffered));
+            }
+            Record::RoundStart { .. } | Record::VersionIssued { .. } | Record::VersionRetired { .. } => {}
+            Record::RoundComplete { stats, global } => {
+                st.next_round = stats.round + 1;
+                st.global = Some(global.clone());
+                st.stats.push(stats.to_stats());
+            }
+            Record::SnapshotSealed { version, stats, global } => {
+                st.version = *version;
+                st.global = Some(global.clone());
+                st.stats.push(stats.to_stats());
+                st.staleness.append(&mut pending_taus);
+            }
+            Record::FoldApplied { tau, .. } => pending_taus.push(*tau),
+            Record::Quarantined { .. } => st.quarantined += 1,
+            Record::SessionFailed { .. } => st.failed += 1,
+        }
+    }
+    st.records = records.len() as u64;
+    st
+}
+
+// -- file-backed writer -------------------------------------------------------
+
+/// Append-only journal file. Created by [`Journal::open`], which also
+/// returns the replayed record prefix and truncates any torn tail.
+#[derive(Debug)]
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+    fsync: FsyncPolicy,
+    records: u64,
+    crash_after: Option<u64>,
+}
+
+impl Journal {
+    /// Open (or create) a journal, replaying any existing records.
+    ///
+    /// A torn tail — a partially written final frame — is truncated
+    /// away so subsequent appends extend the last *good* record. A file
+    /// with a wrong magic is refused outright rather than clobbered.
+    pub fn open(path: &Path, fsync: FsyncPolicy) -> Result<(Journal, Vec<Record>)> {
+        let existing = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e).with_context(|| format!("read journal {}", path.display())),
+        };
+        let (records, keep) = if existing.len() < MAGIC.len() {
+            // Empty, or a crash landed mid-magic-write at creation time:
+            // nothing usable is in the file, so start it over.
+            (Vec::new(), 0usize)
+        } else {
+            let head = existing.get(..MAGIC.len());
+            if head != Some(&MAGIC[..]) {
+                bail!("journal {}: bad magic (not a flare journal)", path.display());
+            }
+            let body = existing.get(MAGIC.len()..).unwrap_or(&[]);
+            let (recs, good) = scan_records(body);
+            (recs, MAGIC.len() + good)
+        };
+        let mut file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .write(true)
+            .truncate(false)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        file.set_len(keep as u64)
+            .with_context(|| format!("truncate torn tail of {}", path.display()))?;
+        file.seek(SeekFrom::End(0))?;
+        let mut j = Journal {
+            file,
+            path: path.to_path_buf(),
+            fsync,
+            records: records.len() as u64,
+            crash_after: None,
+        };
+        if keep == 0 {
+            j.file.write_all(&MAGIC).with_context(|| format!("write magic to {}", path.display()))?;
+            if !matches!(fsync, FsyncPolicy::Never) {
+                j.file.sync_data()?;
+            }
+        }
+        Ok((j, records))
+    }
+
+    /// Records appended or replayed so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Chaos hook: make `append` return an error (simulating a
+    /// coordinator kill) once `n` total records have been written. The
+    /// failing record itself IS durable — a real `SIGKILL` lands after
+    /// an arbitrary number of completed writes, and the recovery path
+    /// must cope with any prefix.
+    pub fn set_crash_after(&mut self, n: u64) {
+        self.crash_after = Some(n);
+    }
+
+    /// Append one record, honouring the fsync policy, then trip the
+    /// chaos hook if armed.
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        // Already tripped: a killed process writes nothing more. The
+        // buffered driver keeps draining its event queue while winding
+        // down, and those post-crash events must not become durable.
+        if let Some(n) = self.crash_after {
+            if self.records >= n {
+                bail!(
+                    "chaos: coordinator is down (crashed after {n} journal records, {})",
+                    self.path.display()
+                );
+            }
+        }
+        let payload = encode_record(rec);
+        let mut frame = Vec::new();
+        frame_payload(&mut frame, &payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("append to journal {}", self.path.display()))?;
+        match self.fsync {
+            FsyncPolicy::Always => self.file.sync_data()?,
+            FsyncPolicy::Seal if rec.is_checkpoint() => self.file.sync_data()?,
+            _ => {}
+        }
+        self.records += 1;
+        if let Some(n) = self.crash_after {
+            if self.records >= n {
+                bail!(
+                    "chaos: induced coordinator crash after {} journal records ({})",
+                    self.records,
+                    self.path.display()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Force an fsync regardless of policy (used at clean shutdown).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().with_context(|| format!("sync journal {}", self.path.display()))
+    }
+}
+
+/// Append to an optional journal — the no-journal configuration is a
+/// no-op, so call sites stay unconditional.
+pub fn append_opt(j: &mut Option<Journal>, rec: &Record) -> Result<()> {
+    match j {
+        Some(j) => j.append(rec),
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    fn tiny_global() -> ParamContainer {
+        let mut c = ParamContainer::new();
+        c.insert("w", Tensor::from_f32(vec![2, 3], vec![0.5, -1.25, 3.0, 0.0, f32::MIN_POSITIVE, -0.0]));
+        c.insert("b", Tensor::from_f32(vec![3], vec![1.0, 2.0, 3.0]));
+        c
+    }
+
+    fn stats_rec() -> StatsRec {
+        StatsRec {
+            round: 3,
+            mean_loss_bits: 0.625f32.to_bits(),
+            comm_bytes: 4096,
+            seconds_bits: 1.5f64.to_bits(),
+            sampled: 4,
+            completed: 3,
+            leaf_completed: 5,
+            failed: 1,
+            stragglers: 0,
+            peak_comm_bytes: 2048,
+        }
+    }
+
+    fn all_variants() -> Vec<Record> {
+        vec![
+            Record::JobMeta { seed: 0xF1A2E, rounds: 8, clients: 4, buffered: false },
+            Record::RoundStart { round: 3, attempt: 1, selected: vec![0, 2, 3] },
+            Record::RoundComplete { stats: stats_rec(), global: tiny_global() },
+            Record::VersionIssued { client: "site-1".into(), version: 7 },
+            Record::VersionRetired { client: "site-2".into() },
+            Record::SnapshotSealed { version: 7, stats: stats_rec(), global: tiny_global() },
+            Record::FoldApplied { client: "site-1".into(), version: 7, tau: 2 },
+            Record::Quarantined { client: "evil".into(), version: 6 },
+            Record::SessionFailed { client: "site-3".into() },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_every_variant() {
+        for rec in all_variants() {
+            let enc = encode_record(&rec);
+            let back = decode_record(&enc).expect("roundtrip decode");
+            assert_eq!(back, rec);
+            // Canonical: re-encode is byte-identical.
+            assert_eq!(encode_record(&back), enc);
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut enc = encode_record(&Record::SessionFailed { client: "x".into() });
+        enc.push(0);
+        assert!(decode_record(&enc).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(decode_record(&[42]).is_err());
+        assert!(decode_record(&[]).is_err());
+    }
+
+    #[test]
+    fn hostile_lengths_rejected() {
+        // Container declaring absurd entry count.
+        let mut p = vec![3u8]; // RoundComplete
+        for _ in 0..10 {
+            put_u64(&mut p, 0); // stats-ish filler: 10 u64s = 80 bytes, but
+        }
+        // stats is 4+76 bytes; just check we error, not panic.
+        put_u32(&mut p, u32::MAX); // entries
+        let _ = decode_record(&p);
+
+        // Tensor whose dims overflow elems.
+        let mut p = vec![3u8];
+        put_stats(&mut p, &stats_rec());
+        put_u32(&mut p, 1);
+        put_str(&mut p, "w");
+        p.push(0); // f32
+        p.push(4); // 4 dims
+        for _ in 0..4 {
+            put_u64(&mut p, u64::MAX / 2);
+        }
+        put_u64(&mut p, 16);
+        assert!(decode_record(&p).is_err());
+    }
+
+    #[test]
+    fn scan_stops_at_torn_tail() {
+        let recs = all_variants();
+        let mut body = Vec::new();
+        for r in &recs {
+            frame_payload(&mut body, &encode_record(r));
+        }
+        let full_len = body.len();
+        // Whole body decodes.
+        let (got, good) = scan_records(&body);
+        assert_eq!(got, recs);
+        assert_eq!(good, full_len);
+        // Torn tail: cut mid-final-record.
+        let cut = full_len - 3;
+        let (got, good) = scan_records(&body[..cut]);
+        assert_eq!(got.len(), recs.len() - 1);
+        assert!(good <= cut);
+        // Bytes after the boundary are ignored garbage.
+        let mut garbled = body[..good].to_vec();
+        garbled.extend_from_slice(&[0xFF; 7]);
+        let (got2, good2) = scan_records(&garbled);
+        assert_eq!(got2.len(), got.len());
+        assert_eq!(good2, good);
+    }
+
+    #[test]
+    fn scan_stops_at_bad_crc() {
+        let mut body = Vec::new();
+        frame_payload(&mut body, &encode_record(&Record::SessionFailed { client: "a".into() }));
+        let boundary = body.len();
+        frame_payload(&mut body, &encode_record(&Record::SessionFailed { client: "b".into() }));
+        // Flip one payload byte of the second record.
+        let last = body.len() - 1;
+        body[last] ^= 0x40;
+        let (got, good) = scan_records(&body);
+        assert_eq!(got.len(), 1);
+        assert_eq!(good, boundary);
+    }
+
+    #[test]
+    fn scan_rejects_huge_declared_length() {
+        let mut body = Vec::new();
+        put_u32(&mut body, u32::MAX); // len way over MAX_RECORD_BYTES
+        put_u32(&mut body, 0);
+        body.extend_from_slice(&[0u8; 64]);
+        let (got, good) = scan_records(&body);
+        assert!(got.is_empty());
+        assert_eq!(good, 0);
+    }
+
+    #[test]
+    fn recover_commits_folds_only_at_seal() {
+        let g = tiny_global();
+        let recs = vec![
+            Record::JobMeta { seed: 1, rounds: 4, clients: 2, buffered: true },
+            Record::FoldApplied { client: "a".into(), version: 0, tau: 0 },
+            Record::FoldApplied { client: "b".into(), version: 0, tau: 1 },
+            Record::SnapshotSealed { version: 1, stats: stats_rec(), global: g.clone() },
+            Record::FoldApplied { client: "a".into(), version: 1, tau: 0 },
+            Record::Quarantined { client: "evil".into(), version: 1 },
+            Record::SessionFailed { client: "b".into() },
+        ];
+        let st = recover(&recs);
+        assert_eq!(st.version, 1);
+        assert_eq!(st.staleness, vec![0, 1], "post-seal fold must not replay");
+        assert_eq!(st.quarantined, 1);
+        assert_eq!(st.failed, 1);
+        assert!(st.is_resume());
+        assert_eq!(st.stats.len(), 1);
+        assert_eq!(st.global.as_ref().map(|c| c.max_abs_diff(&g)), Some(0.0));
+        st.check_meta(1, 4, 2, true).expect("matching meta");
+        assert!(st.check_meta(2, 4, 2, true).is_err());
+        assert!(st.check_meta(1, 4, 2, false).is_err());
+    }
+
+    #[test]
+    fn recover_sync_round_checkpoints() {
+        let g = tiny_global();
+        let recs = vec![
+            Record::JobMeta { seed: 1, rounds: 4, clients: 2, buffered: false },
+            Record::RoundStart { round: 0, attempt: 0, selected: vec![0, 1] },
+            Record::RoundComplete { stats: StatsRec { round: 0, ..stats_rec() }, global: g.clone() },
+            Record::RoundStart { round: 1, attempt: 0, selected: vec![1] },
+        ];
+        let st = recover(&recs);
+        assert_eq!(st.next_round, 1);
+        assert_eq!(st.stats.len(), 1);
+        assert_eq!(st.version, 0);
+    }
+
+    #[test]
+    fn file_open_append_reopen_and_torn_truncate() {
+        let dir = std::env::temp_dir().join(format!("flare_journal_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("t.journal");
+        let _ = std::fs::remove_file(&path);
+
+        let (mut j, recs) = Journal::open(&path, FsyncPolicy::Seal).expect("create");
+        assert!(recs.is_empty());
+        for r in all_variants() {
+            j.append(&r).expect("append");
+        }
+        j.sync().expect("sync");
+        drop(j);
+
+        // Reopen: full replay.
+        let (j2, recs) = Journal::open(&path, FsyncPolicy::Seal).expect("reopen");
+        assert_eq!(recs, all_variants());
+        assert_eq!(j2.records(), all_variants().len() as u64);
+        drop(j2);
+
+        // Tear the tail, reopen: last record dropped, file truncated.
+        let bytes = std::fs::read(&path).expect("read");
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).expect("tear");
+        let (mut j3, recs) = Journal::open(&path, FsyncPolicy::Never).expect("reopen torn");
+        assert_eq!(recs.len(), all_variants().len() - 1);
+        // Appending after truncation yields a clean journal again.
+        j3.append(&Record::SessionFailed { client: "z".into() }).expect("append post-tear");
+        drop(j3);
+        let (_, recs) = Journal::open(&path, FsyncPolicy::Always).expect("reopen 3");
+        assert_eq!(recs.len(), all_variants().len());
+        assert_eq!(recs.last(), Some(&Record::SessionFailed { client: "z".into() }));
+
+        // Wrong magic refused.
+        let bad = dir.join("bad.journal");
+        std::fs::write(&bad, b"NOTAJOURNAL_____").expect("write bad");
+        assert!(Journal::open(&bad, FsyncPolicy::Seal).is_err());
+
+        // A crash mid-magic-write leaves < 8 bytes: treated as empty,
+        // not refused — the restart must be able to proceed.
+        let torn_magic = dir.join("torn_magic.journal");
+        std::fs::write(&torn_magic, &MAGIC[..5]).expect("write torn magic");
+        let (mut j4, recs) = Journal::open(&torn_magic, FsyncPolicy::Never).expect("open torn magic");
+        assert!(recs.is_empty());
+        j4.append(&Record::SessionFailed { client: "w".into() }).expect("append post-torn-magic");
+        drop(j4);
+        let (_, recs) = Journal::open(&torn_magic, FsyncPolicy::Never).expect("reopen torn magic");
+        assert_eq!(recs.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_hook_fires_and_record_is_durable() {
+        let dir = std::env::temp_dir().join(format!("flare_journal_crash_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("mkdir");
+        let path = dir.join("c.journal");
+        let _ = std::fs::remove_file(&path);
+        let (mut j, _) = Journal::open(&path, FsyncPolicy::Always).expect("create");
+        j.set_crash_after(2);
+        j.append(&Record::SessionFailed { client: "a".into() }).expect("first append ok");
+        let err = j.append(&Record::SessionFailed { client: "b".into() }).expect_err("chaos");
+        assert!(err.to_string().contains("chaos"), "{err}");
+        // A killed process writes nothing more: post-crash appends fail
+        // without touching the file.
+        let err2 = j.append(&Record::SessionFailed { client: "c".into() }).expect_err("down");
+        assert!(err2.to_string().contains("chaos"), "{err2}");
+        drop(j);
+        // Both pre-crash records survived the "crash"; nothing after.
+        let (_, recs) = Journal::open(&path, FsyncPolicy::Never).expect("reopen");
+        assert_eq!(recs.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -8,6 +8,7 @@ pub mod aggregator;
 pub mod buffered;
 pub mod controller;
 pub mod executor;
+pub mod journal;
 pub mod protocol;
 pub mod simulator;
 

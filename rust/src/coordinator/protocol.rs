@@ -18,8 +18,14 @@ pub enum CtrlMsg {
     /// `crate::topology`). Absent on the wire means 1, so old peers
     /// interoperate.
     Register { client: String, subtree: usize },
-    /// Server → client: accepted; carries the job config JSON.
-    Welcome { job: Json },
+    /// Server → client: accepted; carries the job config JSON plus, on
+    /// a journal-recovered coordinator, a `resume` object
+    /// (`{"next_round": N, "version": V}`) describing the recovered
+    /// round state so re-registering clients/relays can reconcile
+    /// (e.g. discard spool artifacts superseded by the restart). `Null`
+    /// on a fresh run; absent on the wire means `Null`, so old peers
+    /// interoperate.
+    Welcome { job: Json, resume: Json },
     /// Server → client: a task follows (weights object on the wire next).
     Task {
         round: usize,
@@ -89,9 +95,10 @@ impl CtrlMsg {
                 ("client", Json::str(client.clone())),
                 ("subtree", Json::num(*subtree as f64)),
             ]),
-            CtrlMsg::Welcome { job } => Json::obj(vec![
+            CtrlMsg::Welcome { job, resume } => Json::obj(vec![
                 ("op", Json::str("welcome")),
                 ("job", job.clone()),
+                ("resume", resume.clone()),
             ]),
             CtrlMsg::Task {
                 round,
@@ -181,6 +188,7 @@ impl CtrlMsg {
             },
             "welcome" => CtrlMsg::Welcome {
                 job: j.get("job").cloned().unwrap_or(Json::Null),
+                resume: j.get("resume").cloned().unwrap_or(Json::Null),
             },
             "task" => CtrlMsg::Task {
                 round: j
@@ -284,6 +292,14 @@ mod tests {
             },
             CtrlMsg::Welcome {
                 job: Json::obj(vec![("rounds", Json::num(5.0))]),
+                resume: Json::Null,
+            },
+            CtrlMsg::Welcome {
+                job: Json::obj(vec![("rounds", Json::num(5.0))]),
+                resume: Json::obj(vec![
+                    ("next_round", Json::num(2.0)),
+                    ("version", Json::num(0.0)),
+                ]),
             },
             CtrlMsg::Task {
                 round: 3,

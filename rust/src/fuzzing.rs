@@ -16,6 +16,7 @@
 //! oracle is cheap, the fn asserts it, so logic regressions (not just
 //! crashes) surface as fuzz findings.
 
+use crate::coordinator::journal;
 use crate::sfm::frame::{Frame, HEADER_LEN};
 use crate::streaming::wire;
 
@@ -45,6 +46,36 @@ pub fn fuzz_entry_decode(data: &[u8]) {
         assert_eq!(back.name(), entry.name(), "entry name did not roundtrip");
         assert!(r2.is_empty(), "re-decode left trailing bytes");
     }
+}
+
+/// Coordinator WAL decode on arbitrary bytes: the single-record payload
+/// decoder and the framed multi-record scanner, with an encode→decode
+/// oracle on the accept path. Hostile shapes this hunts: truncated
+/// records, bad CRCs, huge declared lengths (payload, name, shape, data),
+/// and mid-write torn tails — none may panic or allocate unboundedly.
+pub fn fuzz_journal(data: &[u8]) {
+    // Single-record payload decode (the bytes inside one CRC frame).
+    if let Ok(rec) = journal::decode_record(data) {
+        // Accepted records must re-encode canonically and re-decode to
+        // the same value (scan framing included).
+        let enc = journal::encode_record(&rec);
+        let back = journal::decode_record(&enc).expect("re-encoded record must re-decode");
+        assert_eq!(back, rec, "journal record did not roundtrip");
+        let mut framed = Vec::new();
+        journal::frame_payload(&mut framed, &enc);
+        let (recs, consumed) = journal::scan_records(&framed);
+        assert_eq!(consumed, framed.len(), "scanner rejected a canonical frame");
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0], rec);
+    }
+    // Framed stream scan: arbitrary bytes viewed as a journal body. The
+    // scanner stops at the first bad frame; the good prefix must itself
+    // re-scan to the same records (truncate-on-open invariant).
+    let (recs, consumed) = journal::scan_records(data);
+    assert!(consumed <= data.len());
+    let (again, consumed2) = journal::scan_records(&data[..consumed]);
+    assert_eq!(consumed2, consumed, "good prefix must scan fully");
+    assert_eq!(again, recs, "prefix re-scan must agree");
 }
 
 /// Zigzag LEB128 varint decode on arbitrary bytes, plus an

@@ -50,7 +50,9 @@ COMMANDS:
                 --aggregation-mode sync|buffered --buffer-k 4
                 --staleness-alpha 0.5 --session-engine threaded|reactor]
   server        --listen 127.0.0.1:7777 --job <file>
+                [--journal run.wal --journal-fsync never|seal|always]
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
+                [--transfer-timeout 600  (reconnect budget)]
   relay         --connect 127.0.0.1:7777 --listen 127.0.0.1:7778 --name relay-1
                 [--children N | --clients N --branching 4 --index 0] --job <file>
   train         --model mini --rounds 5 --local-steps 10 [--trainer pjrt|mock]
@@ -169,6 +171,16 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
     }
     // Quantization kernel parallelism (0 = auto).
     job.encode_threads = args.get_usize("encode-threads", job.encode_threads);
+    // Crash-recovery journal: `--journal run.wal` enables the durable
+    // round/version WAL; `--journal-fsync never|seal|always` trades
+    // durability for append throughput (default: fsync at seal points).
+    if let Some(p) = args.get("journal") {
+        job.journal.path = p.to_string();
+    }
+    if let Some(f) = args.get("journal-fsync") {
+        job.journal.fsync = flare::config::FsyncPolicy::from_name(f)
+            .ok_or_else(|| anyhow!("bad journal-fsync '{f}' (never|seal|always)"))?;
+    }
     job.validate()?;
     // The kernels read a process-global knob (see config::JobConfig).
     quant::set_encode_threads(job.encode_threads);
@@ -294,8 +306,15 @@ fn cmd_server(args: &Args) -> Result<()> {
         FilterSet::two_way_quantization(job.quant),
         spool,
     );
-    for _ in 0..job.clients {
-        let driver = TcpDriver::accept(&listener)?;
+    // Replay the journal (if configured) before accepting anyone, so
+    // reconnecting clients see the recovered round/version in Welcome.
+    controller.recover_journal()?;
+    for i in 0..job.clients {
+        let driver = TcpDriver::accept_with_retry(
+            &listener,
+            job.transfer_timeout(),
+            job.seed ^ i as u64,
+        )?;
         let ep = SfmEndpoint::new(Box::new(driver)).with_chunk(job.chunk_bytes as usize);
         controller.accept_client(ep, Some(std::time::Duration::from_secs(300)))?;
     }
@@ -314,38 +333,75 @@ fn cmd_client(args: &Args) -> Result<()> {
     let addr = args.get_or("connect", "127.0.0.1:7777");
     let name = args.get_or("name", "site-1").to_string();
     let trainer_kind = args.get_or("trainer", "pjrt");
-    let driver = TcpDriver::connect(addr)?;
-    let ep = SfmEndpoint::new(Box::new(driver));
     let spool = std::env::temp_dir().join(format!("flare_cli_{}", std::process::id()));
     std::fs::create_dir_all(&spool)?;
+    // Reconnect loop: a session error (coordinator crash, broken pipe)
+    // re-registers under jittered exponential backoff until the budget
+    // is spent. A journal-recovering server supersedes the dropped
+    // session's work; duplicates are quarantined by its version ledger.
+    let budget = std::time::Duration::from_secs(args.get_u64("transfer-timeout", 600));
+    let seed = name_index(&name) as u64 ^ 0xC11E_4475;
+    let mut backoff = flare::util::backoff::Backoff::for_transfer(seed, budget);
+    loop {
+        match run_client_session(addr, &name, trainer_kind, &spool, budget, seed) {
+            Ok(rounds) => {
+                println!("completed {rounds} task rounds");
+                return Ok(());
+            }
+            Err(e) => match backoff.next_delay() {
+                Some(d) => {
+                    log::warn!("client session failed ({e:#}); reconnecting in {d:?}");
+                    std::thread::sleep(d);
+                }
+                None => return Err(e.context("client gave up reconnecting")),
+            },
+        }
+    }
+}
+
+/// One registration + task-execution session against the server.
+fn run_client_session(
+    addr: &str,
+    name: &str,
+    trainer_kind: &str,
+    spool: &std::path::Path,
+    budget: std::time::Duration,
+    seed: u64,
+) -> Result<usize> {
+    let driver = TcpDriver::connect_with_retry(addr, budget, seed)?;
+    let ep = SfmEndpoint::new(Box::new(driver));
     // Register first so the server's welcome tells us the job config.
     let probe = Executor::new(
-        name.clone(),
+        name.to_string(),
         ep,
         FilterSet::new(),
         MockTrainer::new(flare::tensor::ParamContainer::new(), 0.0, 1),
-        spool.clone(),
+        spool.to_path_buf(),
     );
-    let job_json = probe.register()?;
+    let (job_json, resume) = probe.register_full()?;
     let job = JobConfig::from_json(&job_json)?;
     // The server's job config carries the kernel parallelism knob.
     quant::set_encode_threads(job.encode_threads);
+    if !matches!(resume, flare::util::json::Json::Null) {
+        // The server resumed from its journal: anything spooled before
+        // its restart belongs to a superseded round and cannot complete.
+        let swept = streaming::object::sweep_spool(spool);
+        println!("server resumed from journal; swept {swept} stale spool artifact(s)");
+    }
     println!("registered with server; job '{}' model '{}'", job.name, job.model);
-    let trainer = make_any_trainer(&job, trainer_kind, name_index(&name))?;
+    let trainer = make_any_trainer(&job, trainer_kind, name_index(name))?;
     let mut exec = Executor::new(
-        name,
+        name.to_string(),
         probe.ep,
         FilterSet::two_way_quantization(job.quant),
         trainer,
-        spool,
+        spool.to_path_buf(),
     )
     .with_mode(job.streaming)
     .with_reliable(job.reliable)
     .with_entry_fold(job.entry_fold)
     .with_timeout(job.transfer_timeout());
-    let rounds = exec.run()?;
-    println!("completed {rounds} task rounds");
-    Ok(())
+    exec.run()
 }
 
 /// How many child connections this relay should accept: `--children N`
@@ -410,7 +466,11 @@ fn cmd_relay(args: &Args) -> Result<()> {
         let driver = TcpDriver::accept(&listener)?;
         children.push(SfmEndpoint::new(Box::new(driver)).with_chunk(job.chunk_bytes as usize));
     }
-    let driver = TcpDriver::connect(upstream).with_context(|| format!("connect {upstream}"))?;
+    // The upstream coordinator may itself be restarting — ride out the
+    // refused-connection window under the shared backoff schedule.
+    let driver =
+        TcpDriver::connect_with_retry(upstream, job.transfer_timeout(), job.seed ^ 0x4e1a)
+            .with_context(|| format!("connect {upstream}"))?;
     let up = SfmEndpoint::new(Box::new(driver)).with_chunk(job.chunk_bytes as usize);
     let spool = std::env::temp_dir().join(format!("flare_relay_{}", std::process::id()));
     std::fs::create_dir_all(&spool)?;

@@ -36,10 +36,50 @@ impl TcpDriver {
         })
     }
 
-    /// Connect to a listening endpoint.
+    /// Connect to a listening endpoint (single attempt).
     pub fn connect(addr: &str) -> Result<TcpDriver> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
         Self::from_stream(stream)
+    }
+
+    /// Connect with jittered exponential backoff: retries refused or
+    /// unreachable connects until `budget` elapses (total wait, not per
+    /// attempt). This is the reconnect primitive for clients/relays
+    /// racing a restarting coordinator — the listener may not be bound
+    /// yet when the process comes back up. `seed` keeps the retry
+    /// schedule deterministic per caller.
+    pub fn connect_with_retry(addr: &str, budget: Duration, seed: u64) -> Result<TcpDriver> {
+        let mut backoff = crate::util::backoff::Backoff::for_transfer(seed, budget);
+        let r = backoff.retry(|| Self::connect(addr));
+        if backoff.attempts() > 1 {
+            match &r {
+                Ok(_) => log::info!(
+                    "connect {addr}: succeeded on attempt {} after {:?} of backoff",
+                    backoff.attempts(),
+                    backoff.slept()
+                ),
+                Err(_) => log::warn!(
+                    "connect {addr}: gave up after {} attempt(s) and {:?} of backoff",
+                    backoff.attempts(),
+                    backoff.slept()
+                ),
+            }
+        }
+        r.with_context(|| format!("connect {addr} (with retry)"))
+    }
+
+    /// Accept one connection, retrying transient accept failures (e.g.
+    /// EMFILE pressure, ECONNABORTED races) under the same jittered
+    /// backoff schedule until `budget` elapses.
+    pub fn accept_with_retry(
+        listener: &TcpListener,
+        budget: Duration,
+        seed: u64,
+    ) -> Result<TcpDriver> {
+        let mut backoff = crate::util::backoff::Backoff::for_transfer(seed, budget);
+        backoff
+            .retry(|| Self::accept(listener))
+            .context("accept (with retry)")
     }
 
     /// Accept one connection from a listener.
@@ -234,6 +274,44 @@ mod tests {
             .send(Frame::new(FrameType::Ctrl, 1, 0, b"{}".to_vec()))
             .unwrap();
         assert_eq!(server.recv().unwrap().payload, b"{}".to_vec());
+    }
+
+    #[test]
+    fn connect_with_retry_waits_for_late_listener() {
+        // Reserve an ephemeral port, drop the listener, rebind after a
+        // delay: the retrying connect must ride out the refused window —
+        // the shape of a client reconnecting to a restarting coordinator.
+        let probe = loopback_listener().unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let srv_addr = addr.clone();
+        let srv = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            let listener = TcpListener::bind(&srv_addr).unwrap();
+            TcpDriver::accept(&listener).unwrap().recv().unwrap()
+        });
+        let client =
+            TcpDriver::connect_with_retry(&addr, Duration::from_secs(10), 42).unwrap();
+        client
+            .send(Frame::new(FrameType::Ctrl, 1, 0, b"{}".to_vec()))
+            .unwrap();
+        assert_eq!(srv.join().unwrap().payload, b"{}".to_vec());
+    }
+
+    #[test]
+    fn connect_with_retry_exhausts_budget() {
+        // Nothing ever listens: the retry loop must stop once the total
+        // sleep budget is spent and surface the last connect error.
+        let probe = loopback_listener().unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let t0 = std::time::Instant::now();
+        let r = TcpDriver::connect_with_retry(&addr, Duration::from_millis(200), 7);
+        assert!(r.is_err());
+        assert!(
+            t0.elapsed() >= Duration::from_millis(100),
+            "gave up before spending the budget"
+        );
     }
 
     #[test]

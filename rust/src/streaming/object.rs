@@ -1075,6 +1075,35 @@ pub(crate) fn spool_path(dir: &Path, tag: &str) -> PathBuf {
     ))
 }
 
+/// Remove stale transfer artifacts from a spool directory: orphaned
+/// `<dest>.part` data files and `.part.json` resume manifests, plus
+/// `flare_spool_*` / `flare_rx_resume_*` temporaries whose transfers
+/// will never complete. Called by the coordinator when a run finishes
+/// cleanly and when a journal-recovered run supersedes pre-restart
+/// rounds; per-file errors are ignored (another process may race the
+/// same cleanup). Returns the number of files removed.
+pub fn sweep_spool(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut removed = 0usize;
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stale = name.ends_with(".part")
+            || name.ends_with(".part.json")
+            || name.starts_with("flare_spool_")
+            || name.starts_with("flare_rx_resume_");
+        if !stale {
+            continue;
+        }
+        if e.file_type().map(|t| t.is_file()).unwrap_or(false)
+            && std::fs::remove_file(e.path()).is_ok()
+        {
+            removed += 1;
+        }
+    }
+    removed
+}
+
 /// Serialize a message to a spool file entry-by-entry (O(entry) memory,
 /// which for fairness with the paper is the same bound as container
 /// streaming; the subsequent wire transfer is O(chunk)).

@@ -256,6 +256,10 @@ impl RelayNode {
             ep.send_ctrl(
                 &CtrlMsg::Welcome {
                     job: self.job.to_json(),
+                    // Children register before the relay hears the
+                    // parent's recovery summary; a child's own stale
+                    // state is swept by its reconnect loop instead.
+                    resume: Json::Null,
                 }
                 .to_json(),
             )?;
@@ -298,7 +302,24 @@ impl RelayNode {
             .to_json(),
         )?;
         match CtrlMsg::from_json(&self.up.recv_ctrl(Some(timeout))?)? {
-            CtrlMsg::Welcome { .. } => {}
+            CtrlMsg::Welcome { resume, .. } => {
+                // Registration-time round-state recovery: a journaled
+                // parent that restarted mid-job supersedes any round the
+                // relay had in flight — partial spool/.part state from
+                // before the restart can never complete.
+                if !matches!(resume, Json::Null) {
+                    let next = resume
+                        .get("next_round")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0);
+                    let swept = streaming::object::sweep_spool(&self.spool);
+                    log::info!(
+                        "relay {}: parent resumed from journal (next round {next}); \
+                         swept {swept} stale spool artifact(s)",
+                        self.name
+                    );
+                }
+            }
             other => bail!("relay {}: expected welcome, got {other:?}", self.name),
         }
 

@@ -1,0 +1,209 @@
+//! Jittered exponential backoff with caps (ISSUE 9).
+//!
+//! One policy shared by every retry loop in the crate: `TcpDriver`
+//! connect/accept retries, the CLI client/relay reconnect loops, and the
+//! chaos tests. The schedule is the classic decorrelated shape — the
+//! *ceiling* doubles each attempt up to `cap`, and the actual delay is
+//! drawn uniformly from `[ceiling/2, ceiling]` so a fleet of clients
+//! reconnecting after a coordinator restart does not stampede in
+//! lock-step. Jitter comes from a [`SplitMix64`] seeded by the caller,
+//! which keeps every test and chaos run fully deterministic.
+//!
+//! Total sleep across the life of a `Backoff` is bounded by `budget`
+//! (normally the job's `transfer_timeout_secs`): once the budget is
+//! exhausted `next_delay` returns `None` and the caller surfaces its
+//! last real error instead of retrying forever.
+
+use std::time::Duration;
+
+use crate::util::rng::SplitMix64;
+
+/// Default first-attempt delay ceiling for transfer-layer retries.
+pub const BASE_DELAY: Duration = Duration::from_millis(50);
+/// Default per-attempt delay ceiling for transfer-layer retries.
+pub const MAX_DELAY: Duration = Duration::from_secs(2);
+
+/// Deterministic jittered exponential backoff schedule.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    rng: SplitMix64,
+    base: Duration,
+    cap: Duration,
+    budget: Duration,
+    attempt: u32,
+    slept: Duration,
+}
+
+impl Backoff {
+    /// Fully parameterised schedule. `base` is the first ceiling, `cap`
+    /// clamps the per-attempt ceiling, `budget` bounds the *total* time
+    /// slept across all attempts.
+    pub fn new(seed: u64, base: Duration, cap: Duration, budget: Duration) -> Self {
+        Backoff {
+            rng: SplitMix64::new(seed).fork("backoff"),
+            base,
+            cap,
+            budget,
+            attempt: 0,
+            slept: Duration::ZERO,
+        }
+    }
+
+    /// The crate-standard transfer retry schedule: 50ms base, 2s cap,
+    /// total wait bounded by the job's transfer timeout.
+    pub fn for_transfer(seed: u64, budget: Duration) -> Self {
+        Self::new(seed, BASE_DELAY, MAX_DELAY, budget)
+    }
+
+    /// Attempts issued so far (i.e. calls to `next_delay` that returned
+    /// `Some`).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Total time this schedule has asked callers to sleep.
+    pub fn slept(&self) -> Duration {
+        self.slept
+    }
+
+    /// Next delay to sleep before retrying, or `None` when the total
+    /// budget is exhausted and the caller should give up.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.slept >= self.budget {
+            return None;
+        }
+        // Ceiling doubles each attempt: min(cap, base << attempt),
+        // saturating well before the shift could overflow.
+        let shift = self.attempt.min(20);
+        let ceil = self
+            .base
+            .saturating_mul(1u32 << shift)
+            .min(self.cap)
+            .max(Duration::from_micros(1));
+        // Uniform draw from [ceil/2, ceil] — "equal jitter".
+        let nanos = ceil.as_nanos().min(u128::from(u64::MAX)) as u64;
+        let half = nanos / 2;
+        let jitter = half + self.rng.next_u64() % (nanos - half + 1);
+        let remaining = self.budget.saturating_sub(self.slept);
+        let delay = Duration::from_nanos(jitter).min(remaining);
+        self.slept = self.slept.saturating_add(delay);
+        self.attempt = self.attempt.saturating_add(1);
+        Some(delay)
+    }
+
+    /// Run `op` until it succeeds or the budget runs out, sleeping the
+    /// scheduled delay between attempts. Returns the last error when the
+    /// schedule gives up.
+    pub fn retry<T, E>(&mut self, mut op: impl FnMut() -> Result<T, E>) -> Result<T, E> {
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => match self.next_delay() {
+                    Some(d) => std::thread::sleep(d),
+                    None => return Err(e),
+                },
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(seed: u64) -> Backoff {
+        Backoff::new(
+            seed,
+            Duration::from_millis(10),
+            Duration::from_millis(80),
+            Duration::from_millis(400),
+        )
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut x = b(7);
+        let mut y = b(7);
+        for _ in 0..8 {
+            assert_eq!(x.next_delay(), y.next_delay());
+        }
+    }
+
+    #[test]
+    fn different_seeds_jitter_differently() {
+        let xs: Vec<_> = {
+            let mut s = b(1);
+            (0..6).filter_map(|_| s.next_delay()).collect()
+        };
+        let ys: Vec<_> = {
+            let mut s = b(2);
+            (0..6).filter_map(|_| s.next_delay()).collect()
+        };
+        assert_ne!(xs, ys, "distinct seeds should draw distinct jitter");
+    }
+
+    #[test]
+    fn delays_respect_half_to_full_ceiling() {
+        let mut s = b(3);
+        let base = Duration::from_millis(10);
+        let cap = Duration::from_millis(80);
+        for attempt in 0u32..6 {
+            let ceil = base.saturating_mul(1 << attempt.min(20)).min(cap);
+            let d = s.next_delay().expect("within budget");
+            assert!(d <= ceil, "attempt {attempt}: {d:?} > ceiling {ceil:?}");
+            // Budget clamping can shrink the tail; only check the floor
+            // while the budget is comfortably unspent.
+            if s.slept() < Duration::from_millis(200) {
+                assert!(d >= ceil / 2, "attempt {attempt}: {d:?} < {:?}", ceil / 2);
+            }
+        }
+    }
+
+    #[test]
+    fn budget_exhausts_to_none() {
+        let mut s = b(11);
+        let mut total = Duration::ZERO;
+        let mut n = 0;
+        while let Some(d) = s.next_delay() {
+            total += d;
+            n += 1;
+            assert!(n < 1000, "schedule must terminate");
+        }
+        assert!(total <= Duration::from_millis(400));
+        assert!(s.next_delay().is_none(), "stays exhausted");
+    }
+
+    #[test]
+    fn retry_returns_last_error_after_budget() {
+        let mut s = Backoff::new(
+            5,
+            Duration::from_micros(10),
+            Duration::from_micros(50),
+            Duration::from_micros(200),
+        );
+        let mut calls = 0u32;
+        let r: Result<(), String> = s.retry(|| {
+            calls += 1;
+            Err(format!("attempt {calls}"))
+        });
+        let msg = r.expect_err("never succeeds");
+        assert!(calls > 1, "should have retried at least once");
+        assert_eq!(msg, format!("attempt {calls}"), "last error surfaces");
+    }
+
+    #[test]
+    fn retry_stops_on_success() {
+        let mut s = Backoff::new(
+            5,
+            Duration::from_micros(10),
+            Duration::from_micros(50),
+            Duration::from_millis(50),
+        );
+        let mut calls = 0u32;
+        let r: Result<u32, ()> = s.retry(|| {
+            calls += 1;
+            if calls == 3 { Ok(calls) } else { Err(()) }
+        });
+        assert_eq!(r, Ok(3));
+    }
+}

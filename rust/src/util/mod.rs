@@ -1,6 +1,7 @@
 //! Shared utilities: deterministic RNG, JSON, CLI parsing, byte helpers,
 //! logging and the mini property-testing harness.
 
+pub mod backoff;
 pub mod bench;
 pub mod bytes;
 pub mod cli;

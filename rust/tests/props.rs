@@ -590,3 +590,92 @@ fn fuzz_regression_frame_bad_magic_and_version_rejected() {
     assert!(Frame::decode(&bad_version).is_err());
     flare::fuzzing::fuzz_frame_header(&bad_version);
 }
+
+// -- journal decode regressions (fuzz_journal corpus, promoted) ---------------
+
+use flare::coordinator::journal::{self, Record};
+
+fn framed(rec: &Record) -> Vec<u8> {
+    let payload = journal::encode_record(rec);
+    let mut out = Vec::new();
+    journal::frame_payload(&mut out, &payload);
+    out
+}
+
+#[test]
+fn fuzz_regression_journal_truncated_record_stops_scan() {
+    // A frame cut at every byte boundary: the scanner must stop cleanly
+    // at offset 0 (never panic, never consume a partial frame).
+    let enc = framed(&Record::VersionRetired { client: "site-1".into() });
+    for cut in 0..enc.len() {
+        let (recs, consumed) = journal::scan_records(&enc[..cut]);
+        assert!(recs.is_empty(), "cut at {cut}");
+        assert_eq!(consumed, 0, "cut at {cut}");
+        flare::fuzzing::fuzz_journal(&enc[..cut]);
+    }
+}
+
+#[test]
+fn fuzz_regression_journal_bad_crc_stops_scan() {
+    let good = framed(&Record::SessionFailed { client: "a".into() });
+    let mut bad = framed(&Record::SessionFailed { client: "b".into() });
+    bad[5] ^= 0xFF; // corrupt the stored CRC
+    let mut stream = good.clone();
+    stream.extend_from_slice(&bad);
+    let (recs, consumed) = journal::scan_records(&stream);
+    assert_eq!(recs.len(), 1, "good prefix must survive");
+    assert_eq!(consumed, good.len(), "scan must stop at the bad frame");
+    flare::fuzzing::fuzz_journal(&stream);
+}
+
+#[test]
+fn fuzz_regression_journal_huge_declared_length_rejected() {
+    // A torn length word reading as ~4 GiB must hit the record cap, not
+    // an allocation attempt or a wrap in the end-offset math.
+    let mut stream = Vec::new();
+    stream.extend_from_slice(&u32::MAX.to_le_bytes());
+    stream.extend_from_slice(&0u32.to_le_bytes());
+    stream.extend_from_slice(&[0xAB; 64]);
+    let (recs, consumed) = journal::scan_records(&stream);
+    assert!(recs.is_empty());
+    assert_eq!(consumed, 0);
+    flare::fuzzing::fuzz_journal(&stream);
+}
+
+#[test]
+fn fuzz_regression_journal_mid_write_torn_tail_recovers_prefix() {
+    let a = framed(&Record::JobMeta { seed: 1, rounds: 2, clients: 3, buffered: false });
+    let b = framed(&Record::FoldApplied { client: "c-01".into(), version: 4, tau: 1 });
+    let mut stream = a.clone();
+    stream.extend_from_slice(&b[..b.len() / 2]); // crash mid-write
+    let (recs, consumed) = journal::scan_records(&stream);
+    assert_eq!(recs.len(), 1);
+    assert_eq!(consumed, a.len());
+    flare::fuzzing::fuzz_journal(&stream);
+}
+
+#[test]
+fn fuzz_regression_journal_hostile_container_lengths_rejected() {
+    // Payload-level attacks on the container decoder: entry counts,
+    // name lengths, dim counts, and data lengths that exceed the payload
+    // or overflow the element math must all error allocation-free.
+    let stats_rec = Record::RoundComplete {
+        stats: Default::default(),
+        global: flare::tensor::ParamContainer::new(),
+    };
+    let mut payload = journal::encode_record(&stats_rec);
+    let n = payload.len();
+    payload[n - 4..].copy_from_slice(&u32::MAX.to_le_bytes()); // entries := 2^32-1
+    assert!(journal::decode_record(&payload).is_err());
+    flare::fuzzing::fuzz_journal(&payload);
+
+    // Name length beyond the cap.
+    let hostile_name = [5u8, 0xFF, 0xFF, b'a', b'b'];
+    assert!(journal::decode_record(&hostile_name).is_err());
+    flare::fuzzing::fuzz_journal(&hostile_name);
+
+    // Unknown tag.
+    let unknown = [42u8, 1, 2, 3];
+    assert!(journal::decode_record(&unknown).is_err());
+    flare::fuzzing::fuzz_journal(&unknown);
+}

@@ -1,0 +1,601 @@
+//! Crash-recoverable coordinator: kill–restart equivalence (ISSUE 9).
+//!
+//! Each scenario runs a seeded federated job with the write-ahead
+//! journal enabled, kills the coordinator at a chosen journaled
+//! boundary via the `with_crash_after` chaos hook (the tripping record
+//! IS durable — a real SIGKILL lands after an arbitrary number of
+//! completed writes), then restarts a fresh controller on the same
+//! journal and asserts the recovered run's outcome against an
+//! uninterrupted reference:
+//!
+//! * **sync rounds** — bit-identical final global, identical
+//!   `global_loss` series and per-round stats, for crashes after the
+//!   round-start record, after the round checkpoint, and mid-journal
+//!   byte prefixes (torn tails). Re-executed work shrinks with each
+//!   durable checkpoint (`tasks_sent` proves true resume, not re-run).
+//! * **buffered (FedBuff)** — a pre-seal crash recovers into a clean
+//!   re-run (bit-identical to the baseline, staleness included); a
+//!   post-seal crash resumes from the sealed Q64.64 snapshot, redoing
+//!   only the open window — bit-identical to one clean window folded
+//!   over the sealed global (in-flight stale tasks are dropped by the
+//!   restart, so every redone fold is fresh, τ = 0).
+//! * **spool hygiene** — a completed file-streaming run sweeps every
+//!   `.part` / manifest / spool temporary.
+//! * **real TCP** — coordinator killed between rounds, clients
+//!   reconnect with backoff against the restarted listener, the
+//!   `Welcome` resume summary advertises the recovered round, and the
+//!   final global matches the uninterrupted socket run bit-for-bit.
+//!
+//! Tests share the process-global comm gauge and buffer pool, so they
+//! serialize on a file-local mutex like `reactor_equiv.rs`. Time-based
+//! metrics (seconds, comm-byte totals that include registration
+//! traffic) are deliberately not compared.
+
+mod common;
+
+use flare::config::{
+    AggregationConfig, AggregationMode, FsyncPolicy, JobConfig, JournalConfig, QuantScheme,
+    SessionEngine, StreamingMode, TrainConfig,
+};
+use flare::coordinator::controller::Controller;
+use flare::coordinator::executor::Executor;
+use flare::coordinator::journal;
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::metrics::Report;
+use flare::sfm::tcp::{loopback_listener, TcpDriver};
+use flare::sfm::SfmEndpoint;
+use flare::tensor::init::materialize;
+use flare::tensor::ParamContainer;
+use flare::util::json::Json;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const SAMPLES: [u64; 3] = [100, 50, 75];
+
+// -- sync rounds --------------------------------------------------------------
+
+fn sync_job(engine: SessionEngine, journal_path: &str) -> JobConfig {
+    JobConfig {
+        name: "recovery-sync".into(),
+        clients: 3,
+        rounds: 3,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        transfer_timeout_secs: 30,
+        session_engine: engine,
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        journal: JournalConfig {
+            path: journal_path.into(),
+            fsync: FsyncPolicy::Seal,
+        },
+        ..Default::default()
+    }
+}
+
+fn run_sync(job: &JobConfig, crash_after: Option<u64>) -> common::ClusterRun {
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 7);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 300 + i)).collect();
+    let mut controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        common::fresh_spool("recov_sync"),
+    );
+    if let Some(n) = crash_after {
+        controller = controller.with_crash_after(n);
+    }
+    common::run_cluster(
+        job,
+        controller,
+        &initial,
+        &[common::Link::default(); 3],
+        |i| MockTrainer::new(targets[i].clone(), 0.3, SAMPLES[i]),
+        |_| FilterSet::two_way_quantization(job.quant),
+    )
+}
+
+/// The engine-deterministic slice of two runs must agree exactly:
+/// final global bits, the loss series, and per-round accounting.
+/// (Seconds and comm-byte fields are timing/handshake dependent.)
+fn assert_sync_equiv(base: &common::ClusterRun, rec: &common::ClusterRun, ctx: &str) {
+    let g_base = match &base.outcome {
+        Ok(g) => g,
+        Err(e) => panic!("{ctx}: baseline failed: {e:#}"),
+    };
+    let g_rec = match &rec.outcome {
+        Ok(g) => g,
+        Err(e) => panic!("{ctx}: recovered run failed: {e:#}"),
+    };
+    assert_eq!(
+        g_base.max_abs_diff(g_rec),
+        0.0,
+        "{ctx}: recovered global must be bit-identical"
+    );
+    assert_eq!(
+        base.report.series["global_loss"].points, rec.report.series["global_loss"].points,
+        "{ctx}: global_loss series must match (replayed + live)"
+    );
+    assert_eq!(base.rounds.len(), rec.rounds.len(), "{ctx}: round count");
+    for (b, r) in base.rounds.iter().zip(&rec.rounds) {
+        assert_eq!(b.round, r.round, "{ctx}: round index");
+        assert_eq!(
+            b.mean_loss.to_bits(),
+            r.mean_loss.to_bits(),
+            "{ctx}: round {} mean loss bits",
+            b.round
+        );
+        assert_eq!(b.sampled, r.sampled, "{ctx}: round {} sampled", b.round);
+        assert_eq!(b.completed, r.completed, "{ctx}: round {} completed", b.round);
+        assert_eq!(b.leaf_completed, r.leaf_completed, "{ctx}: round {} leaves", b.round);
+        assert_eq!(b.failed, r.failed, "{ctx}: round {} failed", b.round);
+        assert_eq!(b.stragglers, r.stragglers, "{ctx}: round {} stragglers", b.round);
+    }
+}
+
+fn sync_kill_restart(engine: SessionEngine, crash_points: &[u64]) {
+    let baseline = run_sync(&sync_job(engine, ""), None);
+    // Records on a fresh journal: 1 = JobMeta, 2 = RoundStart(0),
+    // 3 = RoundComplete(0) checkpoint, 4 = RoundStart(1) — so the three
+    // crash points cover "mid round 0", "at the checkpoint", and "mid
+    // round 1".
+    for &crash_after in crash_points {
+        let wal = common::fresh_spool("wal_sync").join("run.journal");
+        let job = sync_job(engine, wal.to_str().unwrap());
+        let crashed = run_sync(&job, Some(crash_after));
+        let err = match &crashed.outcome {
+            Err(e) => e,
+            Ok(_) => panic!("crash_after {crash_after} did not abort the run"),
+        };
+        assert!(
+            format!("{err:#}").contains("chaos"),
+            "crash_after {crash_after}: unexpected abort: {err:#}"
+        );
+        // The kill must not strand clients: sessions drain, clients see
+        // Done and exit cleanly (this is what lets them reconnect).
+        for r in &crashed.client_results {
+            r.as_ref().expect("client must exit cleanly after a coordinator crash");
+        }
+        let recovered = run_sync(&job, None);
+        for r in &recovered.client_results {
+            r.as_ref().expect("recovered-run client failed");
+        }
+        assert_sync_equiv(&baseline, &recovered, &format!("sync crash@{crash_after}"));
+        if crash_after >= 3 {
+            // Round 0's checkpoint was durable before the kill: the
+            // restart re-executes only rounds 1..3 — a true resume.
+            assert!(
+                recovered.tasks_sent.iter().all(|&t| t == 2),
+                "crash@{crash_after}: resume must skip round 0, tasks {:?}",
+                recovered.tasks_sent
+            );
+        }
+    }
+}
+
+#[test]
+fn sync_kill_restart_bit_identical_threaded() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    sync_kill_restart(SessionEngine::Threaded, &[2, 3, 4]);
+}
+
+#[test]
+fn sync_kill_restart_bit_identical_reactor() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    sync_kill_restart(SessionEngine::Reactor, &[3, 4]);
+}
+
+/// Byte-level torn tails: truncate a completed run's journal at
+/// arbitrary byte offsets — mid-magic, mid-frame, mid-payload — and
+/// restart from each prefix. `Journal::open` truncates to the last
+/// good record boundary; the rerun must still be bit-identical.
+#[test]
+fn sync_recovery_from_torn_journal_prefixes() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    let baseline = run_sync(&sync_job(SessionEngine::Threaded, ""), None);
+
+    let wal_dir = common::fresh_spool("wal_torn");
+    let wal = wal_dir.join("full.journal");
+    let job = sync_job(SessionEngine::Threaded, wal.to_str().unwrap());
+    let complete = run_sync(&job, None);
+    assert_sync_equiv(&baseline, &complete, "journaled uninterrupted run");
+
+    let bytes = std::fs::read(&wal).expect("read completed journal");
+    assert!(bytes.len() > 64, "journal suspiciously small: {} bytes", bytes.len());
+    for cut in [5usize, 8, bytes.len() / 3, 2 * bytes.len() / 3, bytes.len() - 3] {
+        let path = wal_dir.join(format!("cut_{cut}.journal"));
+        std::fs::write(&path, &bytes[..cut]).expect("write truncated journal");
+        let job = sync_job(SessionEngine::Threaded, path.to_str().unwrap());
+        let recovered = run_sync(&job, None);
+        for r in &recovered.client_results {
+            r.as_ref().expect("torn-prefix client failed");
+        }
+        assert_sync_equiv(&baseline, &recovered, &format!("torn cut@{cut}"));
+    }
+}
+
+// -- buffered (FedBuff) -------------------------------------------------------
+
+fn buffered_job(engine: SessionEngine, journal_path: &str) -> JobConfig {
+    JobConfig {
+        name: "recovery-buffered".into(),
+        clients: 3,
+        rounds: 2, // target global versions
+        quant: QuantScheme::None,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        transfer_timeout_secs: 30,
+        session_engine: engine,
+        aggregation: AggregationConfig {
+            mode: AggregationMode::Buffered,
+            buffer_k: 3,
+            staleness_alpha: 1.0,
+        },
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        journal: JournalConfig {
+            path: journal_path.into(),
+            fsync: FsyncPolicy::Seal,
+        },
+        ..Default::default()
+    }
+}
+
+fn run_buffered_from(
+    job: &JobConfig,
+    initial: &ParamContainer,
+    crash_after: Option<u64>,
+) -> common::ClusterRun {
+    let spec = common::tiny_spec();
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 400 + i)).collect();
+    let mut controller = Controller::new(
+        job.clone(),
+        FilterSet::new(),
+        common::fresh_spool("recov_buf"),
+    );
+    if let Some(n) = crash_after {
+        controller = controller.with_crash_after(n);
+    }
+    common::run_cluster(
+        job,
+        controller,
+        initial,
+        &[common::Link::default(); 3],
+        |i| MockTrainer::new(targets[i].clone(), 0.3, SAMPLES[i]),
+        |_| FilterSet::new(),
+    )
+}
+
+fn run_buffered(job: &JobConfig, crash_after: Option<u64>) -> common::ClusterRun {
+    let initial = materialize(&common::tiny_spec(), 21);
+    run_buffered_from(job, &initial, crash_after)
+}
+
+fn buffered_kill_restart(engine: SessionEngine) {
+    let baseline = run_buffered(&buffered_job(engine, ""), None);
+    let g_base = baseline.outcome.as_ref().expect("buffered baseline failed");
+    assert_eq!(baseline.report.scalars["final_version"], 2.0);
+
+    // Pre-seal crash: records 1–4 are JobMeta plus the three initial
+    // issues, so no snapshot can be durable yet. Recovery degenerates
+    // to a clean re-run and must be bit-identical to the baseline —
+    // staleness histogram included.
+    {
+        let wal = common::fresh_spool("wal_buf").join("run.journal");
+        let job = buffered_job(engine, wal.to_str().unwrap());
+        let crashed = run_buffered(&job, Some(3));
+        let err = match &crashed.outcome {
+            Err(e) => e,
+            Ok(_) => panic!("buffered crash_after 3 did not abort"),
+        };
+        assert!(format!("{err:#}").contains("chaos"), "{err:#}");
+        for r in &crashed.client_results {
+            r.as_ref().expect("client must exit cleanly after a buffered crash");
+        }
+
+        let recovered = run_buffered(&job, None);
+        let g_rec = recovered.outcome.as_ref().expect("pre-seal recovery failed");
+        assert_eq!(
+            g_base.max_abs_diff(g_rec),
+            0.0,
+            "pre-seal crash: recovery must equal the uninterrupted run"
+        );
+        assert_eq!(
+            baseline.report.series["staleness_hist"].points,
+            recovered.report.series["staleness_hist"].points,
+            "pre-seal crash: staleness histogram"
+        );
+        assert_eq!(recovered.report.scalars["final_version"], 2.0);
+        assert_eq!(recovered.report.scalars["quarantined_total"], 0.0);
+    }
+
+    // Post-seal crash: with the ack handshake the v1 seal lands between
+    // records 8 and 10 (three folds, up to two interleaved re-issues),
+    // and the v2 seal cannot land before record 15 — so record 11 is
+    // strictly between the seals. The restart must resume from the
+    // sealed v1 snapshot, drop the in-flight v0-stale tasks, and redo
+    // window 2 with fresh (τ = 0) folds.
+    {
+        let wal = common::fresh_spool("wal_buf").join("run.journal");
+        let job = buffered_job(engine, wal.to_str().unwrap());
+        let crashed = run_buffered(&job, Some(11));
+        let err = match &crashed.outcome {
+            Err(e) => e,
+            Ok(_) => panic!("buffered crash_after 11 did not abort"),
+        };
+        assert!(format!("{err:#}").contains("chaos"), "{err:#}");
+
+        // The sealed v1 snapshot is durable in the crashed prefix.
+        let bytes = std::fs::read(&wal).expect("read buffered journal");
+        let (recs, _) = journal::scan_records(&bytes[journal::MAGIC.len()..]);
+        let g1 = recs
+            .iter()
+            .find_map(|r| match r {
+                journal::Record::SnapshotSealed { version: 1, global, .. } => Some(global.clone()),
+                _ => None,
+            })
+            .expect("sealed v1 snapshot must be durable before record 11");
+
+        let recovered = run_buffered(&job, None);
+        let g_rec = recovered.outcome.as_ref().expect("post-seal recovery failed");
+        for r in &recovered.client_results {
+            r.as_ref().expect("post-seal recovered client failed");
+        }
+        assert_eq!(recovered.report.scalars["final_version"], 2.0);
+        assert_eq!(recovered.report.scalars["quarantined_total"], 0.0);
+        assert_eq!(recovered.rounds.len(), 2, "one replayed + one live version window");
+        // Restart drops in-flight work, so the redone window is all
+        // fresh folds: 3 replayed τ=0 from window 1 + 3 live τ=0.
+        assert_eq!(
+            recovered.report.series["staleness_hist"].points,
+            vec![(0.0, 6.0)],
+            "post-seal recovery staleness"
+        );
+        // Reference: one clean version window folded over the sealed v1
+        // global — exactly the computation the recovered run must redo.
+        let mut ref_job = buffered_job(engine, "");
+        ref_job.rounds = 1;
+        let reference = run_buffered_from(&ref_job, &g1, None);
+        let g_ref = reference.outcome.as_ref().expect("reference window failed");
+        assert_eq!(
+            g_ref.max_abs_diff(g_rec),
+            0.0,
+            "post-seal recovery must equal one clean window over the sealed snapshot"
+        );
+    }
+}
+
+#[test]
+fn buffered_kill_restart_threaded() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    buffered_kill_restart(SessionEngine::Threaded);
+}
+
+#[test]
+fn buffered_kill_restart_reactor() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    buffered_kill_restart(SessionEngine::Reactor);
+}
+
+// -- spool hygiene ------------------------------------------------------------
+
+/// A completed file-streaming run (journaled, spool-heavy) must leave
+/// no `.part` data files, resume manifests, or spool temporaries —
+/// including stale artifacts from a previous interrupted run.
+#[test]
+fn completed_run_sweeps_spool_artifacts() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    let spool = common::fresh_spool("recov_sweep");
+    let wal = spool.join("run.journal");
+    let mut job = sync_job(SessionEngine::Threaded, wal.to_str().unwrap());
+    job.streaming = StreamingMode::File;
+
+    // Plant stale artifacts as if a previous run died mid-transfer.
+    std::fs::write(spool.join("upload.bin.part"), b"torn").unwrap();
+    std::fs::write(spool.join("upload.bin.part.json"), b"{}").unwrap();
+    std::fs::write(spool.join("flare_spool_dead.tmp"), b"x").unwrap();
+    std::fs::write(spool.join("flare_rx_resume_dead"), b"x").unwrap();
+
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 7);
+    let targets: Vec<ParamContainer> = (0..3).map(|i| materialize(&spec, 300 + i)).collect();
+    let controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        spool.clone(),
+    );
+    let r = common::run_cluster(
+        &job,
+        controller,
+        &initial,
+        &[common::Link::default(); 3],
+        |i| MockTrainer::new(targets[i].clone(), 0.3, SAMPLES[i]),
+        |_| FilterSet::two_way_quantization(job.quant),
+    );
+    r.outcome.as_ref().expect("file-streaming journaled run failed");
+    for res in &r.client_results {
+        res.as_ref().expect("file-streaming client failed");
+    }
+
+    let stale: Vec<String> = std::fs::read_dir(&spool)
+        .unwrap()
+        .flatten()
+        .filter_map(|e| e.file_name().to_str().map(String::from))
+        .filter(|n| {
+            n.ends_with(".part")
+                || n.ends_with(".part.json")
+                || n.starts_with("flare_spool_")
+                || n.starts_with("flare_rx_resume_")
+        })
+        .collect();
+    assert!(stale.is_empty(), "stale spool artifacts survived completion: {stale:?}");
+    // The journal itself is not a stale artifact and must survive.
+    assert!(wal.exists(), "journal must not be swept");
+}
+
+// -- real TCP kill–restart ----------------------------------------------------
+
+/// One federated run over real sockets. With `late_bind` the listener's
+/// address is reserved, the listener dropped, and rebound only after
+/// the clients are already dialing — exercising client reconnection
+/// with backoff against a restarting coordinator. Returns the run
+/// outcome plus each client's `(rounds_executed, advertised_next_round)`.
+fn tcp_run(
+    job: &JobConfig,
+    initial: &ParamContainer,
+    targets: &[ParamContainer],
+    crash_after: Option<u64>,
+    late_bind: bool,
+) -> (anyhow::Result<ParamContainer>, Vec<(usize, f64)>) {
+    let spool = common::fresh_spool("recov_tcp");
+    let probe = loopback_listener().unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    let listener = if late_bind {
+        drop(probe);
+        None
+    } else {
+        Some(probe)
+    };
+
+    let mut handles = Vec::new();
+    for i in 0..job.clients {
+        let addr = addr.clone();
+        let target = targets[i].clone();
+        let spool = spool.clone();
+        let quant = job.quant;
+        let mode = job.streaming;
+        let samples = SAMPLES[i];
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, f64)> {
+            let driver =
+                TcpDriver::connect_with_retry(&addr, Duration::from_secs(10), 0x7C11 + i as u64)?;
+            let mut exec = Executor::new(
+                format!("site-{}", i + 1),
+                SfmEndpoint::new(Box::new(driver)),
+                FilterSet::two_way_quantization(quant),
+                MockTrainer::new(target, 0.3, samples),
+                spool,
+            )
+            .with_mode(mode);
+            let (_job, resume) = exec.register_full()?;
+            let next_round = resume.get("next_round").and_then(Json::as_f64).unwrap_or(0.0);
+            let rounds = exec.run()?;
+            Ok((rounds, next_round))
+        }));
+    }
+
+    let listener = match listener {
+        Some(l) => l,
+        None => {
+            // Let the clients' first dial attempts fail before the
+            // coordinator comes back on its address.
+            std::thread::sleep(Duration::from_millis(150));
+            std::net::TcpListener::bind(&addr).expect("rebind coordinator address")
+        }
+    };
+
+    let mut controller = Controller::new(
+        job.clone(),
+        FilterSet::two_way_quantization(job.quant),
+        spool,
+    );
+    if let Some(n) = crash_after {
+        controller = controller.with_crash_after(n);
+    }
+    // Recover before accepting so Welcome advertises the resume state.
+    controller.recover_journal().expect("journal recovery");
+    for _ in 0..job.clients {
+        let driver = TcpDriver::accept(&listener).unwrap();
+        controller
+            .accept_client(SfmEndpoint::new(Box::new(driver)), Some(Duration::from_secs(30)))
+            .unwrap();
+    }
+    let mut report = Report::new();
+    let outcome = controller.run(initial.clone(), &mut report);
+    let clients = handles
+        .into_iter()
+        .map(|h| h.join().expect("client thread panicked").expect("client run failed"))
+        .collect();
+    (outcome, clients)
+}
+
+#[test]
+fn e2e_tcp_kill_restart_with_reconnect() {
+    let _guard = SERIAL.lock().unwrap();
+    flare::util::logging::init();
+    let spec = common::tiny_spec();
+    let initial = materialize(&spec, 7);
+    let targets: Vec<ParamContainer> = (0..2).map(|i| materialize(&spec, 500 + i)).collect();
+    let wal = common::fresh_spool("wal_tcp").join("run.journal");
+    let mk_job = |path: &str| JobConfig {
+        name: "recovery-tcp".into(),
+        clients: 2,
+        rounds: 3,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        chunk_bytes: 16 * 1024,
+        reliable: true,
+        transfer_timeout_secs: 30,
+        train: TrainConfig {
+            local_steps: 2,
+            ..Default::default()
+        },
+        journal: JournalConfig {
+            path: path.into(),
+            fsync: FsyncPolicy::Always,
+        },
+        ..Default::default()
+    };
+
+    // Uninterrupted reference over real sockets.
+    let (base, base_clients) = tcp_run(&mk_job(""), &initial, &targets, None, false);
+    let g_base = base.expect("tcp baseline failed");
+    for (rounds, next) in &base_clients {
+        assert_eq!(*rounds, 3);
+        assert_eq!(*next, 0.0);
+    }
+
+    // Phase 1: the coordinator is killed right after round 0's durable
+    // checkpoint (record 3 = RoundComplete(0)).
+    let job = mk_job(wal.to_str().unwrap());
+    let (crashed, crashed_clients) = tcp_run(&job, &initial, &targets, Some(3), false);
+    let err = match &crashed {
+        Err(e) => e,
+        Ok(_) => panic!("tcp crash_after 3 did not abort"),
+    };
+    assert!(format!("{err:#}").contains("chaos"), "{err:#}");
+    for (rounds, next) in &crashed_clients {
+        assert_eq!(*rounds, 1, "clients completed exactly round 0 before the kill");
+        assert_eq!(*next, 0.0, "a fresh journal advertises no resume");
+    }
+
+    // Phase 2: restart on the same address, listener up late — clients
+    // reconnect with backoff, learn the recovered round from Welcome,
+    // and the run finishes rounds 1..3 only.
+    let (recovered, rec_clients) = tcp_run(&job, &initial, &targets, None, true);
+    let g_rec = recovered.expect("recovered tcp run failed");
+    for (rounds, next) in &rec_clients {
+        assert_eq!(*rounds, 2, "restart must re-execute only rounds 1..3");
+        assert_eq!(*next, 1.0, "Welcome must advertise the recovered next round");
+    }
+    assert_eq!(
+        g_base.max_abs_diff(&g_rec),
+        0.0,
+        "tcp kill–restart final global must be bit-identical"
+    );
+}

@@ -50,17 +50,19 @@ const FOLD_FILES: [&str; 3] = [
 ];
 
 /// Wire-decode files: hostile-allocation pass.
-const WIRE_ALLOC_FILES: [&str; 6] = [
+const WIRE_ALLOC_FILES: [&str; 7] = [
     "streaming/wire.rs",
     "streaming/entry.rs",
     "streaming/object.rs",
     "sfm/frame.rs",
     "sfm/endpoint.rs",
     "sfm/tcp.rs",
+    "coordinator/journal.rs",
 ];
 
 /// Frame/entry parsing files: panic-path pass.
-const PANIC_FILES: [&str; 2] = ["streaming/wire.rs", "sfm/frame.rs"];
+const PANIC_FILES: [&str; 3] =
+    ["streaming/wire.rs", "sfm/frame.rs", "coordinator/journal.rs"];
 
 /// Primitives that block the calling thread.
 const BLOCKING_TOKENS: [&str; 7] = [

@@ -1,0 +1,177 @@
+//! Observability — tracing overhead on the quantize→send hot path.
+//!
+//! Three variants of the same per-entry pipeline (blockwise8 quantize →
+//! wire serialize → sink write):
+//!
+//! * `baseline`  — no trace calls compiled into the loop at all,
+//! * `disabled`  — the production span instrumentation present but the
+//!   global switch off (cost: one relaxed load per span),
+//! * `enabled`   — spans recording into the per-thread ring and the
+//!   stage histograms.
+//!
+//! Acceptance (full mode): disabled overhead < 1% and enabled overhead
+//! < 5% versus baseline, measured on best-of-round minima so scheduler
+//! noise and frequency drift cancel. The modes are measured in
+//! interleaved rounds for the same reason.
+//!
+//! Run: `cargo bench --bench trace_overhead` (plain binary). CI runs
+//! `--smoke` (tiny input, single iteration) which keeps the BENCH_JSON
+//! rows parseable but skips the overhead bars.
+//!
+//! Each mode prints one machine-readable line:
+//! `BENCH_JSON {"bench":"trace_overhead","mode":...,"min_s":...,
+//!  "mean_s":...,"overhead_pct":...}`
+
+use flare::config::QuantScheme;
+use flare::quant::quantize;
+use flare::streaming::wire::{self, Entry};
+use flare::tensor::Tensor;
+use flare::trace::{self, Stage};
+use flare::util::bench::{bench, fmt_secs, print_table};
+use flare::util::json::Json;
+use flare::util::rng::SplitMix64;
+use std::io::Write;
+
+/// One hot-path pass with no instrumentation: the floor we compare to.
+fn pass_baseline(tensors: &[Tensor], buf: &mut Vec<u8>) -> u64 {
+    let mut sent = 0u64;
+    let mut sink = std::io::sink();
+    for t in tensors {
+        let q = quantize(QuantScheme::Blockwise8, t).unwrap();
+        buf.clear();
+        wire::write_entry(buf, &Entry::Quantized("w".to_string(), q)).unwrap();
+        sink.write_all(buf).unwrap();
+        sent += buf.len() as u64;
+    }
+    sent
+}
+
+/// The same pass with the production span shape: Quantize, Serialize,
+/// and TransferSend spans exactly as the filter/sfm layers emit them.
+fn pass_traced(tensors: &[Tensor], buf: &mut Vec<u8>) -> u64 {
+    let mut sent = 0u64;
+    let mut sink = std::io::sink();
+    for t in tensors {
+        let sp = trace::span_with(Stage::Quantize, t.byte_len() as u64);
+        let q = quantize(QuantScheme::Blockwise8, t).unwrap();
+        sp.end();
+
+        buf.clear();
+        let mut sp = trace::span(Stage::Serialize);
+        wire::write_entry(buf, &Entry::Quantized("w".to_string(), q)).unwrap();
+        sp.set_attr(buf.len() as u64);
+        sp.end();
+
+        let sp = trace::span_with(Stage::TransferSend, buf.len() as u64);
+        sink.write_all(buf).unwrap();
+        sp.end();
+        sent += buf.len() as u64;
+    }
+    sent
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Baseline,
+    Disabled,
+    Enabled,
+}
+
+impl Mode {
+    fn name(self) -> &'static str {
+        match self {
+            Mode::Baseline => "baseline",
+            Mode::Disabled => "disabled",
+            Mode::Enabled => "enabled",
+        }
+    }
+}
+
+const MODES: [Mode; 3] = [Mode::Baseline, Mode::Disabled, Mode::Enabled];
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // Per-iteration work: a batch of small entries, so the per-span cost
+    // is a realistic (measurable, not vanishing) fraction of the work.
+    let (n_elems, n_tensors) = if smoke { (4 << 10, 4) } else { (16 << 10, 64) };
+    let (rounds, warmup, iters) = if smoke { (1, 0, 1) } else { (3, 1, 5) };
+
+    let mut rng = SplitMix64::new(7);
+    let tensors: Vec<Tensor> = (0..n_tensors)
+        .map(|_| {
+            let mut vals = vec![0f32; n_elems];
+            rng.fill_normal(&mut vals, 0.05);
+            Tensor::from_f32(vec![n_elems], vals)
+        })
+        .collect();
+    let mut buf: Vec<u8> = Vec::new();
+    let bytes_in = (n_elems * 4 * n_tensors) as u64;
+
+    // Interleaved rounds: each round measures every mode once, and the
+    // per-mode minimum across rounds is the comparison statistic.
+    let mut min_s = [f64::INFINITY; 3];
+    let mut mean_acc = [0f64; 3];
+    for round in 0..rounds {
+        for (mi, mode) in MODES.iter().enumerate() {
+            trace::set_enabled(*mode == Mode::Enabled);
+            let label = format!("{}-r{round}", mode.name());
+            let r = bench(&label, warmup, iters, || match mode {
+                Mode::Baseline => {
+                    std::hint::black_box(pass_baseline(&tensors, &mut buf));
+                }
+                _ => {
+                    std::hint::black_box(pass_traced(&tensors, &mut buf));
+                }
+            });
+            min_s[mi] = min_s[mi].min(r.min_s);
+            mean_acc[mi] += r.mean_s / rounds as f64;
+        }
+    }
+    trace::set_enabled(true);
+
+    let overhead_pct =
+        |mi: usize| ((min_s[mi] / min_s[0] - 1.0) * 100.0).max(0.0);
+
+    let mut table: Vec<Vec<String>> = Vec::new();
+    for (mi, mode) in MODES.iter().enumerate() {
+        let pct = overhead_pct(mi);
+        let j = Json::obj(vec![
+            ("bench", Json::str("trace_overhead")),
+            ("mode", Json::str(mode.name())),
+            ("min_s", Json::num(min_s[mi])),
+            ("mean_s", Json::num(mean_acc[mi])),
+            ("overhead_pct", Json::num(pct)),
+            ("bytes_in", Json::num(bytes_in as f64)),
+        ]);
+        println!("BENCH_JSON {j}");
+        table.push(vec![
+            mode.name().to_string(),
+            fmt_secs(min_s[mi]),
+            fmt_secs(mean_acc[mi]),
+            format!("{pct:.2}%"),
+        ]);
+    }
+    print_table(
+        &format!(
+            "trace overhead on quantize→send ({n_tensors} x {} KB entries)",
+            n_elems * 4 >> 10
+        ),
+        &["Mode", "Min", "Mean", "Overhead"],
+        &table,
+    );
+
+    if !smoke {
+        let dis = overhead_pct(1);
+        let en = overhead_pct(2);
+        println!("\nacceptance: disabled {dis:.2}% (< 1%), enabled {en:.2}% (< 5%)");
+        assert!(
+            dis < 1.0,
+            "disabled-tracing overhead {dis:.2}% exceeds the 1% bar"
+        );
+        assert!(
+            en < 5.0,
+            "enabled-tracing overhead {en:.2}% exceeds the 5% bar"
+        );
+    }
+}

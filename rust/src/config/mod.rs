@@ -455,6 +455,47 @@ impl JournalConfig {
     }
 }
 
+/// Flight-recorder tracing / observability knobs (see `crate::trace`).
+/// Tracing is on by default — the instrumentation is built to be cheap
+/// enough to leave enabled (the `trace_overhead` bench enforces the
+/// bars); the recorder, watchdog, and exporters are opt-in.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Capture trace events at all (span rings + stage histograms).
+    pub enabled: bool,
+    /// Per-thread ring capacity in events (rounded up to a power of
+    /// two; 40 bytes/slot).
+    pub ring_slots: usize,
+    /// Stall-watchdog threshold in milliseconds; 0 disables the
+    /// watchdog.
+    pub stall_ms: u64,
+    /// Directory for flight-recorder dumps; empty = recorder disarmed.
+    pub dump_dir: String,
+    /// Chrome trace-event JSON output path written when a run
+    /// completes; empty = no export.
+    pub trace_out: String,
+    /// `host:port` for the Prometheus `/metrics` endpoint; empty = no
+    /// endpoint.
+    pub metrics_addr: String,
+}
+
+impl TraceConfig {
+    pub const DEFAULT_RING_SLOTS: usize = 2048;
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            ring_slots: Self::DEFAULT_RING_SLOTS,
+            stall_ms: 0,
+            dump_dir: String::new(),
+            trace_out: String::new(),
+            metrics_addr: String::new(),
+        }
+    }
+}
+
 /// Full federated job description.
 #[derive(Debug, Clone)]
 pub struct JobConfig {
@@ -514,6 +555,9 @@ pub struct JobConfig {
     /// Durable round/version write-ahead journal; lets a restarted
     /// coordinator resume mid-run bit-identically.
     pub journal: JournalConfig,
+    /// Flight-recorder tracing: span rings, stage histograms, stall
+    /// watchdog, trace export, `/metrics` endpoint.
+    pub trace: TraceConfig,
 }
 
 impl Default for JobConfig {
@@ -541,6 +585,7 @@ impl Default for JobConfig {
             dirichlet_alpha: 0.0,
             artifacts_dir: "artifacts".into(),
             journal: JournalConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -684,6 +729,23 @@ impl JobConfig {
                         }
                     }
                 }
+                "trace" => {
+                    let t = v.as_obj().ok_or_else(|| anyhow!("trace: not an object"))?;
+                    for (tk, tv) in t {
+                        match tk.as_str() {
+                            "enabled" => {
+                                cfg.trace.enabled =
+                                    tv.as_bool().ok_or_else(|| anyhow!("{tk}: not a bool"))?
+                            }
+                            "ring_slots" => cfg.trace.ring_slots = req_usize(tv, tk)?,
+                            "stall_ms" => cfg.trace.stall_ms = req_usize(tv, tk)? as u64,
+                            "dump_dir" => cfg.trace.dump_dir = req_str(tv, tk)?,
+                            "trace_out" => cfg.trace.trace_out = req_str(tv, tk)?,
+                            "metrics_addr" => cfg.trace.metrics_addr = req_str(tv, tk)?,
+                            other => bail!("unknown trace key '{other}'"),
+                        }
+                    }
+                }
                 "fault" => {
                     let t = v.as_obj().ok_or_else(|| anyhow!("fault: not an object"))?;
                     for (fk, fv) in t {
@@ -792,6 +854,16 @@ impl JobConfig {
         if (2.0 * a).fract() != 0.0 {
             bail!("aggregation.staleness_alpha must be a multiple of 0.5 (exact fixed-point weights), got {a}");
         }
+        if self.trace.ring_slots == 0 || self.trace.ring_slots > (1 << 20) {
+            bail!(
+                "trace.ring_slots must be in [1, {}], got {}",
+                1usize << 20,
+                self.trace.ring_slots
+            );
+        }
+        if self.trace.stall_ms > 86_400_000 {
+            bail!("trace.stall_ms must be <= 86400000 (one day), got {}", self.trace.stall_ms);
+        }
         if self.aggregation.mode == AggregationMode::Buffered {
             if self.round_policy.sample_fraction != 1.0 {
                 bail!("buffered aggregation folds every arrival; round_policy.sample_fraction must be 1.0");
@@ -888,6 +960,17 @@ impl JobConfig {
                 ]),
             ),
             (
+                "trace",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.trace.enabled)),
+                    ("ring_slots", Json::num(self.trace.ring_slots as f64)),
+                    ("stall_ms", Json::num(self.trace.stall_ms as f64)),
+                    ("dump_dir", Json::str(self.trace.dump_dir.clone())),
+                    ("trace_out", Json::str(self.trace.trace_out.clone())),
+                    ("metrics_addr", Json::str(self.trace.metrics_addr.clone())),
+                ]),
+            ),
+            (
                 "fault",
                 Json::obj(vec![
                     ("seed", Json::num(self.fault.seed as f64)),
@@ -943,6 +1026,41 @@ mod tests {
     fn unknown_key_rejected() {
         let j = Json::parse(r#"{"modle": "mini"}"#).unwrap();
         assert!(JobConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn trace_roundtrip_json() {
+        let cfg = JobConfig {
+            trace: TraceConfig {
+                enabled: false,
+                ring_slots: 512,
+                stall_ms: 2500,
+                dump_dir: "/tmp/dumps".into(),
+                trace_out: "trace.json".into(),
+                metrics_addr: "127.0.0.1:9464".into(),
+            },
+            ..JobConfig::default()
+        };
+        let back = JobConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trace, cfg.trace);
+        // Defaults: tracing on, everything else off.
+        let dflt = JobConfig::default().trace;
+        assert!(dflt.enabled);
+        assert_eq!(dflt.stall_ms, 0);
+        assert!(dflt.dump_dir.is_empty() && dflt.metrics_addr.is_empty());
+    }
+
+    #[test]
+    fn trace_bad_values_rejected() {
+        for bad in [
+            r#"{"trace": {"ring_slots": 0}}"#,
+            r#"{"trace": {"ring_slots": 99999999}}"#,
+            r#"{"trace": {"stall_ms": 986400000000}}"#,
+            r#"{"trace": {"nope": 1}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(JobConfig::from_json(&j).is_err(), "{bad}");
+        }
     }
 
     #[test]

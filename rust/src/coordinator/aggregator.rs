@@ -38,6 +38,7 @@
 #![deny(clippy::arithmetic_side_effects)]
 
 use crate::tensor::{DType, ParamContainer, Tensor};
+use crate::trace::{self, Stage};
 use anyhow::{anyhow, bail, Result};
 use std::sync::{Condvar, Mutex};
 
@@ -224,6 +225,7 @@ impl FedAvg {
     /// arithmetic: a malicious or corrupt client shipping a same-named,
     /// differently-shaped tensor is a clean `Err`, never a panic.
     pub fn add(&mut self, update: &ParamContainer, weight: u64) -> Result<()> {
+        let _sp = trace::span_with(Stage::FedAvgFold, weight);
         check_weight(weight)?;
         for (name, t) in update.iter() {
             check_foldable_dtype(name, t)?;
@@ -460,7 +462,9 @@ impl EntryFold {
             }
             g = self.cv.wait(g).unwrap();
         }
+        let fold_sp = trace::span_with(Stage::EntryFold, t.elems() as u64);
         fold_tensor_into(&mut g.sums[idx], t, w)?;
+        fold_sp.end();
         g.folded[pos][idx] = true;
         g.folded_count[pos] = g.folded_count[pos].saturating_add(1);
         drop(g);

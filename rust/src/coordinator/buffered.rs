@@ -62,6 +62,7 @@ use crate::reactor::{Reactor, Step, WakeReason};
 use crate::streaming::wire::Entry;
 use crate::streaming::{self, EntryAssembler, EntryFlow, WeightsMsg};
 use crate::tensor::{DType, ParamContainer, Tensor};
+use crate::trace::{self, Stage};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -759,6 +760,8 @@ impl Controller {
                         Err(e) => {
                             quarantined = quarantined.saturating_add(1);
                             win_failed = win_failed.saturating_add(1);
+                            trace::instant(Stage::Quarantine, base_version);
+                            trace::recorder::trip(&format!("quarantine-{}", names[client]));
                             log::warn!(
                                 "quarantining result from '{}': {e:#}",
                                 names[client]
@@ -788,6 +791,8 @@ impl Controller {
                     {
                         quarantined = quarantined.saturating_add(1);
                         win_failed = win_failed.saturating_add(1);
+                        trace::instant(Stage::Quarantine, base_version);
+                        trace::recorder::trip(&format!("quarantine-{}", names[client]));
                         log::warn!(
                             "quarantining result from '{}': leaf sent a partial aggregate",
                             names[client]
@@ -805,11 +810,16 @@ impl Controller {
                         retire(client, &shared);
                         continue;
                     }
-                    let ready = match agg.fold(&update, n_samples, tau) {
+                    let fold_sp = trace::span_with(Stage::FedAvgFold, n_samples);
+                    let fold_res = agg.fold(&update, n_samples, tau);
+                    fold_sp.end();
+                    let ready = match fold_res {
                         Ok(r) => r,
                         Err(e) => {
                             quarantined = quarantined.saturating_add(1);
                             win_failed = win_failed.saturating_add(1);
+                            trace::instant(Stage::Quarantine, base_version);
+                            trace::recorder::trip(&format!("quarantine-{}", names[client]));
                             log::warn!(
                                 "quarantining result from '{}' at the fold: {e:#}",
                                 names[client]

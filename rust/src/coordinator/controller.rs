@@ -48,6 +48,7 @@ use crate::metrics::Report;
 use crate::sfm::SfmEndpoint;
 use crate::streaming::{self, WeightsMsg};
 use crate::tensor::{DType, ParamContainer};
+use crate::trace::{self, Stage};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -568,6 +569,11 @@ impl Controller {
         // buffer takes served without an allocation (steady state ≈ 1.0).
         let pool_traffic = crate::memory::pool::global().snapshot().since(pool_before);
         report.set_scalar("pool_hit_rate", pool_traffic.hit_rate());
+        // Stage latency histograms → `trace_total_ns/*`, `trace_count/*`,
+        // `trace_attr_total/*` scalars and `trace_hist_ns/*` series.
+        // (Process-global: within one process these accumulate across
+        // runs; tests wanting exact totals call `trace::reset_for_test`.)
+        trace::surface_report(report);
     }
 
     /// The per-round loop: sample, issue commands, fan-in results with
@@ -595,12 +601,20 @@ impl Controller {
         // journaled rounds left off, so client_loss x-coordinates and
         // trainer round indices match an uninterrupted run.
         let mut step_counter = start_round * self.job.train.local_steps;
+        // Stall watchdog: the round driver checks in once per round and
+        // once per fan-in event; a driver wedged on a hung transfer past
+        // the threshold trips the flight recorder.
+        let activity = trace::watchdog::watch("round-driver");
 
         for round in start_round..rounds {
             let t0 = Instant::now();
+            activity.touch();
+            let mut round_sp = trace::span(Stage::Round);
             COMM_GAUGE.reset_peak();
             let selected = policy.select(n, self.job.seed, round);
             let k = selected.len();
+            round_sp.set_attr(k as u64);
+            trace::instant(Stage::Sample, k as u64);
             let quorum = policy.quorum(k);
             let mut pos_of = vec![usize::MAX; n];
             for (p, &i) in selected.iter().enumerate() {
@@ -721,6 +735,7 @@ impl Controller {
                             }
                         }
                     };
+                    activity.touch();
                     if evt.round != round || evt.attempt != attempt {
                         // A straggler from an abandoned round/attempt
                         // delivered late: its session is drained, the
@@ -1166,7 +1181,11 @@ fn session_loop(
                 let payload = match run_client_round(&mut ctx, round, global, fold) {
                     Ok(RoundOutcome::Done(c)) => SessionOutcome::Done(c),
                     Ok(RoundOutcome::Dropped) => SessionOutcome::Dropped,
-                    Err(e) => SessionOutcome::Failed(e),
+                    Err(e) => {
+                        trace::instant(Stage::SessionFail, ctx.idx as u64);
+                        trace::recorder::trip(&format!("session-fail-{}", ctx.conn.name));
+                        SessionOutcome::Failed(e)
+                    }
                 };
                 let _ = evt_tx.send(SessionEvent {
                     client: ctx.idx,
@@ -1220,7 +1239,11 @@ fn session_step(
                         let payload = match run_client_round(c, round, global, fold) {
                             Ok(RoundOutcome::Done(contrib)) => SessionOutcome::Done(contrib),
                             Ok(RoundOutcome::Dropped) => SessionOutcome::Dropped,
-                            Err(e) => SessionOutcome::Failed(e),
+                            Err(e) => {
+                                trace::instant(Stage::SessionFail, c.idx as u64);
+                                trace::recorder::trip(&format!("session-fail-{}", c.conn.name));
+                                SessionOutcome::Failed(e)
+                            }
                         };
                         let _ = evt_tx.send(SessionEvent {
                             client: c.idx,
@@ -1253,7 +1276,10 @@ fn run_client_round(
     global: Arc<ParamContainer>,
     fold: Option<SessionFold>,
 ) -> Result<RoundOutcome> {
-    let t0 = Instant::now();
+    // The trace clock is the round body's clock: `seconds` below derives
+    // from the same reading that feeds the ClientRound histogram, so the
+    // report and the trace reconcile exactly.
+    let tr0 = trace::now_ns();
     let bytes0 = endpoint_bytes(&ctx.conn.ep);
     let timeout = ctx.job.transfer_timeout();
     let mode = ctx.job.streaming;
@@ -1261,6 +1287,7 @@ fn run_client_round(
     let name = ctx.conn.name.clone();
 
     // -- scatter --------------------------------------------------------
+    let mut scatter_sp = trace::span(Stage::Scatter);
     let mut fctx = FilterContext {
         round,
         peer: name.clone(),
@@ -1341,6 +1368,8 @@ fn run_client_round(
             let _ = ctx.conn.ep.recv_event(Some(timeout))?;
         }
     }
+    scatter_sp.set_attr(endpoint_bytes(&ctx.conn.ep).saturating_sub(bytes0));
+    scatter_sp.end();
     drop(global); // the scatter copy is no longer needed during gather
 
     // -- gather ---------------------------------------------------------
@@ -1351,7 +1380,9 @@ fn run_client_round(
     } else {
         timeout
     };
+    let train_sp = trace::span(Stage::TrainWait);
     let ctrl = CtrlMsg::from_json(&ctx.conn.ep.recv_ctrl(Some(train_wait))?)?;
+    train_sp.end();
     let (r_round, n_samples, losses, contributions, headers) = match ctrl {
         CtrlMsg::Result {
             round: r,
@@ -1366,6 +1397,8 @@ fn run_client_round(
     if r_round != round {
         bail!("client {name} answered round {r_round}, expected {round}");
     }
+    let gather_t0 = trace::now_ns();
+    let gather_bytes0 = endpoint_bytes(&ctx.conn.ep);
 
     if let Some(sf) = fold {
         // Entry-streamed gather: chain per entry, fold per tensor.
@@ -1406,16 +1439,27 @@ fn run_client_round(
         }
         match sf.fold.finish_stream(sf.pos)? {
             FoldOutcome::Dropped => Ok(RoundOutcome::Dropped),
-            FoldOutcome::Folded => Ok(RoundOutcome::Done(Contribution {
-                update: None,
-                _mem: None,
-                n_samples,
-                losses,
-                contributions,
-                seconds: t0.elapsed().as_secs_f64(),
-                comm_bytes: endpoint_bytes(&conn.ep).saturating_sub(bytes0),
-                scratch_bytes: chain.scratch_bytes(),
-            })),
+            FoldOutcome::Folded => {
+                let comm = endpoint_bytes(&conn.ep).saturating_sub(bytes0);
+                let dur_ns = trace::now_ns().saturating_sub(tr0);
+                trace::complete(
+                    Stage::Gather,
+                    gather_t0,
+                    trace::now_ns().saturating_sub(gather_t0),
+                    endpoint_bytes(&conn.ep).saturating_sub(gather_bytes0),
+                );
+                trace::complete(Stage::ClientRound, tr0, dur_ns, comm);
+                Ok(RoundOutcome::Done(Contribution {
+                    update: None,
+                    _mem: None,
+                    n_samples,
+                    losses,
+                    contributions,
+                    seconds: dur_ns as f64 / 1e9,
+                    comm_bytes: comm,
+                    scratch_bytes: chain.scratch_bytes(),
+                }))
+            }
         }
     } else {
         let (msg, _stats) = if reliable {
@@ -1446,14 +1490,23 @@ fn run_client_round(
         }
         // Account the update buffered until the fold frontier reaches it.
         let mem = GaugeReservation::new(&COMM_GAUGE, update.total_bytes());
+        let comm = endpoint_bytes(&ctx.conn.ep).saturating_sub(bytes0);
+        let dur_ns = trace::now_ns().saturating_sub(tr0);
+        trace::complete(
+            Stage::Gather,
+            gather_t0,
+            trace::now_ns().saturating_sub(gather_t0),
+            endpoint_bytes(&ctx.conn.ep).saturating_sub(gather_bytes0),
+        );
+        trace::complete(Stage::ClientRound, tr0, dur_ns, comm);
         Ok(RoundOutcome::Done(Contribution {
             update: Some(update),
             _mem: Some(mem),
             n_samples,
             losses,
             contributions,
-            seconds: t0.elapsed().as_secs_f64(),
-            comm_bytes: endpoint_bytes(&ctx.conn.ep).saturating_sub(bytes0),
+            seconds: dur_ns as f64 / 1e9,
+            comm_bytes: comm,
             scratch_bytes: 0,
         }))
     }

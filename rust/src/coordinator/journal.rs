@@ -39,6 +39,7 @@ use crate::config::FsyncPolicy;
 use crate::coordinator::RoundStats;
 use crate::streaming::wire::bounded_prealloc;
 use crate::tensor::{DType, ParamContainer, Tensor, TensorMeta};
+use crate::trace::{self, Stage};
 use crate::util::bytes::{get_u16, get_u32, get_u64, put_u16, put_u32, put_u64};
 
 /// File magic: "FLJN" + format version 1.
@@ -630,6 +631,8 @@ impl Journal {
                 );
             }
         }
+        let t_ns = trace::now_ns();
+        let seq = self.records;
         let payload = encode_record(rec);
         let mut frame = Vec::new();
         frame_payload(&mut frame, &payload);
@@ -637,13 +640,31 @@ impl Journal {
             .write_all(&frame)
             .with_context(|| format!("append to journal {}", self.path.display()))?;
         match self.fsync {
-            FsyncPolicy::Always => self.file.sync_data()?,
-            FsyncPolicy::Seal if rec.is_checkpoint() => self.file.sync_data()?,
+            FsyncPolicy::Always => {
+                let fsync_sp = trace::span(Stage::JournalFsync);
+                self.file.sync_data()?;
+                fsync_sp.end();
+            }
+            FsyncPolicy::Seal if rec.is_checkpoint() => {
+                let fsync_sp = trace::span(Stage::JournalFsync);
+                self.file.sync_data()?;
+                fsync_sp.end();
+            }
             _ => {}
         }
         self.records += 1;
+        // Durable: the append span's attr is this record's 0-based seq,
+        // so a flight dump's last JournalAppend events line up with the
+        // journal's own record count.
+        trace::complete(
+            Stage::JournalAppend,
+            t_ns,
+            trace::now_ns().saturating_sub(t_ns),
+            seq,
+        );
         if let Some(n) = self.crash_after {
             if self.records >= n {
+                trace::recorder::trip("journal-crash-hook");
                 bail!(
                     "chaos: induced coordinator crash after {} journal records ({})",
                     self.records,

@@ -82,8 +82,13 @@ pub fn run_simulation_with_links<T: LocalTrainer + 'static>(
     }
     let spool = spool_dir();
     std::fs::create_dir_all(&spool)?;
-    // Kernel parallelism is a process-global knob (see JobConfig).
+    // Kernel parallelism is a process-global knob (see JobConfig), and
+    // so are the tracing knobs (capture flag, ring size, watchdog,
+    // flight-recorder arming). The lib's own unit tests manage trace
+    // state under `trace::test_support::LOCK`, so skip the install there.
     crate::quant::set_encode_threads(job.encode_threads);
+    #[cfg(not(test))]
+    crate::trace::install(&job.trace);
     // The same factory builds the per-client executor chains and the
     // server's per-session chains (the paper's symmetric two-way wiring).
     let make_filters: FilterFactory = Arc::new(make_filters);

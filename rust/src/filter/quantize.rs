@@ -18,6 +18,7 @@ use crate::quant::{dequantize_into, quantize};
 use crate::streaming::wire::Entry;
 use crate::streaming::WeightsMsg;
 use crate::tensor::Tensor;
+use crate::trace::{self, Stage};
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 
@@ -84,7 +85,9 @@ impl EntryFilter for QuantizeEntryFilter {
     fn entry(&mut self, _idx: usize, e: Entry, _ctx: &mut FilterContext) -> Result<Entry> {
         match e {
             Entry::Plain(name, t) => {
+                let sp = trace::span_with(Stage::Quantize, t.byte_len() as u64);
                 let q = quantize(self.scheme, &t)?;
+                sp.end();
                 self.before += t.byte_len() as u64;
                 self.after += q.payload_bytes() + q.meta_bytes();
                 // The fp32 input is fully consumed by the encode; cycle
@@ -179,9 +182,12 @@ impl EntryFilter for DequantizeEntryFilter {
             // configured (the paper's "simple configuration change").
             Entry::Plain(name, t) => Ok(Entry::Plain(name, t)),
             Entry::Quantized(name, q) => {
+                let mut sp = trace::span(Stage::Dequantize);
                 self.scratch.clear();
                 dequantize_into(&q, self.scratch.as_mut_vec())?;
                 self.scratch.resync();
+                sp.set_attr((self.scratch.len() * 4) as u64);
+                sp.end();
                 // One copy, scratch -> tensor bytes. (`Tensor::from_f32`
                 // over `scratch.to_vec()` would copy the entry twice.)
                 // Pool-backed: the server's fold sink gives the buffer

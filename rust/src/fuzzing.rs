@@ -19,6 +19,9 @@
 use crate::coordinator::journal;
 use crate::sfm::frame::{Frame, HEADER_LEN};
 use crate::streaming::wire;
+use crate::trace::hist::Hist;
+use crate::trace::recorder::FlightDump;
+use crate::trace::STAGE_COUNT;
 
 /// SFM frame header and whole-frame decode on arbitrary bytes, plus an
 /// encode→decode oracle when the input happens to parse.
@@ -110,4 +113,37 @@ pub fn fuzz_varint(data: &[u8]) {
         let got = &dec[i * 16..(i + 1) * 16];
         assert_eq!(got, v.to_le_bytes(), "varint roundtrip mismatch at {i}");
     }
+}
+
+/// Flight-recorder dump decode on arbitrary bytes. The decoder treats
+/// every dump as hostile (dumps cross process boundaries): truncation,
+/// forged section counts, unknown stage/kind codes, and over-long
+/// declared lengths must error out — never panic or allocate
+/// unboundedly. On the accept path, every embedded histogram must
+/// survive a re-encode → re-decode roundtrip bit-exactly.
+pub fn fuzz_flight_dump(data: &[u8]) {
+    if let Ok(dump) = FlightDump::decode(data) {
+        for t in &dump.threads {
+            for e in &t.events {
+                assert!(
+                    (e.stage as usize) < STAGE_COUNT,
+                    "decoder accepted unknown stage {}",
+                    e.stage
+                );
+            }
+        }
+        let mut prev: Option<u16> = None;
+        for (code, h) in &dump.hists {
+            assert!((*code as usize) < STAGE_COUNT, "unknown hist stage {code}");
+            assert!(prev.map_or(true, |p| *code > p), "hist codes not increasing");
+            prev = Some(*code);
+            let enc = h.encode();
+            let (back, used) = Hist::decode(&enc).expect("re-encoded hist must re-decode");
+            assert_eq!(used, enc.len(), "hist re-decode left trailing bytes");
+            assert_eq!(&back, h, "histogram did not roundtrip");
+        }
+    }
+    // The standalone histogram decoder sees the same bytes (its framing
+    // also rides inside journal-adjacent tooling).
+    let _ = Hist::decode(data);
 }

@@ -20,6 +20,9 @@
 //!   whose relays pre-fold entry streams at the edge and ship exact
 //!   `PartialAggregate` sums upstream.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX train step.
+//! * [`trace`] — flight-recorder tracing: per-thread span rings, stage
+//!   latency histograms, stall watchdog, Chrome/Perfetto export, and a
+//!   Prometheus `/metrics` endpoint.
 
 pub mod config;
 pub mod coordinator;
@@ -35,4 +38,5 @@ pub mod sfm;
 pub mod streaming;
 pub mod tensor;
 pub mod topology;
+pub mod trace;
 pub mod util;

@@ -48,7 +48,9 @@ COMMANDS:
                 --entry-fold true|false --encode-threads 0
                 --topology flat|tree --branching 4
                 --aggregation-mode sync|buffered --buffer-k 4
-                --staleness-alpha 0.5 --session-engine threaded|reactor]
+                --staleness-alpha 0.5 --session-engine threaded|reactor
+                --trace true|false --trace-out trace.json --stall-ms 0
+                --trace-dump-dir dumps --metrics-addr 127.0.0.1:9464]
   server        --listen 127.0.0.1:7777 --job <file>
                 [--journal run.wal --journal-fsync never|seal|always]
   client        --connect 127.0.0.1:7777 --name site-1 [--trainer pjrt|mock]
@@ -181,10 +183,53 @@ fn job_from_args(args: &Args) -> Result<JobConfig> {
         job.journal.fsync = flare::config::FsyncPolicy::from_name(f)
             .ok_or_else(|| anyhow!("bad journal-fsync '{f}' (never|seal|always)"))?;
     }
+    // Flight-recorder tracing: `--trace-out trace.json` exports a
+    // Perfetto-loadable Chrome trace at run end; `--metrics-addr
+    // 127.0.0.1:9464` serves live Prometheus `/metrics`; `--stall-ms N`
+    // arms the stall watchdog; `--trace-dump-dir d` arms the flight
+    // recorder; `--trace false` disables event capture entirely.
+    if let Some(v) = args.get("trace") {
+        job.trace.enabled = v
+            .parse()
+            .map_err(|_| anyhow!("trace: expected true|false, got '{v}'"))?;
+    }
+    job.trace.ring_slots = args.get_usize("trace-ring-slots", job.trace.ring_slots);
+    job.trace.stall_ms = args.get_u64("stall-ms", job.trace.stall_ms);
+    if let Some(d) = args.get("trace-dump-dir") {
+        job.trace.dump_dir = d.to_string();
+    }
+    if let Some(p) = args.get("trace-out") {
+        job.trace.trace_out = p.to_string();
+    }
+    if let Some(a) = args.get("metrics-addr") {
+        job.trace.metrics_addr = a.to_string();
+    }
     job.validate()?;
     // The kernels read a process-global knob (see config::JobConfig).
     quant::set_encode_threads(job.encode_threads);
+    flare::trace::install(&job.trace);
     Ok(job)
+}
+
+/// Start the live `/metrics` endpoint when configured. The handle keeps
+/// the binding visible; the acceptor itself is a daemon thread.
+fn serve_metrics(job: &JobConfig) -> Result<Option<flare::trace::metrics_http::MetricsServer>> {
+    if job.trace.metrics_addr.is_empty() {
+        return Ok(None);
+    }
+    let srv = flare::trace::metrics_http::serve(&job.trace.metrics_addr)?;
+    println!("metrics exposition at http://{}/metrics", srv.addr());
+    Ok(Some(srv))
+}
+
+/// Export the Chrome trace-event JSON when `--trace-out` is set.
+fn export_trace(job: &JobConfig) -> Result<()> {
+    if job.trace.trace_out.is_empty() {
+        return Ok(());
+    }
+    flare::trace::chrome::export(std::path::Path::new(&job.trace.trace_out))?;
+    println!("chrome trace written to {}", job.trace.trace_out);
+    Ok(())
 }
 
 fn spec_for(job: &JobConfig) -> Result<ModelSpec> {
@@ -255,6 +300,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let spec = spec_for(&job)?;
     let initial = materialize(&spec, job.seed);
     let quant = job.quant;
+    let _metrics = serve_metrics(&job)?;
     let job_for_factory = job.clone();
     let result: SimResult = simulator::run_simulation(
         &job,
@@ -265,6 +311,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }),
         move || FilterSet::two_way_quantization(quant),
     )?;
+    export_trace(&job)?;
     summarize(&result.report);
     if let Some(out) = args.get("out") {
         result.report.save_json(&PathBuf::from(out))?;
@@ -280,6 +327,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let initial = materialize(&spec, job.seed);
     let mut trainer = make_any_trainer(&job, trainer_kind, 0)?;
     let result = simulator::run_centralized(&job, initial, &mut trainer)?;
+    export_trace(&job)?;
     summarize(&result.report);
     if let Some(out) = args.get("out") {
         result.report.save_json(&PathBuf::from(out))?;
@@ -321,7 +369,9 @@ fn cmd_server(args: &Args) -> Result<()> {
     let spec = spec_for(&job)?;
     let initial = materialize(&spec, job.seed);
     let mut report = Report::new();
+    let _metrics = serve_metrics(&job)?;
     controller.run(initial, &mut report)?;
+    export_trace(&job)?;
     summarize(&report);
     if let Some(out) = args.get("out") {
         report.save_json(&PathBuf::from(out))?;
@@ -380,8 +430,10 @@ fn run_client_session(
     );
     let (job_json, resume) = probe.register_full()?;
     let job = JobConfig::from_json(&job_json)?;
-    // The server's job config carries the kernel parallelism knob.
+    // The server's job config carries the kernel parallelism knob and
+    // the tracing knobs (capture + watchdog; exporters stay server-side).
     quant::set_encode_threads(job.encode_threads);
+    flare::trace::install(&job.trace);
     if !matches!(resume, flare::util::json::Json::Null) {
         // The server resumed from its journal: anything spooled before
         // its restart belongs to a superseded round and cannot complete.
@@ -475,6 +527,8 @@ fn cmd_relay(args: &Args) -> Result<()> {
     let spool = std::env::temp_dir().join(format!("flare_relay_{}", std::process::id()));
     std::fs::create_dir_all(&spool)?;
     let quant = job.quant;
+    let _metrics = serve_metrics(&job)?;
+    let job_for_export = job.clone();
     let node = flare::topology::RelayNode::new(
         name,
         job,
@@ -484,6 +538,7 @@ fn cmd_relay(args: &Args) -> Result<()> {
         spool,
     );
     let stats = node.run()?;
+    export_trace(&job_for_export)?;
     println!(
         "relay '{}' done: {} children, {} leaves, {} round(s) served",
         stats.name,

@@ -46,6 +46,7 @@ use crate::reactor::state::{on_claim, on_deadline, on_park, on_wake, ParkEffect,
 use crate::reactor::wheel::DeadlineWheel;
 use crate::sfm::driver::DriverWaker;
 use crate::sfm::SfmEndpoint;
+use crate::trace::{self, Stage};
 
 /// Identifies a session within one reactor.
 pub type SessionId = u64;
@@ -82,6 +83,9 @@ struct Session {
     state: RunState,
     reason: WakeReason,
     timer: Option<u64>,
+    /// Trace clock reading when the session was last queued runnable
+    /// (feeds the `wake_delay` stage: queued → step-start latency).
+    queued_ns: u64,
 }
 
 struct Core {
@@ -205,6 +209,7 @@ impl Reactor {
                 state: RunState::Queued,
                 reason: WakeReason::Notified,
                 timer: None,
+                queued_ns: trace::now_ns(),
             },
         );
         core.queue.push_back(id);
@@ -279,6 +284,7 @@ fn wake_locked(shared: &Arc<Shared>, core: &mut Core, id: SessionId) -> bool {
                 core.wheel.cancel(t);
             }
             sess.reason = WakeReason::Notified;
+            sess.queued_ns = trace::now_ns();
             core.queue.push_back(id);
             dispatch(shared, core);
         }
@@ -349,10 +355,17 @@ fn worker_loop(shared: &Arc<Shared>) {
         sess.state = on_claim(sess.state);
         let reason = sess.reason;
         sess.reason = WakeReason::Notified;
+        let queued_ns = sess.queued_ns;
         let mut step = sess.step.take().expect("queued session owns its step");
 
         drop(core);
+        trace::instant(
+            Stage::WakeDelay,
+            trace::now_ns().saturating_sub(queued_ns),
+        );
+        let step_sp = trace::span(Stage::ReactorStep);
         let out = step(reason);
+        step_sp.end();
         core = shared.mu.lock().unwrap();
 
         if core.shutdown {
@@ -369,6 +382,7 @@ fn worker_loop(shared: &Arc<Shared>) {
             Step::Yield => {
                 sess.step = Some(step);
                 sess.state = RunState::Queued;
+                sess.queued_ns = trace::now_ns();
                 core.queue.push_back(id);
             }
             Step::Park | Step::ParkFor(_) => {
@@ -379,9 +393,11 @@ fn worker_loop(shared: &Arc<Shared>) {
                     ParkEffect::Requeue => {
                         // A wake raced the step: run again rather than sleep.
                         sess.reason = WakeReason::Notified;
+                        sess.queued_ns = trace::now_ns();
                         core.queue.push_back(id);
                     }
                     ParkEffect::Sleep => {
+                        trace::instant(Stage::Park, id);
                         if let Step::ParkFor(d) = out {
                             let t = core.wheel.insert(Instant::now() + d, id);
                             sess.timer = Some(t);
@@ -401,7 +417,11 @@ fn timer_loop(shared: &Arc<Shared>) {
             return;
         }
         let now = Instant::now();
-        for token in core.wheel.expired(now) {
+        let expired = core.wheel.expired(now);
+        if !expired.is_empty() {
+            trace::instant(Stage::WheelFire, expired.len() as u64);
+        }
+        for token in expired {
             let id = token as SessionId;
             // Only Idle sessions hold armed timers; anything else means
             // the session raced a wake or completed — skip.
@@ -414,6 +434,7 @@ fn timer_loop(shared: &Arc<Shared>) {
             sess.timer = None;
             sess.reason = WakeReason::Deadline;
             sess.state = next;
+            sess.queued_ns = trace::now_ns();
             core.queue.push_back(id);
             dispatch(shared, &mut core);
         }

@@ -21,6 +21,7 @@
 use super::driver::Driver;
 use super::frame::{flags, Frame, FrameType, Payload};
 use crate::memory::{pool, GaugeReservation, TrackedBuf, COMM_GAUGE};
+use crate::trace::{self, Stage};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -816,6 +817,8 @@ impl SfmEndpoint {
         policy: &ResumePolicy,
     ) -> Result<ReliableReport> {
         let sid = self.alloc_stream();
+        let mut transfer_sp = trace::span(Stage::TransferSend);
+        let activity = trace::watchdog::watch("transfer-send");
         let n = src.n_units()?;
         let chunk = self.chunk_bytes.max(1) as u64;
         // Per-unit geometry travels in the descriptor so a resuming
@@ -830,6 +833,7 @@ impl SfmEndpoint {
             unit_bytes.push(src.unit_len(i)?);
             unit_crcs.push(src.unit_crc(i)?);
         }
+        transfer_sp.set_attr(unit_bytes.iter().sum::<u64>());
         let desc = enrich_descriptor(descriptor, n, chunk, &unit_bytes, &unit_crcs);
         // One immutable descriptor buffer per transfer, refcount-shared
         // into the initial Begin and every restart resend — Begin frames
@@ -849,6 +853,7 @@ impl SfmEndpoint {
         if policy.probe_first {
             report.probes += 1;
             self.stats.resume_probes.fetch_add(1, Ordering::Relaxed);
+            trace::instant(Stage::ResumeProbe, report.probes);
             self.send_frame(probe_frame(sid))?;
             match self.wait_sender_event(sid, policy.ack_timeout)? {
                 SenderEvent::Ack => return Ok(report), // receiver already complete
@@ -863,6 +868,7 @@ impl SfmEndpoint {
 
         // Initial data pass (skipping chunks the receiver reported having).
         for i in 0..n {
+            activity.touch();
             self.send_unit_pass(sid, i, src, chunk, have[i].as_ref(), false, &mut report)?;
         }
         self.send_frame(end_frame(sid, n))?;
@@ -876,6 +882,7 @@ impl SfmEndpoint {
         let mut rounds = 0usize;
         loop {
             rounds += 1;
+            activity.touch();
             if rounds > policy.max_attempts.saturating_mul(8) {
                 bail!(
                     "reliable send: receiver still missing data after {rounds} reconcile \
@@ -889,6 +896,7 @@ impl SfmEndpoint {
                     silent = 0;
                     report.nack_rounds += 1;
                     self.stats.nacks_received.fetch_add(1, Ordering::Relaxed);
+                    trace::instant(Stage::Nack, report.nack_rounds);
                     if info.get("restart").and_then(|j| j.as_bool()) == Some(true) {
                         // Receiver has no state for this stream (our Begin
                         // was lost): start over from the descriptor.
@@ -913,6 +921,7 @@ impl SfmEndpoint {
                     }
                     report.probes += 1;
                     self.stats.resume_probes.fetch_add(1, Ordering::Relaxed);
+                    trace::instant(Stage::ResumeProbe, report.probes);
                     self.send_frame(probe_frame(sid))?;
                 }
             }
@@ -949,6 +958,9 @@ impl SfmEndpoint {
         timeout: Option<Duration>,
     ) -> Result<(Json, ReliableReport)> {
         let mut report = ReliableReport::default();
+        let mut transfer_sp = trace::span(Stage::TransferRecv);
+        let activity = trace::watchdog::watch("transfer-recv");
+        let rx0 = self.stats.bytes_received.load(Ordering::Relaxed);
         // Wait for Begin; a Resume probe arriving first means our peer
         // believes a transfer is underway that we know nothing about
         // (its Begin was lost in a blackout) — ask for a restart.
@@ -957,6 +969,7 @@ impl SfmEndpoint {
                 Event::Begin { stream, descriptor } => break (stream, descriptor),
                 Event::Resume { stream, .. } => {
                     self.stats.nacks_sent.fetch_add(1, Ordering::Relaxed);
+                    trace::instant(Stage::Nack, 0);
                     self.send_frame(Frame::new(
                         FrameType::Nack,
                         stream,
@@ -1016,6 +1029,7 @@ impl SfmEndpoint {
         }
 
         loop {
+            activity.touch();
             match self.recv_event(timeout)? {
                 Event::UnitStart { descriptor: meta, stream } => {
                     if stream != sid {
@@ -1086,6 +1100,13 @@ impl SfmEndpoint {
                     }
                     if done_count == n {
                         self.send_ack(sid)?;
+                        transfer_sp.set_attr(
+                            self.stats
+                                .bytes_received
+                                .load(Ordering::Relaxed)
+                                .saturating_sub(rx0),
+                        );
+                        transfer_sp.end();
                         return Ok((descriptor, report));
                     }
                     // Persist partial state, then ask for what's missing.
@@ -1100,6 +1121,7 @@ impl SfmEndpoint {
                     let payload = nack_payload(&units.iter().map(|u| u.as_ref().map(|s| (&s.table, s.done))).collect::<Vec<_>>());
                     report.nack_rounds += 1;
                     self.stats.nacks_sent.fetch_add(1, Ordering::Relaxed);
+                    trace::instant(Stage::Nack, (n - done_count) as u64);
                     self.send_frame(Frame::new(
                         FrameType::Nack,
                         sid,

@@ -25,6 +25,7 @@ use crate::config::StreamingMode;
 use crate::filter::{EntryChain, FilterContext, FilterPoint, FilterSet};
 use crate::memory::{pool, PooledBuf, TrackedBuf, COMM_GAUGE};
 use crate::sfm::{ResumePolicy, SfmEndpoint, UnitSource};
+use crate::trace::{self, Stage};
 use crate::tensor::{ParamContainer, Tensor};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -112,10 +113,13 @@ fn transformed_unit(
     weights: &ParamContainer,
     i: usize,
 ) -> Result<(String, PooledBuf)> {
+    let mut sp = trace::span(Stage::Serialize);
     let name = weights.names()[i].clone();
     let t = pooled_entry_clone(weights, &name);
     let e = chain.entry(i, Entry::Plain(name, t), ctx)?;
-    let mut buf = PooledBuf::take(e.wire_len());
+    let wire_len = e.wire_len();
+    sp.set_attr(wire_len as u64);
+    let mut buf = PooledBuf::take(wire_len);
     wire::write_entry(buf.as_mut_vec(), &e)?;
     buf.resync();
     let name = e.name().to_string();
@@ -393,6 +397,8 @@ pub fn recv_weights_filtered(
     let mut discarded = false;
     let stats = {
         let mut on_entry = |i: usize, e: Entry| -> Result<EntryFlow> {
+            let mut sp = trace::span(Stage::Deserialize);
+            sp.set_attr(e.wire_len() as u64);
             let out = chain.entry(i, e, ctx)?;
             let flow = match out {
                 Entry::Plain(name, t) => sink(i, name, t)?,

@@ -62,6 +62,7 @@ use crate::filter::{
 use crate::reactor::{Reactor, SessionId, Step, WakeReason};
 use crate::sfm::{inmem, FrameType, Payload, SfmEndpoint};
 use crate::streaming::{self, WeightsMsg};
+use crate::trace::{self, Stage};
 use crate::util::json::Json;
 use crate::util::rng::SplitMix64;
 use anyhow::{anyhow, bail, Context, Result};
@@ -543,6 +544,7 @@ impl RelayNode {
             (Arc::new(m), false)
         };
         let t_fold = Instant::now();
+        let tr_fold = trace::now_ns();
 
         let skeleton = skeleton_of(&msg);
         let mut attempt = 0usize;
@@ -739,6 +741,12 @@ impl RelayNode {
         };
         let (losses, partial) = losses;
         let fold_secs = t_fold.elapsed().as_secs_f64();
+        trace::complete(
+            Stage::RelayFold,
+            tr_fold,
+            trace::now_ns().saturating_sub(tr_fold),
+            total_weight,
+        );
 
         // -- partial aggregate out (fresh tier-boundary digest) ----------
         let pmsg = WeightsMsg::Plain(partial);

@@ -1,0 +1,179 @@
+//! Chrome trace-event JSON exporter (`--trace-out`): snapshots every
+//! registered thread ring into the Trace Event Format that Perfetto /
+//! `chrome://tracing` load directly.
+//!
+//! Spans become `"X"` complete events (ts + dur in microseconds),
+//! instants `"i"`, counters `"C"`; each registered thread gets a
+//! `thread_name` metadata record so the timeline is labelled.
+
+use super::ring::EventKind;
+use super::Stage;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render the current rings as a Trace Event Format JSON string.
+pub fn render() -> String {
+    let rings = super::registered_rings();
+    let mut out = String::with_capacity(1 << 16);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    for tr in &rings {
+        emit_obj(&mut out, &mut first, |o| {
+            let _ = write!(
+                o,
+                "\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\"args\":{{\"name\":\"{}\"}}",
+                tr.id,
+                escape(&tr.name)
+            );
+        });
+        let mut events = tr.ring.snapshot();
+        events.sort_by_key(|e| e.t_ns);
+        for e in events {
+            let name = Stage::from_code(e.stage).map(|s| s.name()).unwrap_or("unknown");
+            match e.kind {
+                EventKind::Span => emit_obj(&mut out, &mut first, |o| {
+                    let _ = write!(
+                        o,
+                        "\"name\":\"{name}\",\"cat\":\"flare\",\"ph\":\"X\",\"pid\":1,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"attr\":{}}}",
+                        tr.id,
+                        micros(e.t_ns),
+                        micros(e.dur_ns),
+                        e.attr
+                    );
+                }),
+                EventKind::Instant => emit_obj(&mut out, &mut first, |o| {
+                    let _ = write!(
+                        o,
+                        "\"name\":\"{name}\",\"cat\":\"flare\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\"ts\":{},\"args\":{{\"attr\":{}}}",
+                        tr.id,
+                        micros(e.t_ns),
+                        e.attr
+                    );
+                }),
+                EventKind::Counter => emit_obj(&mut out, &mut first, |o| {
+                    let _ = write!(
+                        o,
+                        "\"name\":\"{name}\",\"cat\":\"flare\",\"ph\":\"C\",\"pid\":1,\"tid\":{},\"ts\":{},\"args\":{{\"value\":{}}}",
+                        tr.id,
+                        micros(e.t_ns),
+                        e.attr
+                    );
+                }),
+            }
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write the current trace to `path` (creating parent directories).
+pub fn export(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    let json = render();
+    std::fs::write(path, &json).with_context(|| format!("write {}", path.display()))?;
+    log::info!("trace: wrote {} bytes of trace events to {}", json.len(), path.display());
+    Ok(())
+}
+
+fn emit_obj(out: &mut String, first: &mut bool, body: impl FnOnce(&mut String)) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    out.push('{');
+    body(out);
+    out.push('}');
+}
+
+/// ns → µs with three fractional digits, formatted without going
+/// through floats (exact for the full u64 range).
+fn micros(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace;
+    use crate::util::json::Json;
+
+    #[test]
+    fn render_is_parseable_trace_json() {
+        let _g = trace::test_support::LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        trace::set_enabled(true);
+        {
+            let _sp = trace::span_with(Stage::Serialize, 123);
+        }
+        trace::instant(Stage::WheelFire, 2);
+        trace::counter(Stage::Round, 5);
+        let json = render();
+        let parsed = Json::parse(&json).expect("trace JSON parses");
+        let events = parsed
+            .at(&["traceEvents"])
+            .and_then(|v| v.as_arr())
+            .expect("traceEvents array");
+        assert!(!events.is_empty());
+        let phases: Vec<String> = events
+            .iter()
+            .filter_map(|e| e.at(&["ph"]).and_then(|p| p.as_str().map(String::from)))
+            .collect();
+        assert!(phases.iter().any(|p| p == "X"), "no complete spans: {phases:?}");
+        assert!(phases.iter().any(|p| p == "M"), "no thread metadata");
+        // Every event carries numeric ts except metadata records.
+        for e in events {
+            let ph = e.at(&["ph"]).and_then(|p| p.as_str().map(String::from));
+            if ph.as_deref() != Some("M") {
+                assert!(e.at(&["ts"]).and_then(|t| t.as_f64()).is_some(), "{e:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn micros_formats_exactly() {
+        assert_eq!(micros(0), "0.000");
+        assert_eq!(micros(1_234), "1.234");
+        assert_eq!(micros(1_000_000), "1000.000");
+        assert_eq!(micros(999), "0.999");
+    }
+
+    #[test]
+    fn escape_handles_hostile_names() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+    }
+
+    #[test]
+    fn export_writes_file() {
+        let _g = trace::test_support::LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let dir = std::env::temp_dir().join(format!("flare_chrome_{}", std::process::id()));
+        let path = dir.join("trace.json");
+        trace::set_enabled(true);
+        trace::instant(Stage::Park, 0);
+        export(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.ends_with('}'));
+        Json::parse(&text).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

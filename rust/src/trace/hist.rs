@@ -1,0 +1,388 @@
+//! Log-bucketed integer latency histograms: fixed-point, mergeable,
+//! float-free — safe to touch from the fold modules without tripping
+//! the determinism lint.
+//!
+//! Bucketing is base-2 octaves with 4 sub-buckets per octave (2
+//! mantissa bits): values 0..3 get exact unit buckets; every larger
+//! value lands in `[floor, next_floor)` where the floor is
+//! `2^e + s·2^(e-2)` — all boundaries are exact integers, so
+//! bucket assignment, merge, and encode/decode are bit-deterministic.
+//! Relative bucket width is ≤ 25% across the full u64 range in 252
+//! buckets.
+//!
+//! The binary encoding (`encode`/`decode`) is a sparse list of
+//! (bucket index, count) varint pairs; the decoder is panic-free and
+//! allocation-capped (it rides the flight-recorder wire, under the
+//! `uncapped_alloc`/`panic_path` lint gates).
+
+use super::{Stage, STAGE_COUNT};
+use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Mantissa bits per octave.
+const SUB_BITS: u32 = 2;
+/// Sub-buckets per octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Total buckets: 4 unit buckets + 62 octaves × 4 sub-buckets.
+pub const BUCKETS: usize = SUB + (62 * SUB);
+
+/// Bucket index for a value (monotonic, total over u64).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    // e = floor(log2 v) >= 2; sub = the 2 mantissa bits after the
+    // leading one.
+    let e = 63 - v.leading_zeros() as usize;
+    let sub = ((v >> (e - SUB_BITS as usize)) & (SUB as u64 - 1)) as usize;
+    SUB + (e - SUB_BITS as usize) * SUB + sub
+}
+
+/// Smallest value mapping to bucket `idx` (exact integer boundary).
+/// Indices past the last bucket saturate to the last floor.
+#[inline]
+pub fn bucket_floor(idx: usize) -> u64 {
+    let idx = idx.min(BUCKETS - 1);
+    if idx < SUB {
+        return idx as u64;
+    }
+    let o = (idx - SUB) / SUB;
+    let s = ((idx - SUB) % SUB) as u64;
+    let e = o + SUB_BITS as usize;
+    (1u64 << e) | (s << (e - SUB_BITS as usize))
+}
+
+/// A plain (non-atomic) histogram: counts per bucket plus exact totals.
+/// `sum` is the exact integer sum of recorded values (not a bucket
+/// midpoint estimate) and `attr_sum` totals the span attributes that
+/// rode along — both are what report reconciliation checks against.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hist {
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub attr_sum: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0,
+            attr_sum: 0,
+        }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.record_with_attr(v, 0);
+    }
+
+    pub fn record_with_attr(&mut self, v: u64, attr: u64) {
+        if let Some(c) = self.counts.get_mut(bucket_index(v)) {
+            *c = c.saturating_add(1);
+        }
+        self.count = self.count.saturating_add(1);
+        self.sum = self.sum.saturating_add(v);
+        self.attr_sum = self.attr_sum.saturating_add(attr);
+    }
+
+    /// Merge another histogram in (bucketwise + total addition —
+    /// associative and commutative by construction).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+        self.attr_sum = self.attr_sum.saturating_add(other.attr_sum);
+    }
+
+    /// Compact binary form: version byte, totals, then sparse
+    /// (index, count) varint pairs.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.push(1u8);
+        write_varint(&mut out, self.count);
+        write_varint(&mut out, self.sum);
+        write_varint(&mut out, self.attr_sum);
+        let nonzero = self.counts.iter().filter(|&&c| c > 0).count() as u64;
+        write_varint(&mut out, nonzero);
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                write_varint(&mut out, idx as u64);
+                write_varint(&mut out, c);
+            }
+        }
+        out
+    }
+
+    /// Panic-free decode of [`Hist::encode`] bytes; returns the
+    /// histogram and the bytes consumed. Hostile inputs (bad version,
+    /// out-of-range indices, truncation, over-long pair lists) error
+    /// out instead of panicking or over-allocating.
+    pub fn decode(buf: &[u8]) -> Result<(Hist, usize)> {
+        let mut pos = 0usize;
+        let version = match buf.first() {
+            Some(&v) => v,
+            None => bail!("hist: empty input"),
+        };
+        if version != 1 {
+            bail!("hist: unsupported version {version}");
+        }
+        pos += 1;
+        let count = read_varint(buf, &mut pos)?;
+        let sum = read_varint(buf, &mut pos)?;
+        let attr_sum = read_varint(buf, &mut pos)?;
+        let pairs = read_varint(buf, &mut pos)?;
+        if pairs > BUCKETS as u64 {
+            bail!("hist: {pairs} bucket pairs exceeds {BUCKETS}");
+        }
+        let mut h = Hist {
+            counts: vec![0; BUCKETS],
+            count,
+            sum,
+            attr_sum,
+        };
+        let mut prev: Option<u64> = None;
+        for _ in 0..pairs {
+            let idx = read_varint(buf, &mut pos)?;
+            let c = read_varint(buf, &mut pos)?;
+            if idx >= BUCKETS as u64 {
+                bail!("hist: bucket index {idx} out of range");
+            }
+            if prev.is_some_and(|p| idx <= p) {
+                bail!("hist: bucket indices not strictly increasing");
+            }
+            prev = Some(idx);
+            match h.counts.get_mut(idx as usize) {
+                Some(slot) => *slot = c,
+                None => bail!("hist: bucket index {idx} out of range"),
+            }
+        }
+        Ok((h, pos))
+    }
+}
+
+/// LEB128 varint append.
+pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// LEB128 varint read at `*pos`; rejects truncation and >10-byte runs.
+pub fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = match buf.get(*pos) {
+            Some(&b) => b,
+            None => bail!("varint: truncated at byte {}", *pos),
+        };
+        *pos += 1;
+        if shift >= 64 {
+            bail!("varint: overlong encoding");
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+// -- global per-stage atomic histograms ---------------------------------------
+
+/// Lock-free per-stage histogram: relaxed `fetch_add`s only.
+pub struct StageHist {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    attr_sum: AtomicU64,
+}
+
+impl StageHist {
+    fn new() -> StageHist {
+        StageHist {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            attr_sum: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn record(&self, v: u64, attr: u64) {
+        if let Some(c) = self.counts.get(bucket_index(v)) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.attr_sum.fetch_add(attr, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> Hist {
+        Hist {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            attr_sum: self.attr_sum.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        for c in self.counts.iter() {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.attr_sum.store(0, Ordering::Relaxed);
+    }
+}
+
+static STAGE_HISTS: Lazy<Vec<StageHist>> =
+    Lazy::new(|| (0..STAGE_COUNT).map(|_| StageHist::new()).collect());
+
+/// Record one span duration (+ attribute) for a stage.
+#[inline]
+pub fn record(stage: Stage, dur_ns: u64, attr: u64) {
+    if let Some(h) = STAGE_HISTS.get(stage.code() as usize) {
+        h.record(dur_ns, attr);
+    }
+}
+
+/// Snapshot one stage's histogram.
+pub fn snapshot(stage: Stage) -> Hist {
+    STAGE_HISTS
+        .get(stage.code() as usize)
+        .map(|h| h.snapshot())
+        .unwrap_or_default()
+}
+
+/// Test support: zero every stage histogram.
+pub fn reset() {
+    for h in STAGE_HISTS.iter() {
+        h.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_buckets_are_exact() {
+        for v in 0..4u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_floor(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn floors_are_bucket_starts() {
+        // Every bucket floor maps back to its own bucket, and floor-1
+        // maps to the previous bucket.
+        for idx in 0..BUCKETS {
+            let f = bucket_floor(idx);
+            assert_eq!(bucket_index(f), idx, "floor {f} of bucket {idx}");
+            if idx > 0 {
+                assert_eq!(bucket_index(f - 1), idx - 1, "below floor {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn index_is_monotonic_and_total() {
+        let mut last = 0usize;
+        for shift in 0..64u32 {
+            for off in [0u64, 1, 3] {
+                let v = (1u64 << shift).saturating_add(off);
+                let idx = bucket_index(v);
+                assert!(idx >= last, "v={v}");
+                assert!(idx < BUCKETS, "v={v} idx={idx}");
+                last = idx;
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut h = Hist::new();
+        for v in [0u64, 1, 5, 1023, 1024, 1 << 40, u64::MAX] {
+            h.record_with_attr(v, v / 2);
+        }
+        let bytes = h.encode();
+        let (back, used) = Hist::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn decode_rejects_hostile_input() {
+        assert!(Hist::decode(&[]).is_err());
+        assert!(Hist::decode(&[9]).is_err()); // bad version
+        assert!(Hist::decode(&[1, 0x80]).is_err()); // truncated varint
+        // Pair count exceeding the bucket table.
+        let mut buf = vec![1u8];
+        write_varint(&mut buf, 0);
+        write_varint(&mut buf, 0);
+        write_varint(&mut buf, 0);
+        write_varint(&mut buf, (BUCKETS + 1) as u64);
+        assert!(Hist::decode(&buf).is_err());
+        // Out-of-range bucket index.
+        let mut buf = vec![1u8];
+        write_varint(&mut buf, 1);
+        write_varint(&mut buf, 1);
+        write_varint(&mut buf, 0);
+        write_varint(&mut buf, 1);
+        write_varint(&mut buf, BUCKETS as u64);
+        write_varint(&mut buf, 1);
+        assert!(Hist::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn merge_matches_combined_recording() {
+        let vals_a = [3u64, 90, 7000, 1 << 30];
+        let vals_b = [0u64, 90, 1 << 50];
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut both = Hist::new();
+        for v in vals_a {
+            a.record(v);
+            both.record(v);
+        }
+        for v in vals_b {
+            b.record(v);
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Std-only HTTP `/metrics` endpoint: Prometheus text exposition
+//! (version 0.0.4) over a plain `TcpListener`, served from a daemon
+//! thread. No framework, no async runtime — one accept loop, one
+//! short-lived handler per scrape.
+//!
+//! Exposition stays float-free: histogram bucket boundaries are the
+//! exact integer nanosecond floors of [`super::hist`], and every sample
+//! value is an integer — no NaN/Inf can appear by construction.
+
+use super::hist;
+use super::{recorder, watchdog, Stage, STAGES};
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Handle to a running metrics server (daemon thread; dropping the
+/// handle does not stop it — it lives for the process).
+pub struct MetricsServer {
+    addr: SocketAddr,
+}
+
+impl MetricsServer {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and serve
+/// `/metrics` forever from a daemon thread.
+pub fn serve(addr: &str) -> Result<MetricsServer> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind metrics on {addr}"))?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new()
+        .name("flare-metrics".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                match conn {
+                    Ok(stream) => {
+                        if let Err(e) = handle(stream) {
+                            log::debug!("metrics: request failed: {e:#}");
+                        }
+                    }
+                    Err(e) => log::debug!("metrics: accept failed: {e}"),
+                }
+            }
+        })
+        .context("spawn metrics thread")?;
+    log::info!("metrics: serving Prometheus exposition on http://{local}/metrics");
+    Ok(MetricsServer { addr: local })
+}
+
+fn handle(mut stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    // Read the request head (bounded; we only need the request line).
+    let mut buf = [0u8; 4096];
+    let mut used = 0usize;
+    while used < buf.len() {
+        let n = stream.read(&mut buf[used..])?;
+        if n == 0 {
+            break;
+        }
+        used += n;
+        if buf[..used].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = String::from_utf8_lossy(&buf[..used]);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/");
+    if path == "/metrics" || path.starts_with("/metrics?") {
+        let body = render();
+        let resp = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        stream.write_all(resp.as_bytes())?;
+    } else {
+        let body = "not found; try /metrics\n";
+        let resp = format!(
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        stream.write_all(resp.as_bytes())?;
+    }
+    Ok(())
+}
+
+/// Render the Prometheus text exposition for the current trace state.
+pub fn render() -> String {
+    let mut out = String::with_capacity(1 << 14);
+
+    out.push_str("# HELP flare_trace_enabled Whether trace event capture is on.\n");
+    out.push_str("# TYPE flare_trace_enabled gauge\n");
+    let _ = writeln!(out, "flare_trace_enabled {}", u64::from(super::enabled()));
+
+    out.push_str("# HELP flare_trace_threads Registered per-thread trace rings.\n");
+    out.push_str("# TYPE flare_trace_threads gauge\n");
+    let _ = writeln!(out, "flare_trace_threads {}", super::registered_rings().len());
+
+    out.push_str("# HELP flare_stalls_total Stall episodes flagged by the watchdog.\n");
+    out.push_str("# TYPE flare_stalls_total counter\n");
+    let _ = writeln!(out, "flare_stalls_total {}", watchdog::stalls());
+
+    out.push_str("# HELP flare_recorder_trips_total Flight-recorder dumps written.\n");
+    out.push_str("# TYPE flare_recorder_trips_total counter\n");
+    let _ = writeln!(out, "flare_recorder_trips_total {}", recorder::trips());
+
+    out.push_str(
+        "# HELP flare_stage_events_total Span samples recorded per stage.\n\
+         # TYPE flare_stage_events_total counter\n",
+    );
+    let snaps: Vec<(Stage, hist::Hist)> = STAGES
+        .iter()
+        .map(|&s| (s, hist::snapshot(s)))
+        .filter(|(_, h)| h.count > 0)
+        .collect();
+    for (s, h) in &snaps {
+        let _ = writeln!(out, "flare_stage_events_total{{stage=\"{}\"}} {}", s.name(), h.count);
+    }
+
+    out.push_str(
+        "# HELP flare_stage_attr_total Summed span attributes per stage (bytes for transfer stages).\n\
+         # TYPE flare_stage_attr_total counter\n",
+    );
+    for (s, h) in &snaps {
+        let _ = writeln!(out, "flare_stage_attr_total{{stage=\"{}\"}} {}", s.name(), h.attr_sum);
+    }
+
+    out.push_str(
+        "# HELP flare_stage_duration_ns Span durations per stage, log-bucketed (ns).\n\
+         # TYPE flare_stage_duration_ns histogram\n",
+    );
+    for (s, h) in &snaps {
+        let name = s.name();
+        let mut cum = 0u64;
+        for (idx, &c) in h.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum = cum.saturating_add(c);
+            // `le` is the exclusive upper boundary of the bucket — the
+            // next bucket's exact integer floor.
+            let _ = writeln!(
+                out,
+                "flare_stage_duration_ns_bucket{{stage=\"{name}\",le=\"{}\"}} {cum}",
+                hist::bucket_floor(idx + 1)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "flare_stage_duration_ns_bucket{{stage=\"{name}\",le=\"+Inf\"}} {}",
+            h.count
+        );
+        let _ = writeln!(out, "flare_stage_duration_ns_sum{{stage=\"{name}\"}} {}", h.sum);
+        let _ = writeln!(out, "flare_stage_duration_ns_count{{stage=\"{name}\"}} {}", h.count);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace;
+
+    #[test]
+    fn render_has_core_families_and_no_nan() {
+        let _g = trace::test_support::LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        trace::set_enabled(true);
+        {
+            let _sp = trace::span_with(Stage::Gather, 10);
+        }
+        let text = render();
+        for family in [
+            "flare_trace_enabled",
+            "flare_trace_threads",
+            "flare_stalls_total",
+            "flare_recorder_trips_total",
+            "flare_stage_duration_ns",
+        ] {
+            assert!(text.contains(family), "missing {family}:\n{text}");
+        }
+        assert!(text.contains("le=\"+Inf\""));
+        // The only Inf in the exposition is the +Inf bucket label; no
+        // NaN/Inf sample values.
+        let stripped = text.replace("le=\"+Inf\"", "");
+        assert!(!stripped.contains("Inf") && !stripped.contains("NaN"));
+    }
+
+    #[test]
+    fn serve_and_scrape_loopback() {
+        let _g = trace::test_support::LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        trace::set_enabled(true);
+        trace::instant(Stage::WheelFire, 1);
+        let srv = serve("127.0.0.1:0").expect("bind");
+        let mut conn = TcpStream::connect(srv.addr()).expect("connect");
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("flare_trace_enabled"));
+        // Unknown path 404s.
+        let mut conn = TcpStream::connect(srv.addr()).unwrap();
+        conn.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+    }
+}

@@ -1,0 +1,374 @@
+//! Flight recorder: on a trip (quarantine, session failure, journal
+//! crash-hook, stall) dump the last N trace events of every registered
+//! thread — plus the stage histograms — to a binary file for
+//! post-mortem decoding.
+//!
+//! File format (`FLFR` magic, version 1, all integers LE / varint):
+//!
+//! ```text
+//! magic[8] = "FLFR\x01\0\0\0"
+//! t_dump_ns   u64
+//! reason      varint len + bytes
+//! n_threads   varint
+//!   per thread: id varint, name (varint len + bytes),
+//!               n_events varint, events (27 bytes each:
+//!               kind u8, stage u16, t_ns u64, dur_ns u64, attr u64)
+//! n_hists     varint
+//!   per hist:   stage code varint, Hist::encode bytes
+//! ```
+//!
+//! The decoder is panic-free and allocation-capped: dumps cross process
+//! boundaries, so [`FlightDump::decode`] treats its input as hostile
+//! (it is fuzzed alongside the frame/journal decoders).
+
+use super::hist::{self, read_varint, write_varint, Hist};
+use super::ring::{Event, EventKind};
+use super::{instant, Stage, STAGES};
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub const MAGIC: [u8; 8] = *b"FLFR\x01\0\0\0";
+
+/// Dumps per process are capped: a crash loop must not fill the disk.
+const MAX_DUMPS: u64 = 16;
+
+/// Decode-side caps (hostile input).
+const MAX_REASON: usize = 1024;
+const MAX_THREADS: usize = 65_536;
+const MAX_EVENTS_PER_THREAD: usize = 1 << 22;
+const MAX_NAME: usize = 1024;
+
+const EVENT_BYTES: usize = 27;
+
+static DUMP_DIR: Lazy<Mutex<Option<PathBuf>>> = Lazy::new(|| Mutex::new(None));
+static TRIPS: AtomicU64 = AtomicU64::new(0);
+
+/// Arm the recorder: subsequent trips write dumps into `dir`.
+pub fn arm(dir: &Path) {
+    let mut d = DUMP_DIR.lock().unwrap_or_else(|p| p.into_inner());
+    *d = Some(dir.to_path_buf());
+}
+
+pub fn disarm() {
+    let mut d = DUMP_DIR.lock().unwrap_or_else(|p| p.into_inner());
+    *d = None;
+}
+
+pub fn armed() -> bool {
+    DUMP_DIR
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .is_some()
+}
+
+/// Dumps written by this process so far.
+pub fn trips() -> u64 {
+    TRIPS.load(Ordering::Relaxed)
+}
+
+/// Trip the recorder: if armed (and under the per-process dump cap),
+/// snapshot every thread ring + the stage histograms and write a dump
+/// file. Returns the file path when one was written. Never fails the
+/// caller — a recorder that can crash the recorded system is worse
+/// than no recorder.
+pub fn trip(reason: &str) -> Option<PathBuf> {
+    let dir = DUMP_DIR
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .clone()?;
+    let seq = TRIPS.fetch_add(1, Ordering::Relaxed);
+    if seq >= MAX_DUMPS {
+        return None;
+    }
+    // The trip instant rides in the dump itself.
+    instant(Stage::RecorderTrip, seq);
+    let bytes = encode_dump(reason);
+    let slug: String = reason
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .take(40)
+        .collect();
+    let path = dir.join(format!(
+        "flight-{:05}-{seq:02}-{slug}.bin",
+        std::process::id()
+    ));
+    if let Err(e) = std::fs::create_dir_all(&dir).and_then(|()| std::fs::write(&path, &bytes)) {
+        log::warn!("flight recorder: dump to {} failed: {e}", path.display());
+        return None;
+    }
+    log::warn!(
+        "flight recorder: dumped {} events from {} thread(s) to {} ({reason})",
+        bytes.len(),
+        super::registered_rings().len(),
+        path.display()
+    );
+    Some(path)
+}
+
+/// Serialize the current rings + histograms.
+pub fn encode_dump(reason: &str) -> Vec<u8> {
+    let rings = super::registered_rings();
+    let mut out = Vec::with_capacity(4096);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&super::now_ns().to_le_bytes());
+    let reason = reason.as_bytes();
+    let rlen = reason.len().min(MAX_REASON);
+    write_varint(&mut out, rlen as u64);
+    out.extend_from_slice(&reason[..rlen]);
+    write_varint(&mut out, rings.len() as u64);
+    for tr in &rings {
+        write_varint(&mut out, tr.id);
+        let name = tr.name.as_bytes();
+        let nlen = name.len().min(MAX_NAME);
+        write_varint(&mut out, nlen as u64);
+        out.extend_from_slice(&name[..nlen]);
+        let events = tr.ring.snapshot();
+        write_varint(&mut out, events.len() as u64);
+        for e in &events {
+            out.push(e.kind as u8);
+            out.extend_from_slice(&e.stage.to_le_bytes());
+            out.extend_from_slice(&e.t_ns.to_le_bytes());
+            out.extend_from_slice(&e.dur_ns.to_le_bytes());
+            out.extend_from_slice(&e.attr.to_le_bytes());
+        }
+    }
+    let hists: Vec<(u16, Hist)> = STAGES
+        .iter()
+        .map(|&s| (s.code(), hist::snapshot(s)))
+        .filter(|(_, h)| h.count > 0)
+        .collect();
+    write_varint(&mut out, hists.len() as u64);
+    for (code, h) in &hists {
+        write_varint(&mut out, *code as u64);
+        out.extend_from_slice(&h.encode());
+    }
+    out
+}
+
+/// One thread's section of a decoded dump.
+#[derive(Debug, Clone)]
+pub struct ThreadDump {
+    pub id: u64,
+    pub name: String,
+    pub events: Vec<Event>,
+}
+
+/// A decoded flight-recorder dump.
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    pub t_dump_ns: u64,
+    pub reason: String,
+    pub threads: Vec<ThreadDump>,
+    pub hists: Vec<(u16, Hist)>,
+}
+
+impl FlightDump {
+    pub fn read_file(path: &Path) -> Result<FlightDump> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read flight dump {}", path.display()))?;
+        FlightDump::decode(&bytes)
+    }
+
+    /// Panic-free decode of a dump file's bytes.
+    pub fn decode(buf: &[u8]) -> Result<FlightDump> {
+        let mut pos = 0usize;
+        let magic = take(buf, &mut pos, 8)?;
+        if magic != MAGIC {
+            bail!("flight dump: bad magic");
+        }
+        let t_dump_ns = take_u64(buf, &mut pos)?;
+        let rlen = read_varint(buf, &mut pos)? as usize;
+        if rlen > MAX_REASON {
+            bail!("flight dump: reason length {rlen} exceeds {MAX_REASON}");
+        }
+        let reason = String::from_utf8_lossy(take(buf, &mut pos, rlen)?).into_owned();
+        let n_threads = read_varint(buf, &mut pos)? as usize;
+        if n_threads > MAX_THREADS {
+            bail!("flight dump: {n_threads} threads exceeds {MAX_THREADS}");
+        }
+        let mut threads = Vec::with_capacity(n_threads.min(MAX_THREADS));
+        for _ in 0..n_threads {
+            let id = read_varint(buf, &mut pos)?;
+            let nlen = read_varint(buf, &mut pos)? as usize;
+            if nlen > MAX_NAME {
+                bail!("flight dump: thread name length {nlen} exceeds {MAX_NAME}");
+            }
+            let name = String::from_utf8_lossy(take(buf, &mut pos, nlen)?).into_owned();
+            let n_events = read_varint(buf, &mut pos)? as usize;
+            if n_events > MAX_EVENTS_PER_THREAD {
+                bail!("flight dump: {n_events} events exceeds {MAX_EVENTS_PER_THREAD}");
+            }
+            // A declared count must be backed by bytes before any
+            // allocation happens (declared-length-cap discipline).
+            let need = n_events
+                .checked_mul(EVENT_BYTES)
+                .ok_or_else(|| anyhow::anyhow!("flight dump: event count overflow"))?;
+            if buf.len().saturating_sub(pos) < need {
+                bail!("flight dump: truncated event section");
+            }
+            let mut events = Vec::with_capacity(n_events.min(MAX_EVENTS_PER_THREAD));
+            for _ in 0..n_events {
+                events.push(decode_event(buf, &mut pos)?);
+            }
+            threads.push(ThreadDump { id, name, events });
+        }
+        let n_hists = read_varint(buf, &mut pos)? as usize;
+        if n_hists > STAGES.len() {
+            bail!("flight dump: {n_hists} histograms exceeds {}", STAGES.len());
+        }
+        let mut hists = Vec::with_capacity(n_hists.min(64));
+        let mut prev: Option<u64> = None;
+        for _ in 0..n_hists {
+            let code = read_varint(buf, &mut pos)?;
+            if code >= STAGES.len() as u64 {
+                bail!("flight dump: unknown stage code {code}");
+            }
+            if prev.is_some_and(|p| code <= p) {
+                bail!("flight dump: stage codes not strictly increasing");
+            }
+            prev = Some(code);
+            let rest = buf.get(pos..).unwrap_or(&[]);
+            let (h, used) = Hist::decode(rest)?;
+            pos = pos.saturating_add(used);
+            hists.push((code as u16, h));
+        }
+        if pos != buf.len() {
+            bail!("flight dump: {} trailing byte(s)", buf.len() - pos);
+        }
+        Ok(FlightDump {
+            t_dump_ns,
+            reason,
+            threads,
+            hists,
+        })
+    }
+
+    /// All events across threads with a given stage code, in per-thread
+    /// order (test helper for "last events match the journal").
+    pub fn events_for_stage(&self, stage: Stage) -> Vec<Event> {
+        let code = stage.code();
+        self.threads
+            .iter()
+            .flat_map(|t| t.events.iter().filter(|e| e.stage == code).copied())
+            .collect()
+    }
+}
+
+fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(n)
+        .ok_or_else(|| anyhow::anyhow!("flight dump: offset overflow"))?;
+    let s = buf
+        .get(*pos..end)
+        .ok_or_else(|| anyhow::anyhow!("flight dump: truncated at byte {}", *pos))?;
+    *pos = end;
+    Ok(s)
+}
+
+fn take_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let s = take(buf, pos, 8)?;
+    let arr: [u8; 8] = s
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("flight dump: short u64"))?;
+    Ok(u64::from_le_bytes(arr))
+}
+
+fn take_u16(buf: &[u8], pos: &mut usize) -> Result<u16> {
+    let s = take(buf, pos, 2)?;
+    let arr: [u8; 2] = s
+        .try_into()
+        .map_err(|_| anyhow::anyhow!("flight dump: short u16"))?;
+    Ok(u16::from_le_bytes(arr))
+}
+
+fn decode_event(buf: &[u8], pos: &mut usize) -> Result<Event> {
+    let kind_code = match take(buf, pos, 1)?.first() {
+        Some(&b) => b,
+        None => bail!("flight dump: missing event kind"),
+    };
+    let kind = EventKind::from_code(kind_code)
+        .ok_or_else(|| anyhow::anyhow!("flight dump: unknown event kind {kind_code}"))?;
+    let stage = take_u16(buf, pos)?;
+    if stage as usize >= STAGES.len() {
+        bail!("flight dump: unknown stage code {stage}");
+    }
+    Ok(Event {
+        kind,
+        stage,
+        t_ns: take_u64(buf, pos)?,
+        dur_ns: take_u64(buf, pos)?,
+        attr: take_u64(buf, pos)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace;
+
+    #[test]
+    fn dump_roundtrips_and_carries_events() {
+        let _g = trace::test_support::LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        trace::set_enabled(true);
+        trace::instant(Stage::Nack, 99);
+        {
+            let _sp = trace::span_with(Stage::Quantize, 17);
+        }
+        let bytes = encode_dump("unit-test");
+        let dump = FlightDump::decode(&bytes).unwrap();
+        assert_eq!(dump.reason, "unit-test");
+        assert!(!dump.threads.is_empty());
+        let nacks = dump.events_for_stage(Stage::Nack);
+        assert!(nacks.iter().any(|e| e.attr == 99));
+        // The quantize span also reached the stage histograms.
+        assert!(dump
+            .hists
+            .iter()
+            .any(|(c, h)| *c == Stage::Quantize.code() && h.count > 0));
+    }
+
+    #[test]
+    fn decode_rejects_hostile_input() {
+        assert!(FlightDump::decode(&[]).is_err());
+        assert!(FlightDump::decode(b"NOTMAGIC").is_err());
+        let good = encode_dump("x");
+        // Truncation at every prefix must error, never panic.
+        for cut in 0..good.len().min(64) {
+            assert!(FlightDump::decode(&good[..cut]).is_err(), "cut={cut}");
+        }
+        // Trailing garbage is rejected.
+        let mut padded = good.clone();
+        padded.push(0);
+        assert!(FlightDump::decode(&padded).is_err());
+        // A huge declared event count must not allocate.
+        let mut forged = Vec::new();
+        forged.extend_from_slice(&MAGIC);
+        forged.extend_from_slice(&0u64.to_le_bytes());
+        write_varint(&mut forged, 0); // reason len
+        write_varint(&mut forged, 1); // one thread
+        write_varint(&mut forged, 1); // id
+        write_varint(&mut forged, 0); // name len
+        write_varint(&mut forged, u32::MAX as u64); // declared events
+        assert!(FlightDump::decode(&forged).is_err());
+    }
+
+    #[test]
+    fn trip_writes_capped_dumps() {
+        let _g = trace::test_support::LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        trace::set_enabled(true);
+        let dir = std::env::temp_dir().join(format!("flare_fr_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        arm(&dir);
+        trace::instant(Stage::Stall, 1);
+        let p = trip("test-trip").expect("armed trip writes a dump");
+        assert!(p.exists());
+        let dump = FlightDump::read_file(&p).unwrap();
+        assert!(dump.reason.contains("test-trip"));
+        disarm();
+        assert!(trip("disarmed").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,254 @@
+//! Per-thread lock-free trace ring: a fixed-size circular buffer of
+//! binary events, written by exactly one thread and readable at any time
+//! by dump/export threads.
+//!
+//! Each slot is a seqlock: the writer bumps the slot's sequence word to
+//! odd, stores the packed payload with relaxed atomics, then publishes
+//! an even sequence with release ordering. A reader validates the
+//! sequence (even, and unchanged across the payload loads) and skips
+//! slots caught mid-write — a torn slot is dropped, never observed.
+//! The writer never blocks and never allocates.
+//!
+//! Memory cost: 40 bytes per slot (one sequence word + four payload
+//! words); the default 2048-slot ring is 80 KiB per thread.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// Smallest permitted ring (power of two).
+pub const MIN_SLOTS: usize = 64;
+
+/// Trace event kinds, packed into the low byte of the first payload
+/// word. Codes are persisted in flight-recorder dumps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Completed span: `t_ns` start, `dur_ns` length.
+    Span = 0,
+    /// Point event at `t_ns`.
+    Instant = 1,
+    /// Counter sample: `attr` is the value.
+    Counter = 2,
+}
+
+impl EventKind {
+    pub fn from_code(code: u8) -> Option<EventKind> {
+        Some(match code {
+            0 => EventKind::Span,
+            1 => EventKind::Instant,
+            2 => EventKind::Counter,
+            _ => return None,
+        })
+    }
+}
+
+/// One binary trace record. 27 bytes on the flight-recorder wire; packed
+/// into four u64 words in ring slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// [`crate::trace::Stage`] code.
+    pub stage: u16,
+    /// Start time, ns since the process trace epoch.
+    pub t_ns: u64,
+    /// Span duration (0 for instants/counters).
+    pub dur_ns: u64,
+    /// Stage-specific attribute (bytes, ids, values).
+    pub attr: u64,
+}
+
+impl Event {
+    #[inline]
+    fn pack(&self) -> [u64; 4] {
+        [
+            self.kind as u64 | (self.stage as u64) << 8,
+            self.t_ns,
+            self.dur_ns,
+            self.attr,
+        ]
+    }
+
+    #[inline]
+    fn unpack(w: [u64; 4]) -> Option<Event> {
+        Some(Event {
+            kind: EventKind::from_code(w[0] as u8)?,
+            stage: (w[0] >> 8) as u16,
+            t_ns: w[1],
+            dur_ns: w[2],
+            attr: w[3],
+        })
+    }
+}
+
+/// One seqlock slot. `seq` starts at 0 (never written); a write takes it
+/// odd (in progress) then even (published).
+struct Slot {
+    seq: AtomicU64,
+    data: [AtomicU64; 4],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            data: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+        }
+    }
+
+    /// Seqlock-validated read. `None`: never written, or caught mid-write.
+    fn read(&self) -> Option<Event> {
+        let s1 = self.seq.load(Ordering::Acquire);
+        if s1 == 0 || s1 & 1 == 1 {
+            return None;
+        }
+        let mut w = [0u64; 4];
+        for (dst, src) in w.iter_mut().zip(self.data.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        fence(Ordering::Acquire);
+        let s2 = self.seq.load(Ordering::Relaxed);
+        if s1 != s2 {
+            return None;
+        }
+        Event::unpack(w)
+    }
+}
+
+/// Fixed-size single-writer event ring.
+///
+/// The push path is only reachable through the thread-local handle in
+/// [`crate::trace`], which guarantees the single-writer invariant the
+/// seqlock relies on.
+pub struct Ring {
+    slots: Box<[Slot]>,
+    /// Events ever published (monotonic; slot = head % len).
+    head: AtomicU64,
+}
+
+impl Ring {
+    /// `slots` is rounded up to a power of two and clamped to
+    /// [`MIN_SLOTS`].
+    pub fn new(slots: usize) -> Ring {
+        let n = slots.next_power_of_two().max(MIN_SLOTS);
+        Ring {
+            slots: (0..n).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events ever pushed (not capped at capacity).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Single-writer append. Overwrites the oldest slot once full.
+    #[inline]
+    pub fn push(&self, ev: &Event) {
+        let h = self.head.load(Ordering::Relaxed);
+        let mask = self.slots.len() - 1;
+        let slot = &self.slots[h as usize & mask];
+        let s = slot.seq.load(Ordering::Relaxed);
+        // Odd: write in progress. The release fence orders the odd
+        // store before the payload stores for any reader that pairs it
+        // with an acquire fence after its payload loads.
+        slot.seq.store(s.wrapping_add(1), Ordering::Relaxed);
+        fence(Ordering::Release);
+        let w = ev.pack();
+        for (dst, src) in slot.data.iter().zip(w.iter()) {
+            dst.store(*src, Ordering::Relaxed);
+        }
+        // Even: published; release makes the payload visible first.
+        slot.seq.store(s.wrapping_add(2), Ordering::Release);
+        self.head.store(h.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Copy out the retained events, oldest first. Slots caught
+    /// mid-write (the writer is lapping the reader) are skipped.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let h = self.head.load(Ordering::Acquire);
+        let n = self.slots.len() as u64;
+        let count = h.min(n);
+        let mask = self.slots.len() - 1;
+        let mut out = Vec::with_capacity(count as usize);
+        for i in h - count..h {
+            if let Some(ev) = self.slots[i as usize & mask].read() {
+                out.push(ev);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stage: u16, t: u64) -> Event {
+        Event {
+            kind: EventKind::Span,
+            stage,
+            t_ns: t,
+            dur_ns: t * 2,
+            attr: t * 3,
+        }
+    }
+
+    #[test]
+    fn empty_ring_snapshots_empty() {
+        let r = Ring::new(64);
+        assert!(r.snapshot().is_empty());
+        assert_eq!(r.pushed(), 0);
+    }
+
+    #[test]
+    fn events_roundtrip_in_order() {
+        let r = Ring::new(64);
+        for i in 0..10u64 {
+            r.push(&ev(3, i + 1));
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 10);
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(*e, ev(3, i as u64 + 1));
+        }
+    }
+
+    #[test]
+    fn wraparound_keeps_newest() {
+        let r = Ring::new(64);
+        assert_eq!(r.capacity(), 64);
+        for i in 0..1000u64 {
+            r.push(&ev(1, i));
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 64);
+        // Oldest retained event is 1000 - 64 = 936.
+        for (i, e) in snap.iter().enumerate() {
+            assert_eq!(e.t_ns, 936 + i as u64);
+        }
+        assert_eq!(r.pushed(), 1000);
+    }
+
+    #[test]
+    fn sizes_clamp_to_power_of_two() {
+        assert_eq!(Ring::new(0).capacity(), MIN_SLOTS);
+        assert_eq!(Ring::new(100).capacity(), 128);
+        assert_eq!(Ring::new(128).capacity(), 128);
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for k in [EventKind::Span, EventKind::Instant, EventKind::Counter] {
+            assert_eq!(EventKind::from_code(k as u8), Some(k));
+        }
+        assert_eq!(EventKind::from_code(3), None);
+    }
+}

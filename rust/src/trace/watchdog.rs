@@ -1,0 +1,193 @@
+//! Stall watchdog: a single daemon thread riding a
+//! [`DeadlineWheel`](crate::reactor::wheel::DeadlineWheel) that checks
+//! registered activities for idleness past a configurable threshold.
+//!
+//! Anything long-running registers an [`Activity`] (a transfer, the
+//! round driver) and calls [`Activity::touch`] on progress — one relaxed
+//! atomic store. When the watchdog finds an activity idle past the
+//! threshold it emits a [`Stage::Stall`] instant, bumps the stall
+//! counter, and trips the flight recorder (once per stall episode; the
+//! flag re-arms when activity resumes). Dropping the `Activity` handle
+//! retires the watch without flagging.
+
+use super::{instant, now_ns, recorder, Stage};
+use crate::reactor::wheel::DeadlineWheel;
+use once_cell::sync::Lazy;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct WatchShared {
+    name: String,
+    /// Last-activity timestamp, trace-epoch ns.
+    last_ns: AtomicU64,
+    /// Set while an episode is flagged, so one stall trips once.
+    flagged: AtomicBool,
+}
+
+/// Handle to a watched activity. Touch on progress; drop to retire.
+pub struct Activity(Arc<WatchShared>);
+
+impl Activity {
+    /// Record progress — one relaxed store.
+    #[inline]
+    pub fn touch(&self) {
+        self.0.last_ns.store(now_ns(), Ordering::Relaxed);
+        self.0.flagged.store(false, Ordering::Relaxed);
+    }
+}
+
+static WATCHES: Lazy<Mutex<Vec<Arc<WatchShared>>>> = Lazy::new(|| Mutex::new(Vec::new()));
+static STALLS: AtomicU64 = AtomicU64::new(0);
+/// Threshold in ns; 0 = watchdog not running.
+static THRESHOLD_NS: AtomicU64 = AtomicU64::new(0);
+static STARTED: AtomicBool = AtomicBool::new(false);
+
+/// Register an activity with the watchdog. Cheap enough per transfer;
+/// the returned handle's `touch` is the hot-path call.
+pub fn watch(name: &str) -> Activity {
+    let shared = Arc::new(WatchShared {
+        name: name.to_string(),
+        last_ns: AtomicU64::new(now_ns()),
+        flagged: AtomicBool::new(false),
+    });
+    let mut w = WATCHES.lock().unwrap_or_else(|p| p.into_inner());
+    // Retired handles (only the registry holds them) are pruned on the
+    // registration path so the table tracks live activities.
+    w.retain(|s| Arc::strong_count(s) > 1);
+    w.push(Arc::clone(&shared));
+    Activity(shared)
+}
+
+/// Stalls detected since process start.
+pub fn stalls() -> u64 {
+    STALLS.load(Ordering::Relaxed)
+}
+
+/// Currently-configured threshold (ns); 0 when the watchdog is off.
+pub fn threshold_ns() -> u64 {
+    THRESHOLD_NS.load(Ordering::Relaxed)
+}
+
+/// Start (or retune) the watchdog with the given stall threshold. The
+/// checker thread is spawned once per process and daemonized — it never
+/// blocks shutdown.
+pub fn start(threshold: Duration) {
+    THRESHOLD_NS.store(threshold.as_nanos() as u64, Ordering::Relaxed);
+    if STARTED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    std::thread::Builder::new()
+        .name("flare-watchdog".into())
+        .spawn(watchdog_loop)
+        .map(|_| ())
+        .unwrap_or_else(|e| {
+            STARTED.store(false, Ordering::SeqCst);
+            log::warn!("watchdog: spawn failed: {e}");
+        });
+}
+
+/// Watchdog body: schedule check ticks on a deadline wheel (the same
+/// machinery reactor timers use), sleep to the wheel's next deadline,
+/// then sweep the watch table.
+fn watchdog_loop() {
+    let mut wheel = DeadlineWheel::with_defaults();
+    loop {
+        let thresh = THRESHOLD_NS.load(Ordering::Relaxed);
+        // Check at a quarter of the threshold so detection latency is
+        // bounded by 1.25 × threshold.
+        let tick = Duration::from_nanos((thresh / 4).clamp(1_000_000, 1_000_000_000));
+        wheel.insert(Instant::now() + tick, 0);
+        while let Some(dl) = wheel.next_deadline() {
+            let now = Instant::now();
+            if dl > now {
+                std::thread::sleep(dl - now);
+            }
+            let fired = wheel.expired(Instant::now());
+            if !fired.is_empty() {
+                break;
+            }
+        }
+        sweep(thresh);
+    }
+}
+
+fn sweep(thresh_ns: u64) {
+    if thresh_ns == 0 {
+        return;
+    }
+    let now = now_ns();
+    let watches: Vec<Arc<WatchShared>> = {
+        let w = WATCHES.lock().unwrap_or_else(|p| p.into_inner());
+        w.iter().filter(|s| Arc::strong_count(s) > 1).map(Arc::clone).collect()
+    };
+    for s in watches {
+        let idle = now.saturating_sub(s.last_ns.load(Ordering::Relaxed));
+        if idle > thresh_ns && !s.flagged.swap(true, Ordering::Relaxed) {
+            STALLS.fetch_add(1, Ordering::Relaxed);
+            instant(Stage::Stall, idle);
+            log::warn!(
+                "watchdog: '{}' stalled for {:.1}s (threshold {:.1}s)",
+                s.name,
+                idle as f64 / 1e9,
+                thresh_ns as f64 / 1e9
+            );
+            recorder::trip(&format!("stall-{}", s.name));
+        }
+    }
+}
+
+/// Test support: run one sweep synchronously with an explicit threshold
+/// (no daemon thread required).
+pub fn sweep_for_test(threshold: Duration) {
+    sweep(threshold.as_nanos() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sweeps read the global watch table; serialize the tests so one
+    // test's backdated entry can't be flagged by another's sweep.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn touch_keeps_activity_unflagged() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let a = watch("touchy");
+        a.touch();
+        let before = stalls();
+        sweep_for_test(Duration::from_secs(3600));
+        assert_eq!(stalls(), before);
+    }
+
+    #[test]
+    fn idle_activity_flags_once_until_resumed() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let a = watch("idler-test");
+        // Backdate the activity far past any threshold.
+        a.0.last_ns.store(0, Ordering::Relaxed);
+        let before = stalls();
+        sweep_for_test(Duration::from_nanos(1));
+        assert_eq!(stalls(), before + 1);
+        // Same episode: no double-count.
+        sweep_for_test(Duration::from_nanos(1));
+        assert_eq!(stalls(), before + 1);
+        // Resumed, then stalled again: a fresh episode counts.
+        a.touch();
+        a.0.last_ns.store(0, Ordering::Relaxed);
+        sweep_for_test(Duration::from_nanos(1));
+        assert_eq!(stalls(), before + 2);
+    }
+
+    #[test]
+    fn dropped_activity_is_retired() {
+        let _g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let a = watch("dropper");
+        a.0.last_ns.store(0, Ordering::Relaxed);
+        let before = stalls();
+        drop(a);
+        sweep_for_test(Duration::from_nanos(1));
+        assert_eq!(stalls(), before);
+    }
+}

@@ -88,6 +88,7 @@ impl Backoff {
         let delay = Duration::from_nanos(jitter).min(remaining);
         self.slept = self.slept.saturating_add(delay);
         self.attempt = self.attempt.saturating_add(1);
+        crate::trace::instant(crate::trace::Stage::BackoffRetry, delay.as_millis() as u64);
         Some(delay)
     }
 

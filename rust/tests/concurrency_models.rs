@@ -330,6 +330,101 @@ fn pool_shelf_is_bounded_by_class_cap() {
 }
 
 // ---------------------------------------------------------------------------
+// Trace ring: single-writer seqlock ring under a racing snapshot reader.
+// ---------------------------------------------------------------------------
+
+/// One writer lapping the ring many times while a reader snapshots
+/// concurrently: every observed event must be internally consistent
+/// (the seqlock's whole point — torn slots are skipped, never surfaced)
+/// and every snapshot must be a window of the write sequence.
+#[test]
+fn trace_ring_reader_never_observes_torn_events() {
+    use flare::trace::ring::{Event, EventKind, Ring};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let ring = Arc::new(Ring::new(64));
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let ring = Arc::clone(&ring);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut snapshots = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                for e in ring.snapshot() {
+                    // The writer keeps dur = 2t and attr = 3t; a torn
+                    // read mixing two events breaks the relation.
+                    assert_eq!(e.dur_ns, e.t_ns * 2, "torn event: {e:?}");
+                    assert_eq!(e.attr, e.t_ns.wrapping_mul(3), "torn event: {e:?}");
+                    assert_eq!(e.kind, EventKind::Span);
+                }
+                snapshots += 1;
+            }
+            snapshots
+        })
+    };
+    for t in 1..50_000u64 {
+        ring.push(&Event {
+            kind: EventKind::Span,
+            stage: 1,
+            t_ns: t,
+            dur_ns: t * 2,
+            attr: t.wrapping_mul(3),
+        });
+    }
+    stop.store(true, Ordering::Relaxed);
+    let snapshots = reader.join().unwrap();
+    assert!(snapshots > 0, "reader never ran");
+    assert_eq!(ring.pushed(), 49_999);
+    // Quiescent wraparound: the final snapshot is the newest full window.
+    let snap = ring.snapshot();
+    assert_eq!(snap.len(), 64);
+    assert_eq!(snap.first().map(|e| e.t_ns), Some(49_999 - 64 + 1));
+    assert_eq!(snap.last().map(|e| e.t_ns), Some(49_999));
+}
+
+/// Snapshot ordering survives wraparound even while the writer keeps
+/// appending: events within one snapshot are strictly ordered by the
+/// writer's sequence (t_ns here), oldest first.
+#[test]
+fn trace_ring_snapshots_stay_ordered_across_wraparound() {
+    use flare::trace::ring::{Event, EventKind, Ring};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let ring = Arc::new(Ring::new(0)); // clamps to MIN_SLOTS
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let ring = Arc::clone(&ring);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let snap = ring.snapshot();
+                for w in snap.windows(2) {
+                    assert!(
+                        w[0].t_ns < w[1].t_ns,
+                        "snapshot out of order: {} then {}",
+                        w[0].t_ns,
+                        w[1].t_ns
+                    );
+                }
+            }
+        })
+    };
+    for t in 1..20_000u64 {
+        ring.push(&Event {
+            kind: EventKind::Instant,
+            stage: 2,
+            t_ns: t,
+            dur_ns: 0,
+            attr: 0,
+        });
+    }
+    stop.store(true, Ordering::Relaxed);
+    reader.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
 // Loom tier: the same protocols under a model checker that explores
 // every lock-acquisition order. Compiled only with --cfg loom.
 // ---------------------------------------------------------------------------
@@ -485,6 +580,66 @@ mod loom_models {
             let s = shelf.lock().unwrap();
             assert!(s.len() <= CAP, "shelf exceeded its cap");
             assert!(s.iter().all(|v| v.is_empty()), "dirty buffer shelved");
+        });
+    }
+
+    /// The trace ring's per-slot seqlock, modeled with loom atomics so
+    /// the checker explores every store/load ordering: the protocol from
+    /// `flare::trace::ring` verbatim — writer takes the sequence odd,
+    /// release-fences, stores the payload relaxed, publishes even with
+    /// release; the reader validates an even, unchanged sequence around
+    /// relaxed payload loads with an acquire fence. A validated read
+    /// must never surface a torn payload.
+    #[test]
+    fn trace_ring_seqlock_never_surfaces_torn_reads() {
+        use loom::sync::atomic::{fence, AtomicU64, Ordering};
+        loom::model(|| {
+            struct Slot {
+                seq: AtomicU64,
+                data: [AtomicU64; 2],
+            }
+            let slot = Arc::new(Slot {
+                seq: AtomicU64::new(2), // one event already published
+                data: [AtomicU64::new(1), AtomicU64::new(2)],
+            });
+            let writer = {
+                let slot = Arc::clone(&slot);
+                thread::spawn(move || {
+                    // Overwrite with the next event (10, 20).
+                    let s = slot.seq.load(Ordering::Relaxed);
+                    slot.seq.store(s.wrapping_add(1), Ordering::Relaxed);
+                    fence(Ordering::Release);
+                    slot.data[0].store(10, Ordering::Relaxed);
+                    slot.data[1].store(20, Ordering::Relaxed);
+                    slot.seq.store(s.wrapping_add(2), Ordering::Release);
+                })
+            };
+            // Reader: seqlock-validated read, as Ring::snapshot does.
+            let read = {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 == 0 || s1 & 1 == 1 {
+                    None
+                } else {
+                    let a = slot.data[0].load(Ordering::Relaxed);
+                    let b = slot.data[1].load(Ordering::Relaxed);
+                    fence(Ordering::Acquire);
+                    let s2 = slot.seq.load(Ordering::Relaxed);
+                    if s1 == s2 {
+                        Some((a, b))
+                    } else {
+                        None
+                    }
+                }
+            };
+            writer.join().unwrap();
+            // A validated read is one of the two coherent events — never
+            // a mix of old and new words.
+            if let Some(pair) = read {
+                assert!(
+                    pair == (1, 2) || pair == (10, 20),
+                    "torn read surfaced: {pair:?}"
+                );
+            }
         });
     }
 }

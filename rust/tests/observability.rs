@@ -1,0 +1,258 @@
+//! Observability acceptance: the flight-recorder tracing layer against
+//! a live simulated federation.
+//!
+//! * A seeded 4-client **faulted** round (reliable transfers, seeded
+//!   drop/dup/reorder) produces a Chrome trace-event export that is
+//!   Perfetto-loadable (strict JSON, `X`/`i`/`M` phases, numeric
+//!   timestamps), and whose per-stage histogram totals reconcile with
+//!   the run report: `client_round` span count/duration against the
+//!   `client_round_secs/*` series and span attr bytes against
+//!   `total_comm_bytes`.
+//! * The `/metrics` endpoint is scraped **during** a live simulated
+//!   round; every exposition must be schema-clean (integer-only
+//!   samples, `flare_`-prefixed families, no NaN/Inf values).
+//!
+//! The stage histograms and thread rings are process-global, so the
+//! tests in this binary serialize on a file-local mutex and reset the
+//! histograms at entry.
+
+use flare::config::model_spec::ModelSpec;
+use flare::config::{FaultProfile, JobConfig, QuantScheme, StreamingMode, TrainConfig};
+use flare::coordinator::simulator::{run_simulation, SimResult};
+use flare::coordinator::MockTrainer;
+use flare::filter::FilterSet;
+use flare::tensor::init::materialize;
+use flare::trace::{self, chrome, hist, metrics_http, Stage};
+use flare::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Seeded 4-client faulted job: reliable transfers over links that
+/// drop/duplicate/reorder enough chunks for NACK recovery to engage.
+fn faulted_job(clients: usize, rounds: usize) -> JobConfig {
+    JobConfig {
+        name: "observability".into(),
+        clients,
+        rounds,
+        quant: QuantScheme::Blockwise8,
+        streaming: StreamingMode::Container,
+        reliable: true,
+        chunk_bytes: 16 * 1024,
+        fault: FaultProfile {
+            seed: 77,
+            drop_rate: 0.05,
+            dup_rate: 0.02,
+            reorder_rate: 0.02,
+            ..FaultProfile::NONE
+        },
+        train: TrainConfig {
+            local_steps: 3,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn run(job: &JobConfig) -> SimResult {
+    let spec = ModelSpec::llama_mini();
+    let initial = materialize(&spec, 1);
+    let quant = job.quant;
+    run_simulation(
+        job,
+        initial,
+        Arc::new(move |_i| MockTrainer::new(materialize(&ModelSpec::llama_mini(), 2), 0.3, 100)),
+        move || FilterSet::two_way_quantization(quant),
+    )
+    .unwrap_or_else(|e| panic!("simulation failed: {e:#}"))
+}
+
+/// Acceptance: the faulted 4-client run's trace reconciles with its own
+/// report, and the Chrome export of the same rings parses as trace JSON.
+#[test]
+fn faulted_round_trace_reconciles_with_report_and_exports() {
+    let _guard = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    trace::reset_for_test();
+    trace::set_enabled(true);
+
+    let r = run(&faulted_job(4, 2));
+
+    // The faults actually bit (otherwise this is not the scenario).
+    assert!(r.report.scalars["retransmit_frames_total"] > 0.0, "{:?}", r.report.scalars);
+    assert!(r.report.scalars["nacks_total"] > 0.0);
+
+    // -- histogram ↔ report reconciliation --------------------------------
+    // Every folded contribution pushed one `client_round_secs/<name>`
+    // point AND one ClientRound span; both sides see the same dur_ns
+    // and comm-bytes values, so the totals must agree.
+    let h = hist::snapshot(Stage::ClientRound);
+    let mut points = 0usize;
+    let mut secs_sum = 0f64;
+    for (name, series) in &r.report.series {
+        if name.starts_with("client_round_secs/") {
+            points += series.points.len();
+            secs_sum += series.sum();
+        }
+    }
+    assert_eq!(points, 4 * 2, "expected one point per client per round");
+    assert_eq!(h.count, points as u64, "span count != report points");
+    let hist_secs = h.sum as f64 / 1e9;
+    assert!(
+        (hist_secs - secs_sum).abs() <= 1e-6 * secs_sum.max(hist_secs),
+        "span ns total {hist_secs}s does not reconcile with report {secs_sum}s"
+    );
+    // Comm bytes: the span attr and the report's total are the same u64s.
+    assert_eq!(
+        h.attr_sum as f64, r.report.scalars["total_comm_bytes"],
+        "span attr bytes != total_comm_bytes"
+    );
+    assert!(r.report.scalars["peak_comm_bytes"] > 0.0);
+    // surface_report ran inside the controller: the trace scalars in the
+    // report must match the snapshot taken here.
+    assert_eq!(r.report.scalars["trace_count/client_round"], h.count as f64);
+    assert_eq!(r.report.scalars["trace_attr_total/client_round"], h.attr_sum as f64);
+    let hist_series = &r.report.series["trace_hist_ns/client_round"];
+    assert_eq!(hist_series.sum(), h.count as f64, "bucket counts must total the span count");
+
+    // -- Chrome trace export ----------------------------------------------
+    let dir = std::env::temp_dir().join(format!("flare_obs_trace_{}", std::process::id()));
+    let path = dir.join("trace.json");
+    chrome::export(&path).expect("export trace");
+    let text = std::fs::read_to_string(&path).expect("read trace");
+    let parsed = Json::parse(&text).expect("trace JSON must parse strictly");
+    let events = parsed
+        .at(&["traceEvents"])
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    assert!(events.len() > 4 * 2, "suspiciously few events: {}", events.len());
+    let mut phases = std::collections::BTreeSet::new();
+    let mut names = std::collections::BTreeSet::new();
+    for e in events {
+        let ph = e
+            .at(&["ph"])
+            .and_then(|p| p.as_str().map(String::from))
+            .expect("event has ph");
+        if ph != "M" {
+            // Perfetto requires numeric timestamps on every timeline event.
+            assert!(e.at(&["ts"]).and_then(|t| t.as_f64()).is_some(), "{e:?}");
+            names.extend(e.at(&["name"]).and_then(|n| n.as_str().map(String::from)));
+        }
+        phases.insert(ph);
+    }
+    for ph in ["X", "i", "M"] {
+        assert!(phases.contains(ph), "missing phase {ph}: {phases:?}");
+    }
+    // The round lifecycle must be visible end to end in the timeline.
+    for stage in ["round", "client_round", "scatter", "gather"] {
+        assert!(names.contains(stage), "missing {stage} events: {names:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Split an HTTP/1.1 response into (status line, body).
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+    let mut conn = TcpStream::connect(addr).expect("connect metrics");
+    conn.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").as_bytes())
+        .expect("send request");
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp).expect("read response");
+    let status = resp.lines().next().unwrap_or("").to_string();
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// Prometheus text-exposition schema check: `flare_`-prefixed families,
+/// integer-only sample values, and no NaN/Inf anywhere but the +Inf
+/// histogram boundary label.
+fn assert_prometheus_schema(body: &str) {
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("malformed sample line: {line:?}"));
+        assert!(
+            value.parse::<u64>().is_ok(),
+            "non-integer sample value in {line:?}"
+        );
+        let metric = name_part.split('{').next().unwrap_or("");
+        assert!(metric.starts_with("flare_"), "foreign metric family: {line:?}");
+        assert!(
+            metric.bytes().all(|b| b.is_ascii_lowercase() || b == b'_' || b.is_ascii_digit()),
+            "bad metric name in {line:?}"
+        );
+        samples += 1;
+    }
+    assert!(samples >= 4, "exposition too small:\n{body}");
+    let stripped = body.replace("le=\"+Inf\"", "");
+    assert!(
+        !stripped.contains("NaN") && !stripped.contains("Inf"),
+        "NaN/Inf sample value leaked:\n{body}"
+    );
+}
+
+/// The `/metrics` endpoint scraped while a simulated round is live:
+/// every exposition served mid-round must already be schema-clean, and
+/// the post-run scrape must carry the run's stage families.
+#[test]
+fn metrics_endpoint_scrapes_cleanly_during_live_round() {
+    let _guard = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    trace::reset_for_test();
+    trace::set_enabled(true);
+
+    let srv = metrics_http::serve("127.0.0.1:0").expect("bind metrics");
+    let addr = srv.addr();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_bg = Arc::clone(&stop);
+    let scraper = std::thread::spawn(move || {
+        let mut bodies = Vec::new();
+        loop {
+            // Scrape before checking the flag: even a run that finishes
+            // before this thread is scheduled yields one live scrape.
+            let (status, body) = http_get(addr, "/metrics");
+            assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+            bodies.push(body);
+            if stop_bg.load(Ordering::Relaxed) {
+                return bodies;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    });
+
+    let r = run(&faulted_job(2, 1));
+    stop.store(true, Ordering::Relaxed);
+    let bodies = scraper.join().expect("scraper panicked");
+
+    assert!(!bodies.is_empty(), "no scrapes completed");
+    for body in &bodies {
+        assert_prometheus_schema(body);
+        assert!(body.contains("flare_trace_enabled 1"), "capture flag off:\n{body}");
+    }
+
+    // Post-run scrape: the run's client_round spans are visible.
+    let (status, body) = http_get(addr, "/metrics");
+    assert!(status.starts_with("HTTP/1.1 200"), "{status}");
+    assert_prometheus_schema(&body);
+    assert!(
+        body.contains("flare_stage_events_total{stage=\"client_round\"}"),
+        "client_round family missing:\n{body}"
+    );
+    assert!(body.contains("flare_stage_duration_ns_bucket{stage=\"client_round\""));
+    let expect = format!(
+        "flare_stage_attr_total{{stage=\"client_round\"}} {}",
+        r.report.scalars["total_comm_bytes"] as u64
+    );
+    assert!(body.contains(&expect), "attr total mismatch:\n{body}");
+
+    // Unknown paths 404 without touching the exposition.
+    let (status, _) = http_get(addr, "/not-metrics");
+    assert!(status.starts_with("HTTP/1.1 404"), "{status}");
+}

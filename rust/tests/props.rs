@@ -679,3 +679,183 @@ fn fuzz_regression_journal_hostile_container_lengths_rejected() {
     assert!(journal::decode_record(&unknown).is_err());
     flare::fuzzing::fuzz_journal(&unknown);
 }
+
+// ---------------------------------------------------------------------------
+// Trace latency histograms (flare::trace::hist): bucket exactness, merge
+// algebra, codec roundtrips, and hostile-decode regressions.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hist_bucket_boundaries_are_exact() {
+    use flare::trace::hist::{bucket_floor, bucket_index, BUCKETS};
+    check(
+        cfg(256),
+        "hist bucket boundaries",
+        |rng| rng.next_u64(),
+        |&v| {
+            let idx = bucket_index(v);
+            if idx >= BUCKETS {
+                return Err(format!("index {idx} out of range for {v}"));
+            }
+            // The value sits at or above its bucket's floor...
+            if v < bucket_floor(idx) {
+                return Err(format!("{v} below its bucket floor {}", bucket_floor(idx)));
+            }
+            // ...and strictly below the next bucket's floor.
+            if idx + 1 < BUCKETS && v >= bucket_floor(idx + 1) {
+                return Err(format!(
+                    "{v} at/above next floor {}",
+                    bucket_floor(idx + 1)
+                ));
+            }
+            // Relative bucket width stays within the 2-mantissa-bit
+            // guarantee: floor(idx+1) <= 1.25 * floor(idx) for v >= 4.
+            if v >= 4 && idx + 1 < BUCKETS {
+                let f = bucket_floor(idx) as u128;
+                let nf = bucket_floor(idx + 1) as u128;
+                if nf * 4 > f * 5 {
+                    return Err(format!("bucket {idx} wider than 25%: [{f}, {nf})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hist_merge_is_associative_and_commutative() {
+    use flare::trace::hist::Hist;
+    fn gen_hist(rng: &mut SplitMix64) -> Hist {
+        let mut h = Hist::new();
+        for _ in 0..(rng.next_u64() % 64) {
+            let v = rng.next_u64() >> (rng.next_u64() % 64);
+            h.record_with_attr(v, rng.next_u64() % 1024);
+        }
+        h
+    }
+    check(
+        cfg(128),
+        "hist merge algebra",
+        |rng| (gen_hist(rng), gen_hist(rng), gen_hist(rng)),
+        |(a, b, c)| {
+            // Commutativity: a+b == b+a.
+            let mut ab = a.clone();
+            ab.merge(b);
+            let mut ba = b.clone();
+            ba.merge(a);
+            if ab != ba {
+                return Err("merge not commutative".into());
+            }
+            // Associativity: (a+b)+c == a+(b+c).
+            let mut ab_c = ab.clone();
+            ab_c.merge(c);
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            if ab_c != a_bc {
+                return Err("merge not associative".into());
+            }
+            // Identity: merging an empty histogram changes nothing.
+            let mut a_id = a.clone();
+            a_id.merge(&Hist::new());
+            if &a_id != a {
+                return Err("empty hist is not a merge identity".into());
+            }
+            // The merge totals are the sums of the inputs' totals.
+            if ab.count != a.count + b.count || ab.sum != a.sum.saturating_add(b.sum) {
+                return Err("merge totals diverge from input totals".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hist_encode_decode_roundtrip() {
+    use flare::trace::hist::Hist;
+    check(
+        cfg(128),
+        "hist codec roundtrip",
+        |rng| {
+            let mut h = Hist::new();
+            for _ in 0..(rng.next_u64() % 100) {
+                let v = rng.next_u64() >> (rng.next_u64() % 64);
+                h.record_with_attr(v, rng.next_u64());
+            }
+            h
+        },
+        |h| {
+            let bytes = h.encode();
+            let (back, used) = Hist::decode(&bytes).map_err(|e| e.to_string())?;
+            if used != bytes.len() {
+                return Err(format!("decode used {used} of {} bytes", bytes.len()));
+            }
+            if &back != h {
+                return Err("decoded histogram differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hist_decode_survives_hostile_bytes() {
+    use flare::trace::hist::Hist;
+    // Arbitrary bytes must decode or error — never panic — and accepted
+    // inputs must satisfy the canonical-form checks (tested via the
+    // shared fuzz driver, which adds the re-encode oracle).
+    check(
+        cfg(256),
+        "hist hostile decode",
+        |rng| {
+            let n = (rng.next_u64() % 64) as usize;
+            let mut v = vec![0u8; n];
+            for b in v.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            // Half the cases start from a plausible version byte so the
+            // generator reaches past the version check.
+            if rng.next_u64() % 2 == 0 && !v.is_empty() {
+                v[0] = 1;
+            }
+            v
+        },
+        |bytes| {
+            let _ = Hist::decode(bytes);
+            flare::fuzzing::fuzz_flight_dump(bytes);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fuzz_regression_flight_dump_forged_event_count_rejected() {
+    use flare::trace::recorder::{FlightDump, MAGIC};
+    // A declared per-thread event count far beyond the backing bytes
+    // must be rejected before any allocation (mirrors
+    // fuzz/corpora/flight_dump/forged_event_count).
+    let mut forged = Vec::new();
+    forged.extend_from_slice(&MAGIC);
+    forged.extend_from_slice(&0u64.to_le_bytes());
+    forged.push(0); // reason len
+    forged.push(1); // one thread
+    forged.push(1); // id
+    forged.push(0); // name len
+    forged.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F]); // ~4.3e9 events
+    assert!(FlightDump::decode(&forged).is_err());
+    flare::fuzzing::fuzz_flight_dump(&forged);
+}
+
+#[test]
+fn fuzz_regression_flight_dump_truncation_never_panics() {
+    use flare::trace::recorder::FlightDump;
+    flare::trace::set_enabled(true);
+    flare::trace::instant(flare::trace::Stage::Nack, 1);
+    let good = flare::trace::recorder::encode_dump("props-regression");
+    assert!(FlightDump::decode(&good).is_ok());
+    for cut in 0..good.len() {
+        let _ = FlightDump::decode(&good[..cut]);
+        flare::fuzzing::fuzz_flight_dump(&good[..cut]);
+    }
+}

@@ -599,3 +599,76 @@ fn e2e_tcp_kill_restart_with_reconnect() {
         "tcp kill–restart final global must be bit-identical"
     );
 }
+
+// -- flight recorder on the crash hook ---------------------------------------
+
+/// ISSUE 10: the journal crash hook must trip the flight recorder
+/// before the induced abort, and the dump's trailing `JournalAppend`
+/// events must line up with the records actually in the journal —
+/// the post-mortem story ("what were the last things this process
+/// did?") has to agree with the durable story (the WAL).
+#[test]
+fn crash_hook_trip_writes_flight_dump_matching_journal() {
+    use flare::trace::recorder::{self, FlightDump};
+    use flare::trace::{self, Stage};
+
+    let _guard = SERIAL.lock().unwrap();
+    let dump_dir = common::fresh_spool("flight_dumps");
+    trace::set_enabled(true);
+    recorder::arm(&dump_dir);
+    let t0 = trace::now_ns();
+
+    // Crash after record 3 (JobMeta, RoundStart(0), RoundComplete(0)).
+    const CRASH_AFTER: u64 = 3;
+    let wal = common::fresh_spool("wal_fr").join("run.journal");
+    let job = sync_job(SessionEngine::Threaded, wal.to_str().unwrap());
+    let crashed = run_sync(&job, Some(CRASH_AFTER));
+    recorder::disarm();
+    let err = match &crashed.outcome {
+        Err(e) => e,
+        Ok(_) => panic!("crash hook did not abort the run"),
+    };
+    assert!(format!("{err:#}").contains("chaos"), "unexpected abort: {err:#}");
+
+    // The journal's durable story: exactly CRASH_AFTER records.
+    let bytes = std::fs::read(&wal).expect("read crashed journal");
+    let (recs, _) = journal::scan_records(&bytes[journal::MAGIC.len()..]);
+    assert_eq!(recs.len() as u64, CRASH_AFTER, "journal record count");
+
+    // A dump with the crash-hook reason was written (session failures
+    // may write further dumps; at least one must be the hook's).
+    let candidates: Vec<_> = std::fs::read_dir(&dump_dir)
+        .expect("dump dir must exist after an armed trip")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter_map(|p| FlightDump::read_file(&p).ok().map(|d| (p, d)))
+        .filter(|(_, d)| d.reason == "journal-crash-hook")
+        .collect();
+    assert!(!candidates.is_empty(), "no journal-crash-hook flight dump written");
+
+    // The dump's JournalAppend events carry attr = the record's 0-based
+    // sequence number. Events from this run (t_ns >= t0) must cover
+    // every sequence the WAL holds — in particular the final record
+    // appended right before the trip.
+    let found = candidates.iter().any(|(_, d)| {
+        let attrs: Vec<u64> = d
+            .events_for_stage(Stage::JournalAppend)
+            .into_iter()
+            .filter(|e| e.t_ns >= t0)
+            .map(|e| e.attr)
+            .collect();
+        (0..recs.len() as u64).all(|seq| attrs.contains(&seq))
+    });
+    assert!(
+        found,
+        "no dump's JournalAppend events covered sequences 0..{}",
+        recs.len()
+    );
+
+    // The trip itself is visible in the dump (Stage::RecorderTrip).
+    assert!(
+        candidates.iter().any(|(_, d)| !d
+            .events_for_stage(Stage::RecorderTrip)
+            .is_empty()),
+        "recorder trip left no RecorderTrip event"
+    );
+}

@@ -50,7 +50,7 @@ const FOLD_FILES: [&str; 3] = [
 ];
 
 /// Wire-decode files: hostile-allocation pass.
-const WIRE_ALLOC_FILES: [&str; 7] = [
+const WIRE_ALLOC_FILES: [&str; 9] = [
     "streaming/wire.rs",
     "streaming/entry.rs",
     "streaming/object.rs",
@@ -58,11 +58,18 @@ const WIRE_ALLOC_FILES: [&str; 7] = [
     "sfm/endpoint.rs",
     "sfm/tcp.rs",
     "coordinator/journal.rs",
+    "trace/hist.rs",
+    "trace/recorder.rs",
 ];
 
 /// Frame/entry parsing files: panic-path pass.
-const PANIC_FILES: [&str; 3] =
-    ["streaming/wire.rs", "sfm/frame.rs", "coordinator/journal.rs"];
+const PANIC_FILES: [&str; 5] = [
+    "streaming/wire.rs",
+    "sfm/frame.rs",
+    "coordinator/journal.rs",
+    "trace/hist.rs",
+    "trace/recorder.rs",
+];
 
 /// Primitives that block the calling thread.
 const BLOCKING_TOKENS: [&str; 7] = [

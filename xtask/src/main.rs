@@ -118,11 +118,12 @@ fn usage(msg: &str) -> ExitCode {
 
 type FuzzFn = fn(&[u8]);
 
-const FUZZ_TARGETS: [(&str, FuzzFn); 4] = [
+const FUZZ_TARGETS: [(&str, FuzzFn); 5] = [
     ("frame_header", flare::fuzzing::fuzz_frame_header),
     ("entry_decode", flare::fuzzing::fuzz_entry_decode),
     ("varint", flare::fuzzing::fuzz_varint),
     ("journal", flare::fuzzing::fuzz_journal),
+    ("flight_dump", flare::fuzzing::fuzz_flight_dump),
 ];
 
 fn cmd_fuzz(args: &[String]) -> ExitCode {
